@@ -1,0 +1,146 @@
+//! End-to-end driver proving that all layers compose (EXPERIMENTS.md
+//! records this run): generate a realistic workload, run every framework
+//! configuration plus the baselines, exercise the AOT L1/L2 path (gain
+//! oracle + spectral portfolio member) against the Rust implementation,
+//! and report the paper's headline metric (connectivity) per solver.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example end_to_end
+//! ```
+
+use mtkahypar::benchkit::{baselines, suites};
+use mtkahypar::coordinator::context::{Context, Preset};
+use mtkahypar::coordinator::partitioner;
+use mtkahypar::generators::{self, PlantedParams};
+use mtkahypar::metrics;
+use mtkahypar::runtime;
+use std::sync::Arc;
+use std::time::Instant;
+
+fn main() {
+    println!("=== Mt-KaHyPar-rs end-to-end driver ===\n");
+
+    // ---- layer check: AOT artifacts (L1 Pallas kernel + L2 model) ----
+    match runtime::global() {
+        Some(rt) => {
+            // the AOT gain oracle must agree with the Rust gain definition
+            let hg = generators::planted_hypergraph(
+                &PlantedParams { n: 100, m: 120, blocks: 2, ..Default::default() },
+                3,
+            );
+            let parts: Vec<u32> = (0..100).map(|u| (u % 2) as u32).collect();
+            let nodes: Vec<u32> = (0..100).collect();
+            let nets: Vec<u32> = hg.nets().take(128).collect();
+            let (benefit, _pen) =
+                runtime::gain_tile_for(rt, &hg, &parts, &nodes, &nets, 2).expect("oracle");
+            let phg =
+                mtkahypar::partition::PartitionedHypergraph::new(Arc::new(hg.clone()), 2);
+            phg.assign_all(&parts, 1);
+            let mut checked = 0;
+            for (i, &u) in nodes.iter().enumerate() {
+                let mut b = 0f32;
+                for &e in hg.incident_nets(u) {
+                    if nets.contains(&e) && phg.pin_count(e, parts[u as usize]) == 1 {
+                        b += hg.net_weight(e) as f32;
+                    }
+                }
+                assert_eq!(b, benefit[i]);
+                checked += 1;
+            }
+            println!("[L1/L2] AOT gain-tile oracle == Rust gains on {checked} nodes ✓");
+        }
+        None => println!("[L1/L2] artifacts missing — run `make artifacts` first (continuing)"),
+    }
+
+    // ---- real small workload: SPM + SAT + planted suite, k = 8 ----
+    let instances = suites::suite_mhg();
+    let k = 8;
+    println!("\n[L3] partitioning {} instances with every configuration, k={k}\n", instances.len());
+    println!("| solver | geo-mean km1 | worst imbalance | geo-mean time [s] |");
+    println!("|---|---|---|---|");
+
+    type Runner = Box<dyn Fn(&Arc<mtkahypar::hypergraph::Hypergraph>) -> (i64, f64)>;
+    let mk_ctx = move |preset: Preset, spectral: bool| -> Context {
+        let mut ctx = Context::new(preset, k, 0.03).with_seed(7).with_threads(4);
+        ctx.contraction_limit_factor = 24;
+        ctx.ip_min_repetitions = 2;
+        ctx.ip_max_repetitions = 4;
+        ctx.fm_max_rounds = 4;
+        ctx.use_spectral_ip = spectral;
+        ctx
+    };
+    let solvers: Vec<(&str, Runner)> = vec![
+        ("Mt-KaHyPar-S", boxed(move |hg| run(hg, mk_ctx(Preset::Speed, false)))),
+        ("Mt-KaHyPar-D", boxed(move |hg| run(hg, mk_ctx(Preset::Default, false)))),
+        ("Mt-KaHyPar-D (+spectral IP)", boxed(move |hg| run(hg, mk_ctx(Preset::Default, true)))),
+        ("Mt-KaHyPar-D-F", boxed(move |hg| run(hg, mk_ctx(Preset::DefaultFlows, false)))),
+        ("Mt-KaHyPar-Q", boxed(move |hg| run(hg, mk_ctx(Preset::Quality, false)))),
+        ("Mt-KaHyPar-Q-F", boxed(move |hg| run(hg, mk_ctx(Preset::QualityFlows, false)))),
+        ("Mt-KaHyPar-SDet", boxed(move |hg| run(hg, mk_ctx(Preset::Deterministic, false)))),
+        (
+            "PaToH-like (baseline)",
+            boxed(move |hg| run_with(hg, mk_ctx(Preset::Default, false), baselines::patoh_like)),
+        ),
+        (
+            "Zoltan-like (baseline)",
+            boxed(move |hg| run_with(hg, mk_ctx(Preset::Default, false), baselines::zoltan_like)),
+        ),
+        (
+            "BiPart-like (baseline)",
+            boxed(move |hg| run_with(hg, mk_ctx(Preset::Default, false), baselines::bipart_like)),
+        ),
+    ];
+
+    for (name, runner) in &solvers {
+        let mut km1s = Vec::new();
+        let mut worst_imb = f64::MIN;
+        let start = Instant::now();
+        for inst in &instances {
+            let (km1, imb) = runner(&inst.hg);
+            km1s.push(km1 as f64 + 1.0);
+            worst_imb = worst_imb.max(imb);
+        }
+        let secs = start.elapsed().as_secs_f64() / instances.len() as f64;
+        println!(
+            "| {name} | {:.0} | {worst_imb:.4} | {secs:.2} |",
+            mtkahypar::util::stats::geometric_mean(&km1s)
+        );
+    }
+
+    // ---- determinism witness ----
+    let hg = &instances[0].hg;
+    let p1 = partitioner::partition_arc(hg.clone(), &mk_ctx(Preset::Deterministic, false)).parts();
+    let p2 = {
+        let ctx = mk_ctx(Preset::Deterministic, false).with_threads(1);
+        partitioner::partition_arc(hg.clone(), &ctx).parts()
+    };
+    println!("\n[det] SDet partitions bit-identical across thread counts: {}", p1 == p2);
+
+    println!("\nend_to_end OK");
+}
+
+fn boxed(
+    f: impl Fn(&Arc<mtkahypar::hypergraph::Hypergraph>) -> (i64, f64) + 'static,
+) -> Box<dyn Fn(&Arc<mtkahypar::hypergraph::Hypergraph>) -> (i64, f64)> {
+    Box::new(f)
+}
+
+fn run(hg: &Arc<mtkahypar::hypergraph::Hypergraph>, ctx: Context) -> (i64, f64) {
+    let phg = partitioner::partition_arc(hg.clone(), &ctx);
+    assert!(phg.is_balanced(), "balance violated: {}", phg.imbalance());
+    let parts = phg.parts();
+    assert_eq!(phg.km1(), metrics::km1(hg, &parts, ctx.k), "objective verified from scratch");
+    (phg.km1(), phg.imbalance())
+}
+
+fn run_with(
+    hg: &Arc<mtkahypar::hypergraph::Hypergraph>,
+    ctx: Context,
+    f: impl Fn(
+        &Arc<mtkahypar::hypergraph::Hypergraph>,
+        &Context,
+    ) -> mtkahypar::partition::PartitionedHypergraph,
+) -> (i64, f64) {
+    let phg = f(hg, &ctx);
+    (phg.km1(), phg.imbalance())
+}

@@ -1,0 +1,39 @@
+//! Perf-pass instrumentation driver (EXPERIMENTS.md §Perf): phase
+//! breakdown of every preset on the n=6000 SPM archetype.
+//!
+//! ```bash
+//! cargo run --release --example profile_ip
+//! ```
+
+use mtkahypar::coordinator::context::{Context, Preset};
+use mtkahypar::coordinator::partitioner;
+use mtkahypar::generators;
+use std::time::Instant;
+
+fn main() {
+    let hg = generators::spm_hypergraph(6000, 6000, 7, 7);
+    println!(
+        "driver: n={} m={} pins={} (SPM archetype)",
+        hg.num_nodes(),
+        hg.num_nets(),
+        hg.num_pins()
+    );
+    for preset in [Preset::Default, Preset::DefaultFlows, Preset::Quality, Preset::Deterministic]
+    {
+        let ctx = Context::new(preset, 8, 0.03).with_seed(1).with_threads(1);
+        let s = Instant::now();
+        let phg = partitioner::partition(&hg, &ctx);
+        println!(
+            "{:<18} total {:>6.2}s km1={}",
+            preset.name(),
+            s.elapsed().as_secs_f64(),
+            phg.km1()
+        );
+        for (n, t) in ctx.timer.snapshot() {
+            if t > 0.05 {
+                println!("    {n:<24} {t:.2}s");
+            }
+        }
+        assert!(phg.is_balanced());
+    }
+}

@@ -1,0 +1,41 @@
+//! Quickstart: partition a synthetic hypergraph with the default
+//! configuration and print the result report.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use mtkahypar::coordinator::report::PartitionReport;
+use mtkahypar::prelude::*;
+use std::time::Instant;
+
+fn main() {
+    // a hypergraph with 8 planted blocks — the partitioner should
+    // recover a cut close to the planted one
+    let hg = generators::planted_hypergraph(
+        &PlantedParams { n: 4000, m: 7000, blocks: 8, ..Default::default() },
+        42,
+    );
+    println!(
+        "instance: n={} m={} pins={}",
+        hg.num_nodes(),
+        hg.num_nets(),
+        hg.num_pins()
+    );
+
+    let ctx = Context::new(Preset::Default, 8, 0.03).with_seed(42).with_threads(4);
+    let start = Instant::now();
+    let partition = partitioner::partition(&hg, &ctx);
+    let secs = start.elapsed().as_secs_f64();
+
+    let report = PartitionReport::from_partition(
+        "Mt-KaHyPar-D",
+        &partition,
+        secs,
+        ctx.timer.snapshot(),
+    );
+    report.print();
+    assert!(partition.is_balanced());
+    partition.verify_consistency().expect("internal consistency");
+    println!("\nOK — balanced {}-way partition with km1 = {}", partition.k(), partition.km1());
+}

@@ -1,0 +1,40 @@
+//! Sparse-matrix placement: the paper's motivating application — minimize
+//! the communication volume of a parallel SpMV by partitioning the
+//! column-net hypergraph of a sparse matrix (connectivity metric =
+//! communication volume, §1/§2).
+//!
+//! ```bash
+//! cargo run --release --example spmv_placement
+//! ```
+
+use mtkahypar::coordinator::context::{Context, Preset};
+use mtkahypar::coordinator::partitioner;
+use mtkahypar::generators;
+use std::time::Instant;
+
+fn main() {
+    // rows = nets over their nonzero columns (banded + long-range fills)
+    let hg = generators::spm_hypergraph(6000, 6000, 7, 7);
+    println!(
+        "sparse matrix model: {} cols (nodes), {} rows (nets), {} nnz (pins)",
+        hg.num_nodes(),
+        hg.num_nets(),
+        hg.num_pins()
+    );
+    println!("\n| k | comm. volume (km1) | imbalance | time [s] |");
+    println!("|---|---|---|---|");
+    for k in [2usize, 4, 8, 16] {
+        let ctx = Context::new(Preset::Default, k, 0.03).with_seed(1).with_threads(4);
+        let start = Instant::now();
+        let phg = partitioner::partition(&hg, &ctx);
+        println!(
+            "| {k} | {} | {:.4} | {:.2} |",
+            phg.km1(),
+            phg.imbalance(),
+            start.elapsed().as_secs_f64()
+        );
+        assert!(phg.is_balanced());
+    }
+    println!("\ncommunication volume grows sublinearly in k on banded matrices — the");
+    println!("hypergraph model (km1) counts each boundary row once per extra block.");
+}

@@ -1,0 +1,72 @@
+"""AOT lowering: jax → stablehlo → XlaComputation → **HLO text**.
+
+HLO *text* (not serialized HloModuleProto) is the interchange format: jax
+≥ 0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1
+(the version behind the Rust `xla` crate) rejects; the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Artifacts written (build-time only; Python never runs on the request
+path):
+    artifacts/gain_tiles.hlo.txt   — L1 gain-tile kernel (TN×TV×K tile)
+    artifacts/spectral.hlo.txt     — L2 spectral bipartitioner (N=256)
+    artifacts/manifest.txt         — shapes, for the Rust loader
+"""
+
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from compile import model
+from compile.kernels import gain_tiles as k
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_gain_oracle() -> str:
+    lowered = jax.jit(model.gain_oracle).lower(*model.gain_example_args())
+    return to_hlo_text(lowered)
+
+
+def lower_spectral() -> str:
+    lowered = jax.jit(model.spectral_bipartition).lower(*model.spectral_example_args())
+    return to_hlo_text(lowered)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    gain_txt = lower_gain_oracle()
+    with open(os.path.join(args.out_dir, "gain_tiles.hlo.txt"), "w") as f:
+        f.write(gain_txt)
+    print(f"gain_tiles.hlo.txt: {len(gain_txt)} chars")
+
+    spectral_txt = lower_spectral()
+    with open(os.path.join(args.out_dir, "spectral.hlo.txt"), "w") as f:
+        f.write(spectral_txt)
+    print(f"spectral.hlo.txt: {len(spectral_txt)} chars")
+
+    with open(os.path.join(args.out_dir, "manifest.txt"), "w") as f:
+        f.write(
+            "gain_tiles TN={} TV={} K={}\nspectral N={} ITERS={}\n".format(
+                k.TN, k.TV, k.K, model.SPECTRAL_N, model.SPECTRAL_ITERS
+            )
+        )
+    print("manifest.txt written")
+
+
+if __name__ == "__main__":
+    main()

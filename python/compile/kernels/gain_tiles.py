@@ -1,0 +1,81 @@
+"""L1 — the dense gain-tile Pallas kernel.
+
+The paper's gain computation (§6) is a scalar gather/scatter over sparse
+incidence structure. The TPU-shaped re-think (DESIGN.md §Hardware-
+Adaptation): the Rust coordinator packs boundary regions into dense
+incidence tiles ``A ∈ {0,1}^{TN×TV}`` and a one-hot block-assignment tile
+``X ∈ {0,1}^{TV×K}``; pin counts, benefit and penalty terms then become
+three MXU matmuls plus elementwise selects:
+
+    Φ       = A · X                                  (pin counts)
+    penalty = Aᵀ · (w ⊙ 1[Φ = 0])                    (p(v, t) terms)
+    benefit = Σ_t X[v,t] · (Aᵀ · (w ⊙ 1[Φ = 1]))[v,t]  (b(v) terms)
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; real-TPU performance is *estimated* in DESIGN.md §7.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# AOT tile shape (multiples of (8, 128) for f32 MXU tiles)
+TN = 128  # nets per tile
+TV = 128  # nodes per tile
+K = 16    # blocks per tile
+
+
+def _gain_tile_kernel(a_ref, w_ref, x_ref, phi_ref, benefit_ref, penalty_ref):
+    """Pallas kernel body: one (TN × TV) incidence tile."""
+    a = a_ref[...]          # [TN, TV]
+    w = w_ref[...]          # [TN]
+    x = x_ref[...]          # [TV, K]
+    phi = a @ x             # [TN, K]  — MXU matmul 1
+    phi_ref[...] = phi
+    wc = w[:, None]
+    # penalty: nets with zero pins in t penalize moving v into t
+    pen_mask = jnp.where(phi == 0.0, wc, 0.0)        # [TN, K]
+    penalty = a.T @ pen_mask                          # MXU matmul 2
+    penalty_ref[...] = penalty
+    # benefit: nets where v is the last pin of its own block
+    ben_mask = jnp.where(phi == 1.0, wc, 0.0)        # [TN, K]
+    ben_full = a.T @ ben_mask                         # MXU matmul 3
+    benefit_ref[...] = jnp.sum(ben_full * x, axis=1)  # select own block
+
+
+@functools.partial(jax.jit, static_argnames=())
+def gain_tiles(a, w, x):
+    """Compute (Φ, benefit, penalty) for one dense incidence tile.
+
+    a: f32[TN, TV] 0/1 incidence; w: f32[TN] net weights;
+    x: f32[TV, K] one-hot block assignment.
+    Returns (phi[TN, K], benefit[TV], penalty[TV, K]).
+    """
+    tn, tv = a.shape
+    k = x.shape[1]
+    return pl.pallas_call(
+        _gain_tile_kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct((tn, k), jnp.float32),
+            jax.ShapeDtypeStruct((tv,), jnp.float32),
+            jax.ShapeDtypeStruct((tv, k), jnp.float32),
+        ),
+        interpret=True,
+    )(a, w, x)
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref):
+    o_ref[...] = a_ref[...] @ b_ref[...]
+
+
+def matmul(a, b):
+    """Single-tile Pallas matmul (used by the L2 spectral model)."""
+    m, _ = a.shape
+    _, n = b.shape
+    return pl.pallas_call(
+        _matmul_kernel,
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(a, b)

@@ -1,0 +1,28 @@
+"""Pure-jnp reference oracle for the Pallas kernels (correctness signal).
+
+Mirrors the definitions of paper §6 directly:
+    b(v)     = Σ_{e ∈ I(v)} ω(e) · 1[Φ(e, Π[v]) = 1]
+    p(v, t)  = Σ_{e ∈ I(v)} ω(e) · 1[Φ(e, t) = 0]
+"""
+
+import jax.numpy as jnp
+
+
+def gain_tiles_ref(a, w, x):
+    """Reference (Φ, benefit, penalty) — no Pallas, plain jnp."""
+    phi = a @ x
+    wc = w[:, None]
+    penalty = a.T @ jnp.where(phi == 0.0, wc, 0.0)
+    ben_full = a.T @ jnp.where(phi == 1.0, wc, 0.0)
+    benefit = jnp.sum(ben_full * x, axis=1)
+    return phi, benefit, penalty
+
+
+def matmul_ref(a, b):
+    return a @ b
+
+
+def gains_ref(a, w, x):
+    """Full move-gain matrix g[v, t] = benefit[v] − penalty[v, t]."""
+    _, benefit, penalty = gain_tiles_ref(a, w, x)
+    return benefit[:, None] - penalty

@@ -1,0 +1,70 @@
+"""L2 — JAX compute graphs lowered to the AOT artifacts.
+
+Two graphs, both calling the L1 Pallas kernels:
+
+* ``gain_oracle``     — the batched gain-tile computation (Φ, b, p) used
+  by the Rust coordinator's dense gain path.
+* ``spectral_step`` / ``spectral_bipartition`` — power iteration for the
+  Fiedler vector of the normalized adjacency, the extra portfolio member
+  of initial partitioning (paper §5 uses nine flat techniques; this is
+  the tenth, AOT-compiled one).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import gain_tiles as k
+
+SPECTRAL_N = 256
+SPECTRAL_ITERS = 60
+
+
+def gain_oracle(a, w, x):
+    """(Φ, benefit, penalty) for one incidence tile — L1 kernel pass-through."""
+    return k.gain_tiles(a, w, x)
+
+
+def spectral_bipartition(adj, deg):
+    """Approximate Fiedler vector of the normalized Laplacian.
+
+    adj: f32[N, N] dense (padded) adjacency; deg: f32[N] degrees
+    (0 for padding). Returns f32[N] — sign gives the bipartition, the
+    Rust side applies the balance-constrained threshold.
+
+    B = D^{-1/2} A D^{-1/2}; its leading eigenvector is v1 ∝ √deg. Power
+    iteration on B with v1 deflated converges to the second eigenvector,
+    whose sign structure is the spectral bipartition.
+    """
+    d_isqrt = jnp.where(deg > 0.0, 1.0 / jnp.sqrt(jnp.maximum(deg, 1e-12)), 0.0)
+    v1 = jnp.sqrt(jnp.maximum(deg, 0.0))
+    v1 = v1 / jnp.maximum(jnp.linalg.norm(v1), 1e-12)
+    n = adj.shape[0]
+
+    # deterministic pseudo-random start (fixed at trace time)
+    x0 = jnp.cos(jnp.arange(n, dtype=jnp.float32) * 12.9898) * 0.5
+    x0 = x0 - jnp.dot(x0, v1) * v1
+
+    def step(_, x):
+        # B·x via the Pallas matmul kernel: (D^{-1/2} A D^{-1/2}) x
+        y = k.matmul(adj, (x * d_isqrt)[:, None])[:, 0] * d_isqrt
+        # shift to make the spectrum positive (power iteration stability)
+        y = y + x
+        y = y - jnp.dot(y, v1) * v1
+        return y / jnp.maximum(jnp.linalg.norm(y), 1e-12)
+
+    x = jax.lax.fori_loop(0, SPECTRAL_ITERS, step, x0)
+    return x
+
+
+def spectral_example_args():
+    spec = jax.ShapeDtypeStruct((SPECTRAL_N, SPECTRAL_N), jnp.float32)
+    dspec = jax.ShapeDtypeStruct((SPECTRAL_N,), jnp.float32)
+    return (spec, dspec)
+
+
+def gain_example_args():
+    return (
+        jax.ShapeDtypeStruct((k.TN, k.TV), jnp.float32),
+        jax.ShapeDtypeStruct((k.TN,), jnp.float32),
+        jax.ShapeDtypeStruct((k.TV, k.K), jnp.float32),
+    )

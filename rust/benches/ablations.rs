@@ -1,0 +1,122 @@
+//! Ablation studies for the design choices DESIGN.md calls out:
+//!
+//! * community-aware coarsening on/off (paper §4.3's claimed quality win),
+//! * the refinement stack tier by tier (LP → +FM → +flows, Alg. 3.1's
+//!   rationale "increasingly better solution quality at higher cost"),
+//! * portfolio breadth (1 technique vs all nine, §5),
+//! * V-cycles as post-processing (§4.3's alternative),
+//! * bulk piercing on/off is implicit in flows' runtime (cutter warm-up).
+
+use mtkahypar::benchkit::{self, suites};
+use mtkahypar::coordinator::context::{Context, Preset};
+use mtkahypar::coordinator::partitioner;
+use mtkahypar::refinement::vcycle;
+use mtkahypar::util::stats;
+use std::time::Instant;
+
+fn base_ctx(seed: u64) -> Context {
+    let mut ctx = Context::new(Preset::Default, 8, 0.03).with_threads(4).with_seed(seed);
+    ctx.contraction_limit_factor = 24;
+    ctx.ip_min_repetitions = 2;
+    ctx.ip_max_repetitions = 4;
+    ctx.fm_max_rounds = 4;
+    ctx
+}
+
+fn main() {
+    let instances = suites::suite_mhg();
+    let variants: Vec<(&str, Box<dyn Fn(u64) -> Context>)> = vec![
+        ("D (full)", Box::new(base_ctx)),
+        (
+            "D − community detection",
+            Box::new(|s| {
+                let mut c = base_ctx(s);
+                c.use_community_detection = false;
+                c
+            }),
+        ),
+        (
+            "LP only (no FM)",
+            Box::new(|s| {
+                let mut c = base_ctx(s);
+                c.use_fm = false;
+                c
+            }),
+        ),
+        (
+            "D + flows",
+            Box::new(|s| {
+                let mut c = base_ctx(s);
+                c.use_flows = true;
+                c
+            }),
+        ),
+        (
+            "D, portfolio = 1 rep",
+            Box::new(|s| {
+                let mut c = base_ctx(s);
+                c.ip_min_repetitions = 1;
+                c.ip_max_repetitions = 1;
+                c
+            }),
+        ),
+    ];
+
+    let mut rows = Vec::new();
+    let mut base_quality: Vec<f64> = Vec::new();
+    for (name, mk) in &variants {
+        let mut km1s = Vec::new();
+        let mut times = Vec::new();
+        for inst in &instances {
+            let ctx = mk(3);
+            let start = Instant::now();
+            let phg = partitioner::partition_arc(inst.hg.clone(), &ctx);
+            times.push(start.elapsed().as_secs_f64());
+            assert!(phg.is_balanced(), "{name} on {}", inst.name);
+            km1s.push(phg.km1() as f64 + 1.0);
+        }
+        if base_quality.is_empty() {
+            base_quality = km1s.clone();
+        }
+        let rel: Vec<f64> =
+            km1s.iter().zip(&base_quality).map(|(a, b)| a / b).collect();
+        rows.push(vec![
+            name.to_string(),
+            format!("{:.0}", stats::geometric_mean(&km1s)),
+            format!("{:+.1}%", 100.0 * (stats::geometric_mean(&rel) - 1.0)),
+            format!("{:.2}", stats::geometric_mean(&times)),
+        ]);
+    }
+
+    // V-cycle post-processing ablation
+    {
+        let mut km1s = Vec::new();
+        let mut times = Vec::new();
+        for inst in &instances {
+            let ctx = base_ctx(3);
+            let start = Instant::now();
+            let phg = partitioner::partition_arc(inst.hg.clone(), &ctx);
+            let improved = vcycle(phg, &ctx, 1);
+            times.push(start.elapsed().as_secs_f64());
+            km1s.push(improved.km1() as f64 + 1.0);
+        }
+        let rel: Vec<f64> = km1s.iter().zip(&base_quality).map(|(a, b)| a / b).collect();
+        rows.push(vec![
+            "D + 1 V-cycle".to_string(),
+            format!("{:.0}", stats::geometric_mean(&km1s)),
+            format!("{:+.1}%", 100.0 * (stats::geometric_mean(&rel) - 1.0)),
+            format!("{:.2}", stats::geometric_mean(&times)),
+        ]);
+    }
+
+    benchkit::print_table(
+        "Ablations — component contribution to Mt-KaHyPar-D (M_HG, k=8)",
+        &["variant", "geo-mean km1", "vs full D", "geo time [s]"],
+        &rows,
+    );
+    println!(
+        "\n=> expectations: removing community detection and FM hurt quality; flows and \
+         V-cycles improve it at extra cost; a 1-rep portfolio is faster but worse \
+         (paper §4.3/§5 and the V-cycle discussion: ~2× runtime for post-processing)."
+    );
+}

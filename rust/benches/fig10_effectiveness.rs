@@ -1,0 +1,70 @@
+//! Fig. 10 — effectiveness tests: Mt-KaHyPar-D vs -Q and -D-F vs -Q-F
+//! with equal time budgets (the faster algorithm gets extra repetitions).
+
+use mtkahypar::benchkit::{self, profiles, suites};
+use mtkahypar::coordinator::context::{Context, Preset};
+
+fn run_preset(
+    preset: Preset,
+    inst: &suites::HgInstance,
+    k: usize,
+    seeds: &[u64],
+) -> Vec<benchkit::RunResult> {
+    seeds
+        .iter()
+        .map(|&seed| {
+            let mut ctx = Context::new(preset, k, 0.03).with_threads(4).with_seed(seed);
+            ctx.contraction_limit_factor = 24;
+            ctx.ip_min_repetitions = 2;
+            ctx.ip_max_repetitions = 4;
+            ctx.fm_max_rounds = 4;
+            benchkit::run_hg(preset.name(), &inst.hg, &inst.name, &ctx)
+        })
+        .collect()
+}
+
+fn compare(pa: Preset, pb: Preset, instances: &[suites::HgInstance], k: usize) {
+    let seeds: Vec<u64> = (0..5).collect();
+    let mut wins_a = 0usize;
+    let mut wins_b = 0usize;
+    let mut ties = 0usize;
+    let mut rows = Vec::new();
+    for inst in instances {
+        let runs_a = run_preset(pa, inst, k, &seeds);
+        let runs_b = run_preset(pb, inst, k, &seeds);
+        let ra: Vec<&benchkit::RunResult> = runs_a.iter().collect();
+        let rb: Vec<&benchkit::RunResult> = runs_b.iter().collect();
+        let pairs = profiles::effectiveness_pairs(&ra, &rb, 10, 42);
+        let (mut a, mut b, mut t) = (0, 0, 0);
+        for (qa, qb) in &pairs {
+            match qa.cmp(qb) {
+                std::cmp::Ordering::Less => a += 1,
+                std::cmp::Ordering::Greater => b += 1,
+                std::cmp::Ordering::Equal => t += 1,
+            }
+        }
+        wins_a += a;
+        wins_b += b;
+        ties += t;
+        rows.push(vec![inst.name.clone(), a.to_string(), b.to_string(), t.to_string()]);
+    }
+    rows.push(vec!["TOTAL".into(), wins_a.to_string(), wins_b.to_string(), ties.to_string()]);
+    benchkit::print_table(
+        &format!("Fig. 10 — effectiveness test {} vs {} (virtual-instance wins)", pa.name(), pb.name()),
+        &["instance", &format!("{} wins", pa.name()), &format!("{} wins", pb.name()), "ties"],
+        &rows,
+    );
+    let total = (wins_a + wins_b + ties).max(1) as f64;
+    println!(
+        "=> paper expectation: near-parity once time-normalized. Measured split: {:.0}% / {:.0}% / {:.0}% (A/B/tie)",
+        100.0 * wins_a as f64 / total,
+        100.0 * wins_b as f64 / total,
+        100.0 * ties as f64 / total
+    );
+}
+
+fn main() {
+    let instances: Vec<_> = suites::suite_mhg().into_iter().take(5).collect();
+    compare(Preset::Default, Preset::Quality, &instances, 8);
+    compare(Preset::DefaultFlows, Preset::QualityFlows, &instances, 8);
+}

@@ -1,0 +1,65 @@
+//! Fig. 14 — solution quality with an increasing number of threads:
+//! more threads must not (systematically) degrade quality, and SDet must
+//! stay bit-identical.
+
+use mtkahypar::benchkit::{self, profiles, suites};
+use mtkahypar::coordinator::context::{Context, Preset};
+use mtkahypar::coordinator::partitioner;
+
+fn main() {
+    let instances = suites::suite_lhg();
+    let presets = [Preset::Deterministic, Preset::Default, Preset::DefaultFlows];
+    let threads = [1usize, 4];
+
+    let mut results = Vec::new();
+    let mut det_identical = true;
+    for inst in &instances {
+        let mut det_parts: Option<Vec<u32>> = None;
+        for preset in presets {
+            for &t in &threads {
+                let mut ctx = Context::new(preset, 8, 0.03).with_threads(t).with_seed(5);
+                ctx.contraction_limit_factor = 24;
+                ctx.ip_min_repetitions = 2;
+                ctx.ip_max_repetitions = 4;
+                ctx.fm_max_rounds = 3;
+                let phg = partitioner::partition_arc(inst.hg.clone(), &ctx);
+                if preset == Preset::Deterministic {
+                    match &det_parts {
+                        None => det_parts = Some(phg.parts()),
+                        Some(p) => det_identical &= *p == phg.parts(),
+                    }
+                }
+                results.push(benchkit::RunResult {
+                    algorithm: format!("{} t={t}", preset.name()),
+                    instance: inst.name.clone(),
+                    k: 8,
+                    quality: phg.km1(),
+                    imbalance: phg.imbalance(),
+                    feasible: phg.is_balanced(),
+                    seconds: 0.0,
+                });
+            }
+        }
+        det_parts = None;
+        let _ = det_parts;
+    }
+    let taus = profiles::default_taus();
+    let lines = profiles::performance_profiles(&results, &taus);
+    let mut rows = Vec::new();
+    for line in &lines {
+        let mut row = vec![line.algorithm.clone()];
+        row.extend(line.points.iter().map(|&(_, f)| format!("{f:.2}")));
+        rows.push(row);
+    }
+    let mut header = vec!["algorithm".to_string()];
+    header.extend(taus.iter().map(|t| format!("τ={t}")));
+    let header_refs: Vec<&str> = header.iter().map(String::as_str).collect();
+    benchkit::print_table(
+        "Fig. 14 — quality vs thread count (performance profiles)",
+        &header_refs,
+        &rows,
+    );
+    println!(
+        "\nSDet bit-identical across thread counts: {det_identical} (paper requirement: true)"
+    );
+}

@@ -1,0 +1,129 @@
+//! Fig. 2 — the time/quality landscape of partitioning algorithms, plus
+//! the Fig. 8 benchmark-set statistics.
+//!
+//! For every solver we compute per-instance quality ratios relative to
+//! the best solver on that instance, aggregate with the harmonic mean
+//! (paper's y-axis), and geometric-mean running times (x-axis). Markers
+//! toward the lower left are better; Mt-KaHyPar configurations should
+//! occupy the Pareto frontier spanned by the internal baselines.
+
+use mtkahypar::benchkit::{self, baselines, suites};
+use mtkahypar::coordinator::context::{Context, Preset};
+use mtkahypar::util::stats;
+use std::time::Instant;
+
+type AlgoFn = Box<dyn Fn(&suites::HgInstance, u64) -> benchkit::RunResult>;
+
+fn bench_ctx(preset: Preset, k: usize, threads: usize, seed: u64) -> Context {
+    let mut ctx = Context::new(preset, k, 0.03).with_threads(threads).with_seed(seed);
+    ctx.contraction_limit_factor = 24;
+    ctx.ip_min_repetitions = 2;
+    ctx.ip_max_repetitions = 5;
+    ctx.fm_max_rounds = 4;
+    ctx
+}
+
+fn preset_algo(
+    name: &'static str,
+    preset: Preset,
+    k: usize,
+    threads: usize,
+) -> (&'static str, AlgoFn) {
+    (
+        name,
+        Box::new(move |inst, seed| {
+            let ctx = bench_ctx(preset, k, threads, seed);
+            benchkit::run_hg(name, &inst.hg, &inst.name, &ctx)
+        }),
+    )
+}
+
+fn baseline_algo(
+    name: &'static str,
+    k: usize,
+    threads: usize,
+    f: impl Fn(
+            &std::sync::Arc<mtkahypar::hypergraph::Hypergraph>,
+            &Context,
+        ) -> mtkahypar::partition::PartitionedHypergraph
+        + 'static,
+) -> (&'static str, AlgoFn) {
+    (
+        name,
+        Box::new(move |inst, seed| {
+            let ctx = bench_ctx(Preset::Default, k, threads, seed);
+            let start = Instant::now();
+            let phg = f(&inst.hg, &ctx);
+            benchkit::RunResult {
+                algorithm: name.to_string(),
+                instance: inst.name.clone(),
+                k,
+                quality: phg.km1(),
+                imbalance: phg.imbalance(),
+                feasible: phg.is_balanced(),
+                seconds: start.elapsed().as_secs_f64(),
+            }
+        }),
+    )
+}
+
+fn main() {
+    let instances = suites::suite_mhg();
+    suites::print_suite_stats(&instances);
+    let k = 8;
+    let threads = 4;
+
+    let algos: Vec<(&str, AlgoFn)> = vec![
+        preset_algo("Mt-KaHyPar-S", Preset::Speed, k, threads),
+        preset_algo("Mt-KaHyPar-D", Preset::Default, k, threads),
+        preset_algo("Mt-KaHyPar-D-F", Preset::DefaultFlows, k, threads),
+        preset_algo("Mt-KaHyPar-Q", Preset::Quality, k, threads),
+        preset_algo("Mt-KaHyPar-Q-F", Preset::QualityFlows, k, threads),
+        preset_algo("Mt-KaHyPar-SDet", Preset::Deterministic, k, threads),
+        baseline_algo("PaToH-like", k, threads, baselines::patoh_like),
+        baseline_algo("Zoltan-like", k, threads, baselines::zoltan_like),
+        baseline_algo("BiPart-like", k, threads, baselines::bipart_like),
+        baseline_algo("flat-LP", k, threads, baselines::flat_lp),
+    ];
+    let mut results: Vec<benchkit::RunResult> = Vec::new();
+    for inst in &instances {
+        for (_, run) in &algos {
+            results.push(run(inst, 0));
+        }
+    }
+
+    let mut names: Vec<String> = results.iter().map(|r| r.algorithm.clone()).collect();
+    names.sort();
+    names.dedup();
+    let mut rows = Vec::new();
+    for name in &names {
+        let mine: Vec<&benchkit::RunResult> =
+            results.iter().filter(|r| &r.algorithm == name).collect();
+        let ratios: Vec<f64> = mine
+            .iter()
+            .map(|r| {
+                let best = results
+                    .iter()
+                    .filter(|o| o.instance == r.instance && o.feasible)
+                    .map(|o| o.quality)
+                    .min()
+                    .unwrap_or(r.quality)
+                    .max(1);
+                r.quality.max(1) as f64 / best as f64
+            })
+            .collect();
+        let times: Vec<f64> = mine.iter().map(|r| r.seconds).collect();
+        let infeasible = mine.iter().filter(|r| !r.feasible).count();
+        rows.push(vec![
+            name.clone(),
+            format!("{:.4}", stats::harmonic_mean(&ratios)),
+            format!("{:.3}", stats::geometric_mean(&times)),
+            format!("{infeasible}/{}", mine.len()),
+        ]);
+    }
+    benchkit::print_table(
+        "Fig. 2 analogue — quality ratio (harmonic mean, lower=better) vs geo-mean time [s]",
+        &["algorithm", "quality ratio", "time [s]", "infeasible"],
+        &rows,
+    );
+}

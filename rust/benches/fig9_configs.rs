@@ -1,0 +1,80 @@
+//! Fig. 9 — performance profiles + relative running times of the five
+//! Mt-KaHyPar configurations on the M_HG suite.
+
+use mtkahypar::benchkit::{self, profiles, suites};
+use mtkahypar::coordinator::context::{Context, Preset};
+use mtkahypar::util::stats;
+
+fn main() {
+    let instances = suites::suite_mhg();
+    let seeds = [0u64, 1, 2];
+    let ks = [2usize, 8];
+    let presets = [
+        Preset::Deterministic,
+        Preset::Default,
+        Preset::Quality,
+        Preset::DefaultFlows,
+        Preset::QualityFlows,
+    ];
+
+    let mut results = Vec::new();
+    for inst in &instances {
+        for &k in &ks {
+            for preset in presets {
+                for &seed in &seeds {
+                    let mut ctx = Context::new(preset, k, 0.03).with_threads(4).with_seed(seed);
+                    ctx.contraction_limit_factor = 24;
+                    ctx.ip_min_repetitions = 2;
+                    ctx.ip_max_repetitions = 5;
+                    ctx.fm_max_rounds = 4;
+                    results.push(benchkit::run_hg(
+                        preset.name(),
+                        &inst.hg,
+                        &format!("{}_k{k}", inst.name),
+                        &ctx,
+                    ));
+                }
+            }
+        }
+    }
+    let agg = benchkit::aggregate_seeds(&results);
+    let taus = profiles::default_taus();
+    let lines = profiles::performance_profiles(&agg, &taus);
+
+    let mut rows = Vec::new();
+    for line in &lines {
+        let mut row = vec![line.algorithm.clone()];
+        row.extend(line.points.iter().map(|&(_, f)| format!("{f:.2}")));
+        row.push(format!("{:.2}", line.infeasible_fraction));
+        rows.push(row);
+    }
+    let mut header = vec!["algorithm".to_string()];
+    header.extend(taus.iter().map(|t| format!("τ={t}")));
+    header.push("infeas".into());
+    let header_refs: Vec<&str> = header.iter().map(String::as_str).collect();
+    benchkit::print_table("Fig. 9 — performance profiles (fraction ≤ τ·best)", &header_refs, &rows);
+
+    // relative running times (paper ranking: SDet/D fast, Q ≈ D-F, Q-F slowest)
+    let d_time = stats::geometric_mean(
+        &agg.iter()
+            .filter(|r| r.algorithm == "Mt-KaHyPar-D")
+            .map(|r| r.seconds)
+            .collect::<Vec<_>>(),
+    );
+    let mut time_rows = Vec::new();
+    for preset in presets {
+        let times: Vec<f64> =
+            agg.iter().filter(|r| r.algorithm == preset.name()).map(|r| r.seconds).collect();
+        let g = stats::geometric_mean(&times);
+        time_rows.push(vec![
+            preset.name().to_string(),
+            format!("{g:.3}"),
+            format!("{:.2}x", g / d_time.max(1e-12)),
+        ]);
+    }
+    benchkit::print_table(
+        "Fig. 9 — geo-mean running times (relative to Mt-KaHyPar-D)",
+        &["configuration", "time [s]", "vs D"],
+        &time_rows,
+    );
+}

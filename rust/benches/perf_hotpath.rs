@@ -1,0 +1,139 @@
+//! §Perf — hot-path microbenchmarks driving the optimization pass
+//! (EXPERIMENTS.md §Perf records before/after):
+//!
+//! * move-op throughput on the concurrent partition structure,
+//! * gain-table update throughput,
+//! * rating-map aggregation (coarsening inner loop),
+//! * parallel contraction,
+//! * parallel gain recalculation,
+//! * one LP round,
+//! * AOT gain-tile execution + spectral execution (L1/L2 via PJRT).
+
+use mtkahypar::coordinator::context::{Context, Preset};
+use mtkahypar::datastructures::RatingMap;
+use mtkahypar::generators::{planted_hypergraph, PlantedParams};
+use mtkahypar::hypergraph::contraction;
+use mtkahypar::partition::{recalculate_gains, GainTable, Move, PartitionedHypergraph};
+use mtkahypar::refinement::lp;
+use mtkahypar::util::Rng;
+use mtkahypar::{BlockId, NodeId};
+use std::sync::Arc;
+use std::time::Instant;
+
+fn bench<F: FnMut()>(name: &str, iters: usize, per_iter_items: usize, mut f: F) {
+    // warmup
+    f();
+    let start = Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    let total = start.elapsed().as_secs_f64();
+    let per_item = total / (iters * per_iter_items.max(1)) as f64;
+    println!(
+        "{name:<42} {:>10.3} ms/iter   {:>9.1} ns/item",
+        1e3 * total / iters as f64,
+        1e9 * per_item
+    );
+}
+
+fn main() {
+    println!("perf_hotpath — ns/item hot-path microbenchmarks\n");
+    let k = 8usize;
+    let p = PlantedParams { n: 20_000, m: 36_000, blocks: k, ..Default::default() };
+    let hg = Arc::new(planted_hypergraph(&p, 7));
+    let n = hg.num_nodes();
+    let parts: Vec<BlockId> = (0..n).map(|u| (u * k / n) as BlockId).collect();
+
+    // ---- move op ----
+    let mut phg = PartitionedHypergraph::new(hg.clone(), k);
+    phg.set_uniform_max_weight(1.0);
+    phg.assign_all(&parts, 1);
+    let mut rng = Rng::new(1);
+    let moves: Vec<(NodeId, BlockId)> =
+        (0..5_000).map(|_| (rng.next_below(n) as NodeId, rng.next_below(k) as BlockId)).collect();
+    bench("partition move op (attributed gains)", 20, moves.len(), || {
+        for &(u, t) in &moves {
+            if phg.block_of(u) != t {
+                let _ = phg.try_move(u, t, None);
+            }
+        }
+    });
+
+    // ---- gain table updates ----
+    let gt = GainTable::new(n, k);
+    gt.initialize(&phg, 1);
+    bench("move op + gain-table update rules", 10, moves.len(), || {
+        for &(u, t) in &moves {
+            if phg.block_of(u) != t {
+                let _ = phg.try_move(u, t, Some(&gt));
+            }
+        }
+    });
+    bench("gain table full initialize", 5, n, || gt.initialize(&phg, 1));
+
+    // ---- rating map (coarsening inner loop) ----
+    let mut map = RatingMap::with_default_capacity();
+    bench("rating-map aggregation over pins", 10, hg.num_pins(), || {
+        for u in 0..n as NodeId {
+            map.clear();
+            for &e in hg.incident_nets(u) {
+                let r = hg.net_weight(e) as f64 / (hg.net_size(e).max(2) - 1) as f64;
+                for &v in hg.pins(e) {
+                    if v != u {
+                        map.add(v as u64, r);
+                    }
+                }
+            }
+        }
+    });
+
+    // ---- contraction ----
+    let rep: Vec<NodeId> = (0..n as NodeId).map(|u| u - (u % 2)).collect();
+    bench("parallel contraction (2:1 clustering)", 5, hg.num_pins(), || {
+        let _ = contraction::contract(&hg, &rep, 1);
+    });
+
+    // ---- gain recalculation ----
+    let phg2 = PartitionedHypergraph::new(hg.clone(), k);
+    phg2.assign_all(&parts, 1);
+    let mut seq_moves: Vec<Move> = Vec::new();
+    let mut rng2 = Rng::new(9);
+    for u in rng2.sample_indices(n, 2_000) {
+        let from = phg2.block_of(u as NodeId);
+        let to = ((from as usize + 1) % k) as BlockId;
+        phg2.move_unchecked(u as NodeId, to, None);
+        seq_moves.push(Move { node: u as NodeId, from, to });
+    }
+    bench("parallel gain recalculation (Alg 6.2)", 10, seq_moves.len(), || {
+        let _ = recalculate_gains(&phg2, &seq_moves, 1);
+    });
+
+    // ---- LP round ----
+    let mut ctx = Context::new(Preset::Speed, k, 0.03).with_threads(1).with_seed(3);
+    ctx.lp_rounds = 1;
+    let phg3 = PartitionedHypergraph::new(hg.clone(), k);
+    phg3.assign_all(&parts, 1);
+    bench("one LP round over all nodes", 5, n, || {
+        let _ = lp::lp_refine(&phg3, &ctx);
+    });
+
+    // ---- runtime (L1/L2 via PJRT) ----
+    if let Some(rt) = mtkahypar::runtime::global() {
+        let a = vec![0.25f32; 128 * 128];
+        let w = vec![1f32; 128];
+        let mut x = vec![0f32; 128 * 16];
+        for i in 0..128 {
+            x[i * 16 + i % 8] = 1.0;
+        }
+        bench("AOT gain-tile execution (128x128x16)", 20, 128 * 128, || {
+            let _ = rt.gain_tiles(&a, &w, &x).unwrap();
+        });
+        let adj = vec![0.01f32; 256 * 256];
+        let deg = vec![2.56f32; 256];
+        bench("AOT spectral power iteration (256)", 5, 256 * 256, || {
+            let _ = rt.spectral(&adj, &deg).unwrap();
+        });
+    } else {
+        println!("(runtime artifacts missing — run `make artifacts` for the AOT benches)");
+    }
+}

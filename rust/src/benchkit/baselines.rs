@@ -1,0 +1,167 @@
+//! Internal baseline partitioners (DESIGN.md §2 substitution): the three
+//! algorithm classes the paper's 25-solver comparison reduces to, built
+//! on the same substrates so differences isolate the *algorithmic* gap:
+//!
+//! * **PaToH-like** — sequential multilevel with matching-based
+//!   coarsening and a single LP+weak-FM pass (fast sequential class:
+//!   PaToH-D/-Q, Metis),
+//! * **Zoltan-like** — parallel multilevel with LP-only refinement and no
+//!   community-aware coarsening (distributed/fast-parallel class:
+//!   Zoltan, ParMetis, KaMinPar for graphs),
+//! * **BiPart-like** — deterministic multilevel with synchronous LP, a
+//!   non-adaptive 1-repetition portfolio and coarse sub-rounds (the
+//!   deterministic class: BiPart).
+
+use crate::coarsening::matching;
+use crate::coordinator::context::{Context, Preset};
+use crate::coordinator::partitioner;
+use crate::hypergraph::{contraction, Hypergraph};
+use crate::initial;
+use crate::partition::PartitionedHypergraph;
+use crate::refinement::lp;
+use crate::BlockId;
+use std::sync::Arc;
+
+/// Sequential PaToH-like multilevel partitioner.
+pub fn patoh_like(hg: &Arc<Hypergraph>, ctx_in: &Context) -> PartitionedHypergraph {
+    let mut ctx = ctx_in.clone();
+    ctx.threads = 1;
+    ctx.use_community_detection = false;
+    ctx.use_flows = false;
+    ctx.fm_max_rounds = 2;
+    ctx.ip_min_repetitions = 1;
+    ctx.ip_max_repetitions = 3;
+
+    // matching-based coarsening hierarchy
+    let limit = ctx.contraction_limit().max(2 * ctx.k);
+    let cmax = ctx.max_cluster_weight(hg.total_weight());
+    let mut levels: Vec<crate::coarsening::Level> = Vec::new();
+    let mut current = hg.clone();
+    while current.num_nodes() > limit {
+        let n_before = current.num_nodes();
+        let rep = matching::match_nodes(&current, cmax, ctx.seed ^ levels.len() as u64);
+        let c = contraction::contract(&current, &rep, 1);
+        if n_before - c.coarse.num_nodes() <= n_before / 100 {
+            break;
+        }
+        let coarse = Arc::new(c.coarse);
+        levels.push(crate::coarsening::Level {
+            coarse: coarse.clone(),
+            fine_to_coarse: c.fine_to_coarse,
+        });
+        current = coarse;
+    }
+    let mut parts = initial::initial_partition(current, &ctx);
+    for i in (0..levels.len()).rev() {
+        let phg = partitioner::refine_level(levels[i].coarse.clone(), &parts, &ctx);
+        parts = crate::coarsening::project_partition(&levels[i], &phg.parts());
+    }
+    partitioner::refine_level(hg.clone(), &parts, &ctx)
+}
+
+/// Parallel LP-only multilevel (Zoltan / KaMinPar class).
+pub fn zoltan_like(hg: &Arc<Hypergraph>, ctx_in: &Context) -> PartitionedHypergraph {
+    let mut ctx = ctx_in.clone();
+    ctx.use_fm = false;
+    ctx.use_flows = false;
+    ctx.use_community_detection = false;
+    ctx.ip_min_repetitions = 1;
+    ctx.ip_max_repetitions = 3;
+    partitioner::partition_arc(hg.clone(), &ctx)
+}
+
+/// Deterministic BiPart-like partitioner: synchronous LP, no portfolio
+/// adaptivity, coarse sub-rounds, no community detection.
+pub fn bipart_like(hg: &Arc<Hypergraph>, ctx_in: &Context) -> PartitionedHypergraph {
+    let mut ctx = Context::new(Preset::Deterministic, ctx_in.k, ctx_in.epsilon)
+        .with_threads(ctx_in.threads)
+        .with_seed(ctx_in.seed);
+    ctx.use_community_detection = false;
+    ctx.det_sub_rounds = 2; // coarser synchronization = weaker decisions
+    ctx.lp_rounds = 2;
+    ctx.ip_min_repetitions = 1;
+    ctx.ip_max_repetitions = 1;
+    ctx.contraction_limit_factor = ctx_in.contraction_limit_factor;
+    partitioner::partition_arc(hg.clone(), &ctx)
+}
+
+/// Flat (non-multilevel) LP partitioning — the control showing why the
+/// multilevel scheme matters (paper §12's "faster methods omitting the
+/// multilevel scheme are inferior").
+pub fn flat_lp(hg: &Arc<Hypergraph>, ctx_in: &Context) -> PartitionedHypergraph {
+    let ctx = ctx_in.clone();
+    // random balanced start, LP only
+    let n = hg.num_nodes();
+    let mut rng = crate::util::Rng::new(ctx.seed);
+    let mut order: Vec<u32> = (0..n as u32).collect();
+    rng.shuffle(&mut order);
+    let mut parts: Vec<BlockId> = vec![0; n];
+    for (i, &u) in order.iter().enumerate() {
+        parts[u as usize] = (i % ctx.k) as BlockId;
+    }
+    let mut phg = PartitionedHypergraph::new(hg.clone(), ctx.k);
+    phg.set_uniform_max_weight(ctx.epsilon);
+    phg.assign_all(&parts, ctx.threads);
+    lp::lp_refine(&phg, &ctx);
+    phg
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::generators::{planted_hypergraph, PlantedParams};
+
+    fn ctx(k: usize) -> Context {
+        let mut c = Context::new(Preset::Default, k, 0.03).with_threads(2).with_seed(1);
+        c.contraction_limit_factor = 24;
+        c.ip_min_repetitions = 1;
+        c.ip_max_repetitions = 2;
+        c.fm_max_rounds = 2;
+        c
+    }
+
+    #[test]
+    fn baselines_produce_feasible_partitions() {
+        let hg = Arc::new(planted_hypergraph(
+            &PlantedParams { n: 500, m: 900, blocks: 4, ..Default::default() },
+            3,
+        ));
+        for (name, phg) in [
+            ("patoh", patoh_like(&hg, &ctx(4))),
+            ("zoltan", zoltan_like(&hg, &ctx(4))),
+            ("bipart", bipart_like(&hg, &ctx(4))),
+        ] {
+            assert!(phg.is_balanced(), "{name} imbalance {}", phg.imbalance());
+            phg.verify_consistency().unwrap();
+        }
+    }
+
+    #[test]
+    fn multilevel_beats_flat_lp() {
+        let hg = Arc::new(planted_hypergraph(
+            &PlantedParams { n: 600, m: 1100, blocks: 4, p_intra: 0.9, ..Default::default() },
+            7,
+        ));
+        let ml = partitioner::partition_arc(hg.clone(), &ctx(4)).km1();
+        let flat = flat_lp(&hg, &ctx(4)).km1();
+        assert!(ml < flat, "multilevel {ml} vs flat {flat}");
+    }
+
+    #[test]
+    fn quality_hierarchy_mt_vs_baselines() {
+        // Mt-KaHyPar-D ≥ Zoltan-like in quality (the paper's headline)
+        let mut d_total = 0i64;
+        let mut z_total = 0i64;
+        for seed in 0..3u64 {
+            let hg = Arc::new(planted_hypergraph(
+                &PlantedParams { n: 500, m: 900, blocks: 4, p_intra: 0.88, ..Default::default() },
+                seed,
+            ));
+            let mut c = ctx(4);
+            c.seed = seed;
+            d_total += partitioner::partition_arc(hg.clone(), &c).km1();
+            z_total += zoltan_like(&hg, &c).km1();
+        }
+        assert!(d_total <= z_total, "D {d_total} vs Zoltan-like {z_total}");
+    }
+}

@@ -1,0 +1,88 @@
+//! Evaluation toolkit (paper §12): benchmark suites, performance
+//! profiles, effectiveness tests, aggregation and the internal baseline
+//! partitioners the comparison figures are regenerated against.
+
+pub mod baselines;
+pub mod profiles;
+pub mod suites;
+
+use crate::coordinator::context::Context;
+use crate::coordinator::partitioner;
+use crate::hypergraph::Hypergraph;
+use crate::metrics;
+use crate::BlockId;
+use std::sync::Arc;
+use std::time::Instant;
+
+/// One measured run of an algorithm on an instance.
+#[derive(Clone, Debug)]
+pub struct RunResult {
+    pub algorithm: String,
+    pub instance: String,
+    pub k: usize,
+    pub quality: i64,
+    pub imbalance: f64,
+    pub feasible: bool,
+    pub seconds: f64,
+}
+
+/// Run a hypergraph config once and measure it.
+pub fn run_hg(
+    name: &str,
+    hg: &Arc<Hypergraph>,
+    instance: &str,
+    ctx: &Context,
+) -> RunResult {
+    let start = Instant::now();
+    let phg = partitioner::partition_arc(hg.clone(), ctx);
+    let seconds = start.elapsed().as_secs_f64();
+    RunResult {
+        algorithm: name.to_string(),
+        instance: instance.to_string(),
+        k: ctx.k,
+        quality: phg.km1(),
+        imbalance: phg.imbalance(),
+        feasible: phg.is_balanced(),
+        seconds,
+    }
+}
+
+/// Arithmetic-mean quality and geometric-mean time per (algorithm,
+/// instance) over seeds — the paper's per-instance aggregation.
+pub fn aggregate_seeds(results: &[RunResult]) -> Vec<RunResult> {
+    use std::collections::BTreeMap;
+    let mut groups: BTreeMap<(String, String, usize), Vec<&RunResult>> = BTreeMap::new();
+    for r in results {
+        groups.entry((r.algorithm.clone(), r.instance.clone(), r.k)).or_default().push(r);
+    }
+    groups
+        .into_iter()
+        .map(|((algorithm, instance, k), rs)| RunResult {
+            algorithm,
+            instance,
+            k,
+            quality: (rs.iter().map(|r| r.quality as f64).sum::<f64>() / rs.len() as f64)
+                .round() as i64,
+            imbalance: rs.iter().map(|r| r.imbalance).fold(f64::MIN, f64::max),
+            feasible: rs.iter().all(|r| r.feasible),
+            seconds: crate::util::stats::geometric_mean(
+                &rs.iter().map(|r| r.seconds).collect::<Vec<_>>(),
+            ),
+            })
+        .collect()
+}
+
+/// Verify a partition against from-scratch metrics (sanity for benches).
+pub fn verify_result(hg: &Hypergraph, parts: &[BlockId], k: usize, reported: i64) -> bool {
+    metrics::km1(hg, parts, k) == reported
+}
+
+/// Quick Markdown-ish table printer shared by the bench binaries.
+pub fn print_table(title: &str, header: &[&str], rows: &[Vec<String>]) {
+    println!("\n## {title}");
+    println!("| {} |", header.join(" | "));
+    println!("|{}|", header.iter().map(|_| "---").collect::<Vec<_>>().join("|"));
+    for row in rows {
+        println!("| {} |", row.join(" | "));
+    }
+}

@@ -1,0 +1,174 @@
+//! Performance profiles and effectiveness tests (paper §12).
+
+use super::RunResult;
+use crate::util::Rng;
+use std::collections::BTreeMap;
+
+/// Performance-profile point: fraction of instances with
+/// `q_A(I) ≤ τ · Best(I)`.
+#[derive(Clone, Debug)]
+pub struct ProfileLine {
+    pub algorithm: String,
+    /// (τ, fraction) samples
+    pub points: Vec<(f64, f64)>,
+    /// fraction of instances where this algorithm was (tied-)best (τ=1)
+    pub best_fraction: f64,
+    /// fraction of instances with infeasible results
+    pub infeasible_fraction: f64,
+}
+
+/// Build performance profiles over per-instance aggregated results.
+pub fn performance_profiles(results: &[RunResult], taus: &[f64]) -> Vec<ProfileLine> {
+    // best feasible quality per instance
+    let mut best: BTreeMap<(String, usize), f64> = BTreeMap::new();
+    for r in results {
+        let key = (r.instance.clone(), r.k);
+        let q = effective_quality(r);
+        best.entry(key).and_modify(|b| *b = b.min(q)).or_insert(q);
+    }
+    let mut algos: Vec<String> = results.iter().map(|r| r.algorithm.clone()).collect();
+    algos.sort();
+    algos.dedup();
+
+    algos
+        .into_iter()
+        .map(|algo| {
+            let mine: Vec<&RunResult> = results.iter().filter(|r| r.algorithm == algo).collect();
+            let n = mine.len().max(1) as f64;
+            let points: Vec<(f64, f64)> = taus
+                .iter()
+                .map(|&tau| {
+                    let hits = mine
+                        .iter()
+                        .filter(|r| {
+                            r.feasible
+                                && effective_quality(r)
+                                    <= tau * best[&(r.instance.clone(), r.k)] + 1e-9
+                        })
+                        .count();
+                    (tau, hits as f64 / n)
+                })
+                .collect();
+            let best_fraction = points.first().map(|&(_, f)| f).unwrap_or(0.0);
+            let infeasible_fraction =
+                mine.iter().filter(|r| !r.feasible).count() as f64 / n;
+            ProfileLine { algorithm: algo, points, best_fraction, infeasible_fraction }
+        })
+        .collect()
+}
+
+fn effective_quality(r: &RunResult) -> f64 {
+    // +1 smoothing keeps zero-cut instances comparable under ratios
+    r.quality as f64 + 1.0
+}
+
+/// Default τ grid used in the bench binaries (paper plots use 1..2 plus
+/// an overflow bucket).
+pub fn default_taus() -> Vec<f64> {
+    vec![1.0, 1.01, 1.05, 1.1, 1.2, 1.5, 2.0, 10.0]
+}
+
+/// Effectiveness tests (paper §12): build virtual instances giving the
+/// faster algorithm extra repetitions until the time budget of the slower
+/// one is used; quality = min over the sampled runs.
+///
+/// `runs_a`/`runs_b` are the per-seed (not aggregated) results of the two
+/// algorithms on one instance. Returns `num_virtual` virtual (qualityA,
+/// qualityB) pairs.
+pub fn effectiveness_pairs(
+    runs_a: &[&RunResult],
+    runs_b: &[&RunResult],
+    num_virtual: usize,
+    seed: u64,
+) -> Vec<(i64, i64)> {
+    let mut rng = Rng::new(seed);
+    let mut out = Vec::with_capacity(num_virtual);
+    for _ in 0..num_virtual {
+        let ra = runs_a[rng.next_below(runs_a.len())];
+        let rb = runs_b[rng.next_below(runs_b.len())];
+        // the faster algorithm samples additional runs within the budget
+        let (fast_runs, slow_run, fast_is_a) = if ra.seconds <= rb.seconds {
+            (runs_a, rb, true)
+        } else {
+            (runs_b, ra, false)
+        };
+        let budget = slow_run.seconds;
+        let mut used = if fast_is_a { ra.seconds } else { rb.seconds };
+        let mut best_fast = if fast_is_a { ra.quality } else { rb.quality };
+        let mut pool: Vec<usize> = (0..fast_runs.len()).collect();
+        rng.shuffle(&mut pool);
+        for &idx in &pool {
+            if used >= budget {
+                break;
+            }
+            let candidate = fast_runs[idx];
+            let p_accept = ((budget - used) / candidate.seconds.max(1e-9)).min(1.0);
+            used += candidate.seconds;
+            if rng.next_f64() <= p_accept {
+                best_fast = best_fast.min(candidate.quality);
+            }
+        }
+        if fast_is_a {
+            out.push((best_fast, slow_run.quality));
+        } else {
+            out.push((slow_run.quality, best_fast));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rr(algo: &str, inst: &str, q: i64, t: f64, feasible: bool) -> RunResult {
+        RunResult {
+            algorithm: algo.into(),
+            instance: inst.into(),
+            k: 2,
+            quality: q,
+            imbalance: 0.0,
+            feasible,
+            seconds: t,
+        }
+    }
+
+    #[test]
+    fn profile_fractions() {
+        let results = vec![
+            rr("A", "i1", 100, 1.0, true),
+            rr("B", "i1", 110, 1.0, true),
+            rr("A", "i2", 200, 1.0, true),
+            rr("B", "i2", 200, 1.0, true),
+        ];
+        let profiles = performance_profiles(&results, &[1.0, 1.2]);
+        let a = profiles.iter().find(|p| p.algorithm == "A").unwrap();
+        let b = profiles.iter().find(|p| p.algorithm == "B").unwrap();
+        assert!((a.best_fraction - 1.0).abs() < 1e-9);
+        assert!((b.best_fraction - 0.5).abs() < 1e-9);
+        // at τ=1.2 B covers both instances
+        assert!((b.points[1].1 - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn infeasible_counted() {
+        let results = vec![rr("A", "i1", 10, 1.0, false), rr("A", "i2", 10, 1.0, true)];
+        let profiles = performance_profiles(&results, &[1.0]);
+        assert!((profiles[0].infeasible_fraction - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn effectiveness_gives_fast_algo_more_samples() {
+        // A is 4× faster and sometimes lucky
+        let a_runs: Vec<RunResult> = (0..8)
+            .map(|i| rr("A", "i", if i == 0 { 90 } else { 100 }, 1.0, true))
+            .collect();
+        let b_runs: Vec<RunResult> = (0..8).map(|_| rr("B", "i", 95, 4.0, true)).collect();
+        let ar: Vec<&RunResult> = a_runs.iter().collect();
+        let br: Vec<&RunResult> = b_runs.iter().collect();
+        let pairs = effectiveness_pairs(&ar, &br, 50, 7);
+        // A's min over multiple samples should frequently reach 90
+        let wins = pairs.iter().filter(|(a, b)| a < b).count();
+        assert!(wins > 10, "A should often win: {wins}");
+    }
+}

@@ -1,0 +1,163 @@
+//! Benchmark suites — scaled synthetic stand-ins for the paper's
+//! M_HG / L_HG / M_G / L_G sets (substitution rationale in DESIGN.md §2).
+//! Sizes scale with `MTK_BENCH_SCALE` (default 1; the paper-shape claims
+//! are already visible at scale 1 on this 1-vCPU testbed).
+
+use crate::generators::{self, PlantedParams, SatRepresentation};
+use crate::graph::Graph;
+use crate::hypergraph::Hypergraph;
+use std::sync::Arc;
+
+pub struct HgInstance {
+    pub name: String,
+    pub hg: Arc<Hypergraph>,
+}
+
+pub struct GraphInstance {
+    pub name: String,
+    pub g: Arc<Graph>,
+}
+
+fn scale() -> usize {
+    std::env::var("MTK_BENCH_SCALE").ok().and_then(|s| s.parse().ok()).unwrap_or(1)
+}
+
+/// Medium hypergraph suite (M_HG archetypes: ISPD98 VLSI, SPM, SAT
+/// PRIMAL/DUAL/LITERAL).
+pub fn suite_mhg() -> Vec<HgInstance> {
+    let s = scale();
+    let mut out = Vec::new();
+    for seed in 0..2u64 {
+        out.push(HgInstance {
+            name: format!("vlsi_{seed}"),
+            hg: Arc::new(generators::vlsi_hypergraph(1500 * s, 2200 * s, seed)),
+        });
+        out.push(HgInstance {
+            name: format!("spm_{seed}"),
+            hg: Arc::new(generators::spm_hypergraph(1200 * s, 1200 * s, 6, seed)),
+        });
+        out.push(HgInstance {
+            name: format!("sat_primal_{seed}"),
+            hg: Arc::new(generators::sat_hypergraph(600 * s, 2400 * s, SatRepresentation::Primal, seed)),
+        });
+        out.push(HgInstance {
+            name: format!("sat_dual_{seed}"),
+            hg: Arc::new(generators::sat_hypergraph(600 * s, 2400 * s, SatRepresentation::Dual, seed)),
+        });
+        out.push(HgInstance {
+            name: format!("planted_{seed}"),
+            hg: Arc::new(generators::planted_hypergraph(
+                &PlantedParams { n: 2000 * s, m: 3600 * s, blocks: 8, ..Default::default() },
+                seed,
+            )),
+        });
+    }
+    out
+}
+
+/// Large hypergraph suite (L_HG: bigger SAT + SPM instances).
+pub fn suite_lhg() -> Vec<HgInstance> {
+    let s = scale();
+    let mut out = Vec::new();
+    for seed in 0..2u64 {
+        out.push(HgInstance {
+            name: format!("L_spm_{seed}"),
+            hg: Arc::new(generators::spm_hypergraph(6000 * s, 6000 * s, 8, seed)),
+        });
+        out.push(HgInstance {
+            name: format!("L_sat_literal_{seed}"),
+            hg: Arc::new(generators::sat_hypergraph(
+                2500 * s,
+                9000 * s,
+                SatRepresentation::Literal,
+                seed,
+            )),
+        });
+        out.push(HgInstance {
+            name: format!("L_planted_{seed}"),
+            hg: Arc::new(generators::planted_hypergraph(
+                &PlantedParams { n: 8000 * s, m: 14000 * s, blocks: 16, ..Default::default() },
+                seed,
+            )),
+        });
+    }
+    out
+}
+
+/// Medium graph suite (M_G: DIMACS meshes + social networks).
+pub fn suite_mg() -> Vec<GraphInstance> {
+    let s = scale();
+    let mut out = Vec::new();
+    out.push(GraphInstance {
+        name: "mesh_40x40".into(),
+        g: Arc::new(generators::mesh_graph(40 * s, 40 * s)),
+    });
+    out.push(GraphInstance {
+        name: "mesh_64x25".into(),
+        g: Arc::new(generators::mesh_graph(64 * s, 25 * s)),
+    });
+    for seed in 0..2u64 {
+        out.push(GraphInstance {
+            name: format!("social_rmat_{seed}"),
+            g: Arc::new(generators::rmat_graph(11, 8, seed)),
+        });
+    }
+    out
+}
+
+/// Large graph suite (L_G).
+pub fn suite_lg() -> Vec<GraphInstance> {
+    let mut out = Vec::new();
+    out.push(GraphInstance {
+        name: "L_mesh_90x90".into(),
+        g: Arc::new(generators::mesh_graph(90, 90)),
+    });
+    for seed in 0..2u64 {
+        out.push(GraphInstance {
+            name: format!("L_social_rmat_{seed}"),
+            g: Arc::new(generators::rmat_graph(13, 10, seed)),
+        });
+    }
+    out
+}
+
+/// Fig. 8 analogue: print per-instance structure statistics.
+pub fn print_suite_stats(instances: &[HgInstance]) {
+    println!("\n## Benchmark-set statistics (paper Fig. 8 analogue)");
+    println!("| instance | n | m | pins | med |e| | max |e| | med d(v) | max d(v) |");
+    println!("|---|---|---|---|---|---|---|---|");
+    for inst in instances {
+        let hg = &inst.hg;
+        let mut sizes: Vec<usize> = hg.nets().map(|e| hg.net_size(e)).collect();
+        sizes.sort_unstable();
+        let mut degs: Vec<usize> = hg.nodes().map(|u| hg.degree(u)).collect();
+        degs.sort_unstable();
+        let med = |v: &[usize]| if v.is_empty() { 0 } else { v[v.len() / 2] };
+        println!(
+            "| {} | {} | {} | {} | {} | {} | {} | {} |",
+            inst.name,
+            hg.num_nodes(),
+            hg.num_nets(),
+            hg.num_pins(),
+            med(&sizes),
+            sizes.last().copied().unwrap_or(0),
+            med(&degs),
+            degs.last().copied().unwrap_or(0),
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn suites_are_valid() {
+        for inst in suite_mhg() {
+            inst.hg.validate().unwrap();
+        }
+        for inst in suite_mg() {
+            inst.g.validate().unwrap();
+        }
+    }
+}

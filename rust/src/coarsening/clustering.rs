@@ -1,0 +1,336 @@
+//! Parallel heavy-edge clustering with the on-the-fly conflict-resolution
+//! join protocol (paper §4.1, Algorithm 4.1).
+//!
+//! Each node evaluates the heavy-edge rating `r(u,C) = Σ ω(e)/(|e|−1)`
+//! over the clusters of its net-neighbors in a thread-local fixed-capacity
+//! rating table — *without locking any node* — and then executes the
+//! cluster-join operation: a CAS-based protocol with three node states
+//! (Unclustered / Joining / Clustered), busy-wait resolution of path
+//! conflicts and smallest-ID breaking of cyclic conflicts.
+
+use crate::coordinator::context::Context;
+use crate::datastructures::RatingMap;
+use crate::hypergraph::Hypergraph;
+use crate::parallel::parallel_chunks;
+use crate::util::rng::hash2;
+use crate::util::Rng;
+use crate::{NodeId, NodeWeight};
+use std::sync::atomic::{AtomicI64, AtomicU32, AtomicU64, AtomicU8, Ordering};
+
+const UNCLUSTERED: u8 = 0;
+const JOINING: u8 = 1;
+const CLUSTERED: u8 = 2;
+const NO_TARGET: u32 = u32::MAX;
+
+/// Shared state of one clustering pass.
+struct JoinState<'a> {
+    state: Vec<AtomicU8>,
+    rep: Vec<AtomicU32>,
+    /// desired target of each Joining node (cycle detection, §4.1)
+    target: Vec<AtomicU32>,
+    cluster_weight: Vec<AtomicI64>,
+    /// #nodes remaining after the joins performed so far
+    remaining: AtomicU64,
+    hg: &'a Hypergraph,
+    cmax: NodeWeight,
+}
+
+impl<'a> JoinState<'a> {
+    fn new(hg: &'a Hypergraph, cmax: NodeWeight) -> Self {
+        let n = hg.num_nodes();
+        JoinState {
+            state: (0..n).map(|_| AtomicU8::new(UNCLUSTERED)).collect(),
+            rep: (0..n as u32).map(AtomicU32::new).collect(),
+            target: (0..n).map(|_| AtomicU32::new(NO_TARGET)).collect(),
+            cluster_weight: (0..n).map(|u| AtomicI64::new(hg.node_weight(u as NodeId))).collect(),
+            remaining: AtomicU64::new(n as u64),
+            hg,
+            cmax,
+        }
+    }
+
+    #[inline]
+    fn state_of(&self, u: NodeId) -> u8 {
+        self.state[u as usize].load(Ordering::Acquire)
+    }
+
+    #[inline]
+    fn rep_of(&self, u: NodeId) -> NodeId {
+        self.rep[u as usize].load(Ordering::Acquire)
+    }
+
+    /// Algorithm 4.1: add `u` to the cluster represented by `v`.
+    /// Returns true if `u` ended up clustered (to anything).
+    fn join(&self, u: NodeId, v: NodeId) -> bool {
+        let ui = u as usize;
+        if self.state[ui]
+            .compare_exchange(UNCLUSTERED, JOINING, Ordering::AcqRel, Ordering::Acquire)
+            .is_err()
+        {
+            return false; // another thread owns u
+        }
+        // weight reservation on the (racily read) root of v's cluster
+        let root = self.rep_of(v) as usize;
+        let w = self.hg.node_weight(u);
+        if self.cluster_weight[root].fetch_add(w, Ordering::AcqRel) + w > self.cmax {
+            self.cluster_weight[root].fetch_sub(w, Ordering::AcqRel);
+            self.state[ui].store(UNCLUSTERED, Ordering::Release);
+            return false;
+        }
+        self.target[ui].store(v, Ordering::Release);
+
+        let vi = v as usize;
+        if self.state_of(v) == CLUSTERED
+            || self.state[vi]
+                .compare_exchange(UNCLUSTERED, JOINING, Ordering::AcqRel, Ordering::Acquire)
+                .is_ok()
+        {
+            // exclusive ownership of rep[u]; v frozen (Joining by us or
+            // already Clustered): safe to adopt rep[v]
+            self.rep[ui].store(self.rep_of(v), Ordering::Release);
+            self.finish(u, v);
+            return true;
+        }
+        // v is itself Joining under another thread: busy-wait (path
+        // conflict) and watch for cycles
+        loop {
+            match self.state_of(v) {
+                JOINING => {
+                    if let Some(min_id) = self.detect_cycle(u) {
+                        if min_id == u {
+                            // smallest node in the cycle breaks it
+                            self.rep[ui].store(self.rep_of(v), Ordering::Release);
+                            self.finish(u, v);
+                            return true;
+                        }
+                    }
+                    std::hint::spin_loop();
+                }
+                _ => {
+                    // v resolved: adopt its (now final) representative
+                    if self.state_of(u) == JOINING {
+                        self.rep[ui].store(self.rep_of(v), Ordering::Release);
+                    }
+                    self.finish(u, v);
+                    return true;
+                }
+            }
+        }
+    }
+
+    /// Follow the desired-target chain from `u`; if it loops back to `u`
+    /// through Joining nodes, return the smallest node id on the cycle.
+    fn detect_cycle(&self, u: NodeId) -> Option<NodeId> {
+        let mut cur = u;
+        let mut min_id = u;
+        for _ in 0..self.state.len() {
+            let t = self.target[cur as usize].load(Ordering::Acquire);
+            if t == NO_TARGET || self.state_of(cur) != JOINING {
+                return None;
+            }
+            cur = t;
+            if cur == u {
+                return Some(min_id);
+            }
+            min_id = min_id.min(cur);
+        }
+        None
+    }
+
+    /// Mark `u` and `v` clustered (final line of Algorithm 4.1).
+    fn finish(&self, u: NodeId, v: NodeId) {
+        self.state[u as usize].store(CLUSTERED, Ordering::Release);
+        self.state[v as usize].store(CLUSTERED, Ordering::Release);
+        self.target[u as usize].store(NO_TARGET, Ordering::Release);
+        if self.rep_of(u) != u {
+            // u actually merged into another cluster
+            self.remaining.fetch_sub(1, Ordering::AcqRel);
+        }
+    }
+}
+
+/// Heavy-edge rating pass: returns an idempotent representative array.
+///
+/// `floor` bounds how far a single pass may shrink (the paper's
+/// `c(V)/2.5` safeguard handled as a node-count floor = `limit`).
+pub fn cluster(
+    hg: &Hypergraph,
+    ctx: &Context,
+    communities: Option<&[u32]>,
+    cmax: NodeWeight,
+    floor: usize,
+) -> Vec<NodeId> {
+    let n = hg.num_nodes();
+    let js = JoinState::new(hg, cmax);
+    let min_remaining = (floor.max((n as f64 / ctx.shrink_limit) as usize)) as u64;
+
+    // random node order, deterministic in the seed
+    let mut order: Vec<u32> = (0..n as u32).collect();
+    Rng::new(hash2(ctx.seed, n as u64)).shuffle(&mut order);
+
+    parallel_chunks(n, ctx.threads, |_, s, e| {
+        let mut map = RatingMap::with_default_capacity();
+        for &u in &order[s..e] {
+            if js.remaining.load(Ordering::Acquire) <= min_remaining {
+                break; // don't overshoot the shrink limit
+            }
+            if js.state_of(u) != UNCLUSTERED {
+                continue;
+            }
+            if let Some(v) = best_target(hg, u, &js, communities, &mut map, ctx.seed) {
+                js.join(u, v);
+            }
+        }
+    });
+
+    // flatten: rep[rep[u]] may lag one level behind on cycle breaks
+    let mut rep: Vec<NodeId> =
+        js.rep.iter().map(|r| r.load(Ordering::Relaxed)).collect();
+    for u in 0..n {
+        let mut r = rep[u] as usize;
+        let mut hops = 0;
+        while rep[r] as usize != r && hops < n {
+            r = rep[r] as usize;
+            hops += 1;
+        }
+        rep[u] = r as NodeId;
+    }
+    rep
+}
+
+/// Evaluate the heavy-edge rating for `u` over the representatives of its
+/// net-neighbors (paper §4.1), respecting community and weight limits.
+fn best_target(
+    hg: &Hypergraph,
+    u: NodeId,
+    js: &JoinState,
+    communities: Option<&[u32]>,
+    map: &mut RatingMap,
+    seed: u64,
+) -> Option<NodeId> {
+    map.clear();
+    let cu = communities.map(|c| c[u as usize]);
+    for &e in hg.incident_nets(u) {
+        let size = hg.net_size(e);
+        if size < 2 {
+            continue;
+        }
+        let r = hg.net_weight(e) as f64 / (size as f64 - 1.0);
+        for &p in hg.pins(e) {
+            if p == u {
+                continue;
+            }
+            if let Some(cu) = cu {
+                if communities.unwrap()[p as usize] != cu {
+                    continue;
+                }
+            }
+            if map.should_grow() {
+                map.grow();
+            }
+            // aggregate at the pin's current representative (racy read —
+            // conflicts are rare and benign, paper §4.1)
+            map.add(js.rep_of(p) as u64, r);
+        }
+    }
+    let w_u = hg.node_weight(u);
+    let mut best: Option<(f64, u64, NodeId)> = None; // (rating, tiebreak, node)
+    for (root, rating, _) in map.iter() {
+        if root == u as u64 {
+            continue; // own (singleton) cluster
+        }
+        if js.cluster_weight[root as usize].load(Ordering::Relaxed) + w_u > js.cmax {
+            continue;
+        }
+        // ties broken uniformly at random via a per-(u,root) hash
+        let tb = hash2(seed ^ u as u64, root);
+        let better = match best {
+            None => true,
+            Some((br, bt, _)) => rating > br + 1e-12 || ((rating - br).abs() <= 1e-12 && tb > bt),
+        };
+        if better {
+            // join at the cluster's representative node
+            best = Some((rating, tb, root as NodeId));
+        }
+    }
+    best.map(|(_, _, v)| v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::context::{Context, Preset};
+    use crate::generators::{planted_hypergraph, PlantedParams};
+
+    fn ctx() -> Context {
+        Context::new(Preset::Default, 2, 0.03).with_threads(4).with_seed(1)
+    }
+
+    fn check_idempotent(rep: &[NodeId]) {
+        for &r in rep {
+            assert_eq!(rep[r as usize], r, "rep must be idempotent");
+        }
+    }
+
+    #[test]
+    fn produces_valid_clustering() {
+        let hg = planted_hypergraph(&PlantedParams::default(), 2);
+        let cmax = hg.total_weight() / 32;
+        let rep = cluster(&hg, &ctx(), None, cmax, 10);
+        check_idempotent(&rep);
+        // some contraction happened
+        let clusters: std::collections::HashSet<_> = rep.iter().collect();
+        assert!(clusters.len() < hg.num_nodes());
+    }
+
+    #[test]
+    fn cluster_weight_limit_respected() {
+        let hg = planted_hypergraph(&PlantedParams::default(), 3);
+        let cmax = 3; // tiny limit: clusters of at most 3 unit-weight nodes
+        let rep = cluster(&hg, &ctx(), None, cmax, 2);
+        check_idempotent(&rep);
+        let mut w = std::collections::HashMap::new();
+        for u in 0..hg.num_nodes() {
+            *w.entry(rep[u]).or_insert(0i64) += hg.node_weight(u as NodeId);
+        }
+        for (&root, &cw) in &w {
+            assert!(cw <= cmax, "cluster {root} weight {cw} > {cmax}");
+        }
+    }
+
+    #[test]
+    fn community_restriction_respected() {
+        let hg = planted_hypergraph(&PlantedParams::default(), 4);
+        let comms: Vec<u32> = (0..hg.num_nodes()).map(|u| (u % 3) as u32).collect();
+        let rep = cluster(&hg, &ctx(), Some(&comms), hg.total_weight(), 2);
+        check_idempotent(&rep);
+        for u in 0..hg.num_nodes() {
+            assert_eq!(comms[u], comms[rep[u] as usize], "cross-community merge");
+        }
+    }
+
+    #[test]
+    fn concurrent_protocol_is_safe_many_seeds() {
+        // stress the join protocol: dense small hypergraph, many threads
+        for seed in 0..5 {
+            let hg = crate::generators::random_kuniform(60, 120, 3, seed);
+            let mut c = ctx();
+            c.seed = seed;
+            let rep = cluster(&hg, &c, None, hg.total_weight() / 4, 2);
+            check_idempotent(&rep);
+        }
+    }
+
+    #[test]
+    fn respects_floor() {
+        let hg = planted_hypergraph(&PlantedParams::default(), 8);
+        let floor = hg.num_nodes() / 2;
+        let rep = cluster(&hg, &ctx(), None, hg.total_weight(), floor);
+        let clusters: std::collections::HashSet<_> = rep.iter().collect();
+        assert!(
+            clusters.len() + 8 >= floor,
+            "should stop near the floor: {} < {floor}",
+            clusters.len()
+        );
+    }
+}

@@ -1,0 +1,227 @@
+//! Deterministic clustering for coarsening (paper §11).
+//!
+//! Synchronous local moving in sub-rounds: each unclustered node first
+//! determines its desired target cluster by the heavy-edge rating, then
+//! moves are grouped by target cluster, sorted by ascending node weight
+//! (node id as tie-breaker), and the longest prefix that respects the
+//! cluster weight limit c_max is applied. The approve-all shortcut skips
+//! the group-by stage for clusters whose aggregate incoming weight fits.
+
+use crate::coordinator::context::Context;
+use crate::datastructures::RatingMap;
+use crate::hypergraph::Hypergraph;
+use crate::parallel::{par_sort_by_key, parallel_chunks};
+use crate::util::rng::hash2;
+use crate::{NodeId, NodeWeight};
+use std::sync::atomic::{AtomicI64, Ordering};
+use std::sync::Mutex;
+
+/// Deterministic clustering pass; returns an idempotent representative
+/// array that is bit-identical for any thread count.
+pub fn cluster(
+    hg: &Hypergraph,
+    ctx: &Context,
+    communities: Option<&[u32]>,
+    cmax: NodeWeight,
+    floor: usize,
+) -> Vec<NodeId> {
+    let n = hg.num_nodes();
+    let sub_rounds = ctx.det_sub_rounds.max(1) as u64;
+    let mut rep: Vec<NodeId> = (0..n as NodeId).collect();
+    // weight of each cluster, indexed by representative id
+    let cluster_weight: Vec<AtomicI64> =
+        (0..n).map(|u| AtomicI64::new(hg.node_weight(u as NodeId))).collect();
+    // #clusters so far (sequentially maintained between sub-rounds)
+    let mut num_clusters = n;
+    let min_clusters = floor.max((n as f64 / ctx.shrink_limit) as usize);
+    // roots that received members: frozen (cannot move anymore)
+    let mut locked = vec![false; n];
+
+    'outer: for s in 0..sub_rounds {
+        // members of this sub-round: unclustered (singleton) nodes only
+        let members: Vec<NodeId> = (0..n as NodeId)
+            .filter(|&u| {
+                rep[u as usize] == u
+                    && !locked[u as usize]
+                    && hash2(ctx.seed ^ 0xde7e_55, u as u64) % sub_rounds == s
+            })
+            .collect();
+        if members.is_empty() {
+            continue;
+        }
+        // ---- phase 1: desired targets against the frozen state ----
+        let desired = Mutex::new(Vec::<(NodeId, NodeId)>::new()); // (node, target root)
+        parallel_chunks(members.len(), ctx.threads, |_, lo, hi| {
+            let mut map = RatingMap::with_default_capacity();
+            let mut local = Vec::new();
+            for &u in &members[lo..hi] {
+                if let Some(t) =
+                    best_target_frozen(hg, u, &rep, &cluster_weight, communities, &mut map, cmax, ctx.seed)
+                {
+                    local.push((u, t));
+                }
+            }
+            desired.lock().unwrap().extend(local);
+        });
+        let mut desired = desired.into_inner().unwrap();
+        // moving nodes cannot simultaneously be targets (freeze rule):
+        // a proposal onto a node that itself proposes a move is dropped
+        let proposes: rustc_hash::FxHashSet<NodeId> =
+            desired.iter().map(|&(u, _)| u).collect();
+        desired.retain(|&(_, t)| !proposes.contains(&t));
+
+        // ---- phase 2: group by target, sort, prefix-accept ----
+        // sort by (target, node weight, node id) — deterministic order
+        par_sort_by_key(&mut desired, ctx.threads, |&(u, t)| {
+            (t, hg.node_weight(u), u)
+        });
+        let mut i = 0;
+        while i < desired.len() {
+            let t = desired[i].1;
+            let mut j = i;
+            while j < desired.len() && desired[j].1 == t {
+                j += 1;
+            }
+            // approve-all shortcut: total incoming weight fits
+            let incoming: NodeWeight =
+                desired[i..j].iter().map(|&(u, _)| hg.node_weight(u)).sum();
+            let base = cluster_weight[t as usize].load(Ordering::Relaxed);
+            let accept_until = if base + incoming <= cmax {
+                j
+            } else {
+                // longest prefix by ascending weight
+                let mut acc = base;
+                let mut end = i;
+                while end < j {
+                    let w = hg.node_weight(desired[end].0);
+                    if acc + w > cmax {
+                        break;
+                    }
+                    acc += w;
+                    end += 1;
+                }
+                end
+            };
+            for &(u, t) in &desired[i..accept_until] {
+                rep[u as usize] = t;
+                locked[t as usize] = true;
+                cluster_weight[t as usize]
+                    .fetch_add(hg.node_weight(u), Ordering::Relaxed);
+                num_clusters -= 1;
+                if num_clusters <= min_clusters {
+                    break 'outer;
+                }
+            }
+            i = j;
+        }
+    }
+    debug_assert!(rep.iter().all(|&r| rep[r as usize] == r));
+    rep
+}
+
+/// Heavy-edge rating against the frozen `rep` state.
+#[allow(clippy::too_many_arguments)]
+fn best_target_frozen(
+    hg: &Hypergraph,
+    u: NodeId,
+    rep: &[NodeId],
+    cluster_weight: &[AtomicI64],
+    communities: Option<&[u32]>,
+    map: &mut RatingMap,
+    cmax: NodeWeight,
+    seed: u64,
+) -> Option<NodeId> {
+    map.clear();
+    let cu = communities.map(|c| c[u as usize]);
+    for &e in hg.incident_nets(u) {
+        let size = hg.net_size(e);
+        if size < 2 {
+            continue;
+        }
+        let r = hg.net_weight(e) as f64 / (size as f64 - 1.0);
+        for &p in hg.pins(e) {
+            if p == u {
+                continue;
+            }
+            if let Some(cu) = cu {
+                if communities.unwrap()[p as usize] != cu {
+                    continue;
+                }
+            }
+            if map.should_grow() {
+                map.grow();
+            }
+            map.add(rep[p as usize] as u64, r);
+        }
+    }
+    let w_u = hg.node_weight(u);
+    let mut best: Option<(f64, u64, NodeId)> = None;
+    for (root, rating, _) in map.iter() {
+        if root == u as u64 {
+            continue;
+        }
+        if cluster_weight[root as usize].load(Ordering::Relaxed) + w_u > cmax {
+            continue;
+        }
+        let tb = hash2(seed ^ u as u64, root);
+        let better = match best {
+            None => true,
+            Some((br, bt, _)) => rating > br + 1e-12 || ((rating - br).abs() <= 1e-12 && tb > bt),
+        };
+        if better {
+            best = Some((rating, tb, root as NodeId));
+        }
+    }
+    best.map(|(_, _, v)| v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::context::{Context, Preset};
+    use crate::generators::{planted_hypergraph, PlantedParams};
+
+    fn ctx(threads: usize) -> Context {
+        Context::new(Preset::Deterministic, 2, 0.03).with_threads(threads).with_seed(5)
+    }
+
+    #[test]
+    fn deterministic_across_thread_counts() {
+        let hg = planted_hypergraph(&PlantedParams::default(), 17);
+        let cmax = hg.total_weight() / 16;
+        let r1 = cluster(&hg, &ctx(1), None, cmax, 8);
+        let r4 = cluster(&hg, &ctx(4), None, cmax, 8);
+        assert_eq!(r1, r4, "bit-identical clustering for t=1 and t=4");
+    }
+
+    #[test]
+    fn weight_limit_and_idempotence() {
+        let hg = planted_hypergraph(&PlantedParams::default(), 23);
+        let cmax = 4;
+        let rep = cluster(&hg, &ctx(2), None, cmax, 2);
+        let mut w = std::collections::HashMap::new();
+        for u in 0..hg.num_nodes() {
+            assert_eq!(rep[rep[u] as usize], rep[u]);
+            *w.entry(rep[u]).or_insert(0i64) += 1;
+        }
+        assert!(w.values().all(|&c| c <= cmax));
+    }
+
+    #[test]
+    fn communities_respected() {
+        let hg = planted_hypergraph(&PlantedParams::default(), 31);
+        let comms: Vec<u32> = (0..hg.num_nodes()).map(|u| (u % 4) as u32).collect();
+        let rep = cluster(&hg, &ctx(2), Some(&comms), hg.total_weight(), 2);
+        for u in 0..hg.num_nodes() {
+            assert_eq!(comms[u], comms[rep[u] as usize]);
+        }
+    }
+
+    #[test]
+    fn actually_contracts() {
+        let hg = planted_hypergraph(&PlantedParams::default(), 37);
+        let rep = cluster(&hg, &ctx(2), None, hg.total_weight() / 8, 8);
+        let roots: std::collections::HashSet<_> = rep.iter().collect();
+        assert!(roots.len() * 3 < hg.num_nodes() * 2, "shrunk by ≥ 1/3");
+    }
+}

@@ -1,0 +1,92 @@
+//! Matching-based coarsening — the baseline scheme of classic multilevel
+//! partitioners (hMetis/PaToH heavy-edge matching; paper §4's related
+//! work). Used by the internal "PaToH-like" comparison baseline: pairs of
+//! nodes are matched greedily by the heavy-edge rating, so each pass at
+//! most halves the node count. Clustering-based coarsening (the paper's
+//! approach) shrinks skewed-degree instances much faster — this module
+//! exists to reproduce that contrast.
+
+use crate::datastructures::RatingMap;
+use crate::hypergraph::Hypergraph;
+use crate::util::Rng;
+use crate::{NodeId, NodeWeight};
+
+/// Sequential greedy heavy-edge matching; returns an idempotent
+/// representative array (pairs share the smaller id as representative).
+pub fn match_nodes(hg: &Hypergraph, cmax: NodeWeight, seed: u64) -> Vec<NodeId> {
+    let n = hg.num_nodes();
+    let mut rep: Vec<NodeId> = (0..n as NodeId).collect();
+    let mut matched = vec![false; n];
+    let mut order: Vec<u32> = (0..n as u32).collect();
+    Rng::new(seed).shuffle(&mut order);
+    let mut map = RatingMap::with_default_capacity();
+
+    for &u in &order {
+        if matched[u as usize] {
+            continue;
+        }
+        map.clear();
+        for &e in hg.incident_nets(u) {
+            let size = hg.net_size(e);
+            if size < 2 {
+                continue;
+            }
+            let r = hg.net_weight(e) as f64 / (size as f64 - 1.0);
+            for &p in hg.pins(e) {
+                if p != u && !matched[p as usize] {
+                    if map.should_grow() {
+                        map.grow();
+                    }
+                    map.add(p as u64, r);
+                }
+            }
+        }
+        let wu = hg.node_weight(u);
+        let mut best: Option<(f64, NodeId)> = None;
+        for (v, rating, _) in map.iter() {
+            let v = v as NodeId;
+            if hg.node_weight(v) + wu > cmax {
+                continue;
+            }
+            if best.map_or(true, |(br, _)| rating > br) {
+                best = Some((rating, v));
+            }
+        }
+        if let Some((_, v)) = best {
+            let (lo, hi) = if u < v { (u, v) } else { (v, u) };
+            rep[hi as usize] = lo;
+            matched[u as usize] = true;
+            matched[v as usize] = true;
+        }
+    }
+    rep
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::generators::{planted_hypergraph, PlantedParams};
+
+    #[test]
+    fn matching_pairs_only() {
+        let hg = planted_hypergraph(&PlantedParams::default(), 3);
+        let rep = match_nodes(&hg, 2, 1);
+        let mut sizes = std::collections::HashMap::new();
+        for u in 0..hg.num_nodes() {
+            assert_eq!(rep[rep[u] as usize], rep[u]);
+            *sizes.entry(rep[u]).or_insert(0usize) += 1;
+        }
+        assert!(sizes.values().all(|&s| s <= 2), "matching = clusters of ≤ 2");
+        // a decent fraction got matched
+        let singletons = sizes.values().filter(|&&s| s == 1).count();
+        assert!(singletons * 2 < hg.num_nodes(), "most nodes matched");
+    }
+
+    #[test]
+    fn halving_at_best() {
+        let hg = planted_hypergraph(&PlantedParams::default(), 9);
+        let rep = match_nodes(&hg, i64::MAX, 2);
+        let roots: std::collections::HashSet<_> = rep.iter().collect();
+        assert!(roots.len() * 2 >= hg.num_nodes(), "shrink factor ≤ 2");
+    }
+}

@@ -1,0 +1,158 @@
+//! The coarsening phase (paper §4): repeatedly compute a clustering of
+//! highly-connected nodes and contract it, until the hypergraph reaches
+//! the contraction limit (160·k nodes).
+
+pub mod clustering;
+pub mod deterministic;
+pub mod matching;
+
+use crate::coordinator::context::Context;
+use crate::hypergraph::{contraction, Hypergraph};
+use crate::NodeId;
+use std::sync::Arc;
+
+/// One level of the multilevel hierarchy.
+pub struct Level {
+    /// the coarser hypergraph produced at this level
+    pub coarse: Arc<Hypergraph>,
+    /// node mapping from the finer hypergraph into `coarse`
+    pub fine_to_coarse: Vec<NodeId>,
+}
+
+/// The full coarsening hierarchy: `input` followed by `levels` of
+/// successively coarser hypergraphs.
+pub struct Hierarchy {
+    pub input: Arc<Hypergraph>,
+    pub levels: Vec<Level>,
+}
+
+impl Hierarchy {
+    /// The coarsest hypergraph (the input if no contraction happened).
+    pub fn coarsest(&self) -> Arc<Hypergraph> {
+        self.levels.last().map(|l| l.coarse.clone()).unwrap_or_else(|| self.input.clone())
+    }
+}
+
+/// Multilevel clustering coarsening (Algorithm 3.1's loop, paper §4.1):
+/// stops at the contraction limit, when a pass shrinks by < `min_shrink`,
+/// or when the clustering would overshoot the `shrink_limit` (handled
+/// inside the clustering by capping the number of joins).
+pub fn coarsen(
+    hg: Arc<Hypergraph>,
+    ctx: &Context,
+    communities: Option<&[u32]>,
+) -> Hierarchy {
+    let limit = ctx.contraction_limit().max(2 * ctx.k);
+    let cmax = ctx.max_cluster_weight(hg.total_weight());
+    let mut levels: Vec<Level> = Vec::new();
+    let mut current = hg.clone();
+    let mut comms: Option<Vec<u32>> = communities.map(|c| c.to_vec());
+
+    while current.num_nodes() > limit {
+        let n_before = current.num_nodes();
+        let rep = if ctx.deterministic {
+            deterministic::cluster(&current, ctx, comms.as_deref(), cmax, limit)
+        } else {
+            clustering::cluster(&current, ctx, comms.as_deref(), cmax, limit)
+        };
+        let c = contraction::contract(&current, &rep, ctx.threads);
+        let n_after = c.coarse.num_nodes();
+        // stop if the pass did not shrink the hypergraph by more than 1%
+        if (n_before - n_after) as f64 <= ctx.min_shrink * n_before as f64 {
+            break;
+        }
+        // project communities onto the coarse hypergraph
+        if let Some(cm) = &comms {
+            let mut coarse_comms = vec![0u32; n_after];
+            for u in 0..n_before {
+                coarse_comms[c.fine_to_coarse[u] as usize] = cm[u];
+            }
+            comms = Some(coarse_comms);
+        }
+        let coarse = Arc::new(c.coarse);
+        levels.push(Level { coarse: coarse.clone(), fine_to_coarse: c.fine_to_coarse });
+        current = coarse;
+    }
+    Hierarchy { input: hg, levels }
+}
+
+/// Project a partition of the coarser level back to the finer level
+/// (uncoarsening step of Algorithm 3.1).
+pub fn project_partition(level: &Level, coarse_parts: &[crate::BlockId]) -> Vec<crate::BlockId> {
+    level.fine_to_coarse.iter().map(|&c| coarse_parts[c as usize]).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::context::{Context, Preset};
+    use crate::generators::{planted_hypergraph, PlantedParams};
+
+    fn ctx(k: usize) -> Context {
+        let mut c = Context::new(Preset::Default, k, 0.03).with_threads(2).with_seed(7);
+        c.contraction_limit_factor = 16; // small instances in tests
+        c
+    }
+
+    #[test]
+    fn hierarchy_shrinks_to_limit() {
+        let hg = Arc::new(planted_hypergraph(&PlantedParams::default(), 3));
+        let ctx = ctx(4);
+        let h = coarsen(hg.clone(), &ctx, None);
+        assert!(!h.levels.is_empty());
+        let coarsest = h.coarsest();
+        assert!(coarsest.num_nodes() < hg.num_nodes());
+        // weights conserved across every level
+        for l in &h.levels {
+            assert_eq!(l.coarse.total_weight(), hg.total_weight());
+            l.coarse.validate().unwrap();
+        }
+        // monotone shrinking
+        let mut prev = hg.num_nodes();
+        for l in &h.levels {
+            assert!(l.coarse.num_nodes() < prev);
+            prev = l.coarse.num_nodes();
+        }
+    }
+
+    #[test]
+    fn respects_community_restriction() {
+        let hg = Arc::new(planted_hypergraph(&PlantedParams::default(), 5));
+        let ctx = ctx(2);
+        // two communities: node parity
+        let comms: Vec<u32> = (0..hg.num_nodes()).map(|u| (u % 2) as u32).collect();
+        let h = coarsen(hg.clone(), &ctx, Some(&comms));
+        if let Some(first) = h.levels.first() {
+            // nodes merged into one coarse node must share the community
+            let mut coarse_comm: Vec<Option<u32>> = vec![None; first.coarse.num_nodes()];
+            for u in 0..hg.num_nodes() {
+                let c = first.fine_to_coarse[u] as usize;
+                match coarse_comm[c] {
+                    None => coarse_comm[c] = Some(comms[u]),
+                    Some(cc) => assert_eq!(cc, comms[u], "community violated"),
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn projection_roundtrip() {
+        let hg = Arc::new(planted_hypergraph(&PlantedParams::default(), 11));
+        let ctx = ctx(2);
+        let h = coarsen(hg.clone(), &ctx, None);
+        if let Some(level) = h.levels.last() {
+            let k_parts: Vec<crate::BlockId> =
+                (0..level.coarse.num_nodes()).map(|u| (u % 2) as crate::BlockId).collect();
+            let fine = project_partition(level, &k_parts);
+            let fine_n = if h.levels.len() >= 2 {
+                h.levels[h.levels.len() - 2].coarse.num_nodes()
+            } else {
+                hg.num_nodes()
+            };
+            assert_eq!(fine.len(), fine_n);
+            for (u, &b) in fine.iter().enumerate() {
+                assert_eq!(b, k_parts[level.fine_to_coarse[u] as usize]);
+            }
+        }
+    }
+}

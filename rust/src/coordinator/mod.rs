@@ -1,0 +1,8 @@
+//! The coordinator layer: configuration presets, the multilevel pipeline
+//! driver (Algorithm 3.1), and reporting.
+
+pub mod context;
+pub mod partitioner;
+pub mod report;
+
+pub use context::{Context, Preset};

@@ -1,0 +1,168 @@
+//! The multilevel pipeline driver (paper Algorithm 3.1).
+//!
+//! preprocess (community detection) → coarsen → initial partition →
+//! uncoarsen with LP / FM / flow refinement per level. Dispatches to the
+//! n-level scheme (paper §9) for the Quality presets.
+
+use crate::coarsening::{self, Hierarchy};
+use crate::coordinator::context::Context;
+use crate::hypergraph::Hypergraph;
+use crate::initial;
+use crate::partition::PartitionedHypergraph;
+use crate::preprocessing::{detect_communities, LouvainConfig};
+use crate::refinement::{flow, fm, lp};
+use crate::BlockId;
+use std::sync::Arc;
+
+/// Partition `hg` into `ctx.k` blocks. Clones the hypergraph into an
+/// `Arc`; use [`partition_arc`] to avoid the copy.
+pub fn partition(hg: &Hypergraph, ctx: &Context) -> PartitionedHypergraph {
+    partition_arc(Arc::new(hg.clone()), ctx)
+}
+
+/// Full pipeline on a shared hypergraph.
+pub fn partition_arc(hg: Arc<Hypergraph>, ctx: &Context) -> PartitionedHypergraph {
+    if ctx.nlevel {
+        return crate::nlevel::partition(hg, ctx);
+    }
+    let timer = ctx.timer.clone();
+
+    // ---- preprocessing: community detection (§4.3) ----
+    let communities = if ctx.use_community_detection {
+        Some(timer.time("preprocessing", || {
+            detect_communities(
+                &hg,
+                &LouvainConfig {
+                    threads: ctx.threads,
+                    seed: ctx.seed,
+                    max_rounds: ctx.louvain_max_rounds,
+                    deterministic: ctx.deterministic,
+                    ..Default::default()
+                },
+            )
+        }))
+    } else {
+        None
+    };
+
+    // ---- coarsening (§4) ----
+    let hierarchy: Hierarchy =
+        timer.time("coarsening", || coarsening::coarsen(hg.clone(), ctx, communities.as_deref()));
+
+    // ---- initial partitioning (§5) ----
+    let coarsest = hierarchy.coarsest();
+    let mut parts: Vec<BlockId> =
+        timer.time("initial_partitioning", || initial::initial_partition(coarsest, ctx));
+
+    // ---- uncoarsening + refinement (§6–8) ----
+    for i in (0..hierarchy.levels.len()).rev() {
+        let level_hg = hierarchy.levels[i].coarse.clone();
+        let phg = refine_level(level_hg, &parts, ctx);
+        parts = coarsening::project_partition(&hierarchy.levels[i], &phg.parts());
+    }
+    // finest level
+    refine_level(hg, &parts, ctx)
+}
+
+/// Build the partition structure for one level and run the refinement
+/// stack on it (Algorithm 3.1 lines 7–10).
+pub(crate) fn refine_level(
+    hg: Arc<Hypergraph>,
+    parts: &[BlockId],
+    ctx: &Context,
+) -> PartitionedHypergraph {
+    let timer = ctx.timer.clone();
+    let mut phg = PartitionedHypergraph::new(hg, ctx.k);
+    phg.set_uniform_max_weight(ctx.epsilon);
+    phg.assign_all(parts, ctx.threads);
+
+    timer.time("label_propagation", || {
+        if ctx.deterministic {
+            lp::lp_refine_deterministic(&phg, ctx)
+        } else {
+            lp::lp_refine(&phg, ctx)
+        }
+    });
+    if ctx.use_fm {
+        timer.time("fm", || fm::fm_refine(&phg, ctx));
+    }
+    if ctx.use_flows {
+        timer.time("flows", || flow::flow_refine(&phg, ctx));
+    }
+    phg
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::context::Preset;
+    use crate::generators::{planted_hypergraph, spm_hypergraph, PlantedParams};
+
+    pub(crate) fn small_ctx(preset: Preset, k: usize, threads: usize, seed: u64) -> Context {
+        let mut ctx = Context::new(preset, k, 0.03).with_threads(threads).with_seed(seed);
+        ctx.contraction_limit_factor = 24;
+        ctx.ip_min_repetitions = 2;
+        ctx.ip_max_repetitions = 4;
+        ctx.fm_max_rounds = 4;
+        ctx
+    }
+
+    #[test]
+    fn end_to_end_default_preset() {
+        let hg = planted_hypergraph(
+            &PlantedParams { n: 600, m: 1100, blocks: 4, ..Default::default() },
+            21,
+        );
+        let phg = partition(&hg, &small_ctx(Preset::Default, 4, 2, 21));
+        assert!(phg.is_balanced(), "imbalance {}", phg.imbalance());
+        phg.verify_consistency().unwrap();
+        // planted structure: most nets should be uncut
+        assert!(
+            phg.km1() < hg.num_nets() as i64 / 2,
+            "quality: km1 {} of {} nets",
+            phg.km1(),
+            hg.num_nets()
+        );
+    }
+
+    #[test]
+    fn end_to_end_all_multilevel_presets() {
+        let hg = spm_hypergraph(300, 300, 4, 3);
+        for preset in [Preset::Speed, Preset::Default, Preset::DefaultFlows, Preset::Deterministic]
+        {
+            let phg = partition(&hg, &small_ctx(preset, 4, 2, 5));
+            assert!(phg.is_balanced(), "{preset:?} imbalance {}", phg.imbalance());
+            phg.verify_consistency().unwrap();
+        }
+    }
+
+    #[test]
+    fn quality_ordering_roughly_holds() {
+        // D should be at least as good as Speed (LP only) on average
+        let mut km1_speed = 0i64;
+        let mut km1_default = 0i64;
+        for seed in 0..3u64 {
+            let hg = planted_hypergraph(
+                &PlantedParams { n: 500, m: 900, blocks: 4, p_intra: 0.85, ..Default::default() },
+                seed,
+            );
+            km1_speed += partition(&hg, &small_ctx(Preset::Speed, 4, 2, seed)).km1();
+            km1_default += partition(&hg, &small_ctx(Preset::Default, 4, 2, seed)).km1();
+        }
+        assert!(
+            km1_default <= km1_speed,
+            "FM must help: D {km1_default} vs S {km1_speed}"
+        );
+    }
+
+    #[test]
+    fn deterministic_preset_reproducible_across_threads() {
+        let hg = planted_hypergraph(
+            &PlantedParams { n: 400, m: 800, blocks: 2, ..Default::default() },
+            7,
+        );
+        let p1 = partition(&hg, &small_ctx(Preset::Deterministic, 2, 1, 7)).parts();
+        let p2 = partition(&hg, &small_ctx(Preset::Deterministic, 2, 4, 7)).parts();
+        assert_eq!(p1, p2, "SDet must be bit-identical across thread counts");
+    }
+}

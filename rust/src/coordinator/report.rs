@@ -1,0 +1,59 @@
+//! Result summaries printed by the CLI, examples and benches.
+
+use crate::partition::PartitionedHypergraph;
+
+/// Final partitioning statistics.
+#[derive(Clone, Debug)]
+pub struct PartitionReport {
+    pub algorithm: String,
+    pub k: usize,
+    pub km1: i64,
+    pub cut: i64,
+    pub soed: i64,
+    pub imbalance: f64,
+    pub balanced: bool,
+    pub seconds: f64,
+    /// (phase name, seconds)
+    pub phases: Vec<(&'static str, f64)>,
+}
+
+impl PartitionReport {
+    pub fn from_partition(
+        algorithm: &str,
+        phg: &PartitionedHypergraph,
+        seconds: f64,
+        phases: Vec<(&'static str, f64)>,
+    ) -> Self {
+        PartitionReport {
+            algorithm: algorithm.to_string(),
+            k: phg.k(),
+            km1: phg.km1(),
+            cut: phg.cut(),
+            soed: phg.soed(),
+            imbalance: phg.imbalance(),
+            balanced: phg.is_balanced(),
+            seconds,
+            phases,
+        }
+    }
+
+    pub fn print(&self) {
+        println!("================= {} =================", self.algorithm);
+        println!("  k          = {}", self.k);
+        println!("  km1 (λ−1)  = {}", self.km1);
+        println!("  cut        = {}", self.cut);
+        println!("  soed       = {}", self.soed);
+        println!("  imbalance  = {:.4} ({})", self.imbalance, if self.balanced { "balanced" } else { "IMBALANCED" });
+        println!("  time       = {:.3}s", self.seconds);
+        if !self.phases.is_empty() {
+            println!("  phases:");
+            let total: f64 = self.phases.iter().map(|(_, s)| s).sum();
+            for (name, secs) in &self.phases {
+                println!(
+                    "    {name:<22} {secs:>8.3}s  ({:>5.1}%)",
+                    100.0 * secs / total.max(1e-12)
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,20 @@
+//! Specialized containers backing the hot paths:
+//!
+//! * [`RatingMap`] — the fixed-capacity linear-probing hash table used to
+//!   aggregate heavy-edge ratings (paper §4.1: 2¹⁵ entries, grow at ⅓ fill),
+//! * [`SpinLockVec`] — one spin lock per net for packed pin-count updates
+//!   (paper §6.1 data layout),
+//! * [`AddressablePQ`] — the per-search priority queue of localized FM
+//!   (max-gain with decrease/increase-key),
+//! * [`ConcurrentQueue`] — the FIFO used by FM's seed task queue and the
+//!   active-block scheduler of flow refinement.
+
+pub mod pq;
+pub mod queue;
+pub mod rating_map;
+pub mod spinlock;
+
+pub use pq::AddressablePQ;
+pub use queue::ConcurrentQueue;
+pub use rating_map::RatingMap;
+pub use spinlock::SpinLockVec;

@@ -1,0 +1,242 @@
+//! Addressable max-priority queue for localized FM (paper §7).
+//!
+//! Stores at most one entry per node, keyed by the node's current best
+//! move gain; supports `insert`, `pop_max`, `adjust` (increase or decrease
+//! key) and `contains` in O(log n) via a binary heap with a position index.
+
+use crate::{Gain, NodeId};
+use rustc_hash::FxHashMap;
+
+/// Max-heap keyed by `(gain, tiebreak)` with per-node addressability.
+#[derive(Default)]
+pub struct AddressablePQ {
+    heap: Vec<(Gain, NodeId)>,
+    pos: FxHashMap<NodeId, usize>,
+}
+
+impl AddressablePQ {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    #[inline]
+    pub fn contains(&self, u: NodeId) -> bool {
+        self.pos.contains_key(&u)
+    }
+
+    #[inline]
+    pub fn key_of(&self, u: NodeId) -> Option<Gain> {
+        self.pos.get(&u).map(|&i| self.heap[i].0)
+    }
+
+    /// Insert `u` with key `g`; if present, adjusts instead.
+    pub fn insert(&mut self, u: NodeId, g: Gain) {
+        if let Some(&i) = self.pos.get(&u) {
+            let old = self.heap[i].0;
+            self.heap[i].0 = g;
+            if g > old {
+                self.sift_up(i);
+            } else {
+                self.sift_down(i);
+            }
+            return;
+        }
+        self.heap.push((g, u));
+        let i = self.heap.len() - 1;
+        self.pos.insert(u, i);
+        self.sift_up(i);
+    }
+
+    /// Change the key of an existing entry (no-op if absent).
+    pub fn adjust(&mut self, u: NodeId, g: Gain) {
+        if self.contains(u) {
+            self.insert(u, g);
+        }
+    }
+
+    /// Remove and return the max-gain entry.
+    pub fn pop_max(&mut self) -> Option<(NodeId, Gain)> {
+        if self.heap.is_empty() {
+            return None;
+        }
+        let (g, u) = self.heap[0];
+        self.remove_at(0);
+        Some((u, g))
+    }
+
+    /// Peek at the max entry.
+    pub fn peek(&self) -> Option<(NodeId, Gain)> {
+        self.heap.first().map(|&(g, u)| (u, g))
+    }
+
+    /// Remove a specific node.
+    pub fn remove(&mut self, u: NodeId) {
+        if let Some(&i) = self.pos.get(&u) {
+            self.remove_at(i);
+        }
+    }
+
+    pub fn clear(&mut self) {
+        self.heap.clear();
+        self.pos.clear();
+    }
+
+    fn remove_at(&mut self, i: usize) {
+        let last = self.heap.len() - 1;
+        self.pos.remove(&self.heap[i].1);
+        if i != last {
+            self.heap.swap(i, last);
+            self.pos.insert(self.heap[i].1, i);
+            self.heap.pop();
+            // restore heap order at i
+            if i > 0 && self.heap[i].0 > self.heap[(i - 1) / 2].0 {
+                self.sift_up(i);
+            } else {
+                self.sift_down(i);
+            }
+        } else {
+            self.heap.pop();
+        }
+    }
+
+    fn sift_up(&mut self, mut i: usize) {
+        while i > 0 {
+            let p = (i - 1) / 2;
+            if self.heap[i].0 <= self.heap[p].0 {
+                break;
+            }
+            self.swap(i, p);
+            i = p;
+        }
+    }
+
+    fn sift_down(&mut self, mut i: usize) {
+        loop {
+            let (l, r) = (2 * i + 1, 2 * i + 2);
+            let mut m = i;
+            if l < self.heap.len() && self.heap[l].0 > self.heap[m].0 {
+                m = l;
+            }
+            if r < self.heap.len() && self.heap[r].0 > self.heap[m].0 {
+                m = r;
+            }
+            if m == i {
+                break;
+            }
+            self.swap(i, m);
+            i = m;
+        }
+    }
+
+    #[inline]
+    fn swap(&mut self, a: usize, b: usize) {
+        self.heap.swap(a, b);
+        self.pos.insert(self.heap[a].1, a);
+        self.pos.insert(self.heap[b].1, b);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn pops_in_decreasing_order() {
+        let mut pq = AddressablePQ::new();
+        let mut rng = Rng::new(4);
+        for u in 0..200u32 {
+            pq.insert(u, rng.next_below(1000) as Gain - 500);
+        }
+        let mut prev = Gain::MAX;
+        while let Some((_, g)) = pq.pop_max() {
+            assert!(g <= prev);
+            prev = g;
+        }
+    }
+
+    #[test]
+    fn adjust_moves_entries() {
+        let mut pq = AddressablePQ::new();
+        pq.insert(1, 10);
+        pq.insert(2, 20);
+        pq.insert(3, 30);
+        pq.adjust(1, 100);
+        assert_eq!(pq.pop_max(), Some((1, 100)));
+        pq.adjust(2, -5);
+        assert_eq!(pq.pop_max(), Some((3, 30)));
+        assert_eq!(pq.pop_max(), Some((2, -5)));
+        assert!(pq.pop_max().is_none());
+    }
+
+    #[test]
+    fn remove_keeps_heap_valid() {
+        let mut pq = AddressablePQ::new();
+        for u in 0..50u32 {
+            pq.insert(u, (u * 7 % 13) as Gain);
+        }
+        for u in (0..50u32).step_by(3) {
+            pq.remove(u);
+        }
+        assert!(!pq.contains(3));
+        let mut prev = Gain::MAX;
+        let mut count = 0;
+        while let Some((_, g)) = pq.pop_max() {
+            assert!(g <= prev);
+            prev = g;
+            count += 1;
+        }
+        assert_eq!(count, 50 - 17);
+    }
+
+    #[test]
+    fn randomized_against_reference() {
+        let mut rng = Rng::new(77);
+        let mut pq = AddressablePQ::new();
+        let mut reference: FxHashMap<NodeId, Gain> = FxHashMap::default();
+        for _ in 0..2000 {
+            match rng.next_below(4) {
+                0 => {
+                    let u = rng.next_below(100) as NodeId;
+                    let g = rng.next_below(50) as Gain;
+                    pq.insert(u, g);
+                    reference.insert(u, g);
+                }
+                1 => {
+                    if let Some((u, g)) = pq.pop_max() {
+                        let max = reference.values().max().copied().unwrap();
+                        assert_eq!(g, max);
+                        assert_eq!(reference.remove(&u), Some(g));
+                    } else {
+                        assert!(reference.is_empty());
+                    }
+                }
+                2 => {
+                    let u = rng.next_below(100) as NodeId;
+                    let g = rng.next_below(50) as Gain;
+                    pq.adjust(u, g);
+                    if let std::collections::hash_map::Entry::Occupied(mut e) = reference.entry(u)
+                    {
+                        e.insert(g);
+                    }
+                }
+                _ => {
+                    let u = rng.next_below(100) as NodeId;
+                    pq.remove(u);
+                    reference.remove(&u);
+                }
+            }
+            assert_eq!(pq.len(), reference.len());
+        }
+    }
+}

@@ -1,0 +1,84 @@
+//! A simple multi-producer multi-consumer FIFO.
+//!
+//! Backs the FM seed task queue ("poll 25 seed nodes", paper §7) and the
+//! active-block-pair queue of the flow scheduler (§8.1). Contention is at
+//! task granularity, so a mutexed ring is the right complexity/perf spot.
+
+use std::collections::VecDeque;
+use std::sync::Mutex;
+
+#[derive(Debug, Default)]
+pub struct ConcurrentQueue<T> {
+    inner: Mutex<VecDeque<T>>,
+}
+
+impl<T> ConcurrentQueue<T> {
+    pub fn new() -> Self {
+        ConcurrentQueue { inner: Mutex::new(VecDeque::new()) }
+    }
+
+    pub fn from_iter(items: impl IntoIterator<Item = T>) -> Self {
+        ConcurrentQueue { inner: Mutex::new(items.into_iter().collect()) }
+    }
+
+    pub fn push(&self, item: T) {
+        self.inner.lock().unwrap().push_back(item);
+    }
+
+    pub fn pop(&self) -> Option<T> {
+        self.inner.lock().unwrap().pop_front()
+    }
+
+    /// Pop up to `n` items in one lock acquisition (FM's batched seed poll).
+    pub fn pop_many(&self, n: usize) -> Vec<T> {
+        let mut q = self.inner.lock().unwrap();
+        let take = n.min(q.len());
+        q.drain(..take).collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.inner.lock().unwrap().is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fifo_order() {
+        let q = ConcurrentQueue::new();
+        q.push(1);
+        q.push(2);
+        q.push(3);
+        assert_eq!(q.pop(), Some(1));
+        assert_eq!(q.pop_many(2), vec![2, 3]);
+        assert!(q.pop().is_none());
+    }
+
+    #[test]
+    fn concurrent_drain_is_complete() {
+        let q = ConcurrentQueue::from_iter(0..10_000);
+        let seen = std::sync::Mutex::new(Vec::new());
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                let q = &q;
+                let seen = &seen;
+                s.spawn(move || {
+                    let mut local = Vec::new();
+                    while let Some(x) = q.pop() {
+                        local.push(x);
+                    }
+                    seen.lock().unwrap().extend(local);
+                });
+            }
+        });
+        let mut all = seen.into_inner().unwrap();
+        all.sort_unstable();
+        assert_eq!(all, (0..10_000).collect::<Vec<_>>());
+    }
+}

@@ -1,0 +1,198 @@
+//! Fixed-capacity linear-probing rating table (paper §4.1).
+//!
+//! "To aggregate ratings, we use fixed-capacity linear probing hash tables
+//! with 2^15 entries and resort to a larger hash table if the fill ratio
+//! exceeds 1/3 of the capacity." Clearing is O(#used) via a dirty list, so
+//! a thread-local table can be reused across millions of nodes.
+
+use crate::util::rng::hash2;
+
+const EMPTY: u64 = u64::MAX;
+
+/// Open-addressing map from `u64` keys to an `f64` accumulator plus an
+/// auxiliary `u64` payload, with power-of-two capacity.
+pub struct RatingMap {
+    keys: Vec<u64>,
+    vals: Vec<f64>,
+    aux: Vec<u64>,
+    dirty: Vec<usize>,
+    mask: usize,
+}
+
+impl RatingMap {
+    /// Paper default: 2^15 entries.
+    pub const DEFAULT_CAPACITY: usize = 1 << 15;
+
+    pub fn new(capacity: usize) -> Self {
+        let cap = capacity.next_power_of_two().max(16);
+        RatingMap {
+            keys: vec![EMPTY; cap],
+            vals: vec![0.0; cap],
+            aux: vec![0; cap],
+            dirty: Vec::new(),
+            mask: cap - 1,
+        }
+    }
+
+    pub fn with_default_capacity() -> Self {
+        Self::new(Self::DEFAULT_CAPACITY)
+    }
+
+    #[inline]
+    pub fn capacity(&self) -> usize {
+        self.keys.len()
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.dirty.len()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.dirty.is_empty()
+    }
+
+    /// True once the fill ratio exceeds 1/3 — caller should migrate to a
+    /// table of twice the size (paper's growth rule).
+    #[inline]
+    pub fn should_grow(&self) -> bool {
+        self.dirty.len() * 3 > self.capacity()
+    }
+
+    #[inline]
+    fn slot(&self, key: u64) -> usize {
+        let mut i = (hash2(key, 0x9E37_79B9) as usize) & self.mask;
+        loop {
+            let k = self.keys[i];
+            if k == key || k == EMPTY {
+                return i;
+            }
+            i = (i + 1) & self.mask;
+        }
+    }
+
+    /// Add `delta` to the rating of `key`.
+    #[inline]
+    pub fn add(&mut self, key: u64, delta: f64) {
+        let i = self.slot(key);
+        if self.keys[i] == EMPTY {
+            self.keys[i] = key;
+            self.vals[i] = 0.0;
+            self.aux[i] = 0;
+            self.dirty.push(i);
+        }
+        self.vals[i] += delta;
+    }
+
+    /// Add `delta` to rating and `a` to the auxiliary accumulator.
+    #[inline]
+    pub fn add_with_aux(&mut self, key: u64, delta: f64, a: u64) {
+        let i = self.slot(key);
+        if self.keys[i] == EMPTY {
+            self.keys[i] = key;
+            self.vals[i] = 0.0;
+            self.aux[i] = 0;
+            self.dirty.push(i);
+        }
+        self.vals[i] += delta;
+        self.aux[i] += a;
+    }
+
+    #[inline]
+    pub fn get(&self, key: u64) -> Option<f64> {
+        let i = self.slot(key);
+        if self.keys[i] == EMPTY {
+            None
+        } else {
+            Some(self.vals[i])
+        }
+    }
+
+    /// Iterate over `(key, rating, aux)` of all used entries
+    /// (insertion order).
+    pub fn iter(&self) -> impl Iterator<Item = (u64, f64, u64)> + '_ {
+        self.dirty.iter().map(move |&i| (self.keys[i], self.vals[i], self.aux[i]))
+    }
+
+    /// O(#used) clear.
+    pub fn clear(&mut self) {
+        for &i in &self.dirty {
+            self.keys[i] = EMPTY;
+        }
+        self.dirty.clear();
+    }
+
+    /// Grow to twice the capacity, preserving entries.
+    pub fn grow(&mut self) {
+        let entries: Vec<(u64, f64, u64)> = self.iter().collect();
+        *self = RatingMap::new(self.capacity() * 2);
+        for (k, v, a) in entries {
+            self.add_with_aux(k, v, a);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+    use rustc_hash::FxHashMap;
+
+    #[test]
+    fn accumulates_like_hashmap() {
+        let mut rm = RatingMap::new(64);
+        let mut reference: FxHashMap<u64, f64> = FxHashMap::default();
+        let mut rng = Rng::new(11);
+        for _ in 0..500 {
+            if rm.should_grow() {
+                rm.grow();
+            }
+            let k = rng.next_below(40) as u64;
+            let d = rng.next_f64();
+            rm.add(k, d);
+            *reference.entry(k).or_default() += d;
+        }
+        assert_eq!(rm.len(), reference.len());
+        for (k, v) in &reference {
+            assert!((rm.get(*k).unwrap() - v).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn clear_is_complete() {
+        let mut rm = RatingMap::new(16);
+        rm.add(1, 1.0);
+        rm.add(2, 2.0);
+        rm.clear();
+        assert!(rm.is_empty());
+        assert!(rm.get(1).is_none());
+        rm.add(1, 3.0);
+        assert_eq!(rm.get(1), Some(3.0));
+    }
+
+    #[test]
+    fn aux_accumulates() {
+        let mut rm = RatingMap::new(16);
+        rm.add_with_aux(7, 0.5, 2);
+        rm.add_with_aux(7, 0.25, 3);
+        let all: Vec<_> = rm.iter().collect();
+        assert_eq!(all.len(), 1);
+        assert_eq!(all[0].0, 7);
+        assert!((all[0].1 - 0.75).abs() < 1e-12);
+        assert_eq!(all[0].2, 5);
+    }
+
+    #[test]
+    fn grow_preserves() {
+        let mut rm = RatingMap::new(16);
+        for k in 0..10u64 {
+            rm.add(k, k as f64);
+        }
+        rm.grow();
+        assert_eq!(rm.capacity(), 32);
+        for k in 0..10u64 {
+            assert_eq!(rm.get(k), Some(k as f64));
+        }
+    }
+}

@@ -1,0 +1,345 @@
+//! Synthetic instance generators — the stand-in for the paper's benchmark
+//! sets (ISPD98/DAC2012 VLSI circuits, SuiteSparse matrices, SAT14
+//! formulas, DIMACS/SNAP graphs; see DESIGN.md §2 for the substitution
+//! rationale). Every generator is fully determined by its parameters and
+//! a seed, and reproduces the *structural archetype* of its source domain:
+//! net-size and degree distributions, locality, and (for planted
+//! instances) ground-truth cut structure.
+
+use crate::graph::Graph;
+use crate::hypergraph::Hypergraph;
+use crate::util::Rng;
+use crate::NodeId;
+
+/// Parameters for planted-partition hypergraphs.
+#[derive(Clone, Debug)]
+pub struct PlantedParams {
+    /// number of nodes
+    pub n: usize,
+    /// number of nets
+    pub m: usize,
+    /// number of planted blocks
+    pub blocks: usize,
+    /// net size range (inclusive)
+    pub net_size: (usize, usize),
+    /// probability that a net stays inside one planted block
+    pub p_intra: f64,
+}
+
+impl Default for PlantedParams {
+    fn default() -> Self {
+        PlantedParams { n: 2000, m: 3000, blocks: 8, net_size: (2, 6), p_intra: 0.9 }
+    }
+}
+
+/// Hypergraph with a planted k-way structure: most nets draw all pins from
+/// one random block, the rest span two blocks. Partitioners should recover
+/// a cut close to the planted one — used by the integration tests.
+pub fn planted_hypergraph(p: &PlantedParams, seed: u64) -> Hypergraph {
+    let mut rng = Rng::new(seed ^ 0x9d5a_b5c1);
+    let nb = p.blocks.max(1);
+    // block membership: contiguous ranges for easy verification
+    let block_of = |u: usize| u * nb / p.n;
+    let nodes_in = |b: usize| -> (usize, usize) {
+        let lo = (b * p.n + nb - 1) / nb;
+        let hi = ((b + 1) * p.n + nb - 1) / nb;
+        (lo, hi.min(p.n))
+    };
+    let mut nets = Vec::with_capacity(p.m);
+    for _ in 0..p.m {
+        let sz = rng.range(p.net_size.0, p.net_size.1 + 1).max(2);
+        let intra = rng.coin(p.p_intra);
+        let b1 = rng.next_below(nb);
+        let mut pins: Vec<NodeId> = Vec::with_capacity(sz);
+        let (lo1, hi1) = nodes_in(b1);
+        if intra || nb == 1 {
+            while pins.len() < sz.min(hi1 - lo1) {
+                let u = rng.range(lo1, hi1) as NodeId;
+                if !pins.contains(&u) {
+                    pins.push(u);
+                }
+            }
+        } else {
+            let b2 = (b1 + 1 + rng.next_below(nb - 1)) % nb;
+            let (lo2, hi2) = nodes_in(b2);
+            while pins.len() < sz {
+                let from_b1 = pins.len() < sz / 2;
+                let (lo, hi) = if from_b1 { (lo1, hi1) } else { (lo2, hi2) };
+                let u = rng.range(lo, hi) as NodeId;
+                if !pins.contains(&u) {
+                    pins.push(u);
+                }
+            }
+        }
+        if pins.len() >= 2 {
+            nets.push(pins);
+        }
+    }
+    let _ = block_of;
+    Hypergraph::from_nets(p.n, &nets, None, None)
+}
+
+/// Sparse-matrix hypergraph (row-net model, paper §12 "SPM"): rows become
+/// nets over their nonzero columns. Nonzeros cluster near the diagonal
+/// with a few long-range entries — the archetype of SuiteSparse matrices.
+pub fn spm_hypergraph(n_cols: usize, n_rows: usize, avg_nnz: usize, seed: u64) -> Hypergraph {
+    let mut rng = Rng::new(seed ^ 0x51ab_77ee);
+    let mut nets = Vec::with_capacity(n_rows);
+    for r in 0..n_rows {
+        let nnz = (1 + rng.next_below(2 * avg_nnz)).max(2);
+        let center = r * n_cols / n_rows.max(1);
+        let band = (n_cols / 50).max(4);
+        let mut pins: Vec<NodeId> = Vec::with_capacity(nnz);
+        for _ in 0..nnz {
+            let c = if rng.coin(0.85) {
+                // banded entry
+                let lo = center.saturating_sub(band);
+                let hi = (center + band).min(n_cols - 1);
+                rng.range(lo, hi + 1)
+            } else {
+                rng.next_below(n_cols)
+            } as NodeId;
+            if !pins.contains(&c) {
+                pins.push(c);
+            }
+        }
+        if pins.len() >= 2 {
+            nets.push(pins);
+        }
+    }
+    Hypergraph::from_nets(n_cols, &nets, None, None)
+}
+
+/// SAT-instance hypergraph representations (paper §12: PRIMAL, DUAL,
+/// LITERAL encodings of random 3-ish-CNF formulas).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SatRepresentation {
+    /// variables = nodes, clauses = nets
+    Primal,
+    /// clauses = nodes, variables = nets
+    Dual,
+    /// literals = nodes, clauses = nets
+    Literal,
+}
+
+/// Generate a random CNF with community structure and encode it.
+pub fn sat_hypergraph(
+    num_vars: usize,
+    num_clauses: usize,
+    rep: SatRepresentation,
+    seed: u64,
+) -> Hypergraph {
+    let mut rng = Rng::new(seed ^ 0xc1a0_53eb);
+    let communities = (num_vars / 60).max(1);
+    // clauses: mostly 3 literals from one community, sometimes crossing
+    let mut clauses: Vec<Vec<(usize, bool)>> = Vec::with_capacity(num_clauses);
+    for _ in 0..num_clauses {
+        let len = 2 + rng.next_below(3); // 2..4 literals
+        let comm = rng.next_below(communities);
+        let mut lits = Vec::with_capacity(len);
+        while lits.len() < len {
+            let v = if rng.coin(0.8) {
+                let per = (num_vars + communities - 1) / communities;
+                (comm * per + rng.next_below(per)).min(num_vars - 1)
+            } else {
+                rng.next_below(num_vars)
+            };
+            if !lits.iter().any(|&(lv, _)| lv == v) {
+                lits.push((v, rng.coin(0.5)));
+            }
+        }
+        clauses.push(lits);
+    }
+    match rep {
+        SatRepresentation::Primal => {
+            let nets: Vec<Vec<NodeId>> = clauses
+                .iter()
+                .map(|c| c.iter().map(|&(v, _)| v as NodeId).collect())
+                .collect();
+            Hypergraph::from_nets(num_vars, &nets, None, None)
+        }
+        SatRepresentation::Dual => {
+            // nets = variables spanning the clauses they appear in
+            let mut var_clauses: Vec<Vec<NodeId>> = vec![Vec::new(); num_vars];
+            for (ci, c) in clauses.iter().enumerate() {
+                for &(v, _) in c {
+                    var_clauses[v].push(ci as NodeId);
+                }
+            }
+            let nets: Vec<Vec<NodeId>> =
+                var_clauses.into_iter().filter(|l| l.len() >= 2).collect();
+            Hypergraph::from_nets(num_clauses, &nets, None, None)
+        }
+        SatRepresentation::Literal => {
+            let nets: Vec<Vec<NodeId>> = clauses
+                .iter()
+                .map(|c| {
+                    c.iter().map(|&(v, pos)| (2 * v + usize::from(pos)) as NodeId).collect()
+                })
+                .collect();
+            Hypergraph::from_nets(2 * num_vars, &nets, None, None)
+        }
+    }
+}
+
+/// VLSI-circuit-like hypergraph (ISPD98/DAC2012 archetype): dominated by
+/// 2–4-pin nets with strong locality plus a few high-fanout nets.
+pub fn vlsi_hypergraph(n: usize, m: usize, seed: u64) -> Hypergraph {
+    let mut rng = Rng::new(seed ^ 0x7e57_c19c);
+    let mut nets = Vec::with_capacity(m);
+    for _ in 0..m {
+        let high_fanout = rng.coin(0.01);
+        let sz = if high_fanout { 10 + rng.next_below(40) } else { 2 + rng.next_below(3) };
+        let anchor = rng.next_below(n);
+        let radius = if high_fanout { n / 4 } else { (n / 100).max(8) };
+        let mut pins: Vec<NodeId> = vec![anchor as NodeId];
+        let mut guard = 0;
+        while pins.len() < sz && guard < 8 * sz {
+            guard += 1;
+            let off = rng.next_below(2 * radius + 1) as i64 - radius as i64;
+            let u = (anchor as i64 + off).rem_euclid(n as i64) as NodeId;
+            if !pins.contains(&u) {
+                pins.push(u);
+            }
+        }
+        if pins.len() >= 2 {
+            nets.push(pins);
+        }
+    }
+    Hypergraph::from_nets(n, &nets, None, None)
+}
+
+/// RMAT-style power-law graph (SNAP/social-network archetype).
+pub fn rmat_graph(scale: u32, avg_degree: usize, seed: u64) -> Graph {
+    let n = 1usize << scale;
+    let m = n * avg_degree / 2;
+    let mut rng = Rng::new(seed ^ 0x5EED_0F5E_ED01);
+    let (a, b, c) = (0.57, 0.19, 0.19);
+    let mut edges: Vec<(NodeId, NodeId, i64)> = Vec::with_capacity(m);
+    let mut seen = rustc_hash::FxHashSet::default();
+    let mut attempts = 0usize;
+    while edges.len() < m && attempts < 20 * m {
+        attempts += 1;
+        let (mut u, mut v) = (0usize, 0usize);
+        for _ in 0..scale {
+            let r = rng.next_f64();
+            let (du, dv) = if r < a {
+                (0, 0)
+            } else if r < a + b {
+                (0, 1)
+            } else if r < a + b + c {
+                (1, 0)
+            } else {
+                (1, 1)
+            };
+            u = (u << 1) | du;
+            v = (v << 1) | dv;
+        }
+        if u != v && seen.insert((u.min(v), u.max(v))) {
+            edges.push((u as NodeId, v as NodeId, 1));
+        }
+    }
+    Graph::from_edges(n, &edges, None)
+}
+
+/// 2D grid mesh graph (DIMACS mesh archetype): rows × cols 4-neighborhood.
+pub fn mesh_graph(rows: usize, cols: usize) -> Graph {
+    let id = |r: usize, c: usize| (r * cols + c) as NodeId;
+    let mut edges = Vec::with_capacity(2 * rows * cols);
+    for r in 0..rows {
+        for c in 0..cols {
+            if c + 1 < cols {
+                edges.push((id(r, c), id(r, c + 1), 1));
+            }
+            if r + 1 < rows {
+                edges.push((id(r, c), id(r + 1, c), 1));
+            }
+        }
+    }
+    Graph::from_edges(rows * cols, &edges, None)
+}
+
+/// Random k-uniform hypergraph (unstructured control instance).
+pub fn random_kuniform(n: usize, m: usize, k: usize, seed: u64) -> Hypergraph {
+    let mut rng = Rng::new(seed ^ 0xdead_beef);
+    let mut nets = Vec::with_capacity(m);
+    for _ in 0..m {
+        let pins: Vec<NodeId> =
+            rng.sample_indices(n, k).into_iter().map(|u| u as NodeId).collect();
+        if pins.len() >= 2 {
+            nets.push(pins);
+        }
+    }
+    Hypergraph::from_nets(n, &nets, None, None)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn planted_is_valid_and_deterministic() {
+        let p = PlantedParams::default();
+        let a = planted_hypergraph(&p, 1);
+        let b = planted_hypergraph(&p, 1);
+        let c = planted_hypergraph(&p, 2);
+        a.validate().unwrap();
+        assert_eq!(a.num_pins(), b.num_pins());
+        assert_ne!(a.num_pins(), c.num_pins()); // overwhelmingly likely
+    }
+
+    #[test]
+    fn spm_shapes() {
+        let hg = spm_hypergraph(500, 500, 5, 3);
+        hg.validate().unwrap();
+        assert_eq!(hg.num_nodes(), 500);
+        assert!(hg.num_nets() > 400);
+    }
+
+    #[test]
+    fn sat_representations() {
+        for rep in [SatRepresentation::Primal, SatRepresentation::Dual, SatRepresentation::Literal]
+        {
+            let hg = sat_hypergraph(200, 800, rep, 7);
+            hg.validate().unwrap();
+            match rep {
+                SatRepresentation::Primal => assert_eq!(hg.num_nodes(), 200),
+                SatRepresentation::Dual => assert_eq!(hg.num_nodes(), 800),
+                SatRepresentation::Literal => assert_eq!(hg.num_nodes(), 400),
+            }
+        }
+    }
+
+    #[test]
+    fn vlsi_small_nets_dominate() {
+        let hg = vlsi_hypergraph(1000, 1500, 5);
+        hg.validate().unwrap();
+        let small = hg.nets().filter(|&e| hg.net_size(e) <= 4).count();
+        assert!(small * 10 >= hg.num_nets() * 9);
+    }
+
+    #[test]
+    fn rmat_power_law_ish() {
+        let g = rmat_graph(10, 8, 11);
+        g.validate().unwrap();
+        assert_eq!(g.num_nodes(), 1024);
+        let dmax = g.nodes().map(|u| g.degree(u)).max().unwrap();
+        let davg = g.num_edges() / g.num_nodes();
+        assert!(dmax > 4 * davg, "expected skew: dmax={dmax} davg={davg}");
+    }
+
+    #[test]
+    fn mesh_structure() {
+        let g = mesh_graph(10, 12);
+        g.validate().unwrap();
+        assert_eq!(g.num_nodes(), 120);
+        assert_eq!(g.num_edges(), 2 * (9 * 12 + 10 * 11));
+    }
+
+    #[test]
+    fn kuniform() {
+        let hg = random_kuniform(100, 300, 4, 9);
+        hg.validate().unwrap();
+        assert!(hg.nets().all(|e| hg.net_size(e) == 4));
+    }
+}

@@ -1,0 +1,147 @@
+//! Parallel graph contraction (paper §10.1).
+//!
+//! Remap cluster ids via prefix sum, aggregate weights/degrees with atomic
+//! fetch-add, copy incident edges per cluster, sort each cluster's list,
+//! merge parallel edges (aggregating weights) and drop self-loops, then
+//! rebuild the CSR via a prefix sum.
+
+use super::Graph;
+use crate::parallel::{par_for_auto, parallel_prefix_sum, SharedSlice};
+use crate::{EdgeWeight, NodeId, NodeWeight};
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+
+pub struct GraphContraction {
+    pub coarse: Graph,
+    pub fine_to_coarse: Vec<NodeId>,
+}
+
+/// Contract the clustering `rep` (idempotent representative array).
+pub fn contract(g: &Graph, rep: &[NodeId], threads: usize) -> GraphContraction {
+    let n = g.num_nodes();
+    assert_eq!(rep.len(), n);
+
+    // remap representatives to consecutive coarse ids
+    let mut is_rep = vec![0u64; n];
+    par_for_auto(n, threads, {
+        let is_rep = SharedSlice::new(&mut is_rep);
+        move |u| {
+            if rep[u] as usize == u {
+                unsafe { is_rep.write(u, 1) };
+            }
+        }
+    });
+    let coarse_n = parallel_prefix_sum(&mut is_rep, threads) as usize;
+    let coarse_id = is_rep;
+    let mut fine_to_coarse = vec![0 as NodeId; n];
+    par_for_auto(n, threads, {
+        let f2c = SharedSlice::new(&mut fine_to_coarse);
+        let coarse_id = &coarse_id;
+        move |u| unsafe { f2c.write(u, coarse_id[rep[u] as usize] as NodeId) }
+    });
+
+    // aggregate weights and (upper-bound) degrees
+    let weights: Vec<AtomicI64> = (0..coarse_n).map(|_| AtomicI64::new(0)).collect();
+    let degrees: Vec<AtomicU64> = (0..coarse_n).map(|_| AtomicU64::new(0)).collect();
+    par_for_auto(n, threads, |u| {
+        let c = fine_to_coarse[u] as usize;
+        weights[c].fetch_add(g.node_weight(u as NodeId), Ordering::Relaxed);
+        degrees[c].fetch_add(g.degree(u as NodeId) as u64, Ordering::Relaxed);
+    });
+
+    // copy incident edges of each cluster into a contiguous staging range
+    let mut stage_offsets: Vec<u64> = degrees.iter().map(|d| d.load(Ordering::Relaxed)).collect();
+    stage_offsets.push(0);
+    let total: u64 = parallel_prefix_sum(&mut stage_offsets, threads);
+    let cursors: Vec<AtomicU64> =
+        stage_offsets.iter().take(coarse_n).map(|&o| AtomicU64::new(o)).collect();
+    let mut staging: Vec<(NodeId, EdgeWeight)> = vec![(0, 0); total as usize];
+    {
+        let staging_s = SharedSlice::new(&mut staging);
+        par_for_auto(n, threads, |u| {
+            let c = fine_to_coarse[u] as usize;
+            for (v, w) in g.neighbors(u as NodeId) {
+                let slot = cursors[c].fetch_add(1, Ordering::Relaxed) as usize;
+                // SAFETY: each slot claimed exactly once via fetch_add.
+                unsafe { staging_s.write(slot, (fine_to_coarse[v as usize], w)) };
+            }
+        });
+    }
+
+    // per-cluster: sort, drop self-loops, merge parallel edges
+    let mut merged: Vec<Vec<(NodeId, EdgeWeight)>> = vec![Vec::new(); coarse_n];
+    {
+        let merged_s = SharedSlice::new(&mut merged);
+        let stage_offsets = &stage_offsets;
+        let staging = &staging;
+        par_for_auto(coarse_n, threads, move |c| {
+            let s = stage_offsets[c] as usize;
+            let e = if c + 1 < stage_offsets.len() { stage_offsets[c + 1] as usize } else { s };
+            let mut list: Vec<(NodeId, EdgeWeight)> = staging[s..e].to_vec();
+            list.sort_unstable_by_key(|&(v, _)| v);
+            let mut out: Vec<(NodeId, EdgeWeight)> = Vec::with_capacity(list.len());
+            for (v, w) in list {
+                if v as usize == c {
+                    continue; // self-loop
+                }
+                if let Some(last) = out.last_mut() {
+                    if last.0 == v {
+                        last.1 += w;
+                        continue;
+                    }
+                }
+                out.push((v, w));
+            }
+            unsafe { merged_s.write(c, out) };
+        });
+    }
+
+    let coarse_weights: Vec<NodeWeight> = weights.into_iter().map(|w| w.into_inner()).collect();
+    let coarse = Graph::from_adjacency(&merged, Some(coarse_weights));
+    debug_assert!(coarse.validate().is_ok());
+    GraphContraction { coarse, fine_to_coarse }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn contract_triangle_pair() {
+        // two triangles joined by one edge
+        let g = Graph::from_edges(
+            6,
+            &[(0, 1, 1), (1, 2, 1), (0, 2, 1), (3, 4, 1), (4, 5, 1), (3, 5, 1), (2, 3, 1)],
+            None,
+        );
+        let rep = vec![0, 0, 0, 3, 3, 3];
+        let c = contract(&g, &rep, 2);
+        assert_eq!(c.coarse.num_nodes(), 2);
+        // only the bridging edge survives, weight 1, both directions
+        assert_eq!(c.coarse.num_edges(), 2);
+        assert_eq!(c.coarse.neighbors(0).next().unwrap().1, 1);
+        assert_eq!(c.coarse.node_weight(0), 3);
+        assert_eq!(c.coarse.total_weight(), 6);
+    }
+
+    #[test]
+    fn parallel_edges_merge() {
+        let g = Graph::from_edges(4, &[(0, 2, 1), (1, 2, 2), (0, 3, 3), (1, 3, 4)], None);
+        let rep = vec![0, 0, 2, 3];
+        let c = contract(&g, &rep, 1);
+        assert_eq!(c.coarse.num_nodes(), 3);
+        let w02 = c.coarse.neighbors(0).find(|&(v, _)| v == 1).map(|(_, w)| w);
+        let w03 = c.coarse.neighbors(0).find(|&(v, _)| v == 2).map(|(_, w)| w);
+        assert_eq!(w02, Some(3)); // 1+2
+        assert_eq!(w03, Some(7)); // 3+4
+        c.coarse.validate().unwrap();
+    }
+
+    #[test]
+    fn identity_preserves() {
+        let g = Graph::from_edges(5, &[(0, 1, 1), (1, 2, 1), (2, 3, 1), (3, 4, 1)], None);
+        let rep: Vec<NodeId> = (0..5).collect();
+        let c = contract(&g, &rep, 4);
+        assert_eq!(c.coarse.num_nodes(), 5);
+        assert_eq!(c.coarse.num_edges(), 8);
+    }
+}

@@ -1,0 +1,192 @@
+//! Plain-graph data structures (paper §10).
+//!
+//! A graph is a hypergraph whose nets all have exactly two pins, but the
+//! hypergraph representation wastes memory and cache: GP tools use *one*
+//! adjacency array. This module provides that optimized representation
+//! plus its parallel contraction algorithm; [`crate::partition::graph_partition`]
+//! provides the matching partition data structure with on-the-fly gains.
+
+pub mod contraction;
+pub mod partitioner;
+
+use crate::{EdgeWeight, NodeId, NodeWeight};
+
+/// An undirected weighted graph stored as directed CSR (each undirected
+/// edge appears in both endpoint lists, as the paper's data structure).
+#[derive(Clone, Debug, Default)]
+pub struct Graph {
+    pub(crate) offsets: Vec<u64>,
+    pub(crate) targets: Vec<NodeId>,
+    pub(crate) edge_weight: Vec<EdgeWeight>,
+    pub(crate) node_weight: Vec<NodeWeight>,
+    pub(crate) total_weight: NodeWeight,
+}
+
+impl Graph {
+    #[inline]
+    pub fn num_nodes(&self) -> usize {
+        self.node_weight.len()
+    }
+
+    /// Number of *directed* edges (2× the undirected count).
+    #[inline]
+    pub fn num_edges(&self) -> usize {
+        self.targets.len()
+    }
+
+    #[inline]
+    pub fn degree(&self, u: NodeId) -> usize {
+        (self.offsets[u as usize + 1] - self.offsets[u as usize]) as usize
+    }
+
+    #[inline]
+    pub fn node_weight(&self, u: NodeId) -> NodeWeight {
+        self.node_weight[u as usize]
+    }
+
+    #[inline]
+    pub fn total_weight(&self) -> NodeWeight {
+        self.total_weight
+    }
+
+    /// Weighted degree (volume) of `u` — Σ ω(u,v).
+    pub fn weighted_degree(&self, u: NodeId) -> EdgeWeight {
+        let (s, e) = (self.offsets[u as usize] as usize, self.offsets[u as usize + 1] as usize);
+        self.edge_weight[s..e].iter().sum()
+    }
+
+    /// Total edge volume Σ_u weighted_degree(u) (= 2 · Σ_{uv} ω(uv)).
+    pub fn total_volume(&self) -> EdgeWeight {
+        self.edge_weight.iter().sum()
+    }
+
+    /// Iterate `(neighbor, weight)` pairs of `u`.
+    #[inline]
+    pub fn neighbors(&self, u: NodeId) -> impl Iterator<Item = (NodeId, EdgeWeight)> + '_ {
+        let s = self.offsets[u as usize] as usize;
+        let e = self.offsets[u as usize + 1] as usize;
+        self.targets[s..e].iter().copied().zip(self.edge_weight[s..e].iter().copied())
+    }
+
+    pub fn nodes(&self) -> impl Iterator<Item = NodeId> {
+        0..self.num_nodes() as NodeId
+    }
+
+    /// Build from per-node adjacency lists `(target, weight)`.
+    /// The lists must already be symmetric.
+    pub fn from_adjacency(
+        adj: &[Vec<(NodeId, EdgeWeight)>],
+        node_weight: Option<Vec<NodeWeight>>,
+    ) -> Self {
+        let n = adj.len();
+        let node_weight = node_weight.unwrap_or_else(|| vec![1; n]);
+        let mut offsets = Vec::with_capacity(n + 1);
+        offsets.push(0u64);
+        let mut targets = Vec::new();
+        let mut edge_weight = Vec::new();
+        for list in adj {
+            for &(v, w) in list {
+                debug_assert!((v as usize) < n);
+                targets.push(v);
+                edge_weight.push(w);
+            }
+            offsets.push(targets.len() as u64);
+        }
+        let total_weight = node_weight.iter().sum();
+        Graph { offsets, targets, edge_weight, node_weight, total_weight }
+    }
+
+    /// Build from an undirected edge list (symmetrized here).
+    pub fn from_edges(
+        n: usize,
+        edges: &[(NodeId, NodeId, EdgeWeight)],
+        node_weight: Option<Vec<NodeWeight>>,
+    ) -> Self {
+        let mut adj: Vec<Vec<(NodeId, EdgeWeight)>> = vec![Vec::new(); n];
+        for &(u, v, w) in edges {
+            if u == v {
+                continue; // self-loops contribute nothing to cuts
+            }
+            adj[u as usize].push((v, w));
+            adj[v as usize].push((u, w));
+        }
+        Self::from_adjacency(&adj, node_weight)
+    }
+
+    /// Convert to the hypergraph representation (each undirected edge one
+    /// 2-pin net) — the baseline the §10 optimizations are measured against.
+    pub fn to_hypergraph(&self) -> crate::hypergraph::Hypergraph {
+        let mut nets = Vec::with_capacity(self.num_edges() / 2);
+        let mut weights = Vec::with_capacity(self.num_edges() / 2);
+        for u in self.nodes() {
+            for (v, w) in self.neighbors(u) {
+                if u < v {
+                    nets.push(vec![u, v]);
+                    weights.push(w);
+                }
+            }
+        }
+        crate::hypergraph::Hypergraph::from_nets(
+            self.num_nodes(),
+            &nets,
+            Some(self.node_weight.clone()),
+            Some(weights),
+        )
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if self.offsets.len() != self.num_nodes() + 1 {
+            return Err("offsets length".into());
+        }
+        if *self.offsets.last().unwrap() as usize != self.targets.len() {
+            return Err("offset tail".into());
+        }
+        for u in self.nodes() {
+            for (v, w) in self.neighbors(u) {
+                if v as usize >= self.num_nodes() {
+                    return Err(format!("edge target {v} out of range"));
+                }
+                if !self.neighbors(v).any(|(t, tw)| t == u && tw == w) {
+                    return Err(format!("asymmetric edge ({u},{v})"));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    pub(crate) fn path4() -> Graph {
+        Graph::from_edges(4, &[(0, 1, 1), (1, 2, 1), (2, 3, 1)], None)
+    }
+
+    #[test]
+    fn basic() {
+        let g = path4();
+        assert_eq!(g.num_nodes(), 4);
+        assert_eq!(g.num_edges(), 6);
+        assert_eq!(g.degree(1), 2);
+        assert_eq!(g.weighted_degree(1), 2);
+        assert_eq!(g.total_volume(), 6);
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn to_hypergraph_roundtrip_counts() {
+        let g = path4();
+        let hg = g.to_hypergraph();
+        assert_eq!(hg.num_nodes(), 4);
+        assert_eq!(hg.num_nets(), 3);
+        assert_eq!(hg.num_pins(), 6);
+        hg.validate().unwrap();
+    }
+
+    #[test]
+    fn self_loops_dropped() {
+        let g = Graph::from_edges(2, &[(0, 0, 5), (0, 1, 1)], None);
+        assert_eq!(g.num_edges(), 2);
+    }
+}

@@ -1,0 +1,58 @@
+//! Bipartite graph ("star expansion") representation of a hypergraph
+//! (paper §2 and §4.3): one vertex per node, one vertex per net, an edge
+//! `{u, e}` for every pin. Community detection for community-aware
+//! coarsening runs on this graph with the edge-weight model of
+//! Heuer & Schlag: `w(u, e) = ω(e) · d(u) / |e|` — emphasizing
+//! low-degree structure — here in its unit-weight instantiation
+//! `w(u,e) = ω(e)/|e|` plus degree scaling handled by the Louvain volume.
+
+use super::Hypergraph;
+use crate::graph::Graph;
+
+/// Build the weighted bipartite representation `G*(H)`.
+///
+/// Node ids: `0..n` are hypergraph nodes, `n..n+m` are net vertices.
+/// Edge weights follow ω(e)/|e| (scaled ×|e| to stay integral would lose
+/// the model, so `Graph` stores f64-scaled integer weights via a fixed
+/// 2⁸ multiplier).
+pub fn bipartite_graph(hg: &Hypergraph) -> Graph {
+    const SCALE: i64 = 256;
+    let n = hg.num_nodes();
+    let m = hg.num_nets();
+    let mut adj: Vec<Vec<(crate::NodeId, i64)>> = vec![Vec::new(); n + m];
+    for e in hg.nets() {
+        let sz = hg.net_size(e).max(1) as i64;
+        let w = (hg.net_weight(e) * SCALE / sz).max(1);
+        let ev = (n + e as usize) as crate::NodeId;
+        for &p in hg.pins(e) {
+            adj[p as usize].push((ev, w));
+            adj[ev as usize].push((p, w));
+        }
+    }
+    Graph::from_adjacency(&adj, None)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn star_expansion_shape() {
+        let hg = Hypergraph::from_nets(4, &[vec![0, 1], vec![1, 2, 3]], None, None);
+        let g = bipartite_graph(&hg);
+        assert_eq!(g.num_nodes(), 4 + 2);
+        assert_eq!(g.num_edges(), 2 * (2 + 3)); // directed edge count
+        // node 1 connects to both net-vertices 4 and 5
+        let nbrs: Vec<_> = g.neighbors(1).map(|(v, _)| v).collect();
+        assert!(nbrs.contains(&4) && nbrs.contains(&5));
+    }
+
+    #[test]
+    fn small_nets_weigh_more() {
+        let hg = Hypergraph::from_nets(5, &[vec![0, 1], vec![0, 1, 2, 3, 4]], None, None);
+        let g = bipartite_graph(&hg);
+        let w_small = g.neighbors(0).find(|&(v, _)| v == 5).unwrap().1;
+        let w_large = g.neighbors(0).find(|&(v, _)| v == 6).unwrap().1;
+        assert!(w_small > w_large);
+    }
+}

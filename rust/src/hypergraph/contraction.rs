@@ -1,0 +1,253 @@
+//! Parallel hypergraph contraction (paper §4.2).
+//!
+//! Contracts a clustering `rep: V → V` (each node points at its cluster
+//! representative; representatives point at themselves). Steps, all
+//! parallelizable and implemented with the primitives in [`crate::parallel`]:
+//!
+//! 1. remap representative ids to a consecutive coarse range (prefix sum),
+//! 2. aggregate coarse node weights (atomic fetch-add),
+//! 3. rewrite each net's pin list to coarse ids, deduplicate, drop
+//!    single-pin nets,
+//! 4. remove *identical nets* with the parallelized INRSRT scheme of
+//!    Aykanat et al.: fingerprint `f(e) = Σ (v+1)²`, group nets by
+//!    (fingerprint, size) via sorting, pairwise-compare within groups,
+//!    aggregate weights at one representative,
+//! 5. rebuild both CSRs via prefix sums.
+
+use super::{build_incidence, Hypergraph};
+use crate::parallel::{self, par_for_auto, parallel_prefix_sum, SharedSlice};
+use crate::{EdgeWeight, NodeId, NodeWeight};
+use std::sync::atomic::{AtomicI64, Ordering};
+
+/// Result of a contraction: the coarse hypergraph plus the mapping from
+/// fine node id to coarse node id (needed to project partitions back).
+pub struct Contraction {
+    pub coarse: Hypergraph,
+    pub fine_to_coarse: Vec<NodeId>,
+}
+
+/// Net fingerprint — identical nets necessarily agree on it.
+#[inline]
+pub fn fingerprint(pins: &[NodeId]) -> u64 {
+    pins.iter().map(|&v| {
+        let x = v as u64 + 1;
+        x.wrapping_mul(x)
+    })
+    .fold(0u64, |a, b| a.wrapping_add(b))
+}
+
+/// Contract the clustering `rep` (must satisfy `rep[rep[u]] == rep[u]`).
+pub fn contract(hg: &Hypergraph, rep: &[NodeId], threads: usize) -> Contraction {
+    let n = hg.num_nodes();
+    assert_eq!(rep.len(), n);
+
+    // ---- 1. remap representatives to consecutive coarse ids ----
+    let mut is_rep = vec![0u64; n];
+    par_for_auto(n, threads, {
+        let is_rep = SharedSlice::new(&mut is_rep);
+        move |u| {
+            debug_assert_eq!(rep[rep[u] as usize], rep[u], "rep must be idempotent");
+            if rep[u] as usize == u {
+                // SAFETY: one writer per index
+                unsafe { is_rep.write(u, 1) };
+            }
+        }
+    });
+    let coarse_n = parallel_prefix_sum(&mut is_rep, threads) as usize;
+    let coarse_id = is_rep; // after scan: coarse_id[u] = id if u is rep
+
+    let mut fine_to_coarse = vec![0 as NodeId; n];
+    par_for_auto(n, threads, {
+        let f2c = SharedSlice::new(&mut fine_to_coarse);
+        let coarse_id = &coarse_id;
+        move |u| unsafe { f2c.write(u, coarse_id[rep[u] as usize] as NodeId) }
+    });
+
+    // ---- 2. coarse node weights ----
+    let weights: Vec<AtomicI64> = (0..coarse_n).map(|_| AtomicI64::new(0)).collect();
+    par_for_auto(n, threads, |u| {
+        weights[fine_to_coarse[u] as usize]
+            .fetch_add(hg.node_weight(u as NodeId), Ordering::Relaxed);
+    });
+    let coarse_weights: Vec<NodeWeight> =
+        weights.into_iter().map(|w| w.into_inner()).collect();
+
+    // ---- 3. rewrite pin lists to coarse ids; dedup; drop |e| <= 1 ----
+    let m = hg.num_nets();
+    let mut coarse_nets: Vec<Option<Vec<NodeId>>> = vec![None; m];
+    par_for_auto(m, threads, {
+        let slots = SharedSlice::new(&mut coarse_nets);
+        let f2c = &fine_to_coarse;
+        move |e| {
+            let mut list: Vec<NodeId> =
+                hg.pins(e as crate::EdgeId).iter().map(|&p| f2c[p as usize]).collect();
+            list.sort_unstable();
+            list.dedup();
+            if list.len() > 1 {
+                unsafe { slots.write(e, Some(list)) };
+            }
+        }
+    });
+
+    // ---- 4. identical net removal (INRSRT) ----
+    // entries: (fingerprint, size, original net id)
+    let mut entries: Vec<(u64, u32, u32)> = coarse_nets
+        .iter()
+        .enumerate()
+        .filter_map(|(e, net)| {
+            net.as_ref().map(|list| (fingerprint(list), list.len() as u32, e as u32))
+        })
+        .collect();
+    parallel::par_sort_by_key(&mut entries, threads, |&(f, s, e)| (f, s, e));
+
+    // Within each (fingerprint, size) group compare pairwise; keep one
+    // representative and add up the weights of its duplicates.
+    let mut keep: Vec<(u32, EdgeWeight)> = Vec::with_capacity(entries.len());
+    let mut g = 0usize;
+    while g < entries.len() {
+        let mut h = g + 1;
+        while h < entries.len() && entries[h].0 == entries[g].0 && entries[h].1 == entries[g].1 {
+            h += 1;
+        }
+        if h - g == 1 {
+            let e = entries[g].2;
+            keep.push((e, hg.net_weight(e)));
+        } else {
+            // small group: pairwise identity detection
+            let mut consumed = vec![false; h - g];
+            for i in g..h {
+                if consumed[i - g] {
+                    continue;
+                }
+                let ei = entries[i].2;
+                let mut w = hg.net_weight(ei);
+                let pi = coarse_nets[ei as usize].as_ref().unwrap();
+                for j in i + 1..h {
+                    if consumed[j - g] {
+                        continue;
+                    }
+                    let ej = entries[j].2;
+                    if coarse_nets[ej as usize].as_ref().unwrap() == pi {
+                        consumed[j - g] = true;
+                        w += hg.net_weight(ej);
+                    }
+                }
+                keep.push((ei, w));
+            }
+        }
+        g = h;
+    }
+    // Deterministic output order: sort surviving nets by original id.
+    parallel::par_sort_by_key(&mut keep, threads, |&(e, _)| e);
+
+    // ---- 5. build coarse CSRs ----
+    let mut net_offsets = Vec::with_capacity(keep.len() + 1);
+    net_offsets.push(0u64);
+    let mut pins: Vec<NodeId> = Vec::new();
+    let mut net_weight: Vec<EdgeWeight> = Vec::with_capacity(keep.len());
+    for &(e, w) in &keep {
+        let list = coarse_nets[e as usize].as_ref().unwrap();
+        pins.extend_from_slice(list);
+        net_offsets.push(pins.len() as u64);
+        net_weight.push(w);
+    }
+    let (node_offsets, incident_nets) = build_incidence(coarse_n, &net_offsets, &pins);
+
+    let coarse = Hypergraph {
+        net_offsets,
+        pins,
+        node_offsets,
+        incident_nets,
+        node_weight: coarse_weights,
+        net_weight,
+        total_weight: hg.total_weight(),
+    };
+    debug_assert!(coarse.validate().is_ok());
+    Contraction { coarse, fine_to_coarse }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Hypergraph {
+        Hypergraph::from_nets(
+            7,
+            &[vec![0, 2], vec![0, 1, 3, 4], vec![3, 4, 6], vec![2, 5, 6]],
+            None,
+            None,
+        )
+    }
+
+    #[test]
+    fn identity_clustering_keeps_structure() {
+        let hg = tiny();
+        let rep: Vec<NodeId> = (0..7).collect();
+        let c = contract(&hg, &rep, 2);
+        assert_eq!(c.coarse.num_nodes(), 7);
+        assert_eq!(c.coarse.num_nets(), 4);
+        assert_eq!(c.coarse.num_pins(), 12);
+        assert_eq!(c.coarse.total_weight(), 7);
+    }
+
+    #[test]
+    fn merges_and_drops_single_pin_nets() {
+        let hg = tiny();
+        // cluster {0,1,3,4} -> rep 0; {2}; {5}; {6}
+        let rep = vec![0, 0, 2, 0, 0, 5, 6];
+        let c = contract(&hg, &rep, 2);
+        // net {0,1,3,4} collapses to single pin -> dropped
+        // net {0,2}, {3,4,6}->{0,6}, {2,5,6} survive
+        assert_eq!(c.coarse.num_nodes(), 4);
+        assert_eq!(c.coarse.num_nets(), 3);
+        assert_eq!(c.coarse.total_weight(), 7);
+        let cw: Vec<NodeWeight> =
+            (0..4).map(|u| c.coarse.node_weight(u as NodeId)).collect();
+        assert_eq!(cw.iter().sum::<NodeWeight>(), 7);
+        assert!(cw.contains(&4)); // merged cluster weight
+        c.coarse.validate().unwrap();
+    }
+
+    #[test]
+    fn identical_nets_aggregate_weight() {
+        // two nets become identical after contraction
+        let hg = Hypergraph::from_nets(
+            4,
+            &[vec![0, 2], vec![1, 2], vec![0, 3], vec![1, 3]],
+            None,
+            Some(vec![1, 2, 3, 4]),
+        );
+        // merge 0 and 1 -> nets {01,2} appear twice (w 1+2), {01,3} twice (w 3+4)
+        let rep = vec![0, 0, 2, 3];
+        let c = contract(&hg, &rep, 1);
+        assert_eq!(c.coarse.num_nets(), 2);
+        let mut ws: Vec<EdgeWeight> =
+            (0..2).map(|e| c.coarse.net_weight(e as crate::EdgeId)).collect();
+        ws.sort_unstable();
+        assert_eq!(ws, vec![3, 7]);
+    }
+
+    #[test]
+    fn fingerprint_order_invariant() {
+        assert_eq!(fingerprint(&[1, 5, 9]), fingerprint(&[9, 1, 5]));
+        assert_ne!(fingerprint(&[1, 5, 9]), fingerprint(&[1, 5, 8]));
+    }
+
+    #[test]
+    fn mapping_is_consistent() {
+        let hg = tiny();
+        let rep = vec![0, 0, 2, 3, 3, 5, 5];
+        let c = contract(&hg, &rep, 4);
+        for u in 0..7usize {
+            assert_eq!(
+                c.fine_to_coarse[u],
+                c.fine_to_coarse[rep[u] as usize],
+                "cluster members map together"
+            );
+        }
+        let mut ids: Vec<NodeId> = c.fine_to_coarse.clone();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), c.coarse.num_nodes());
+    }
+}

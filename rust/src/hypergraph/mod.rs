@@ -1,0 +1,254 @@
+//! The static hypergraph data structure (paper §2, §4.2).
+//!
+//! Stores the pin-lists of nets and the incident nets of nodes in two
+//! adjacency (CSR) arrays, plus node/net weights. Coarsening produces new
+//! `Hypergraph` values via [`contraction::contract`]; recursive
+//! bipartitioning extracts induced subhypergraphs via
+//! [`subhypergraph::extract_block`].
+
+pub mod bipartite;
+pub mod contraction;
+pub mod subhypergraph;
+
+use crate::{EdgeId, EdgeWeight, NodeId, NodeWeight};
+
+/// A weighted hypergraph `H = (V, E, c, ω)` in CSR form.
+#[derive(Clone, Debug, Default)]
+pub struct Hypergraph {
+    /// net e's pins are `pins[net_offsets[e]..net_offsets[e+1]]`
+    pub(crate) net_offsets: Vec<u64>,
+    pub(crate) pins: Vec<NodeId>,
+    /// node u's incident nets are `incident_nets[node_offsets[u]..node_offsets[u+1]]`
+    pub(crate) node_offsets: Vec<u64>,
+    pub(crate) incident_nets: Vec<EdgeId>,
+    pub(crate) node_weight: Vec<NodeWeight>,
+    pub(crate) net_weight: Vec<EdgeWeight>,
+    pub(crate) total_weight: NodeWeight,
+}
+
+impl Hypergraph {
+    /// Number of nodes `n`.
+    #[inline]
+    pub fn num_nodes(&self) -> usize {
+        self.node_weight.len()
+    }
+
+    /// Number of nets `m`.
+    #[inline]
+    pub fn num_nets(&self) -> usize {
+        self.net_weight.len()
+    }
+
+    /// Number of pins `p`.
+    #[inline]
+    pub fn num_pins(&self) -> usize {
+        self.pins.len()
+    }
+
+    /// Pins of net `e`.
+    #[inline]
+    pub fn pins(&self, e: EdgeId) -> &[NodeId] {
+        &self.pins[self.net_offsets[e as usize] as usize..self.net_offsets[e as usize + 1] as usize]
+    }
+
+    /// Incident nets `I(u)` of node `u`.
+    #[inline]
+    pub fn incident_nets(&self, u: NodeId) -> &[EdgeId] {
+        &self.incident_nets
+            [self.node_offsets[u as usize] as usize..self.node_offsets[u as usize + 1] as usize]
+    }
+
+    /// Net size `|e|`.
+    #[inline]
+    pub fn net_size(&self, e: EdgeId) -> usize {
+        (self.net_offsets[e as usize + 1] - self.net_offsets[e as usize]) as usize
+    }
+
+    /// Node degree `d(u) = |I(u)|`.
+    #[inline]
+    pub fn degree(&self, u: NodeId) -> usize {
+        (self.node_offsets[u as usize + 1] - self.node_offsets[u as usize]) as usize
+    }
+
+    #[inline]
+    pub fn node_weight(&self, u: NodeId) -> NodeWeight {
+        self.node_weight[u as usize]
+    }
+
+    #[inline]
+    pub fn net_weight(&self, e: EdgeId) -> EdgeWeight {
+        self.net_weight[e as usize]
+    }
+
+    /// Total node weight `c(V)`.
+    #[inline]
+    pub fn total_weight(&self) -> NodeWeight {
+        self.total_weight
+    }
+
+    /// Iterator over all node ids.
+    pub fn nodes(&self) -> impl Iterator<Item = NodeId> {
+        0..self.num_nodes() as NodeId
+    }
+
+    /// Iterator over all net ids.
+    pub fn nets(&self) -> impl Iterator<Item = EdgeId> {
+        0..self.num_nets() as EdgeId
+    }
+
+    /// Maximum net size (0 for netless hypergraphs).
+    pub fn max_net_size(&self) -> usize {
+        (0..self.num_nets() as EdgeId).map(|e| self.net_size(e)).max().unwrap_or(0)
+    }
+
+    /// Build from explicit pin lists and weights.
+    ///
+    /// Nets with fewer than one pin are kept as given (callers sanitize);
+    /// pins must be valid node ids `< num_nodes`.
+    pub fn from_nets(
+        num_nodes: usize,
+        nets: &[Vec<NodeId>],
+        node_weight: Option<Vec<NodeWeight>>,
+        net_weight: Option<Vec<EdgeWeight>>,
+    ) -> Self {
+        let node_weight = node_weight.unwrap_or_else(|| vec![1; num_nodes]);
+        assert_eq!(node_weight.len(), num_nodes);
+        let net_weight = net_weight.unwrap_or_else(|| vec![1; nets.len()]);
+        assert_eq!(net_weight.len(), nets.len());
+
+        let mut net_offsets = Vec::with_capacity(nets.len() + 1);
+        net_offsets.push(0u64);
+        let mut pins = Vec::with_capacity(nets.iter().map(Vec::len).sum());
+        for net in nets {
+            for &p in net {
+                debug_assert!((p as usize) < num_nodes, "pin out of range");
+                pins.push(p);
+            }
+            net_offsets.push(pins.len() as u64);
+        }
+
+        let (node_offsets, incident_nets) = build_incidence(num_nodes, &net_offsets, &pins);
+        let total_weight = node_weight.iter().sum();
+        Hypergraph {
+            net_offsets,
+            pins,
+            node_offsets,
+            incident_nets,
+            node_weight,
+            net_weight,
+            total_weight,
+        }
+    }
+
+    /// Cheap structural sanity check (used by tests and debug assertions).
+    pub fn validate(&self) -> Result<(), String> {
+        if self.net_offsets.len() != self.num_nets() + 1 {
+            return Err("net_offsets length".into());
+        }
+        if self.node_offsets.len() != self.num_nodes() + 1 {
+            return Err("node_offsets length".into());
+        }
+        if *self.net_offsets.last().unwrap() as usize != self.pins.len() {
+            return Err("net_offsets tail".into());
+        }
+        if *self.node_offsets.last().unwrap() as usize != self.incident_nets.len() {
+            return Err("node_offsets tail".into());
+        }
+        if self.pins.len() != self.incident_nets.len() {
+            return Err("pin count mismatch between the two CSRs".into());
+        }
+        for e in self.nets() {
+            for &p in self.pins(e) {
+                if p as usize >= self.num_nodes() {
+                    return Err(format!("net {e} has out-of-range pin {p}"));
+                }
+                if !self.incident_nets(p).contains(&e) {
+                    return Err(format!("incidence mismatch: node {p} misses net {e}"));
+                }
+            }
+        }
+        if self.total_weight != self.node_weight.iter().sum::<NodeWeight>() {
+            return Err("total weight".into());
+        }
+        Ok(())
+    }
+}
+
+/// Build the node→nets CSR from the nets→pins CSR (counting sort).
+pub(crate) fn build_incidence(
+    num_nodes: usize,
+    net_offsets: &[u64],
+    pins: &[NodeId],
+) -> (Vec<u64>, Vec<EdgeId>) {
+    let mut node_offsets = vec![0u64; num_nodes + 1];
+    for &p in pins {
+        node_offsets[p as usize + 1] += 1;
+    }
+    for i in 0..num_nodes {
+        node_offsets[i + 1] += node_offsets[i];
+    }
+    let mut cursor = node_offsets.clone();
+    let mut incident_nets = vec![0 as EdgeId; pins.len()];
+    for e in 0..net_offsets.len() - 1 {
+        for i in net_offsets[e] as usize..net_offsets[e + 1] as usize {
+            let u = pins[i] as usize;
+            incident_nets[cursor[u] as usize] = e as EdgeId;
+            cursor[u] += 1;
+        }
+    }
+    (node_offsets, incident_nets)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    pub(crate) fn tiny() -> Hypergraph {
+        // 7 nodes, 4 nets — the classic KaHyPar example topology
+        Hypergraph::from_nets(
+            7,
+            &[vec![0, 2], vec![0, 1, 3, 4], vec![3, 4, 6], vec![2, 5, 6]],
+            None,
+            None,
+        )
+    }
+
+    #[test]
+    fn basic_accessors() {
+        let hg = tiny();
+        assert_eq!(hg.num_nodes(), 7);
+        assert_eq!(hg.num_nets(), 4);
+        assert_eq!(hg.num_pins(), 12);
+        assert_eq!(hg.pins(1), &[0, 1, 3, 4]);
+        assert_eq!(hg.net_size(1), 4);
+        assert_eq!(hg.degree(0), 2);
+        assert_eq!(hg.incident_nets(6), &[2, 3]);
+        assert_eq!(hg.total_weight(), 7);
+        assert_eq!(hg.max_net_size(), 4);
+        hg.validate().unwrap();
+    }
+
+    #[test]
+    fn weighted_build() {
+        let hg = Hypergraph::from_nets(
+            3,
+            &[vec![0, 1], vec![1, 2]],
+            Some(vec![5, 1, 2]),
+            Some(vec![10, 20]),
+        );
+        assert_eq!(hg.total_weight(), 8);
+        assert_eq!(hg.net_weight(1), 20);
+        assert_eq!(hg.node_weight(0), 5);
+        hg.validate().unwrap();
+    }
+
+    #[test]
+    fn incidence_symmetry() {
+        let hg = tiny();
+        for u in hg.nodes() {
+            for &e in hg.incident_nets(u) {
+                assert!(hg.pins(e).contains(&u));
+            }
+        }
+    }
+}

@@ -1,0 +1,139 @@
+//! Induced subhypergraph extraction for recursive bipartitioning
+//! (paper §2 and §5: after a bipartition `{V₁,V₂}`, extract `H[V₁]` and
+//! `H[V₂]` and recurse on both in parallel).
+
+use super::{build_incidence, Hypergraph};
+use crate::partition::PartitionedHypergraph;
+use crate::{BlockId, EdgeId, NodeId};
+
+/// A subhypergraph plus the mapping back to the parent's node ids.
+pub struct Subhypergraph {
+    pub hg: Hypergraph,
+    /// `sub_to_parent[u_sub] = u_parent`
+    pub sub_to_parent: Vec<NodeId>,
+}
+
+/// Extract the subhypergraph induced by the nodes of `block`.
+///
+/// Nets are intersected with the block; intersections of size ≤ 1 are
+/// dropped (they cannot become cut nets in the recursion).
+pub fn extract_block(phg: &PartitionedHypergraph, block: BlockId) -> Subhypergraph {
+    let hg = phg.hypergraph();
+    let n = hg.num_nodes();
+    let mut parent_to_sub = vec![crate::INVALID_NODE; n];
+    let mut sub_to_parent = Vec::new();
+    for u in hg.nodes() {
+        if phg.block_of(u) == block {
+            parent_to_sub[u as usize] = sub_to_parent.len() as NodeId;
+            sub_to_parent.push(u);
+        }
+    }
+
+    let mut net_offsets = vec![0u64];
+    let mut pins: Vec<NodeId> = Vec::new();
+    let mut net_weight = Vec::new();
+    for e in hg.nets() {
+        // only nets with at least 2 pins in the block survive
+        if phg.pin_count(e, block) < 2 {
+            continue;
+        }
+        let before = pins.len();
+        for &p in hg.pins(e) {
+            let s = parent_to_sub[p as usize];
+            if s != crate::INVALID_NODE {
+                pins.push(s);
+            }
+        }
+        debug_assert!(pins.len() - before >= 2);
+        net_offsets.push(pins.len() as u64);
+        net_weight.push(hg.net_weight(e));
+    }
+
+    let node_weight: Vec<_> = sub_to_parent.iter().map(|&u| hg.node_weight(u)).collect();
+    let total_weight = node_weight.iter().sum();
+    let (node_offsets, incident_nets) =
+        build_incidence(sub_to_parent.len(), &net_offsets, &pins);
+    let sub = Hypergraph {
+        net_offsets,
+        pins,
+        node_offsets,
+        incident_nets,
+        node_weight,
+        net_weight,
+        total_weight,
+    };
+    debug_assert!(sub.validate().is_ok());
+    Subhypergraph { hg: sub, sub_to_parent }
+}
+
+/// Extract the subhypergraph induced by an explicit node set (used by flow
+/// refinement's region construction, §8.2). Returns the subhypergraph,
+/// the mapping, and for each surviving net its parent net id.
+pub fn extract_node_set(hg: &Hypergraph, nodes: &[NodeId]) -> (Subhypergraph, Vec<EdgeId>) {
+    let mut parent_to_sub = vec![crate::INVALID_NODE; hg.num_nodes()];
+    for (i, &u) in nodes.iter().enumerate() {
+        parent_to_sub[u as usize] = i as NodeId;
+    }
+    let mut seen = crate::util::Bitset::new(hg.num_nets());
+    let mut net_offsets = vec![0u64];
+    let mut pins: Vec<NodeId> = Vec::new();
+    let mut net_weight = Vec::new();
+    let mut parent_net = Vec::new();
+    for &u in nodes {
+        for &e in hg.incident_nets(u) {
+            if seen.test_and_set(e as usize) {
+                continue;
+            }
+            let before = pins.len();
+            for &p in hg.pins(e) {
+                let s = parent_to_sub[p as usize];
+                if s != crate::INVALID_NODE {
+                    pins.push(s);
+                }
+            }
+            if pins.len() - before < 2 {
+                pins.truncate(before);
+                continue;
+            }
+            net_offsets.push(pins.len() as u64);
+            net_weight.push(hg.net_weight(e));
+            parent_net.push(e);
+        }
+    }
+    let node_weight: Vec<_> = nodes.iter().map(|&u| hg.node_weight(u)).collect();
+    let total_weight = node_weight.iter().sum();
+    let (node_offsets, incident_nets) = build_incidence(nodes.len(), &net_offsets, &pins);
+    let sub = Hypergraph {
+        net_offsets,
+        pins,
+        node_offsets,
+        incident_nets,
+        node_weight,
+        net_weight,
+        total_weight,
+    };
+    (Subhypergraph { hg: sub, sub_to_parent: nodes.to_vec() }, parent_net)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn extract_node_set_basic() {
+        let hg = Hypergraph::from_nets(
+            6,
+            &[vec![0, 1, 2], vec![2, 3], vec![3, 4, 5], vec![0, 5]],
+            None,
+            None,
+        );
+        let (sub, parents) = extract_node_set(&hg, &[1, 2, 3]);
+        // surviving nets: {0,1,2}∩ = {1,2}, {2,3}∩ = {2,3}; others ≤1 pin
+        assert_eq!(sub.hg.num_nodes(), 3);
+        assert_eq!(sub.hg.num_nets(), 2);
+        assert_eq!(parents.len(), 2);
+        assert!(parents.contains(&0) && parents.contains(&1));
+        assert_eq!(sub.sub_to_parent, vec![1, 2, 3]);
+        sub.hg.validate().unwrap();
+    }
+}

@@ -1,0 +1,179 @@
+//! The initial partitioning phase (paper §5): parallel recursive
+//! bipartitioning with work stealing, the adaptive imbalance ratio ε′
+//! (Equation 1), and the portfolio of flat bipartitioners.
+
+pub mod portfolio;
+
+use crate::coordinator::context::Context;
+use crate::hypergraph::{subhypergraph::extract_node_set, Hypergraph};
+use crate::parallel::TaskPool;
+use crate::{BlockId, NodeId, NodeWeight};
+use std::sync::atomic::{AtomicU32, Ordering};
+use std::sync::Arc;
+
+/// Adaptive imbalance ratio for bipartitioning a subhypergraph that will
+/// be divided into `k'` final blocks (Equation 1, paper §5):
+/// `ε' = ((1+ε)·(c(V)/k)·(k'/c(V')))^(1/⌈log₂ k'⌉) − 1`.
+pub fn adaptive_epsilon(
+    total_weight: NodeWeight,
+    sub_weight: NodeWeight,
+    k: usize,
+    k_sub: usize,
+    eps: f64,
+) -> f64 {
+    if k_sub <= 1 {
+        return eps;
+    }
+    let levels = (k_sub as f64).log2().ceil().max(1.0);
+    let base =
+        (1.0 + eps) * (total_weight as f64 / k as f64) * (k_sub as f64 / sub_weight.max(1) as f64);
+    (base.powf(1.0 / levels) - 1.0).max(0.0)
+}
+
+/// Compute an initial k-way partition of `hg` via parallel recursive
+/// bipartitioning over a work-stealing task pool (paper §5).
+pub fn initial_partition(hg: Arc<Hypergraph>, ctx: &Context) -> Vec<BlockId> {
+    let n = hg.num_nodes();
+    let result: Vec<AtomicU32> = (0..n).map(|_| AtomicU32::new(0)).collect();
+    let total_weight = hg.total_weight();
+    {
+        let result = &result;
+        let mut ctx2 = ctx.clone();
+        ctx2.ip_original_k = ctx.k;
+        let all_nodes: Vec<NodeId> = (0..n as NodeId).collect();
+        TaskPool::run(ctx.threads, move |pool| {
+            recurse(pool, hg, all_nodes, ctx2, total_weight, 0, result);
+        });
+    }
+    result.iter().map(|b| b.load(Ordering::Relaxed)).collect()
+}
+
+/// One recursion step: bipartition the node set, then recurse on both
+/// sides as independent pool tasks (dynamic load balancing, §5).
+fn recurse<'s>(
+    pool: &TaskPool<'s>,
+    hg: Arc<Hypergraph>,
+    nodes: Vec<NodeId>,
+    ctx: Context,
+    total_weight: NodeWeight,
+    block_offset: u32,
+    result: &'s [AtomicU32],
+) {
+    let k_sub = ctx.k;
+    if k_sub <= 1 || nodes.len() <= 1 {
+        for &u in &nodes {
+            result[u as usize].store(block_offset, Ordering::Relaxed);
+        }
+        return;
+    }
+    // extract the induced subhypergraph of this recursion branch
+    let (sub, _) = extract_node_set(&hg, &nodes);
+    let sub_hg = Arc::new(sub.hg);
+    let sub_to_parent = sub.sub_to_parent;
+
+    // ε′-adapted side weight limits (Equation 1)
+    let k0 = (k_sub + 1) / 2; // ⌈k'/2⌉ final blocks on side 0
+    let k1 = k_sub / 2;
+    let eps_prime =
+        adaptive_epsilon(total_weight, sub_hg.total_weight(), ctx.k_original(), k_sub, ctx.epsilon);
+    let per_final_block = sub_hg.total_weight() as f64 / k_sub as f64;
+    let max0 = ((1.0 + eps_prime) * per_final_block * k0 as f64).floor() as NodeWeight;
+    let max1 = ((1.0 + eps_prime) * per_final_block * k1 as f64).floor() as NodeWeight;
+
+    let seed = crate::util::rng::hash2(ctx.seed ^ 0x1b17, block_offset as u64 ^ nodes.len() as u64);
+    let bi = portfolio::best_bipartition(&sub_hg, max0, max1, &ctx, seed);
+
+    let side0: Vec<NodeId> = (0..sub_hg.num_nodes())
+        .filter(|&u| bi.parts[u] == 0)
+        .map(|u| sub_to_parent[u])
+        .collect();
+    let side1: Vec<NodeId> = (0..sub_hg.num_nodes())
+        .filter(|&u| bi.parts[u] == 1)
+        .map(|u| sub_to_parent[u])
+        .collect();
+
+    // recurse in parallel (work stealing balances uneven sides)
+    let mut ctx0 = ctx.clone();
+    ctx0.k = k0;
+    let mut ctx1 = ctx;
+    ctx1.k = k1;
+    let hg0 = hg.clone();
+    pool.spawn(move |p| recurse(p, hg0, side0, ctx0, total_weight, block_offset, result));
+    pool.spawn(move |p| {
+        recurse(p, hg, side1, ctx1, total_weight, block_offset + k0 as u32, result)
+    });
+}
+
+// The recursion halves ctx.k; the ε′ formula needs the *original* k.
+// Stored once here to avoid threading another parameter everywhere.
+impl Context {
+    fn k_original(&self) -> usize {
+        // contraction_limit_factor never changes during recursion, and
+        // contraction_limit() = factor · original k at the top level; the
+        // recursion overwrites `k` only. We conservatively reconstruct the
+        // original k from the stored field set by the coordinator.
+        self.ip_original_k.max(self.k)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::context::{Context, Preset};
+    use crate::generators::{planted_hypergraph, PlantedParams};
+    use crate::metrics;
+
+    fn ctx(k: usize, threads: usize) -> Context {
+        let mut c = Context::new(Preset::Default, k, 0.03).with_threads(threads).with_seed(42);
+        c.ip_original_k = k;
+        c.ip_min_repetitions = 2;
+        c.ip_max_repetitions = 4;
+        c
+    }
+
+    #[test]
+    fn adaptive_epsilon_tightens_with_depth() {
+        // ε' for the first bipartition of a k=8 run is smaller than ε
+        // would naively allow at the leaves
+        let e_top = adaptive_epsilon(8000, 8000, 8, 8, 0.03);
+        let e_leaf = adaptive_epsilon(8000, 2000, 8, 2, 0.03);
+        assert!(e_top > 0.0 && e_top < 0.03);
+        assert!(e_leaf >= e_top, "leaves get looser ε': {e_leaf} vs {e_top}");
+    }
+
+    #[test]
+    fn produces_balanced_kway_partitions() {
+        for k in [2usize, 4, 7] {
+            for threads in [1, 4] {
+                let hg = Arc::new(planted_hypergraph(
+                    &PlantedParams { n: 280, m: 500, blocks: k, ..Default::default() },
+                    13,
+                ));
+                let parts = initial_partition(hg.clone(), &ctx(k, threads));
+                assert_eq!(parts.len(), 280);
+                let bw = metrics::block_weights_hg(&hg, &parts, k);
+                assert!(bw.iter().all(|&w| w > 0), "k={k} t={threads}: empty block {bw:?}");
+                let imb = metrics::imbalance(hg.total_weight(), k, &bw);
+                assert!(imb <= 0.03 + 1e-9, "k={k} t={threads}: imbalance {imb} {bw:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn recovers_planted_structure_reasonably() {
+        let k = 4;
+        let hg = Arc::new(planted_hypergraph(
+            &PlantedParams { n: 400, m: 900, blocks: k, p_intra: 0.95, ..Default::default() },
+            3,
+        ));
+        let parts = initial_partition(hg.clone(), &ctx(k, 2));
+        let km1 = metrics::km1(&hg, &parts, k);
+        // a random balanced 4-way partition cuts ~everything; planted
+        // structure should keep most nets internal
+        let total_nets = hg.num_nets() as i64;
+        assert!(
+            km1 < total_nets / 2,
+            "IP quality: km1 {km1} on {total_nets} nets"
+        );
+    }
+}

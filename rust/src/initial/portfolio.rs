@@ -1,0 +1,449 @@
+//! The portfolio of flat bipartitioning techniques (paper §5).
+//!
+//! Nine algorithms as in KaHyPar: random assignment, BFS growing, six
+//! greedy-hypergraph-growing variants (three selection policies × two
+//! gain functions), and label-propagation initial partitioning. Each is
+//! run at least 5 and at most 20 times; after 5 runs an algorithm is
+//! retired when `µ − 2σ` of its results exceeds the incumbent (the 95%
+//! rule). Every bipartition is polished with sequential 2-way FM.
+
+use crate::coordinator::context::Context;
+use crate::datastructures::AddressablePQ;
+use crate::hypergraph::Hypergraph;
+use crate::partition::PartitionedHypergraph;
+use crate::util::stats::RunningStats;
+use crate::util::Rng;
+use crate::{BlockId, Gain, NodeId, NodeWeight};
+use std::collections::VecDeque;
+use std::sync::Arc;
+
+/// Identifiers of the nine portfolio members.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Technique {
+    Random,
+    Bfs,
+    GreedyGlobalKm1,
+    GreedyGlobalCut,
+    GreedyRoundRobinKm1,
+    GreedyRoundRobinCut,
+    GreedySequentialKm1,
+    GreedySequentialCut,
+    LabelPropagation,
+}
+
+impl Technique {
+    pub fn all() -> [Technique; 9] {
+        [
+            Technique::Random,
+            Technique::Bfs,
+            Technique::GreedyGlobalKm1,
+            Technique::GreedyGlobalCut,
+            Technique::GreedyRoundRobinKm1,
+            Technique::GreedyRoundRobinCut,
+            Technique::GreedySequentialKm1,
+            Technique::GreedySequentialCut,
+            Technique::LabelPropagation,
+        ]
+    }
+}
+
+/// Result of a portfolio run.
+pub struct Bipartition {
+    pub parts: Vec<BlockId>,
+    pub km1: i64,
+    pub imbalance: f64,
+}
+
+/// Bipartition `hg` with side weight limits `max0`/`max1` using the full
+/// adaptive portfolio; returns the best result found.
+pub fn best_bipartition(
+    hg: &Arc<Hypergraph>,
+    max0: NodeWeight,
+    max1: NodeWeight,
+    ctx: &Context,
+    seed: u64,
+) -> Bipartition {
+    let mut best: Option<Bipartition> = None;
+    let mut rng = Rng::new(seed);
+    // AOT spectral bipartitioner (L2 artifact) as the extra member
+    if ctx.use_spectral_ip {
+        if let Some(parts) = crate::runtime::spectral_bipartition(hg, max0, max1) {
+            let refined = polish(hg, parts, max0, max1, ctx, seed ^ 0x57ec);
+            best = Some(refined);
+        }
+    }
+    for tech in Technique::all() {
+        let mut stats = RunningStats::default();
+        for rep in 0..ctx.ip_max_repetitions {
+            // 95%-rule retirement after the minimum repetitions
+            if rep >= ctx.ip_min_repetitions {
+                if let Some(b) = &best {
+                    if stats.mean() - 2.0 * stats.stddev() > b.km1 as f64 {
+                        break;
+                    }
+                }
+            }
+            let run_seed = rng.next_u64();
+            let parts = run_technique(tech, hg, max0, max1, run_seed);
+            // polish with sequential 2-way FM (paper §5)
+            let refined = polish(hg, parts, max0, max1, ctx, run_seed);
+            stats.push(refined.km1 as f64);
+            let better = match &best {
+                None => true,
+                Some(b) => {
+                    // prefer feasible, then objective, then balance
+                    let bf = b.imbalance <= 0.0;
+                    let rf = refined.imbalance <= 0.0;
+                    (rf && !bf)
+                        || (rf == bf
+                            && (refined.km1 < b.km1
+                                || (refined.km1 == b.km1 && refined.imbalance < b.imbalance)))
+                }
+            };
+            if better {
+                best = Some(refined);
+            }
+        }
+    }
+    best.expect("portfolio always produces a bipartition")
+}
+
+/// Run one flat technique; result may be unbalanced (polish/FM fixes it
+/// or the portfolio selection penalizes it).
+pub fn run_technique(
+    tech: Technique,
+    hg: &Hypergraph,
+    max0: NodeWeight,
+    max1: NodeWeight,
+    seed: u64,
+) -> Vec<BlockId> {
+    match tech {
+        Technique::Random => random_assignment(hg, max0, seed),
+        Technique::Bfs => bfs_growing(hg, max0, max1, seed),
+        Technique::GreedyGlobalKm1 => greedy_growing(hg, max0, max1, seed, Policy::Global, true),
+        Technique::GreedyGlobalCut => greedy_growing(hg, max0, max1, seed, Policy::Global, false),
+        Technique::GreedyRoundRobinKm1 => {
+            greedy_growing(hg, max0, max1, seed, Policy::RoundRobin, true)
+        }
+        Technique::GreedyRoundRobinCut => {
+            greedy_growing(hg, max0, max1, seed, Policy::RoundRobin, false)
+        }
+        Technique::GreedySequentialKm1 => {
+            greedy_growing(hg, max0, max1, seed, Policy::Sequential, true)
+        }
+        Technique::GreedySequentialCut => {
+            greedy_growing(hg, max0, max1, seed, Policy::Sequential, false)
+        }
+        Technique::LabelPropagation => lp_ip(hg, max0, max1, seed),
+    }
+}
+
+fn polish(
+    hg: &Arc<Hypergraph>,
+    parts: Vec<BlockId>,
+    max0: NodeWeight,
+    max1: NodeWeight,
+    ctx: &Context,
+    seed: u64,
+) -> Bipartition {
+    let mut phg = PartitionedHypergraph::new(hg.clone(), 2);
+    phg.set_max_weights(vec![max0, max1]);
+    phg.assign_all(&parts, 1);
+    let mut fm_ctx = ctx.clone();
+    fm_ctx.threads = 1;
+    fm_ctx.seed = seed;
+    fm_ctx.fm_max_rounds = 1;
+    crate::refinement::fm::fm_refine(&phg, &fm_ctx);
+    let km1 = phg.km1();
+    // imbalance relative to the *given* limits (≤ 0 means feasible)
+    let over0 = phg.block_weight(0) - max0;
+    let over1 = phg.block_weight(1) - max1;
+    Bipartition {
+        parts: phg.parts(),
+        km1,
+        imbalance: over0.max(over1) as f64 / hg.total_weight() as f64,
+    }
+}
+
+/// Random assignment: shuffle nodes, fill block 0 to ~half weight.
+fn random_assignment(hg: &Hypergraph, max0: NodeWeight, seed: u64) -> Vec<BlockId> {
+    let n = hg.num_nodes();
+    let mut order: Vec<u32> = (0..n as u32).collect();
+    Rng::new(seed).shuffle(&mut order);
+    let target0 = (hg.total_weight() / 2).min(max0);
+    let mut parts = vec![1 as BlockId; n];
+    let mut w0 = 0;
+    for &u in &order {
+        if w0 + hg.node_weight(u) <= target0 {
+            parts[u as usize] = 0;
+            w0 += hg.node_weight(u);
+        }
+    }
+    parts
+}
+
+/// BFS growing: grow block 0 from a random seed until half weight.
+fn bfs_growing(hg: &Hypergraph, max0: NodeWeight, _max1: NodeWeight, seed: u64) -> Vec<BlockId> {
+    let n = hg.num_nodes();
+    let mut rng = Rng::new(seed);
+    let start = rng.next_below(n.max(1)) as NodeId;
+    let target0 = (hg.total_weight() / 2).min(max0);
+    let mut parts = vec![1 as BlockId; n];
+    let mut visited = vec![false; n];
+    let mut q = VecDeque::new();
+    visited[start as usize] = true;
+    q.push_back(start);
+    let mut w0 = 0;
+    while w0 < target0 {
+        let Some(u) = q.pop_front() else {
+            // disconnected: jump to a fresh node
+            match (0..n).find(|&v| !visited[v]) {
+                Some(v) => {
+                    visited[v] = true;
+                    q.push_back(v as NodeId);
+                    continue;
+                }
+                None => break,
+            }
+        };
+        if w0 + hg.node_weight(u) > target0 {
+            continue;
+        }
+        parts[u as usize] = 0;
+        w0 += hg.node_weight(u);
+        for &e in hg.incident_nets(u) {
+            for &v in hg.pins(e) {
+                if !visited[v as usize] {
+                    visited[v as usize] = true;
+                    q.push_back(v);
+                }
+            }
+        }
+    }
+    parts
+}
+
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum Policy {
+    /// always take the global max-gain node
+    Global,
+    /// alternate between taking max-gain and BFS-order nodes
+    RoundRobin,
+    /// take nodes in discovery order (cheapest)
+    Sequential,
+}
+
+/// Greedy hypergraph growing (paper §5 / KaHyPar's GHG family): grow
+/// block 0 from a seed, selecting boundary nodes by gain.
+fn greedy_growing(
+    hg: &Hypergraph,
+    max0: NodeWeight,
+    _max1: NodeWeight,
+    seed: u64,
+    policy: Policy,
+    km1_gain: bool,
+) -> Vec<BlockId> {
+    let n = hg.num_nodes();
+    let mut rng = Rng::new(seed);
+    let start = rng.next_below(n.max(1)) as NodeId;
+    let target0 = (hg.total_weight() / 2).min(max0);
+    let mut parts = vec![1 as BlockId; n];
+    let mut in_queue = vec![false; n];
+    let mut pq = AddressablePQ::new();
+    let mut fifo: VecDeque<NodeId> = VecDeque::new();
+    // pins already in block 0 per net (for gain evaluation)
+    let mut pins0: Vec<u32> = vec![0; hg.num_nets()];
+
+    let gain_of = |u: NodeId, pins0: &[u32], hg: &Hypergraph| -> Gain {
+        let mut g = 0;
+        for &e in hg.incident_nets(u) {
+            let sz = hg.net_size(e) as u32;
+            let p0 = pins0[e as usize];
+            if km1_gain {
+                // km1: moving u into block 0 uncuts e when u is the last
+                // remaining block-1 pin; cuts it when it is the first
+                if p0 + 1 == sz {
+                    g += hg.net_weight(e);
+                } else if p0 == 0 {
+                    g -= hg.net_weight(e);
+                }
+            } else {
+                // max-net (cut-style): prefer nets with many pins inside
+                g += (p0 as i64 * hg.net_weight(e)) / sz as i64;
+            }
+        }
+        g
+    };
+
+    let enqueue = |u: NodeId,
+                       pq: &mut AddressablePQ,
+                       fifo: &mut VecDeque<NodeId>,
+                       in_queue: &mut [bool],
+                       pins0: &[u32]| {
+        if !in_queue[u as usize] {
+            in_queue[u as usize] = true;
+            pq.insert(u, gain_of(u, pins0, hg));
+            fifo.push_back(u);
+        }
+    };
+    enqueue(start, &mut pq, &mut fifo, &mut in_queue, &pins0);
+
+    let mut w0 = 0;
+    let mut step = 0usize;
+    while w0 < target0 {
+        let next = match policy {
+            Policy::Global => pq.pop_max().map(|(u, _)| u),
+            Policy::RoundRobin => {
+                step += 1;
+                if step % 2 == 0 {
+                    pq.pop_max().map(|(u, _)| u)
+                } else {
+                    fifo.pop_front()
+                }
+            }
+            Policy::Sequential => fifo.pop_front(),
+        };
+        let Some(u) = next else {
+            // disconnected: restart from an unvisited node
+            match (0..n).find(|&v| parts[v] == 1 && !in_queue[v]) {
+                Some(v) => {
+                    enqueue(v as NodeId, &mut pq, &mut fifo, &mut in_queue, &pins0);
+                    continue;
+                }
+                None => break,
+            }
+        };
+        if parts[u as usize] == 0 {
+            continue; // already assigned via the other queue
+        }
+        if w0 + hg.node_weight(u) > target0 {
+            continue;
+        }
+        parts[u as usize] = 0;
+        w0 += hg.node_weight(u);
+        for &e in hg.incident_nets(u) {
+            pins0[e as usize] += 1;
+            for &v in hg.pins(e) {
+                if parts[v as usize] == 1 {
+                    if in_queue[v as usize] {
+                        pq.adjust(v, gain_of(v, &pins0, hg));
+                    } else {
+                        enqueue(v, &mut pq, &mut fifo, &mut in_queue, &pins0);
+                    }
+                }
+            }
+        }
+    }
+    parts
+}
+
+/// Label propagation initial partitioning: two random seeds, then LP
+/// rounds where unassigned nodes adopt the majority side of their nets.
+fn lp_ip(hg: &Hypergraph, max0: NodeWeight, max1: NodeWeight, seed: u64) -> Vec<BlockId> {
+    let n = hg.num_nodes();
+    let mut rng = Rng::new(seed);
+    let mut parts = vec![crate::INVALID_BLOCK; n];
+    let s0 = rng.next_below(n.max(1));
+    let mut s1 = rng.next_below(n.max(1));
+    if n > 1 {
+        while s1 == s0 {
+            s1 = rng.next_below(n);
+        }
+    }
+    parts[s0] = 0;
+    parts[s1] = 1;
+    let mut weights = [hg.node_weight(s0 as NodeId), hg.node_weight(s1 as NodeId)];
+    let caps = [max0, max1];
+    for _ in 0..5 {
+        let mut changed = false;
+        for u in 0..n {
+            if parts[u] != crate::INVALID_BLOCK {
+                continue;
+            }
+            let mut score = [0i64, 0i64];
+            for &e in hg.incident_nets(u as NodeId) {
+                for &v in hg.pins(e) {
+                    let pv = parts[v as usize];
+                    if pv == 0 || pv == 1 {
+                        score[pv as usize] += hg.net_weight(e);
+                    }
+                }
+            }
+            if score[0] == 0 && score[1] == 0 {
+                continue;
+            }
+            let b = usize::from(!(score[0] >= score[1]));
+            let b = if weights[b] + hg.node_weight(u as NodeId) <= caps[b] { b } else { 1 - b };
+            parts[u] = b as BlockId;
+            weights[b] += hg.node_weight(u as NodeId);
+            changed = true;
+        }
+        if !changed {
+            break;
+        }
+    }
+    // unassigned leftovers go to the lighter side
+    for p in parts.iter_mut() {
+        if *p == crate::INVALID_BLOCK {
+            let b = usize::from(weights[0] > weights[1]);
+            *p = b as BlockId;
+        }
+    }
+    parts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::context::{Context, Preset};
+    use crate::generators::{planted_hypergraph, PlantedParams};
+
+    fn ctx() -> Context {
+        Context::new(Preset::Default, 2, 0.03).with_seed(3)
+    }
+
+    #[test]
+    fn all_techniques_produce_two_sides() {
+        let hg = Arc::new(planted_hypergraph(
+            &PlantedParams { n: 120, m: 240, blocks: 2, ..Default::default() },
+            1,
+        ));
+        let half = (hg.total_weight() as f64 * 0.55) as NodeWeight;
+        for tech in Technique::all() {
+            let parts = run_technique(tech, &hg, half, half, 7);
+            assert_eq!(parts.len(), 120, "{tech:?}");
+            assert!(parts.iter().all(|&b| b <= 1), "{tech:?}");
+            let c0 = parts.iter().filter(|&&b| b == 0).count();
+            assert!(c0 > 0 && c0 < 120, "{tech:?} degenerate: {c0}");
+        }
+    }
+
+    #[test]
+    fn portfolio_beats_pure_random() {
+        let hg = Arc::new(planted_hypergraph(
+            &PlantedParams { n: 150, m: 350, blocks: 2, p_intra: 0.95, ..Default::default() },
+            5,
+        ));
+        let half = (hg.total_weight() as f64 * 0.52) as NodeWeight;
+        let best = best_bipartition(&hg, half, half, &ctx(), 11);
+        // random alone (unpolished)
+        let rand = run_technique(Technique::Random, &hg, half, half, 11);
+        let rand_km1 = crate::metrics::km1(&hg, &rand, 2);
+        assert!(best.km1 < rand_km1, "portfolio {} vs random {rand_km1}", best.km1);
+        assert!(best.imbalance <= 0.0, "feasible result expected");
+    }
+
+    #[test]
+    fn respects_weight_caps() {
+        let hg = Arc::new(planted_hypergraph(
+            &PlantedParams { n: 100, m: 200, blocks: 2, ..Default::default() },
+            9,
+        ));
+        let max0 = hg.total_weight() * 6 / 10;
+        let max1 = hg.total_weight() * 6 / 10;
+        let b = best_bipartition(&hg, max0, max1, &ctx(), 3);
+        let w0: i64 = (0..100).filter(|&u| b.parts[u] == 0).map(|_| 1).sum();
+        assert!(w0 <= max0);
+        assert!(hg.total_weight() - w0 <= max1);
+    }
+}

@@ -1,0 +1,283 @@
+//! Instance I/O: the hMetis hypergraph format and the Metis graph format
+//! used by the paper's benchmark sets, plus partition-file output.
+
+use crate::graph::Graph;
+use crate::hypergraph::Hypergraph;
+use crate::{BlockId, NodeId};
+use anyhow::{bail, Context, Result};
+use std::io::{BufRead, BufReader, Write};
+use std::path::Path;
+
+/// Read a hypergraph in hMetis format.
+///
+/// Header: `m n [fmt]` with fmt ∈ {“”, 1, 10, 11}: 1 = net weights,
+/// 10 = node weights, 11 = both. Node ids in the file are 1-based.
+pub fn read_hmetis(path: &Path) -> Result<Hypergraph> {
+    let file = std::fs::File::open(path).with_context(|| format!("open {path:?}"))?;
+    let mut lines = BufReader::new(file)
+        .lines()
+        .map(|l| l.map_err(anyhow::Error::from))
+        .filter(|l| l.as_ref().map(|s| !s.trim_start().starts_with('%') && !s.trim().is_empty()).unwrap_or(true));
+
+    let header = lines.next().context("empty hMetis file")??;
+    let head: Vec<usize> =
+        header.split_whitespace().map(|t| t.parse()).collect::<Result<_, _>>()?;
+    if head.len() < 2 {
+        bail!("bad hMetis header: {header}");
+    }
+    let (m, n) = (head[0], head[1]);
+    let fmt = head.get(2).copied().unwrap_or(0);
+    let has_net_w = fmt % 10 == 1;
+    let has_node_w = fmt / 10 == 1;
+
+    let mut nets = Vec::with_capacity(m);
+    let mut net_w = Vec::with_capacity(m);
+    for _ in 0..m {
+        let line = lines.next().context("truncated hMetis net section")??;
+        let mut toks = line.split_whitespace();
+        let w = if has_net_w {
+            toks.next().context("missing net weight")?.parse::<i64>()?
+        } else {
+            1
+        };
+        let pins: Vec<NodeId> = toks
+            .map(|t| t.parse::<u64>().map(|v| (v - 1) as NodeId))
+            .collect::<Result<_, _>>()?;
+        net_w.push(w);
+        nets.push(pins);
+    }
+    let node_w = if has_node_w {
+        let mut w = Vec::with_capacity(n);
+        for _ in 0..n {
+            let line = lines.next().context("truncated node-weight section")??;
+            w.push(line.trim().parse::<i64>()?);
+        }
+        Some(w)
+    } else {
+        None
+    };
+    Ok(Hypergraph::from_nets(n, &nets, node_w, Some(net_w)))
+}
+
+/// Write a hypergraph in hMetis format (with weights iff non-unit).
+pub fn write_hmetis(hg: &Hypergraph, path: &Path) -> Result<()> {
+    let mut out = std::io::BufWriter::new(std::fs::File::create(path)?);
+    let unit_nets = hg.nets().all(|e| hg.net_weight(e) == 1);
+    let unit_nodes = hg.nodes().all(|u| hg.node_weight(u) == 1);
+    let fmt = match (unit_nodes, unit_nets) {
+        (true, true) => String::new(),
+        (true, false) => " 1".into(),
+        (false, true) => " 10".into(),
+        (false, false) => " 11".into(),
+    };
+    writeln!(out, "{} {}{}", hg.num_nets(), hg.num_nodes(), fmt)?;
+    for e in hg.nets() {
+        let mut line = String::new();
+        if !unit_nets {
+            line.push_str(&format!("{} ", hg.net_weight(e)));
+        }
+        let pins: Vec<String> = hg.pins(e).iter().map(|&p| (p + 1).to_string()).collect();
+        line.push_str(&pins.join(" "));
+        writeln!(out, "{line}")?;
+    }
+    if !unit_nodes {
+        for u in hg.nodes() {
+            writeln!(out, "{}", hg.node_weight(u))?;
+        }
+    }
+    Ok(())
+}
+
+/// Read a graph in Metis format. Header: `n m [fmt [ncon]]`, fmt ∈
+/// {“”, 1 (edge weights), 10 (node weights), 11}. 1-based ids.
+pub fn read_metis(path: &Path) -> Result<Graph> {
+    let file = std::fs::File::open(path).with_context(|| format!("open {path:?}"))?;
+    let mut lines = BufReader::new(file)
+        .lines()
+        .map(|l| l.map_err(anyhow::Error::from))
+        .filter(|l| l.as_ref().map(|s| !s.trim_start().starts_with('%') && !s.trim().is_empty()).unwrap_or(true));
+
+    let header = lines.next().context("empty Metis file")??;
+    let head: Vec<usize> =
+        header.split_whitespace().map(|t| t.parse()).collect::<Result<_, _>>()?;
+    if head.len() < 2 {
+        bail!("bad Metis header: {header}");
+    }
+    let n = head[0];
+    let fmt = head.get(2).copied().unwrap_or(0);
+    let has_edge_w = fmt % 10 == 1;
+    let has_node_w = (fmt / 10) % 10 == 1;
+
+    let mut adj: Vec<Vec<(NodeId, i64)>> = vec![Vec::new(); n];
+    let mut node_w = vec![1i64; n];
+    for u in 0..n {
+        let line = lines.next().context("truncated Metis adjacency")??;
+        let mut toks = line.split_whitespace();
+        if has_node_w {
+            node_w[u] = toks.next().context("missing node weight")?.parse()?;
+        }
+        loop {
+            let Some(v_tok) = toks.next() else { break };
+            let v: u64 = v_tok.parse()?;
+            let w = if has_edge_w {
+                toks.next().context("missing edge weight")?.parse::<i64>()?
+            } else {
+                1
+            };
+            adj[u].push(((v - 1) as NodeId, w));
+        }
+    }
+    Ok(Graph::from_adjacency(&adj, Some(node_w)))
+}
+
+/// Write a partition as one block id per line (KaHyPar convention).
+pub fn write_partition(blocks: &[BlockId], path: &Path) -> Result<()> {
+    let mut out = std::io::BufWriter::new(std::fs::File::create(path)?);
+    for &b in blocks {
+        writeln!(out, "{b}")?;
+    }
+    Ok(())
+}
+
+/// Read a partition file.
+pub fn read_partition(path: &Path) -> Result<Vec<BlockId>> {
+    let file = std::fs::File::open(path)?;
+    BufReader::new(file)
+        .lines()
+        .map(|l| Ok(l?.trim().parse::<BlockId>()?))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hmetis_roundtrip_unit() {
+        let hg = Hypergraph::from_nets(5, &[vec![0, 1, 2], vec![2, 3], vec![3, 4]], None, None);
+        let dir = std::env::temp_dir().join("mtkahypar_io_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("unit.hgr");
+        write_hmetis(&hg, &p).unwrap();
+        let rd = read_hmetis(&p).unwrap();
+        assert_eq!(rd.num_nodes(), 5);
+        assert_eq!(rd.num_nets(), 3);
+        assert_eq!(rd.pins(0), &[0, 1, 2]);
+        rd.validate().unwrap();
+    }
+
+    #[test]
+    fn hmetis_roundtrip_weighted() {
+        let hg = Hypergraph::from_nets(
+            3,
+            &[vec![0, 1], vec![1, 2]],
+            Some(vec![4, 5, 6]),
+            Some(vec![7, 8]),
+        );
+        let dir = std::env::temp_dir().join("mtkahypar_io_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("weighted.hgr");
+        write_hmetis(&hg, &p).unwrap();
+        let rd = read_hmetis(&p).unwrap();
+        assert_eq!(rd.node_weight(2), 6);
+        assert_eq!(rd.net_weight(1), 8);
+        rd.validate().unwrap();
+    }
+
+    #[test]
+    fn metis_parse() {
+        let dir = std::env::temp_dir().join("mtkahypar_io_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("g.graph");
+        std::fs::write(&p, "% comment\n3 2\n2\n1 3\n2\n").unwrap();
+        let g = read_metis(&p).unwrap();
+        assert_eq!(g.num_nodes(), 3);
+        assert_eq!(g.num_edges(), 4);
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn partition_roundtrip() {
+        let dir = std::env::temp_dir().join("mtkahypar_io_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("part.txt");
+        write_partition(&[0, 1, 1, 0, 2], &p).unwrap();
+        assert_eq!(read_partition(&p).unwrap(), vec![0, 1, 1, 0, 2]);
+    }
+}
+
+/// Read a MatrixMarket coordinate file as a hypergraph (row-net model:
+/// rows become nets over their nonzero columns — the paper's SPM
+/// benchmark construction, §12).
+pub fn read_matrix_market(path: &Path) -> Result<Hypergraph> {
+    let file = std::fs::File::open(path).with_context(|| format!("open {path:?}"))?;
+    let mut lines = BufReader::new(file).lines();
+    let header = loop {
+        let line = lines.next().context("empty MatrixMarket file")??;
+        if !line.starts_with('%') {
+            break line;
+        }
+    };
+    let dims: Vec<usize> =
+        header.split_whitespace().map(|t| t.parse()).collect::<Result<_, _>>()?;
+    if dims.len() < 3 {
+        bail!("bad MatrixMarket size line: {header}");
+    }
+    let (rows, cols, nnz) = (dims[0], dims[1], dims[2]);
+    let mut nets: Vec<Vec<NodeId>> = vec![Vec::new(); rows];
+    let mut seen = 0usize;
+    for line in lines {
+        let line = line?;
+        let t = line.trim();
+        if t.is_empty() || t.starts_with('%') {
+            continue;
+        }
+        let mut it = t.split_whitespace();
+        let r: usize = it.next().context("row")?.parse()?;
+        let c: usize = it.next().context("col")?.parse()?;
+        if r == 0 || c == 0 || r > rows || c > cols {
+            bail!("entry ({r},{c}) out of bounds");
+        }
+        let pin = (c - 1) as NodeId;
+        if !nets[r - 1].contains(&pin) {
+            nets[r - 1].push(pin);
+        }
+        seen += 1;
+    }
+    if seen < nnz {
+        bail!("truncated MatrixMarket file: {seen}/{nnz} entries");
+    }
+    let nets: Vec<Vec<NodeId>> = nets.into_iter().filter(|n| n.len() >= 2).collect();
+    Ok(Hypergraph::from_nets(cols, &nets, None, None))
+}
+
+#[cfg(test)]
+mod mm_tests {
+    use super::*;
+
+    #[test]
+    fn matrix_market_row_net_model() {
+        let dir = std::env::temp_dir().join("mtkahypar_io_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("m.mtx");
+        std::fs::write(
+            &p,
+            "%%MatrixMarket matrix coordinate real general\n% comment\n3 4 6\n1 1 1.0\n1 2 2.0\n2 2 0.5\n2 3 1.5\n3 3 1.0\n3 4 2.5\n",
+        )
+        .unwrap();
+        let hg = read_matrix_market(&p).unwrap();
+        assert_eq!(hg.num_nodes(), 4); // columns
+        assert_eq!(hg.num_nets(), 3); // rows with ≥ 2 nonzeros
+        assert_eq!(hg.pins(0), &[0, 1]);
+        hg.validate().unwrap();
+    }
+
+    #[test]
+    fn matrix_market_rejects_truncation() {
+        let dir = std::env::temp_dir().join("mtkahypar_io_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("bad.mtx");
+        std::fs::write(&p, "%%MatrixMarket\n2 2 3\n1 1 1\n").unwrap();
+        assert!(read_matrix_market(&p).is_err());
+    }
+}

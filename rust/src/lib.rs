@@ -1,0 +1,80 @@
+//! # mtkahypar — Scalable High-Quality Hypergraph Partitioning
+//!
+//! A shared-memory multilevel (hyper)graph partitioning framework
+//! reproducing *"Scalable High-Quality Hypergraph Partitioning"*
+//! (Gottesbüren, Heuer, Maas, Sanders, Schlag — 2023), built as the L3
+//! (coordinator) layer of a Rust + JAX + Pallas three-layer stack.
+//!
+//! ## Architecture
+//!
+//! * **L3 (this crate)** — the full partitioning framework: parallel
+//!   clustering-based coarsening guided by community detection, initial
+//!   partitioning via work-stealing recursive bipartitioning over a
+//!   portfolio of techniques, and three refinement algorithms (label
+//!   propagation, parallel localized FM, parallel flow-based refinement),
+//!   plus the n-level scheme, a deterministic mode, and plain-graph
+//!   data-structure specializations.
+//! * **L2/L1 (build-time Python, `python/compile`)** — a spectral
+//!   bipartitioner and a dense gain-tile Pallas kernel, AOT-lowered to HLO
+//!   text and executed from [`runtime`] through the PJRT CPU client.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use mtkahypar::prelude::*;
+//!
+//! let hg = generators::planted_hypergraph(&PlantedParams::default(), 42);
+//! let ctx = Context::new(Preset::Default, /*k=*/ 8, /*eps=*/ 0.03).with_seed(42);
+//! let partition = partitioner::partition(&hg, &ctx);
+//! println!("km1 = {}", partition.km1());
+//! ```
+
+pub mod benchkit;
+pub mod coarsening;
+pub mod coordinator;
+pub mod datastructures;
+pub mod generators;
+pub mod graph;
+pub mod hypergraph;
+pub mod initial;
+pub mod io;
+pub mod metrics;
+pub mod nlevel;
+pub mod parallel;
+pub mod partition;
+pub mod preprocessing;
+pub mod refinement;
+pub mod runtime;
+pub mod util;
+
+/// Node identifier (index into the node arrays of a hypergraph).
+pub type NodeId = u32;
+/// Hyperedge (net) identifier.
+pub type EdgeId = u32;
+/// Block identifier of a k-way partition.
+pub type BlockId = u32;
+/// Node weight `c(v)`.
+pub type NodeWeight = i64;
+/// Net weight `ω(e)`.
+pub type EdgeWeight = i64;
+/// Gain value (change in the objective; may be negative).
+pub type Gain = i64;
+
+/// Sentinel for "no block assigned".
+pub const INVALID_BLOCK: BlockId = BlockId::MAX;
+/// Sentinel node id.
+pub const INVALID_NODE: NodeId = NodeId::MAX;
+/// Sentinel edge id.
+pub const INVALID_EDGE: EdgeId = EdgeId::MAX;
+
+/// Convenience re-exports for downstream users and the examples.
+pub mod prelude {
+    pub use crate::coordinator::context::{Context, Preset};
+    pub use crate::coordinator::partitioner;
+    pub use crate::generators::{self, PlantedParams};
+    pub use crate::graph::Graph;
+    pub use crate::hypergraph::Hypergraph;
+    pub use crate::metrics::Objective;
+    pub use crate::partition::PartitionedHypergraph;
+    pub use crate::{BlockId, EdgeId, Gain, NodeId};
+}

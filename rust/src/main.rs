@@ -1,0 +1,154 @@
+//! Mt-KaHyPar-rs command line interface.
+//!
+//! ```text
+//! mtkahypar --hgr instance.hgr -k 8 [-e 0.03] [--preset default]
+//!           [--threads 4] [--seed 0] [-o partition.out]
+//! mtkahypar --graph instance.graph -k 8 ...            # Metis format
+//! mtkahypar --demo                                      # synthetic demo
+//! ```
+
+use mtkahypar::coordinator::context::{Context, Preset};
+use mtkahypar::coordinator::partitioner;
+use mtkahypar::coordinator::report::PartitionReport;
+use mtkahypar::generators::{self, PlantedParams};
+use mtkahypar::graph::partitioner::partition_graph_arc;
+use mtkahypar::io;
+use std::path::PathBuf;
+use std::process::exit;
+use std::sync::Arc;
+use std::time::Instant;
+
+struct Args {
+    hgr: Option<PathBuf>,
+    graph: Option<PathBuf>,
+    demo: bool,
+    k: usize,
+    epsilon: f64,
+    preset: Preset,
+    threads: usize,
+    seed: u64,
+    out: Option<PathBuf>,
+}
+
+fn usage() -> ! {
+    eprintln!(
+        "usage: mtkahypar (--hgr FILE | --graph FILE | --demo) -k K [-e EPS] \
+         [--preset speed|default|default-flows|quality|quality-flows|deterministic] \
+         [--threads T] [--seed S] [-o OUT]"
+    );
+    exit(2)
+}
+
+fn parse_args() -> Args {
+    let mut args = Args {
+        hgr: None,
+        graph: None,
+        demo: false,
+        k: 2,
+        epsilon: 0.03,
+        preset: Preset::Default,
+        threads: 1,
+        seed: 0,
+        out: None,
+    };
+    let mut it = std::env::args().skip(1);
+    while let Some(a) = it.next() {
+        let mut next = |name: &str| {
+            it.next().unwrap_or_else(|| {
+                eprintln!("missing value for {name}");
+                usage()
+            })
+        };
+        match a.as_str() {
+            "--hgr" => args.hgr = Some(PathBuf::from(next("--hgr"))),
+            "--graph" => args.graph = Some(PathBuf::from(next("--graph"))),
+            "--demo" => args.demo = true,
+            "-k" | "--blocks" => args.k = next("-k").parse().unwrap_or_else(|_| usage()),
+            "-e" | "--epsilon" => args.epsilon = next("-e").parse().unwrap_or_else(|_| usage()),
+            "--preset" => {
+                args.preset = match next("--preset").as_str() {
+                    "speed" => Preset::Speed,
+                    "default" => Preset::Default,
+                    "default-flows" => Preset::DefaultFlows,
+                    "quality" => Preset::Quality,
+                    "quality-flows" => Preset::QualityFlows,
+                    "deterministic" => Preset::Deterministic,
+                    other => {
+                        eprintln!("unknown preset {other}");
+                        usage()
+                    }
+                }
+            }
+            "--threads" | "-t" => {
+                args.threads = next("--threads").parse().unwrap_or_else(|_| usage())
+            }
+            "--seed" | "-s" => args.seed = next("--seed").parse().unwrap_or_else(|_| usage()),
+            "-o" | "--output" => args.out = Some(PathBuf::from(next("-o"))),
+            "-h" | "--help" => usage(),
+            other => {
+                eprintln!("unknown argument {other}");
+                usage()
+            }
+        }
+    }
+    if !args.demo && args.hgr.is_none() && args.graph.is_none() {
+        usage()
+    }
+    args
+}
+
+fn main() {
+    let args = parse_args();
+    let ctx = Context::new(args.preset, args.k, args.epsilon)
+        .with_seed(args.seed)
+        .with_threads(args.threads);
+
+    if let Some(path) = &args.graph {
+        let g = Arc::new(io::read_metis(path).unwrap_or_else(|e| {
+            eprintln!("error reading {path:?}: {e:#}");
+            exit(1)
+        }));
+        eprintln!("graph: n={} m={}", g.num_nodes(), g.num_edges() / 2);
+        let start = Instant::now();
+        let pg = partition_graph_arc(g, &ctx);
+        let secs = start.elapsed().as_secs_f64();
+        println!(
+            "edge cut = {}, imbalance = {:.4} ({}), time = {:.3}s",
+            pg.cut(),
+            pg.imbalance(),
+            if pg.is_balanced() { "balanced" } else { "IMBALANCED" },
+            secs
+        );
+        if let Some(out) = &args.out {
+            io::write_partition(&pg.parts(), out).expect("write partition");
+        }
+        return;
+    }
+
+    let hg = if args.demo {
+        eprintln!("running on a synthetic planted instance (use --hgr for real inputs)");
+        Arc::new(generators::planted_hypergraph(
+            &PlantedParams { n: 5000, m: 9000, blocks: args.k.max(2), ..Default::default() },
+            args.seed,
+        ))
+    } else {
+        let path = args.hgr.as_ref().unwrap();
+        Arc::new(io::read_hmetis(path).unwrap_or_else(|e| {
+            eprintln!("error reading {path:?}: {e:#}");
+            exit(1)
+        }))
+    };
+    eprintln!("hypergraph: n={} m={} pins={}", hg.num_nodes(), hg.num_nets(), hg.num_pins());
+    let start = Instant::now();
+    let phg = partitioner::partition_arc(hg, &ctx);
+    let secs = start.elapsed().as_secs_f64();
+    let report =
+        PartitionReport::from_partition(ctx.preset.name(), &phg, secs, ctx.timer.snapshot());
+    report.print();
+    if let Some(out) = &args.out {
+        io::write_partition(&phg.parts(), out).expect("write partition");
+    }
+    if !phg.is_balanced() {
+        exit(1);
+    }
+}

@@ -1,0 +1,140 @@
+//! Objective functions and from-scratch metric computation (paper §2).
+
+use crate::graph::Graph;
+use crate::hypergraph::Hypergraph;
+use crate::BlockId;
+
+/// Partitioning objective.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Objective {
+    /// cut-net metric f_c (edge cut for plain graphs)
+    Cut,
+    /// connectivity metric f_{λ−1}
+    Km1,
+}
+
+/// Connectivity metric computed from scratch.
+pub fn km1(hg: &Hypergraph, parts: &[BlockId], k: usize) -> i64 {
+    let mut total = 0;
+    let mut seen = vec![u32::MAX; k];
+    for e in hg.nets() {
+        let mut lambda = 0i64;
+        for &p in hg.pins(e) {
+            let b = parts[p as usize] as usize;
+            if seen[b] != e {
+                seen[b] = e;
+                lambda += 1;
+            }
+        }
+        total += (lambda - 1).max(0) * hg.net_weight(e);
+    }
+    total
+}
+
+/// Cut-net metric computed from scratch.
+pub fn cut(hg: &Hypergraph, parts: &[BlockId]) -> i64 {
+    let mut total = 0;
+    for e in hg.nets() {
+        let pins = hg.pins(e);
+        if pins.is_empty() {
+            continue;
+        }
+        let b0 = parts[pins[0] as usize];
+        if pins.iter().any(|&p| parts[p as usize] != b0) {
+            total += hg.net_weight(e);
+        }
+    }
+    total
+}
+
+/// Sum of external degrees.
+pub fn soed(hg: &Hypergraph, parts: &[BlockId], k: usize) -> i64 {
+    km1(hg, parts, k) + cut(hg, parts)
+}
+
+/// Edge cut of a plain graph.
+pub fn graph_cut(g: &Graph, parts: &[BlockId]) -> i64 {
+    let mut total = 0;
+    for u in g.nodes() {
+        for (v, w) in g.neighbors(u) {
+            if u < v && parts[u as usize] != parts[v as usize] {
+                total += w;
+            }
+        }
+    }
+    total
+}
+
+/// Imbalance ε(Π) — and the per-block weights it derives from.
+pub fn imbalance(
+    total_weight: i64,
+    k: usize,
+    block_weights: &[i64],
+) -> f64 {
+    let per = total_weight as f64 / k as f64;
+    block_weights.iter().map(|&w| w as f64 / per - 1.0).fold(f64::MIN, f64::max)
+}
+
+/// Block weights of a partition over a hypergraph.
+pub fn block_weights_hg(hg: &Hypergraph, parts: &[BlockId], k: usize) -> Vec<i64> {
+    let mut bw = vec![0i64; k];
+    for u in hg.nodes() {
+        bw[parts[u as usize] as usize] += hg.node_weight(u);
+    }
+    bw
+}
+
+/// Block weights of a partition over a graph.
+pub fn block_weights_graph(g: &Graph, parts: &[BlockId], k: usize) -> Vec<i64> {
+    let mut bw = vec![0i64; k];
+    for u in g.nodes() {
+        bw[parts[u as usize] as usize] += g.node_weight(u);
+    }
+    bw
+}
+
+/// Objective value dispatcher.
+pub fn objective_hg(obj: Objective, hg: &Hypergraph, parts: &[BlockId], k: usize) -> i64 {
+    match obj {
+        Objective::Cut => cut(hg, parts),
+        Objective::Km1 => km1(hg, parts, k),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Hypergraph {
+        Hypergraph::from_nets(
+            7,
+            &[vec![0, 2], vec![0, 1, 3, 4], vec![3, 4, 6], vec![2, 5, 6]],
+            None,
+            None,
+        )
+    }
+
+    #[test]
+    fn matches_partition_structure() {
+        let hg = std::sync::Arc::new(tiny());
+        let parts: Vec<BlockId> = vec![0, 0, 0, 1, 1, 1, 1];
+        let phg = crate::partition::PartitionedHypergraph::new(hg.clone(), 2);
+        phg.assign_all(&parts, 1);
+        assert_eq!(km1(&hg, &parts, 2), phg.km1());
+        assert_eq!(cut(&hg, &parts), phg.cut());
+        assert_eq!(soed(&hg, &parts, 2), phg.soed());
+    }
+
+    #[test]
+    fn graph_cut_matches() {
+        let g = Graph::from_edges(4, &[(0, 1, 2), (1, 2, 3), (2, 3, 4)], None);
+        assert_eq!(graph_cut(&g, &[0, 0, 1, 1]), 3);
+        assert_eq!(graph_cut(&g, &[0, 1, 0, 1]), 9);
+    }
+
+    #[test]
+    fn imbalance_uniform() {
+        assert!((imbalance(8, 2, &[4, 4])).abs() < 1e-9);
+        assert!((imbalance(8, 2, &[6, 2]) - 0.5).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,272 @@
+//! The parallel n-level partitioning scheme (paper §9).
+//!
+//! Coarsening contracts *single nodes*: each pass computes the best
+//! contraction partner per node (heavy-edge rating, Algorithm 9.1),
+//! builds the contraction forest through the join protocol, and records
+//! the resulting sequence of individual contractions `(v, u)`.
+//! Uncoarsening reverts the sequence in **batches** of `b_max`
+//! contractions (paper's batch uncontractions); after each batch a
+//! *highly localized* LP + FM pass runs around the uncontracted nodes,
+//! and the finest level finishes with global FM (+ flows for Q-F).
+//!
+//! ## Adaptation note (documented in DESIGN.md)
+//! The paper maintains a dynamic hypergraph data structure so batch
+//! uncontractions mutate pin-lists in place (§9 "The Dynamic Hypergraph
+//! Data Structure"). Here each batch boundary *materializes* the
+//! corresponding static snapshot through the parallel contraction
+//! algorithm instead: identical hypergraphs and identical refinement
+//! semantics at every batch boundary, at O(p) per batch instead of
+//! O(batch) update cost. On this testbed (1 vCPU, medium instances) the
+//! constant is acceptable; the trade-off is recorded in EXPERIMENTS.md.
+
+use crate::coarsening::clustering;
+use crate::coordinator::context::Context;
+use crate::hypergraph::{contraction, Hypergraph};
+use crate::initial;
+use crate::partition::PartitionedHypergraph;
+use crate::preprocessing::{detect_communities, LouvainConfig};
+use crate::refinement::{flow, fm, lp};
+use crate::{BlockId, NodeId};
+use std::sync::Arc;
+
+/// One recorded single-node contraction: `v` contracted onto `u`
+/// (ids refer to the *input* hypergraph after path compression).
+#[derive(Clone, Copy, Debug)]
+pub struct SingleContraction {
+    pub v: NodeId,
+    pub u: NodeId,
+}
+
+/// n-level partitioning pipeline (Algorithm 9.1 + batch uncoarsening).
+pub fn partition(hg: Arc<Hypergraph>, ctx: &Context) -> PartitionedHypergraph {
+    let timer = ctx.timer.clone();
+    let n = hg.num_nodes();
+
+    let communities = if ctx.use_community_detection {
+        Some(timer.time("preprocessing", || {
+            detect_communities(
+                &hg,
+                &LouvainConfig {
+                    threads: ctx.threads,
+                    seed: ctx.seed,
+                    max_rounds: ctx.louvain_max_rounds,
+                    deterministic: ctx.deterministic,
+                    ..Default::default()
+                },
+            )
+        }))
+    } else {
+        None
+    };
+
+    // ---- n-level coarsening: record the single-contraction sequence ----
+    // rep_input[u]: current representative of input node u
+    let mut rep_input: Vec<NodeId> = (0..n as NodeId).collect();
+    let mut sequence: Vec<SingleContraction> = Vec::new();
+    let limit = ctx.contraction_limit().max(2 * ctx.k);
+    let cmax = ctx.max_cluster_weight(hg.total_weight());
+    let mut current = hg.clone();
+    // mapping input node -> node id of `current`
+    let mut input_to_cur: Vec<NodeId> = (0..n as NodeId).collect();
+    let mut comms = communities.clone();
+
+    timer.time("coarsening", || {
+        while current.num_nodes() > limit {
+            let n_before = current.num_nodes();
+            // per-node best partner = clustering pass (the paper's rating);
+            // each cluster yields |C|−1 single contractions onto its root
+            let rep = clustering::cluster(&current, ctx, comms.as_deref(), cmax, limit);
+            // record single contractions in input-node ids
+            // cur -> representative input witness
+            let mut witness: Vec<NodeId> = vec![crate::INVALID_NODE; current.num_nodes()];
+            for u in 0..n {
+                let c = input_to_cur[u];
+                if c != crate::INVALID_NODE
+                    && rep_input[u] == u as NodeId
+                    && witness[c as usize] == crate::INVALID_NODE
+                {
+                    witness[c as usize] = u as NodeId;
+                }
+            }
+            let mut pass_seq: Vec<SingleContraction> = Vec::new();
+            for v_cur in 0..current.num_nodes() {
+                let r_cur = rep[v_cur] as usize;
+                if r_cur != v_cur {
+                    let v_in = witness[v_cur];
+                    let u_in = witness[r_cur];
+                    debug_assert_ne!(v_in, crate::INVALID_NODE);
+                    pass_seq.push(SingleContraction { v: v_in, u: u_in });
+                }
+            }
+            let c = contraction::contract(&current, &rep, ctx.threads);
+            if n_before - c.coarse.num_nodes() <= (ctx.min_shrink * n_before as f64) as usize {
+                break; // pass discarded: nothing contracted meaningfully
+            }
+            for sc in &pass_seq {
+                rep_input[sc.v as usize] = sc.u;
+            }
+            sequence.extend(pass_seq);
+            // project community ids and the input mapping
+            if let Some(cm) = &comms {
+                let mut coarse = vec![0u32; c.coarse.num_nodes()];
+                for u in 0..n_before {
+                    coarse[c.fine_to_coarse[u] as usize] = cm[u];
+                }
+                comms = Some(coarse);
+            }
+            for u in 0..n {
+                let cur = input_to_cur[u];
+                if cur != crate::INVALID_NODE {
+                    input_to_cur[u] = c.fine_to_coarse[cur as usize];
+                }
+            }
+            current = Arc::new(c.coarse);
+        }
+    });
+
+    // ---- initial partitioning on the coarsest snapshot ----
+    let coarse_parts =
+        timer.time("initial_partitioning", || initial::initial_partition(current.clone(), ctx));
+    // partition of the input induced by the coarsest snapshot
+    let mut parts: Vec<BlockId> =
+        (0..n).map(|u| coarse_parts[input_to_cur[u] as usize]).collect();
+
+    // ---- batch uncoarsening (§9) ----
+    // revert the sequence in reverse order, b_max contractions per batch;
+    // at each batch boundary materialize the snapshot and refine locally
+    let b_max = ctx.nlevel_batch_size.max(1);
+    let mut remaining = sequence.len();
+    while remaining > 0 {
+        let batch_start = remaining.saturating_sub(b_max);
+        let batch = &sequence[batch_start..remaining];
+        remaining = batch_start;
+        // snapshot after `remaining` contractions: union-find over prefix
+        let mut rep_prefix: Vec<NodeId> = (0..n as NodeId).collect();
+        for c in &sequence[..remaining] {
+            rep_prefix[c.v as usize] = c.u;
+        }
+        // path-compress to roots
+        for u in 0..n {
+            let mut r = rep_prefix[u] as usize;
+            while rep_prefix[r] as usize != r {
+                r = rep_prefix[r] as usize;
+            }
+            rep_prefix[u] = r as NodeId;
+        }
+        let snap = contraction::contract(&hg, &rep_prefix, ctx.threads);
+        let snap_hg = Arc::new(snap.coarse);
+        // project the partition onto the snapshot (input-indexed `parts`
+        // is constant on every cluster of the *coarser* state, so any
+        // member witnesses its block)
+        let mut snap_parts: Vec<BlockId> = vec![0; snap_hg.num_nodes()];
+        for u in 0..n {
+            snap_parts[snap.fine_to_coarse[u] as usize] = parts[u];
+        }
+        let mut phg = PartitionedHypergraph::new(snap_hg.clone(), ctx.k);
+        phg.set_uniform_max_weight(ctx.epsilon);
+        phg.assign_all(&snap_parts, ctx.threads);
+
+        // localized refinement around the uncontracted nodes (§9)
+        let touched: Vec<NodeId> = {
+            let mut t: Vec<NodeId> = batch
+                .iter()
+                .flat_map(|c| [snap.fine_to_coarse[c.v as usize], snap.fine_to_coarse[c.u as usize]])
+                .collect();
+            t.sort_unstable();
+            t.dedup();
+            t
+        };
+        timer.time("localized_lp", || lp::lp_refine_localized(&phg, ctx, &touched));
+        if ctx.use_fm {
+            timer.time("localized_fm", || fm::fm_refine_with_seeds(&phg, ctx, Some(&touched)));
+        }
+        // write back through the snapshot mapping
+        let snap_result = phg.parts();
+        for u in 0..n {
+            parts[u] = snap_result[snap.fine_to_coarse[u] as usize];
+        }
+    }
+
+    // ---- finest level: global refinement (paper: global FM + flows) ----
+    let mut phg = PartitionedHypergraph::new(hg, ctx.k);
+    phg.set_uniform_max_weight(ctx.epsilon);
+    phg.assign_all(&parts, ctx.threads);
+    timer.time("label_propagation", || {
+        if ctx.deterministic {
+            lp::lp_refine_deterministic(&phg, ctx)
+        } else {
+            lp::lp_refine(&phg, ctx)
+        }
+    });
+    if ctx.use_fm {
+        timer.time("global_fm", || fm::fm_refine(&phg, ctx));
+    }
+    if ctx.use_flows {
+        timer.time("flows", || flow::flow_refine(&phg, ctx));
+    }
+    phg
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::context::{Context, Preset};
+    use crate::generators::{planted_hypergraph, PlantedParams};
+
+    fn ctx(preset: Preset, k: usize, threads: usize, seed: u64) -> Context {
+        let mut c = Context::new(preset, k, 0.03).with_threads(threads).with_seed(seed);
+        c.contraction_limit_factor = 24;
+        c.ip_min_repetitions = 2;
+        c.ip_max_repetitions = 3;
+        c.fm_max_rounds = 3;
+        c.nlevel_batch_size = 64;
+        c
+    }
+
+    #[test]
+    fn nlevel_end_to_end() {
+        let hg = Arc::new(planted_hypergraph(
+            &PlantedParams { n: 500, m: 900, blocks: 4, ..Default::default() },
+            31,
+        ));
+        let phg = partition(hg.clone(), &ctx(Preset::Quality, 4, 2, 31));
+        assert!(phg.is_balanced(), "imbalance {}", phg.imbalance());
+        phg.verify_consistency().unwrap();
+        assert!(phg.km1() < hg.num_nets() as i64 / 2);
+    }
+
+    #[test]
+    fn nlevel_with_flows() {
+        let hg = Arc::new(planted_hypergraph(
+            &PlantedParams { n: 300, m: 550, blocks: 2, ..Default::default() },
+            5,
+        ));
+        let phg = partition(hg, &ctx(Preset::QualityFlows, 2, 2, 5));
+        assert!(phg.is_balanced());
+        phg.verify_consistency().unwrap();
+    }
+
+    #[test]
+    fn nlevel_quality_competitive_with_multilevel() {
+        let mut q_total = 0i64;
+        let mut d_total = 0i64;
+        for seed in 0..3u64 {
+            let hg = Arc::new(planted_hypergraph(
+                &PlantedParams { n: 400, m: 800, blocks: 4, p_intra: 0.85, ..Default::default() },
+                seed,
+            ));
+            q_total += partition(hg.clone(), &ctx(Preset::Quality, 4, 2, seed)).km1();
+            d_total += crate::coordinator::partitioner::partition_arc(
+                hg,
+                &ctx(Preset::Default, 4, 2, seed),
+            )
+            .km1();
+        }
+        // Q should be within ~25% of D (typically better; paper: 1.9%
+        // median improvement of Q over D)
+        assert!(
+            (q_total as f64) <= d_total as f64 * 1.25 + 8.0,
+            "n-level {q_total} vs multilevel {d_total}"
+        );
+    }
+}

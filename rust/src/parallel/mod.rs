@@ -1,0 +1,226 @@
+//! Shared-memory parallelism substrate.
+//!
+//! The paper builds on TBB; the offline registry here has no TBB/rayon, so
+//! this module provides the primitives the framework needs on top of
+//! `std::thread::scope`:
+//!
+//! * [`parallel_for`] — dynamically load-balanced index-range loops
+//!   (atomic chunk counter, the pattern behind every "iterate over the
+//!   nodes in parallel" step of the paper),
+//! * [`parallel_chunks`] — static chunking with per-thread state,
+//! * [`prefix_sum`] / [`parallel_prefix_sum`] — the contraction
+//!   algorithm's adjacency-array construction primitive (paper §4.2),
+//! * [`par_sort_by_key`] — parallel merge sort used for fingerprint grouping,
+//! * [`TaskPool`] — a work-stealing task pool for the recursive
+//!   bipartitioning calls of initial partitioning (paper §5).
+
+pub mod pool;
+pub mod scan;
+pub mod sort;
+
+pub use pool::TaskPool;
+pub use scan::{parallel_prefix_sum, prefix_sum};
+pub use sort::par_sort_by_key;
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Effective number of worker threads for a requested `t`
+/// (clamped to at least 1).
+#[inline]
+pub fn effective_threads(t: usize) -> usize {
+    t.max(1)
+}
+
+/// Dynamically scheduled parallel loop over `0..n`.
+///
+/// Threads repeatedly grab chunks of size `chunk` via an atomic counter and
+/// call `f(i)` for each index. With `threads == 1` runs inline (no spawn),
+/// which keeps single-threaded runs cheap and deterministic.
+pub fn parallel_for<F>(n: usize, threads: usize, chunk: usize, f: F)
+where
+    F: Fn(usize) + Sync,
+{
+    let threads = effective_threads(threads).min(n.max(1));
+    if threads <= 1 || n <= chunk {
+        for i in 0..n {
+            f(i);
+        }
+        return;
+    }
+    let counter = AtomicUsize::new(0);
+    std::thread::scope(|s| {
+        for _ in 0..threads {
+            s.spawn(|| loop {
+                let start = counter.fetch_add(chunk, Ordering::Relaxed);
+                if start >= n {
+                    break;
+                }
+                let end = (start + chunk).min(n);
+                for i in start..end {
+                    f(i);
+                }
+            });
+        }
+    });
+}
+
+/// Default chunk size heuristic: keep ~8 chunks per thread but at least 64
+/// items per chunk to amortize the atomic.
+#[inline]
+pub fn auto_chunk(n: usize, threads: usize) -> usize {
+    (n / (effective_threads(threads) * 8)).max(64)
+}
+
+/// Convenience: `parallel_for` with the automatic chunk size.
+pub fn par_for_auto<F>(n: usize, threads: usize, f: F)
+where
+    F: Fn(usize) + Sync,
+{
+    parallel_for(n, threads, auto_chunk(n, threads), f)
+}
+
+/// Statically partition `0..n` into `threads` contiguous ranges and run
+/// `f(thread_id, start, end)` on each. Used where per-thread state matters
+/// (e.g. thread-local rating maps) or where determinism requires a static
+/// schedule (paper §11's "static load balancing").
+pub fn parallel_chunks<F>(n: usize, threads: usize, f: F)
+where
+    F: Fn(usize, usize, usize) + Sync,
+{
+    let threads = effective_threads(threads).min(n.max(1));
+    if threads <= 1 {
+        f(0, 0, n);
+        return;
+    }
+    let per = (n + threads - 1) / threads;
+    std::thread::scope(|s| {
+        for t in 0..threads {
+            let f = &f;
+            s.spawn(move || {
+                let start = t * per;
+                let end = ((t + 1) * per).min(n);
+                if start < end {
+                    f(t, start, end);
+                }
+            });
+        }
+    });
+}
+
+/// Parallel map over `0..n` producing a `Vec<T>` (each index written once).
+pub fn par_map<T, F>(n: usize, threads: usize, f: F) -> Vec<T>
+where
+    T: Send + Default + Clone,
+    F: Fn(usize) -> T + Sync,
+{
+    let mut out = vec![T::default(); n];
+    {
+        let slots = SharedSlice::new(&mut out);
+        par_for_auto(n, threads, |i| {
+            // SAFETY: each index written exactly once by one thread.
+            unsafe { slots.write(i, f(i)) };
+        });
+    }
+    out
+}
+
+/// A thin wrapper granting unsynchronized indexed writes into a slice from
+/// multiple threads. Callers must guarantee disjoint index sets — the same
+/// ownership argument the paper uses for its per-node arrays.
+pub struct SharedSlice<'a, T> {
+    ptr: *mut T,
+    len: usize,
+    _m: std::marker::PhantomData<&'a mut [T]>,
+}
+
+unsafe impl<T: Send> Sync for SharedSlice<'_, T> {}
+unsafe impl<T: Send> Send for SharedSlice<'_, T> {}
+
+impl<'a, T> SharedSlice<'a, T> {
+    pub fn new(slice: &'a mut [T]) -> Self {
+        SharedSlice { ptr: slice.as_mut_ptr(), len: slice.len(), _m: std::marker::PhantomData }
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Write `val` to index `i`.
+    ///
+    /// # Safety
+    /// No two threads may write the same index concurrently, and no one may
+    /// read it while being written.
+    #[inline]
+    pub unsafe fn write(&self, i: usize, val: T) {
+        debug_assert!(i < self.len);
+        unsafe { *self.ptr.add(i) = val };
+    }
+
+    /// Get a mutable reference to index `i` (same contract as `write`).
+    ///
+    /// # Safety
+    /// See [`SharedSlice::write`].
+    #[inline]
+    #[allow(clippy::mut_from_ref)]
+    pub unsafe fn get_mut(&self, i: usize) -> &mut T {
+        debug_assert!(i < self.len);
+        unsafe { &mut *self.ptr.add(i) }
+    }
+
+    /// Read index `i`.
+    ///
+    /// # Safety
+    /// The index must not be concurrently written.
+    #[inline]
+    pub unsafe fn read(&self, i: usize) -> &T {
+        debug_assert!(i < self.len);
+        unsafe { &*self.ptr.add(i) }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn parallel_for_covers_all() {
+        for threads in [1, 2, 4] {
+            let hits: Vec<AtomicU64> = (0..1000).map(|_| AtomicU64::new(0)).collect();
+            parallel_for(1000, threads, 16, |i| {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            });
+            assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+        }
+    }
+
+    #[test]
+    fn chunks_cover_disjointly() {
+        let hits: Vec<AtomicU64> = (0..103).map(|_| AtomicU64::new(0)).collect();
+        parallel_chunks(103, 4, |_, s, e| {
+            for i in s..e {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            }
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn par_map_matches_serial() {
+        let v = par_map(257, 4, |i| i * i);
+        assert_eq!(v, (0..257).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn empty_and_tiny() {
+        parallel_for(0, 4, 8, |_| panic!("no items"));
+        let v = par_map(1, 8, |i| i + 1);
+        assert_eq!(v, vec![1]);
+    }
+}

@@ -1,0 +1,151 @@
+//! A work-stealing task pool for recursive bipartitioning (paper §5).
+//!
+//! The paper generates "tasks that can be dynamically load balanced using
+//! work stealing" for the recursive calls after each bipartition. Tasks
+//! here are closures that may spawn further tasks into the same pool.
+//! Each worker owns a LIFO local stack (depth-first descent keeps the
+//! working set small) and steals FIFO from victims when idle — the classic
+//! Chase–Lev discipline realized with mutexed deques, which is plenty at
+//! the task granularity of bipartitioning calls (milliseconds).
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Condvar, Mutex};
+
+type Task<'scope> = Box<dyn FnOnce(&TaskPool<'scope>) + Send + 'scope>;
+
+/// Scoped work-stealing pool. Create with [`TaskPool::run`].
+pub struct TaskPool<'scope> {
+    queues: Vec<Mutex<VecDeque<Task<'scope>>>>,
+    /// tasks submitted but not yet finished
+    pending: AtomicUsize,
+    idle: Mutex<()>,
+    wake: Condvar,
+    threads: usize,
+}
+
+impl<'scope> TaskPool<'scope> {
+    /// Run `root` on a pool of `threads` workers; returns when the task
+    /// graph is fully drained.
+    pub fn run<F>(threads: usize, root: F)
+    where
+        F: FnOnce(&TaskPool<'scope>) + Send + 'scope,
+    {
+        let threads = threads.max(1);
+        let pool = TaskPool {
+            queues: (0..threads).map(|_| Mutex::new(VecDeque::new())).collect(),
+            pending: AtomicUsize::new(0),
+            idle: Mutex::new(()),
+            wake: Condvar::new(),
+            threads,
+        };
+        pool.spawn(root);
+        if threads == 1 {
+            pool.worker(0);
+            return;
+        }
+        std::thread::scope(|s| {
+            let pool = &pool;
+            for t in 0..threads {
+                s.spawn(move || pool.worker(t));
+            }
+        });
+    }
+
+    /// Number of workers in the pool.
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Submit a task (callable from inside running tasks).
+    pub fn spawn<F>(&self, f: F)
+    where
+        F: FnOnce(&TaskPool<'scope>) + Send + 'scope,
+    {
+        self.pending.fetch_add(1, Ordering::SeqCst);
+        // push onto the shortest-queue heuristic: just use queue 0..t round robin
+        let idx = self.pending.load(Ordering::Relaxed) % self.queues.len();
+        self.queues[idx].lock().unwrap().push_back(Box::new(f));
+        self.wake.notify_all();
+    }
+
+    fn pop_or_steal(&self, me: usize) -> Option<Task<'scope>> {
+        if let Some(t) = self.queues[me].lock().unwrap().pop_back() {
+            return Some(t);
+        }
+        for off in 1..self.queues.len() {
+            let victim = (me + off) % self.queues.len();
+            if let Some(t) = self.queues[victim].lock().unwrap().pop_front() {
+                return Some(t);
+            }
+        }
+        None
+    }
+
+    fn worker(&self, me: usize) {
+        loop {
+            if let Some(task) = self.pop_or_steal(me) {
+                task(self);
+                let left = self.pending.fetch_sub(1, Ordering::SeqCst) - 1;
+                if left == 0 {
+                    self.wake.notify_all();
+                }
+            } else {
+                if self.pending.load(Ordering::SeqCst) == 0 {
+                    return;
+                }
+                // brief blocking wait to avoid a hot spin while other
+                // workers hold the remaining tasks
+                let guard = self.idle.lock().unwrap();
+                let _g = self
+                    .wake
+                    .wait_timeout(guard, std::time::Duration::from_micros(100))
+                    .unwrap();
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn runs_recursive_task_tree() {
+        for threads in [1, 2, 4] {
+            let count = AtomicU64::new(0);
+            let countr = &count;
+            // binary recursion to depth 8 => 2^9 - 1 tasks
+            fn rec<'s>(pool: &TaskPool<'s>, depth: usize, count: &'s AtomicU64) {
+                count.fetch_add(1, Ordering::Relaxed);
+                if depth > 0 {
+                    pool.spawn(move |p| rec(p, depth - 1, count));
+                    pool.spawn(move |p| rec(p, depth - 1, count));
+                }
+            }
+            TaskPool::run(threads, move |p| rec(p, 8, countr));
+            assert_eq!(count.load(Ordering::Relaxed), (1 << 9) - 1);
+        }
+    }
+
+    #[test]
+    fn uneven_tasks_complete() {
+        let done = AtomicU64::new(0);
+        let doner = &done;
+        TaskPool::run(4, move |p| {
+            for i in 0..64u64 {
+                p.spawn(move |_| {
+                    // simulate skewed work
+                    let mut x = 0u64;
+                    for j in 0..(i % 7) * 1000 {
+                        x = x.wrapping_add(j);
+                    }
+                    std::hint::black_box(x);
+                    doner.fetch_add(1, Ordering::Relaxed);
+                });
+            }
+        });
+        assert_eq!(done.load(Ordering::Relaxed), 64);
+    }
+}

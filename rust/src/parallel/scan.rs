@@ -1,0 +1,89 @@
+//! Prefix sums — the workhorse of the parallel contraction algorithm
+//! (paper §4.2: "using parallel prefix sum operations to construct the
+//! adjacency arrays of the contracted hypergraph").
+
+use super::{effective_threads, parallel_chunks};
+
+/// Sequential exclusive prefix sum over `xs`, returning the total.
+/// `xs[i]` becomes the sum of the original `xs[0..i]`.
+pub fn prefix_sum(xs: &mut [u64]) -> u64 {
+    let mut acc = 0u64;
+    for x in xs.iter_mut() {
+        let v = *x;
+        *x = acc;
+        acc += v;
+    }
+    acc
+}
+
+/// Parallel exclusive prefix sum (two-pass block scan). Falls back to the
+/// sequential version for small inputs or one thread.
+pub fn parallel_prefix_sum(xs: &mut [u64], threads: usize) -> u64 {
+    let n = xs.len();
+    let threads = effective_threads(threads);
+    if threads <= 1 || n < 1 << 14 {
+        return prefix_sum(xs);
+    }
+    let nblocks = threads;
+    let per = (n + nblocks - 1) / nblocks;
+    let mut block_sums = vec![0u64; nblocks];
+    {
+        let sums = super::SharedSlice::new(&mut block_sums);
+        let data = super::SharedSlice::new(xs);
+        parallel_chunks(n, nblocks, |t, s, e| {
+            let mut acc = 0u64;
+            for i in s..e {
+                // SAFETY: contiguous disjoint ranges per thread.
+                unsafe {
+                    let v = *data.read(i);
+                    data.write(i, acc);
+                    acc += v;
+                }
+            }
+            unsafe { sums.write(t, acc) };
+        });
+        let _ = per;
+    }
+    let total = prefix_sum(&mut block_sums);
+    {
+        let data = super::SharedSlice::new(xs);
+        let sums = &block_sums;
+        parallel_chunks(n, nblocks, |t, s, e| {
+            let off = sums[t];
+            if off != 0 {
+                for i in s..e {
+                    unsafe { data.write(i, *data.read(i) + off) };
+                }
+            }
+        });
+    }
+    total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn sequential_basic() {
+        let mut xs = vec![3, 1, 4, 1, 5];
+        let total = prefix_sum(&mut xs);
+        assert_eq!(xs, vec![0, 3, 4, 8, 9]);
+        assert_eq!(total, 14);
+    }
+
+    #[test]
+    fn parallel_matches_sequential() {
+        let mut rng = Rng::new(1);
+        for &n in &[0usize, 1, 100, 1 << 14, (1 << 16) + 13] {
+            let orig: Vec<u64> = (0..n).map(|_| rng.next_below(100) as u64).collect();
+            let mut a = orig.clone();
+            let mut b = orig.clone();
+            let ta = prefix_sum(&mut a);
+            let tb = parallel_prefix_sum(&mut b, 4);
+            assert_eq!(ta, tb);
+            assert_eq!(a, b);
+        }
+    }
+}

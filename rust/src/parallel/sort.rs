@@ -1,0 +1,127 @@
+//! Parallel sorting — used for fingerprint grouping in identical-net
+//! detection (paper §4.2) and the deterministic group-by stages (§11).
+
+use super::effective_threads;
+
+/// Parallel stable sort by key: split into per-thread runs, sort each,
+/// then k-way merge. Falls back to `sort_by_key` for small inputs.
+pub fn par_sort_by_key<T, K, F>(xs: &mut [T], threads: usize, key: F)
+where
+    T: Send + Clone,
+    K: Ord,
+    F: Fn(&T) -> K + Sync,
+{
+    let n = xs.len();
+    let threads = effective_threads(threads);
+    if threads <= 1 || n < 1 << 13 {
+        xs.sort_by_key(key);
+        return;
+    }
+    let nruns = threads;
+    let per = (n + nruns - 1) / nruns;
+    // Sort disjoint runs in parallel.
+    {
+        let bounds: Vec<(usize, usize)> =
+            (0..nruns).map(|t| (t * per, ((t + 1) * per).min(n))).filter(|(s, e)| s < e).collect();
+        let ptr = SendPtr(xs.as_mut_ptr());
+        std::thread::scope(|s| {
+            for &(lo, hi) in &bounds {
+                let key = &key;
+                let ptr = ptr;
+                s.spawn(move || {
+                    let ptr = ptr; // capture the Send wrapper, not the raw field
+                    // SAFETY: runs are disjoint.
+                    let run = unsafe { std::slice::from_raw_parts_mut(ptr.0.add(lo), hi - lo) };
+                    run.sort_by_key(key);
+                });
+            }
+        });
+    }
+    // Iterative pairwise merge of sorted runs.
+    let mut runs: Vec<(usize, usize)> =
+        (0..nruns).map(|t| (t * per, ((t + 1) * per).min(n))).filter(|(s, e)| s < e).collect();
+    let mut buf: Vec<T> = xs.to_vec();
+    while runs.len() > 1 {
+        let mut next = Vec::with_capacity((runs.len() + 1) / 2);
+        let mut i = 0;
+        while i + 1 < runs.len() {
+            let (a_lo, a_hi) = runs[i];
+            let (b_lo, b_hi) = runs[i + 1];
+            debug_assert_eq!(a_hi, b_lo);
+            merge_into(&xs[a_lo..a_hi], &xs[b_lo..b_hi], &mut buf[a_lo..b_hi], &key);
+            xs[a_lo..b_hi].clone_from_slice(&buf[a_lo..b_hi]);
+            next.push((a_lo, b_hi));
+            i += 2;
+        }
+        if i < runs.len() {
+            next.push(runs[i]);
+        }
+        runs = next;
+    }
+}
+
+fn merge_into<T: Clone, K: Ord>(a: &[T], b: &[T], out: &mut [T], key: &impl Fn(&T) -> K) {
+    let (mut i, mut j, mut o) = (0, 0, 0);
+    while i < a.len() && j < b.len() {
+        if key(&a[i]) <= key(&b[j]) {
+            out[o] = a[i].clone();
+            i += 1;
+        } else {
+            out[o] = b[j].clone();
+            j += 1;
+        }
+        o += 1;
+    }
+    while i < a.len() {
+        out[o] = a[i].clone();
+        i += 1;
+        o += 1;
+    }
+    while j < b.len() {
+        out[o] = b[j].clone();
+        j += 1;
+        o += 1;
+    }
+}
+
+struct SendPtr<T>(*mut T);
+impl<T> Clone for SendPtr<T> {
+    fn clone(&self) -> Self {
+        SendPtr(self.0)
+    }
+}
+impl<T> Copy for SendPtr<T> {}
+unsafe impl<T> Send for SendPtr<T> {}
+unsafe impl<T> Sync for SendPtr<T> {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn matches_std_sort() {
+        let mut rng = Rng::new(3);
+        for &n in &[0usize, 1, 10, (1 << 13) + 7, 1 << 15] {
+            let orig: Vec<u64> = (0..n).map(|_| rng.next_u64() % 1000).collect();
+            let mut a = orig.clone();
+            let mut b = orig;
+            a.sort();
+            par_sort_by_key(&mut b, 4, |x| *x);
+            assert_eq!(a, b);
+        }
+    }
+
+    #[test]
+    fn stability() {
+        // sort pairs by first element only; second must keep insertion order
+        let mut xs: Vec<(u32, u32)> = (0..20_000).map(|i| ((i * 7) % 13, i)).collect();
+        par_sort_by_key(&mut xs, 4, |&(k, _)| k);
+        for w in xs.windows(2) {
+            assert!(w[0].0 <= w[1].0);
+            if w[0].0 == w[1].0 {
+                assert!(w[0].1 < w[1].1, "stability violated");
+            }
+        }
+    }
+}

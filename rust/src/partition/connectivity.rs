@@ -1,0 +1,113 @@
+//! Connectivity sets Λ(e) as per-net k-bit bitsets (paper §6.1).
+//!
+//! "We use a bitset of size k to store the connectivity set Λ(e). …
+//! To add or remove a block from the connectivity set, we flip the
+//! corresponding bit using an atomic xor operation"; λ(e) is a popcount
+//! over a snapshot.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Flat `m × ⌈k/64⌉` array of connectivity bitsets.
+pub struct ConnectivitySets {
+    words: Vec<AtomicU64>,
+    words_per_net: usize,
+    k: usize,
+}
+
+impl ConnectivitySets {
+    pub fn new(num_nets: usize, k: usize) -> Self {
+        let words_per_net = (k + 63) / 64;
+        ConnectivitySets {
+            words: (0..num_nets * words_per_net).map(|_| AtomicU64::new(0)).collect(),
+            words_per_net,
+            k,
+        }
+    }
+
+    #[inline]
+    fn base(&self, e: usize) -> usize {
+        e * self.words_per_net
+    }
+
+    /// Atomically toggle block `b` in Λ(e).
+    #[inline]
+    pub fn flip(&self, e: usize, b: usize) {
+        debug_assert!(b < self.k);
+        self.words[self.base(e) + b / 64].fetch_xor(1 << (b % 64), Ordering::AcqRel);
+    }
+
+    /// Is block `b` in Λ(e)?
+    #[inline]
+    pub fn contains(&self, e: usize, b: usize) -> bool {
+        (self.words[self.base(e) + b / 64].load(Ordering::Acquire) >> (b % 64)) & 1 == 1
+    }
+
+    /// λ(e) — popcount over a snapshot.
+    #[inline]
+    pub fn connectivity(&self, e: usize) -> u32 {
+        let base = self.base(e);
+        (0..self.words_per_net)
+            .map(|i| self.words[base + i].load(Ordering::Acquire).count_ones())
+            .sum()
+    }
+
+    /// Iterate the blocks of Λ(e) from a snapshot (count-trailing-zeros walk).
+    pub fn iter(&self, e: usize) -> impl Iterator<Item = usize> + '_ {
+        let base = self.base(e);
+        (0..self.words_per_net).flat_map(move |wi| {
+            let mut w = self.words[base + wi].load(Ordering::Acquire);
+            std::iter::from_fn(move || {
+                if w == 0 {
+                    None
+                } else {
+                    let b = w.trailing_zeros() as usize;
+                    w &= w - 1;
+                    Some(wi * 64 + b)
+                }
+            })
+        })
+    }
+
+    pub fn clear(&self) {
+        for w in &self.words {
+            w.store(0, Ordering::Relaxed);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flip_iter_count() {
+        let cs = ConnectivitySets::new(2, 130);
+        cs.flip(0, 0);
+        cs.flip(0, 64);
+        cs.flip(0, 129);
+        cs.flip(1, 5);
+        assert_eq!(cs.connectivity(0), 3);
+        assert_eq!(cs.connectivity(1), 1);
+        assert_eq!(cs.iter(0).collect::<Vec<_>>(), vec![0, 64, 129]);
+        assert!(cs.contains(0, 64));
+        cs.flip(0, 64);
+        assert!(!cs.contains(0, 64));
+        assert_eq!(cs.connectivity(0), 2);
+    }
+
+    #[test]
+    fn concurrent_flips_distinct_bits() {
+        let cs = ConnectivitySets::new(1, 64);
+        std::thread::scope(|s| {
+            for t in 0..4 {
+                let cs = &cs;
+                s.spawn(move || {
+                    for b in (t..64).step_by(4) {
+                        cs.flip(0, b);
+                    }
+                });
+            }
+        });
+        assert_eq!(cs.connectivity(0), 64);
+    }
+}

@@ -1,0 +1,241 @@
+//! Parallel gain recalculation (paper §6.3, Algorithm 6.2).
+//!
+//! Given a *sequence* of node moves `M = ⟨m_1 … m_l⟩` (each node moved at
+//! most once) and the partition state *after* applying all of them,
+//! recompute the exact gain each move would have had if the sequence were
+//! executed in order. Used by parallel FM to find the best prefix of the
+//! global move sequence (§7) without any sequential replay.
+//!
+//! Per hyperedge: the move that *last* leaves a block whose pins are all
+//! moved out (before anyone moves in) reduces connectivity; the move that
+//! *first* enters a block emptied that way increases it. Both are decided
+//! from `first_in` / `last_out` move indices and the non-moved pin counts.
+
+use super::PartitionedHypergraph;
+use crate::parallel::par_for_auto;
+use crate::util::AtomicBitset;
+use crate::{BlockId, EdgeId, Gain, NodeId};
+use std::sync::atomic::{AtomicI64, Ordering};
+
+/// One entry of a move sequence.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Move {
+    pub node: NodeId,
+    pub from: BlockId,
+    pub to: BlockId,
+}
+
+/// Recalculate the exact in-order gains of `moves` (Algorithm 6.2),
+/// parallel over the hyperedges touched by moved nodes.
+///
+/// `phg` must reflect the state *after* all moves were applied.
+pub fn recalculate_gains(
+    phg: &PartitionedHypergraph,
+    moves: &[Move],
+    threads: usize,
+) -> Vec<Gain> {
+    let hg = phg.hypergraph();
+    let k = phg.k();
+    let l = moves.len();
+    // move index per node (usize::MAX = unmoved)
+    let mut move_idx = vec![u32::MAX; hg.num_nodes()];
+    for (i, m) in moves.iter().enumerate() {
+        debug_assert_eq!(move_idx[m.node as usize], u32::MAX, "node moved twice");
+        move_idx[m.node as usize] = i as u32;
+    }
+    let gains: Vec<AtomicI64> = (0..l).map(|_| AtomicI64::new(0)).collect();
+    let processed = AtomicBitset::new(hg.num_nets());
+
+    par_for_auto(l, threads, |mi| {
+        let u = moves[mi].node;
+        for &e in hg.incident_nets(u) {
+            if processed.test_and_set(e as usize) {
+                continue; // another thread handles this net
+            }
+            process_net(phg, e, moves, &move_idx, &gains, k);
+        }
+    });
+    gains.into_iter().map(|g| g.into_inner()).collect()
+}
+
+/// Algorithm 6.2 for a single hyperedge.
+fn process_net(
+    phg: &PartitionedHypergraph,
+    e: EdgeId,
+    moves: &[Move],
+    move_idx: &[u32],
+    gains: &[AtomicI64],
+    k: usize,
+) {
+    let hg = phg.hypergraph();
+    let w = hg.net_weight(e);
+    let mut first_in = vec![u32::MAX; k];
+    let mut last_out = vec![i64::MIN; k];
+    let mut non_moved = vec![0u32; k];
+
+    for &u in hg.pins(e) {
+        let i = move_idx[u as usize];
+        if i != u32::MAX {
+            let m = moves[i as usize];
+            last_out[m.from as usize] = last_out[m.from as usize].max(i as i64);
+            first_in[m.to as usize] = first_in[m.to as usize].min(i);
+        } else {
+            non_moved[phg.block_of(u) as usize] += 1;
+        }
+    }
+
+    for &u in hg.pins(e) {
+        let i = move_idx[u as usize];
+        if i == u32::MAX {
+            continue;
+        }
+        let m = moves[i as usize];
+        let (vs, vt) = (m.from as usize, m.to as usize);
+        // connectivity decrease: u last out of V_s, emptied, before any in
+        if last_out[vs] == i as i64 && (i as u64) < first_in[vs] as u64 && non_moved[vs] == 0 {
+            gains[i as usize].fetch_add(w, Ordering::Relaxed);
+        }
+        // connectivity increase: u first into V_t after everyone left
+        if first_in[vt] == i && i as i64 > last_out[vt] && non_moved[vt] == 0 {
+            gains[i as usize].fetch_sub(w, Ordering::Relaxed);
+        }
+    }
+}
+
+/// Find the prefix of `gains` with the largest cumulative sum.
+/// Returns `(prefix_len, prefix_gain)` — `(0, 0)` if every prefix is
+/// non-positive. Ties pick the *longest* prefix achieving the maximum
+/// (more moves at equal quality help subsequent rounds escape plateaus).
+pub fn best_prefix(gains: &[Gain]) -> (usize, Gain) {
+    let mut best_len = 0;
+    let mut best_sum: Gain = 0;
+    let mut acc: Gain = 0;
+    for (i, &g) in gains.iter().enumerate() {
+        acc += g;
+        if acc >= best_sum && acc > 0 || (acc == best_sum && best_sum > 0) {
+            best_sum = acc;
+            best_len = i + 1;
+        }
+    }
+    (best_len, best_sum)
+}
+
+/// Revert the moves after the best prefix (in reverse order) and return
+/// `(prefix_len, prefix_gain)`. The partition afterwards reflects exactly
+/// `moves[..prefix_len]`.
+pub fn revert_to_best_prefix(
+    phg: &PartitionedHypergraph,
+    moves: &[Move],
+    gains: &[Gain],
+    gain_table: Option<&super::GainTable>,
+) -> (usize, Gain) {
+    let (len, total) = best_prefix(gains);
+    for m in moves[len..].iter().rev() {
+        phg.move_unchecked(m.node, m.from, gain_table);
+    }
+    (len, total)
+}
+
+/// Reference implementation: sequential replay of the move sequence from
+/// the pre-move state. Used by tests to validate Algorithm 6.2.
+pub fn replay_gains_reference(
+    phg_pre: &PartitionedHypergraph,
+    moves: &[Move],
+) -> Vec<Gain> {
+    moves
+        .iter()
+        .map(|m| {
+            let g = phg_pre.gain(m.node, m.to);
+            phg_pre.move_unchecked(m.node, m.to, None);
+            g
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hypergraph::Hypergraph;
+    use crate::util::Rng;
+    use std::sync::Arc;
+
+    fn random_instance(seed: u64) -> (Arc<Hypergraph>, Vec<BlockId>, usize) {
+        let mut rng = Rng::new(seed);
+        let n = 30;
+        let k = 3;
+        let m = 40;
+        let mut nets = Vec::new();
+        for _ in 0..m {
+            let sz = 2 + rng.next_below(4);
+            let pins: Vec<NodeId> =
+                rng.sample_indices(n, sz).into_iter().map(|x| x as NodeId).collect();
+            nets.push(pins);
+        }
+        let hg = Arc::new(Hypergraph::from_nets(n, &nets, None, None));
+        let parts: Vec<BlockId> = (0..n).map(|_| rng.next_below(k) as BlockId).collect();
+        (hg, parts, k)
+    }
+
+    #[test]
+    fn matches_sequential_replay() {
+        for seed in 0..20 {
+            let (hg, parts, k) = random_instance(seed);
+            let mut rng = Rng::new(seed ^ 0xabc);
+            // random move sequence, each node at most once
+            let mut moves = Vec::new();
+            let order = rng.sample_indices(hg.num_nodes(), 15);
+            for u in order {
+                let from = parts[u];
+                let to = ((from as usize + 1 + rng.next_below(k - 1)) % k) as BlockId;
+                moves.push(Move { node: u as NodeId, from, to });
+            }
+            // reference: replay from pre-state
+            let pre = PartitionedHypergraph::new(hg.clone(), k);
+            pre.assign_all(&parts, 1);
+            let expected = replay_gains_reference(&pre, &moves);
+            // Algorithm 6.2 on the post-state (pre is now post-replay)
+            for threads in [1, 4] {
+                let got = recalculate_gains(&pre, &moves, threads);
+                assert_eq!(got, expected, "seed {seed} threads {threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn best_prefix_examples() {
+        assert_eq!(best_prefix(&[]), (0, 0));
+        assert_eq!(best_prefix(&[-1, -2]), (0, 0));
+        assert_eq!(best_prefix(&[2, -1, 3, -10]), (3, 4));
+        assert_eq!(best_prefix(&[-1, 5]), (2, 4));
+        // longest prefix at equal max: [1, 0] -> len 2
+        assert_eq!(best_prefix(&[1, 0]), (2, 1));
+    }
+
+    #[test]
+    fn revert_restores_prefix_state() {
+        let (hg, parts, k) = random_instance(99);
+        let phg = PartitionedHypergraph::new(hg.clone(), k);
+        phg.assign_all(&parts, 1);
+        let km1_start = phg.km1();
+        let mut rng = Rng::new(1234);
+        let mut moves = Vec::new();
+        for u in rng.sample_indices(hg.num_nodes(), 12) {
+            let from = phg.block_of(u as NodeId);
+            let to = ((from as usize + 1) % k) as BlockId;
+            phg.move_unchecked(u as NodeId, to, None);
+            moves.push(Move { node: u as NodeId, from, to });
+        }
+        let gains = recalculate_gains(&phg, &moves, 2);
+        let (len, total) = revert_to_best_prefix(&phg, &moves, &gains, None);
+        phg.verify_consistency().unwrap();
+        assert_eq!(phg.km1(), km1_start - total, "prefix gain accounts exactly");
+        assert!(len <= moves.len());
+        // prefix moves are still applied
+        for m in &moves[..len] {
+            assert_eq!(phg.block_of(m.node), m.to);
+        }
+        for m in &moves[len..] {
+            assert_eq!(phg.block_of(m.node), m.from);
+        }
+    }
+}

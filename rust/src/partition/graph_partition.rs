@@ -1,0 +1,409 @@
+//! Graph-specialized partition data structure (paper §10.2).
+//!
+//! For plain graphs the pin counts and connectivity sets disappear: gains
+//! are computed on the fly from neighbor blocks (`g_u(t) = ω(u,t) −
+//! ω(u,Π[u])`), and attributed gains are synchronized per edge through a
+//! CAS array `B` of size m — the first endpoint to move wins the CAS and
+//! both endpoints account the edge consistently against `B[e]`.
+
+use crate::graph::Graph;
+use crate::parallel::par_for_auto;
+use crate::{BlockId, Gain, NodeId, NodeWeight};
+use std::sync::atomic::{AtomicI64, AtomicU32, Ordering};
+use std::sync::Arc;
+
+const UNSET: u32 = u32::MAX;
+
+/// A k-way partitioned plain graph.
+pub struct PartitionedGraph {
+    g: Arc<Graph>,
+    k: usize,
+    part: Vec<AtomicU32>,
+    block_weight: Vec<AtomicI64>,
+    max_block_weight: Vec<NodeWeight>,
+    /// undirected edge id per directed CSR slot
+    uedge: Vec<u32>,
+    num_uedges: usize,
+    /// `B` array (paper §10.2): target block of the first endpoint moved
+    edge_target: Vec<AtomicU32>,
+}
+
+impl PartitionedGraph {
+    pub fn new(g: Arc<Graph>, k: usize) -> Self {
+        let (uedge, num_uedges) = assign_undirected_ids(&g);
+        PartitionedGraph {
+            part: (0..g.num_nodes()).map(|_| AtomicU32::new(0)).collect(),
+            block_weight: (0..k).map(|_| AtomicI64::new(0)).collect(),
+            max_block_weight: vec![NodeWeight::MAX; k],
+            edge_target: (0..num_uedges).map(|_| AtomicU32::new(UNSET)).collect(),
+            uedge,
+            num_uedges,
+            g,
+            k,
+        }
+    }
+
+    pub fn set_uniform_max_weight(&mut self, eps: f64) {
+        let lmax = super::PartitionedHypergraph::max_weight_for(
+            self.g.total_weight(),
+            self.k,
+            eps,
+        );
+        self.max_block_weight = vec![lmax; self.k];
+    }
+
+    pub fn set_max_weights(&mut self, w: Vec<NodeWeight>) {
+        assert_eq!(w.len(), self.k);
+        self.max_block_weight = w;
+    }
+
+    pub fn assign_all(&self, parts: &[BlockId], threads: usize) {
+        assert_eq!(parts.len(), self.g.num_nodes());
+        for b in &self.block_weight {
+            b.store(0, Ordering::Relaxed);
+        }
+        par_for_auto(self.g.num_nodes(), threads, |u| {
+            self.part[u].store(parts[u], Ordering::Relaxed);
+            self.block_weight[parts[u] as usize]
+                .fetch_add(self.g.node_weight(u as NodeId), Ordering::Relaxed);
+        });
+        self.reset_edge_sync();
+    }
+
+    /// Reset the per-edge CAS array (start of each refinement round).
+    pub fn reset_edge_sync(&self) {
+        for t in &self.edge_target {
+            t.store(UNSET, Ordering::Relaxed);
+        }
+    }
+
+    #[inline]
+    pub fn graph(&self) -> &Graph {
+        &self.g
+    }
+
+    #[inline]
+    pub fn graph_arc(&self) -> Arc<Graph> {
+        self.g.clone()
+    }
+
+    #[inline]
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    #[inline]
+    pub fn block_of(&self, u: NodeId) -> BlockId {
+        self.part[u as usize].load(Ordering::Acquire)
+    }
+
+    #[inline]
+    pub fn block_weight(&self, b: BlockId) -> NodeWeight {
+        self.block_weight[b as usize].load(Ordering::Acquire)
+    }
+
+    #[inline]
+    pub fn max_block_weight(&self, b: BlockId) -> NodeWeight {
+        self.max_block_weight[b as usize]
+    }
+
+    pub fn parts(&self) -> Vec<BlockId> {
+        self.part.iter().map(|p| p.load(Ordering::Acquire)).collect()
+    }
+
+    /// Edge-cut gain `g_u(t) = ω(u, V_t) − ω(u, Π[u])` computed on the fly.
+    pub fn gain(&self, u: NodeId, to: BlockId) -> Gain {
+        let from = self.block_of(u);
+        if from == to {
+            return 0;
+        }
+        let mut internal: Gain = 0;
+        let mut external: Gain = 0;
+        for (v, w) in self.g.neighbors(u) {
+            let b = self.block_of(v);
+            if b == from {
+                internal += w;
+            } else if b == to {
+                external += w;
+            }
+        }
+        external - internal
+    }
+
+    /// Best feasible move among neighbor blocks.
+    pub fn max_gain_move(&self, u: NodeId) -> Option<(Gain, BlockId)> {
+        let from = self.block_of(u);
+        let w = self.g.node_weight(u);
+        let mut conn: Vec<(BlockId, Gain)> = Vec::new();
+        let mut internal: Gain = 0;
+        for (v, ew) in self.g.neighbors(u) {
+            let b = self.block_of(v);
+            if b == from {
+                internal += ew;
+            } else if let Some(c) = conn.iter_mut().find(|(cb, _)| *cb == b) {
+                c.1 += ew;
+            } else {
+                conn.push((b, ew));
+            }
+        }
+        let mut best: Option<(Gain, BlockId)> = None;
+        for (t, wt) in conn {
+            if self.block_weight(t) + w > self.max_block_weight(t) {
+                continue;
+            }
+            let g = wt - internal;
+            match best {
+                None => best = Some((g, t)),
+                Some((bg, bb)) => {
+                    if g > bg || (g == bg && self.block_weight(t) < self.block_weight(bb)) {
+                        best = Some((g, t));
+                    }
+                }
+            }
+        }
+        best
+    }
+
+    /// Balance-checked move with CAS-synchronized attributed gain
+    /// (paper §10.2). Each node may move at most once per round
+    /// ([`Self::reset_edge_sync`] starts a new round).
+    pub fn try_move(&self, u: NodeId, to: BlockId) -> Option<Gain> {
+        let from = self.block_of(u);
+        if from == to {
+            return None;
+        }
+        let w = self.g.node_weight(u);
+        let new_w = self.block_weight[to as usize].fetch_add(w, Ordering::AcqRel) + w;
+        if new_w > self.max_block_weight[to as usize] {
+            self.block_weight[to as usize].fetch_sub(w, Ordering::AcqRel);
+            return None;
+        }
+        Some(self.apply_move(u, from, to, w))
+    }
+
+    /// Unchecked move (revert paths).
+    pub fn move_unchecked(&self, u: NodeId, to: BlockId) -> Gain {
+        let from = self.block_of(u);
+        debug_assert_ne!(from, to);
+        let w = self.g.node_weight(u);
+        self.block_weight[to as usize].fetch_add(w, Ordering::AcqRel);
+        self.apply_move(u, from, to, w)
+    }
+
+    fn apply_move(&self, u: NodeId, from: BlockId, to: BlockId, w: NodeWeight) -> Gain {
+        let mut gain: Gain = 0;
+        let base = self.g.offsets[u as usize] as usize;
+        for (i, (v, ew)) in self.g.neighbors(u).enumerate() {
+            let e = self.uedge[base + i] as usize;
+            let prev = self.edge_target[e].compare_exchange(
+                UNSET,
+                to,
+                Ordering::AcqRel,
+                Ordering::Acquire,
+            );
+            // the block the other endpoint is (or will be) in
+            let other = match prev {
+                Ok(_) => self.block_of(v), // we won: neighbor not moving yet
+                Err(t) => t,               // neighbor (first mover) targets t
+            };
+            // attributed delta for this edge relative to our own move
+            if other == to && other != from {
+                gain += ew; // edge becomes internal
+            } else if other == from && other != to {
+                gain -= ew; // edge becomes cut
+            }
+        }
+        // paper: block id updated after gain attribution
+        self.part[u as usize].store(to, Ordering::Release);
+        self.block_weight[from as usize].fetch_sub(w, Ordering::AcqRel);
+        gain
+    }
+
+    /// Edge-cut metric.
+    pub fn cut(&self) -> i64 {
+        let mut cut = 0;
+        for u in self.g.nodes() {
+            let bu = self.block_of(u);
+            for (v, w) in self.g.neighbors(u) {
+                if u < v && self.block_of(v) != bu {
+                    cut += w;
+                }
+            }
+        }
+        cut
+    }
+
+    pub fn imbalance(&self) -> f64 {
+        let per = self.g.total_weight() as f64 / self.k as f64;
+        (0..self.k as BlockId)
+            .map(|b| self.block_weight(b) as f64 / per - 1.0)
+            .fold(f64::MIN, f64::max)
+    }
+
+    pub fn is_balanced(&self) -> bool {
+        (0..self.k as BlockId).all(|b| self.block_weight(b) <= self.max_block_weight(b))
+    }
+
+    pub fn is_border(&self, u: NodeId) -> bool {
+        let b = self.block_of(u);
+        self.g.neighbors(u).any(|(v, _)| self.block_of(v) != b)
+    }
+
+    pub fn verify_consistency(&self) -> Result<(), String> {
+        let mut bw = vec![0 as NodeWeight; self.k];
+        for u in self.g.nodes() {
+            let b = self.block_of(u) as usize;
+            if b >= self.k {
+                return Err(format!("invalid block for node {u}"));
+            }
+            bw[b] += self.g.node_weight(u);
+        }
+        for b in 0..self.k {
+            if bw[b] != self.block_weight(b as BlockId) {
+                return Err(format!("block {b} weight mismatch"));
+            }
+        }
+        Ok(())
+    }
+
+    /// Number of undirected edges (size of the `B` array).
+    pub fn num_undirected_edges(&self) -> usize {
+        self.num_uedges
+    }
+}
+
+/// Pair up the two directed slots of every undirected edge.
+fn assign_undirected_ids(g: &Graph) -> (Vec<u32>, usize) {
+    // (min, max, slot) sorted → identical (min,max) pairs adjacent.
+    // Parallel edges (same endpoints) pair arbitrarily among themselves,
+    // which is fine: each still gets a unique undirected id.
+    let mut keyed: Vec<(NodeId, NodeId, u32)> = Vec::with_capacity(g.num_edges());
+    for u in g.nodes() {
+        let base = g.offsets[u as usize] as usize;
+        for (i, (v, _)) in g.neighbors(u).enumerate() {
+            keyed.push((u.min(v), u.max(v), (base + i) as u32));
+        }
+    }
+    keyed.sort_unstable();
+    let mut uedge = vec![0u32; g.num_edges()];
+    let mut next = 0u32;
+    let mut i = 0;
+    while i < keyed.len() {
+        debug_assert!(i + 1 < keyed.len(), "unpaired directed edge");
+        uedge[keyed[i].2 as usize] = next;
+        uedge[keyed[i + 1].2 as usize] = next;
+        next += 1;
+        i += 2;
+    }
+    (uedge, next as usize)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ring(n: usize) -> Arc<Graph> {
+        let edges: Vec<(NodeId, NodeId, i64)> =
+            (0..n).map(|i| (i as NodeId, ((i + 1) % n) as NodeId, 1)).collect();
+        Arc::new(Graph::from_edges(n, &edges, None))
+    }
+
+    fn setup(parts: &[BlockId], k: usize) -> PartitionedGraph {
+        let mut pg = PartitionedGraph::new(ring(parts.len()), k);
+        pg.set_uniform_max_weight(1.0);
+        pg.assign_all(parts, 1);
+        pg
+    }
+
+    #[test]
+    fn uedge_ids_pair_up() {
+        let g = ring(6);
+        let (uedge, n) = assign_undirected_ids(&g);
+        assert_eq!(n, 6);
+        let mut counts = vec![0; n];
+        for &e in &uedge {
+            counts[e as usize] += 1;
+        }
+        assert!(counts.iter().all(|&c| c == 2));
+    }
+
+    #[test]
+    fn cut_and_gain() {
+        // ring of 8, split in contiguous halves: cut = 2
+        let pg = setup(&[0, 0, 0, 0, 1, 1, 1, 1], 2);
+        assert_eq!(pg.cut(), 2);
+        // node 3 borders block 1; moving it: edge (3,4) internal, (2,3) cut
+        assert_eq!(pg.gain(3, 1), 0);
+        assert!(pg.is_border(3));
+        assert!(!pg.is_border(1));
+        pg.verify_consistency().unwrap();
+    }
+
+    #[test]
+    fn attributed_gain_matches_cut_delta_sequential() {
+        let pg = setup(&[0, 1, 0, 1, 0, 1, 0, 1], 2);
+        let mut cut = pg.cut();
+        let mut rng = crate::util::Rng::new(8);
+        let mut moved = vec![false; 8];
+        for _ in 0..20 {
+            let u = rng.next_below(8) as NodeId;
+            if moved[u as usize] {
+                continue;
+            }
+            let to = 1 - pg.block_of(u);
+            let expected = pg.gain(u, to);
+            if let Some(g) = pg.try_move(u, to) {
+                moved[u as usize] = true;
+                assert_eq!(g, expected);
+                cut -= g;
+                assert_eq!(pg.cut(), cut);
+            }
+        }
+        pg.verify_consistency().unwrap();
+    }
+
+    #[test]
+    fn concurrent_moves_once_per_node_sum_exactly() {
+        // each node moved at most once; attributed gains must sum to the
+        // total cut change (the CAS array makes both endpoints agree)
+        for trial in 0..10u64 {
+            let pg = setup(&[0, 1, 0, 1, 0, 1, 0, 1], 2);
+            let before = pg.cut();
+            let total = AtomicI64::new(0);
+            let claimed: Vec<std::sync::atomic::AtomicBool> =
+                (0..8).map(|_| std::sync::atomic::AtomicBool::new(false)).collect();
+            std::thread::scope(|s| {
+                for t in 0..4u64 {
+                    let pg = &pg;
+                    let total = &total;
+                    let claimed = &claimed;
+                    s.spawn(move || {
+                        let mut rng = crate::util::Rng::new(trial * 31 + t);
+                        for _ in 0..6 {
+                            let u = rng.next_below(8);
+                            if claimed[u].swap(true, Ordering::SeqCst) {
+                                continue;
+                            }
+                            let to = 1 - pg.block_of(u as NodeId);
+                            if let Some(g) = pg.try_move(u as NodeId, to) {
+                                total.fetch_add(g, Ordering::Relaxed);
+                            }
+                        }
+                    });
+                }
+            });
+            assert_eq!(before - total.load(Ordering::Relaxed), pg.cut(), "trial {trial}");
+            pg.verify_consistency().unwrap();
+        }
+    }
+
+    #[test]
+    fn balance_rejection() {
+        let mut pg = PartitionedGraph::new(ring(4), 2);
+        pg.set_max_weights(vec![2, 2]);
+        pg.assign_all(&[0, 0, 1, 1], 1);
+        assert!(pg.try_move(0, 1).is_none());
+        assert_eq!(pg.block_weight(1), 2);
+        pg.verify_consistency().unwrap();
+    }
+}

@@ -1,0 +1,515 @@
+//! The concurrent partition data structure (paper §6.1).
+//!
+//! Maintains the block assignment Π, atomic block weights, packed pin
+//! counts Φ(e, V_i) under per-net spin locks, and connectivity sets Λ(e)
+//! as atomic bitsets. The **move node operation** (Algorithm 6.1) performs
+//! a balance-checked move and produces the move's *attributed gain* from
+//! the synchronized pin-count transitions — the mechanism that lets all
+//! parallel refiners track the connectivity metric exactly (Lemma 6.1).
+
+pub mod connectivity;
+pub mod gain_recalculation;
+pub mod gain_table;
+pub mod graph_partition;
+pub mod pin_counts;
+
+pub use gain_recalculation::{best_prefix, recalculate_gains, Move};
+pub use gain_table::GainTable;
+pub use graph_partition::PartitionedGraph;
+
+use crate::datastructures::SpinLockVec;
+use crate::hypergraph::Hypergraph;
+use crate::parallel::par_for_auto;
+use crate::{BlockId, EdgeId, Gain, NodeId, NodeWeight};
+use connectivity::ConnectivitySets;
+use pin_counts::PinCountArray;
+use std::sync::atomic::{AtomicI64, AtomicU32, Ordering};
+use std::sync::Arc;
+
+/// A k-way partitioned hypergraph.
+pub struct PartitionedHypergraph {
+    hg: Arc<Hypergraph>,
+    k: usize,
+    part: Vec<AtomicU32>,
+    block_weight: Vec<AtomicI64>,
+    max_block_weight: Vec<NodeWeight>,
+    pin_counts: PinCountArray,
+    conn: ConnectivitySets,
+    net_locks: SpinLockVec,
+}
+
+/// Outcome of a [`PartitionedHypergraph::try_move`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct MoveOutcome {
+    /// attributed gain: positive = connectivity metric decreased
+    pub attributed_gain: Gain,
+}
+
+impl PartitionedHypergraph {
+    /// Create an unassigned partition structure (all nodes in block 0
+    /// after [`Self::assign_all`]; until then Π is undefined).
+    pub fn new(hg: Arc<Hypergraph>, k: usize) -> Self {
+        let n = hg.num_nodes();
+        let m = hg.num_nets();
+        let max_size = hg.max_net_size();
+        PartitionedHypergraph {
+            part: (0..n).map(|_| AtomicU32::new(0)).collect(),
+            block_weight: (0..k).map(|_| AtomicI64::new(0)).collect(),
+            max_block_weight: vec![NodeWeight::MAX; k],
+            pin_counts: PinCountArray::new(m, k, max_size.max(1)),
+            conn: ConnectivitySets::new(m, k),
+            net_locks: SpinLockVec::new(m),
+            hg,
+            k,
+        }
+    }
+
+    /// Standard `L_max = (1+ε)·⌈c(V)/k⌉` block weight limits (paper §2).
+    pub fn max_weight_for(total: NodeWeight, k: usize, eps: f64) -> NodeWeight {
+        (((total as f64 / k as f64).ceil()) * (1.0 + eps)).floor() as NodeWeight
+    }
+
+    /// Set uniform maximum block weights from the imbalance ratio ε.
+    pub fn set_uniform_max_weight(&mut self, eps: f64) {
+        let lmax = Self::max_weight_for(self.hg.total_weight(), self.k, eps);
+        self.max_block_weight = vec![lmax; self.k];
+    }
+
+    /// Set explicit per-block weight limits.
+    pub fn set_max_weights(&mut self, w: Vec<NodeWeight>) {
+        assert_eq!(w.len(), self.k);
+        self.max_block_weight = w;
+    }
+
+    /// Bulk-assign all nodes and (re)build block weights, pin counts and
+    /// connectivity sets in parallel.
+    pub fn assign_all(&self, parts: &[BlockId], threads: usize) {
+        let n = self.hg.num_nodes();
+        assert_eq!(parts.len(), n);
+        for b in &self.block_weight {
+            b.store(0, Ordering::Relaxed);
+        }
+        self.pin_counts.clear();
+        self.conn.clear();
+        par_for_auto(n, threads, |u| {
+            let b = parts[u];
+            debug_assert!((b as usize) < self.k);
+            self.part[u].store(b, Ordering::Relaxed);
+            self.block_weight[b as usize]
+                .fetch_add(self.hg.node_weight(u as NodeId), Ordering::Relaxed);
+        });
+        let m = self.hg.num_nets();
+        par_for_auto(m, threads, |e| {
+            for &p in self.hg.pins(e as EdgeId) {
+                let b = parts[p as usize] as usize;
+                if self.pin_counts.inc(e, b) == 1 {
+                    self.conn.flip(e, b);
+                }
+            }
+        });
+    }
+
+    // ------------------------------------------------------ accessors
+
+    #[inline]
+    pub fn hypergraph(&self) -> &Hypergraph {
+        &self.hg
+    }
+
+    #[inline]
+    pub fn hypergraph_arc(&self) -> Arc<Hypergraph> {
+        self.hg.clone()
+    }
+
+    #[inline]
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    #[inline]
+    pub fn block_of(&self, u: NodeId) -> BlockId {
+        self.part[u as usize].load(Ordering::Acquire)
+    }
+
+    #[inline]
+    pub fn block_weight(&self, b: BlockId) -> NodeWeight {
+        self.block_weight[b as usize].load(Ordering::Acquire)
+    }
+
+    #[inline]
+    pub fn max_block_weight(&self, b: BlockId) -> NodeWeight {
+        self.max_block_weight[b as usize]
+    }
+
+    #[inline]
+    pub fn pin_count(&self, e: EdgeId, b: BlockId) -> u32 {
+        self.pin_counts.get(e as usize, b as usize)
+    }
+
+    #[inline]
+    pub fn connectivity(&self, e: EdgeId) -> u32 {
+        self.conn.connectivity(e as usize)
+    }
+
+    /// Iterate the connectivity set Λ(e).
+    pub fn connectivity_set(&self, e: EdgeId) -> impl Iterator<Item = BlockId> + '_ {
+        self.conn.iter(e as usize).map(|b| b as BlockId)
+    }
+
+    /// Is `u` incident to at least one cut net?
+    pub fn is_border(&self, u: NodeId) -> bool {
+        self.hg.incident_nets(u).iter().any(|&e| self.connectivity(e) > 1)
+    }
+
+    /// Snapshot of the block assignment.
+    pub fn parts(&self) -> Vec<BlockId> {
+        self.part.iter().map(|p| p.load(Ordering::Acquire)).collect()
+    }
+
+    // ------------------------------------------------------ move op
+
+    /// Algorithm 6.1: balance-checked move with attributed gain.
+    ///
+    /// Returns `None` if the move would overload the target block; on
+    /// success, applies the move and returns the attributed gain (sum over
+    /// nets of ω(e) when Φ(e,from) drops to 0 minus ω(e) when Φ(e,to)
+    /// rises to 1). `gain_table` (if given) receives the update rules 1–4.
+    pub fn try_move(
+        &self,
+        u: NodeId,
+        to: BlockId,
+        gain_table: Option<&GainTable>,
+    ) -> Option<MoveOutcome> {
+        let from = self.block_of(u);
+        if from == to {
+            return None;
+        }
+        let w = self.hg.node_weight(u);
+        // optimistic balance reservation
+        let new_w = self.block_weight[to as usize].fetch_add(w, Ordering::AcqRel) + w;
+        if new_w > self.max_block_weight[to as usize] {
+            self.block_weight[to as usize].fetch_sub(w, Ordering::AcqRel);
+            return None;
+        }
+        Some(self.apply_move(u, from, to, w, gain_table))
+    }
+
+    /// Move without the balance check (revert paths and rollback).
+    pub fn move_unchecked(
+        &self,
+        u: NodeId,
+        to: BlockId,
+        gain_table: Option<&GainTable>,
+    ) -> MoveOutcome {
+        let from = self.block_of(u);
+        debug_assert_ne!(from, to);
+        let w = self.hg.node_weight(u);
+        self.block_weight[to as usize].fetch_add(w, Ordering::AcqRel);
+        self.apply_move(u, from, to, w, gain_table)
+    }
+
+    fn apply_move(
+        &self,
+        u: NodeId,
+        from: BlockId,
+        to: BlockId,
+        w: NodeWeight,
+        gain_table: Option<&GainTable>,
+    ) -> MoveOutcome {
+        self.part[u as usize].store(to, Ordering::Release);
+        self.block_weight[from as usize].fetch_sub(w, Ordering::AcqRel);
+        let mut gain: Gain = 0;
+        for &e in self.hg.incident_nets(u) {
+            let ei = e as usize;
+            let we = self.hg.net_weight(e);
+            self.net_locks.lock(ei);
+            let phi_from = self.pin_counts.dec(ei, from as usize);
+            if phi_from == 0 {
+                self.conn.flip(ei, from as usize);
+            }
+            let phi_to = self.pin_counts.inc(ei, to as usize);
+            if phi_to == 1 {
+                self.conn.flip(ei, to as usize);
+            }
+            self.net_locks.unlock(ei);
+            // attributed gain (paper: decrease attributed to the move that
+            // zeroes Φ(e, V_s); increase to the one that makes Φ(e, V_t)=1)
+            if phi_from == 0 {
+                gain += we;
+            }
+            if phi_to == 1 {
+                gain -= we;
+            }
+            if let Some(gt) = gain_table {
+                gt.update_for_pin_change(self, e, from, to, phi_from, phi_to);
+            }
+        }
+        MoveOutcome { attributed_gain: gain }
+    }
+
+    // ------------------------------------------------------ gains/metrics
+
+    /// Exact move gain g_u(t) computed from the current pin counts
+    /// (benefit minus penalty; paper §6).
+    pub fn gain(&self, u: NodeId, to: BlockId) -> Gain {
+        let from = self.block_of(u);
+        if from == to {
+            return 0;
+        }
+        let mut g = 0;
+        for &e in self.hg.incident_nets(u) {
+            let w = self.hg.net_weight(e);
+            if self.pin_count(e, from) == 1 {
+                g += w;
+            }
+            if self.pin_count(e, to) == 0 {
+                g -= w;
+            }
+        }
+        g
+    }
+
+    /// Best move for `u` among blocks adjacent via its nets (ties broken
+    /// toward the lighter block). Returns `(gain, block)`; `None` if `u`
+    /// has no feasible target distinct from its block.
+    pub fn max_gain_move(&self, u: NodeId) -> Option<(Gain, BlockId)> {
+        let from = self.block_of(u);
+        let w = self.hg.node_weight(u);
+        let mut benefit: Gain = 0;
+        let mut candidates: Vec<BlockId> = Vec::new();
+        for &e in self.hg.incident_nets(u) {
+            if self.pin_count(e, from) == 1 {
+                benefit += self.hg.net_weight(e);
+            }
+            for b in self.connectivity_set(e) {
+                if b != from && !candidates.contains(&b) {
+                    candidates.push(b);
+                }
+            }
+        }
+        let mut best: Option<(Gain, BlockId)> = None;
+        for t in candidates {
+            if self.block_weight(t) + w > self.max_block_weight(t) {
+                continue;
+            }
+            let mut penalty: Gain = 0;
+            for &e in self.hg.incident_nets(u) {
+                if self.pin_count(e, t) == 0 {
+                    penalty += self.hg.net_weight(e);
+                }
+            }
+            let g = benefit - penalty;
+            match best {
+                None => best = Some((g, t)),
+                Some((bg, bb)) => {
+                    if g > bg || (g == bg && self.block_weight(t) < self.block_weight(bb)) {
+                        best = Some((g, t));
+                    }
+                }
+            }
+        }
+        best
+    }
+
+    /// Connectivity metric f_{λ−1}(Π).
+    pub fn km1(&self) -> i64 {
+        self.hg
+            .nets()
+            .map(|e| (self.connectivity(e).saturating_sub(1)) as i64 * self.hg.net_weight(e))
+            .sum()
+    }
+
+    /// Cut-net metric f_c(Π).
+    pub fn cut(&self) -> i64 {
+        self.hg
+            .nets()
+            .filter(|&e| self.connectivity(e) > 1)
+            .map(|e| self.hg.net_weight(e))
+            .sum()
+    }
+
+    /// Sum-of-external-degrees metric f_s(Π) = km1 + cut.
+    pub fn soed(&self) -> i64 {
+        self.km1() + self.cut()
+    }
+
+    /// Imbalance ε(Π) = max_b c(V_b)·k/c(V) − 1.
+    pub fn imbalance(&self) -> f64 {
+        let per = self.hg.total_weight() as f64 / self.k as f64;
+        (0..self.k as BlockId)
+            .map(|b| self.block_weight(b) as f64 / per - 1.0)
+            .fold(f64::MIN, f64::max)
+    }
+
+    /// Do all blocks satisfy their weight limit?
+    pub fn is_balanced(&self) -> bool {
+        (0..self.k as BlockId).all(|b| self.block_weight(b) <= self.max_block_weight(b))
+    }
+
+    /// Full consistency check: Φ/Λ/weights derived from Π from scratch
+    /// (used by tests and debug assertions — Lemma 6.1's invariant).
+    pub fn verify_consistency(&self) -> Result<(), String> {
+        let parts = self.parts();
+        // block weights
+        let mut bw = vec![0 as NodeWeight; self.k];
+        for u in self.hg.nodes() {
+            let b = parts[u as usize] as usize;
+            if b >= self.k {
+                return Err(format!("node {u} has invalid block"));
+            }
+            bw[b] += self.hg.node_weight(u);
+        }
+        for b in 0..self.k {
+            if bw[b] != self.block_weight(b as BlockId) {
+                return Err(format!(
+                    "block {b} weight mismatch: stored {} real {}",
+                    self.block_weight(b as BlockId),
+                    bw[b]
+                ));
+            }
+        }
+        // pin counts + connectivity
+        for e in self.hg.nets() {
+            let mut phi = vec![0u32; self.k];
+            for &p in self.hg.pins(e) {
+                phi[parts[p as usize] as usize] += 1;
+            }
+            for (b, &cnt) in phi.iter().enumerate() {
+                if self.pin_count(e, b as BlockId) != cnt {
+                    return Err(format!("Φ({e},{b}) mismatch"));
+                }
+                let in_lambda = self.conn.contains(e as usize, b);
+                if in_lambda != (cnt > 0) {
+                    return Err(format!("Λ({e}) bit {b} mismatch"));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Arc<Hypergraph> {
+        Arc::new(Hypergraph::from_nets(
+            7,
+            &[vec![0, 2], vec![0, 1, 3, 4], vec![3, 4, 6], vec![2, 5, 6]],
+            None,
+            None,
+        ))
+    }
+
+    fn setup(parts: &[BlockId], k: usize) -> PartitionedHypergraph {
+        let mut phg = PartitionedHypergraph::new(tiny(), k);
+        phg.set_uniform_max_weight(1.0); // generous for unit tests
+        phg.assign_all(parts, 2);
+        phg
+    }
+
+    #[test]
+    fn assign_and_metrics() {
+        let phg = setup(&[0, 0, 0, 1, 1, 1, 1], 2);
+        phg.verify_consistency().unwrap();
+        // net1 {0,1,3,4} spans both; net3 {2,5,6} spans both
+        assert_eq!(phg.km1(), 2);
+        assert_eq!(phg.cut(), 2);
+        assert_eq!(phg.soed(), 4);
+        assert_eq!(phg.block_weight(0), 3);
+        assert_eq!(phg.block_weight(1), 4);
+        assert!(phg.is_balanced());
+    }
+
+    #[test]
+    fn move_updates_everything_and_attributes_gain() {
+        let phg = setup(&[0, 0, 0, 1, 1, 1, 1], 2);
+        let before = phg.km1();
+        // move node 0 (nets {0,2} and {0,1,3,4}) to block 1:
+        // net0 {0,2}: Φ(0,0): 2->1 no zero; Φ(0,1): 0->1 -> -1
+        // net1: Φ(1,0): 2->1; Φ(1,1): 2->3 — no transitions
+        let out = phg.try_move(0, 1, None).unwrap();
+        assert_eq!(out.attributed_gain, -1);
+        assert_eq!(phg.km1(), before + 1);
+        phg.verify_consistency().unwrap();
+    }
+
+    #[test]
+    fn attributed_gain_matches_km1_delta_random_walk() {
+        let phg = setup(&[0, 1, 0, 1, 0, 1, 0], 2);
+        let mut rng = crate::util::Rng::new(3);
+        let mut km1 = phg.km1();
+        for _ in 0..200 {
+            let u = rng.next_below(7) as NodeId;
+            let to = rng.next_below(2) as BlockId;
+            if to == phg.block_of(u) {
+                continue;
+            }
+            let expected = phg.gain(u, to);
+            if let Some(out) = phg.try_move(u, to, None) {
+                assert_eq!(out.attributed_gain, expected, "sequential attributed == exact");
+                km1 -= out.attributed_gain;
+                assert_eq!(phg.km1(), km1);
+            }
+        }
+        phg.verify_consistency().unwrap();
+    }
+
+    #[test]
+    fn balance_rejection() {
+        let mut phg = PartitionedHypergraph::new(tiny(), 2);
+        phg.set_max_weights(vec![4, 4]);
+        phg.assign_all(&[0, 0, 0, 1, 1, 1, 1], 1);
+        // block 1 already at 4 = max; moving any node in fails
+        assert!(phg.try_move(0, 1, None).is_none());
+        assert_eq!(phg.block_weight(1), 4); // reservation reverted
+        phg.verify_consistency().unwrap();
+        // but moving out is fine
+        assert!(phg.try_move(3, 0, None).is_some());
+    }
+
+    #[test]
+    fn max_gain_move_finds_improvement() {
+        // node 6 in block 0 with its nets mostly in block 1
+        let phg = setup(&[1, 1, 1, 1, 1, 1, 0], 2);
+        let (g, t) = phg.max_gain_move(6).unwrap();
+        assert_eq!(t, 1);
+        // moving 6 to 1 uncuts nets {3,4,6} and {2,5,6}: gain 2
+        assert_eq!(g, 2);
+    }
+
+    #[test]
+    fn concurrent_moves_preserve_invariants() {
+        let phg = setup(&[0, 1, 0, 1, 0, 1, 0], 2);
+        let total_attr = std::sync::atomic::AtomicI64::new(0);
+        let before = phg.km1();
+        std::thread::scope(|s| {
+            for t in 0..4u64 {
+                let phg = &phg;
+                let total_attr = &total_attr;
+                s.spawn(move || {
+                    let mut rng = crate::util::Rng::new(t);
+                    for _ in 0..500 {
+                        let u = rng.next_below(7) as NodeId;
+                        let to = rng.next_below(2) as BlockId;
+                        if to != phg.block_of(u) {
+                            if let Some(out) = phg.try_move(u, to, None) {
+                                total_attr.fetch_add(out.attributed_gain, Ordering::Relaxed);
+                            }
+                        }
+                    }
+                });
+            }
+        });
+        phg.verify_consistency().unwrap();
+        // Lemma 6.1 flavor: sum of attributed gains equals the total change.
+        assert_eq!(before - total_attr.load(Ordering::Relaxed), phg.km1());
+    }
+
+    #[test]
+    fn imbalance_and_border() {
+        let phg = setup(&[0, 0, 0, 1, 1, 1, 1], 2);
+        assert!((phg.imbalance() - (4.0 / 3.5 - 1.0)).abs() < 1e-9);
+        assert!(phg.is_border(0)); // net1 is cut
+    }
+}

@@ -1,0 +1,400 @@
+//! Parallel Louvain community detection (paper §4.3 and §11).
+//!
+//! Follows the parallel local-moving scheme of Staudt & Meyerhenke: nodes
+//! are visited in parallel and moved to the neighboring community with the
+//! best modularity gain; once local moving converges, the graph is
+//! contracted by communities and the process recurses.
+//!
+//! The deterministic variant (paper §11) uses *synchronous* local moving
+//! in sub-rounds: moves are calculated against a frozen state and applied
+//! together. Community volumes here are integral (the bipartite edge-
+//! weight model is pre-scaled to integers), so volume aggregation is
+//! associative and the float-ordering pitfall the paper works around does
+//! not arise — noted in DESIGN.md.
+
+use crate::datastructures::RatingMap;
+use crate::graph::{contraction as gcontract, Graph};
+use crate::parallel::{par_for_auto, parallel_chunks, SharedSlice};
+use crate::util::rng::hash2;
+use crate::util::Rng;
+use crate::NodeId;
+use std::sync::atomic::{AtomicI64, AtomicU32, AtomicU64, Ordering};
+
+#[derive(Clone, Debug)]
+pub struct LouvainConfig {
+    pub threads: usize,
+    pub seed: u64,
+    /// local-moving rounds per level
+    pub max_rounds: usize,
+    /// contraction levels
+    pub max_levels: usize,
+    /// stop a level when fewer than this fraction of nodes moved
+    pub min_move_fraction: f64,
+    /// synchronous (deterministic) local moving
+    pub deterministic: bool,
+    /// sub-rounds per synchronous round
+    pub sub_rounds: usize,
+}
+
+impl Default for LouvainConfig {
+    fn default() -> Self {
+        LouvainConfig {
+            threads: 1,
+            seed: 0,
+            max_rounds: 5,
+            max_levels: 10,
+            min_move_fraction: 0.01,
+            deterministic: false,
+            sub_rounds: 16,
+        }
+    }
+}
+
+/// Run multilevel Louvain; returns a community id per node.
+pub fn louvain(g: &Graph, cfg: &LouvainConfig) -> Vec<u32> {
+    let mut community: Vec<u32> = (0..g.num_nodes() as u32).collect();
+    let mut level_graph = g.clone();
+    // graph contraction drops intra-cluster edges; Louvain must keep their
+    // volume, carried here as a per-coarse-node self-loop volume (2×
+    // internal edge weight)
+    let mut self_vol: Vec<i64> = vec![0; g.num_nodes()];
+    for level in 0..cfg.max_levels {
+        let moved = local_moving(&level_graph, &self_vol, cfg, level as u64);
+        let clusters = moved.clusters;
+        if moved.num_moves * 100 < level_graph.num_nodes() {
+            // converged: fold this level's (near-identity) clustering in
+            project(&mut community, &clusters);
+            break;
+        }
+        project(&mut community, &clusters);
+        // contract and recurse
+        let rep = clusters_to_rep(&clusters);
+        let contraction = gcontract::contract(&level_graph, &rep, cfg.threads);
+        // accumulate self volume: old self loops + 2× intra-cluster weight
+        let mut coarse_self = vec![0i64; contraction.coarse.num_nodes()];
+        for u in level_graph.nodes() {
+            let cu = contraction.fine_to_coarse[u as usize] as usize;
+            coarse_self[cu] += self_vol[u as usize];
+            for (v, w) in level_graph.neighbors(u) {
+                if contraction.fine_to_coarse[v as usize] as usize == cu {
+                    coarse_self[cu] += w; // counts both directions = 2×w
+                }
+            }
+        }
+        // rewrite community ids to coarse ids
+        let mut remap = vec![0u32; level_graph.num_nodes()];
+        par_for_auto(level_graph.num_nodes(), cfg.threads, {
+            let remap = SharedSlice::new(&mut remap);
+            let f2c = &contraction.fine_to_coarse;
+            let rep = &rep;
+            move |u| unsafe { remap.write(u, f2c[rep[u] as usize]) }
+        });
+        par_for_auto(community.len(), cfg.threads, {
+            let community_s = SharedSlice::new(&mut community);
+            let remap = &remap;
+            move |u| unsafe {
+                let c = *community_s.read(u);
+                community_s.write(u, remap[c as usize]);
+            }
+        });
+        if contraction.coarse.num_nodes() == level_graph.num_nodes() {
+            break;
+        }
+        self_vol = coarse_self;
+        level_graph = contraction.coarse;
+    }
+    // normalize ids to a consecutive range
+    normalize(&mut community)
+}
+
+struct MoveResult {
+    clusters: Vec<u32>,
+    num_moves: usize,
+}
+
+/// One level of local moving. Cluster ids are node ids of this level.
+fn local_moving(g: &Graph, self_vol: &[i64], cfg: &LouvainConfig, salt: u64) -> MoveResult {
+    let n = g.num_nodes();
+    let total_vol = (g.total_volume() + self_vol.iter().sum::<i64>()).max(1);
+    let cluster: Vec<AtomicU32> = (0..n as u32).map(AtomicU32::new).collect();
+    let volume: Vec<AtomicI64> = (0..n)
+        .map(|u| AtomicI64::new(g.weighted_degree(u as NodeId) + self_vol[u]))
+        .collect();
+    let mut total_moves = 0usize;
+
+    for round in 0..cfg.max_rounds {
+        let moves_this_round = if cfg.deterministic {
+            sync_round(g, self_vol, cfg, &cluster, &volume, total_vol, round as u64 ^ salt)
+        } else {
+            async_round(g, self_vol, cfg, &cluster, &volume, total_vol, round as u64 ^ salt)
+        };
+        total_moves += moves_this_round;
+        if (moves_this_round as f64) < cfg.min_move_fraction * n as f64 {
+            break;
+        }
+    }
+    MoveResult {
+        clusters: cluster.into_iter().map(|c| c.into_inner()).collect(),
+        num_moves: total_moves,
+    }
+}
+
+/// Modularity gain of moving `u` (volume `du`) into cluster with volume
+/// `vol_c` and connection weight `w_uc`, out of its current cluster with
+/// connection `w_cur` and remaining volume `vol_cur`:
+/// ΔQ ∝ (w_uc − w_cur) − du·(vol_c − vol_cur)/total_vol.
+#[inline]
+fn gain(w_uc: i64, w_cur: i64, du: i64, vol_c: i64, vol_cur: i64, total_vol: i64) -> f64 {
+    (w_uc - w_cur) as f64 - du as f64 * (vol_c - vol_cur) as f64 / total_vol as f64
+}
+
+#[allow(clippy::too_many_arguments)]
+fn best_cluster(
+    g: &Graph,
+    self_vol: &[i64],
+    u: NodeId,
+    cur: u32,
+    map: &mut RatingMap,
+    cluster: &[AtomicU32],
+    volume: &[AtomicI64],
+    total_vol: i64,
+) -> Option<u32> {
+    map.clear();
+    for (v, w) in g.neighbors(u) {
+        if v != u {
+            map.add(cluster[v as usize].load(Ordering::Relaxed) as u64, w as f64);
+        }
+    }
+    let w_cur = map.get(cur as u64).unwrap_or(0.0) as i64;
+    let du = g.weighted_degree(u) + self_vol[u as usize];
+    let vol_cur = volume[cur as usize].load(Ordering::Relaxed) - du;
+    let mut best: Option<(f64, u32)> = None;
+    for (c, w_uc, _) in map.iter() {
+        let c = c as u32;
+        if c == cur {
+            continue;
+        }
+        let vol_c = volume[c as usize].load(Ordering::Relaxed);
+        let dq = gain(w_uc as i64, w_cur, du, vol_c, vol_cur, total_vol);
+        if dq > 1e-9 {
+            match best {
+                None => best = Some((dq, c)),
+                // deterministic tie-break on cluster id
+                Some((bq, bc)) => {
+                    if dq > bq + 1e-12 || ((dq - bq).abs() <= 1e-12 && c < bc) {
+                        best = Some((dq, c));
+                    }
+                }
+            }
+        }
+    }
+    best.map(|(_, c)| c)
+}
+
+/// Asynchronous parallel local moving round (non-deterministic).
+fn async_round(
+    g: &Graph,
+    self_vol: &[i64],
+    cfg: &LouvainConfig,
+    cluster: &[AtomicU32],
+    volume: &[AtomicI64],
+    total_vol: i64,
+    salt: u64,
+) -> usize {
+    let n = g.num_nodes();
+    // random visit order, derived deterministically but interleaved by
+    // the scheduler (the async scheme)
+    let mut order: Vec<u32> = (0..n as u32).collect();
+    Rng::new(hash2(cfg.seed, salt)).shuffle(&mut order);
+    let moves = AtomicU64::new(0);
+    parallel_chunks(n, cfg.threads, |_, s, e| {
+        let mut map = RatingMap::new(4096);
+        for &u in &order[s..e] {
+            let cur = cluster[u as usize].load(Ordering::Relaxed);
+            if let Some(c) =
+                best_cluster(g, self_vol, u, cur, &mut map, cluster, volume, total_vol)
+            {
+                let du = g.weighted_degree(u) + self_vol[u as usize];
+                cluster[u as usize].store(c, Ordering::Relaxed);
+                volume[cur as usize].fetch_sub(du, Ordering::Relaxed);
+                volume[c as usize].fetch_add(du, Ordering::Relaxed);
+                moves.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    });
+    moves.load(Ordering::Relaxed) as usize
+}
+
+/// Synchronous (deterministic) local moving round in sub-rounds.
+fn sync_round(
+    g: &Graph,
+    self_vol: &[i64],
+    cfg: &LouvainConfig,
+    cluster: &[AtomicU32],
+    volume: &[AtomicI64],
+    total_vol: i64,
+    salt: u64,
+) -> usize {
+    let n = g.num_nodes();
+    let sub = cfg.sub_rounds.max(1) as u64;
+    let mut total = 0usize;
+    for s in 0..sub {
+        // nodes of this sub-round (hash-assigned, thread-count independent)
+        let members: Vec<u32> = (0..n as u32)
+            .filter(|&u| hash2(cfg.seed ^ salt, u as u64) % sub == s)
+            .collect();
+        // phase 1: calculate moves against the frozen state
+        let mut desired: Vec<(u32, u32)> = Vec::new(); // (node, target)
+        {
+            let desired_mx = std::sync::Mutex::new(&mut desired);
+            parallel_chunks(members.len(), cfg.threads, |_, lo, hi| {
+                let mut map = RatingMap::new(4096);
+                let mut local = Vec::new();
+                for &u in &members[lo..hi] {
+                    let cur = cluster[u as usize].load(Ordering::Relaxed);
+                    if let Some(c) =
+                        best_cluster(g, self_vol, u, cur, &mut map, cluster, volume, total_vol)
+                    {
+                        local.push((u, c));
+                    }
+                }
+                desired_mx.lock().unwrap().extend(local);
+            });
+        }
+        // deterministic apply order (volumes integral => adds commute, the
+        // sort guarantees identical iteration order for internal
+        // determinism as well)
+        desired.sort_unstable();
+        for &(u, c) in &desired {
+            let cur = cluster[u as usize].load(Ordering::Relaxed);
+            if cur == c {
+                continue;
+            }
+            let du = g.weighted_degree(u) + self_vol[u as usize];
+            cluster[u as usize].store(c, Ordering::Relaxed);
+            volume[cur as usize].fetch_sub(du, Ordering::Relaxed);
+            volume[c as usize].fetch_add(du, Ordering::Relaxed);
+        }
+        total += desired.len();
+    }
+    total
+}
+
+/// Make cluster array idempotent: representative = smallest member id.
+fn clusters_to_rep(clusters: &[u32]) -> Vec<NodeId> {
+    let n = clusters.len();
+    let mut min_member = vec![u32::MAX; n];
+    for (u, &c) in clusters.iter().enumerate() {
+        min_member[c as usize] = min_member[c as usize].min(u as u32);
+    }
+    clusters.iter().map(|&c| min_member[c as usize] as NodeId).collect()
+}
+
+/// community[u] (an id of the *previous* level) ← clusters[community[u]].
+fn project(community: &mut [u32], clusters: &[u32]) {
+    for c in community.iter_mut() {
+        *c = clusters[*c as usize];
+    }
+}
+
+/// Renumber community ids to 0..count, preserving first-appearance order.
+fn normalize(community: &mut [u32]) -> Vec<u32> {
+    let mut remap = rustc_hash::FxHashMap::default();
+    let mut next = 0u32;
+    community
+        .iter()
+        .map(|&c| {
+            *remap.entry(c).or_insert_with(|| {
+                let id = next;
+                next += 1;
+                id
+            })
+        })
+        .collect()
+}
+
+/// Modularity of a clustering (test/bench metric).
+pub fn modularity(g: &Graph, community: &[u32]) -> f64 {
+    let total = g.total_volume().max(1) as f64;
+    let k = community.iter().copied().max().map_or(0, |c| c as usize + 1);
+    let mut internal = vec![0i64; k];
+    let mut vol = vec![0i64; k];
+    for u in g.nodes() {
+        let cu = community[u as usize] as usize;
+        vol[cu] += g.weighted_degree(u);
+        for (v, w) in g.neighbors(u) {
+            if community[v as usize] as usize == cu {
+                internal[cu] += w;
+            }
+        }
+    }
+    (0..k)
+        .map(|c| internal[c] as f64 / total - (vol[c] as f64 / total).powi(2))
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn two_cliques() -> Graph {
+        let mut edges = Vec::new();
+        for i in 0..8u32 {
+            for j in i + 1..8 {
+                edges.push((i, j, 1i64));
+                edges.push((8 + i, 8 + j, 1));
+            }
+        }
+        edges.push((0, 8, 1));
+        Graph::from_edges(16, &edges, None)
+    }
+
+    #[test]
+    fn finds_the_two_cliques() {
+        let g = two_cliques();
+        for det in [false, true] {
+            let cfg = LouvainConfig { deterministic: det, threads: 2, ..Default::default() };
+            let comms = louvain(&g, &cfg);
+            // all of clique 1 together, all of clique 2 together, different
+            assert!((1..8).all(|u| comms[u] == comms[1]), "det={det} {comms:?}");
+            assert!((9..16).all(|u| comms[u] == comms[9]), "det={det}");
+            assert_ne!(comms[1], comms[9], "det={det}");
+        }
+    }
+
+    #[test]
+    fn modularity_improves_over_singletons() {
+        let g = two_cliques();
+        let singletons: Vec<u32> = (0..16).collect();
+        let comms = louvain(&g, &LouvainConfig::default());
+        assert!(modularity(&g, &comms) > modularity(&g, &singletons) + 0.2);
+    }
+
+    #[test]
+    fn deterministic_across_thread_counts() {
+        let g = two_cliques();
+        let run = |threads| {
+            louvain(
+                &g,
+                &LouvainConfig {
+                    deterministic: true,
+                    threads,
+                    seed: 42,
+                    ..Default::default()
+                },
+            )
+        };
+        let a = run(1);
+        let b = run(4);
+        assert_eq!(a, b, "bit-equal across thread counts");
+    }
+
+    #[test]
+    fn handles_trivial_graphs() {
+        let g = Graph::from_edges(3, &[], None);
+        let comms = louvain(&g, &LouvainConfig::default());
+        assert_eq!(comms.len(), 3);
+        let g1 = Graph::from_edges(1, &[], None);
+        assert_eq!(louvain(&g1, &LouvainConfig::default()).len(), 1);
+    }
+}

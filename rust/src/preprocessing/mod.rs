@@ -1,0 +1,48 @@
+//! Preprocessing: community detection for community-aware coarsening
+//! (paper §4.3) — transform the hypergraph into its bipartite graph
+//! representation and run parallel Louvain modularity maximization.
+
+pub mod louvain;
+
+pub use louvain::{louvain, LouvainConfig};
+
+use crate::hypergraph::{bipartite::bipartite_graph, Hypergraph};
+
+/// Community id per hypergraph node, obtained by running Louvain on the
+/// star expansion and dropping the net-vertices' assignments.
+pub fn detect_communities(hg: &Hypergraph, cfg: &LouvainConfig) -> Vec<u32> {
+    let g = bipartite_graph(hg);
+    let comms = louvain(&g, cfg);
+    comms[..hg.num_nodes()].to_vec()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn communities_separate_planted_blocks() {
+        // two densely intra-connected halves with a single bridging net
+        let mut nets = Vec::new();
+        for i in 0..10u32 {
+            for j in i + 1..10 {
+                nets.push(vec![i, j]);
+                nets.push(vec![10 + i, 10 + j]);
+            }
+        }
+        nets.push(vec![0, 10]); // bridge
+        let hg = Hypergraph::from_nets(20, &nets, None, None);
+        let cfg = LouvainConfig { threads: 2, ..LouvainConfig::default() };
+        let comms = detect_communities(&hg, &cfg);
+        assert_eq!(comms.len(), 20);
+        // no community substantially spans both halves
+        for c in comms.iter().copied().collect::<std::collections::HashSet<_>>() {
+            let left = (0..10).filter(|&u| comms[u] == c).count();
+            let right = (10..20).filter(|&u| comms[u] == c).count();
+            assert!(
+                left.min(right) <= 2,
+                "community {c} spans halves: {left} | {right}"
+            );
+        }
+    }
+}

@@ -1,0 +1,237 @@
+//! Parallel flow-based refinement (paper §8, Algorithm 8.1).
+//!
+//! Builds the quotient graph, schedules active block pairs from a shared
+//! FIFO (§8.1), constructs a flow problem per pair (§8.2), improves it
+//! with FlowCutter (§8.3/8.4), and applies the resulting move set to the
+//! global partition under a lock with attributed-gain verification.
+
+pub mod cutter;
+pub mod maxflow;
+pub mod network;
+
+use crate::coordinator::context::Context;
+use crate::datastructures::ConcurrentQueue;
+use crate::partition::PartitionedHypergraph;
+use crate::{BlockId, Gain};
+use std::sync::atomic::{AtomicI64, Ordering};
+use std::sync::Mutex;
+
+/// Parallel active-block-pair scheduling + flow refinement.
+/// Returns the total verified improvement.
+pub fn flow_refine(phg: &PartitionedHypergraph, ctx: &Context) -> Gain {
+    let k = phg.k();
+    if k < 2 {
+        return 0;
+    }
+    let total_gain = AtomicI64::new(0);
+    let apply_lock = Mutex::new(());
+    let objective_before = phg.km1().max(1);
+
+    // several rounds; stop when relative improvement < 0.1% (§8.1)
+    for _round in 0..8 {
+        // all currently adjacent block pairs
+        let mut pairs: Vec<(BlockId, BlockId)> = Vec::new();
+        for b1 in 0..k as BlockId {
+            for b2 in b1 + 1..k as BlockId {
+                if blocks_adjacent(phg, b1, b2) {
+                    pairs.push((b1, b2));
+                }
+            }
+        }
+        if pairs.is_empty() {
+            break;
+        }
+        let queue = ConcurrentQueue::from_iter(pairs);
+        let round_gain = AtomicI64::new(0);
+        // τ·k parallelism cap (§8.1)
+        let workers = ctx
+            .threads
+            .min(((ctx.flow_tau * k as f64).ceil() as usize).max(1))
+            .max(1);
+        std::thread::scope(|s| {
+            for _ in 0..workers {
+                s.spawn(|| {
+                    while let Some((b1, b2)) = queue.pop() {
+                        let g = refine_pair(phg, ctx, b1, b2, &apply_lock);
+                        if g > 0 {
+                            round_gain.fetch_add(g, Ordering::Relaxed);
+                        }
+                    }
+                });
+            }
+        });
+        let rg = round_gain.load(Ordering::Relaxed);
+        total_gain.fetch_add(rg, Ordering::Relaxed);
+        if (rg as f64) < ctx.flow_min_relative_improvement * objective_before as f64 {
+            break;
+        }
+    }
+    total_gain.load(Ordering::Relaxed)
+}
+
+fn blocks_adjacent(phg: &PartitionedHypergraph, b1: BlockId, b2: BlockId) -> bool {
+    phg.hypergraph()
+        .nets()
+        .any(|e| phg.pin_count(e, b1) > 0 && phg.pin_count(e, b2) > 0)
+}
+
+/// One flow refinement step on a block pair (Algorithm 8.1 lines 3–9).
+fn refine_pair(
+    phg: &PartitionedHypergraph,
+    ctx: &Context,
+    b1: BlockId,
+    b2: BlockId,
+    apply_lock: &Mutex<()>,
+) -> Gain {
+    let Some(mut fp) =
+        network::construct_region(phg, b1, b2, ctx.flow_alpha, ctx.epsilon, ctx.flow_distance)
+    else {
+        return 0;
+    };
+    let Some(res) =
+        cutter::flow_cutter(&mut fp, phg.max_block_weight(b1), phg.max_block_weight(b2))
+    else {
+        return 0;
+    };
+    if res.delta_exp < 0 {
+        return 0;
+    }
+    // moves: region nodes whose side differs from their current block
+    let moves: Vec<(crate::NodeId, BlockId)> = fp
+        .region
+        .iter()
+        .zip(&res.source_assignment)
+        .filter_map(|(&u, &src_side)| {
+            let target = if src_side { b1 } else { b2 };
+            (phg.block_of(u) != target).then_some((u, target))
+        })
+        .collect();
+    if moves.is_empty() {
+        return 0;
+    }
+
+    // apply under the global lock (§8.1 "Apply Moves"): filter nodes no
+    // longer in their expected block, check balance, verify with
+    // attributed gains, revert on regression
+    let _guard = apply_lock.lock().unwrap();
+    let hg = phg.hypergraph();
+    let valid: Vec<(crate::NodeId, BlockId, BlockId)> = moves
+        .iter()
+        .filter_map(|&(u, to)| {
+            let from = phg.block_of(u);
+            ((from == b1 || from == b2) && from != to).then_some((u, from, to))
+        })
+        .collect();
+    // balance as if all moves were applied
+    let mut delta_w = [0i64; 2];
+    for &(u, from, _) in &valid {
+        let w = hg.node_weight(u);
+        if from == b1 {
+            delta_w[0] -= w;
+            delta_w[1] += w;
+        } else {
+            delta_w[0] += w;
+            delta_w[1] -= w;
+        }
+    }
+    if phg.block_weight(b1) + delta_w[0] > phg.max_block_weight(b1)
+        || phg.block_weight(b2) + delta_w[1] > phg.max_block_weight(b2)
+    {
+        return 0;
+    }
+    let mut applied: Vec<(crate::NodeId, BlockId)> = Vec::with_capacity(valid.len());
+    let mut delta: Gain = 0;
+    for &(u, from, to) in &valid {
+        let out = phg.move_unchecked(u, to, None);
+        delta += out.attributed_gain;
+        applied.push((u, from));
+    }
+    if delta < 0 {
+        for &(u, from) in applied.iter().rev() {
+            phg.move_unchecked(u, from, None);
+        }
+        return 0;
+    }
+    delta
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::context::{Context, Preset};
+    use crate::generators::{planted_hypergraph, PlantedParams};
+    use crate::util::Rng;
+    use std::sync::Arc;
+
+    fn ctx(k: usize, threads: usize, seed: u64) -> Context {
+        Context::new(Preset::DefaultFlows, k, 0.1).with_threads(threads).with_seed(seed)
+    }
+
+    #[test]
+    fn improves_chain_instance() {
+        let hg = Arc::new(crate::hypergraph::Hypergraph::from_nets(
+            6,
+            &[
+                vec![0, 1],
+                vec![0, 1],
+                vec![1, 2],
+                vec![1, 2],
+                vec![2, 3],
+                vec![3, 4],
+                vec![3, 4],
+                vec![4, 5],
+                vec![4, 5],
+            ],
+            None,
+            None,
+        ));
+        let mut phg = PartitionedHypergraph::new(hg, 2);
+        phg.set_uniform_max_weight(0.4);
+        phg.assign_all(&[0, 0, 1, 1, 1, 1], 1);
+        let before = phg.km1();
+        let g = flow_refine(&phg, &ctx(2, 2, 1));
+        assert!(g > 0, "flows must fix the misplaced boundary");
+        assert_eq!(phg.km1(), before - g);
+        assert!(phg.is_balanced());
+        phg.verify_consistency().unwrap();
+    }
+
+    #[test]
+    fn improves_perturbed_planted_kway() {
+        let p = PlantedParams { n: 200, m: 400, blocks: 4, ..Default::default() };
+        let hg = Arc::new(planted_hypergraph(&p, 3));
+        let n = hg.num_nodes();
+        let mut rng = Rng::new(99);
+        let mut parts: Vec<BlockId> = (0..n).map(|u| (u * 4 / n) as BlockId).collect();
+        for _ in 0..25 {
+            parts[rng.next_below(n)] = rng.next_below(4) as BlockId;
+        }
+        let mut phg = PartitionedHypergraph::new(hg, 4);
+        phg.set_uniform_max_weight(0.25);
+        phg.assign_all(&parts, 1);
+        let before = phg.km1();
+        let g = flow_refine(&phg, &ctx(4, 4, 3));
+        assert!(g >= 0);
+        assert_eq!(phg.km1(), before - g);
+        assert!(phg.is_balanced());
+        phg.verify_consistency().unwrap();
+    }
+
+    #[test]
+    fn never_applies_regressions() {
+        for seed in 0..4u64 {
+            let p = PlantedParams { n: 120, m: 260, blocks: 3, ..Default::default() };
+            let hg = Arc::new(planted_hypergraph(&p, seed));
+            let n = hg.num_nodes();
+            let parts: Vec<BlockId> = (0..n).map(|u| (u * 3 / n) as BlockId).collect();
+            let mut phg = PartitionedHypergraph::new(hg, 3);
+            phg.set_uniform_max_weight(0.15);
+            phg.assign_all(&parts, 1);
+            let before = phg.km1();
+            let g = flow_refine(&phg, &ctx(3, 2, seed));
+            assert!(g >= 0, "seed {seed}");
+            assert!(phg.km1() <= before, "seed {seed}");
+            assert!(phg.is_balanced());
+        }
+    }
+}

@@ -1,0 +1,247 @@
+//! Flow network construction (paper §8.2): grow a size-constrained region
+//! `B = B₁ ∪ B₂` around the cut nets of a block pair via two BFSs, then
+//! build the Lawler expansion with all nodes outside `B` contracted into
+//! the source / sink.
+
+use super::maxflow::FlowNetwork;
+use crate::partition::PartitionedHypergraph;
+use crate::{BlockId, NodeId, NodeWeight};
+use std::collections::VecDeque;
+
+/// The extracted flow problem for one block pair.
+pub struct FlowProblem {
+    pub net: FlowNetwork,
+    /// region hypernodes (parent ids); flow-node id = 2 + index
+    pub region: Vec<NodeId>,
+    /// BFS distance of each region node from the cut (piercing heuristic)
+    pub distance: Vec<u32>,
+    /// original side of each region node (true = block b1)
+    pub side: Vec<bool>,
+    /// node weights aligned with `region`
+    pub weight: Vec<NodeWeight>,
+    /// total weight contracted into the source (block `b1` outside B)
+    pub source_weight: NodeWeight,
+    /// total weight contracted into the sink (block `b2` outside B)
+    pub sink_weight: NodeWeight,
+    /// weight of region nets currently cut between b1 and b2
+    pub initial_cut: i64,
+    pub b1: BlockId,
+    pub b2: BlockId,
+}
+
+pub const SOURCE: u32 = 0;
+pub const SINK: u32 = 1;
+
+/// Grow the region for blocks `(b1, b2)` (paper §8.2): BFS from the
+/// boundary nodes of each block, bounded by `(1+αε)·⌈c(V₁∪V₂)/2⌉ −
+/// c(other block)` and by hop distance δ.
+pub fn construct_region(
+    phg: &PartitionedHypergraph,
+    b1: BlockId,
+    b2: BlockId,
+    alpha: f64,
+    eps: f64,
+    max_distance: usize,
+) -> Option<FlowProblem> {
+    let hg = phg.hypergraph();
+    // cut nets between the pair and their boundary pins
+    let mut frontier1: Vec<NodeId> = Vec::new();
+    let mut frontier2: Vec<NodeId> = Vec::new();
+    let mut initial_cut = 0i64;
+    let mut seen_node = vec![false; hg.num_nodes()];
+    for e in hg.nets() {
+        if phg.pin_count(e, b1) > 0 && phg.pin_count(e, b2) > 0 {
+            initial_cut += hg.net_weight(e);
+            for &p in hg.pins(e) {
+                if seen_node[p as usize] {
+                    continue;
+                }
+                let bp = phg.block_of(p);
+                if bp == b1 {
+                    seen_node[p as usize] = true;
+                    frontier1.push(p);
+                } else if bp == b2 {
+                    seen_node[p as usize] = true;
+                    frontier2.push(p);
+                }
+            }
+        }
+    }
+    if initial_cut == 0 {
+        return None;
+    }
+
+    let pair_weight = phg.block_weight(b1) + phg.block_weight(b2);
+    let half = (pair_weight as f64 / 2.0).ceil();
+    let cap1 = ((1.0 + alpha * eps) * half) as NodeWeight - phg.block_weight(b2);
+    let cap2 = ((1.0 + alpha * eps) * half) as NodeWeight - phg.block_weight(b1);
+
+    // BFS per side, bounded by weight capacity and hop distance
+    let mut region: Vec<NodeId> = Vec::new();
+    let mut distance: Vec<u32> = Vec::new();
+    let mut side: Vec<bool> = Vec::new();
+    let mut grow = |frontier: &[NodeId], block: BlockId, cap: NodeWeight| {
+        let mut w_acc: NodeWeight = 0;
+        let mut q: VecDeque<(NodeId, u32)> = VecDeque::new();
+        let mut visited = vec![false; hg.num_nodes()];
+        for &u in frontier {
+            visited[u as usize] = true;
+            q.push_back((u, 0));
+        }
+        while let Some((u, dist)) = q.pop_front() {
+            if w_acc + hg.node_weight(u) > cap {
+                continue;
+            }
+            w_acc += hg.node_weight(u);
+            region.push(u);
+            distance.push(dist);
+            side.push(block == b1);
+            if dist as usize >= max_distance {
+                continue;
+            }
+            for &e in hg.incident_nets(u) {
+                for &v in hg.pins(e) {
+                    if !visited[v as usize] && phg.block_of(v) == block {
+                        visited[v as usize] = true;
+                        q.push_back((v, dist + 1));
+                    }
+                }
+            }
+        }
+        w_acc
+    };
+    let w1 = grow(&frontier1, b1, cap1.max(0));
+    let w2 = grow(&frontier2, b2, cap2.max(0));
+    if region.is_empty() {
+        return None;
+    }
+
+    // Lawler expansion over the region's nets
+    let mut flow_id = vec![u32::MAX; hg.num_nodes()];
+    for (i, &u) in region.iter().enumerate() {
+        flow_id[u as usize] = 2 + i as u32;
+    }
+    // collect nets incident to the region with ≥1 pin in {b1, b2}
+    let mut net_seen = vec![false; hg.num_nets()];
+    let mut nets: Vec<crate::EdgeId> = Vec::new();
+    for &u in &region {
+        for &e in hg.incident_nets(u) {
+            if !net_seen[e as usize] {
+                net_seen[e as usize] = true;
+                // only nets relevant to the pair
+                if phg.pin_count(e, b1) > 0 || phg.pin_count(e, b2) > 0 {
+                    nets.push(e);
+                }
+            }
+        }
+    }
+
+    let num_flow_nodes = 2 + region.len() + 2 * nets.len();
+    let mut net_flow = FlowNetwork::new(num_flow_nodes);
+    let e_in_base = (2 + region.len()) as u32;
+    for (j, &e) in nets.iter().enumerate() {
+        let w = hg.net_weight(e);
+        let e_in = e_in_base + 2 * j as u32;
+        let e_out = e_in + 1;
+        net_flow.add_edge(e_in, e_out, w); // bridging edge
+        let mut touches_source = false;
+        let mut touches_sink = false;
+        for &p in hg.pins(e) {
+            let fid = flow_id[p as usize];
+            if fid != u32::MAX {
+                // bounded pin edges (paper's ω(e) optimization)
+                net_flow.add_edge(fid, e_in, w);
+                net_flow.add_edge(e_out, fid, w);
+            } else {
+                let bp = phg.block_of(p);
+                if bp == b1 {
+                    touches_source = true;
+                } else if bp == b2 {
+                    touches_sink = true;
+                }
+                // pins in other blocks do not participate in this pair
+            }
+        }
+        if touches_source {
+            net_flow.add_edge(SOURCE, e_in, w);
+            net_flow.add_edge(e_out, SOURCE, w);
+        }
+        if touches_sink {
+            net_flow.add_edge(SINK, e_in, w);
+            net_flow.add_edge(e_out, SINK, w);
+        }
+    }
+
+    let weight: Vec<NodeWeight> = region.iter().map(|&u| hg.node_weight(u)).collect();
+    Some(FlowProblem {
+        net: net_flow,
+        source_weight: phg.block_weight(b1) - w1,
+        sink_weight: phg.block_weight(b2) - w2,
+        region,
+        distance,
+        side,
+        weight,
+        initial_cut,
+        b1,
+        b2,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hypergraph::Hypergraph;
+    use std::sync::Arc;
+
+    fn setup() -> PartitionedHypergraph {
+        // chain of nets across the cut
+        let hg = Arc::new(Hypergraph::from_nets(
+            8,
+            &[vec![0, 1], vec![1, 2], vec![2, 3], vec![3, 4], vec![4, 5], vec![5, 6], vec![6, 7]],
+            None,
+            None,
+        ));
+        let mut phg = PartitionedHypergraph::new(hg, 2);
+        phg.set_uniform_max_weight(0.5);
+        phg.assign_all(&[0, 0, 0, 0, 1, 1, 1, 1], 1);
+        phg
+    }
+
+    #[test]
+    fn region_grows_around_cut() {
+        let phg = setup();
+        let fp = construct_region(&phg, 0, 1, 16.0, 0.03, 2).unwrap();
+        assert_eq!(fp.initial_cut, 1); // net {3,4}
+        // boundary nodes 3 (block 0) and 4 (block 1) plus ≤2 hops
+        assert!(fp.region.contains(&3) && fp.region.contains(&4));
+        assert!(fp.distance.iter().all(|&d| d <= 2));
+        // weights accounted: region + contracted = blocks
+        let region_w: i64 = fp.weight.iter().sum();
+        assert_eq!(
+            region_w + fp.source_weight + fp.sink_weight,
+            phg.block_weight(0) + phg.block_weight(1)
+        );
+    }
+
+    #[test]
+    fn min_cut_on_network_equals_hyperedge_cut() {
+        let phg = setup();
+        let mut fp = construct_region(&phg, 0, 1, 16.0, 0.03, 2).unwrap();
+        let n = fp.net.num_nodes();
+        let mut src = vec![false; n];
+        let mut snk = vec![false; n];
+        src[SOURCE as usize] = true;
+        snk[SINK as usize] = true;
+        let f = fp.net.max_preflow(&src, &snk);
+        assert_eq!(f, 1, "chain min cut is one net");
+    }
+
+    #[test]
+    fn no_region_for_uncut_pair() {
+        let hg = Arc::new(Hypergraph::from_nets(4, &[vec![0, 1], vec![2, 3]], None, None));
+        let mut phg = PartitionedHypergraph::new(hg, 2);
+        phg.set_uniform_max_weight(0.5);
+        phg.assign_all(&[0, 0, 1, 1], 1);
+        assert!(construct_region(&phg, 0, 1, 16.0, 0.03, 2).is_none());
+    }
+}

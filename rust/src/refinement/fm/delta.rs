@@ -1,0 +1,257 @@
+//! Thread-local delta partition ΔΠ (paper §7).
+//!
+//! Localized FM searches perform moves *locally* first: the delta
+//! partition overlays block assignments, pin counts and block weights on
+//! top of the shared partition via hash tables, so other threads never see
+//! speculative moves. Once a search finds an improvement, the pending
+//! local moves are applied to the global partition and the overlay is
+//! cleared. Memory stays proportional to the number of pending moves.
+
+use crate::partition::PartitionedHypergraph;
+use crate::{BlockId, EdgeId, Gain, NodeId, NodeWeight};
+use rustc_hash::FxHashMap;
+
+pub struct DeltaPartition<'a> {
+    phg: &'a PartitionedHypergraph,
+    k: usize,
+    part: FxHashMap<NodeId, BlockId>,
+    /// (e·k + b) → delta on Φ(e, b)
+    pin_delta: FxHashMap<u64, i32>,
+    weight_delta: Vec<NodeWeight>,
+}
+
+impl<'a> DeltaPartition<'a> {
+    pub fn new(phg: &'a PartitionedHypergraph) -> Self {
+        DeltaPartition {
+            k: phg.k(),
+            part: FxHashMap::default(),
+            pin_delta: FxHashMap::default(),
+            weight_delta: vec![0; phg.k()],
+            phg,
+        }
+    }
+
+    #[inline]
+    pub fn block_of(&self, u: NodeId) -> BlockId {
+        self.part.get(&u).copied().unwrap_or_else(|| self.phg.block_of(u))
+    }
+
+    #[inline]
+    pub fn pin_count(&self, e: EdgeId, b: BlockId) -> i64 {
+        let base = self.phg.pin_count(e, b) as i64;
+        base + self.pin_delta.get(&(e as u64 * self.k as u64 + b as u64)).copied().unwrap_or(0)
+            as i64
+    }
+
+    #[inline]
+    pub fn block_weight(&self, b: BlockId) -> NodeWeight {
+        self.phg.block_weight(b) + self.weight_delta[b as usize]
+    }
+
+    /// Number of pending local moves.
+    pub fn pending(&self) -> usize {
+        self.part.len()
+    }
+
+    /// Local move with balance check against combined weights.
+    /// Returns the exact local connectivity gain.
+    pub fn try_move(&mut self, u: NodeId, to: BlockId) -> Option<Gain> {
+        let from = self.block_of(u);
+        if from == to {
+            return None;
+        }
+        let w = self.phg.hypergraph().node_weight(u);
+        if self.block_weight(to) + w > self.phg.max_block_weight(to) {
+            return None;
+        }
+        self.part.insert(u, to);
+        self.weight_delta[from as usize] -= w;
+        self.weight_delta[to as usize] += w;
+        let mut gain: Gain = 0;
+        let ku = self.k as u64;
+        for &e in self.phg.hypergraph().incident_nets(u) {
+            let we = self.phg.hypergraph().net_weight(e);
+            let kf = e as u64 * ku + from as u64;
+            let kt = e as u64 * ku + to as u64;
+            let dfrom = self.pin_delta.entry(kf).or_insert(0);
+            *dfrom -= 1;
+            let phi_from = self.phg.pin_count(e, from) as i64 + *dfrom as i64;
+            let dto = self.pin_delta.entry(kt).or_insert(0);
+            *dto += 1;
+            let phi_to = self.phg.pin_count(e, to) as i64 + *dto as i64;
+            debug_assert!(phi_from >= 0);
+            if phi_from == 0 {
+                gain += we;
+            }
+            if phi_to == 1 {
+                gain -= we;
+            }
+        }
+        Some(gain)
+    }
+
+    /// Exact max-gain move in the combined (global + delta) state.
+    ///
+    /// Single pass over the incident nets (perf-critical; see
+    /// EXPERIMENTS.md §Perf): with `W = Σ ω(e)` over `I(u)`, the penalty
+    /// is `p(u,t) = W − Σ_{e: Φ(e,t)>0} ω(e)`, so accumulating the
+    /// "present weight" per connected block in one sweep replaces the
+    /// per-candidate re-scan.
+    pub fn max_gain_move(&self, u: NodeId) -> Option<(Gain, BlockId)> {
+        let from = self.block_of(u);
+        let w = self.phg.hypergraph().node_weight(u);
+        let hg = self.phg.hypergraph();
+        let mut benefit: Gain = 0;
+        let mut total_w: Gain = 0;
+        // present[t] = Σ ω(e) over nets with at least one pin in t
+        let mut present: Vec<(BlockId, Gain)> = Vec::new();
+        let ku = self.k as u64;
+        for &e in hg.incident_nets(u) {
+            let we = hg.net_weight(e);
+            total_w += we;
+            if self.pin_count(e, from) == 1 {
+                benefit += we;
+            }
+            let mut add = |b: BlockId| {
+                if b == from {
+                    return;
+                }
+                match present.iter_mut().find(|(pb, _)| *pb == b) {
+                    Some((_, pw)) => *pw += we,
+                    None => present.push((b, we)),
+                }
+            };
+            if self.pin_delta.is_empty() {
+                for b in self.phg.connectivity_set(e) {
+                    add(b);
+                }
+            } else {
+                // combined state: global connectivity adjusted by deltas
+                for b in 0..self.k as BlockId {
+                    let d = self
+                        .pin_delta
+                        .get(&(e as u64 * ku + b as u64))
+                        .copied()
+                        .unwrap_or(0) as i64;
+                    if self.phg.pin_count(e, b) as i64 + d > 0 {
+                        add(b);
+                    }
+                }
+            }
+        }
+        let mut best: Option<(Gain, BlockId)> = None;
+        for &(t, pw) in &present {
+            if self.block_weight(t) + w > self.phg.max_block_weight(t) {
+                continue;
+            }
+            let g = benefit - (total_w - pw);
+            match best {
+                None => best = Some((g, t)),
+                Some((bg, bb)) => {
+                    if g > bg || (g == bg && self.block_weight(t) < self.block_weight(bb)) {
+                        best = Some((g, t));
+                    }
+                }
+            }
+        }
+        best
+    }
+
+    /// Drop all local state (after the pending moves were applied
+    /// globally, ΔΠ ← Π).
+    pub fn clear(&mut self) {
+        self.part.clear();
+        self.pin_delta.clear();
+        self.weight_delta.iter_mut().for_each(|w| *w = 0);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hypergraph::Hypergraph;
+    use std::sync::Arc;
+
+    fn setup() -> PartitionedHypergraph {
+        let hg = Arc::new(Hypergraph::from_nets(
+            7,
+            &[vec![0, 2], vec![0, 1, 3, 4], vec![3, 4, 6], vec![2, 5, 6]],
+            None,
+            None,
+        ));
+        let mut phg = PartitionedHypergraph::new(hg, 2);
+        phg.set_uniform_max_weight(1.0);
+        phg.assign_all(&[0, 0, 0, 1, 1, 1, 1], 1);
+        phg
+    }
+
+    #[test]
+    fn overlay_isolates_global_state() {
+        let phg = setup();
+        let km1_before = phg.km1();
+        let mut d = DeltaPartition::new(&phg);
+        let g = d.try_move(0, 1).unwrap();
+        assert_eq!(d.block_of(0), 1);
+        assert_eq!(phg.block_of(0), 0, "global untouched");
+        assert_eq!(phg.km1(), km1_before);
+        // local pin counts shifted
+        assert_eq!(d.pin_count(0, 0), 1);
+        assert_eq!(d.pin_count(0, 1), 1);
+        assert_eq!(g, -1); // same as the global move test in partition::tests
+        d.clear();
+        assert_eq!(d.block_of(0), 0);
+        assert_eq!(d.pin_count(0, 0), 2);
+    }
+
+    #[test]
+    fn local_gains_match_global_replay() {
+        let phg = setup();
+        let mut d = DeltaPartition::new(&phg);
+        let mut rng = crate::util::Rng::new(9);
+        let mut local_gains = Vec::new();
+        let mut moves = Vec::new();
+        let mut moved = vec![false; 7];
+        for _ in 0..10 {
+            let u = rng.next_below(7) as NodeId;
+            if moved[u as usize] {
+                continue;
+            }
+            let to = 1 - d.block_of(u);
+            if let Some(g) = d.try_move(u, to) {
+                moved[u as usize] = true;
+                local_gains.push(g);
+                moves.push((u, to));
+            }
+        }
+        // replay on global: attributed gains must match one by one
+        for ((u, to), lg) in moves.iter().zip(&local_gains) {
+            let out = phg.move_unchecked(*u, *to, None);
+            assert_eq!(out.attributed_gain, *lg);
+        }
+        phg.verify_consistency().unwrap();
+    }
+
+    #[test]
+    fn balance_respected_locally() {
+        let hg = Arc::new(Hypergraph::from_nets(4, &[vec![0, 1], vec![2, 3]], None, None));
+        let mut phg = PartitionedHypergraph::new(hg, 2);
+        phg.set_max_weights(vec![3, 3]);
+        phg.assign_all(&[0, 0, 1, 1], 1);
+        let mut d = DeltaPartition::new(&phg);
+        assert!(d.try_move(0, 1).is_some()); // block 1 now at 3 (locally)
+        assert!(d.try_move(1, 1).is_none(), "local weight limit enforced");
+    }
+
+    #[test]
+    fn max_gain_move_sees_local_targets() {
+        let phg = setup();
+        let mut d = DeltaPartition::new(&phg);
+        let (g0, t0) = d.max_gain_move(6).unwrap();
+        let (g1, t1) = phg.max_gain_move(6).unwrap();
+        assert_eq!((g0, t0), (g1, t1), "agrees with global when no deltas");
+        d.try_move(6, 0).unwrap();
+        // now 6 is in block 0 locally; moving back should look good again
+        let (_, back) = d.max_gain_move(6).unwrap();
+        assert_eq!(back, 1);
+    }
+}

@@ -1,0 +1,344 @@
+//! The parallel localized k-way FM algorithm (paper §7, Algorithm 7.1).
+//!
+//! Rounds: all boundary nodes enter a shared task queue; threads poll
+//! batches of seed nodes and run *localized* FM searches that expand to
+//! neighbors of moved nodes. Searches own their nodes exclusively, move
+//! them on a thread-local [`DeltaPartition`] first, and publish the
+//! pending moves to the global partition as soon as the local gain is
+//! positive. After the queue drains, the exact gains of the global move
+//! sequence are recomputed in parallel (§6.3) and the sequence is
+//! reverted to its best prefix.
+
+pub mod delta;
+pub mod stop;
+
+pub use delta::DeltaPartition;
+pub use stop::AdaptiveStoppingRule;
+
+use crate::coordinator::context::Context;
+use crate::datastructures::{AddressablePQ, ConcurrentQueue};
+use crate::partition::{
+    gain_recalculation::{recalculate_gains, revert_to_best_prefix},
+    GainTable, Move, PartitionedHypergraph,
+};
+use crate::util::rng::hash2;
+use crate::util::Rng;
+use crate::{Gain, NodeId};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Mutex;
+
+/// Summary of an FM invocation.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct FmStats {
+    pub rounds: usize,
+    pub improvement: Gain,
+    pub moves_applied: usize,
+}
+
+/// Cap on net size during search expansion: gain updates on huge nets are
+/// prohibitively expensive and rarely change decisions (the paper notes
+/// FM outliers on instances with many large nets).
+const EXPANSION_NET_SIZE_LIMIT: usize = 512;
+
+/// Parallel k-way FM refinement; returns round/improvement statistics.
+pub fn fm_refine(phg: &PartitionedHypergraph, ctx: &Context) -> FmStats {
+    fm_refine_with_seeds(phg, ctx, None)
+}
+
+/// FM restricted to the given seed nodes (the highly-localized variant
+/// run after each n-level batch uncontraction, paper §9). `None` seeds
+/// all boundary nodes.
+pub fn fm_refine_with_seeds(
+    phg: &PartitionedHypergraph,
+    ctx: &Context,
+    seed_set: Option<&[NodeId]>,
+) -> FmStats {
+    let n = phg.hypergraph().num_nodes();
+    let gt = GainTable::new(n, phg.k());
+    gt.initialize(phg, ctx.threads);
+    let mut stats = FmStats::default();
+
+    for round in 0..ctx.fm_max_rounds {
+        // --- seed queue: boundary nodes (of the seed set), random order ---
+        let mut boundary: Vec<NodeId> = match seed_set {
+            Some(set) => set.iter().copied().filter(|&u| phg.is_border(u)).collect(),
+            None => (0..n as NodeId).filter(|&u| phg.is_border(u)).collect(),
+        };
+        Rng::new(hash2(ctx.seed ^ 0xf3, round as u64)).shuffle(&mut boundary);
+        if boundary.is_empty() {
+            break;
+        }
+        let queue = ConcurrentQueue::from_iter(boundary);
+        let owner: Vec<AtomicBool> = (0..n).map(|_| AtomicBool::new(false)).collect();
+        let global_moves: Mutex<Vec<Move>> = Mutex::new(Vec::new());
+
+        std::thread::scope(|s| {
+            for _ in 0..ctx.threads.max(1) {
+                s.spawn(|| {
+                    let mut search = LocalSearch::new(phg, &gt, ctx);
+                    loop {
+                        let seeds = queue.pop_many(ctx.fm_seeds_per_poll.max(1));
+                        if seeds.is_empty() {
+                            break;
+                        }
+                        search.run(&seeds, &owner, &global_moves);
+                    }
+                });
+            }
+        });
+
+        // --- global recalculation + best-prefix revert (§6.3) ---
+        let moves = global_moves.into_inner().unwrap();
+        if moves.is_empty() {
+            break;
+        }
+        let gains = recalculate_gains(phg, &moves, ctx.threads);
+        let (len, total) = revert_to_best_prefix(phg, &moves, &gains, Some(&gt));
+        // repair benefits of all touched nodes (paper: recompute after the
+        // round instead of immediately after each move)
+        for m in &moves {
+            gt.recompute_benefit(phg, m.node);
+        }
+        stats.rounds = round + 1;
+        stats.improvement += total;
+        stats.moves_applied += len;
+        if total <= 0 {
+            break;
+        }
+    }
+    stats
+}
+
+/// One thread's localized FM search state (reused across seed batches).
+struct LocalSearch<'a> {
+    phg: &'a PartitionedHypergraph,
+    gt: &'a GainTable,
+    ctx: &'a Context,
+    delta: DeltaPartition<'a>,
+    pq: AddressablePQ,
+}
+
+impl<'a> LocalSearch<'a> {
+    fn new(phg: &'a PartitionedHypergraph, gt: &'a GainTable, ctx: &'a Context) -> Self {
+        LocalSearch { phg, gt, ctx, delta: DeltaPartition::new(phg), pq: AddressablePQ::new() }
+    }
+
+    /// Algorithm 7.1's `LocalizedFMRefinement`.
+    fn run(
+        &mut self,
+        seeds: &[NodeId],
+        owner: &[AtomicBool],
+        global_moves: &Mutex<Vec<Move>>,
+    ) {
+        self.pq.clear();
+        self.delta.clear();
+        let mut acquired: Vec<NodeId> = Vec::new();
+        for &u in seeds {
+            if try_acquire(owner, u) {
+                acquired.push(u);
+                if let Some((g, _)) = self.gt.max_gain_move(self.phg, u) {
+                    self.pq.insert(u, g);
+                }
+            }
+        }
+        let mut local_moves: Vec<Move> = Vec::new();
+        let mut dtotal: Gain = 0;
+        let mut moved_globally: Vec<NodeId> = Vec::new();
+        let mut stop =
+            AdaptiveStoppingRule::new(self.ctx.fm_adaptive_alpha, self.phg.hypergraph().num_nodes());
+
+        while let Some((u, g)) = self.pq.pop_max() {
+            // lazy PQ: recompute the exact (delta-aware) best move
+            let Some((g2, t2)) = self.delta.max_gain_move(u) else { continue };
+            if g2 < g {
+                self.pq.insert(u, g2);
+                continue;
+            }
+            let from = self.delta.block_of(u);
+            let Some(gain) = self.delta.try_move(u, t2) else { continue };
+            debug_assert_eq!(gain, g2);
+            dtotal += gain;
+            local_moves.push(Move { node: u, from, to: t2 });
+            stop.push(gain);
+
+            // improvement (or perfect-balance tie): publish to global
+            if dtotal > 0 {
+                if self.apply_globally(&mut local_moves, global_moves, &mut moved_globally) {
+                    dtotal = 0;
+                    stop.improvement_found();
+                } else {
+                    break; // global balance conflict: abort this search
+                }
+            }
+
+            // expand to neighbors of the moved node
+            self.expand(u, owner, &mut acquired);
+
+            if stop.should_stop() {
+                break;
+            }
+        }
+        // drop unpublished local moves (ΔΠ discarded implicitly)
+        self.delta.clear();
+        // release ownership of nodes that were not globally moved
+        for &u in &acquired {
+            if !moved_globally.contains(&u) {
+                owner[u as usize].store(false, Ordering::Release);
+            }
+        }
+    }
+
+    /// Apply the pending local moves to the global partition (Alg. 7.1
+    /// line 18). Returns false if a balance conflict forced a rollback.
+    fn apply_globally(
+        &mut self,
+        local_moves: &mut Vec<Move>,
+        global_moves: &Mutex<Vec<Move>>,
+        moved_globally: &mut Vec<NodeId>,
+    ) -> bool {
+        let mut applied: Vec<Move> = Vec::with_capacity(local_moves.len());
+        for m in local_moves.iter() {
+            if self.phg.try_move(m.node, m.to, Some(self.gt)).is_some() {
+                applied.push(*m);
+            } else {
+                // rollback: another thread consumed the balance slack
+                for a in applied.iter().rev() {
+                    self.phg.move_unchecked(a.node, a.from, Some(self.gt));
+                }
+                local_moves.clear();
+                self.delta.clear();
+                return false;
+            }
+        }
+        moved_globally.extend(applied.iter().map(|m| m.node));
+        global_moves.lock().unwrap().extend(applied);
+        local_moves.clear();
+        self.delta.clear();
+        true
+    }
+
+    /// Claim the neighbors of a moved node and (re)insert them in the PQ.
+    ///
+    /// PQ keys come from the *global gain table* (O(k) per node — the
+    /// paper's "use the gain table … combining global gain table and ΔΠ
+    /// data"); the exact delta-aware gain is recomputed lazily at pop
+    /// time, so temporarily stale keys only cost a reinsertion.
+    fn expand(&mut self, u: NodeId, owner: &[AtomicBool], acquired: &mut Vec<NodeId>) {
+        let hg = self.phg.hypergraph();
+        for &e in hg.incident_nets(u) {
+            if hg.net_size(e) > EXPANSION_NET_SIZE_LIMIT {
+                continue;
+            }
+            for &v in hg.pins(e) {
+                if v == u {
+                    continue;
+                }
+                if self.pq.contains(v) {
+                    if let Some((g, _)) = self.gt.max_gain_move(self.phg, v) {
+                        self.pq.adjust(v, g);
+                    }
+                } else if !owner[v as usize].load(Ordering::Relaxed) && try_acquire(owner, v) {
+                    acquired.push(v);
+                    if let Some((g, _)) = self.gt.max_gain_move(self.phg, v) {
+                        self.pq.insert(v, g);
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[inline]
+fn try_acquire(owner: &[AtomicBool], u: NodeId) -> bool {
+    !owner[u as usize].swap(true, Ordering::AcqRel)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::context::{Context, Preset};
+    use crate::generators::{planted_hypergraph, PlantedParams};
+    use crate::BlockId;
+    use std::sync::Arc;
+
+    fn ctx(k: usize, threads: usize, seed: u64) -> Context {
+        Context::new(Preset::Default, k, 0.03).with_threads(threads).with_seed(seed)
+    }
+
+    fn perturbed(seed: u64, k: usize, flips: usize) -> PartitionedHypergraph {
+        let p = PlantedParams { n: 300, m: 600, blocks: k, ..Default::default() };
+        let hg = Arc::new(planted_hypergraph(&p, seed));
+        let n = hg.num_nodes();
+        let mut rng = Rng::new(seed ^ 0x123);
+        let mut parts: Vec<BlockId> = (0..n).map(|u| (u * k / n) as BlockId).collect();
+        for _ in 0..flips {
+            parts[rng.next_below(n)] = rng.next_below(k) as BlockId;
+        }
+        let mut phg = PartitionedHypergraph::new(hg, k);
+        phg.set_uniform_max_weight(0.3);
+        phg.assign_all(&parts, 1);
+        phg
+    }
+
+    #[test]
+    fn fm_improves_and_accounts_exactly() {
+        for threads in [1, 4] {
+            let phg = perturbed(2, 2, 60);
+            let before = phg.km1();
+            let stats = fm_refine(&phg, &ctx(2, threads, 2));
+            assert!(stats.improvement > 0, "t={threads}: no improvement");
+            assert_eq!(phg.km1(), before - stats.improvement, "t={threads}");
+            assert!(phg.is_balanced());
+            phg.verify_consistency().unwrap();
+        }
+    }
+
+    #[test]
+    fn fm_beats_lp_on_non_trivial_instances() {
+        // FM escapes local optima LP cannot (negative-gain move sets)
+        let phg_lp = perturbed(7, 4, 90);
+        let phg_fm = perturbed(7, 4, 90);
+        assert_eq!(phg_lp.km1(), phg_fm.km1());
+        crate::refinement::lp::lp_refine(&phg_lp, &ctx(4, 2, 7));
+        fm_refine(&phg_fm, &ctx(4, 2, 7));
+        crate::refinement::lp::lp_refine(&phg_fm, &ctx(4, 2, 7));
+        assert!(
+            phg_fm.km1() <= phg_lp.km1(),
+            "FM({}) should be at least as good as LP({})",
+            phg_fm.km1(),
+            phg_lp.km1()
+        );
+    }
+
+    #[test]
+    fn fm_never_worsens() {
+        for seed in 0..5u64 {
+            let phg = perturbed(seed, 3, 40);
+            let before = phg.km1();
+            let stats = fm_refine(&phg, &ctx(3, 2, seed));
+            assert!(stats.improvement >= 0, "best-prefix revert forbids regressions");
+            assert!(phg.km1() <= before);
+            phg.verify_consistency().unwrap();
+        }
+    }
+
+    #[test]
+    fn fm_respects_balance() {
+        let phg = perturbed(11, 2, 50);
+        fm_refine(&phg, &ctx(2, 4, 11));
+        assert!(phg.is_balanced());
+        assert!(phg.imbalance() <= 0.03 + 1e-9);
+    }
+
+    #[test]
+    fn sequential_twoway_fm_for_bipartitions() {
+        // the IP portfolio uses fm_refine with 1 thread on k=2
+        let phg = perturbed(13, 2, 80);
+        let before = phg.km1();
+        let mut c = ctx(2, 1, 13);
+        c.fm_max_rounds = 5;
+        let stats = fm_refine(&phg, &c);
+        assert!(stats.improvement > 0);
+        assert_eq!(phg.km1(), before - stats.improvement);
+    }
+}

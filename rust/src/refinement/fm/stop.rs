@@ -1,0 +1,120 @@
+//! The adaptive stopping rule of Osipov & Sanders (paper §7).
+//!
+//! Models the gains observed since the last improvement as i.i.d. normal
+//! and terminates a localized search when further improvement has become
+//! unlikely: stop once `s·µ² > α·σ² + β`, where `µ` (< 0 in the
+//! interesting case) and `σ²` are the mean/variance of the last `s` gains
+//! and `β = ln(n)` grows slowly with the instance.
+
+/// Streaming mean/variance over the gains since the last improvement.
+pub struct AdaptiveStoppingRule {
+    alpha: f64,
+    beta: f64,
+    s: u64,
+    mean: f64,
+    m2: f64,
+}
+
+impl AdaptiveStoppingRule {
+    pub fn new(alpha: f64, n: usize) -> Self {
+        AdaptiveStoppingRule {
+            alpha,
+            beta: (n.max(2) as f64).ln(),
+            s: 0,
+            mean: 0.0,
+            m2: 0.0,
+        }
+    }
+
+    /// Record the gain of a performed move.
+    pub fn push(&mut self, gain: i64) {
+        self.s += 1;
+        let x = gain as f64;
+        let d = x - self.mean;
+        self.mean += d / self.s as f64;
+        self.m2 += d * (x - self.mean);
+    }
+
+    /// Reset when a new best solution was found.
+    pub fn improvement_found(&mut self) {
+        self.s = 0;
+        self.mean = 0.0;
+        self.m2 = 0.0;
+    }
+
+    /// Should the search stop?
+    pub fn should_stop(&self) -> bool {
+        if self.s < 2 {
+            return false;
+        }
+        let var = self.m2 / (self.s - 1) as f64;
+        // positive drift: keep going
+        if self.mean > 0.0 {
+            return false;
+        }
+        self.s as f64 * self.mean * self.mean > self.alpha * var + self.beta
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn keeps_going_on_positive_gains() {
+        let mut r = AdaptiveStoppingRule::new(1.0, 1000);
+        for _ in 0..100 {
+            r.push(2);
+        }
+        assert!(!r.should_stop());
+    }
+
+    #[test]
+    fn stops_on_long_negative_plateau() {
+        let mut r = AdaptiveStoppingRule::new(1.0, 1000);
+        let mut stopped = false;
+        for _ in 0..200 {
+            r.push(-1);
+            if r.should_stop() {
+                stopped = true;
+                break;
+            }
+        }
+        assert!(stopped, "persistent losses must trigger the rule");
+    }
+
+    #[test]
+    fn reset_on_improvement() {
+        let mut r = AdaptiveStoppingRule::new(1.0, 1000);
+        for _ in 0..50 {
+            r.push(-1);
+        }
+        r.improvement_found();
+        assert!(!r.should_stop());
+        r.push(-1);
+        assert!(!r.should_stop(), "needs evidence again after reset");
+    }
+
+    #[test]
+    fn high_variance_delays_stop() {
+        let mut low_var = AdaptiveStoppingRule::new(1.0, 100);
+        let mut high_var = AdaptiveStoppingRule::new(1.0, 100);
+        let mut stop_low = None;
+        let mut stop_high = None;
+        for i in 0..500 {
+            low_var.push(-1);
+            high_var.push(if i % 2 == 0 { -30 } else { 28 });
+            if stop_low.is_none() && low_var.should_stop() {
+                stop_low = Some(i);
+            }
+            if stop_high.is_none() && high_var.should_stop() {
+                stop_high = Some(i);
+            }
+        }
+        assert!(stop_low.is_some());
+        assert!(
+            stop_high.unwrap_or(usize::MAX) > stop_low.unwrap(),
+            "noisy searches run longer"
+        );
+    }
+}

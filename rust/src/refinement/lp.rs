@@ -1,0 +1,320 @@
+//! Label propagation refinement (paper §6.1) and its deterministic
+//! synchronous variant (paper §11).
+//!
+//! The parallel algorithm visits all nodes in rounds and greedily moves
+//! each to its maximum-positive-gain block; a move whose *attributed*
+//! gain turns out negative (a conflict with a concurrent move) is
+//! immediately reverted. The deterministic variant computes all moves
+//! against a frozen state and then performs balance-preserving prefix
+//! swaps between block pairs, prioritized by gain.
+
+use crate::coordinator::context::Context;
+use crate::parallel::parallel_chunks;
+use crate::partition::PartitionedHypergraph;
+use crate::util::rng::hash2;
+use crate::util::Rng;
+use crate::{BlockId, Gain, NodeId, NodeWeight};
+use std::sync::atomic::{AtomicI64, Ordering};
+use std::sync::Mutex;
+
+/// Parallel label propagation; returns the total attributed improvement.
+pub fn lp_refine(phg: &PartitionedHypergraph, ctx: &Context) -> Gain {
+    let n = phg.hypergraph().num_nodes();
+    let total = AtomicI64::new(0);
+    for round in 0..ctx.lp_rounds {
+        let mut order: Vec<u32> = (0..n as u32).collect();
+        Rng::new(hash2(ctx.seed, 0x19 ^ round as u64)).shuffle(&mut order);
+        let moved_this_round = AtomicI64::new(0);
+        parallel_chunks(n, ctx.threads, |_, s, e| {
+            for &u in &order[s..e] {
+                if !phg.is_border(u) {
+                    continue;
+                }
+                if let Some((g, t)) = phg.max_gain_move(u) {
+                    // only positive gain moves (paper: LP cannot escape
+                    // local optima)
+                    if g <= 0 {
+                        continue;
+                    }
+                    let from = phg.block_of(u);
+                    if let Some(out) = phg.try_move(u, t, None) {
+                        if out.attributed_gain < 0 {
+                            // conflict: revert immediately (§6.1)
+                            let back = phg.move_unchecked(u, from, None);
+                            moved_this_round
+                                .fetch_add(out.attributed_gain + back.attributed_gain, Ordering::Relaxed);
+                        } else {
+                            moved_this_round.fetch_add(out.attributed_gain, Ordering::Relaxed);
+                        }
+                    }
+                }
+            }
+        });
+        let delta = moved_this_round.load(Ordering::Relaxed);
+        total.fetch_add(delta, Ordering::Relaxed);
+        if delta <= 0 {
+            break;
+        }
+    }
+    total.load(Ordering::Relaxed)
+}
+
+/// Highly-localized label propagation (paper §9): restricted to the given
+/// node set plus one-hop expansion — run after each batch uncontraction.
+pub fn lp_refine_localized(
+    phg: &PartitionedHypergraph,
+    ctx: &Context,
+    nodes: &[NodeId],
+) -> Gain {
+    let mut total: Gain = 0;
+    let mut frontier: Vec<NodeId> = nodes.to_vec();
+    for _ in 0..ctx.lp_rounds.max(1) {
+        let mut next: Vec<NodeId> = Vec::new();
+        let gained = AtomicI64::new(0);
+        let next_mx = Mutex::new(&mut next);
+        parallel_chunks(frontier.len(), ctx.threads, |_, s, e| {
+            let mut local_next = Vec::new();
+            for &u in &frontier[s..e] {
+                if !phg.is_border(u) {
+                    continue;
+                }
+                if let Some((g, t)) = phg.max_gain_move(u) {
+                    if g > 0 {
+                        let from = phg.block_of(u);
+                        if let Some(out) = phg.try_move(u, t, None) {
+                            if out.attributed_gain < 0 {
+                                let back = phg.move_unchecked(u, from, None);
+                                gained.fetch_add(
+                                    out.attributed_gain + back.attributed_gain,
+                                    Ordering::Relaxed,
+                                );
+                            } else {
+                                gained.fetch_add(out.attributed_gain, Ordering::Relaxed);
+                                // expand around the improving move
+                                for &e in phg.hypergraph().incident_nets(u) {
+                                    if phg.hypergraph().net_size(e) <= 64 {
+                                        local_next
+                                            .extend_from_slice(phg.hypergraph().pins(e));
+                                    }
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+            next_mx.lock().unwrap().extend(local_next);
+        });
+        total += gained.load(Ordering::Relaxed);
+        if next.is_empty() {
+            break;
+        }
+        next.sort_unstable();
+        next.dedup();
+        frontier = next;
+    }
+    total
+}
+
+/// Deterministic synchronous label propagation (paper §11): per sub-round,
+/// compute the highest-gain move of each node against the frozen
+/// partition, then select balance-preserving prefix swaps per block pair.
+pub fn lp_refine_deterministic(phg: &PartitionedHypergraph, ctx: &Context) -> Gain {
+    let n = phg.hypergraph().num_nodes();
+    let k = phg.k();
+    let sub_rounds = ctx.det_sub_rounds.max(1) as u64;
+    let mut total: Gain = 0;
+    for round in 0..ctx.lp_rounds {
+        let mut round_gain: Gain = 0;
+        for s in 0..sub_rounds {
+            let salt = hash2(ctx.seed ^ 0x1b, round as u64) ^ s;
+            // phase 1: calculate moves (frozen state)
+            let desired = Mutex::new(Vec::<(Gain, NodeId, BlockId, BlockId)>::new());
+            let members: Vec<NodeId> = (0..n as NodeId)
+                .filter(|&u| hash2(salt, u as u64) % sub_rounds == s % sub_rounds)
+                .collect();
+            parallel_chunks(members.len(), ctx.threads, |_, lo, hi| {
+                let mut local = Vec::new();
+                for &u in &members[lo..hi] {
+                    if !phg.is_border(u) {
+                        continue;
+                    }
+                    if let Some((g, t)) = phg.max_gain_move(u) {
+                        if g > 0 {
+                            local.push((g, u, phg.block_of(u), t));
+                        }
+                    }
+                }
+                desired.lock().unwrap().extend(local);
+            });
+            let mut desired = desired.into_inner().unwrap();
+            // deterministic order: by gain desc, node id as tie-break
+            desired.sort_unstable_by(|a, b| b.0.cmp(&a.0).then(a.1.cmp(&b.1)));
+
+            // phase 2: per block pair, select feasible prefixes and apply
+            for sblk in 0..k as BlockId {
+                for tblk in sblk + 1..k as BlockId {
+                    let m_st: Vec<&(Gain, NodeId, BlockId, BlockId)> =
+                        desired.iter().filter(|m| m.2 == sblk && m.3 == tblk).collect();
+                    let m_ts: Vec<&(Gain, NodeId, BlockId, BlockId)> =
+                        desired.iter().filter(|m| m.2 == tblk && m.3 == sblk).collect();
+                    if m_st.is_empty() && m_ts.is_empty() {
+                        continue;
+                    }
+                    let weight =
+                        |m: &&(Gain, NodeId, BlockId, BlockId)| phg.hypergraph().node_weight(m.1);
+                    let (i, j) = select_prefixes(
+                        &m_st.iter().map(weight).collect::<Vec<_>>(),
+                        &m_ts.iter().map(weight).collect::<Vec<_>>(),
+                        phg.block_weight(sblk),
+                        phg.block_weight(tblk),
+                        phg.max_block_weight(sblk),
+                        phg.max_block_weight(tblk),
+                    );
+                    for m in &m_st[..i] {
+                        let out = phg.move_unchecked(m.1, tblk, None);
+                        round_gain += out.attributed_gain;
+                    }
+                    for m in &m_ts[..j] {
+                        let out = phg.move_unchecked(m.1, sblk, None);
+                        round_gain += out.attributed_gain;
+                    }
+                }
+            }
+        }
+        total += round_gain;
+        if round_gain <= 0 {
+            break;
+        }
+    }
+    total
+}
+
+/// Two-pointer longest-feasible-prefix selection (paper §11): given the
+/// node weights of the gain-sorted move sequences `s→t` and `t→s`, find
+/// the longest prefixes whose application keeps both blocks within their
+/// limits. Returns `(i, j)` prefix lengths.
+pub fn select_prefixes(
+    w_st: &[NodeWeight],
+    w_ts: &[NodeWeight],
+    weight_s: NodeWeight,
+    weight_t: NodeWeight,
+    max_s: NodeWeight,
+    max_t: NodeWeight,
+) -> (usize, usize) {
+    // x(i,j) = weight moved s→t minus weight moved t→s
+    let mut best: Option<(usize, usize)> = None;
+    let (mut i, mut j) = (0usize, 0usize);
+    let mut x: NodeWeight = 0;
+    let feasible = |x: NodeWeight| weight_t + x <= max_t && weight_s - x <= max_s;
+    loop {
+        if feasible(x) && best.map_or(true, |(bi, bj)| i + j > bi + bj) {
+            best = Some((i, j));
+        }
+        // advance the pointer of the side whose source receives more weight
+        let advance_i = if i < w_st.len() && j < w_ts.len() {
+            x <= 0
+        } else if i < w_st.len() {
+            true
+        } else if j < w_ts.len() {
+            false
+        } else {
+            break;
+        };
+        if advance_i {
+            x += w_st[i];
+            i += 1;
+        } else {
+            x -= w_ts[j];
+            j += 1;
+        }
+    }
+    best.unwrap_or((0, 0))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::context::{Context, Preset};
+    use crate::generators::{planted_hypergraph, PlantedParams};
+    use std::sync::Arc;
+
+    fn ctx(preset: Preset, k: usize, threads: usize, seed: u64) -> Context {
+        Context::new(preset, k, 0.03).with_threads(threads).with_seed(seed)
+    }
+
+    fn perturbed_planted(seed: u64, k: usize) -> (PartitionedHypergraph, Vec<BlockId>) {
+        let p = PlantedParams { n: 400, m: 700, blocks: k, ..Default::default() };
+        let hg = Arc::new(planted_hypergraph(&p, seed));
+        let n = hg.num_nodes();
+        // planted blocks are contiguous ranges; perturb 15% of nodes
+        let mut rng = Rng::new(seed ^ 77);
+        let mut parts: Vec<BlockId> = (0..n).map(|u| (u * k / n) as BlockId).collect();
+        for _ in 0..n / 7 {
+            let u = rng.next_below(n);
+            parts[u] = rng.next_below(k) as BlockId;
+        }
+        let mut phg = PartitionedHypergraph::new(hg, k);
+        phg.set_uniform_max_weight(0.2);
+        phg.assign_all(&parts, 2);
+        (phg, parts)
+    }
+
+    #[test]
+    fn lp_improves_perturbed_planted_partition() {
+        let (phg, _) = perturbed_planted(1, 4);
+        let before = phg.km1();
+        let gain = lp_refine(&phg, &ctx(Preset::Default, 4, 2, 1));
+        assert!(gain > 0, "expected improvement, got {gain}");
+        assert_eq!(phg.km1(), before - gain, "attributed accounting exact");
+        assert!(phg.is_balanced());
+        phg.verify_consistency().unwrap();
+    }
+
+    #[test]
+    fn deterministic_lp_improves_and_is_reproducible() {
+        let run = |threads: usize| {
+            let (phg, _) = perturbed_planted(5, 2);
+            let before = phg.km1();
+            let g = lp_refine_deterministic(&phg, &ctx(Preset::Deterministic, 2, threads, 5));
+            phg.verify_consistency().unwrap();
+            assert!(phg.is_balanced());
+            assert_eq!(phg.km1(), before - g);
+            (g, phg.parts())
+        };
+        let (g1, p1) = run(1);
+        let (g4, p4) = run(4);
+        assert!(g1 > 0);
+        assert_eq!(g1, g4, "same improvement for any thread count");
+        assert_eq!(p1, p4, "bit-identical partitions");
+    }
+
+    #[test]
+    fn select_prefixes_respects_balance() {
+        // block s at 10/10 (full), t at 6/10; moving 2 from s→t and 1 back
+        let (i, j) = select_prefixes(&[2, 3], &[1], 10, 6, 10, 10);
+        // all feasible: x after (2,1): t=6+2-1=7 ok, s=10-2+1=9 ok
+        assert!(i >= 1 && j >= 1, "{i},{j}");
+        // infeasible target: t already at limit, s→t impossible without swap
+        let (i2, j2) = select_prefixes(&[5], &[], 10, 10, 10, 10);
+        assert_eq!((i2, j2), (0, 0));
+        // swap allows it
+        let (i3, j3) = select_prefixes(&[5], &[5], 10, 10, 10, 10);
+        assert_eq!((i3, j3), (1, 1));
+    }
+
+    #[test]
+    fn lp_no_moves_on_optimal_partition() {
+        // perfectly separated planted instance: LP must not degrade it
+        let p = PlantedParams { n: 200, m: 300, blocks: 2, p_intra: 1.0, ..Default::default() };
+        let hg = Arc::new(planted_hypergraph(&p, 9));
+        let n = hg.num_nodes();
+        let parts: Vec<BlockId> = (0..n).map(|u| (u * 2 / n) as BlockId).collect();
+        let mut phg = PartitionedHypergraph::new(hg, 2);
+        phg.set_uniform_max_weight(0.1);
+        phg.assign_all(&parts, 1);
+        assert_eq!(phg.km1(), 0);
+        let g = lp_refine(&phg, &ctx(Preset::Default, 2, 2, 9));
+        assert_eq!(g, 0);
+        assert_eq!(phg.km1(), 0);
+    }
+}

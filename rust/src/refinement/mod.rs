@@ -1,0 +1,16 @@
+//! The uncoarsening-phase refinement algorithms (Algorithm 3.1, lines
+//! 7–10): label propagation for the easy single-node moves, the parallel
+//! localized FM algorithm for short non-trivial move sets, and flow-based
+//! refinement for long, complex move sets with a global view.
+
+pub mod flow;
+pub mod fm;
+pub mod lp;
+
+pub use fm::{fm_refine, FmStats};
+pub use lp::{lp_refine, lp_refine_deterministic};
+pub mod rebalance;
+pub mod vcycle;
+
+pub use rebalance::rebalance;
+pub use vcycle::vcycle;

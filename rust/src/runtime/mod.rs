@@ -1,0 +1,314 @@
+//! L3 ↔ L1/L2 bridge: loads the AOT artifacts (`artifacts/*.hlo.txt`,
+//! produced once by `make artifacts`) through the PJRT CPU client of the
+//! `xla` crate and exposes them to the coordinator:
+//!
+//! * [`Runtime::gain_tiles`] — the dense gain-tile oracle (L1 Pallas
+//!   kernel): pin counts Φ, benefit and penalty terms for a packed
+//!   incidence tile,
+//! * [`Runtime::spectral`] / [`spectral_bipartition`] — the L2 spectral
+//!   bipartitioner used as an additional initial-partitioning portfolio
+//!   member.
+//!
+//! Python is never on this path: the artifacts are plain HLO text and
+//! execution goes through `PjRtClient::cpu()`.
+
+use crate::hypergraph::Hypergraph;
+use crate::{BlockId, NodeId, NodeWeight};
+use anyhow::{Context as _, Result};
+use once_cell::sync::OnceCell;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+/// Tile shape of the gain oracle (must match python/compile/kernels).
+pub const TN: usize = 128;
+pub const TV: usize = 128;
+pub const K: usize = 16;
+/// Spectral problem size (padded).
+pub const SPECTRAL_N: usize = 256;
+
+/// A loaded PJRT runtime with the compiled executables.
+pub struct Runtime {
+    // PjRt handles are not Sync; serialize access through a mutex.
+    inner: Mutex<Inner>,
+}
+
+struct Inner {
+    _client: xla::PjRtClient,
+    gain_exe: xla::PjRtLoadedExecutable,
+    spectral_exe: xla::PjRtLoadedExecutable,
+}
+
+unsafe impl Send for Inner {}
+
+static RUNTIME: OnceCell<Option<Runtime>> = OnceCell::new();
+
+/// Locate the artifacts directory: `$MTKAHYPAR_ARTIFACTS` or `artifacts/`
+/// relative to the workspace root / current directory.
+pub fn artifacts_dir() -> PathBuf {
+    if let Ok(p) = std::env::var("MTKAHYPAR_ARTIFACTS") {
+        return PathBuf::from(p);
+    }
+    for candidate in ["artifacts", "../artifacts", "../../artifacts"] {
+        let p = PathBuf::from(candidate);
+        if p.join("gain_tiles.hlo.txt").exists() {
+            return p;
+        }
+    }
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+/// Global runtime, initialized lazily; `None` when the artifacts are not
+/// built (unit tests run without them; `make test` builds them first).
+pub fn global() -> Option<&'static Runtime> {
+    RUNTIME
+        .get_or_init(|| match Runtime::load(&artifacts_dir()) {
+            Ok(rt) => Some(rt),
+            Err(e) => {
+                eprintln!("[runtime] AOT artifacts unavailable: {e:#}");
+                None
+            }
+        })
+        .as_ref()
+}
+
+impl Runtime {
+    /// Load and compile both artifacts from `dir`.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        let load = |name: &str| -> Result<xla::PjRtLoadedExecutable> {
+            let path = dir.join(name);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("artifact path utf8")?,
+            )
+            .with_context(|| format!("parse {path:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            client.compile(&comp).with_context(|| format!("compile {name}"))
+        };
+        let gain_exe = load("gain_tiles.hlo.txt")?;
+        let spectral_exe = load("spectral.hlo.txt")?;
+        Ok(Runtime { inner: Mutex::new(Inner { _client: client, gain_exe, spectral_exe }) })
+    }
+
+    /// Execute the gain-tile kernel: `a` is row-major `TN×TV` 0/1
+    /// incidence, `w` the `TN` net weights, `x` the row-major `TV×K`
+    /// one-hot assignment. Returns `(phi[TN·K], benefit[TV], penalty[TV·K])`.
+    pub fn gain_tiles(
+        &self,
+        a: &[f32],
+        w: &[f32],
+        x: &[f32],
+    ) -> Result<(Vec<f32>, Vec<f32>, Vec<f32>)> {
+        assert_eq!(a.len(), TN * TV);
+        assert_eq!(w.len(), TN);
+        assert_eq!(x.len(), TV * K);
+        let inner = self.inner.lock().unwrap();
+        let la = xla::Literal::vec1(a).reshape(&[TN as i64, TV as i64])?;
+        let lw = xla::Literal::vec1(w);
+        let lx = xla::Literal::vec1(x).reshape(&[TV as i64, K as i64])?;
+        let result =
+            inner.gain_exe.execute::<xla::Literal>(&[la, lw, lx])?[0][0].to_literal_sync()?;
+        let (phi, benefit, penalty) = result.to_tuple3()?;
+        Ok((phi.to_vec::<f32>()?, benefit.to_vec::<f32>()?, penalty.to_vec::<f32>()?))
+    }
+
+    /// Execute the spectral power iteration on a dense padded adjacency.
+    pub fn spectral(&self, adj: &[f32], deg: &[f32]) -> Result<Vec<f32>> {
+        assert_eq!(adj.len(), SPECTRAL_N * SPECTRAL_N);
+        assert_eq!(deg.len(), SPECTRAL_N);
+        let inner = self.inner.lock().unwrap();
+        let la = xla::Literal::vec1(adj).reshape(&[SPECTRAL_N as i64, SPECTRAL_N as i64])?;
+        let ld = xla::Literal::vec1(deg);
+        let result =
+            inner.spectral_exe.execute::<xla::Literal>(&[la, ld])?[0][0].to_literal_sync()?;
+        let fiedler = result.to_tuple1()?;
+        Ok(fiedler.to_vec::<f32>()?)
+    }
+}
+
+/// Pack a hypergraph neighborhood into a dense gain tile and evaluate it
+/// through the AOT kernel. `nodes` (≤ TV) and their incident `nets`
+/// (≤ TN; larger neighborhoods are tiled by the caller) — returns
+/// per-node benefit and per-(node, block) penalty, matching
+/// `PartitionedHypergraph::gain` restricted to the tile's nets.
+pub fn gain_tile_for(
+    rt: &Runtime,
+    hg: &Hypergraph,
+    parts: &[BlockId],
+    nodes: &[NodeId],
+    nets: &[crate::EdgeId],
+    k: usize,
+) -> Result<(Vec<f32>, Vec<f32>)> {
+    assert!(nodes.len() <= TV && nets.len() <= TN && k <= K);
+    let mut a = vec![0f32; TN * TV];
+    let mut w = vec![0f32; TN];
+    let mut x = vec![0f32; TV * K];
+    let mut node_slot = vec![usize::MAX; hg.num_nodes()];
+    for (i, &u) in nodes.iter().enumerate() {
+        node_slot[u as usize] = i;
+        x[i * K + parts[u as usize] as usize] = 1.0;
+    }
+    for (j, &e) in nets.iter().enumerate() {
+        w[j] = hg.net_weight(e) as f32;
+        for &p in hg.pins(e) {
+            let s = node_slot[p as usize];
+            if s != usize::MAX {
+                a[j * TV + s] = 1.0;
+            }
+        }
+    }
+    // park padding rows on the scratch block K−1 so Φ of real blocks is
+    // unaffected (callers use k ≤ K−1 real blocks)
+    for i in nodes.len()..TV {
+        x[i * K + (K - 1)] = 1.0;
+    }
+    let (_phi, benefit, penalty) = rt.gain_tiles(&a, &w, &x)?;
+    Ok((benefit, penalty))
+}
+
+/// Spectral bipartitioning portfolio member (paper §5 extension): bucket
+/// to ≤ `SPECTRAL_N` nodes, build the dense clique-expansion adjacency,
+/// run the AOT power iteration, and threshold the Fiedler vector under
+/// the balance constraint. Returns `None` when the runtime is missing or
+/// the constraint cannot be met.
+pub fn spectral_bipartition(
+    hg: &Hypergraph,
+    max0: NodeWeight,
+    max1: NodeWeight,
+) -> Option<Vec<BlockId>> {
+    let rt = global()?;
+    let n = hg.num_nodes();
+    if n < 4 {
+        return None;
+    }
+    let buckets = n.min(SPECTRAL_N);
+    let bucket_of = |u: usize| u * buckets / n;
+    let mut adj = vec![0f32; SPECTRAL_N * SPECTRAL_N];
+    for e in hg.nets() {
+        let pins = hg.pins(e);
+        if pins.len() < 2 || pins.len() > 64 {
+            continue; // clique expansion of huge nets adds noise only
+        }
+        let wq = hg.net_weight(e) as f32 / (pins.len() - 1) as f32;
+        for i in 0..pins.len() {
+            for j in i + 1..pins.len() {
+                let (a, b) = (bucket_of(pins[i] as usize), bucket_of(pins[j] as usize));
+                if a != b {
+                    adj[a * SPECTRAL_N + b] += wq;
+                    adj[b * SPECTRAL_N + a] += wq;
+                }
+            }
+        }
+    }
+    let deg: Vec<f32> = (0..SPECTRAL_N)
+        .map(|i| adj[i * SPECTRAL_N..(i + 1) * SPECTRAL_N].iter().sum())
+        .collect();
+    let fiedler = rt.spectral(&adj, &deg).ok()?;
+
+    // sweep the sorted Fiedler values to a balanced threshold
+    let mut order: Vec<usize> = (0..buckets).collect();
+    order.sort_by(|&a, &b| fiedler[a].partial_cmp(&fiedler[b]).unwrap());
+    let mut bucket_weight = vec![0i64; buckets];
+    for u in 0..n {
+        bucket_weight[bucket_of(u)] += hg.node_weight(u as NodeId);
+    }
+    let total: i64 = hg.total_weight();
+    let mut w0 = 0i64;
+    let mut side0 = vec![false; buckets];
+    for &b in &order {
+        if w0 + bucket_weight[b] <= max0 {
+            side0[b] = true;
+            w0 += bucket_weight[b];
+        }
+        if total - w0 <= max1 && w0 * 2 >= total {
+            break;
+        }
+    }
+    if total - w0 > max1 {
+        return None;
+    }
+    Some((0..n).map(|u| u32::from(!side0[bucket_of(u)])).collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn runtime_or_skip() -> Option<&'static Runtime> {
+        let rt = global();
+        if rt.is_none() {
+            eprintln!("skipping runtime test: artifacts not built (run `make artifacts`)");
+        }
+        rt
+    }
+
+    #[test]
+    fn gain_tiles_match_rust_gains() {
+        let Some(rt) = runtime_or_skip() else { return };
+        let hg = crate::generators::planted_hypergraph(
+            &crate::generators::PlantedParams { n: 100, m: 120, blocks: 2, ..Default::default() },
+            3,
+        );
+        let parts: Vec<BlockId> = (0..100).map(|u| (u % 2) as BlockId).collect();
+        let phg =
+            crate::partition::PartitionedHypergraph::new(std::sync::Arc::new(hg.clone()), 2);
+        phg.assign_all(&parts, 1);
+        // one tile over the first 100 nodes and nets fully inside them
+        let nodes: Vec<NodeId> = (0..100u32).collect();
+        let mut nets: Vec<crate::EdgeId> = Vec::new();
+        let mut in_tile = crate::util::Bitset::new(hg.num_nets());
+        for e in hg.nets() {
+            if nets.len() < TN {
+                nets.push(e);
+                in_tile.set(e as usize);
+            }
+        }
+        let (benefit, penalty) =
+            gain_tile_for(rt, &hg, &parts, &nodes, &nets, 2).expect("oracle run");
+        for (i, &u) in nodes.iter().enumerate() {
+            let mut b = 0f32;
+            let mut p = [0f32; 2];
+            for &e in hg.incident_nets(u) {
+                if !in_tile.get(e as usize) {
+                    continue;
+                }
+                let w = hg.net_weight(e) as f32;
+                if phg.pin_count(e, parts[u as usize]) == 1 {
+                    b += w;
+                }
+                for (t, pt) in p.iter_mut().enumerate() {
+                    if phg.pin_count(e, t as BlockId) == 0 {
+                        *pt += w;
+                    }
+                }
+            }
+            assert_eq!(benefit[i], b, "benefit of node {u}");
+            assert_eq!(penalty[i * K], p[0], "penalty({u},0)");
+            assert_eq!(penalty[i * K + 1], p[1], "penalty({u},1)");
+        }
+    }
+
+    #[test]
+    fn spectral_bipartition_splits_planted() {
+        if runtime_or_skip().is_none() {
+            return;
+        }
+        let hg = crate::generators::planted_hypergraph(
+            &crate::generators::PlantedParams {
+                n: 300,
+                m: 600,
+                blocks: 2,
+                p_intra: 0.95,
+                ..Default::default()
+            },
+            5,
+        );
+        let max = (hg.total_weight() as f64 * 0.6) as i64;
+        let parts = spectral_bipartition(&hg, max, max).expect("spectral result");
+        let km1 = crate::metrics::km1(&hg, &parts, 2);
+        assert!(
+            km1 < hg.num_nets() as i64 / 3,
+            "spectral quality: {km1} of {} nets",
+            hg.num_nets()
+        );
+    }
+}

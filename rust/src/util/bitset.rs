@@ -1,0 +1,209 @@
+//! Plain and atomic fixed-size bitsets.
+//!
+//! The partition data structure (paper §6.1) stores the connectivity set
+//! `Λ(e)` of each net as a bitset of size `k`, mutated with atomic XOR and
+//! read via snapshot + count-leading-zeros iteration; `λ(e)` is a popcount.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+const W: usize = 64;
+
+/// A plain (single-owner) bitset.
+#[derive(Clone, Debug, Default)]
+pub struct Bitset {
+    words: Vec<u64>,
+    bits: usize,
+}
+
+impl Bitset {
+    pub fn new(bits: usize) -> Self {
+        Bitset { words: vec![0; (bits + W - 1) / W], bits }
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.bits
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.bits == 0
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize) {
+        self.words[i / W] |= 1 << (i % W);
+    }
+
+    #[inline]
+    pub fn clear_bit(&mut self, i: usize) {
+        self.words[i / W] &= !(1 << (i % W));
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize) -> bool {
+        (self.words[i / W] >> (i % W)) & 1 == 1
+    }
+
+    /// Set bit `i`; returns the previous value.
+    #[inline]
+    pub fn test_and_set(&mut self, i: usize) -> bool {
+        let prev = self.get(i);
+        self.set(i);
+        prev
+    }
+
+    pub fn clear(&mut self) {
+        self.words.iter_mut().for_each(|w| *w = 0);
+    }
+
+    pub fn count_ones(&self) -> usize {
+        self.words.iter().map(|w| w.count_ones() as usize).sum()
+    }
+
+    /// Iterate over set bit indices in increasing order.
+    pub fn iter_ones(&self) -> impl Iterator<Item = usize> + '_ {
+        self.words.iter().enumerate().flat_map(|(wi, &w)| {
+            let mut w = w;
+            std::iter::from_fn(move || {
+                if w == 0 {
+                    None
+                } else {
+                    let b = w.trailing_zeros() as usize;
+                    w &= w - 1;
+                    Some(wi * W + b)
+                }
+            })
+        })
+    }
+}
+
+/// A concurrently mutable bitset (per-bit atomic set/xor/test-and-set).
+#[derive(Debug)]
+pub struct AtomicBitset {
+    words: Vec<AtomicU64>,
+    bits: usize,
+}
+
+impl AtomicBitset {
+    pub fn new(bits: usize) -> Self {
+        AtomicBitset {
+            words: (0..(bits + W - 1) / W).map(|_| AtomicU64::new(0)).collect(),
+            bits,
+        }
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.bits
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.bits == 0
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize) -> bool {
+        (self.words[i / W].load(Ordering::Acquire) >> (i % W)) & 1 == 1
+    }
+
+    #[inline]
+    pub fn set(&self, i: usize) {
+        self.words[i / W].fetch_or(1 << (i % W), Ordering::AcqRel);
+    }
+
+    /// Atomically flip bit `i` (the paper's connectivity-set update).
+    #[inline]
+    pub fn flip(&self, i: usize) {
+        self.words[i / W].fetch_xor(1 << (i % W), Ordering::AcqRel);
+    }
+
+    /// Atomic test-and-set; returns previous value.
+    #[inline]
+    pub fn test_and_set(&self, i: usize) -> bool {
+        let mask = 1 << (i % W);
+        self.words[i / W].fetch_or(mask, Ordering::AcqRel) & mask != 0
+    }
+
+    #[inline]
+    pub fn clear_bit(&self, i: usize) {
+        self.words[i / W].fetch_and(!(1 << (i % W)), Ordering::AcqRel);
+    }
+
+    /// Non-atomic-view clear (requires external synchronization).
+    pub fn clear(&self) {
+        for w in &self.words {
+            w.store(0, Ordering::Release);
+        }
+    }
+
+    pub fn count_ones(&self) -> usize {
+        self.words.iter().map(|w| w.load(Ordering::Acquire).count_ones() as usize).sum()
+    }
+
+    /// Snapshot the words (the paper's "take a snapshot of its bitset").
+    pub fn snapshot(&self) -> Bitset {
+        Bitset {
+            words: self.words.iter().map(|w| w.load(Ordering::Acquire)).collect(),
+            bits: self.bits,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plain_set_get_iter() {
+        let mut b = Bitset::new(130);
+        for i in [0usize, 1, 63, 64, 65, 129] {
+            b.set(i);
+        }
+        assert_eq!(b.count_ones(), 6);
+        assert!(b.get(64) && !b.get(66));
+        let ones: Vec<usize> = b.iter_ones().collect();
+        assert_eq!(ones, vec![0, 1, 63, 64, 65, 129]);
+        b.clear_bit(64);
+        assert!(!b.get(64));
+        assert!(!b.test_and_set(64));
+        assert!(b.test_and_set(64));
+    }
+
+    #[test]
+    fn atomic_flip_parity() {
+        let b = AtomicBitset::new(64);
+        b.flip(3);
+        assert!(b.get(3));
+        b.flip(3);
+        assert!(!b.get(3));
+        assert!(!b.test_and_set(5));
+        assert!(b.test_and_set(5));
+    }
+
+    #[test]
+    fn atomic_concurrent_sets() {
+        let b = std::sync::Arc::new(AtomicBitset::new(1024));
+        std::thread::scope(|s| {
+            for t in 0..4 {
+                let b = b.clone();
+                s.spawn(move || {
+                    for i in (t..1024).step_by(4) {
+                        b.set(i);
+                    }
+                });
+            }
+        });
+        assert_eq!(b.count_ones(), 1024);
+    }
+
+    #[test]
+    fn snapshot_matches() {
+        let b = AtomicBitset::new(100);
+        b.set(10);
+        b.set(99);
+        let s = b.snapshot();
+        assert_eq!(s.iter_ones().collect::<Vec<_>>(), vec![10, 99]);
+    }
+}

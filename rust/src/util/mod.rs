@@ -1,0 +1,22 @@
+//! Small shared utilities: deterministic RNG, bitsets, timers, statistics.
+
+pub mod bitset;
+pub mod rng;
+pub mod stats;
+pub mod timer;
+
+pub use bitset::{AtomicBitset, Bitset};
+pub use rng::Rng;
+pub use timer::PhaseTimer;
+
+/// Round `x` up to the next multiple of `m` (m > 0).
+#[inline]
+pub fn round_up(x: usize, m: usize) -> usize {
+    (x + m - 1) / m * m
+}
+
+/// Integer ceiling division.
+#[inline]
+pub fn ceil_div(a: usize, b: usize) -> usize {
+    (a + b - 1) / b
+}

@@ -1,0 +1,192 @@
+//! Deterministic pseudo-random number generation.
+//!
+//! The deterministic configuration (paper §11) requires reproducible
+//! randomness that is *stable across thread counts*: every parallel loop
+//! derives a per-item or per-chunk RNG from `(seed, item)` via SplitMix64
+//! instead of consuming a shared stream. The bulk generator is
+//! xoshiro256**, seeded through SplitMix64 as recommended by its authors.
+
+/// SplitMix64 step — also usable standalone as a strong mixing function.
+#[inline]
+pub fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E3779B97F4A7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+/// Hash two u64s into one (for per-item deterministic sub-seeds).
+#[inline]
+pub fn hash2(a: u64, b: u64) -> u64 {
+    let mut s = a ^ b.rotate_left(32) ^ 0x9E3779B97F4A7C15;
+    splitmix64(&mut s)
+}
+
+/// xoshiro256** PRNG.
+#[derive(Clone, Debug)]
+pub struct Rng {
+    s: [u64; 4],
+}
+
+impl Rng {
+    /// Create a generator from a 64-bit seed (expanded via SplitMix64).
+    pub fn new(seed: u64) -> Self {
+        let mut sm = seed;
+        let s = [
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+        ];
+        Rng { s }
+    }
+
+    /// Deterministic sub-generator for item `i` (stable across threads).
+    #[inline]
+    pub fn derive(&self, i: u64) -> Rng {
+        Rng::new(hash2(self.s[0] ^ self.s[3], i))
+    }
+
+    /// Next raw 64-bit value.
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let result = (self.s[1].wrapping_mul(5)).rotate_left(7).wrapping_mul(9);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform in `[0, bound)` (Lemire's multiply-shift reduction).
+    #[inline]
+    pub fn next_below(&mut self, bound: usize) -> usize {
+        debug_assert!(bound > 0);
+        ((self.next_u64() as u128 * bound as u128) >> 64) as usize
+    }
+
+    /// Uniform in `[lo, hi)`.
+    #[inline]
+    pub fn range(&mut self, lo: usize, hi: usize) -> usize {
+        lo + self.next_below(hi - lo)
+    }
+
+    /// Uniform f64 in `[0, 1)`.
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Bernoulli trial with probability `p`.
+    #[inline]
+    pub fn coin(&mut self, p: f64) -> bool {
+        self.next_f64() < p
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.next_below(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// Sample `m` distinct indices from `[0, n)` (Floyd's algorithm for
+    /// small m, shuffle-prefix otherwise).
+    pub fn sample_indices(&mut self, n: usize, m: usize) -> Vec<usize> {
+        let m = m.min(n);
+        if m * 4 >= n {
+            let mut all: Vec<usize> = (0..n).collect();
+            self.shuffle(&mut all);
+            all.truncate(m);
+            return all;
+        }
+        let mut chosen = rustc_hash::FxHashSet::default();
+        let mut out = Vec::with_capacity(m);
+        for j in n - m..n {
+            let t = self.next_below(j + 1);
+            let pick = if chosen.contains(&t) { j } else { t };
+            chosen.insert(pick);
+            out.push(pick);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_and_distinct_seeds() {
+        let mut a = Rng::new(7);
+        let mut b = Rng::new(7);
+        let mut c = Rng::new(8);
+        let va: Vec<u64> = (0..8).map(|_| a.next_u64()).collect();
+        let vb: Vec<u64> = (0..8).map(|_| b.next_u64()).collect();
+        let vc: Vec<u64> = (0..8).map(|_| c.next_u64()).collect();
+        assert_eq!(va, vb);
+        assert_ne!(va, vc);
+    }
+
+    #[test]
+    fn bounds_respected() {
+        let mut r = Rng::new(123);
+        for _ in 0..10_000 {
+            let x = r.next_below(17);
+            assert!(x < 17);
+            let y = r.range(5, 9);
+            assert!((5..9).contains(&y));
+            let f = r.next_f64();
+            assert!((0.0..1.0).contains(&f));
+        }
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Rng::new(99);
+        let mut xs: Vec<usize> = (0..100).collect();
+        r.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn sample_indices_distinct() {
+        let mut r = Rng::new(5);
+        for &(n, m) in &[(10usize, 3usize), (100, 50), (7, 7), (1000, 10)] {
+            let s = r.sample_indices(n, m);
+            assert_eq!(s.len(), m.min(n));
+            let mut t = s.clone();
+            t.sort_unstable();
+            t.dedup();
+            assert_eq!(t.len(), s.len());
+            assert!(s.iter().all(|&i| i < n));
+        }
+    }
+
+    #[test]
+    fn derive_stable() {
+        let r = Rng::new(42);
+        let mut d1 = r.derive(13);
+        let mut d2 = r.derive(13);
+        assert_eq!(d1.next_u64(), d2.next_u64());
+    }
+
+    #[test]
+    fn roughly_uniform() {
+        let mut r = Rng::new(2024);
+        let mut buckets = [0usize; 10];
+        for _ in 0..100_000 {
+            buckets[r.next_below(10)] += 1;
+        }
+        for &b in &buckets {
+            assert!((8_000..12_000).contains(&b), "bucket {b}");
+        }
+    }
+}

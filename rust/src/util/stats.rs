@@ -1,0 +1,172 @@
+//! Aggregation statistics used throughout the evaluation (paper §12):
+//! geometric/harmonic means, running mean/stddev (for the portfolio's
+//! 95%-rule), and the Wilcoxon signed-rank test.
+
+/// Geometric mean of positive values (zeros clamped to `eps`).
+pub fn geometric_mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let s: f64 = xs.iter().map(|&x| x.max(1e-12).ln()).sum();
+    (s / xs.len() as f64).exp()
+}
+
+/// Harmonic mean (paper Fig. 2 aggregation of quality ratios).
+pub fn harmonic_mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.len() as f64 / xs.iter().map(|&x| 1.0 / x.max(1e-12)).sum::<f64>()
+}
+
+pub fn arithmetic_mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+pub fn median(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = v.len();
+    if n % 2 == 1 {
+        v[n / 2]
+    } else {
+        0.5 * (v[n / 2 - 1] + v[n / 2])
+    }
+}
+
+/// Incremental mean/standard deviation (Welford) — drives the portfolio's
+/// "only rerun if µ − 2σ ≤ best" rule (paper §5).
+#[derive(Clone, Debug, Default)]
+pub struct RunningStats {
+    n: u64,
+    mean: f64,
+    m2: f64,
+}
+
+impl RunningStats {
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    pub fn stddev(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            (self.m2 / (self.n - 1) as f64).sqrt()
+        }
+    }
+}
+
+/// Wilcoxon signed-rank test (normal approximation, as in the paper's
+/// §12 "Statistical Significance Tests"). Returns `(z, p_two_sided)`.
+///
+/// Pairs with zero difference are dropped; ties share average ranks.
+pub fn wilcoxon_signed_rank(a: &[f64], b: &[f64]) -> (f64, f64) {
+    assert_eq!(a.len(), b.len());
+    let mut diffs: Vec<f64> = a
+        .iter()
+        .zip(b)
+        .map(|(&x, &y)| x - y)
+        .filter(|d| d.abs() > 1e-12)
+        .collect();
+    let n = diffs.len();
+    if n == 0 {
+        return (0.0, 1.0);
+    }
+    diffs.sort_by(|x, y| x.abs().partial_cmp(&y.abs()).unwrap());
+    // average ranks for ties on |d|
+    let mut ranks = vec![0.0f64; n];
+    let mut i = 0;
+    while i < n {
+        let mut j = i;
+        while j + 1 < n && (diffs[j + 1].abs() - diffs[i].abs()).abs() < 1e-12 {
+            j += 1;
+        }
+        let avg = (i + 1 + j + 1) as f64 / 2.0;
+        for r in ranks.iter_mut().take(j + 1).skip(i) {
+            *r = avg;
+        }
+        i = j + 1;
+    }
+    let w_plus: f64 = diffs
+        .iter()
+        .zip(&ranks)
+        .filter(|(d, _)| **d > 0.0)
+        .map(|(_, r)| *r)
+        .sum();
+    let nf = n as f64;
+    let mean = nf * (nf + 1.0) / 4.0;
+    let sd = (nf * (nf + 1.0) * (2.0 * nf + 1.0) / 24.0).sqrt();
+    if sd == 0.0 {
+        return (0.0, 1.0);
+    }
+    let z = (w_plus - mean) / sd;
+    let p = 2.0 * (1.0 - phi(z.abs()));
+    (z, p)
+}
+
+/// Standard normal CDF (Abramowitz–Stegun 7.1.26 erf approximation).
+fn phi(x: f64) -> f64 {
+    let t = 1.0 / (1.0 + 0.2316419 * x);
+    let poly = t
+        * (0.319381530 + t * (-0.356563782 + t * (1.781477937 + t * (-1.821255978 + t * 1.330274429))));
+    1.0 - (-(x * x) / 2.0).exp() / (2.0 * std::f64::consts::PI).sqrt() * poly
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn means() {
+        assert!((geometric_mean(&[1.0, 4.0]) - 2.0).abs() < 1e-9);
+        assert!((harmonic_mean(&[1.0, 1.0]) - 1.0).abs() < 1e-9);
+        assert!((arithmetic_mean(&[1.0, 3.0]) - 2.0).abs() < 1e-9);
+        assert!((median(&[3.0, 1.0, 2.0]) - 2.0).abs() < 1e-9);
+        assert!((median(&[4.0, 1.0, 2.0, 3.0]) - 2.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn running_stats() {
+        let mut s = RunningStats::default();
+        for x in [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0] {
+            s.push(x);
+        }
+        assert!((s.mean() - 5.0).abs() < 1e-9);
+        assert!((s.stddev() - 2.138089935).abs() < 1e-6);
+    }
+
+    #[test]
+    fn wilcoxon_identical_is_insignificant() {
+        let a = [1.0, 2.0, 3.0, 4.0];
+        let (z, p) = wilcoxon_signed_rank(&a, &a);
+        assert_eq!(z, 0.0);
+        assert!((p - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn wilcoxon_detects_shift() {
+        let a: Vec<f64> = (0..30).map(|i| i as f64).collect();
+        let b: Vec<f64> = (0..30).map(|i| i as f64 + 5.0).collect();
+        let (z, p) = wilcoxon_signed_rank(&a, &b);
+        assert!(z < -2.576, "z={z}");
+        assert!(p < 0.01, "p={p}");
+    }
+}

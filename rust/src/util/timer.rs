@@ -1,0 +1,78 @@
+//! Per-phase wall-clock timing (the component breakdown of paper Fig. 11).
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// Accumulates named phase durations; cheap enough for coordinator-level
+/// phases (not per-move instrumentation).
+#[derive(Debug, Default)]
+pub struct PhaseTimer {
+    acc: Mutex<BTreeMap<&'static str, Duration>>,
+}
+
+impl PhaseTimer {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Time `f` under phase `name` (accumulating).
+    pub fn time<T>(&self, name: &'static str, f: impl FnOnce() -> T) -> T {
+        let start = Instant::now();
+        let out = f();
+        self.add(name, start.elapsed());
+        out
+    }
+
+    pub fn add(&self, name: &'static str, d: Duration) {
+        *self.acc.lock().unwrap().entry(name).or_default() += d;
+    }
+
+    pub fn get(&self, name: &str) -> Duration {
+        self.acc.lock().unwrap().get(name).copied().unwrap_or_default()
+    }
+
+    pub fn total(&self) -> Duration {
+        self.acc.lock().unwrap().values().sum()
+    }
+
+    /// Snapshot of `(phase, seconds)` pairs, sorted by name.
+    pub fn snapshot(&self) -> Vec<(&'static str, f64)> {
+        self.acc
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(&k, v)| (k, v.as_secs_f64()))
+            .collect()
+    }
+
+    /// Share of each phase on the total (paper Fig. 11 y-axis).
+    pub fn shares(&self) -> Vec<(&'static str, f64)> {
+        let total = self.total().as_secs_f64().max(1e-12);
+        self.snapshot().into_iter().map(|(k, v)| (k, v / total)).collect()
+    }
+
+    pub fn clear(&self) {
+        self.acc.lock().unwrap().clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accumulates_and_shares() {
+        let t = PhaseTimer::new();
+        t.add("a", Duration::from_millis(30));
+        t.add("b", Duration::from_millis(10));
+        t.add("a", Duration::from_millis(10));
+        assert_eq!(t.get("a"), Duration::from_millis(40));
+        let shares = t.shares();
+        let a = shares.iter().find(|(k, _)| *k == "a").unwrap().1;
+        assert!((a - 0.8).abs() < 1e-9);
+        let x = t.time("c", || 5);
+        assert_eq!(x, 5);
+        assert!(t.get("c") > Duration::ZERO);
+    }
+}

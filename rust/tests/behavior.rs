@@ -1,0 +1,257 @@
+//! Behavioral tests: paper-stated properties of individual components
+//! that the unit tests don't already pin down — coarsening limits and
+//! guards, batch-size effects in the n-level scheme, portfolio balance
+//! guarantees, flow-scheduler convergence, ε′ monotonicity, objective
+//! cross-checks between all metric implementations.
+
+use mtkahypar::coarsening;
+use mtkahypar::coordinator::context::{Context, Preset};
+use mtkahypar::coordinator::partitioner;
+use mtkahypar::generators::{self, PlantedParams};
+use mtkahypar::initial::{adaptive_epsilon, portfolio};
+use mtkahypar::metrics;
+use mtkahypar::partition::PartitionedHypergraph;
+use mtkahypar::util::Rng;
+use mtkahypar::BlockId;
+use std::sync::Arc;
+
+fn ctx(k: usize, seed: u64) -> Context {
+    let mut c = Context::new(Preset::Default, k, 0.03).with_threads(2).with_seed(seed);
+    c.contraction_limit_factor = 24;
+    c.ip_min_repetitions = 1;
+    c.ip_max_repetitions = 2;
+    c.fm_max_rounds = 2;
+    c
+}
+
+// ---------------------------------------------------------- coarsening
+
+#[test]
+fn coarsening_stops_at_contraction_limit() {
+    let hg = Arc::new(generators::planted_hypergraph(
+        &PlantedParams { n: 3000, m: 5500, blocks: 4, ..Default::default() },
+        1,
+    ));
+    let c = ctx(4, 1);
+    let h = coarsening::coarsen(hg, &c, None);
+    let coarsest = h.coarsest();
+    // must reach the limit but not undershoot it catastrophically (the
+    // paper's 2.5× shrink guard bounds each pass)
+    assert!(coarsest.num_nodes() >= c.contraction_limit() / 4);
+    assert!(coarsest.num_nodes() <= 3000);
+}
+
+#[test]
+fn coarsening_pass_shrink_guard() {
+    // a hypergraph with no 2-pin structure to exploit: single giant net.
+    // cluster weight limit blocks most joins → coarsening must terminate
+    // (1% shrink guard) instead of looping forever
+    let hg = Arc::new(generators::random_kuniform(600, 5, 4, 2));
+    let mut c = ctx(2, 2);
+    c.contraction_limit_factor = 8;
+    let h = coarsening::coarsen(hg, &c, None);
+    assert!(h.levels.len() < 60, "guards must bound the level count");
+}
+
+#[test]
+fn hierarchy_level_sizes_strictly_decrease() {
+    let hg = Arc::new(generators::spm_hypergraph(1500, 1500, 5, 3));
+    let h = coarsening::coarsen(hg.clone(), &ctx(4, 3), None);
+    let mut prev = hg.num_nodes();
+    for level in &h.levels {
+        assert!(level.coarse.num_nodes() < prev);
+        prev = level.coarse.num_nodes();
+    }
+}
+
+// ---------------------------------------------------------- initial
+
+#[test]
+fn adaptive_epsilon_monotone_in_subweight() {
+    // lighter subhypergraphs get a looser ε′ (Equation 1)
+    let e_light = adaptive_epsilon(8000, 1500, 8, 2, 0.03);
+    let e_heavy = adaptive_epsilon(8000, 2500, 8, 2, 0.03);
+    assert!(e_light > e_heavy);
+}
+
+#[test]
+fn portfolio_best_is_never_worse_than_each_polished_member() {
+    let hg = Arc::new(generators::planted_hypergraph(
+        &PlantedParams { n: 160, m: 320, blocks: 2, ..Default::default() },
+        5,
+    ));
+    let half = (hg.total_weight() as f64 * 0.53) as i64;
+    let c = ctx(2, 5);
+    let best = portfolio::best_bipartition(&hg, half, half, &c, 9);
+    // the winner must at least match a freshly polished random run
+    let parts = portfolio::run_technique(portfolio::Technique::Random, &hg, half, half, 9);
+    let rand_km1 = metrics::km1(&hg, &parts, 2);
+    assert!(best.km1 <= rand_km1);
+    assert!(best.imbalance <= 0.0, "portfolio result must be feasible");
+}
+
+#[test]
+fn greedy_growing_respects_target_weight() {
+    let hg = Arc::new(generators::vlsi_hypergraph(300, 500, 7));
+    let max0 = hg.total_weight() / 2;
+    for tech in portfolio::Technique::all() {
+        let parts = portfolio::run_technique(tech, &hg, max0, max0, 3);
+        let w0: i64 = (0..300).filter(|&u| parts[u] == 0).count() as i64;
+        assert!(w0 <= max0, "{tech:?}: block 0 overfull ({w0} > {max0})");
+    }
+}
+
+// ---------------------------------------------------------- refinement
+
+#[test]
+fn flow_scheduler_terminates_on_optimal_partitions() {
+    // planted perfect partition: flows must converge without changes
+    let p = PlantedParams { n: 240, m: 420, blocks: 4, p_intra: 1.0, ..Default::default() };
+    let hg = Arc::new(generators::planted_hypergraph(&p, 11));
+    let n = hg.num_nodes();
+    let parts: Vec<BlockId> = (0..n).map(|u| (u * 4 / n) as BlockId).collect();
+    let mut phg = PartitionedHypergraph::new(hg, 4);
+    phg.set_uniform_max_weight(0.1);
+    phg.assign_all(&parts, 1);
+    let before = phg.km1();
+    let mut c = ctx(4, 11);
+    c.use_flows = true;
+    let g = mtkahypar::refinement::flow::flow_refine(&phg, &c);
+    assert_eq!(phg.km1(), before - g);
+    assert!(g >= 0);
+}
+
+#[test]
+fn fm_single_round_bounded_by_max_rounds() {
+    let hg = Arc::new(generators::planted_hypergraph(
+        &PlantedParams { n: 260, m: 500, blocks: 2, ..Default::default() },
+        13,
+    ));
+    let n = hg.num_nodes();
+    let mut rng = Rng::new(13);
+    let mut parts: Vec<BlockId> = (0..n).map(|u| (u * 2 / n) as BlockId).collect();
+    for _ in 0..40 {
+        parts[rng.next_below(n)] = rng.next_below(2) as BlockId;
+    }
+    let mut phg = PartitionedHypergraph::new(hg, 2);
+    phg.set_uniform_max_weight(0.3);
+    phg.assign_all(&parts, 1);
+    let mut c = ctx(2, 13);
+    c.fm_max_rounds = 1;
+    let stats = mtkahypar::refinement::fm::fm_refine(&phg, &c);
+    assert!(stats.rounds <= 1);
+}
+
+#[test]
+fn lp_localized_touches_only_the_region() {
+    // nodes far from the seed set must keep their block when they have
+    // no improving move reachable through the expansion frontier
+    let p = PlantedParams { n: 300, m: 550, blocks: 2, p_intra: 1.0, ..Default::default() };
+    let hg = Arc::new(generators::planted_hypergraph(&p, 17));
+    let n = hg.num_nodes();
+    let parts: Vec<BlockId> = (0..n).map(|u| (u * 2 / n) as BlockId).collect();
+    let mut phg = PartitionedHypergraph::new(hg, 2);
+    phg.set_uniform_max_weight(0.2);
+    phg.assign_all(&parts, 1);
+    let seeds: Vec<u32> = (0..10).collect();
+    mtkahypar::refinement::lp::lp_refine_localized(&phg, &ctx(2, 17), &seeds);
+    assert_eq!(phg.parts(), parts, "perfect partition: nothing may move");
+}
+
+// ---------------------------------------------------------- n-level
+
+#[test]
+fn nlevel_batch_size_extremes_work() {
+    let hg = Arc::new(generators::planted_hypergraph(
+        &PlantedParams { n: 220, m: 420, blocks: 2, ..Default::default() },
+        19,
+    ));
+    for b_max in [1usize, 8, 10_000] {
+        let mut c = ctx(2, 19);
+        c.nlevel = true;
+        c.nlevel_batch_size = b_max;
+        let phg = partitioner::partition_arc(hg.clone(), &c);
+        assert!(phg.is_balanced(), "b_max={b_max}");
+        phg.verify_consistency().unwrap();
+    }
+}
+
+// ---------------------------------------------------------- metrics
+
+#[test]
+fn metric_implementations_agree() {
+    let hg = Arc::new(generators::sat_hypergraph(
+        120,
+        480,
+        generators::SatRepresentation::Primal,
+        23,
+    ));
+    let mut rng = Rng::new(23);
+    let k = 4;
+    let parts: Vec<BlockId> = (0..hg.num_nodes()).map(|_| rng.next_below(k) as BlockId).collect();
+    let phg = PartitionedHypergraph::new(hg.clone(), k);
+    phg.assign_all(&parts, 2);
+    assert_eq!(phg.km1(), metrics::km1(&hg, &parts, k));
+    assert_eq!(phg.cut(), metrics::cut(&hg, &parts));
+    assert_eq!(phg.soed(), metrics::soed(&hg, &parts, k));
+    let bw = metrics::block_weights_hg(&hg, &parts, k);
+    let imb = metrics::imbalance(hg.total_weight(), k, &bw);
+    assert!((phg.imbalance() - imb).abs() < 1e-9);
+}
+
+#[test]
+fn graph_and_hypergraph_cut_agree_on_2pin_nets() {
+    let g = generators::mesh_graph(12, 12);
+    let hg = g.to_hypergraph();
+    let mut rng = Rng::new(29);
+    let parts: Vec<BlockId> = (0..g.num_nodes()).map(|_| rng.next_below(3) as BlockId).collect();
+    assert_eq!(metrics::graph_cut(&g, &parts), metrics::cut(&hg, &parts));
+    // for 2-pin nets km1 == cut
+    assert_eq!(metrics::km1(&hg, &parts, 3), metrics::cut(&hg, &parts));
+}
+
+// ---------------------------------------------------------- pipelines
+
+#[test]
+fn flows_only_preset_combination() {
+    // flows without FM (custom config): must still be sound
+    let hg = generators::planted_hypergraph(
+        &PlantedParams { n: 260, m: 500, blocks: 2, ..Default::default() },
+        31,
+    );
+    let mut c = ctx(2, 31);
+    c.use_fm = false;
+    c.use_flows = true;
+    let phg = partitioner::partition(&hg, &c);
+    assert!(phg.is_balanced());
+    phg.verify_consistency().unwrap();
+}
+
+#[test]
+fn vcycle_composes_with_every_preset() {
+    let hg = generators::planted_hypergraph(
+        &PlantedParams { n: 240, m: 450, blocks: 2, ..Default::default() },
+        37,
+    );
+    for preset in [Preset::Speed, Preset::Default] {
+        let mut c = ctx(2, 37);
+        c.use_fm = preset == Preset::Default;
+        let phg = partitioner::partition(&hg, &c);
+        let before = phg.km1();
+        let improved = mtkahypar::refinement::vcycle(phg, &c, 1);
+        assert!(improved.km1() <= before, "{preset:?}");
+        assert!(improved.is_balanced());
+    }
+}
+
+#[test]
+fn seeds_change_nondeterministic_results() {
+    // sanity that seeding actually reaches the RNG everywhere
+    let hg = generators::planted_hypergraph(
+        &PlantedParams { n: 300, m: 560, blocks: 4, ..Default::default() },
+        41,
+    );
+    let p1 = partitioner::partition(&hg, &ctx(4, 1)).parts();
+    let p2 = partitioner::partition(&hg, &ctx(4, 2)).parts();
+    assert_ne!(p1, p2, "different seeds should explore different solutions");
+}

@@ -1,0 +1,205 @@
+//! End-to-end integration tests over the public API: every preset on
+//! every instance archetype, balance guarantees, objective verification
+//! from scratch, determinism, IO round trips, and the CLI-visible paths.
+
+use mtkahypar::benchkit::baselines;
+use mtkahypar::coordinator::context::{Context, Preset};
+use mtkahypar::coordinator::partitioner;
+use mtkahypar::generators::{self, PlantedParams, SatRepresentation};
+use mtkahypar::graph::partitioner::partition_graph;
+use mtkahypar::hypergraph::Hypergraph;
+use mtkahypar::metrics;
+use mtkahypar::{io, BlockId};
+use std::sync::Arc;
+
+fn test_ctx(preset: Preset, k: usize, seed: u64) -> Context {
+    let mut ctx = Context::new(preset, k, 0.03).with_threads(2).with_seed(seed);
+    ctx.contraction_limit_factor = 24;
+    ctx.ip_min_repetitions = 2;
+    ctx.ip_max_repetitions = 3;
+    ctx.fm_max_rounds = 3;
+    ctx
+}
+
+fn check(hg: &Hypergraph, preset: Preset, k: usize, seed: u64) -> i64 {
+    let ctx = test_ctx(preset, k, seed);
+    let phg = partitioner::partition(hg, &ctx);
+    assert!(phg.is_balanced(), "{preset:?} k={k}: imbalance {}", phg.imbalance());
+    phg.verify_consistency().unwrap_or_else(|e| panic!("{preset:?}: {e}"));
+    let parts = phg.parts();
+    assert_eq!(phg.km1(), metrics::km1(hg, &parts, k), "{preset:?}: objective verified");
+    assert!(
+        metrics::block_weights_hg(hg, &parts, k).iter().all(|&w| w > 0),
+        "{preset:?}: no empty blocks"
+    );
+    phg.km1()
+}
+
+#[test]
+fn all_presets_on_all_archetypes() {
+    let instances: Vec<(&str, Hypergraph)> = vec![
+        (
+            "planted",
+            generators::planted_hypergraph(
+                &PlantedParams { n: 350, m: 650, blocks: 4, ..Default::default() },
+                1,
+            ),
+        ),
+        ("spm", generators::spm_hypergraph(350, 350, 5, 2)),
+        ("sat_dual", generators::sat_hypergraph(150, 550, SatRepresentation::Dual, 3)),
+        ("vlsi", generators::vlsi_hypergraph(400, 600, 4)),
+    ];
+    for (name, hg) in &instances {
+        for preset in Preset::all() {
+            let km1 = check(hg, preset, 4, 5);
+            println!("{name} {preset:?}: km1 = {km1}");
+        }
+    }
+}
+
+#[test]
+fn k_sweep_balance_always_holds() {
+    let hg = generators::planted_hypergraph(
+        &PlantedParams { n: 700, m: 1200, blocks: 8, ..Default::default() },
+        9,
+    );
+    for k in [2, 3, 5, 8, 16] {
+        check(&hg, Preset::Default, k, 11);
+    }
+}
+
+#[test]
+fn planted_partitions_recovered() {
+    // near-perfectly separable instance: the planted cut must be found
+    // (low km1 compared to the number of cross nets)
+    let p = PlantedParams { n: 500, m: 1000, blocks: 4, p_intra: 0.97, ..Default::default() };
+    let hg = generators::planted_hypergraph(&p, 21);
+    let km1 = check(&hg, Preset::Default, 4, 3);
+    // ~3% of 1000 nets cross blocks; each contributes ≥1 to km1.
+    // allow 2× slack for imperfect recovery
+    assert!(km1 < 80, "planted structure should be recovered: km1 = {km1}");
+}
+
+#[test]
+fn deterministic_is_bit_identical_everywhere() {
+    let hg = generators::spm_hypergraph(400, 400, 5, 13);
+    let runs: Vec<Vec<BlockId>> = [1usize, 2, 4]
+        .iter()
+        .map(|&t| {
+            let mut ctx = test_ctx(Preset::Deterministic, 4, 17);
+            ctx.threads = t;
+            partitioner::partition(&hg, &ctx).parts()
+        })
+        .collect();
+    assert_eq!(runs[0], runs[1]);
+    assert_eq!(runs[1], runs[2]);
+    // and across repeated runs
+    let again = partitioner::partition(&hg, &test_ctx(Preset::Deterministic, 4, 17)).parts();
+    assert_eq!(runs[0], again);
+}
+
+#[test]
+fn nondeterministic_seeds_vary_but_quality_stable() {
+    let hg = generators::planted_hypergraph(
+        &PlantedParams { n: 400, m: 700, blocks: 4, ..Default::default() },
+        31,
+    );
+    let km1s: Vec<i64> =
+        (0..3).map(|seed| check(&hg, Preset::Default, 4, seed)).collect();
+    let max = *km1s.iter().max().unwrap() as f64;
+    let min = *km1s.iter().min().unwrap() as f64;
+    assert!(max <= 2.0 * min + 16.0, "seed variance too large: {km1s:?}");
+}
+
+#[test]
+fn graph_pipeline_and_io_roundtrip() {
+    let g = generators::mesh_graph(20, 20);
+    let ctx = test_ctx(Preset::Default, 4, 7);
+    let pg = partition_graph(&g, &ctx);
+    assert!(pg.is_balanced());
+    assert_eq!(pg.cut(), metrics::graph_cut(&g, &pg.parts()));
+
+    // partition file round trip
+    let dir = std::env::temp_dir().join("mtk_integration");
+    std::fs::create_dir_all(&dir).unwrap();
+    let pfile = dir.join("mesh.part");
+    io::write_partition(&pg.parts(), &pfile).unwrap();
+    assert_eq!(io::read_partition(&pfile).unwrap(), pg.parts());
+}
+
+#[test]
+fn hmetis_file_to_partition_pipeline() {
+    // write an instance, read it back, partition it — the CLI data path
+    let hg = generators::vlsi_hypergraph(300, 450, 3);
+    let dir = std::env::temp_dir().join("mtk_integration");
+    std::fs::create_dir_all(&dir).unwrap();
+    let f = dir.join("circuit.hgr");
+    io::write_hmetis(&hg, &f).unwrap();
+    let rd = Arc::new(io::read_hmetis(&f).unwrap());
+    assert_eq!(rd.num_pins(), hg.num_pins());
+    let phg = partitioner::partition_arc(rd, &test_ctx(Preset::Default, 2, 1));
+    assert!(phg.is_balanced());
+}
+
+#[test]
+fn baselines_quality_ordering() {
+    // the paper's core claim, reproduced end-to-end: Mt-KaHyPar-D-F ≥ D ≥
+    // Zoltan-like in quality (aggregate over seeds)
+    let mut df = 0i64;
+    let mut d = 0i64;
+    let mut z = 0i64;
+    for seed in 0..3u64 {
+        let hg = Arc::new(generators::planted_hypergraph(
+            &PlantedParams { n: 450, m: 850, blocks: 4, p_intra: 0.88, ..Default::default() },
+            seed,
+        ));
+        let ctx = test_ctx(Preset::Default, 4, seed);
+        d += partitioner::partition_arc(hg.clone(), &ctx).km1();
+        let ctx_f = test_ctx(Preset::DefaultFlows, 4, seed);
+        df += partitioner::partition_arc(hg.clone(), &ctx_f).km1();
+        z += baselines::zoltan_like(&hg, &ctx).km1();
+    }
+    assert!(d <= z, "D ({d}) must beat the LP-only class ({z})");
+    assert!(df <= d + 8, "flows must not lose quality: {df} vs {d}");
+}
+
+#[test]
+fn runtime_oracle_agrees_when_artifacts_present() {
+    let Some(rt) = mtkahypar::runtime::global() else {
+        eprintln!("artifacts not built; skipping");
+        return;
+    };
+    let hg = generators::planted_hypergraph(
+        &PlantedParams { n: 120, m: 128, blocks: 3, ..Default::default() },
+        5,
+    );
+    let parts: Vec<BlockId> = (0..hg.num_nodes()).map(|u| (u % 3) as BlockId).collect();
+    let nodes: Vec<u32> = (0..hg.num_nodes() as u32).collect();
+    let nets: Vec<u32> = hg.nets().take(128).collect();
+    let (benefit, penalty) =
+        mtkahypar::runtime::gain_tile_for(rt, &hg, &parts, &nodes, &nets, 3).unwrap();
+    let phg = mtkahypar::partition::PartitionedHypergraph::new(Arc::new(hg.clone()), 3);
+    phg.assign_all(&parts, 1);
+    for (i, &u) in nodes.iter().enumerate() {
+        let mut b = 0f32;
+        let mut p = [0f32; 3];
+        for &e in hg.incident_nets(u) {
+            if !nets.contains(&e) {
+                continue;
+            }
+            let w = hg.net_weight(e) as f32;
+            if phg.pin_count(e, parts[u as usize]) == 1 {
+                b += w;
+            }
+            for (t, pt) in p.iter_mut().enumerate() {
+                if phg.pin_count(e, t as BlockId) == 0 {
+                    *pt += w;
+                }
+            }
+        }
+        assert_eq!(benefit[i], b);
+        for t in 0..3 {
+            assert_eq!(penalty[i * mtkahypar::runtime::K + t], p[t]);
+        }
+    }
+}

@@ -1,0 +1,261 @@
+//! Property-based tests (seeded mini-framework, DESIGN.md §6): random
+//! instances → structural and algorithmic invariants. Each property runs
+//! over many seeds; failures print the reproducing seed.
+
+use mtkahypar::coordinator::context::{Context, Preset};
+use mtkahypar::generators::{self, PlantedParams};
+use mtkahypar::hypergraph::{contraction, Hypergraph};
+use mtkahypar::metrics;
+use mtkahypar::partition::{
+    gain_recalculation::{recalculate_gains, replay_gains_reference},
+    GainTable, Move, PartitionedHypergraph,
+};
+use mtkahypar::util::Rng;
+use mtkahypar::{BlockId, NodeId};
+use std::sync::Arc;
+
+const SEEDS: u64 = 24;
+
+fn random_hypergraph(seed: u64) -> Hypergraph {
+    let mut rng = Rng::new(seed ^ 0xfeed);
+    let n = 20 + rng.next_below(120);
+    let m = 20 + rng.next_below(200);
+    let mut nets = Vec::new();
+    for _ in 0..m {
+        let sz = 2 + rng.next_below(6);
+        let pins: Vec<NodeId> =
+            rng.sample_indices(n, sz).into_iter().map(|x| x as NodeId).collect();
+        if pins.len() >= 2 {
+            nets.push(pins);
+        }
+    }
+    let weights: Vec<i64> = (0..n).map(|_| 1 + rng.next_below(3) as i64).collect();
+    let net_w: Vec<i64> = (0..nets.len()).map(|_| 1 + rng.next_below(4) as i64).collect();
+    Hypergraph::from_nets(n, &nets, Some(weights), Some(net_w))
+}
+
+fn random_parts(rng: &mut Rng, n: usize, k: usize) -> Vec<BlockId> {
+    (0..n).map(|_| rng.next_below(k) as BlockId).collect()
+}
+
+#[test]
+fn prop_contraction_preserves_weight_and_shrinks() {
+    for seed in 0..SEEDS {
+        let hg = random_hypergraph(seed);
+        let mut rng = Rng::new(seed);
+        let n = hg.num_nodes();
+        // random idempotent clustering
+        let mut rep: Vec<NodeId> = (0..n as NodeId).collect();
+        for u in 0..n {
+            let target = rng.next_below(n);
+            if rep[target] == target as NodeId {
+                rep[u] = target as NodeId;
+            }
+        }
+        // full path compression (assignments form acyclic chains)
+        for u in 0..n {
+            let mut r = u;
+            while rep[r] as usize != r {
+                r = rep[r] as usize;
+            }
+            rep[u] = r as NodeId;
+        }
+        let c = contraction::contract(&hg, &rep, 2);
+        assert_eq!(c.coarse.total_weight(), hg.total_weight(), "seed {seed}");
+        assert!(c.coarse.num_nodes() <= n, "seed {seed}");
+        c.coarse.validate().unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+        // pins of the coarse hypergraph never exceed the original
+        assert!(c.coarse.num_pins() <= hg.num_pins(), "seed {seed}");
+    }
+}
+
+#[test]
+fn prop_partition_structure_consistent_under_random_moves() {
+    for seed in 0..SEEDS {
+        let hg = Arc::new(random_hypergraph(seed));
+        let mut rng = Rng::new(seed ^ 1);
+        let k = 2 + rng.next_below(5);
+        let phg = PartitionedHypergraph::new(hg.clone(), k);
+        phg.assign_all(&random_parts(&mut rng, hg.num_nodes(), k), 1);
+        let mut km1 = phg.km1();
+        for _ in 0..100 {
+            let u = rng.next_below(hg.num_nodes()) as NodeId;
+            let t = rng.next_below(k) as BlockId;
+            if t != phg.block_of(u) {
+                let expected = phg.gain(u, t);
+                let out = phg.move_unchecked(u, t, None);
+                assert_eq!(out.attributed_gain, expected, "seed {seed}");
+                km1 -= out.attributed_gain;
+            }
+        }
+        assert_eq!(phg.km1(), km1, "seed {seed}");
+        phg.verify_consistency().unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+    }
+}
+
+#[test]
+fn prop_gain_table_exact_after_quiescence() {
+    for seed in 0..SEEDS {
+        let hg = Arc::new(random_hypergraph(seed));
+        let mut rng = Rng::new(seed ^ 2);
+        let k = 2 + rng.next_below(4);
+        let phg = PartitionedHypergraph::new(hg.clone(), k);
+        phg.assign_all(&random_parts(&mut rng, hg.num_nodes(), k), 1);
+        let gt = GainTable::new(hg.num_nodes(), k);
+        gt.initialize(&phg, 1);
+        // each node moved at most once (FM round discipline)
+        let mut moved = vec![false; hg.num_nodes()];
+        for u in rng.sample_indices(hg.num_nodes(), hg.num_nodes() / 3) {
+            let t = rng.next_below(k) as BlockId;
+            if t != phg.block_of(u as NodeId) {
+                phg.move_unchecked(u as NodeId, t, Some(&gt));
+                moved[u] = true;
+            }
+        }
+        gt.verify_against(&phg, &|u| moved[u as usize])
+            .unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+    }
+}
+
+#[test]
+fn prop_gain_recalculation_equals_sequential_replay() {
+    for seed in 0..SEEDS {
+        let hg = Arc::new(random_hypergraph(seed));
+        let mut rng = Rng::new(seed ^ 3);
+        let k = 2 + rng.next_below(4);
+        let parts = random_parts(&mut rng, hg.num_nodes(), k);
+        let mut moves = Vec::new();
+        for u in rng.sample_indices(hg.num_nodes(), hg.num_nodes() / 2) {
+            let from = parts[u];
+            let to = ((from as usize + 1 + rng.next_below(k - 1)) % k) as BlockId;
+            moves.push(Move { node: u as NodeId, from, to });
+        }
+        let pre = PartitionedHypergraph::new(hg.clone(), k);
+        pre.assign_all(&parts, 1);
+        let expected = replay_gains_reference(&pre, &moves);
+        let got = recalculate_gains(&pre, &moves, 2);
+        assert_eq!(got, expected, "seed {seed}");
+    }
+}
+
+#[test]
+fn prop_refinement_never_worsens_or_unbalances() {
+    for seed in 0..SEEDS / 2 {
+        let p = PlantedParams { n: 200, m: 380, blocks: 3, ..Default::default() };
+        let hg = Arc::new(generators::planted_hypergraph(&p, seed));
+        let mut rng = Rng::new(seed ^ 4);
+        let k = 3;
+        let n = hg.num_nodes();
+        let mut parts: Vec<BlockId> = (0..n).map(|u| (u * k / n) as BlockId).collect();
+        for _ in 0..n / 8 {
+            parts[rng.next_below(n)] = rng.next_below(k) as BlockId;
+        }
+        let mut phg = PartitionedHypergraph::new(hg.clone(), k);
+        phg.set_uniform_max_weight(0.3);
+        phg.assign_all(&parts, 1);
+        let before = phg.km1();
+        let mut ctx = Context::new(Preset::DefaultFlows, k, 0.3).with_threads(2).with_seed(seed);
+        ctx.fm_max_rounds = 3;
+        mtkahypar::refinement::lp::lp_refine(&phg, &ctx);
+        mtkahypar::refinement::fm::fm_refine(&phg, &ctx);
+        mtkahypar::refinement::flow::flow_refine(&phg, &ctx);
+        assert!(phg.km1() <= before, "seed {seed}: {} > {before}", phg.km1());
+        assert!(phg.is_balanced(), "seed {seed}");
+        phg.verify_consistency().unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+    }
+}
+
+#[test]
+fn prop_maxflow_equals_mincut_random_dags() {
+    use mtkahypar::refinement::flow::maxflow::FlowNetwork;
+    for seed in 0..SEEDS {
+        let mut rng = Rng::new(seed ^ 5);
+        let n = 6 + rng.next_below(20);
+        let mut net = FlowNetwork::new(n);
+        for u in 0..n {
+            for v in 0..n {
+                if u != v && rng.coin(0.25) {
+                    net.add_edge(u as u32, v as u32, 1 + rng.next_below(9) as i64);
+                }
+            }
+        }
+        let mut source = vec![false; n];
+        let mut sink = vec![false; n];
+        source[0] = true;
+        sink[n - 1] = true;
+        let f = net.max_preflow(&source, &sink);
+        // weight of the source-side cut must equal the flow value
+        let side = net.source_side(&source, &sink);
+        if side[n - 1] {
+            // sink reachable => infeasible cut; flow must have hit
+            // capacity of NO cut — this cannot happen for max preflow
+            panic!("seed {seed}: sink on source side");
+        }
+        let mut cut = 0i64;
+        for u in 0..n {
+            if side[u] {
+                for e in &net.edges[u] {
+                    if !side[e.to as usize] && e.cap > 0 {
+                        cut += e.cap;
+                    }
+                }
+            }
+        }
+        assert_eq!(cut, f, "seed {seed}: max-flow min-cut duality");
+    }
+}
+
+#[test]
+fn prop_projection_preserves_objective() {
+    // projecting a coarse partition to the finer level never changes km1
+    for seed in 0..SEEDS / 2 {
+        let hg = Arc::new(random_hypergraph(seed));
+        let mut rng = Rng::new(seed ^ 6);
+        let n = hg.num_nodes();
+        let mut rep: Vec<NodeId> = (0..n as NodeId).collect();
+        for u in 0..n {
+            let t = rng.next_below(n);
+            if rep[t] == t as NodeId {
+                rep[u] = t as NodeId;
+            }
+        }
+        for u in 0..n {
+            let mut r = u;
+            while rep[r] as usize != r {
+                r = rep[r] as usize;
+            }
+            rep[u] = r as NodeId;
+        }
+        let c = contraction::contract(&hg, &rep, 1);
+        let k = 3;
+        let coarse_parts: Vec<BlockId> =
+            (0..c.coarse.num_nodes()).map(|u| (u % k) as BlockId).collect();
+        let fine_parts: Vec<BlockId> =
+            (0..n).map(|u| coarse_parts[c.fine_to_coarse[u] as usize]).collect();
+        assert_eq!(
+            metrics::km1(&c.coarse, &coarse_parts, k),
+            metrics::km1(&hg, &fine_parts, k),
+            "seed {seed}: projection must preserve the objective"
+        );
+    }
+}
+
+#[test]
+fn prop_deterministic_coarsening_thread_invariant() {
+    for seed in 0..SEEDS / 3 {
+        let hg = random_hypergraph(seed);
+        let mk = |threads| {
+            let mut ctx =
+                Context::new(Preset::Deterministic, 2, 0.03).with_threads(threads).with_seed(seed);
+            ctx.det_sub_rounds = 8;
+            mtkahypar::coarsening::deterministic::cluster(
+                &hg,
+                &ctx,
+                None,
+                hg.total_weight() / 4,
+                4,
+            )
+        };
+        assert_eq!(mk(1), mk(4), "seed {seed}");
+    }
+}
