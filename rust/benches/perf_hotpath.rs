@@ -14,7 +14,7 @@ use mtkahypar::datastructures::RatingMap;
 use mtkahypar::generators::{planted_hypergraph, PlantedParams};
 use mtkahypar::hypergraph::contraction;
 use mtkahypar::partition::{recalculate_gains, GainTable, Move, PartitionedHypergraph};
-use mtkahypar::refinement::lp;
+use mtkahypar::refinement::{lp, Workspace};
 use mtkahypar::util::Rng;
 use mtkahypar::{BlockId, NodeId};
 use std::sync::Arc;
@@ -70,6 +70,32 @@ fn main() {
         }
     });
     bench("gain table full initialize", 5, n, || gt.initialize(&phg, 1));
+
+    // ---- refinement pipeline: per-level gain-table reuse ----
+    // The uncoarsening loop runs refinement once per level. Before the
+    // pipeline refactor each level paid GainTable::new (an O(n·k)
+    // allocation + zeroing) on top of the value initialization; the
+    // pipeline workspace allocates once and only re-initializes in place.
+    let levels = 8;
+    bench("gain table x8 levels: alloc + initialize", 3, levels * n, || {
+        for _ in 0..levels {
+            let fresh = GainTable::new(n, k);
+            fresh.initialize(&phg, 1);
+            std::hint::black_box(&fresh);
+        }
+    });
+    let mut ws = Workspace::new(k, 1, n);
+    bench("gain table x8 levels: pipeline reuse", 3, levels * n, || {
+        for _ in 0..levels {
+            ws.prepare_gain_table(&phg, 1);
+        }
+        std::hint::black_box(&ws);
+    });
+    assert_eq!(
+        ws.gain_table_allocs(),
+        1,
+        "pipeline reuse must not allocate per level"
+    );
 
     // ---- rating map (coarsening inner loop) ----
     let mut map = RatingMap::with_default_capacity();

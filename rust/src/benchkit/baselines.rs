@@ -52,11 +52,13 @@ pub fn patoh_like(hg: &Arc<Hypergraph>, ctx_in: &Context) -> PartitionedHypergra
         current = coarse;
     }
     let mut parts = initial::initial_partition(current, &ctx);
+    let mut pipeline = crate::refinement::RefinementPipeline::new(&ctx, hg.num_nodes());
     for i in (0..levels.len()).rev() {
-        let phg = partitioner::refine_level(levels[i].coarse.clone(), &parts, &ctx);
+        let phg =
+            partitioner::refine_level(levels[i].coarse.clone(), &parts, &ctx, &mut pipeline);
         parts = crate::coarsening::project_partition(&levels[i], &phg.parts());
     }
-    partitioner::refine_level(hg.clone(), &parts, &ctx)
+    partitioner::refine_level(hg.clone(), &parts, &ctx, &mut pipeline)
 }
 
 /// Parallel LP-only multilevel (Zoltan / KaMinPar class).

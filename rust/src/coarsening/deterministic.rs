@@ -66,7 +66,7 @@ pub fn cluster(
         let mut desired = desired.into_inner().unwrap();
         // moving nodes cannot simultaneously be targets (freeze rule):
         // a proposal onto a node that itself proposes a move is dropped
-        let proposes: rustc_hash::FxHashSet<NodeId> =
+        let proposes: crate::util::fxhash::FxHashSet<NodeId> =
             desired.iter().map(|&(u, _)| u).collect();
         desired.retain(|&(_, t)| !proposes.contains(&t));
 

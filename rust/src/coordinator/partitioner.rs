@@ -10,7 +10,7 @@ use crate::hypergraph::Hypergraph;
 use crate::initial;
 use crate::partition::PartitionedHypergraph;
 use crate::preprocessing::{detect_communities, LouvainConfig};
-use crate::refinement::{flow, fm, lp};
+use crate::refinement::RefinementPipeline;
 use crate::BlockId;
 use std::sync::Arc;
 
@@ -55,40 +55,34 @@ pub fn partition_arc(hg: Arc<Hypergraph>, ctx: &Context) -> PartitionedHypergrap
         timer.time("initial_partitioning", || initial::initial_partition(coarsest, ctx));
 
     // ---- uncoarsening + refinement (§6–8) ----
+    // One pipeline for the whole uncoarsening sequence: the gain table,
+    // FM ownership bits and per-thread search scratch are allocated once
+    // (sized for the finest level) and repaired in place per level after
+    // `project_partition` — the former per-level `GainTable::new` +
+    // per-round buffer churn was the dominant allocation cost of this
+    // loop (see the `perf_hotpath` "gain table per level" entries).
+    let mut pipeline = RefinementPipeline::new(ctx, hg.num_nodes());
     for i in (0..hierarchy.levels.len()).rev() {
         let level_hg = hierarchy.levels[i].coarse.clone();
-        let phg = refine_level(level_hg, &parts, ctx);
+        let phg = refine_level(level_hg, &parts, ctx, &mut pipeline);
         parts = coarsening::project_partition(&hierarchy.levels[i], &phg.parts());
     }
     // finest level
-    refine_level(hg, &parts, ctx)
+    refine_level(hg, &parts, ctx, &mut pipeline)
 }
 
 /// Build the partition structure for one level and run the refinement
-/// stack on it (Algorithm 3.1 lines 7–10).
+/// pipeline on it (Algorithm 3.1 lines 7–10).
 pub(crate) fn refine_level(
     hg: Arc<Hypergraph>,
     parts: &[BlockId],
     ctx: &Context,
+    pipeline: &mut RefinementPipeline,
 ) -> PartitionedHypergraph {
-    let timer = ctx.timer.clone();
     let mut phg = PartitionedHypergraph::new(hg, ctx.k);
     phg.set_uniform_max_weight(ctx.epsilon);
     phg.assign_all(parts, ctx.threads);
-
-    timer.time("label_propagation", || {
-        if ctx.deterministic {
-            lp::lp_refine_deterministic(&phg, ctx)
-        } else {
-            lp::lp_refine(&phg, ctx)
-        }
-    });
-    if ctx.use_fm {
-        timer.time("fm", || fm::fm_refine(&phg, ctx));
-    }
-    if ctx.use_flows {
-        timer.time("flows", || flow::flow_refine(&phg, ctx));
-    }
+    pipeline.refine(&phg, ctx);
     phg
 }
 

@@ -4,8 +4,8 @@
 //! move gain; supports `insert`, `pop_max`, `adjust` (increase or decrease
 //! key) and `contains` in O(log n) via a binary heap with a position index.
 
+use crate::util::fxhash::FxHashMap;
 use crate::{Gain, NodeId};
-use rustc_hash::FxHashMap;
 
 /// Max-heap keyed by `(gain, tiebreak)` with per-node addressability.
 #[derive(Default)]

@@ -137,7 +137,7 @@ impl RatingMap {
 mod tests {
     use super::*;
     use crate::util::Rng;
-    use rustc_hash::FxHashMap;
+    use crate::util::fxhash::FxHashMap;
 
     #[test]
     fn accumulates_like_hashmap() {

@@ -216,7 +216,7 @@ pub fn rmat_graph(scale: u32, avg_degree: usize, seed: u64) -> Graph {
     let mut rng = Rng::new(seed ^ 0x5EED_0F5E_ED01);
     let (a, b, c) = (0.57, 0.19, 0.19);
     let mut edges: Vec<(NodeId, NodeId, i64)> = Vec::with_capacity(m);
-    let mut seen = rustc_hash::FxHashSet::default();
+    let mut seen = crate::util::fxhash::FxHashSet::default();
     let mut attempts = 0usize;
     while edges.len() < m && attempts < 20 * m {
         attempts += 1;

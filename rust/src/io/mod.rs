@@ -4,7 +4,8 @@
 use crate::graph::Graph;
 use crate::hypergraph::Hypergraph;
 use crate::{BlockId, NodeId};
-use anyhow::{bail, Context, Result};
+use crate::bail;
+use crate::util::error::{Context, Error, Result};
 use std::io::{BufRead, BufReader, Write};
 use std::path::Path;
 
@@ -16,8 +17,12 @@ pub fn read_hmetis(path: &Path) -> Result<Hypergraph> {
     let file = std::fs::File::open(path).with_context(|| format!("open {path:?}"))?;
     let mut lines = BufReader::new(file)
         .lines()
-        .map(|l| l.map_err(anyhow::Error::from))
-        .filter(|l| l.as_ref().map(|s| !s.trim_start().starts_with('%') && !s.trim().is_empty()).unwrap_or(true));
+        .map(|l| l.map_err(Error::from))
+        .filter(|l| {
+            l.as_ref()
+                .map(|s| !s.trim_start().starts_with('%') && !s.trim().is_empty())
+                .unwrap_or(true)
+        });
 
     let header = lines.next().context("empty hMetis file")??;
     let head: Vec<usize> =
@@ -94,8 +99,12 @@ pub fn read_metis(path: &Path) -> Result<Graph> {
     let file = std::fs::File::open(path).with_context(|| format!("open {path:?}"))?;
     let mut lines = BufReader::new(file)
         .lines()
-        .map(|l| l.map_err(anyhow::Error::from))
-        .filter(|l| l.as_ref().map(|s| !s.trim_start().starts_with('%') && !s.trim().is_empty()).unwrap_or(true));
+        .map(|l| l.map_err(Error::from))
+        .filter(|l| {
+            l.as_ref()
+                .map(|s| !s.trim_start().starts_with('%') && !s.trim().is_empty())
+                .unwrap_or(true)
+        });
 
     let header = lines.next().context("empty Metis file")??;
     let head: Vec<usize> =

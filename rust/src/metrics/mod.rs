@@ -65,14 +65,18 @@ pub fn graph_cut(g: &Graph, parts: &[BlockId]) -> i64 {
     total
 }
 
-/// Imbalance ε(Π) — and the per-block weights it derives from.
+/// Imbalance ε(Π) = max_b c(V_b)/⌈c(V)/k⌉ − 1.
+///
+/// Matches `PartitionedHypergraph::imbalance`: the ⌈c(V)/k⌉ reference is
+/// the same one the `L_max` block-weight limits use, so `imbalance ≤ ε`
+/// and the per-block limit check agree on totals not divisible by k.
 pub fn imbalance(
     total_weight: i64,
     k: usize,
     block_weights: &[i64],
 ) -> f64 {
-    let per = total_weight as f64 / k as f64;
-    block_weights.iter().map(|&w| w as f64 / per - 1.0).fold(f64::MIN, f64::max)
+    let per = crate::partition::PartitionedHypergraph::reference_block_weight(total_weight, k);
+    block_weights.iter().map(|&w| w as f64 / per - 1.0).fold(-1.0, f64::max)
 }
 
 /// Block weights of a partition over a hypergraph.

@@ -25,7 +25,7 @@ use crate::hypergraph::{contraction, Hypergraph};
 use crate::initial;
 use crate::partition::PartitionedHypergraph;
 use crate::preprocessing::{detect_communities, LouvainConfig};
-use crate::refinement::{flow, fm, lp};
+use crate::refinement::{lp, RefinementPipeline};
 use crate::{BlockId, NodeId};
 use std::sync::Arc;
 
@@ -133,7 +133,11 @@ pub fn partition(hg: Arc<Hypergraph>, ctx: &Context) -> PartitionedHypergraph {
 
     // ---- batch uncoarsening (§9) ----
     // revert the sequence in reverse order, b_max contractions per batch;
-    // at each batch boundary materialize the snapshot and refine locally
+    // at each batch boundary materialize the snapshot and refine locally.
+    // One refinement pipeline serves every batch *and* the finest level:
+    // the gain table and FM scratch are sized for the input hypergraph
+    // once and repaired in place per snapshot.
+    let mut pipeline = RefinementPipeline::new(ctx, n);
     let b_max = ctx.nlevel_batch_size.max(1);
     let mut remaining = sequence.len();
     while remaining > 0 {
@@ -170,7 +174,9 @@ pub fn partition(hg: Arc<Hypergraph>, ctx: &Context) -> PartitionedHypergraph {
         let touched: Vec<NodeId> = {
             let mut t: Vec<NodeId> = batch
                 .iter()
-                .flat_map(|c| [snap.fine_to_coarse[c.v as usize], snap.fine_to_coarse[c.u as usize]])
+                .flat_map(|c| {
+                    [snap.fine_to_coarse[c.v as usize], snap.fine_to_coarse[c.u as usize]]
+                })
                 .collect();
             t.sort_unstable();
             t.dedup();
@@ -178,7 +184,7 @@ pub fn partition(hg: Arc<Hypergraph>, ctx: &Context) -> PartitionedHypergraph {
         };
         timer.time("localized_lp", || lp::lp_refine_localized(&phg, ctx, &touched));
         if ctx.use_fm {
-            timer.time("localized_fm", || fm::fm_refine_with_seeds(&phg, ctx, Some(&touched)));
+            timer.time("localized_fm", || pipeline.fm_with_seeds(&phg, ctx, Some(&touched)));
         }
         // write back through the snapshot mapping
         let snap_result = phg.parts();
@@ -191,19 +197,7 @@ pub fn partition(hg: Arc<Hypergraph>, ctx: &Context) -> PartitionedHypergraph {
     let mut phg = PartitionedHypergraph::new(hg, ctx.k);
     phg.set_uniform_max_weight(ctx.epsilon);
     phg.assign_all(&parts, ctx.threads);
-    timer.time("label_propagation", || {
-        if ctx.deterministic {
-            lp::lp_refine_deterministic(&phg, ctx)
-        } else {
-            lp::lp_refine(&phg, ctx)
-        }
-    });
-    if ctx.use_fm {
-        timer.time("global_fm", || fm::fm_refine(&phg, ctx));
-    }
-    if ctx.use_flows {
-        timer.time("flows", || flow::flow_refine(&phg, ctx));
-    }
+    pipeline.refine(&phg, ctx);
     phg
 }
 

@@ -29,6 +29,29 @@ impl GainTable {
         }
     }
 
+    /// Number of nodes the table has entries for.
+    #[inline]
+    pub fn node_capacity(&self) -> usize {
+        self.benefit.len()
+    }
+
+    /// Grow the table to hold at least `n` nodes (never shrinks). The
+    /// refinement pipeline sizes the table once for the finest level and
+    /// reuses it across all uncoarsening levels; coarser levels simply use
+    /// a prefix of the entries, so this only allocates when a caller
+    /// exceeds the initial capacity.
+    pub fn ensure_node_capacity(&mut self, n: usize) -> bool {
+        if n <= self.benefit.len() {
+            return false;
+        }
+        let old = self.benefit.len();
+        self.benefit.extend((old..n).map(|_| AtomicI64::new(0)));
+        let target = n * self.k;
+        let old_p = self.penalty.len();
+        self.penalty.extend((old_p..target).map(|_| AtomicI64::new(0)));
+        true
+    }
+
     /// Recompute all entries from the partition (parallel over nodes).
     pub fn initialize(&self, phg: &PartitionedHypergraph, threads: usize) {
         let n = phg.hypergraph().num_nodes();

@@ -233,11 +233,14 @@ impl PartitionedGraph {
         cut
     }
 
+    /// Imbalance against the same ⌈c(V)/k⌉ reference the `L_max` limits
+    /// use (mirrors `PartitionedHypergraph::imbalance`).
     pub fn imbalance(&self) -> f64 {
-        let per = self.g.total_weight() as f64 / self.k as f64;
+        let per =
+            super::PartitionedHypergraph::reference_block_weight(self.g.total_weight(), self.k);
         (0..self.k as BlockId)
             .map(|b| self.block_weight(b) as f64 / per - 1.0)
-            .fold(f64::MIN, f64::max)
+            .fold(-1.0, f64::max)
     }
 
     pub fn is_balanced(&self) -> bool {

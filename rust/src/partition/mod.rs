@@ -64,9 +64,20 @@ impl PartitionedHypergraph {
         }
     }
 
+    /// The reference block weight ⌈c(V)/k⌉ every balance-related
+    /// computation must share: [`Self::max_weight_for`],
+    /// [`Self::imbalance`], `PartitionedGraph::imbalance` and
+    /// `metrics::imbalance`. Clamped to ≥ 1 so zero-weight inputs stay
+    /// finite. Keeping a single definition is what guarantees
+    /// `is_balanced()` and `imbalance() <= ε` can never disagree.
+    #[inline]
+    pub fn reference_block_weight(total: NodeWeight, k: usize) -> f64 {
+        (total as f64 / k.max(1) as f64).ceil().max(1.0)
+    }
+
     /// Standard `L_max = (1+ε)·⌈c(V)/k⌉` block weight limits (paper §2).
     pub fn max_weight_for(total: NodeWeight, k: usize, eps: f64) -> NodeWeight {
-        (((total as f64 / k as f64).ceil()) * (1.0 + eps)).floor() as NodeWeight
+        (Self::reference_block_weight(total, k) * (1.0 + eps)).floor() as NodeWeight
     }
 
     /// Set uniform maximum block weights from the imbalance ratio ε.
@@ -333,12 +344,19 @@ impl PartitionedHypergraph {
         self.km1() + self.cut()
     }
 
-    /// Imbalance ε(Π) = max_b c(V_b)·k/c(V) − 1.
+    /// Imbalance ε(Π) = max_b c(V_b)/⌈c(V)/k⌉ − 1.
+    ///
+    /// Uses the same ⌈c(V)/k⌉ reference as [`Self::max_weight_for`], so for
+    /// integer block weights `imbalance() <= ε` holds exactly when
+    /// [`Self::is_balanced`] does under uniform `L_max = (1+ε)·⌈c(V)/k⌉`
+    /// limits — the two predicates cannot disagree on totals not divisible
+    /// by k. Robust against empty/zero-weight inputs (denominator clamped
+    /// to 1) and blocks of weight 0 (they contribute −1, never NaN).
     pub fn imbalance(&self) -> f64 {
-        let per = self.hg.total_weight() as f64 / self.k as f64;
+        let per = Self::reference_block_weight(self.hg.total_weight(), self.k);
         (0..self.k as BlockId)
             .map(|b| self.block_weight(b) as f64 / per - 1.0)
-            .fold(f64::MIN, f64::max)
+            .fold(-1.0, f64::max)
     }
 
     /// Do all blocks satisfy their weight limit?
@@ -508,8 +526,46 @@ mod tests {
 
     #[test]
     fn imbalance_and_border() {
+        // total weight 7, k = 2: the reference weight is ⌈7/2⌉ = 4 (the
+        // same one max_weight_for uses), so the 3/4 split is perfectly
+        // balanced rather than 14% over.
         let phg = setup(&[0, 0, 0, 1, 1, 1, 1], 2);
-        assert!((phg.imbalance() - (4.0 / 3.5 - 1.0)).abs() < 1e-9);
+        assert!(phg.imbalance().abs() < 1e-9);
+        let phg = setup(&[0, 0, 1, 1, 1, 1, 1], 2);
+        assert!((phg.imbalance() - (5.0 / 4.0 - 1.0)).abs() < 1e-9);
         assert!(phg.is_border(0)); // net1 is cut
+    }
+
+    #[test]
+    fn imbalance_agrees_with_is_balanced_on_indivisible_totals() {
+        // total weight 7 is not divisible by k = 2: is_balanced() (integer
+        // L_max check) and imbalance() <= ε (ratio check) must agree for
+        // every assignment and ε — the historic bug was a c(V)/k vs
+        // ⌈c(V)/k⌉ mismatch between the two.
+        for eps in [0.0, 0.03, 0.1, 0.25, 0.5] {
+            for split in 0..=7usize {
+                let parts: Vec<BlockId> = (0..7).map(|u| u32::from(u >= split)).collect();
+                let mut phg = PartitionedHypergraph::new(tiny(), 2);
+                phg.set_uniform_max_weight(eps);
+                phg.assign_all(&parts, 1);
+                assert_eq!(
+                    phg.is_balanced(),
+                    phg.imbalance() <= eps + 1e-9,
+                    "eps={eps} split={split}: imbalance {} vs limits {:?}",
+                    phg.imbalance(),
+                    (phg.block_weight(0), phg.block_weight(1), phg.max_block_weight(0))
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn imbalance_robust_for_empty_blocks() {
+        // k = 4 over 7 unit nodes: at least one block is empty; the empty
+        // block contributes −1 and the result stays finite
+        let phg = setup(&[0, 0, 0, 0, 1, 1, 2], 4);
+        let imb = phg.imbalance();
+        assert!(imb.is_finite());
+        assert!((imb - (4.0 / 2.0 - 1.0)).abs() < 1e-9); // ⌈7/4⌉ = 2
     }
 }

@@ -299,7 +299,7 @@ fn project(community: &mut [u32], clusters: &[u32]) {
 
 /// Renumber community ids to 0..count, preserving first-appearance order.
 fn normalize(community: &mut [u32]) -> Vec<u32> {
-    let mut remap = rustc_hash::FxHashMap::default();
+    let mut remap = crate::util::fxhash::FxHashMap::default();
     let mut next = 0u32;
     community
         .iter()

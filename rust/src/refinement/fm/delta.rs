@@ -6,13 +6,19 @@
 //! speculative moves. Once a search finds an improvement, the pending
 //! local moves are applied to the global partition and the overlay is
 //! cleared. Memory stays proportional to the number of pending moves.
+//!
+//! The overlay does **not** borrow the partition it shadows: every method
+//! takes the [`PartitionedHypergraph`] as an argument. That lets the
+//! refinement pipeline keep one `DeltaPartition` per thread alive across
+//! all uncoarsening levels (the hash tables keep their capacity) instead
+//! of reallocating per FM call.
 
 use crate::partition::PartitionedHypergraph;
+use crate::util::fxhash::FxHashMap;
 use crate::{BlockId, EdgeId, Gain, NodeId, NodeWeight};
-use rustc_hash::FxHashMap;
 
-pub struct DeltaPartition<'a> {
-    phg: &'a PartitionedHypergraph,
+#[derive(Default)]
+pub struct DeltaPartition {
     k: usize,
     part: FxHashMap<NodeId, BlockId>,
     /// (e·k + b) → delta on Φ(e, b)
@@ -20,32 +26,41 @@ pub struct DeltaPartition<'a> {
     weight_delta: Vec<NodeWeight>,
 }
 
-impl<'a> DeltaPartition<'a> {
-    pub fn new(phg: &'a PartitionedHypergraph) -> Self {
+impl DeltaPartition {
+    pub fn new(k: usize) -> Self {
         DeltaPartition {
-            k: phg.k(),
+            k,
             part: FxHashMap::default(),
             pin_delta: FxHashMap::default(),
-            weight_delta: vec![0; phg.k()],
-            phg,
+            weight_delta: vec![0; k],
         }
     }
 
-    #[inline]
-    pub fn block_of(&self, u: NodeId) -> BlockId {
-        self.part.get(&u).copied().unwrap_or_else(|| self.phg.block_of(u))
+    /// Re-target the overlay to a partition with `k` blocks, dropping all
+    /// local state but keeping the allocated capacity.
+    pub fn reset(&mut self, k: usize) {
+        self.k = k;
+        self.part.clear();
+        self.pin_delta.clear();
+        self.weight_delta.clear();
+        self.weight_delta.resize(k, 0);
     }
 
     #[inline]
-    pub fn pin_count(&self, e: EdgeId, b: BlockId) -> i64 {
-        let base = self.phg.pin_count(e, b) as i64;
+    pub fn block_of(&self, phg: &PartitionedHypergraph, u: NodeId) -> BlockId {
+        self.part.get(&u).copied().unwrap_or_else(|| phg.block_of(u))
+    }
+
+    #[inline]
+    pub fn pin_count(&self, phg: &PartitionedHypergraph, e: EdgeId, b: BlockId) -> i64 {
+        let base = phg.pin_count(e, b) as i64;
         base + self.pin_delta.get(&(e as u64 * self.k as u64 + b as u64)).copied().unwrap_or(0)
             as i64
     }
 
     #[inline]
-    pub fn block_weight(&self, b: BlockId) -> NodeWeight {
-        self.phg.block_weight(b) + self.weight_delta[b as usize]
+    pub fn block_weight(&self, phg: &PartitionedHypergraph, b: BlockId) -> NodeWeight {
+        phg.block_weight(b) + self.weight_delta[b as usize]
     }
 
     /// Number of pending local moves.
@@ -55,13 +70,18 @@ impl<'a> DeltaPartition<'a> {
 
     /// Local move with balance check against combined weights.
     /// Returns the exact local connectivity gain.
-    pub fn try_move(&mut self, u: NodeId, to: BlockId) -> Option<Gain> {
-        let from = self.block_of(u);
+    pub fn try_move(
+        &mut self,
+        phg: &PartitionedHypergraph,
+        u: NodeId,
+        to: BlockId,
+    ) -> Option<Gain> {
+        let from = self.block_of(phg, u);
         if from == to {
             return None;
         }
-        let w = self.phg.hypergraph().node_weight(u);
-        if self.block_weight(to) + w > self.phg.max_block_weight(to) {
+        let w = phg.hypergraph().node_weight(u);
+        if self.block_weight(phg, to) + w > phg.max_block_weight(to) {
             return None;
         }
         self.part.insert(u, to);
@@ -69,16 +89,16 @@ impl<'a> DeltaPartition<'a> {
         self.weight_delta[to as usize] += w;
         let mut gain: Gain = 0;
         let ku = self.k as u64;
-        for &e in self.phg.hypergraph().incident_nets(u) {
-            let we = self.phg.hypergraph().net_weight(e);
+        for &e in phg.hypergraph().incident_nets(u) {
+            let we = phg.hypergraph().net_weight(e);
             let kf = e as u64 * ku + from as u64;
             let kt = e as u64 * ku + to as u64;
             let dfrom = self.pin_delta.entry(kf).or_insert(0);
             *dfrom -= 1;
-            let phi_from = self.phg.pin_count(e, from) as i64 + *dfrom as i64;
+            let phi_from = phg.pin_count(e, from) as i64 + *dfrom as i64;
             let dto = self.pin_delta.entry(kt).or_insert(0);
             *dto += 1;
-            let phi_to = self.phg.pin_count(e, to) as i64 + *dto as i64;
+            let phi_to = phg.pin_count(e, to) as i64 + *dto as i64;
             debug_assert!(phi_from >= 0);
             if phi_from == 0 {
                 gain += we;
@@ -97,10 +117,14 @@ impl<'a> DeltaPartition<'a> {
     /// is `p(u,t) = W − Σ_{e: Φ(e,t)>0} ω(e)`, so accumulating the
     /// "present weight" per connected block in one sweep replaces the
     /// per-candidate re-scan.
-    pub fn max_gain_move(&self, u: NodeId) -> Option<(Gain, BlockId)> {
-        let from = self.block_of(u);
-        let w = self.phg.hypergraph().node_weight(u);
-        let hg = self.phg.hypergraph();
+    pub fn max_gain_move(
+        &self,
+        phg: &PartitionedHypergraph,
+        u: NodeId,
+    ) -> Option<(Gain, BlockId)> {
+        let from = self.block_of(phg, u);
+        let w = phg.hypergraph().node_weight(u);
+        let hg = phg.hypergraph();
         let mut benefit: Gain = 0;
         let mut total_w: Gain = 0;
         // present[t] = Σ ω(e) over nets with at least one pin in t
@@ -109,7 +133,7 @@ impl<'a> DeltaPartition<'a> {
         for &e in hg.incident_nets(u) {
             let we = hg.net_weight(e);
             total_w += we;
-            if self.pin_count(e, from) == 1 {
+            if self.pin_count(phg, e, from) == 1 {
                 benefit += we;
             }
             let mut add = |b: BlockId| {
@@ -122,7 +146,7 @@ impl<'a> DeltaPartition<'a> {
                 }
             };
             if self.pin_delta.is_empty() {
-                for b in self.phg.connectivity_set(e) {
+                for b in phg.connectivity_set(e) {
                     add(b);
                 }
             } else {
@@ -133,7 +157,7 @@ impl<'a> DeltaPartition<'a> {
                         .get(&(e as u64 * ku + b as u64))
                         .copied()
                         .unwrap_or(0) as i64;
-                    if self.phg.pin_count(e, b) as i64 + d > 0 {
+                    if phg.pin_count(e, b) as i64 + d > 0 {
                         add(b);
                     }
                 }
@@ -141,14 +165,16 @@ impl<'a> DeltaPartition<'a> {
         }
         let mut best: Option<(Gain, BlockId)> = None;
         for &(t, pw) in &present {
-            if self.block_weight(t) + w > self.phg.max_block_weight(t) {
+            if self.block_weight(phg, t) + w > phg.max_block_weight(t) {
                 continue;
             }
             let g = benefit - (total_w - pw);
             match best {
                 None => best = Some((g, t)),
                 Some((bg, bb)) => {
-                    if g > bg || (g == bg && self.block_weight(t) < self.block_weight(bb)) {
+                    if g > bg
+                        || (g == bg && self.block_weight(phg, t) < self.block_weight(phg, bb))
+                    {
                         best = Some((g, t));
                     }
                 }
@@ -189,24 +215,24 @@ mod tests {
     fn overlay_isolates_global_state() {
         let phg = setup();
         let km1_before = phg.km1();
-        let mut d = DeltaPartition::new(&phg);
-        let g = d.try_move(0, 1).unwrap();
-        assert_eq!(d.block_of(0), 1);
+        let mut d = DeltaPartition::new(phg.k());
+        let g = d.try_move(&phg, 0, 1).unwrap();
+        assert_eq!(d.block_of(&phg, 0), 1);
         assert_eq!(phg.block_of(0), 0, "global untouched");
         assert_eq!(phg.km1(), km1_before);
         // local pin counts shifted
-        assert_eq!(d.pin_count(0, 0), 1);
-        assert_eq!(d.pin_count(0, 1), 1);
+        assert_eq!(d.pin_count(&phg, 0, 0), 1);
+        assert_eq!(d.pin_count(&phg, 0, 1), 1);
         assert_eq!(g, -1); // same as the global move test in partition::tests
         d.clear();
-        assert_eq!(d.block_of(0), 0);
-        assert_eq!(d.pin_count(0, 0), 2);
+        assert_eq!(d.block_of(&phg, 0), 0);
+        assert_eq!(d.pin_count(&phg, 0, 0), 2);
     }
 
     #[test]
     fn local_gains_match_global_replay() {
         let phg = setup();
-        let mut d = DeltaPartition::new(&phg);
+        let mut d = DeltaPartition::new(phg.k());
         let mut rng = crate::util::Rng::new(9);
         let mut local_gains = Vec::new();
         let mut moves = Vec::new();
@@ -216,8 +242,8 @@ mod tests {
             if moved[u as usize] {
                 continue;
             }
-            let to = 1 - d.block_of(u);
-            if let Some(g) = d.try_move(u, to) {
+            let to = 1 - d.block_of(&phg, u);
+            if let Some(g) = d.try_move(&phg, u, to) {
                 moved[u as usize] = true;
                 local_gains.push(g);
                 moves.push((u, to));
@@ -237,21 +263,33 @@ mod tests {
         let mut phg = PartitionedHypergraph::new(hg, 2);
         phg.set_max_weights(vec![3, 3]);
         phg.assign_all(&[0, 0, 1, 1], 1);
-        let mut d = DeltaPartition::new(&phg);
-        assert!(d.try_move(0, 1).is_some()); // block 1 now at 3 (locally)
-        assert!(d.try_move(1, 1).is_none(), "local weight limit enforced");
+        let mut d = DeltaPartition::new(2);
+        assert!(d.try_move(&phg, 0, 1).is_some()); // block 1 now at 3 (locally)
+        assert!(d.try_move(&phg, 1, 1).is_none(), "local weight limit enforced");
     }
 
     #[test]
     fn max_gain_move_sees_local_targets() {
         let phg = setup();
-        let mut d = DeltaPartition::new(&phg);
-        let (g0, t0) = d.max_gain_move(6).unwrap();
+        let mut d = DeltaPartition::new(phg.k());
+        let (g0, t0) = d.max_gain_move(&phg, 6).unwrap();
         let (g1, t1) = phg.max_gain_move(6).unwrap();
         assert_eq!((g0, t0), (g1, t1), "agrees with global when no deltas");
-        d.try_move(6, 0).unwrap();
+        d.try_move(&phg, 6, 0).unwrap();
         // now 6 is in block 0 locally; moving back should look good again
-        let (_, back) = d.max_gain_move(6).unwrap();
+        let (_, back) = d.max_gain_move(&phg, 6).unwrap();
         assert_eq!(back, 1);
+    }
+
+    #[test]
+    fn reset_retargets_k() {
+        let phg = setup();
+        let mut d = DeltaPartition::new(8);
+        d.reset(phg.k());
+        assert!(d.try_move(&phg, 0, 1).is_some());
+        assert_eq!(d.pending(), 1);
+        d.reset(phg.k());
+        assert_eq!(d.pending(), 0);
+        assert_eq!(d.block_of(&phg, 0), 0);
     }
 }

@@ -1,14 +1,19 @@
 //! The uncoarsening-phase refinement algorithms (Algorithm 3.1, lines
 //! 7–10): label propagation for the easy single-node moves, the parallel
 //! localized FM algorithm for short non-trivial move sets, and flow-based
-//! refinement for long, complex move sets with a global view.
+//! refinement for long, complex move sets with a global view — all
+//! orchestrated by the [`pipeline::RefinementPipeline`], which owns the
+//! long-lived workspace (gain table, FM ownership bits, boundary buffers,
+//! per-thread search scratch) shared across uncoarsening levels.
 
 pub mod flow;
 pub mod fm;
 pub mod lp;
+pub mod pipeline;
 
 pub use fm::{fm_refine, FmStats};
 pub use lp::{lp_refine, lp_refine_deterministic};
+pub use pipeline::{RefinementPipeline, Refiner, Workspace};
 pub mod rebalance;
 pub mod vcycle;
 

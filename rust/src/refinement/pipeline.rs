@@ -1,0 +1,391 @@
+//! The uncoarsening refinement pipeline (tentpole of the refinement
+//! refactor).
+//!
+//! The multilevel driver used to rebuild an O(n·k) gain table plus
+//! per-round owner bits, boundary buffers and per-thread search scratch
+//! *from scratch on every level and every FM invocation* — the dominant
+//! allocation cost of the uncoarsening phase (paper §6/§7; see the
+//! `perf_hotpath` bench entries "gain table per level: …"). This module
+//! turns that state into a long-lived [`Workspace`] allocated **once per
+//! `partition_arc` call** and carried across all uncoarsening levels:
+//! after `project_partition`, the gain table is re-initialized in place
+//! for the projected assignment — values are recomputed, memory is not
+//! reallocated (coarser levels use a prefix of the finest-level entries).
+//!
+//! The refinement algorithms plug into the pipeline through the small
+//! [`Refiner`] trait; the stack built from a [`Context`] is
+//! `rebalance → LP → FM → flows → rebalance`, with the rebalancer acting
+//! as the balance-repair fallback on both ends (repair infeasible
+//! projected partitions before quality work, guarantee feasibility after).
+
+use crate::coordinator::context::Context;
+use crate::datastructures::AddressablePQ;
+use crate::partition::{GainTable, Move, PartitionedHypergraph};
+use crate::refinement::fm::{DeltaPartition, FmStats};
+use crate::refinement::{flow, fm, lp, rebalance};
+use crate::util::Bitset;
+use crate::{Gain, NodeId};
+use std::sync::atomic::{AtomicBool, Ordering};
+
+/// Per-thread localized-FM search scratch, reused across seed batches,
+/// rounds *and* uncoarsening levels (hash tables and vectors keep their
+/// capacity between uses).
+pub struct SearchScratch {
+    pub(crate) delta: DeltaPartition,
+    pub(crate) pq: AddressablePQ,
+    /// membership bitset over `moved_list` — replaces the former
+    /// O(moves²) `Vec::contains` scan in the ownership-release path
+    pub(crate) moved_bits: Bitset,
+    pub(crate) acquired: Vec<NodeId>,
+    pub(crate) moved_list: Vec<NodeId>,
+    pub(crate) local_moves: Vec<Move>,
+}
+
+impl SearchScratch {
+    fn new(k: usize, node_capacity: usize) -> Self {
+        SearchScratch {
+            delta: DeltaPartition::new(k),
+            pq: AddressablePQ::new(),
+            moved_bits: Bitset::new(node_capacity),
+            acquired: Vec::new(),
+            moved_list: Vec::new(),
+            local_moves: Vec::new(),
+        }
+    }
+}
+
+/// The long-lived refinement state: one allocation per `partition_arc`
+/// call, shared by every level and every refiner of the pipeline.
+pub struct Workspace {
+    pub(crate) k: usize,
+    pub(crate) gain_table: GainTable,
+    /// FM node-ownership bits (one per node of the finest level)
+    pub(crate) owner: Vec<AtomicBool>,
+    pub(crate) scratch: Vec<SearchScratch>,
+    /// reusable boundary-seed buffer
+    pub(crate) boundary: Vec<NodeId>,
+    gain_table_inits: usize,
+    gain_table_allocs: usize,
+}
+
+impl Workspace {
+    /// Allocate a workspace for partitions with `k` blocks, up to
+    /// `node_capacity` nodes and `threads` worker threads.
+    pub fn new(k: usize, threads: usize, node_capacity: usize) -> Self {
+        let threads = threads.max(1);
+        Workspace {
+            k,
+            gain_table: GainTable::new(node_capacity, k),
+            owner: (0..node_capacity).map(|_| AtomicBool::new(false)).collect(),
+            scratch: (0..threads).map(|_| SearchScratch::new(k, node_capacity)).collect(),
+            boundary: Vec::new(),
+            gain_table_inits: 0,
+            gain_table_allocs: 1,
+        }
+    }
+
+    /// Grow node-indexed state to `n` entries (no-op when the finest-level
+    /// capacity already covers it — the common case in uncoarsening).
+    pub fn ensure_node_capacity(&mut self, n: usize) {
+        if self.gain_table.ensure_node_capacity(n) {
+            self.gain_table_allocs += 1;
+        }
+        if n > self.owner.len() {
+            let old = self.owner.len();
+            self.owner.extend((old..n).map(|_| AtomicBool::new(false)));
+        }
+        for sc in &mut self.scratch {
+            sc.moved_bits.ensure_len(n);
+        }
+    }
+
+    /// Make sure at least `threads` scratch slots exist.
+    pub fn ensure_threads(&mut self, threads: usize) {
+        let cap = self.owner.len();
+        while self.scratch.len() < threads.max(1) {
+            self.scratch.push(SearchScratch::new(self.k, cap));
+        }
+    }
+
+    /// Recompute the gain table in place for the current assignment of
+    /// `phg` (per-level repair after projection: values change, memory
+    /// does not).
+    pub fn prepare_gain_table(&mut self, phg: &PartitionedHypergraph, threads: usize) {
+        debug_assert_eq!(phg.k(), self.k);
+        self.ensure_node_capacity(phg.hypergraph().num_nodes());
+        self.gain_table.initialize(phg, threads);
+        self.gain_table_inits += 1;
+    }
+
+    /// Clear the first `n` ownership bits (start of an FM round).
+    pub(crate) fn reset_owner(&self, n: usize) {
+        for b in &self.owner[..n] {
+            b.store(false, Ordering::Relaxed);
+        }
+    }
+
+    /// The shared gain table (exposed for tests and benches).
+    pub fn gain_table(&self) -> &GainTable {
+        &self.gain_table
+    }
+
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// How often the gain table was (re-)initialized in place.
+    pub fn gain_table_inits(&self) -> usize {
+        self.gain_table_inits
+    }
+
+    /// How often gain-table memory was allocated (1 = the initial
+    /// allocation; stays 1 across an entire uncoarsening sequence).
+    pub fn gain_table_allocs(&self) -> usize {
+        self.gain_table_allocs
+    }
+}
+
+/// A refinement algorithm that runs inside the pipeline on the shared
+/// [`Workspace`]. Returns the attributed improvement (km1 decrease).
+pub trait Refiner: Send {
+    /// Phase-timer name of this refiner.
+    fn name(&self) -> &'static str;
+    /// Refine `phg` in place using the shared workspace.
+    fn refine(&mut self, phg: &PartitionedHypergraph, ws: &mut Workspace, ctx: &Context)
+        -> Gain;
+}
+
+/// Label propagation (parallel or deterministic-synchronous, paper §6.1/§11).
+pub struct LpRefiner;
+
+impl Refiner for LpRefiner {
+    fn name(&self) -> &'static str {
+        "label_propagation"
+    }
+
+    fn refine(&mut self, phg: &PartitionedHypergraph, _ws: &mut Workspace, ctx: &Context) -> Gain {
+        if ctx.deterministic {
+            lp::lp_refine_deterministic(phg, ctx)
+        } else {
+            lp::lp_refine(phg, ctx)
+        }
+    }
+}
+
+/// Parallel localized FM (paper §7) running on the shared gain table,
+/// ownership bits and per-thread search scratch.
+#[derive(Default)]
+pub struct FmRefiner;
+
+impl Refiner for FmRefiner {
+    fn name(&self) -> &'static str {
+        "fm"
+    }
+
+    fn refine(&mut self, phg: &PartitionedHypergraph, ws: &mut Workspace, ctx: &Context) -> Gain {
+        let stats = fm::fm_refine_with_workspace(phg, ctx, None, ws);
+        stats.improvement
+    }
+}
+
+/// Parallel flow-based refinement (paper §8).
+pub struct FlowRefiner;
+
+impl Refiner for FlowRefiner {
+    fn name(&self) -> &'static str {
+        "flows"
+    }
+
+    fn refine(&mut self, phg: &PartitionedHypergraph, _ws: &mut Workspace, ctx: &Context) -> Gain {
+        flow::flow_refine(phg, ctx)
+    }
+}
+
+/// Balance repair (the fallback the coordinator historically never
+/// invoked): a no-op on balanced partitions, otherwise relocates boundary
+/// nodes out of overloaded blocks at minimum connectivity cost. Returns
+/// the (usually negative) attributed km1 change.
+pub struct RebalanceRefiner;
+
+impl Refiner for RebalanceRefiner {
+    fn name(&self) -> &'static str {
+        "rebalance"
+    }
+
+    fn refine(&mut self, phg: &PartitionedHypergraph, _ws: &mut Workspace, ctx: &Context) -> Gain {
+        if phg.is_balanced() {
+            return 0;
+        }
+        let before = phg.km1();
+        rebalance::rebalance(phg, ctx);
+        before - phg.km1()
+    }
+}
+
+/// The per-`partition_arc` refinement pipeline: a [`Workspace`] plus the
+/// refiner stack derived from the context's preset.
+pub struct RefinementPipeline {
+    ws: Workspace,
+    stack: Vec<Box<dyn Refiner>>,
+}
+
+impl RefinementPipeline {
+    /// Build the pipeline for `ctx` with capacity for `node_capacity`
+    /// nodes (the finest level). Allocates the gain table exactly once.
+    pub fn new(ctx: &Context, node_capacity: usize) -> Self {
+        let mut stack: Vec<Box<dyn Refiner>> = Vec::new();
+        // repair infeasible projected/initial assignments first so the
+        // quality refiners start from a feasible partition …
+        stack.push(Box::new(RebalanceRefiner));
+        stack.push(Box::new(LpRefiner));
+        if ctx.use_fm {
+            stack.push(Box::new(FmRefiner));
+        }
+        if ctx.use_flows {
+            stack.push(Box::new(FlowRefiner));
+        }
+        // … and guarantee feasibility on exit (flows/FM preserve balance,
+        // but tight ε inputs may still need the fallback)
+        stack.push(Box::new(RebalanceRefiner));
+        RefinementPipeline { ws: Workspace::new(ctx.k, ctx.threads, node_capacity), stack }
+    }
+
+    /// Run the full refiner stack on one level's partition. Called once
+    /// per uncoarsening level; reuses all workspace state.
+    pub fn refine(&mut self, phg: &PartitionedHypergraph, ctx: &Context) -> Gain {
+        debug_assert_eq!(phg.k(), self.ws.k);
+        self.ws.ensure_node_capacity(phg.hypergraph().num_nodes());
+        self.ws.ensure_threads(ctx.threads);
+        let timer = ctx.timer.clone();
+        let mut total: Gain = 0;
+        for r in self.stack.iter_mut() {
+            total += timer.time(r.name(), || r.refine(phg, &mut self.ws, ctx));
+        }
+        total
+    }
+
+    /// Localized FM restricted to `seeds` (n-level batch refinement,
+    /// paper §9), on the shared workspace.
+    pub fn fm_with_seeds(
+        &mut self,
+        phg: &PartitionedHypergraph,
+        ctx: &Context,
+        seeds: Option<&[NodeId]>,
+    ) -> FmStats {
+        fm::fm_refine_with_workspace(phg, ctx, seeds, &mut self.ws)
+    }
+
+    /// The shared workspace (gain-table and allocation-stat access).
+    pub fn workspace(&self) -> &Workspace {
+        &self.ws
+    }
+
+    pub fn workspace_mut(&mut self) -> &mut Workspace {
+        &mut self.ws
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::context::Preset;
+    use crate::generators::{planted_hypergraph, PlantedParams};
+    use crate::util::Rng;
+    use crate::BlockId;
+    use std::sync::Arc;
+
+    fn ctx(preset: Preset, k: usize, threads: usize, seed: u64) -> Context {
+        let mut c = Context::new(preset, k, 0.03).with_threads(threads).with_seed(seed);
+        c.fm_max_rounds = 3;
+        c
+    }
+
+    fn perturbed(seed: u64, k: usize, eps: f64) -> PartitionedHypergraph {
+        let p = PlantedParams { n: 300, m: 550, blocks: k, ..Default::default() };
+        let hg = Arc::new(planted_hypergraph(&p, seed));
+        let n = hg.num_nodes();
+        let mut rng = Rng::new(seed ^ 0x9e37);
+        let mut parts: Vec<BlockId> = (0..n).map(|u| (u * k / n) as BlockId).collect();
+        for _ in 0..n / 6 {
+            parts[rng.next_below(n)] = rng.next_below(k) as BlockId;
+        }
+        let mut phg = PartitionedHypergraph::new(hg, k);
+        phg.set_uniform_max_weight(eps);
+        phg.assign_all(&parts, 1);
+        phg
+    }
+
+    #[test]
+    fn pipeline_improves_and_accounts_exactly() {
+        let c = ctx(Preset::Default, 3, 2, 5);
+        let phg = perturbed(5, 3, 0.3);
+        let before = phg.km1();
+        let mut pipe = RefinementPipeline::new(&c, phg.hypergraph().num_nodes());
+        let gain = pipe.refine(&phg, &c);
+        assert!(gain > 0, "pipeline should improve a perturbed partition");
+        assert_eq!(phg.km1(), before - gain, "refiner gains account exactly");
+        assert!(phg.is_balanced());
+        phg.verify_consistency().unwrap();
+    }
+
+    #[test]
+    fn one_gain_table_allocation_across_levels() {
+        // simulate a 5-level uncoarsening: one pipeline, shrinking levels
+        let c = ctx(Preset::Default, 2, 2, 7);
+        let sizes = [300usize, 220, 150, 90, 40];
+        let mut pipe = RefinementPipeline::new(&c, sizes[0]);
+        for (i, &n_level) in sizes.iter().enumerate().rev() {
+            let p = PlantedParams {
+                n: n_level,
+                m: 2 * n_level,
+                blocks: 2,
+                ..Default::default()
+            };
+            let hg = Arc::new(planted_hypergraph(&p, i as u64));
+            let parts: Vec<BlockId> =
+                (0..n_level).map(|u| (u * 2 / n_level) as BlockId).collect();
+            let mut phg = PartitionedHypergraph::new(hg, 2);
+            phg.set_uniform_max_weight(0.3);
+            phg.assign_all(&parts, 1);
+            pipe.refine(&phg, &c);
+            phg.verify_consistency().unwrap();
+        }
+        assert_eq!(
+            pipe.workspace().gain_table_allocs(),
+            1,
+            "the gain table must be allocated once and reused across levels"
+        );
+        assert!(pipe.workspace().gain_table_inits() >= sizes.len());
+    }
+
+    #[test]
+    fn rebalance_fallback_repairs_infeasible_input() {
+        // everything in block 0 with tight ε: the pipeline must hand back
+        // a balanced partition (the rebalance stage repairs before LP/FM)
+        let c = ctx(Preset::Default, 2, 2, 3);
+        let p = PlantedParams { n: 200, m: 380, blocks: 2, ..Default::default() };
+        let hg = Arc::new(planted_hypergraph(&p, 3));
+        let n = hg.num_nodes();
+        let mut phg = PartitionedHypergraph::new(hg, 2);
+        phg.set_uniform_max_weight(0.03);
+        phg.assign_all(&vec![0 as BlockId; n], 1);
+        assert!(!phg.is_balanced());
+        let mut pipe = RefinementPipeline::new(&c, n);
+        pipe.refine(&phg, &c);
+        assert!(phg.is_balanced(), "imbalance {}", phg.imbalance());
+        phg.verify_consistency().unwrap();
+    }
+
+    #[test]
+    fn capacity_growth_is_tracked() {
+        let c = ctx(Preset::Default, 2, 1, 1);
+        let mut ws = Workspace::new(2, 1, 64);
+        assert_eq!(ws.gain_table_allocs(), 1);
+        ws.ensure_node_capacity(32); // prefix use: no growth
+        assert_eq!(ws.gain_table_allocs(), 1);
+        ws.ensure_node_capacity(128); // explicit growth is counted
+        assert_eq!(ws.gain_table_allocs(), 2);
+        assert!(ws.gain_table().node_capacity() >= 128);
+        let _ = c;
+    }
+}

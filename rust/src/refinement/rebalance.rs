@@ -33,21 +33,39 @@ pub fn rebalance(phg: &PartitionedHypergraph, ctx: &Context) -> usize {
         over.sort_unstable_by_key(|&(o, _)| std::cmp::Reverse(o));
         let (_, heavy) = over[0];
 
-        // candidate nodes of the overloaded block, by relocation gain
+        // candidate nodes of the overloaded block, by relocation gain.
+        // Nodes without any feasible target are not inserted at all:
+        // target blocks only gain weight during this round, so an
+        // infeasible node cannot become feasible before the next rebuild
+        // (the former `Gain::MIN/2` sentinels just churned the heap).
         let mut pq = AddressablePQ::new();
         for u in phg.hypergraph().nodes() {
             if phg.block_of(u) == heavy {
-                let g = best_target(phg, u, heavy).map(|(g, _)| g).unwrap_or(Gain::MIN / 2);
-                pq.insert(u, g);
+                if let Some((g, _)) = best_target(phg, u, heavy) {
+                    pq.insert(u, g);
+                }
             }
         }
         let mut progressed = false;
         while phg.block_weight(heavy) > phg.max_block_weight(heavy) {
-            let Some((u, _)) = pq.pop_max() else { break };
-            let Some((_, t)) = best_target(phg, u, heavy) else { continue };
-            if phg.try_move(u, t, None).is_some() {
-                moves += 1;
-                progressed = true;
+            let Some((u, key)) = pq.pop_max() else { break };
+            // lazy PQ discipline: earlier evictions change pin counts and
+            // fill targets, so the popped key may be stale. Re-evaluate;
+            // if the node got *worse*, reinsert with the fresh gain
+            // instead of silently dropping it (the historic bug lost
+            // evictable nodes here and reported an unrepairable block).
+            match best_target(phg, u, heavy) {
+                None => continue, // no feasible target anymore this round
+                Some((g, t)) => {
+                    if g < key {
+                        pq.insert(u, g);
+                        continue;
+                    }
+                    if phg.try_move(u, t, None).is_some() {
+                        moves += 1;
+                        progressed = true;
+                    }
+                }
             }
         }
         if !progressed {
@@ -124,6 +142,32 @@ mod tests {
         let km1 = phg.km1();
         assert_eq!(rebalance(&phg, &Context::new(Preset::Default, 2, 0.1)), 0);
         assert_eq!(phg.km1(), km1);
+    }
+
+    #[test]
+    fn stale_priorities_are_reevaluated_not_dropped() {
+        // block 0 is overloaded by four node weights; block 1 — the best
+        // target of every candidate — can absorb exactly one node, so all
+        // remaining priorities go stale after the first eviction and the
+        // repair must re-target block 2 with freshly computed gains
+        // instead of acting on (or dropping) outdated entries.
+        let hg = Arc::new(crate::hypergraph::Hypergraph::from_nets(
+            8,
+            &[vec![0, 6], vec![1, 6], vec![2, 6], vec![3, 6]],
+            None,
+            None,
+        ));
+        let mut phg = PartitionedHypergraph::new(hg, 3);
+        phg.set_max_weights(vec![2, 2, 8]);
+        phg.assign_all(&[0, 0, 0, 0, 0, 0, 1, 2], 1);
+        let ctx = Context::new(Preset::Default, 3, 0.03);
+        let moves = rebalance(&phg, &ctx);
+        assert_eq!(moves, 4, "exactly the overload must be evicted");
+        assert!(phg.is_balanced(), "imbalance {}", phg.imbalance());
+        phg.verify_consistency().unwrap();
+        assert_eq!(phg.block_weight(0), 2);
+        assert_eq!(phg.block_weight(1), 2, "block 1 absorbed exactly one node");
+        assert_eq!(phg.block_weight(2), 4);
     }
 
     #[test]

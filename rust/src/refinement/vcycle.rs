@@ -15,12 +15,16 @@ use crate::coarsening;
 use crate::coordinator::context::Context;
 use crate::coordinator::partitioner::refine_level;
 use crate::partition::PartitionedHypergraph;
+use crate::refinement::RefinementPipeline;
 use crate::BlockId;
 
 /// Run `cycles` V-cycles on an existing partition; returns the improved
 /// partition (never worse: each cycle keeps the better of before/after).
+/// The refinement workspace is allocated once and reused across all
+/// cycles and levels.
 pub fn vcycle(phg: PartitionedHypergraph, ctx: &Context, cycles: usize) -> PartitionedHypergraph {
     let mut current = phg;
+    let mut pipeline = RefinementPipeline::new(ctx, current.hypergraph().num_nodes());
     for _ in 0..cycles {
         let before = current.km1();
         let parts = current.parts();
@@ -37,14 +41,15 @@ pub fn vcycle(phg: PartitionedHypergraph, ctx: &Context, cycles: usize) -> Parti
             }
             coarse_parts = next;
         }
-        // uncoarsen with the full refinement stack (no initial partitioning)
+        // uncoarsen with the full refinement pipeline (no initial partitioning)
         let mut level_parts = coarse_parts;
         for i in (0..hierarchy.levels.len()).rev() {
-            let refined = refine_level(hierarchy.levels[i].coarse.clone(), &level_parts, ctx);
+            let refined =
+                refine_level(hierarchy.levels[i].coarse.clone(), &level_parts, ctx, &mut pipeline);
             level_parts =
                 coarsening::project_partition(&hierarchy.levels[i], &refined.parts());
         }
-        let candidate = refine_level(hg, &level_parts, ctx);
+        let candidate = refine_level(hg, &level_parts, ctx, &mut pipeline);
         if candidate.km1() < before && candidate.is_balanced() {
             current = candidate;
         } else {

@@ -1,6 +1,6 @@
 //! L3 ↔ L1/L2 bridge: loads the AOT artifacts (`artifacts/*.hlo.txt`,
-//! produced once by `make artifacts`) through the PJRT CPU client of the
-//! `xla` crate and exposes them to the coordinator:
+//! produced once by `make artifacts`) through the PJRT CPU client and
+//! exposes them to the coordinator:
 //!
 //! * [`Runtime::gain_tiles`] — the dense gain-tile oracle (L1 Pallas
 //!   kernel): pin counts Φ, benefit and penalty terms for a packed
@@ -11,12 +11,23 @@
 //!
 //! Python is never on this path: the artifacts are plain HLO text and
 //! execution goes through `PjRtClient::cpu()`.
+//!
+//! The PJRT client comes from the external `xla` crate, which is not
+//! available in the offline registry this build targets. The whole
+//! execution path is therefore gated behind the `xla-runtime` feature;
+//! without it [`global`] reports the runtime as unavailable and every
+//! caller falls back to the pure-Rust implementations (the portfolio
+//! simply skips the spectral member, tests skip the oracle checks).
 
 use crate::hypergraph::Hypergraph;
+use crate::util::error::Result;
 use crate::{BlockId, NodeId, NodeWeight};
-use anyhow::{Context as _, Result};
-use once_cell::sync::OnceCell;
-use std::path::{Path, PathBuf};
+use std::path::PathBuf;
+use std::sync::OnceLock;
+
+#[cfg(feature = "xla-runtime")]
+use crate::util::error::Context as _;
+#[cfg(feature = "xla-runtime")]
 use std::sync::Mutex;
 
 /// Tile shape of the gain oracle (must match python/compile/kernels).
@@ -29,18 +40,21 @@ pub const SPECTRAL_N: usize = 256;
 /// A loaded PJRT runtime with the compiled executables.
 pub struct Runtime {
     // PjRt handles are not Sync; serialize access through a mutex.
+    #[cfg(feature = "xla-runtime")]
     inner: Mutex<Inner>,
 }
 
+#[cfg(feature = "xla-runtime")]
 struct Inner {
     _client: xla::PjRtClient,
     gain_exe: xla::PjRtLoadedExecutable,
     spectral_exe: xla::PjRtLoadedExecutable,
 }
 
+#[cfg(feature = "xla-runtime")]
 unsafe impl Send for Inner {}
 
-static RUNTIME: OnceCell<Option<Runtime>> = OnceCell::new();
+static RUNTIME: OnceLock<Option<Runtime>> = OnceLock::new();
 
 /// Locate the artifacts directory: `$MTKAHYPAR_ARTIFACTS` or `artifacts/`
 /// relative to the workspace root / current directory.
@@ -58,13 +72,13 @@ pub fn artifacts_dir() -> PathBuf {
 }
 
 /// Global runtime, initialized lazily; `None` when the artifacts are not
-/// built (unit tests run without them; `make test` builds them first).
+/// built or the crate was compiled without the `xla-runtime` feature.
 pub fn global() -> Option<&'static Runtime> {
     RUNTIME
         .get_or_init(|| match Runtime::load(&artifacts_dir()) {
             Ok(rt) => Some(rt),
             Err(e) => {
-                eprintln!("[runtime] AOT artifacts unavailable: {e:#}");
+                eprintln!("[runtime] AOT artifacts unavailable: {e}");
                 None
             }
         })
@@ -73,7 +87,8 @@ pub fn global() -> Option<&'static Runtime> {
 
 impl Runtime {
     /// Load and compile both artifacts from `dir`.
-    pub fn load(dir: &Path) -> Result<Self> {
+    #[cfg(feature = "xla-runtime")]
+    pub fn load(dir: &std::path::Path) -> Result<Self> {
         let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
         let load = |name: &str| -> Result<xla::PjRtLoadedExecutable> {
             let path = dir.join(name);
@@ -89,9 +104,18 @@ impl Runtime {
         Ok(Runtime { inner: Mutex::new(Inner { _client: client, gain_exe, spectral_exe }) })
     }
 
+    /// Without the `xla-runtime` feature no artifacts can be loaded.
+    #[cfg(not(feature = "xla-runtime"))]
+    pub fn load(_dir: &std::path::Path) -> Result<Self> {
+        Err(crate::util::error::Error::msg(
+            "compiled without the `xla-runtime` feature (offline build)",
+        ))
+    }
+
     /// Execute the gain-tile kernel: `a` is row-major `TN×TV` 0/1
     /// incidence, `w` the `TN` net weights, `x` the row-major `TV×K`
     /// one-hot assignment. Returns `(phi[TN·K], benefit[TV], penalty[TV·K])`.
+    #[cfg(feature = "xla-runtime")]
     pub fn gain_tiles(
         &self,
         a: &[f32],
@@ -111,7 +135,24 @@ impl Runtime {
         Ok((phi.to_vec::<f32>()?, benefit.to_vec::<f32>()?, penalty.to_vec::<f32>()?))
     }
 
+    /// Stub without the `xla-runtime` feature: unreachable in practice
+    /// because [`global`] never hands out a `Runtime`, but keeps the call
+    /// sites compiling.
+    #[cfg(not(feature = "xla-runtime"))]
+    pub fn gain_tiles(
+        &self,
+        a: &[f32],
+        w: &[f32],
+        x: &[f32],
+    ) -> Result<(Vec<f32>, Vec<f32>, Vec<f32>)> {
+        assert_eq!(a.len(), TN * TV);
+        assert_eq!(w.len(), TN);
+        assert_eq!(x.len(), TV * K);
+        Err(crate::util::error::Error::msg("xla-runtime feature disabled"))
+    }
+
     /// Execute the spectral power iteration on a dense padded adjacency.
+    #[cfg(feature = "xla-runtime")]
     pub fn spectral(&self, adj: &[f32], deg: &[f32]) -> Result<Vec<f32>> {
         assert_eq!(adj.len(), SPECTRAL_N * SPECTRAL_N);
         assert_eq!(deg.len(), SPECTRAL_N);
@@ -122,6 +163,14 @@ impl Runtime {
             inner.spectral_exe.execute::<xla::Literal>(&[la, ld])?[0][0].to_literal_sync()?;
         let fiedler = result.to_tuple1()?;
         Ok(fiedler.to_vec::<f32>()?)
+    }
+
+    /// Stub without the `xla-runtime` feature (see [`Runtime::gain_tiles`]).
+    #[cfg(not(feature = "xla-runtime"))]
+    pub fn spectral(&self, adj: &[f32], deg: &[f32]) -> Result<Vec<f32>> {
+        assert_eq!(adj.len(), SPECTRAL_N * SPECTRAL_N);
+        assert_eq!(deg.len(), SPECTRAL_N);
+        Err(crate::util::error::Error::msg("xla-runtime feature disabled"))
     }
 }
 

@@ -30,6 +30,14 @@ impl Bitset {
         self.bits == 0
     }
 
+    /// Grow to at least `bits` (new bits are zero); never shrinks.
+    pub fn ensure_len(&mut self, bits: usize) {
+        if bits > self.bits {
+            self.bits = bits;
+            self.words.resize((bits + W - 1) / W, 0);
+        }
+    }
+
     #[inline]
     pub fn set(&mut self, i: usize) {
         self.words[i / W] |= 1 << (i % W);

@@ -1,6 +1,8 @@
 //! Small shared utilities: deterministic RNG, bitsets, timers, statistics.
 
 pub mod bitset;
+pub mod error;
+pub mod fxhash;
 pub mod rng;
 pub mod stats;
 pub mod timer;

@@ -105,7 +105,7 @@ impl Rng {
             all.truncate(m);
             return all;
         }
-        let mut chosen = rustc_hash::FxHashSet::default();
+        let mut chosen = crate::util::fxhash::FxHashSet::default();
         let mut out = Vec::with_capacity(m);
         for j in n - m..n {
             let t = self.next_below(j + 1);
