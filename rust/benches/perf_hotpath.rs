@@ -9,11 +9,14 @@
 //! * one LP round,
 //! * AOT gain-tile execution + spectral execution (L1/L2 via PJRT).
 
+use mtkahypar::coarsening::{project_partition, Level};
 use mtkahypar::coordinator::context::{Context, Preset};
 use mtkahypar::datastructures::RatingMap;
 use mtkahypar::generators::{planted_hypergraph, PlantedParams};
 use mtkahypar::hypergraph::contraction;
-use mtkahypar::partition::{recalculate_gains, GainTable, Move, PartitionedHypergraph};
+use mtkahypar::partition::{
+    recalculate_gains, GainTable, Move, PartitionPool, PartitionedHypergraph,
+};
 use mtkahypar::refinement::{lp, Workspace};
 use mtkahypar::util::Rng;
 use mtkahypar::{BlockId, NodeId};
@@ -95,6 +98,45 @@ fn main() {
         ws.gain_table_allocs(),
         1,
         "pipeline reuse must not allocate per level"
+    );
+
+    // ---- level build: alloc-per-level vs pooled rebind ----
+    // One uncoarsening step = build the coarse level's partition, then
+    // the fine level's from the projected assignment. The legacy path
+    // pays two PartitionedHypergraph::new allocations, a parts()
+    // snapshot and a projected Vec per step; the pooled path rebinds one
+    // finest-level-sized allocation and projects Π in place.
+    let half_rep: Vec<NodeId> = (0..n as NodeId).map(|u| u - (u % 2)).collect();
+    let c2 = contraction::contract(&hg, &half_rep, 1);
+    let coarse_hg = Arc::new(c2.coarse);
+    let level = Level { coarse: coarse_hg.clone(), fine_to_coarse: c2.fine_to_coarse };
+    let coarse_n = coarse_hg.num_nodes();
+    let coarse_parts: Vec<BlockId> =
+        (0..coarse_n).map(|u| (u * k / coarse_n) as BlockId).collect();
+    bench("level build x2: alloc + assign per level", 5, 2 * n, || {
+        let mut cphg = PartitionedHypergraph::new(coarse_hg.clone(), k);
+        cphg.set_uniform_max_weight(0.03);
+        cphg.assign_all(&coarse_parts, 1);
+        let fine_parts = project_partition(&level, &cphg.parts());
+        let mut fphg = PartitionedHypergraph::new(hg.clone(), k);
+        fphg.set_uniform_max_weight(0.03);
+        fphg.assign_all(&fine_parts, 1);
+        std::hint::black_box(&fphg);
+    });
+    let mut pool = PartitionPool::new(k);
+    pool.reserve(&hg);
+    let mut bound = Some(pool.bind(coarse_hg.clone(), &coarse_parts, 0.03, 1));
+    bench("level build x2: pooled in-place rebind", 5, 2 * n, || {
+        let p = bound.take().unwrap();
+        let p = pool.rebind_with_parts(p, coarse_hg.clone(), &coarse_parts, 0.03, 1);
+        let p = pool.rebind_level(p, hg.clone(), &level.fine_to_coarse, 0.03, 1);
+        std::hint::black_box(&p);
+        bound = Some(p);
+    });
+    assert_eq!(
+        pool.structural_allocs(),
+        1,
+        "pooled rebind must not allocate per level"
     );
 
     // ---- rating map (coarsening inner loop) ----

@@ -51,14 +51,13 @@ pub fn patoh_like(hg: &Arc<Hypergraph>, ctx_in: &Context) -> PartitionedHypergra
         });
         current = coarse;
     }
-    let mut parts = initial::initial_partition(current, &ctx);
-    let mut pipeline = crate::refinement::RefinementPipeline::new(&ctx, hg.num_nodes());
-    for i in (0..levels.len()).rev() {
-        let phg =
-            partitioner::refine_level(levels[i].coarse.clone(), &parts, &ctx, &mut pipeline);
-        parts = crate::coarsening::project_partition(&levels[i], &phg.parts());
-    }
-    partitioner::refine_level(hg.clone(), &parts, &ctx, &mut pipeline)
+    let parts = initial::initial_partition(current.clone(), &ctx);
+    // uncoarsen on the pooled workspace partition (zero per-level
+    // structural allocations, same as the main multilevel driver)
+    let mut pipeline = crate::refinement::RefinementPipeline::new_for(&ctx, hg);
+    let phg = pipeline.bind(current, &parts, &ctx);
+    pipeline.refine(&phg, &ctx);
+    pipeline.uncoarsen(&levels, hg, phg, &ctx)
 }
 
 /// Parallel LP-only multilevel (Zoltan / KaMinPar class).

@@ -51,39 +51,23 @@ pub fn partition_arc(hg: Arc<Hypergraph>, ctx: &Context) -> PartitionedHypergrap
 
     // ---- initial partitioning (§5) ----
     let coarsest = hierarchy.coarsest();
-    let mut parts: Vec<BlockId> =
+    let parts: Vec<BlockId> =
         timer.time("initial_partitioning", || initial::initial_partition(coarsest, ctx));
 
     // ---- uncoarsening + refinement (§6–8) ----
     // One pipeline for the whole uncoarsening sequence: the gain table,
-    // FM ownership bits and per-thread search scratch are allocated once
-    // (sized for the finest level) and repaired in place per level after
-    // `project_partition` — the former per-level `GainTable::new` +
-    // per-round buffer churn was the dominant allocation cost of this
-    // loop (see the `perf_hotpath` "gain table per level" entries).
-    let mut pipeline = RefinementPipeline::new(ctx, hg.num_nodes());
-    for i in (0..hierarchy.levels.len()).rev() {
-        let level_hg = hierarchy.levels[i].coarse.clone();
-        let phg = refine_level(level_hg, &parts, ctx, &mut pipeline);
-        parts = coarsening::project_partition(&hierarchy.levels[i], &phg.parts());
-    }
-    // finest level
-    refine_level(hg, &parts, ctx, &mut pipeline)
-}
-
-/// Build the partition structure for one level and run the refinement
-/// pipeline on it (Algorithm 3.1 lines 7–10).
-pub(crate) fn refine_level(
-    hg: Arc<Hypergraph>,
-    parts: &[BlockId],
-    ctx: &Context,
-    pipeline: &mut RefinementPipeline,
-) -> PartitionedHypergraph {
-    let mut phg = PartitionedHypergraph::new(hg, ctx.k);
-    phg.set_uniform_max_weight(ctx.epsilon);
-    phg.assign_all(parts, ctx.threads);
+    // FM ownership bits, per-thread search scratch *and* the partition
+    // structure itself (Π atomics, pin counts, connectivity sets, net
+    // locks via the workspace PartitionPool) are allocated once, sized
+    // for the finest level, and rebound/repaired in place per level —
+    // `project_to_level` writes the projected assignment through the
+    // contraction mapping directly into the pooled Π array, so the loop
+    // performs zero per-level structural allocations (see the
+    // `perf_hotpath` "level build" and "gain table per level" entries).
+    let mut pipeline = RefinementPipeline::new_for(ctx, &hg);
+    let phg = pipeline.bind(hierarchy.coarsest(), &parts, ctx);
     pipeline.refine(&phg, ctx);
-    phg
+    pipeline.uncoarsen(&hierarchy.levels, &hg, phg, ctx)
 }
 
 #[cfg(test)]

@@ -25,7 +25,7 @@ use crate::hypergraph::{contraction, Hypergraph};
 use crate::initial;
 use crate::partition::PartitionedHypergraph;
 use crate::preprocessing::{detect_communities, LouvainConfig};
-use crate::refinement::{lp, RefinementPipeline};
+use crate::refinement::RefinementPipeline;
 use crate::{BlockId, NodeId};
 use std::sync::Arc;
 
@@ -135,9 +135,12 @@ pub fn partition(hg: Arc<Hypergraph>, ctx: &Context) -> PartitionedHypergraph {
     // revert the sequence in reverse order, b_max contractions per batch;
     // at each batch boundary materialize the snapshot and refine locally.
     // One refinement pipeline serves every batch *and* the finest level:
-    // the gain table and FM scratch are sized for the input hypergraph
-    // once and repaired in place per snapshot.
-    let mut pipeline = RefinementPipeline::new(ctx, n);
+    // the gain table, FM scratch *and* the pooled partition state are
+    // sized for the input hypergraph once and rebound/repaired in place
+    // per snapshot — batches allocate hypergraph snapshots (the
+    // documented adaptation) but no Π/Φ/Λ/lock storage.
+    let mut pipeline = RefinementPipeline::new_for(ctx, &hg);
+    let mut bound: Option<PartitionedHypergraph> = None;
     let b_max = ctx.nlevel_batch_size.max(1);
     let mut remaining = sequence.len();
     while remaining > 0 {
@@ -166,9 +169,10 @@ pub fn partition(hg: Arc<Hypergraph>, ctx: &Context) -> PartitionedHypergraph {
         for u in 0..n {
             snap_parts[snap.fine_to_coarse[u] as usize] = parts[u];
         }
-        let mut phg = PartitionedHypergraph::new(snap_hg.clone(), ctx.k);
-        phg.set_uniform_max_weight(ctx.epsilon);
-        phg.assign_all(&snap_parts, ctx.threads);
+        let phg = match bound.take() {
+            Some(prev) => pipeline.rebind_with_parts(prev, snap_hg.clone(), &snap_parts, ctx),
+            None => pipeline.bind(snap_hg.clone(), &snap_parts, ctx),
+        };
 
         // localized refinement around the uncontracted nodes (§9)
         let touched: Vec<NodeId> = {
@@ -182,21 +186,23 @@ pub fn partition(hg: Arc<Hypergraph>, ctx: &Context) -> PartitionedHypergraph {
             t.dedup();
             t
         };
-        timer.time("localized_lp", || lp::lp_refine_localized(&phg, ctx, &touched));
+        timer.time("localized_lp", || pipeline.lp_localized(&phg, ctx, &touched));
         if ctx.use_fm {
             timer.time("localized_fm", || pipeline.fm_with_seeds(&phg, ctx, Some(&touched)));
         }
-        // write back through the snapshot mapping
-        let snap_result = phg.parts();
+        // write back through the snapshot mapping (per-node reads, no
+        // assignment snapshot)
         for u in 0..n {
-            parts[u] = snap_result[snap.fine_to_coarse[u] as usize];
+            parts[u] = phg.block_of(snap.fine_to_coarse[u]);
         }
+        bound = Some(phg);
     }
 
     // ---- finest level: global refinement (paper: global FM + flows) ----
-    let mut phg = PartitionedHypergraph::new(hg, ctx.k);
-    phg.set_uniform_max_weight(ctx.epsilon);
-    phg.assign_all(&parts, ctx.threads);
+    let phg = match bound.take() {
+        Some(prev) => pipeline.rebind_with_parts(prev, hg, &parts, ctx),
+        None => pipeline.bind(hg, &parts, ctx),
+    };
     pipeline.refine(&phg, ctx);
     phg
 }

@@ -68,8 +68,27 @@ impl ConnectivitySets {
         })
     }
 
+    /// Number of nets this array has storage for (pooled reuse: coarser
+    /// levels address the prefix of a finest-level-sized allocation).
+    #[inline]
+    pub fn nets_capacity(&self) -> usize {
+        self.words.len() / self.words_per_net.max(1)
+    }
+
+    /// Blocks per net this array was laid out for.
+    #[inline]
+    pub fn blocks(&self) -> usize {
+        self.k
+    }
+
     pub fn clear(&self) {
-        for w in &self.words {
+        self.clear_nets(self.nets_capacity());
+    }
+
+    /// Zero the bitsets of the first `num_nets` nets only (per-level
+    /// rebuild on a pooled array).
+    pub fn clear_nets(&self, num_nets: usize) {
+        for w in &self.words[..num_nets * self.words_per_net] {
             w.store(0, Ordering::Relaxed);
         }
     }

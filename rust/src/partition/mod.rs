@@ -6,20 +6,45 @@
 //! a balance-checked move and produces the move's *attributed gain* from
 //! the synchronized pin-count transitions — the mechanism that lets all
 //! parallel refiners track the connectivity metric exactly (Lemma 6.1).
+//!
+//! ## Pooled memory lifecycle (zero-copy uncoarsening)
+//!
+//! There are two ways to obtain a [`PartitionedHypergraph`]:
+//!
+//! * [`PartitionedHypergraph::new`] + [`PartitionedHypergraph::assign_all`]
+//!   allocate fresh Π/Φ/Λ/lock storage sized exactly for one hypergraph —
+//!   the path used by initial partitioning, tests and external callers.
+//! * [`pool::PartitionPool`] owns **one finest-level-sized allocation** of
+//!   the same state and *binds* it to each level's hypergraph during
+//!   uncoarsening. A rebind projects Π through the contraction mapping
+//!   directly into the existing atomics and then rebuilds Φ, Λ and the
+//!   block weights **in place** (values are recomputed, memory is not
+//!   reallocated; coarser levels address a prefix of the buffers). The
+//!   final bind hands the buffers to the finest-level partition returned
+//!   to the caller, so ownership always lies with exactly one of
+//!   {pool, live partition}.
+//!
+//! Both paths share [`PartitionedHypergraph::rebuild_from_parts`], which
+//! accumulates block weights in per-thread buffers merged once instead of
+//! issuing one `fetch_add` per node, and rebuilds each net's pin counts
+//! lock-free (nets own disjoint words of the packed array).
 
 pub mod connectivity;
 pub mod gain_recalculation;
 pub mod gain_table;
 pub mod graph_partition;
 pub mod pin_counts;
+pub mod pool;
 
 pub use gain_recalculation::{best_prefix, recalculate_gains, Move};
 pub use gain_table::GainTable;
 pub use graph_partition::PartitionedGraph;
+pub use pool::PartitionPool;
+use pool::PartitionBuffers;
 
 use crate::datastructures::SpinLockVec;
 use crate::hypergraph::Hypergraph;
-use crate::parallel::par_for_auto;
+use crate::parallel::{par_for_auto, parallel_chunks};
 use crate::{BlockId, EdgeId, Gain, NodeId, NodeWeight};
 use connectivity::ConnectivitySets;
 use pin_counts::PinCountArray;
@@ -49,18 +74,49 @@ impl PartitionedHypergraph {
     /// Create an unassigned partition structure (all nodes in block 0
     /// after [`Self::assign_all`]; until then Π is undefined).
     pub fn new(hg: Arc<Hypergraph>, k: usize) -> Self {
-        let n = hg.num_nodes();
-        let m = hg.num_nets();
-        let max_size = hg.max_net_size();
+        let bufs = PartitionBuffers::alloc(
+            hg.num_nodes(),
+            hg.num_nets(),
+            hg.max_net_size().max(1),
+            k,
+        );
+        Self::from_buffers(hg, k, bufs)
+    }
+
+    /// Bind pooled buffers to `hg`. The buffers may be larger than the
+    /// hypergraph (finest-level capacity); every accessor only addresses
+    /// the `num_nodes`/`num_nets` prefix. Π, Φ, Λ and the block weights
+    /// are *stale* until [`Self::assign_all`] or
+    /// [`Self::rebuild_from_parts`] runs.
+    pub(crate) fn from_buffers(hg: Arc<Hypergraph>, k: usize, bufs: PartitionBuffers) -> Self {
+        debug_assert!(bufs.part.len() >= hg.num_nodes());
+        debug_assert_eq!(bufs.block_weight.len(), k);
+        debug_assert!(bufs.pin_counts.nets_capacity() >= hg.num_nets());
+        debug_assert!(bufs.pin_counts.can_represent(hg.max_net_size()));
+        debug_assert!(bufs.conn.nets_capacity() >= hg.num_nets());
+        debug_assert!(bufs.net_locks.len() >= hg.num_nets());
         PartitionedHypergraph {
-            part: (0..n).map(|_| AtomicU32::new(0)).collect(),
-            block_weight: (0..k).map(|_| AtomicI64::new(0)).collect(),
-            max_block_weight: vec![NodeWeight::MAX; k],
-            pin_counts: PinCountArray::new(m, k, max_size.max(1)),
-            conn: ConnectivitySets::new(m, k),
-            net_locks: SpinLockVec::new(m),
+            part: bufs.part,
+            block_weight: bufs.block_weight,
+            max_block_weight: bufs.max_block_weight,
+            pin_counts: bufs.pin_counts,
+            conn: bufs.conn,
+            net_locks: bufs.net_locks,
             hg,
             k,
+        }
+    }
+
+    /// Release the structural buffers back to a pool (consumes the
+    /// partition; the hypergraph `Arc` is dropped, the memory survives).
+    pub(crate) fn into_buffers(self) -> PartitionBuffers {
+        PartitionBuffers {
+            part: self.part,
+            block_weight: self.block_weight,
+            max_block_weight: self.max_block_weight,
+            pin_counts: self.pin_counts,
+            conn: self.conn,
+            net_locks: self.net_locks,
         }
     }
 
@@ -80,10 +136,11 @@ impl PartitionedHypergraph {
         (Self::reference_block_weight(total, k) * (1.0 + eps)).floor() as NodeWeight
     }
 
-    /// Set uniform maximum block weights from the imbalance ratio ε.
+    /// Set uniform maximum block weights from the imbalance ratio ε
+    /// (fills the existing limit vector — rebind-safe, no allocation).
     pub fn set_uniform_max_weight(&mut self, eps: f64) {
         let lmax = Self::max_weight_for(self.hg.total_weight(), self.k, eps);
-        self.max_block_weight = vec![lmax; self.k];
+        self.max_block_weight.iter_mut().for_each(|w| *w = lmax);
     }
 
     /// Set explicit per-block weight limits.
@@ -97,22 +154,64 @@ impl PartitionedHypergraph {
     pub fn assign_all(&self, parts: &[BlockId], threads: usize) {
         let n = self.hg.num_nodes();
         assert_eq!(parts.len(), n);
+        par_for_auto(n, threads, |u| {
+            debug_assert!((parts[u] as usize) < self.k);
+            self.part[u].store(parts[u], Ordering::Relaxed);
+        });
+        self.rebuild_from_parts(threads);
+    }
+
+    /// Write the projected assignment of a coarser level directly into Π:
+    /// `Π[u] = coarse_parts[fine_to_coarse[u]]` for every node of this
+    /// (finer) hypergraph. The uncoarsening step of the pooled path — no
+    /// intermediate fine-level `Vec<BlockId>` is materialized.
+    pub(crate) fn store_projected(
+        &self,
+        fine_to_coarse: &[NodeId],
+        coarse_parts: &[BlockId],
+        threads: usize,
+    ) {
+        let n = self.hg.num_nodes();
+        debug_assert_eq!(fine_to_coarse.len(), n);
+        par_for_auto(n, threads, |u| {
+            let b = coarse_parts[fine_to_coarse[u] as usize];
+            debug_assert!((b as usize) < self.k);
+            self.part[u].store(b, Ordering::Relaxed);
+        });
+    }
+
+    /// Recompute block weights, pin counts and connectivity sets from the
+    /// current Π — values are rebuilt, memory is reused (the per-level
+    /// repair of the pooled uncoarsening path).
+    ///
+    /// Block weights are accumulated in per-thread buffers merged once at
+    /// the end of each chunk instead of one shared `fetch_add` per node;
+    /// pin counts are rebuilt lock-free because every net owns disjoint
+    /// words of the packed array.
+    pub fn rebuild_from_parts(&self, threads: usize) {
+        let n = self.hg.num_nodes();
         for b in &self.block_weight {
             b.store(0, Ordering::Relaxed);
         }
-        self.pin_counts.clear();
-        self.conn.clear();
-        par_for_auto(n, threads, |u| {
-            let b = parts[u];
-            debug_assert!((b as usize) < self.k);
-            self.part[u].store(b, Ordering::Relaxed);
-            self.block_weight[b as usize]
-                .fetch_add(self.hg.node_weight(u as NodeId), Ordering::Relaxed);
+        parallel_chunks(n, threads, |_, s, e| {
+            let mut local = vec![0 as NodeWeight; self.k];
+            for u in s..e {
+                let b = self.part[u].load(Ordering::Relaxed) as usize;
+                debug_assert!(b < self.k);
+                local[b] += self.hg.node_weight(u as NodeId);
+            }
+            for (b, &w) in local.iter().enumerate() {
+                if w != 0 {
+                    self.block_weight[b].fetch_add(w, Ordering::Relaxed);
+                }
+            }
         });
         let m = self.hg.num_nets();
+        self.pin_counts.clear_nets(m);
+        self.conn.clear_nets(m);
         par_for_auto(m, threads, |e| {
             for &p in self.hg.pins(e as EdgeId) {
-                let b = parts[p as usize] as usize;
+                let b = self.part[p as usize].load(Ordering::Relaxed) as usize;
                 if self.pin_counts.inc(e, b) == 1 {
                     self.conn.flip(e, b);
                 }
@@ -172,9 +271,10 @@ impl PartitionedHypergraph {
         self.hg.incident_nets(u).iter().any(|&e| self.connectivity(e) > 1)
     }
 
-    /// Snapshot of the block assignment.
+    /// Snapshot of the block assignment (pooled bindings may hold more
+    /// atomics than nodes; only the live prefix is returned).
     pub fn parts(&self) -> Vec<BlockId> {
-        self.part.iter().map(|p| p.load(Ordering::Acquire)).collect()
+        self.part[..self.hg.num_nodes()].iter().map(|p| p.load(Ordering::Acquire)).collect()
     }
 
     // ------------------------------------------------------ move op

@@ -96,8 +96,35 @@ impl PinCountArray {
         self.bits
     }
 
+    /// Number of nets this array has storage for. The pooled uncoarsening
+    /// path sizes the array once for the finest level; coarser levels use
+    /// the prefix `0..num_nets` of this capacity.
+    #[inline]
+    pub fn nets_capacity(&self) -> usize {
+        self.words.len() / self.words_per_net.max(1)
+    }
+
+    /// Blocks per net this array was laid out for.
+    #[inline]
+    pub fn blocks(&self) -> usize {
+        self.k
+    }
+
+    /// Can a count of `v` be stored without overflowing the packed entry?
+    #[inline]
+    pub fn can_represent(&self, v: usize) -> bool {
+        v as u64 <= self.mask
+    }
+
     pub fn clear(&self) {
-        for w in &self.words {
+        self.clear_nets(self.nets_capacity());
+    }
+
+    /// Zero the entries of the first `num_nets` nets only (per-level
+    /// rebuild on a pooled array: stale counts of a previous binding past
+    /// the current hypergraph's nets are never read and need no clearing).
+    pub fn clear_nets(&self, num_nets: usize) {
+        for w in &self.words[..num_nets * self.words_per_net] {
             w.store(0, Ordering::Relaxed);
         }
     }

@@ -1,0 +1,441 @@
+//! The partition-state pool for zero-copy uncoarsening.
+//!
+//! Both Mt-KaHyPar papers (arXiv 2303.17679 §6, arXiv 2010.10272)
+//! attribute much of their speedup to reusing level-sized memory across
+//! the multilevel hierarchy instead of reallocating it. This module
+//! applies that discipline to the §6.1 partition structure itself:
+//! a [`PartitionPool`] owns one finest-level-sized allocation of the
+//! block assignment Π, the block weights, the packed pin counts Φ, the
+//! connectivity bitsets Λ and the per-net locks, and *binds* that memory
+//! to each level's hypergraph in turn.
+//!
+//! Ownership protocol: the buffers always live inside the currently
+//! bound [`PartitionedHypergraph`] (so the refiners see a perfectly
+//! ordinary partition); the pool itself holds only the finest-level
+//! reservation, the reused projection scratch and the allocation
+//! counters. Each rebind consumes the previous partition and hands its
+//! memory directly to the next one: [`PartitionPool::rebind_level`]
+//! snapshots the coarse Π prefix into the scratch vector, points the
+//! buffers at the finer hypergraph, projects the assignment through
+//! `fine_to_coarse` straight into the existing Π atomics and repairs
+//! Φ/Λ/weights in place. The final bind simply stays with the partition
+//! returned to the caller — the pool never copies level-sized state and
+//! never allocates after the first bind (asserted by the
+//! `structural_allocs` counter, mirroring the gain-table counters).
+
+use super::{connectivity::ConnectivitySets, pin_counts::PinCountArray, PartitionedHypergraph};
+use crate::datastructures::SpinLockVec;
+use crate::hypergraph::Hypergraph;
+use crate::parallel::{par_for_auto, SharedSlice};
+use crate::{BlockId, NodeId, NodeWeight};
+use std::sync::atomic::{AtomicI64, AtomicU32};
+use std::sync::Arc;
+
+/// The §6.1 state a [`PartitionedHypergraph`] is made of, detached from
+/// any hypergraph. Only values tied to a specific binding are stale;
+/// the memory itself is always valid for any hypergraph that fits.
+pub(crate) struct PartitionBuffers {
+    pub(crate) part: Vec<AtomicU32>,
+    pub(crate) block_weight: Vec<AtomicI64>,
+    pub(crate) max_block_weight: Vec<NodeWeight>,
+    pub(crate) pin_counts: PinCountArray,
+    pub(crate) conn: ConnectivitySets,
+    pub(crate) net_locks: SpinLockVec,
+}
+
+impl PartitionBuffers {
+    /// One structural allocation covering `n` nodes, `m` nets with counts
+    /// up to `max_net_size`, and `k` blocks.
+    pub(crate) fn alloc(n: usize, m: usize, max_net_size: usize, k: usize) -> Self {
+        PartitionBuffers {
+            part: (0..n).map(|_| AtomicU32::new(0)).collect(),
+            block_weight: (0..k).map(|_| AtomicI64::new(0)).collect(),
+            max_block_weight: vec![NodeWeight::MAX; k],
+            pin_counts: PinCountArray::new(m, k, max_net_size.max(1)),
+            conn: ConnectivitySets::new(m, k),
+            net_locks: SpinLockVec::new(m),
+        }
+    }
+
+    /// Can these buffers host a `k`-way partition of `hg` without
+    /// reallocation? The block dimension must match exactly — the packed
+    /// pin-count layout and the weight vectors are k-shaped, so buffers
+    /// reclaimed from a partition with a different k (e.g. a V-cycle on
+    /// an externally built partition) force a counted reallocation
+    /// instead of silently reusing wrong-sized state.
+    fn fits(&self, hg: &Hypergraph, k: usize) -> bool {
+        let m = hg.num_nets();
+        self.block_weight.len() == k
+            && self.pin_counts.blocks() == k
+            && self.conn.blocks() == k
+            && self.part.len() >= hg.num_nodes()
+            && self.pin_counts.nets_capacity() >= m
+            && self.pin_counts.can_represent(hg.max_net_size())
+            && self.conn.nets_capacity() >= m
+            && self.net_locks.len() >= m
+    }
+}
+
+/// Manager of one finest-level-sized [`PartitionBuffers`] allocation that
+/// always lives inside the [`PartitionedHypergraph`] bound to the current
+/// uncoarsening level; the pool carries the reservation, the reused
+/// projection scratch and the allocation counters, and moves the memory
+/// from one binding to the next.
+pub struct PartitionPool {
+    k: usize,
+    reserved_nodes: usize,
+    reserved_nets: usize,
+    reserved_net_size: usize,
+    /// coarse-Π snapshot for in-place projection (coarse-level-sized use
+    /// of a finest-level-sized vector)
+    proj_scratch: Vec<BlockId>,
+    structural_allocs: usize,
+    rebinds: usize,
+}
+
+impl PartitionPool {
+    /// An empty pool for `k`-way partitions. Call [`Self::reserve`] with
+    /// the finest hypergraph before the first bind so the single
+    /// allocation covers the whole uncoarsening sequence.
+    pub fn new(k: usize) -> Self {
+        PartitionPool {
+            k,
+            reserved_nodes: 0,
+            reserved_nets: 0,
+            reserved_net_size: 0,
+            proj_scratch: Vec::new(),
+            structural_allocs: 0,
+            rebinds: 0,
+        }
+    }
+
+    /// Record the finest-level dimensions; the first bind sizes the
+    /// buffers (and the projection scratch) to cover them.
+    pub fn reserve(&mut self, hg: &Hypergraph) {
+        self.reserved_nodes = self.reserved_nodes.max(hg.num_nodes());
+        self.reserved_nets = self.reserved_nets.max(hg.num_nets());
+        self.reserved_net_size = self.reserved_net_size.max(hg.max_net_size());
+        if self.proj_scratch.len() < self.reserved_nodes {
+            self.proj_scratch.resize(self.reserved_nodes, 0);
+        }
+    }
+
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// How often buffer memory was allocated. Stays at 1 across an entire
+    /// uncoarsening sequence whose finest level was [`Self::reserve`]d —
+    /// the zero-copy invariant the reuse tests assert.
+    pub fn structural_allocs(&self) -> usize {
+        self.structural_allocs
+    }
+
+    /// How often a bound partition was re-pointed at another hypergraph.
+    pub fn rebinds(&self) -> usize {
+        self.rebinds
+    }
+
+    /// Produce buffers able to host `hg`: reuse the `reclaimed` memory of
+    /// the previous binding when it fits, otherwise perform one (counted)
+    /// allocation sized to the maximum of `hg` and the reservation.
+    fn buffers_for(
+        &mut self,
+        reclaimed: Option<PartitionBuffers>,
+        hg: &Hypergraph,
+    ) -> PartitionBuffers {
+        match reclaimed {
+            Some(b) if b.fits(hg, self.k) => b,
+            _ => {
+                self.structural_allocs += 1;
+                PartitionBuffers::alloc(
+                    hg.num_nodes().max(self.reserved_nodes),
+                    hg.num_nets().max(self.reserved_nets),
+                    hg.max_net_size().max(self.reserved_net_size).max(1),
+                    self.k,
+                )
+            }
+        }
+    }
+
+    /// Shared bind sequence: buffers → partition → uniform limits → full
+    /// assignment (the one place the bind semantics live).
+    fn bind_impl(
+        &mut self,
+        reclaimed: Option<PartitionBuffers>,
+        hg: Arc<Hypergraph>,
+        parts: &[BlockId],
+        eps: f64,
+        threads: usize,
+    ) -> PartitionedHypergraph {
+        let bufs = self.buffers_for(reclaimed, &hg);
+        let mut phg = PartitionedHypergraph::from_buffers(hg, self.k, bufs);
+        phg.set_uniform_max_weight(eps);
+        phg.assign_all(parts, threads);
+        phg
+    }
+
+    /// Bind the pooled state to `hg` with the given assignment — the
+    /// first (coarsest) level of an uncoarsening sequence. Uniform block
+    /// weight limits are derived from `eps`.
+    pub fn bind(
+        &mut self,
+        hg: Arc<Hypergraph>,
+        parts: &[BlockId],
+        eps: f64,
+        threads: usize,
+    ) -> PartitionedHypergraph {
+        self.bind_impl(None, hg, parts, eps, threads)
+    }
+
+    /// Re-point an existing binding at `hg` with an explicit assignment
+    /// (V-cycle restarts, n-level batch snapshots). Reuses the memory of
+    /// `phg`; a full in-place value rebuild, no allocation.
+    pub fn rebind_with_parts(
+        &mut self,
+        phg: PartitionedHypergraph,
+        hg: Arc<Hypergraph>,
+        parts: &[BlockId],
+        eps: f64,
+        threads: usize,
+    ) -> PartitionedHypergraph {
+        self.rebinds += 1;
+        self.bind_impl(Some(phg.into_buffers()), hg, parts, eps, threads)
+    }
+
+    /// The uncoarsening step: consume the refined `coarse` partition and
+    /// bind its memory to the finer `fine_hg`, projecting the assignment
+    /// through `fine_to_coarse` directly into the existing Π array and
+    /// repairing Φ/Λ/block weights in place. The only per-level copy is
+    /// the coarse-prefix Π snapshot into the pool's reused scratch (the
+    /// fine Π cannot be written while the coarse Π still lives in the
+    /// same atomics).
+    pub fn rebind_level(
+        &mut self,
+        coarse: PartitionedHypergraph,
+        fine_hg: Arc<Hypergraph>,
+        fine_to_coarse: &[NodeId],
+        eps: f64,
+        threads: usize,
+    ) -> PartitionedHypergraph {
+        debug_assert_eq!(coarse.k(), self.k);
+        debug_assert_eq!(fine_to_coarse.len(), fine_hg.num_nodes());
+        self.rebinds += 1;
+        let coarse_n = coarse.hypergraph().num_nodes();
+        if self.proj_scratch.len() < coarse_n {
+            // only reachable when the pool was never reserved for the
+            // finest level (coarse_n ≤ fine_n ≤ reserved_nodes otherwise)
+            self.proj_scratch.resize(coarse_n, 0);
+        }
+        {
+            let scratch = SharedSlice::new(&mut self.proj_scratch[..coarse_n]);
+            let coarse = &coarse;
+            par_for_auto(coarse_n, threads, |u| {
+                // SAFETY: each index written exactly once by one thread.
+                unsafe { scratch.write(u, coarse.block_of(u as NodeId)) };
+            });
+        }
+        let bufs = self.buffers_for(Some(coarse.into_buffers()), &fine_hg);
+        let mut fine = PartitionedHypergraph::from_buffers(fine_hg, self.k, bufs);
+        fine.set_uniform_max_weight(eps);
+        fine.store_projected(fine_to_coarse, &self.proj_scratch, threads);
+        fine.rebuild_from_parts(threads);
+        fine
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::context::{Context, Preset};
+    use crate::hypergraph::contraction;
+    use crate::util::Rng;
+
+    fn random_hypergraph(seed: u64, n: usize, m: usize) -> Arc<Hypergraph> {
+        let mut rng = Rng::new(seed);
+        let mut nets = Vec::new();
+        for _ in 0..m {
+            let sz = 2 + rng.next_below(5);
+            let pins: Vec<NodeId> =
+                rng.sample_indices(n, sz).into_iter().map(|x| x as NodeId).collect();
+            if pins.len() >= 2 {
+                nets.push(pins);
+            }
+        }
+        let weights: Vec<i64> = (0..n).map(|_| 1 + rng.next_below(3) as i64).collect();
+        Arc::new(Hypergraph::from_nets(n, &nets, Some(weights), None))
+    }
+
+    /// A random 2:1-ish contraction of `hg` plus the fine→coarse mapping.
+    fn random_level(hg: &Arc<Hypergraph>, seed: u64) -> (Arc<Hypergraph>, Vec<NodeId>) {
+        let n = hg.num_nodes();
+        let mut rng = Rng::new(seed ^ 0xabcd);
+        let mut rep: Vec<NodeId> = (0..n as NodeId).collect();
+        for u in 0..n {
+            let t = rng.next_below(n);
+            if rep[t] == t as NodeId {
+                rep[u] = t as NodeId;
+            }
+        }
+        for u in 0..n {
+            let mut r = rep[u] as usize;
+            while rep[r] as usize != r {
+                r = rep[r] as usize;
+            }
+            rep[u] = r as NodeId;
+        }
+        let c = contraction::contract(hg, &rep, 2);
+        (Arc::new(c.coarse), c.fine_to_coarse)
+    }
+
+    /// Pin counts, connectivity sets and block weights after an in-place
+    /// rebind must be identical to a freshly constructed partition.
+    #[test]
+    fn rebind_level_matches_fresh_construction() {
+        for seed in 0..12u64 {
+            let k = 2 + (seed % 3) as usize;
+            let fine_hg = random_hypergraph(seed, 80 + seed as usize * 13, 150);
+            let (coarse_hg, fine_to_coarse) = random_level(&fine_hg, seed);
+            let mut rng = Rng::new(seed ^ 0x51);
+            let coarse_parts: Vec<BlockId> =
+                (0..coarse_hg.num_nodes()).map(|_| rng.next_below(k) as BlockId).collect();
+
+            let mut pool = PartitionPool::new(k);
+            pool.reserve(&fine_hg);
+            let coarse_phg = pool.bind(coarse_hg.clone(), &coarse_parts, 0.5, 2);
+            coarse_phg.verify_consistency().unwrap();
+            let fine_phg = pool.rebind_level(coarse_phg, fine_hg.clone(), &fine_to_coarse, 0.5, 2);
+            fine_phg.verify_consistency().unwrap();
+
+            // reference: legacy constructor on the projected assignment
+            let ref_parts: Vec<BlockId> =
+                fine_to_coarse.iter().map(|&c| coarse_parts[c as usize]).collect();
+            let mut fresh = PartitionedHypergraph::new(fine_hg.clone(), k);
+            fresh.set_uniform_max_weight(0.5);
+            fresh.assign_all(&ref_parts, 1);
+
+            assert_eq!(fine_phg.parts(), fresh.parts(), "seed {seed}: Π mismatch");
+            for b in 0..k as BlockId {
+                assert_eq!(
+                    fine_phg.block_weight(b),
+                    fresh.block_weight(b),
+                    "seed {seed}: block weight {b}"
+                );
+                assert_eq!(fine_phg.max_block_weight(b), fresh.max_block_weight(b));
+            }
+            for e in fine_hg.nets() {
+                assert_eq!(
+                    fine_phg.connectivity(e),
+                    fresh.connectivity(e),
+                    "seed {seed}: λ({e})"
+                );
+                for b in 0..k as BlockId {
+                    assert_eq!(
+                        fine_phg.pin_count(e, b),
+                        fresh.pin_count(e, b),
+                        "seed {seed}: Φ({e},{b})"
+                    );
+                }
+            }
+            assert_eq!(pool.structural_allocs(), 1);
+        }
+    }
+
+    /// A reserved pool performs exactly one structural allocation across
+    /// an entire multi-level rebind sequence.
+    #[test]
+    fn zero_structural_allocations_across_levels() {
+        let k = 4;
+        let fine_hg = random_hypergraph(7, 400, 700);
+        // build a 3-deep chain of coarser levels
+        let (mid_hg, fine_to_mid) = random_level(&fine_hg, 1);
+        let (coarse_hg, mid_to_coarse) = random_level(&mid_hg, 2);
+        let mut rng = Rng::new(99);
+        let coarse_parts: Vec<BlockId> =
+            (0..coarse_hg.num_nodes()).map(|_| rng.next_below(k) as BlockId).collect();
+
+        let mut pool = PartitionPool::new(k);
+        pool.reserve(&fine_hg);
+        let mut phg = pool.bind(coarse_hg, &coarse_parts, 0.5, 2);
+        phg = pool.rebind_level(phg, mid_hg, &mid_to_coarse, 0.5, 2);
+        phg = pool.rebind_level(phg, fine_hg.clone(), &fine_to_mid, 0.5, 2);
+        phg.verify_consistency().unwrap();
+        assert_eq!(
+            pool.structural_allocs(),
+            1,
+            "uncoarsening must not allocate Π/Φ/Λ/lock storage per level"
+        );
+        assert_eq!(pool.rebinds(), 2);
+
+        // a V-cycle-style full re-assignment reuses the memory too
+        let parts = phg.parts();
+        phg = pool.rebind_with_parts(phg, fine_hg, &parts, 0.5, 2);
+        phg.verify_consistency().unwrap();
+        assert_eq!(pool.structural_allocs(), 1);
+        assert_eq!(pool.rebinds(), 3);
+    }
+
+    /// An unreserved pool still works (growth is counted, not silent).
+    #[test]
+    fn unreserved_pool_grows_and_counts() {
+        let k = 2;
+        let small = random_hypergraph(3, 40, 60);
+        let big = random_hypergraph(4, 200, 400);
+        let mut pool = PartitionPool::new(k);
+        let parts_small: Vec<BlockId> =
+            (0..small.num_nodes()).map(|u| (u % k) as BlockId).collect();
+        let phg = pool.bind(small, &parts_small, 0.5, 1);
+        assert_eq!(pool.structural_allocs(), 1);
+        let parts_big: Vec<BlockId> = (0..big.num_nodes()).map(|u| (u % k) as BlockId).collect();
+        let phg = pool.rebind_with_parts(phg, big, &parts_big, 0.5, 1);
+        phg.verify_consistency().unwrap();
+        assert_eq!(pool.structural_allocs(), 2, "growth must be counted");
+    }
+
+    /// Buffers reclaimed from a partition with a different block count
+    /// must not be reused (k-shaped layout): the rebind reallocates and
+    /// counts it — the V-cycle-on-external-partition case.
+    #[test]
+    fn rebind_reallocates_on_block_dimension_mismatch() {
+        let hg = random_hypergraph(21, 60, 90);
+        let ext = PartitionedHypergraph::new(hg.clone(), 2);
+        let zeros = vec![0 as BlockId; hg.num_nodes()];
+        ext.assign_all(&zeros, 1);
+        let mut pool = PartitionPool::new(4);
+        pool.reserve(&hg);
+        let parts: Vec<BlockId> = (0..hg.num_nodes()).map(|u| (u % 2) as BlockId).collect();
+        let phg = pool.rebind_with_parts(ext, hg.clone(), &parts, 0.5, 1);
+        assert_eq!(phg.k(), 4);
+        phg.verify_consistency().unwrap();
+        assert_eq!(pool.structural_allocs(), 1, "k mismatch must reallocate (counted)");
+    }
+
+    /// Pooled rebinds are deterministic: identical results for any thread
+    /// count (static merge order, per-net exclusive rebuilds).
+    #[test]
+    fn rebind_deterministic_across_threads() {
+        let k = 3;
+        let fine_hg = random_hypergraph(11, 300, 500);
+        let (coarse_hg, f2c) = random_level(&fine_hg, 5);
+        let mut rng = Rng::new(13);
+        let coarse_parts: Vec<BlockId> =
+            (0..coarse_hg.num_nodes()).map(|_| rng.next_below(k) as BlockId).collect();
+        let run = |threads: usize| {
+            let mut pool = PartitionPool::new(k);
+            pool.reserve(&fine_hg);
+            let phg = pool.bind(coarse_hg.clone(), &coarse_parts, 0.5, threads);
+            let phg = pool.rebind_level(phg, fine_hg.clone(), &f2c, 0.5, threads);
+            (phg.parts(), (0..k as BlockId).map(|b| phg.block_weight(b)).collect::<Vec<_>>())
+        };
+        assert_eq!(run(1), run(4));
+    }
+
+    #[test]
+    fn pool_is_usable_through_context_dimensions() {
+        // smoke: k from a Context, as the pipeline wires it
+        let ctx = Context::new(Preset::Default, 3, 0.1);
+        let pool = PartitionPool::new(ctx.k);
+        assert_eq!(pool.k(), 3);
+        assert_eq!(pool.structural_allocs(), 0);
+    }
+}

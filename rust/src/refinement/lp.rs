@@ -17,13 +17,39 @@ use crate::{BlockId, Gain, NodeId, NodeWeight};
 use std::sync::atomic::{AtomicI64, Ordering};
 use std::sync::Mutex;
 
+/// Reusable label-propagation scratch: the per-round node visit order and
+/// the localized frontier/next buffers. Owned by the refinement
+/// `Workspace` so repeated LP invocations across uncoarsening levels stop
+/// allocating per round; the capacity of the finest level is reused by
+/// every coarser one.
+#[derive(Default)]
+pub struct LpScratch {
+    order: Vec<u32>,
+    frontier: Vec<NodeId>,
+    next: Vec<NodeId>,
+}
+
 /// Parallel label propagation; returns the total attributed improvement.
+/// Convenience wrapper allocating throwaway scratch — pipeline callers go
+/// through [`lp_refine_with_scratch`].
 pub fn lp_refine(phg: &PartitionedHypergraph, ctx: &Context) -> Gain {
+    lp_refine_with_scratch(phg, ctx, &mut LpScratch::default())
+}
+
+/// Parallel label propagation on reusable workspace scratch.
+pub fn lp_refine_with_scratch(
+    phg: &PartitionedHypergraph,
+    ctx: &Context,
+    scratch: &mut LpScratch,
+) -> Gain {
     let n = phg.hypergraph().num_nodes();
     let total = AtomicI64::new(0);
     for round in 0..ctx.lp_rounds {
-        let mut order: Vec<u32> = (0..n as u32).collect();
-        Rng::new(hash2(ctx.seed, 0x19 ^ round as u64)).shuffle(&mut order);
+        let order = &mut scratch.order;
+        order.clear();
+        order.extend(0..n as u32);
+        Rng::new(hash2(ctx.seed, 0x19 ^ round as u64)).shuffle(order);
+        let order = &*order;
         let moved_this_round = AtomicI64::new(0);
         parallel_chunks(n, ctx.threads, |_, s, e| {
             for &u in &order[s..e] {
@@ -41,8 +67,10 @@ pub fn lp_refine(phg: &PartitionedHypergraph, ctx: &Context) -> Gain {
                         if out.attributed_gain < 0 {
                             // conflict: revert immediately (§6.1)
                             let back = phg.move_unchecked(u, from, None);
-                            moved_this_round
-                                .fetch_add(out.attributed_gain + back.attributed_gain, Ordering::Relaxed);
+                            moved_this_round.fetch_add(
+                                out.attributed_gain + back.attributed_gain,
+                                Ordering::Relaxed,
+                            );
                         } else {
                             moved_this_round.fetch_add(out.attributed_gain, Ordering::Relaxed);
                         }
@@ -61,17 +89,32 @@ pub fn lp_refine(phg: &PartitionedHypergraph, ctx: &Context) -> Gain {
 
 /// Highly-localized label propagation (paper §9): restricted to the given
 /// node set plus one-hop expansion — run after each batch uncontraction.
+/// Convenience wrapper over [`lp_refine_localized_with_scratch`].
 pub fn lp_refine_localized(
     phg: &PartitionedHypergraph,
     ctx: &Context,
     nodes: &[NodeId],
 ) -> Gain {
+    lp_refine_localized_with_scratch(phg, ctx, nodes, &mut LpScratch::default())
+}
+
+/// Localized label propagation whose frontier/next churn runs on reusable
+/// workspace scratch (one n-level run performs thousands of batch
+/// refinements; the buffers keep their capacity across all of them).
+pub fn lp_refine_localized_with_scratch(
+    phg: &PartitionedHypergraph,
+    ctx: &Context,
+    nodes: &[NodeId],
+    scratch: &mut LpScratch,
+) -> Gain {
     let mut total: Gain = 0;
-    let mut frontier: Vec<NodeId> = nodes.to_vec();
+    scratch.frontier.clear();
+    scratch.frontier.extend_from_slice(nodes);
     for _ in 0..ctx.lp_rounds.max(1) {
-        let mut next: Vec<NodeId> = Vec::new();
+        scratch.next.clear();
+        let frontier = &scratch.frontier;
         let gained = AtomicI64::new(0);
-        let next_mx = Mutex::new(&mut next);
+        let next_mx = Mutex::new(&mut scratch.next);
         parallel_chunks(frontier.len(), ctx.threads, |_, s, e| {
             let mut local_next = Vec::new();
             for &u in &frontier[s..e] {
@@ -105,12 +148,12 @@ pub fn lp_refine_localized(
             next_mx.lock().unwrap().extend(local_next);
         });
         total += gained.load(Ordering::Relaxed);
-        if next.is_empty() {
+        if scratch.next.is_empty() {
             break;
         }
-        next.sort_unstable();
-        next.dedup();
-        frontier = next;
+        scratch.next.sort_unstable();
+        scratch.next.dedup();
+        std::mem::swap(&mut scratch.frontier, &mut scratch.next);
     }
     total
 }

@@ -17,15 +17,34 @@
 //! `rebalance → LP → FM → flows → rebalance`, with the rebalancer acting
 //! as the balance-repair fallback on both ends (repair infeasible
 //! projected partitions before quality work, guarantee feasibility after).
+//!
+//! ## Pooled partition lifecycle
+//!
+//! Beyond the gain table, the workspace owns a
+//! [`PartitionPool`](crate::partition::PartitionPool): one
+//! finest-level-sized allocation of the §6.1 partition state (Π atomics,
+//! block weights, packed pin counts, connectivity bitsets, net locks).
+//! Drivers built with [`RefinementPipeline::new_for`] reserve that
+//! capacity up front, [`RefinementPipeline::bind`] the coarsest level,
+//! then [`RefinementPipeline::project_to_level`] per uncoarsening step —
+//! which moves the *same memory* to the finer hypergraph, projects Π
+//! through the contraction mapping in place and repairs Φ/Λ/weights by a
+//! parallel value rebuild. Memory ownership alternates between the pool
+//! (between levels) and the bound `PartitionedHypergraph` (during
+//! refinement); the finest binding is simply returned to the caller.
+//! Values are rebuilt every level; memory is allocated once.
 
+use crate::coarsening::Level;
 use crate::coordinator::context::Context;
 use crate::datastructures::AddressablePQ;
-use crate::partition::{GainTable, Move, PartitionedHypergraph};
+use crate::hypergraph::Hypergraph;
+use crate::partition::{GainTable, Move, PartitionPool, PartitionedHypergraph};
 use crate::refinement::fm::{DeltaPartition, FmStats};
 use crate::refinement::{flow, fm, lp, rebalance};
 use crate::util::Bitset;
-use crate::{Gain, NodeId};
+use crate::{BlockId, Gain, NodeId};
 use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
 
 /// Per-thread localized-FM search scratch, reused across seed batches,
 /// rounds *and* uncoarsening levels (hash tables and vectors keep their
@@ -64,6 +83,10 @@ pub struct Workspace {
     pub(crate) scratch: Vec<SearchScratch>,
     /// reusable boundary-seed buffer
     pub(crate) boundary: Vec<NodeId>,
+    /// reusable label-propagation scratch (visit order + frontier churn)
+    pub(crate) lp: lp::LpScratch,
+    /// pooled §6.1 partition state rebound across uncoarsening levels
+    pub(crate) pool: PartitionPool,
     gain_table_inits: usize,
     gain_table_allocs: usize,
 }
@@ -79,9 +102,17 @@ impl Workspace {
             owner: (0..node_capacity).map(|_| AtomicBool::new(false)).collect(),
             scratch: (0..threads).map(|_| SearchScratch::new(k, node_capacity)).collect(),
             boundary: Vec::new(),
+            lp: lp::LpScratch::default(),
+            pool: PartitionPool::new(k),
             gain_table_inits: 0,
             gain_table_allocs: 1,
         }
+    }
+
+    /// Reserve the partition pool for the finest-level hypergraph so the
+    /// whole uncoarsening sequence runs on one structural allocation.
+    pub fn reserve_partition(&mut self, hg: &Hypergraph) {
+        self.pool.reserve(hg);
     }
 
     /// Grow node-indexed state to `n` entries (no-op when the finest-level
@@ -163,11 +194,11 @@ impl Refiner for LpRefiner {
         "label_propagation"
     }
 
-    fn refine(&mut self, phg: &PartitionedHypergraph, _ws: &mut Workspace, ctx: &Context) -> Gain {
+    fn refine(&mut self, phg: &PartitionedHypergraph, ws: &mut Workspace, ctx: &Context) -> Gain {
         if ctx.deterministic {
             lp::lp_refine_deterministic(phg, ctx)
         } else {
-            lp::lp_refine(phg, ctx)
+            lp::lp_refine_with_scratch(phg, ctx, &mut ws.lp)
         }
     }
 }
@@ -250,6 +281,83 @@ impl RefinementPipeline {
         RefinementPipeline { ws: Workspace::new(ctx.k, ctx.threads, node_capacity), stack }
     }
 
+    /// Build the pipeline for an uncoarsening sequence whose finest level
+    /// is `hg`: sizes the gain table *and* reserves the partition pool so
+    /// every level of the hierarchy rebinds the same memory.
+    pub fn new_for(ctx: &Context, hg: &Hypergraph) -> Self {
+        let mut pipeline = Self::new(ctx, hg.num_nodes());
+        pipeline.ws.reserve_partition(hg);
+        pipeline
+    }
+
+    /// Bind the pooled partition state to the coarsest level.
+    pub fn bind(
+        &mut self,
+        hg: Arc<Hypergraph>,
+        parts: &[BlockId],
+        ctx: &Context,
+    ) -> PartitionedHypergraph {
+        self.ws.pool.bind(hg, parts, ctx.epsilon, ctx.threads)
+    }
+
+    /// Re-point the pooled state at `hg` with an explicit assignment
+    /// (V-cycle restarts, n-level batch snapshots).
+    pub fn rebind_with_parts(
+        &mut self,
+        phg: PartitionedHypergraph,
+        hg: Arc<Hypergraph>,
+        parts: &[BlockId],
+        ctx: &Context,
+    ) -> PartitionedHypergraph {
+        self.ws.pool.rebind_with_parts(phg, hg, parts, ctx.epsilon, ctx.threads)
+    }
+
+    /// One zero-copy uncoarsening step: move the refined coarse partition
+    /// onto the finer hypergraph, projecting Π through `fine_to_coarse`
+    /// in place (no snapshot, no intermediate assignment vector).
+    pub fn project_to_level(
+        &mut self,
+        coarse: PartitionedHypergraph,
+        fine_hg: Arc<Hypergraph>,
+        fine_to_coarse: &[NodeId],
+        ctx: &Context,
+    ) -> PartitionedHypergraph {
+        self.ws.pool.rebind_level(coarse, fine_hg, fine_to_coarse, ctx.epsilon, ctx.threads)
+    }
+
+    /// Run the full zero-copy uncoarsening sequence over `levels`
+    /// (coarsest → finest): per level, rebind the pooled partition onto
+    /// the finer hypergraph (`input_hg` below level 0 — the convention of
+    /// [`crate::coarsening::Hierarchy`]) and run the refiner stack.
+    /// `phg` must be bound to `levels.last()` (or to `input_hg` when
+    /// `levels` is empty) and already refined.
+    pub fn uncoarsen(
+        &mut self,
+        levels: &[Level],
+        input_hg: &Arc<Hypergraph>,
+        mut phg: PartitionedHypergraph,
+        ctx: &Context,
+    ) -> PartitionedHypergraph {
+        for i in (0..levels.len()).rev() {
+            let finer =
+                if i == 0 { input_hg.clone() } else { levels[i - 1].coarse.clone() };
+            phg = self.project_to_level(phg, finer, &levels[i].fine_to_coarse, ctx);
+            self.refine(&phg, ctx);
+        }
+        phg
+    }
+
+    /// Localized label propagation on the shared workspace scratch
+    /// (n-level batch refinement, paper §9).
+    pub fn lp_localized(
+        &mut self,
+        phg: &PartitionedHypergraph,
+        ctx: &Context,
+        nodes: &[NodeId],
+    ) -> Gain {
+        lp::lp_refine_localized_with_scratch(phg, ctx, nodes, &mut self.ws.lp)
+    }
+
     /// Run the full refiner stack on one level's partition. Called once
     /// per uncoarsening level; reuses all workspace state.
     pub fn refine(&mut self, phg: &PartitionedHypergraph, ctx: &Context) -> Gain {
@@ -273,6 +381,12 @@ impl RefinementPipeline {
         seeds: Option<&[NodeId]>,
     ) -> FmStats {
         fm::fm_refine_with_workspace(phg, ctx, seeds, &mut self.ws)
+    }
+
+    /// The pooled partition state (alloc/rebind counters for tests and
+    /// benches).
+    pub fn partition_pool(&self) -> &PartitionPool {
+        &self.ws.pool
     }
 
     /// The shared workspace (gain-table and allocation-stat access).

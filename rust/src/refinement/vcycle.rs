@@ -13,27 +13,39 @@
 
 use crate::coarsening;
 use crate::coordinator::context::Context;
-use crate::coordinator::partitioner::refine_level;
 use crate::partition::PartitionedHypergraph;
 use crate::refinement::RefinementPipeline;
-use crate::BlockId;
+use crate::{BlockId, NodeWeight};
 
 /// Run `cycles` V-cycles on an existing partition; returns the improved
 /// partition (never worse: each cycle keeps the better of before/after).
-/// The refinement workspace is allocated once and reused across all
-/// cycles and levels.
+/// The refinement workspace — gain table, FM scratch *and* the pooled
+/// partition state — is allocated once and rebound across all cycles and
+/// levels: the input partition's own buffers travel down to the coarsest
+/// level and back up, so a whole V-cycle performs no structural
+/// allocation of Π/Φ/Λ/lock storage.
 pub fn vcycle(phg: PartitionedHypergraph, ctx: &Context, cycles: usize) -> PartitionedHypergraph {
+    let hg = phg.hypergraph_arc();
+    let mut pipeline = RefinementPipeline::new_for(ctx, &hg);
     let mut current = phg;
-    let mut pipeline = RefinementPipeline::new(ctx, current.hypergraph().num_nodes());
+    // best assignment seen so far (values only; the memory stays pooled),
+    // plus the caller's weight limits: if no cycle is ever accepted the
+    // returned partition must carry the input's limits, not the uniform
+    // ε-derived ones the rebinds install
+    let mut best_parts = current.parts();
+    let input_limits: Vec<NodeWeight> =
+        (0..current.k() as BlockId).map(|b| current.max_block_weight(b)).collect();
+    let mut accepted_any = false;
+    let mut rejected_last = false;
     for _ in 0..cycles {
         let before = current.km1();
-        let parts = current.parts();
-        let hg = current.hypergraph_arc();
+        // at the loop top `best_parts` equals the current assignment
+        // (initially by construction, afterwards by the acceptance
+        // branch), so no second Π snapshot is needed per cycle.
         // blocks as contraction communities: cut structure preserved
-        let communities: Vec<u32> = parts.clone();
-        let hierarchy = coarsening::coarsen(hg.clone(), ctx, Some(&communities));
+        let hierarchy = coarsening::coarsen(hg.clone(), ctx, Some(&best_parts));
         // project the *existing* partition onto the coarsest level
-        let mut coarse_parts: Vec<BlockId> = parts.clone();
+        let mut coarse_parts: Vec<BlockId> = best_parts.clone();
         for level in &hierarchy.levels {
             let mut next = vec![0 as BlockId; level.coarse.num_nodes()];
             for (u, &c) in level.fine_to_coarse.iter().enumerate() {
@@ -41,19 +53,28 @@ pub fn vcycle(phg: PartitionedHypergraph, ctx: &Context, cycles: usize) -> Parti
             }
             coarse_parts = next;
         }
-        // uncoarsen with the full refinement pipeline (no initial partitioning)
-        let mut level_parts = coarse_parts;
-        for i in (0..hierarchy.levels.len()).rev() {
-            let refined =
-                refine_level(hierarchy.levels[i].coarse.clone(), &level_parts, ctx, &mut pipeline);
-            level_parts =
-                coarsening::project_partition(&hierarchy.levels[i], &refined.parts());
-        }
-        let candidate = refine_level(hg, &level_parts, ctx, &mut pipeline);
-        if candidate.km1() < before && candidate.is_balanced() {
-            current = candidate;
+        // uncoarsen with the full refinement pipeline (no initial
+        // partitioning), rebinding the pooled state per level
+        current = pipeline.rebind_with_parts(current, hierarchy.coarsest(), &coarse_parts, ctx);
+        pipeline.refine(&current, ctx);
+        current = pipeline.uncoarsen(&hierarchy.levels, &hg, current, ctx);
+        if current.km1() < before && current.is_balanced() {
+            best_parts = current.parts();
+            accepted_any = true;
+            rejected_last = false;
         } else {
+            rejected_last = true;
             break; // converged
+        }
+    }
+    if rejected_last {
+        // restore the best accepted assignment in place (values rebuilt,
+        // memory reused)
+        current.assign_all(&best_parts, ctx.threads);
+        if !accepted_any && input_limits.len() == current.k() {
+            // every cycle rejected: hand back the input partition's own
+            // block weight limits along with its assignment
+            current.set_max_weights(input_limits);
         }
     }
     current

@@ -8,7 +8,7 @@ use mtkahypar::hypergraph::{contraction, Hypergraph};
 use mtkahypar::metrics;
 use mtkahypar::partition::{
     gain_recalculation::{recalculate_gains, replay_gains_reference},
-    GainTable, Move, PartitionedHypergraph,
+    GainTable, Move, PartitionPool, PartitionedHypergraph,
 };
 use mtkahypar::util::Rng;
 use mtkahypar::{BlockId, NodeId};
@@ -258,4 +258,106 @@ fn prop_deterministic_coarsening_thread_invariant() {
         };
         assert_eq!(mk(1), mk(4), "seed {seed}");
     }
+}
+
+#[test]
+fn prop_pooled_rebind_matches_fresh_construction_on_real_hierarchies() {
+    // After every in-place rebind of the pooled partition state, pin
+    // counts, connectivity sets and block weights must be identical to a
+    // freshly constructed PartitionedHypergraph on the projected
+    // assignment, and verify_consistency must hold.
+    for seed in 0..SEEDS / 2 {
+        let hg = Arc::new(random_hypergraph(seed));
+        let k = 2 + (seed % 3) as usize;
+        let mut ctx = Context::new(Preset::Default, k, 0.5).with_threads(2).with_seed(seed);
+        ctx.contraction_limit_factor = 4;
+        let hierarchy = mtkahypar::coarsening::coarsen(hg.clone(), &ctx, None);
+        let mut rng = Rng::new(seed ^ 7);
+        let coarsest = hierarchy.coarsest();
+        let mut parts = random_parts(&mut rng, coarsest.num_nodes(), k);
+
+        let mut pool = PartitionPool::new(k);
+        pool.reserve(&hg);
+        let mut phg = pool.bind(coarsest, &parts, 0.5, 2);
+        phg.verify_consistency().unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+        for i in (0..hierarchy.levels.len()).rev() {
+            let finer = if i == 0 {
+                hg.clone()
+            } else {
+                hierarchy.levels[i - 1].coarse.clone()
+            };
+            phg = pool.rebind_level(
+                phg,
+                finer.clone(),
+                &hierarchy.levels[i].fine_to_coarse,
+                0.5,
+                2,
+            );
+            phg.verify_consistency().unwrap_or_else(|e| panic!("seed {seed} level {i}: {e}"));
+            // reference: legacy constructor on the separately projected parts
+            parts = mtkahypar::coarsening::project_partition(&hierarchy.levels[i], &parts);
+            let mut fresh = PartitionedHypergraph::new(finer.clone(), k);
+            fresh.set_uniform_max_weight(0.5);
+            fresh.assign_all(&parts, 1);
+            assert_eq!(phg.parts(), fresh.parts(), "seed {seed} level {i}: assignment");
+            for b in 0..k as BlockId {
+                assert_eq!(
+                    phg.block_weight(b),
+                    fresh.block_weight(b),
+                    "seed {seed} level {i}: block weight {b}"
+                );
+            }
+            for e in finer.nets() {
+                assert_eq!(
+                    phg.connectivity(e),
+                    fresh.connectivity(e),
+                    "seed {seed} level {i}: connectivity of net {e}"
+                );
+                for b in 0..k as BlockId {
+                    assert_eq!(
+                        phg.pin_count(e, b),
+                        fresh.pin_count(e, b),
+                        "seed {seed} level {i}: pin count ({e},{b})"
+                    );
+                }
+            }
+        }
+        assert_eq!(
+            pool.structural_allocs(),
+            1,
+            "seed {seed}: a reserved pool allocates exactly once"
+        );
+    }
+}
+
+#[test]
+fn prop_pooled_uncoarsening_performs_zero_per_level_allocations() {
+    // Drive the real pipeline API across a multi-level hierarchy and
+    // assert the alloc counters: one structural partition allocation and
+    // one gain-table allocation for the entire sequence (mirror of the
+    // gain-table reuse test, extended to the §6.1 state).
+    use mtkahypar::refinement::RefinementPipeline;
+    let p = PlantedParams { n: 400, m: 700, blocks: 2, ..Default::default() };
+    let hg = Arc::new(generators::planted_hypergraph(&p, 3));
+    let mut ctx = Context::new(Preset::Default, 2, 0.3).with_threads(2).with_seed(3);
+    ctx.contraction_limit_factor = 24;
+    ctx.fm_max_rounds = 2;
+    let hierarchy = mtkahypar::coarsening::coarsen(hg.clone(), &ctx, None);
+    assert!(!hierarchy.levels.is_empty(), "instance must coarsen");
+    let coarsest = hierarchy.coarsest();
+    let parts: Vec<BlockId> =
+        (0..coarsest.num_nodes()).map(|u| (u % 2) as BlockId).collect();
+    let mut pipeline = RefinementPipeline::new_for(&ctx, &hg);
+    let phg = pipeline.bind(coarsest, &parts, &ctx);
+    pipeline.refine(&phg, &ctx);
+    let phg = pipeline.uncoarsen(&hierarchy.levels, &hg, phg, &ctx);
+    phg.verify_consistency().unwrap();
+    assert!(phg.is_balanced(), "imbalance {}", phg.imbalance());
+    assert_eq!(
+        pipeline.partition_pool().structural_allocs(),
+        1,
+        "uncoarsening must not allocate partition storage per level"
+    );
+    assert_eq!(pipeline.partition_pool().rebinds(), hierarchy.levels.len());
+    assert_eq!(pipeline.workspace().gain_table_allocs(), 1);
 }
