@@ -17,7 +17,7 @@ use mtkahypar::hypergraph::contraction;
 use mtkahypar::partition::{
     recalculate_gains, GainTable, Move, PartitionPool, PartitionedHypergraph,
 };
-use mtkahypar::refinement::{lp, Workspace};
+use mtkahypar::refinement::{flow, lp, Workspace};
 use mtkahypar::util::Rng;
 use mtkahypar::{BlockId, NodeId};
 use std::sync::Arc;
@@ -137,6 +137,43 @@ fn main() {
         pool.structural_allocs(),
         1,
         "pooled rebind must not allocate per level"
+    );
+
+    // ---- flow refinement: fresh scratch vs pooled workspace ----
+    // One flow_refine call per uncoarsening level used to reallocate the
+    // quotient scaffolding, the per-pair flow networks and the FlowCutter
+    // state; the workspace path sizes them once and reuses the memory.
+    let kf = 4usize;
+    let pf = PlantedParams { n: 2000, m: 4000, blocks: kf, ..Default::default() };
+    let fhg = Arc::new(planted_hypergraph(&pf, 23));
+    let nf = fhg.num_nodes();
+    let mut rngf = Rng::new(41);
+    let mut fparts: Vec<BlockId> = (0..nf).map(|u| (u * kf / nf) as BlockId).collect();
+    for _ in 0..nf / 20 {
+        fparts[rngf.next_below(nf)] = rngf.next_below(kf) as BlockId;
+    }
+    let fctx = Context::new(Preset::DefaultFlows, kf, 0.1).with_threads(1).with_seed(7);
+    let fphg = {
+        let mut p = PartitionedHypergraph::new(fhg.clone(), kf);
+        p.set_uniform_max_weight(0.1);
+        p
+    };
+    bench("flow refine: fresh scratch per call", 3, nf, || {
+        fphg.assign_all(&fparts, 1);
+        let _ = flow::flow_refine(&fphg, &fctx);
+    });
+    let mut fw = flow::FlowWorkspace::new(kf);
+    fphg.assign_all(&fparts, 1);
+    let _ = flow::flow_refine_with_workspace(&fphg, &fctx, &mut fw);
+    let flow_allocs = fw.structural_allocs();
+    bench("flow refine: pooled workspace reuse", 3, nf, || {
+        fphg.assign_all(&fparts, 1);
+        let _ = flow::flow_refine_with_workspace(&fphg, &fctx, &mut fw);
+    });
+    assert_eq!(
+        fw.structural_allocs(),
+        flow_allocs,
+        "pooled flow refinement must not allocate after the first call"
     );
 
     // ---- rating map (coarsening inner loop) ----

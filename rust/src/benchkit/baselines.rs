@@ -53,10 +53,11 @@ pub fn patoh_like(hg: &Arc<Hypergraph>, ctx_in: &Context) -> PartitionedHypergra
     }
     let parts = initial::initial_partition(current.clone(), &ctx);
     // uncoarsen on the pooled workspace partition (zero per-level
-    // structural allocations, same as the main multilevel driver)
+    // structural allocations, same as the main multilevel driver); the
+    // coarsest refine carries its level distance for level-gated refiners
     let mut pipeline = crate::refinement::RefinementPipeline::new_for(&ctx, hg);
     let phg = pipeline.bind(current, &parts, &ctx);
-    pipeline.refine(&phg, &ctx);
+    pipeline.refine_at_distance(&phg, &ctx, levels.len());
     pipeline.uncoarsen(&levels, hg, phg, &ctx)
 }
 

@@ -101,6 +101,10 @@ pub struct Context {
     pub flow_tau: f64,
     /// stop a flow round when relative improvement < this (§8.1)
     pub flow_min_relative_improvement: f64,
+    /// run flows only on this many finest uncoarsening levels (§8.1 cost
+    /// model: coarse-level flow problems rarely pay for themselves);
+    /// clamped to ≥ 1 so the finest level always gets flows
+    pub flow_finest_levels: usize,
 
     // ---- n-level (paper §9) ----
     pub nlevel: bool,
@@ -145,6 +149,7 @@ impl Context {
             flow_distance: 2,
             flow_tau: 1.0,
             flow_min_relative_improvement: 0.001,
+            flow_finest_levels: 2,
             nlevel: false,
             nlevel_batch_size: 1000,
             deterministic: false,
@@ -215,6 +220,7 @@ mod tests {
         assert!(d.use_fm && !d.use_flows && !d.nlevel && !d.deterministic);
         let df = Context::new(Preset::DefaultFlows, 8, 0.03);
         assert!(df.use_fm && df.use_flows);
+        assert!(df.flow_finest_levels >= 1, "flows must reach the finest level");
         let q = Context::new(Preset::Quality, 8, 0.03);
         assert!(q.nlevel && !q.use_flows);
         let qf = Context::new(Preset::QualityFlows, 8, 0.03);

@@ -64,9 +64,12 @@ pub fn partition_arc(hg: Arc<Hypergraph>, ctx: &Context) -> PartitionedHypergrap
     // contraction mapping directly into the pooled Π array, so the loop
     // performs zero per-level structural allocations (see the
     // `perf_hotpath` "level build" and "gain table per level" entries).
+    // level-aware refinement: the coarsest level sits `levels.len()`
+    // projections away from the finest, so level-gated refiners (flows,
+    // §8.1 cost model) can skip it unless the hierarchy is shallow
     let mut pipeline = RefinementPipeline::new_for(ctx, &hg);
     let phg = pipeline.bind(hierarchy.coarsest(), &parts, ctx);
-    pipeline.refine(&phg, ctx);
+    pipeline.refine_at_distance(&phg, ctx, hierarchy.levels.len());
     pipeline.uncoarsen(&hierarchy.levels, &hg, phg, ctx)
 }
 

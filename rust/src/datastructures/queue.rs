@@ -1,8 +1,9 @@
 //! A simple multi-producer multi-consumer FIFO.
 //!
-//! Backs the FM seed task queue ("poll 25 seed nodes", paper §7) and the
-//! active-block-pair queue of the flow scheduler (§8.1). Contention is at
-//! task granularity, so a mutexed ring is the right complexity/perf spot.
+//! Backs the FM seed task queue ("poll 25 seed nodes", paper §7).
+//! Contention is at task granularity, so a mutexed ring is the right
+//! complexity/perf spot. (The flow scheduler of §8.1 keeps its own wave
+//! queue inside the refinement workspace — see `refinement::flow`.)
 
 use std::collections::VecDeque;
 use std::sync::Mutex;

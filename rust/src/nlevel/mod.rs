@@ -199,11 +199,12 @@ pub fn partition(hg: Arc<Hypergraph>, ctx: &Context) -> PartitionedHypergraph {
     }
 
     // ---- finest level: global refinement (paper: global FM + flows) ----
+    // distance 0: the one level where the Q-F preset's flows always run
     let phg = match bound.take() {
         Some(prev) => pipeline.rebind_with_parts(prev, hg, &parts, ctx),
         None => pipeline.bind(hg, &parts, ctx),
     };
-    pipeline.refine(&phg, ctx);
+    pipeline.refine_at_distance(&phg, ctx, 0);
     phg
 }
 

@@ -5,15 +5,19 @@
 //! balanced — convert the smaller side to terminals and *pierce* one (or,
 //! in bulk mode, several) additional nodes, preferring nodes that avoid
 //! augmenting paths and lie far from the original cut.
+//!
+//! All working state (terminal sets, cut sides, candidate ranking, the
+//! push-relabel scratch) lives in the worker's [`FlowScratch`], so the
+//! incremental max-flow sequence performs no per-iteration allocations.
 
 use super::maxflow::FlowNetwork;
 use super::network::{FlowProblem, SINK, SOURCE};
+use super::scratch::FlowScratch;
 use crate::NodeWeight;
 
-/// Outcome of a FlowCutter run on one block pair.
+/// Outcome of a FlowCutter run on one block pair. The per-region-node
+/// source-side assignment is left in `scratch.assignment`.
 pub struct CutterResult {
-    /// per region-node: true → source side (stays/moves to b1)
-    pub source_assignment: Vec<bool>,
     /// weight of the minimum cut found
     pub cut_value: i64,
     /// expected connectivity reduction Δ_exp = initial_cut − cut_value
@@ -26,54 +30,57 @@ pub struct CutterResult {
 /// improving balanced cut exists (flow ≥ initial cut, or piercing ran out
 /// of candidates).
 pub fn flow_cutter(
-    fp: &mut FlowProblem,
+    sc: &mut FlowScratch,
+    fp: &FlowProblem,
     max_b1: NodeWeight,
     max_b2: NodeWeight,
 ) -> Option<CutterResult> {
-    let n = fp.net.num_nodes();
-    let rn = fp.region.len();
-    let mut source = vec![false; n];
-    let mut sink = vec![false; n];
-    source[SOURCE as usize] = true;
-    sink[SINK as usize] = true;
-    let pair_weight: NodeWeight =
-        fp.source_weight + fp.sink_weight + fp.weight.iter().sum::<NodeWeight>();
+    let n = sc.net.num_nodes();
+    let rn = sc.region.len();
+    sc.source.clear();
+    sc.source.resize(n, false);
+    sc.sink.clear();
+    sc.sink.resize(n, false);
+    sc.source[SOURCE as usize] = true;
+    sc.sink[SINK as usize] = true;
+    let region_weight_total: NodeWeight = sc.weight.iter().sum();
+    let pair_weight: NodeWeight = fp.source_weight + fp.sink_weight + region_weight_total;
     let half = (pair_weight as f64 / 2.0).ceil() as NodeWeight;
 
     // bulk piercing state per side (paper §8.3)
     let mut pierce_round = [0usize; 2];
     let initial_terminal_weight = [fp.source_weight, fp.sink_weight];
-    let avg_node_weight =
-        (fp.weight.iter().sum::<NodeWeight>() as f64 / rn.max(1) as f64).max(1.0);
+    let avg_node_weight = (region_weight_total as f64 / rn.max(1) as f64).max(1.0);
 
     let max_iterations = 4 * rn + 16;
     for _ in 0..max_iterations {
-        let flow = fp.net.max_preflow(&source, &sink);
+        let flow = {
+            let (net, preflow) = (&mut sc.net, &mut sc.preflow);
+            net.max_preflow_with(&sc.source, &sc.sink, preflow)
+        };
         if flow >= fp.initial_cut {
             return None; // cannot improve this pair
         }
-        let s_side = fp.net.source_side(&source, &sink);
-        let t_side = fp.net.sink_side(&source, &sink);
+        sc.net.source_side_into(&sc.source, &sc.sink, &mut sc.s_side);
+        sc.net.sink_side_into(&sc.source, &sc.sink, &mut sc.t_side);
 
-        let w_s: NodeWeight = fp.source_weight
-            + region_weight(fp, |i| s_side[2 + i]);
-        let w_t: NodeWeight = fp.sink_weight + region_weight(fp, |i| t_side[2 + i]);
+        let w_s: NodeWeight =
+            fp.source_weight + region_weight(&sc.weight, &sc.s_side);
+        let w_t: NodeWeight = fp.sink_weight + region_weight(&sc.weight, &sc.t_side);
 
         // bipartition (S_r, V∖S_r)
         if w_s <= max_b1 && pair_weight - w_s <= max_b2 {
-            return Some(CutterResult {
-                source_assignment: (0..rn).map(|i| s_side[2 + i]).collect(),
-                cut_value: flow,
-                delta_exp: fp.initial_cut - flow,
-            });
+            sc.assignment.clear();
+            let s_side = &sc.s_side;
+            sc.assignment.extend((0..rn).map(|i| s_side[2 + i]));
+            return Some(CutterResult { cut_value: flow, delta_exp: fp.initial_cut - flow });
         }
         // bipartition (V∖T_r, T_r)
         if w_t <= max_b2 && pair_weight - w_t <= max_b1 {
-            return Some(CutterResult {
-                source_assignment: (0..rn).map(|i| !t_side[2 + i]).collect(),
-                cut_value: flow,
-                delta_exp: fp.initial_cut - flow,
-            });
+            sc.assignment.clear();
+            let t_side = &sc.t_side;
+            sc.assignment.extend((0..rn).map(|i| !t_side[2 + i]));
+            return Some(CutterResult { cut_value: flow, delta_exp: fp.initial_cut - flow });
         }
 
         // pierce the smaller side
@@ -84,38 +91,44 @@ pub fn flow_cutter(
         // transform the reachable side into terminals
         if pierce_source {
             for u in 0..n {
-                if s_side[u] {
-                    source[u] = true;
+                if sc.s_side[u] {
+                    sc.source[u] = true;
                 }
             }
         } else {
             for u in 0..n {
-                if t_side[u] {
-                    sink[u] = true;
+                if sc.t_side[u] {
+                    sc.sink[u] = true;
                 }
             }
         }
         // candidates: region nodes not yet terminal on either side
-        let mut cands: Vec<usize> = (0..rn)
-            .filter(|&i| !source[2 + i] && !sink[2 + i])
-            .collect();
-        if cands.is_empty() {
+        {
+            let (cands, source, sink) = (&mut sc.cands, &sc.source, &sc.sink);
+            cands.clear();
+            cands.extend((0..rn).filter(|&i| !source[2 + i] && !sink[2 + i]));
+        }
+        if sc.cands.is_empty() {
             return None;
         }
         // piercing heuristics: (1) avoid augmenting paths — prefer nodes
         // outside both residual sides; (2) stay on the pierced side's
         // original block (reconstructs parts of the original cut);
         // (3) larger distance from the cut
-        cands.sort_by_key(|&i| {
-            let avoids = !(s_side[2 + i] || t_side[2 + i]);
-            let same_side = fp.side[i] == pierce_source;
-            (
-                std::cmp::Reverse(avoids),
-                std::cmp::Reverse(same_side),
-                std::cmp::Reverse(fp.distance[i]),
-                i,
-            )
-        });
+        {
+            let (cands, s_side, t_side, side, distance) =
+                (&mut sc.cands, &sc.s_side, &sc.t_side, &sc.side, &sc.distance);
+            cands.sort_by_key(|&i| {
+                let avoids = !(s_side[2 + i] || t_side[2 + i]);
+                let same_side = side[i] == pierce_source;
+                (
+                    std::cmp::Reverse(avoids),
+                    std::cmp::Reverse(same_side),
+                    std::cmp::Reverse(distance[i]),
+                    i,
+                )
+            });
+        }
 
         // bulk piercing: weight goal (½ⁿ schedule) after warm-up rounds
         let count = if r <= 3 {
@@ -125,21 +138,29 @@ pub fn flow_cutter(
             let init = initial_terminal_weight[side_idx];
             let goal_frac: f64 = (1..=r).map(|i| 0.5f64.powi(i as i32)).sum();
             let goal = init as f64 + ((half - init) as f64) * goal_frac;
-            (((goal - cur as f64) / avg_node_weight).ceil() as usize).clamp(1, cands.len())
+            (((goal - cur as f64) / avg_node_weight).ceil() as usize).clamp(1, sc.cands.len())
         };
-        for &i in cands.iter().take(count) {
-            if pierce_source {
-                source[2 + i] = true;
-            } else {
-                sink[2 + i] = true;
+        {
+            let (cands, source, sink) = (&sc.cands, &mut sc.source, &mut sc.sink);
+            for &i in cands.iter().take(count) {
+                if pierce_source {
+                    source[2 + i] = true;
+                } else {
+                    sink[2 + i] = true;
+                }
             }
         }
     }
     None
 }
 
-fn region_weight(fp: &FlowProblem, pred: impl Fn(usize) -> bool) -> NodeWeight {
-    fp.weight.iter().enumerate().filter(|&(i, _)| pred(i)).map(|(_, &w)| w).sum()
+fn region_weight(weights: &[NodeWeight], flow_side: &[bool]) -> NodeWeight {
+    weights
+        .iter()
+        .enumerate()
+        .filter(|&(i, _)| flow_side[2 + i])
+        .map(|(_, &w)| w)
+        .sum()
 }
 
 /// Convenience for tests: total weight of a cut in the network, given the
@@ -163,7 +184,7 @@ pub fn cut_weight(net: &FlowNetwork, side: &[bool]) -> i64 {
 mod tests {
     use super::*;
     use crate::partition::PartitionedHypergraph;
-    use crate::refinement::flow::network::construct_region;
+    use crate::refinement::flow::network::{construct_region, cut_nets_between, RegionConfig};
     use std::sync::Arc;
 
     /// Chain instance where the initial cut (2 nets at a bad position) can
@@ -194,19 +215,31 @@ mod tests {
         phg
     }
 
+    fn build(
+        phg: &PartitionedHypergraph,
+        sc: &mut FlowScratch,
+        alpha: f64,
+        dist: usize,
+    ) -> Option<FlowProblem> {
+        sc.pair_nets = cut_nets_between(phg, 0, 1);
+        let cfg = RegionConfig::for_pair(phg, alpha, dist, 0, 1);
+        construct_region(phg, 0, 1, &cfg, sc)
+    }
+
     #[test]
     fn finds_the_better_cut() {
         let phg = improvable();
         assert_eq!(phg.km1(), 2);
-        let mut fp = construct_region(&phg, 0, 1, 16.0, 0.4, 3).unwrap();
+        let mut sc = FlowScratch::default();
+        let fp = build(&phg, &mut sc, 16.0, 3).unwrap();
         assert_eq!(fp.initial_cut, 2);
-        let res = flow_cutter(&mut fp, phg.max_block_weight(0), phg.max_block_weight(1))
+        let res = flow_cutter(&mut sc, &fp, phg.max_block_weight(0), phg.max_block_weight(1))
             .expect("improvement exists");
         assert_eq!(res.cut_value, 1, "min cut is the single net {{2,3}}");
         assert_eq!(res.delta_exp, 1);
         // assignment: node 2 should be on the source side now
-        let idx2 = fp.region.iter().position(|&u| u == 2).unwrap();
-        assert!(res.source_assignment[idx2]);
+        let idx2 = sc.region.iter().position(|&u| u == 2).unwrap();
+        assert!(sc.assignment[idx2]);
     }
 
     #[test]
@@ -219,10 +252,12 @@ mod tests {
             None,
         ));
         let mut phg = PartitionedHypergraph::new(hg, 2);
-        phg.set_uniform_max_weight(0.1);
+        phg.set_uniform_max_weight(1.0);
         phg.assign_all(&[0, 0, 1, 1], 1);
-        let mut fp = construct_region(&phg, 0, 1, 16.0, 0.1, 2).unwrap();
-        let res = flow_cutter(&mut fp, phg.max_block_weight(0), phg.max_block_weight(1));
+        let mut sc = FlowScratch::default();
+        let fp = build(&phg, &mut sc, 16.0, 2).unwrap();
+        let res =
+            flow_cutter(&mut sc, &fp, phg.max_block_weight(0), phg.max_block_weight(1));
         // either None, or a cut of the same weight (flow == initial cut
         // aborts, so None is expected)
         assert!(res.is_none());
@@ -231,13 +266,15 @@ mod tests {
     #[test]
     fn respects_balance_limits() {
         let phg = improvable();
-        let mut fp = construct_region(&phg, 0, 1, 16.0, 0.4, 3).unwrap();
-        if let Some(res) = flow_cutter(&mut fp, phg.max_block_weight(0), phg.max_block_weight(1))
+        let mut sc = FlowScratch::default();
+        let fp = build(&phg, &mut sc, 16.0, 3).unwrap();
+        if let Some(_res) =
+            flow_cutter(&mut sc, &fp, phg.max_block_weight(0), phg.max_block_weight(1))
         {
-            let w_src: i64 = fp
+            let w_src: i64 = sc
                 .weight
                 .iter()
-                .zip(&res.source_assignment)
+                .zip(&sc.assignment)
                 .filter(|&(_, &s)| s)
                 .map(|(&w, _)| w)
                 .sum::<i64>()
@@ -246,5 +283,21 @@ mod tests {
             assert!(w_src <= phg.max_block_weight(0));
             assert!(total - w_src <= phg.max_block_weight(1));
         }
+    }
+
+    #[test]
+    fn scratch_reuse_across_cutter_runs_is_allocation_free() {
+        let phg = improvable();
+        let mut sc = FlowScratch::default();
+        let fp = build(&phg, &mut sc, 16.0, 3).unwrap();
+        flow_cutter(&mut sc, &fp, phg.max_block_weight(0), phg.max_block_weight(1))
+            .expect("improvement exists");
+        let allocs = sc.structural_allocs();
+        for _ in 0..4 {
+            let fp = build(&phg, &mut sc, 16.0, 3).unwrap();
+            flow_cutter(&mut sc, &fp, phg.max_block_weight(0), phg.max_block_weight(1))
+                .expect("improvement exists");
+        }
+        assert_eq!(sc.structural_allocs(), allocs);
     }
 }

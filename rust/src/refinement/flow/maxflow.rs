@@ -23,19 +23,63 @@ pub struct FlowEdge {
     pub flow: i64,
 }
 
+/// Reusable push-relabel working state (excess, distance labels, FIFO of
+/// active nodes). Owned by the per-worker `FlowScratch` so the repeated
+/// max-preflow calls of one FlowCutter run — and of every subsequent block
+/// pair handled by the same worker — stop allocating these vectors.
+#[derive(Debug, Default)]
+pub struct PreflowScratch {
+    excess: Vec<i64>,
+    dist: Vec<u32>,
+    active: VecDeque<usize>,
+    in_queue: Vec<bool>,
+}
+
+impl PreflowScratch {
+    fn prepare(&mut self, n: usize) {
+        self.excess.clear();
+        self.excess.resize(n, 0);
+        self.dist.clear();
+        self.dist.resize(n, u32::MAX);
+        self.active.clear();
+        self.in_queue.clear();
+        self.in_queue.resize(n, false);
+    }
+}
+
 /// Residual flow network over `n` nodes.
+///
+/// The adjacency storage may hold capacity for more nodes than are live
+/// (`reset` keeps the outer vector and every per-node edge list alive
+/// across block pairs); only the first `n` entries are addressed.
 #[derive(Clone, Debug, Default)]
 pub struct FlowNetwork {
     pub edges: Vec<Vec<FlowEdge>>,
+    n: usize,
 }
 
 impl FlowNetwork {
     pub fn new(n: usize) -> Self {
-        FlowNetwork { edges: vec![Vec::new(); n] }
+        FlowNetwork { edges: vec![Vec::new(); n], n }
     }
 
     pub fn num_nodes(&self) -> usize {
-        self.edges.len()
+        self.n
+    }
+
+    /// Re-point the network at `n` nodes, keeping all edge-list capacity.
+    /// Returns `true` when the outer adjacency vector had to grow (the
+    /// event the flow workspace counts as a structural allocation).
+    pub fn reset(&mut self, n: usize) -> bool {
+        let grew = n > self.edges.len();
+        if grew {
+            self.edges.resize_with(n, Vec::new);
+        }
+        for list in &mut self.edges[..n] {
+            list.clear();
+        }
+        self.n = n;
+        grew
     }
 
     /// Add a directed edge `u → v` with capacity `cap` (reverse gets 0).
@@ -81,11 +125,24 @@ impl FlowNetwork {
 
     /// Augment the current flow to a maximum preflow w.r.t. the terminal
     /// sets (paper: a maximum preflow already induces the min sink-side
-    /// cut). Returns the flow value.
+    /// cut). Returns the flow value. Convenience wrapper over
+    /// [`Self::max_preflow_with`] allocating throwaway scratch.
     pub fn max_preflow(&mut self, source: &[bool], sink: &[bool]) -> i64 {
+        self.max_preflow_with(source, sink, &mut PreflowScratch::default())
+    }
+
+    /// Maximum preflow on caller-provided working state (zero allocations
+    /// once the scratch reached the network's size).
+    pub fn max_preflow_with(
+        &mut self,
+        source: &[bool],
+        sink: &[bool],
+        scratch: &mut PreflowScratch,
+    ) -> i64 {
         let n = self.num_nodes();
         debug_assert_eq!(source.len(), n);
-        let mut excess = vec![0i64; n];
+        scratch.prepare(n);
+        let excess = &mut scratch.excess;
         // saturate all edges leaving sources (their excess is implicit)
         for u in 0..n {
             if source[u] {
@@ -115,11 +172,11 @@ impl FlowNetwork {
         }
 
         // exact distance labels from the sink set (global relabel)
-        let mut d = vec![u32::MAX; n];
-        self.global_relabel(&mut d, source, sink);
+        let d = &mut scratch.dist;
+        self.global_relabel(d, source, sink);
 
-        let mut active: VecDeque<usize> = VecDeque::new();
-        let mut in_queue = vec![false; n];
+        let active = &mut scratch.active;
+        let in_queue = &mut scratch.in_queue;
         for u in 0..n {
             if !source[u] && !sink[u] && excess[u] > 0 && d[u] != u32::MAX {
                 active.push_back(u);
@@ -128,7 +185,12 @@ impl FlowNetwork {
         }
         let nmax = n as u32;
         let mut work = 0u64;
-        let relabel_budget = 6 * n as u64 + self.edges.iter().map(Vec::len).sum::<usize>() as u64;
+        // budget over the LIVE prefix only: the pooled adjacency may hold
+        // stale edge lists beyond `n` from a larger earlier problem, and
+        // counting them would inflate the budget until the periodic
+        // global relabel never fires for small pairs
+        let relabel_budget =
+            6 * n as u64 + self.edges[..n].iter().map(Vec::len).sum::<usize>() as u64;
 
         while let Some(u) = active.pop_front() {
             in_queue[u] = false;
@@ -191,7 +253,7 @@ impl FlowNetwork {
                 // periodic global relabeling
                 if work > relabel_budget {
                     work = 0;
-                    self.global_relabel(&mut d, source, sink);
+                    self.global_relabel(d, source, sink);
                     if d[u] == u32::MAX {
                         d[u] = nmax;
                         break;
@@ -228,8 +290,16 @@ impl FlowNetwork {
     /// the forward BFS from active excess nodes finds the reverse paths
     /// carrying flow from the source — flow decomposition avoided).
     pub fn source_side(&self, source: &[bool], sink: &[bool]) -> Vec<bool> {
+        let mut side = Vec::new();
+        self.source_side_into(source, sink, &mut side);
+        side
+    }
+
+    /// [`Self::source_side`] writing into a reusable buffer.
+    pub fn source_side_into(&self, source: &[bool], sink: &[bool], side: &mut Vec<bool>) {
         let n = self.num_nodes();
-        let mut side = vec![false; n];
+        side.clear();
+        side.resize(n, false);
         let mut q: VecDeque<usize> = VecDeque::new();
         // seeds: sources and non-sink nodes with positive excess
         for u in 0..n {
@@ -254,14 +324,21 @@ impl FlowNetwork {
                 }
             }
         }
-        side
     }
 
     /// Sink-side cut: nodes that reach the sink set via residual edges
     /// (reverse residual BFS).
     pub fn sink_side(&self, source: &[bool], sink: &[bool]) -> Vec<bool> {
+        let mut side = Vec::new();
+        self.sink_side_into(source, sink, &mut side);
+        side
+    }
+
+    /// [`Self::sink_side`] writing into a reusable buffer.
+    pub fn sink_side_into(&self, source: &[bool], sink: &[bool], side: &mut Vec<bool>) {
         let n = self.num_nodes();
-        let mut side = vec![false; n];
+        side.clear();
+        side.resize(n, false);
         let mut q: VecDeque<usize> = VecDeque::new();
         for u in 0..n {
             if sink[u] {
@@ -279,7 +356,6 @@ impl FlowNetwork {
                 }
             }
         }
-        side
     }
 }
 
@@ -384,6 +460,43 @@ mod tests {
             assert!(!(src_side[u] && snk_side[u]), "node {u} on both sides");
         }
         assert!(src_side[0] && snk_side[4]);
+    }
+
+    #[test]
+    fn reset_reuses_capacity_and_recomputes() {
+        let mut net = FlowNetwork::new(4);
+        net.add_edge(0, 1, 2);
+        net.add_edge(1, 3, 2);
+        let (s, t) = terminals(4, &[0], &[3]);
+        assert_eq!(net.max_preflow(&s, &t), 2);
+        // re-point at a smaller problem: no growth, clean state
+        assert!(!net.reset(3));
+        assert_eq!(net.num_nodes(), 3);
+        net.add_edge(0, 1, 1);
+        net.add_edge(1, 2, 5);
+        let (s, t) = terminals(3, &[0], &[2]);
+        assert_eq!(net.max_preflow(&s, &t), 1);
+        // growth past the allocated capacity is reported
+        assert!(net.reset(8));
+        assert!(!net.reset(4), "shrinking within capacity must not grow");
+    }
+
+    #[test]
+    fn preflow_scratch_reuse_matches_fresh() {
+        let mut scratch = PreflowScratch::default();
+        for seed in 0..4u64 {
+            let mut a = FlowNetwork::new(5);
+            let caps = [1 + seed as i64, 2, 3, 1 + (seed % 2) as i64];
+            a.add_edge(0, 1, caps[0]);
+            a.add_edge(1, 4, caps[1]);
+            a.add_edge(0, 2, caps[2]);
+            a.add_edge(2, 4, caps[3]);
+            let mut b = a.clone();
+            let (s, t) = terminals(5, &[0], &[4]);
+            let fresh = a.max_preflow(&s, &t);
+            let pooled = b.max_preflow_with(&s, &t, &mut scratch);
+            assert_eq!(fresh, pooled, "seed {seed}");
+        }
     }
 
     #[test]

@@ -2,68 +2,128 @@
 //! `B = B₁ ∪ B₂` around the cut nets of a block pair via two BFSs, then
 //! build the Lawler expansion with all nodes outside `B` contracted into
 //! the source / sink.
+//!
+//! All level-sized state (visited marks, the region vectors, the Lawler
+//! network) lives in the caller's [`FlowScratch`]; the cut nets of the
+//! pair come from the scheduler's quotient graph via `scratch.pair_nets`
+//! instead of an O(m) scan over all nets.
 
-use super::maxflow::FlowNetwork;
+use super::scratch::FlowScratch;
 use crate::partition::PartitionedHypergraph;
-use crate::{BlockId, NodeId, NodeWeight};
-use std::collections::VecDeque;
+use crate::{BlockId, EdgeId, NodeId, NodeWeight};
 
-/// The extracted flow problem for one block pair.
+/// The scalar outcome of a region construction; the region itself
+/// (nodes, distances, sides, weights, Lawler network) stays in the
+/// [`FlowScratch`] the problem was built on.
 pub struct FlowProblem {
-    pub net: FlowNetwork,
-    /// region hypernodes (parent ids); flow-node id = 2 + index
-    pub region: Vec<NodeId>,
-    /// BFS distance of each region node from the cut (piercing heuristic)
-    pub distance: Vec<u32>,
-    /// original side of each region node (true = block b1)
-    pub side: Vec<bool>,
-    /// node weights aligned with `region`
-    pub weight: Vec<NodeWeight>,
     /// total weight contracted into the source (block `b1` outside B)
     pub source_weight: NodeWeight,
     /// total weight contracted into the sink (block `b2` outside B)
     pub sink_weight: NodeWeight,
     /// weight of region nets currently cut between b1 and b2
     pub initial_cut: i64,
-    pub b1: BlockId,
-    pub b2: BlockId,
+}
+
+/// Region growth parameters. `max_w1`/`max_w2` are the blocks' *actual*
+/// weight limits — non-uniform limits installed via `set_max_weights`
+/// (the V-cycle explicit-limit path) shape the region exactly like the
+/// balance check that later accepts the moves, instead of a bound
+/// re-derived from the global ε.
+pub struct RegionConfig {
+    /// region scaling factor α (§8.2)
+    pub alpha: f64,
+    /// max BFS hop distance from the cut δ (§8.2)
+    pub max_distance: usize,
+    pub max_w1: NodeWeight,
+    pub max_w2: NodeWeight,
+}
+
+impl RegionConfig {
+    /// The configuration flow refinement uses for one block pair.
+    pub fn for_pair(
+        phg: &PartitionedHypergraph,
+        alpha: f64,
+        max_distance: usize,
+        b1: BlockId,
+        b2: BlockId,
+    ) -> Self {
+        RegionConfig {
+            alpha,
+            max_distance,
+            max_w1: phg.max_block_weight(b1),
+            max_w2: phg.max_block_weight(b2),
+        }
+    }
 }
 
 pub const SOURCE: u32 = 0;
 pub const SINK: u32 = 1;
 
-/// Grow the region for blocks `(b1, b2)` (paper §8.2): BFS from the
-/// boundary nodes of each block, bounded by `(1+αε)·⌈c(V₁∪V₂)/2⌉ −
-/// c(other block)` and by hop distance δ.
+/// Cut nets between a block pair by brute force (tests and standalone
+/// callers; the scheduler hands workers the quotient graph's incremental
+/// candidate lists instead).
+pub fn cut_nets_between(
+    phg: &PartitionedHypergraph,
+    b1: BlockId,
+    b2: BlockId,
+) -> Vec<EdgeId> {
+    phg.hypergraph()
+        .nets()
+        .filter(|&e| phg.pin_count(e, b1) > 0 && phg.pin_count(e, b2) > 0)
+        .collect()
+}
+
+/// Grow the region for blocks `(b1, b2)` (paper §8.2) from the cut-net
+/// candidates in `scratch.pair_nets`: BFS from the boundary nodes of each
+/// block, bounded by `⌈c(V₁∪V₂)/2⌉ + α·(L_max(b) − ⌈c(V₁∪V₂)/2⌉) −
+/// c(other block)` — the paper's `(1+αε)`-scaled bound generalized to the
+/// blocks' actual weight limits — and by hop distance δ. Stale or
+/// duplicated candidates are skipped (each net is re-checked against the
+/// current pin counts).
+// indexed loops: the bodies call `&mut self` mark methods on the scratch
+// that owns the iterated vectors, so iterator-style borrows cannot work
+#[allow(clippy::needless_range_loop)]
 pub fn construct_region(
     phg: &PartitionedHypergraph,
     b1: BlockId,
     b2: BlockId,
-    alpha: f64,
-    eps: f64,
-    max_distance: usize,
+    cfg: &RegionConfig,
+    sc: &mut FlowScratch,
 ) -> Option<FlowProblem> {
     let hg = phg.hypergraph();
+    sc.ensure(hg.num_nodes(), hg.num_nets());
+    sc.region.clear();
+    sc.distance.clear();
+    sc.side.clear();
+    sc.weight.clear();
+    sc.nets.clear();
+    sc.frontier1.clear();
+    sc.frontier2.clear();
+
     // cut nets between the pair and their boundary pins
-    let mut frontier1: Vec<NodeId> = Vec::new();
-    let mut frontier2: Vec<NodeId> = Vec::new();
+    let seed_gen = sc.next_node_gen();
+    let cand_gen = sc.next_net_gen();
     let mut initial_cut = 0i64;
-    let mut seen_node = vec![false; hg.num_nodes()];
-    for e in hg.nets() {
-        if phg.pin_count(e, b1) > 0 && phg.pin_count(e, b2) > 0 {
-            initial_cut += hg.net_weight(e);
-            for &p in hg.pins(e) {
-                if seen_node[p as usize] {
-                    continue;
-                }
-                let bp = phg.block_of(p);
-                if bp == b1 {
-                    seen_node[p as usize] = true;
-                    frontier1.push(p);
-                } else if bp == b2 {
-                    seen_node[p as usize] = true;
-                    frontier2.push(p);
-                }
+    for i in 0..sc.pair_nets.len() {
+        let e = sc.pair_nets[i];
+        if !sc.mark_net(e, cand_gen) {
+            continue; // duplicate candidate
+        }
+        if phg.pin_count(e, b1) == 0 || phg.pin_count(e, b2) == 0 {
+            continue; // stale candidate: no longer cut between the pair
+        }
+        initial_cut += hg.net_weight(e);
+        for &p in hg.pins(e) {
+            if sc.node_marked(p, seed_gen) {
+                continue;
+            }
+            let bp = phg.block_of(p);
+            if bp == b1 {
+                sc.mark_node(p, seed_gen);
+                sc.frontier1.push(p);
+            } else if bp == b2 {
+                sc.mark_node(p, seed_gen);
+                sc.frontier2.push(p);
             }
         }
     }
@@ -72,86 +132,60 @@ pub fn construct_region(
     }
 
     let pair_weight = phg.block_weight(b1) + phg.block_weight(b2);
-    let half = (pair_weight as f64 / 2.0).ceil();
-    let cap1 = ((1.0 + alpha * eps) * half) as NodeWeight - phg.block_weight(b2);
-    let cap2 = ((1.0 + alpha * eps) * half) as NodeWeight - phg.block_weight(b1);
+    let half = (pair_weight as f64 / 2.0).ceil() as NodeWeight;
+    // α-scaled slack from each block's actual limit (ε-free §8.2 bound).
+    // The b1-side region is the weight that could move *into* b2, so its
+    // cap relaxes b2's limit — and vice versa: growing B₁ until
+    // c(V₂) + c(B₁) ≤ ⌈pair/2⌉ + α·(L_max(b2) − ⌈pair/2⌉) generalizes the
+    // paper's (1+αε)·⌈pair/2⌉ bound to explicit per-block limits.
+    let slack1 = (cfg.alpha * (cfg.max_w2 - half).max(0) as f64) as NodeWeight;
+    let slack2 = (cfg.alpha * (cfg.max_w1 - half).max(0) as f64) as NodeWeight;
+    let cap1 = half + slack1 - phg.block_weight(b2);
+    let cap2 = half + slack2 - phg.block_weight(b1);
 
-    // BFS per side, bounded by weight capacity and hop distance
-    let mut region: Vec<NodeId> = Vec::new();
-    let mut distance: Vec<u32> = Vec::new();
-    let mut side: Vec<bool> = Vec::new();
-    let mut grow = |frontier: &[NodeId], block: BlockId, cap: NodeWeight| {
-        let mut w_acc: NodeWeight = 0;
-        let mut q: VecDeque<(NodeId, u32)> = VecDeque::new();
-        let mut visited = vec![false; hg.num_nodes()];
-        for &u in frontier {
-            visited[u as usize] = true;
-            q.push_back((u, 0));
-        }
-        while let Some((u, dist)) = q.pop_front() {
-            if w_acc + hg.node_weight(u) > cap {
-                continue;
-            }
-            w_acc += hg.node_weight(u);
-            region.push(u);
-            distance.push(dist);
-            side.push(block == b1);
-            if dist as usize >= max_distance {
-                continue;
-            }
-            for &e in hg.incident_nets(u) {
-                for &v in hg.pins(e) {
-                    if !visited[v as usize] && phg.block_of(v) == block {
-                        visited[v as usize] = true;
-                        q.push_back((v, dist + 1));
-                    }
-                }
-            }
-        }
-        w_acc
-    };
-    let w1 = grow(&frontier1, b1, cap1.max(0));
-    let w2 = grow(&frontier2, b2, cap2.max(0));
-    if region.is_empty() {
+    let w1 = grow_side(phg, sc, true, b1, cap1.max(0), cfg.max_distance);
+    let w2 = grow_side(phg, sc, false, b2, cap2.max(0), cfg.max_distance);
+    if sc.region.is_empty() {
         return None;
     }
 
     // Lawler expansion over the region's nets
-    let mut flow_id = vec![u32::MAX; hg.num_nodes()];
-    for (i, &u) in region.iter().enumerate() {
-        flow_id[u as usize] = 2 + i as u32;
+    let region_gen = sc.next_node_gen();
+    for i in 0..sc.region.len() {
+        let u = sc.region[i];
+        sc.mark_node(u, region_gen);
+        sc.flow_node[u as usize] = 2 + i as u32;
     }
     // collect nets incident to the region with ≥1 pin in {b1, b2}
-    let mut net_seen = vec![false; hg.num_nets()];
-    let mut nets: Vec<crate::EdgeId> = Vec::new();
-    for &u in &region {
+    let net_gen = sc.next_net_gen();
+    for i in 0..sc.region.len() {
+        let u = sc.region[i];
         for &e in hg.incident_nets(u) {
-            if !net_seen[e as usize] {
-                net_seen[e as usize] = true;
-                // only nets relevant to the pair
-                if phg.pin_count(e, b1) > 0 || phg.pin_count(e, b2) > 0 {
-                    nets.push(e);
-                }
+            if sc.mark_net(e, net_gen)
+                && (phg.pin_count(e, b1) > 0 || phg.pin_count(e, b2) > 0)
+            {
+                sc.nets.push(e);
             }
         }
     }
 
-    let num_flow_nodes = 2 + region.len() + 2 * nets.len();
-    let mut net_flow = FlowNetwork::new(num_flow_nodes);
-    let e_in_base = (2 + region.len()) as u32;
-    for (j, &e) in nets.iter().enumerate() {
+    let num_flow_nodes = 2 + sc.region.len() + 2 * sc.nets.len();
+    sc.reset_network(num_flow_nodes);
+    let e_in_base = (2 + sc.region.len()) as u32;
+    for j in 0..sc.nets.len() {
+        let e = sc.nets[j];
         let w = hg.net_weight(e);
         let e_in = e_in_base + 2 * j as u32;
         let e_out = e_in + 1;
-        net_flow.add_edge(e_in, e_out, w); // bridging edge
+        sc.net.add_edge(e_in, e_out, w); // bridging edge
         let mut touches_source = false;
         let mut touches_sink = false;
         for &p in hg.pins(e) {
-            let fid = flow_id[p as usize];
-            if fid != u32::MAX {
+            if sc.node_marked(p, region_gen) {
                 // bounded pin edges (paper's ω(e) optimization)
-                net_flow.add_edge(fid, e_in, w);
-                net_flow.add_edge(e_out, fid, w);
+                let fid = sc.flow_node[p as usize];
+                sc.net.add_edge(fid, e_in, w);
+                sc.net.add_edge(e_out, fid, w);
             } else {
                 let bp = phg.block_of(p);
                 if bp == b1 {
@@ -163,28 +197,66 @@ pub fn construct_region(
             }
         }
         if touches_source {
-            net_flow.add_edge(SOURCE, e_in, w);
-            net_flow.add_edge(e_out, SOURCE, w);
+            sc.net.add_edge(SOURCE, e_in, w);
+            sc.net.add_edge(e_out, SOURCE, w);
         }
         if touches_sink {
-            net_flow.add_edge(SINK, e_in, w);
-            net_flow.add_edge(e_out, SINK, w);
+            sc.net.add_edge(SINK, e_in, w);
+            sc.net.add_edge(e_out, SINK, w);
         }
     }
 
-    let weight: Vec<NodeWeight> = region.iter().map(|&u| hg.node_weight(u)).collect();
     Some(FlowProblem {
-        net: net_flow,
         source_weight: phg.block_weight(b1) - w1,
         sink_weight: phg.block_weight(b2) - w2,
-        region,
-        distance,
-        side,
-        weight,
         initial_cut,
-        b1,
-        b2,
     })
+}
+
+/// One side's bounded BFS (from `frontier1` when `first_side`, else
+/// `frontier2`); appends to the region vectors, returns the grown weight.
+#[allow(clippy::needless_range_loop)] // body calls `&mut sc` mark methods
+fn grow_side(
+    phg: &PartitionedHypergraph,
+    sc: &mut FlowScratch,
+    first_side: bool,
+    block: BlockId,
+    cap: NodeWeight,
+    max_distance: usize,
+) -> NodeWeight {
+    let hg = phg.hypergraph();
+    let gen = sc.next_node_gen();
+    sc.bfs.clear();
+    let frontier_len = if first_side { sc.frontier1.len() } else { sc.frontier2.len() };
+    for i in 0..frontier_len {
+        let u = if first_side { sc.frontier1[i] } else { sc.frontier2[i] };
+        sc.mark_node(u, gen);
+        sc.bfs.push_back((u, 0));
+    }
+    let mut w_acc: NodeWeight = 0;
+    while let Some((u, dist)) = sc.bfs.pop_front() {
+        let w = hg.node_weight(u);
+        if w_acc + w > cap {
+            continue;
+        }
+        w_acc += w;
+        sc.region.push(u);
+        sc.distance.push(dist);
+        sc.side.push(first_side);
+        sc.weight.push(w);
+        if dist as usize >= max_distance {
+            continue;
+        }
+        for &e in hg.incident_nets(u) {
+            for &v in hg.pins(e) {
+                if !sc.node_marked(v, gen) && phg.block_of(v) == block {
+                    sc.mark_node(v, gen);
+                    sc.bfs.push_back((v, dist + 1));
+                }
+            }
+        }
+    }
+    w_acc
 }
 
 #[cfg(test)]
@@ -207,16 +279,28 @@ mod tests {
         phg
     }
 
+    fn build(
+        phg: &PartitionedHypergraph,
+        sc: &mut FlowScratch,
+        alpha: f64,
+        dist: usize,
+    ) -> Option<FlowProblem> {
+        sc.pair_nets = cut_nets_between(phg, 0, 1);
+        let cfg = RegionConfig::for_pair(phg, alpha, dist, 0, 1);
+        construct_region(phg, 0, 1, &cfg, sc)
+    }
+
     #[test]
     fn region_grows_around_cut() {
         let phg = setup();
-        let fp = construct_region(&phg, 0, 1, 16.0, 0.03, 2).unwrap();
+        let mut sc = FlowScratch::default();
+        let fp = build(&phg, &mut sc, 16.0, 2).unwrap();
         assert_eq!(fp.initial_cut, 1); // net {3,4}
         // boundary nodes 3 (block 0) and 4 (block 1) plus ≤2 hops
-        assert!(fp.region.contains(&3) && fp.region.contains(&4));
-        assert!(fp.distance.iter().all(|&d| d <= 2));
+        assert!(sc.region.contains(&3) && sc.region.contains(&4));
+        assert!(sc.distance.iter().all(|&d| d <= 2));
         // weights accounted: region + contracted = blocks
-        let region_w: i64 = fp.weight.iter().sum();
+        let region_w: i64 = sc.weight.iter().sum();
         assert_eq!(
             region_w + fp.source_weight + fp.sink_weight,
             phg.block_weight(0) + phg.block_weight(1)
@@ -226,13 +310,14 @@ mod tests {
     #[test]
     fn min_cut_on_network_equals_hyperedge_cut() {
         let phg = setup();
-        let mut fp = construct_region(&phg, 0, 1, 16.0, 0.03, 2).unwrap();
-        let n = fp.net.num_nodes();
+        let mut sc = FlowScratch::default();
+        build(&phg, &mut sc, 16.0, 2).unwrap();
+        let n = sc.net.num_nodes();
         let mut src = vec![false; n];
         let mut snk = vec![false; n];
         src[SOURCE as usize] = true;
         snk[SINK as usize] = true;
-        let f = fp.net.max_preflow(&src, &snk);
+        let f = sc.net.max_preflow(&src, &snk);
         assert_eq!(f, 1, "chain min cut is one net");
     }
 
@@ -242,6 +327,53 @@ mod tests {
         let mut phg = PartitionedHypergraph::new(hg, 2);
         phg.set_uniform_max_weight(0.5);
         phg.assign_all(&[0, 0, 1, 1], 1);
-        assert!(construct_region(&phg, 0, 1, 16.0, 0.03, 2).is_none());
+        let mut sc = FlowScratch::default();
+        assert!(build(&phg, &mut sc, 16.0, 2).is_none());
+    }
+
+    #[test]
+    fn stale_and_duplicate_candidates_are_ignored() {
+        let phg = setup();
+        let mut sc = FlowScratch::default();
+        // candidate list with a duplicate and a non-cut net (net 0 = {0,1})
+        sc.pair_nets = vec![3, 3, 0];
+        let cfg = RegionConfig::for_pair(&phg, 16.0, 2, 0, 1);
+        let fp = construct_region(&phg, 0, 1, &cfg, &mut sc).unwrap();
+        assert_eq!(fp.initial_cut, 1, "net 3 counted once, net 0 skipped");
+    }
+
+    #[test]
+    fn repeated_construction_reuses_all_structures() {
+        let phg = setup();
+        let mut sc = FlowScratch::default();
+        build(&phg, &mut sc, 16.0, 2).unwrap();
+        let allocs = sc.structural_allocs();
+        for _ in 0..5 {
+            build(&phg, &mut sc, 16.0, 2).unwrap();
+        }
+        assert_eq!(
+            sc.structural_allocs(),
+            allocs,
+            "repeated regions on one scratch must not allocate"
+        );
+    }
+
+    #[test]
+    fn explicit_limits_shape_the_region_caps() {
+        // a pair with wildly asymmetric explicit limits: no region may
+        // grow toward the tight block, while the side movable into the
+        // loose block keeps growing — the ε-free bound tracks the actual
+        // limits rather than a global ε
+        let phg = setup();
+        let mut sc = FlowScratch::default();
+        sc.pair_nets = cut_nets_between(&phg, 0, 1);
+        let cfg = RegionConfig { alpha: 1.0, max_distance: 3, max_w1: 4, max_w2: 8 };
+        let fp = construct_region(&phg, 0, 1, &cfg, &mut sc).unwrap();
+        // cap2 = 4 + 1·(max_w1−4) − c(V₁) = 4 + 0 − 4 = 0: block 1's side
+        // (the weight that could move into the tight block 0) stays empty
+        assert!(sc.side.iter().all(|&s| s), "only the b1 side may grow");
+        assert_eq!(fp.sink_weight, phg.block_weight(1));
+        // cap1 = 4 + 1·(max_w2−4) − c(V₂) = 4 → block 0's side grows
+        assert_eq!(sc.weight.iter().sum::<i64>(), 4);
     }
 }

@@ -1,0 +1,312 @@
+//! The quotient graph over the blocks of a partition (paper §8.1).
+//!
+//! Flow refinement schedules block *pairs*; the pairs worth scheduling
+//! are the edges of the quotient graph — pairs connected by at least one
+//! cut net. The former implementation rediscovered adjacency with an
+//! O(m) net scan per pair per round (O(k²·m) per round). This structure
+//! instead enumerates every net's connectivity set Λ(e) **once** per
+//! `flow_refine` call (O(Σ_e |Λ(e)|²), with |Λ(e)| ≪ k in practice) and
+//! keeps, per pair, the list of cut-net candidates; afterwards the lists
+//! are maintained *incrementally* from the moves flow refinement applies,
+//! so no further net scans happen for the rest of the call.
+//!
+//! Candidate lists are conservative: a net stays listed after moves made
+//! it uncut for its pair, and incremental additions may duplicate build
+//! entries. Both are cleaned up by [`QuotientGraph::compact_pair`], which
+//! the scheduler runs when it hands a pair to a worker — each net is
+//! re-checked against the current pin counts there, so stale entries cost
+//! O(1) and never affect correctness.
+
+use super::scratch::StampMarks;
+use crate::partition::PartitionedHypergraph;
+use crate::{BlockId, EdgeId, NodeId};
+
+/// Λ-derived block-pair adjacency with per-pair cut-net candidate lists.
+pub struct QuotientGraph {
+    k: usize,
+    /// upper-triangle pair → cut-net candidates (possibly stale/duplicated)
+    cut_nets: Vec<Vec<EdgeId>>,
+    /// decoded blocks per pair index
+    pairs: Vec<(BlockId, BlockId)>,
+    /// generation-stamped per-net dedup marks
+    net_marks: StampMarks,
+    /// Λ(e) enumeration buffer
+    block_buf: Vec<BlockId>,
+    builds: usize,
+    structural_allocs: usize,
+}
+
+impl QuotientGraph {
+    pub fn new(k: usize) -> Self {
+        let mut pairs = Vec::with_capacity(k * k.saturating_sub(1) / 2);
+        for b1 in 0..k as BlockId {
+            for b2 in b1 + 1..k as BlockId {
+                pairs.push((b1, b2));
+            }
+        }
+        QuotientGraph {
+            k,
+            cut_nets: pairs.iter().map(|_| Vec::new()).collect(),
+            pairs,
+            net_marks: StampMarks::default(),
+            block_buf: Vec::new(),
+            builds: 0,
+            structural_allocs: 0,
+        }
+    }
+
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    pub fn num_pairs(&self) -> usize {
+        self.pairs.len()
+    }
+
+    /// Upper-triangle index of the pair `(b1, b2)`, `b1 < b2`.
+    #[inline]
+    pub fn pair_index(k: usize, b1: BlockId, b2: BlockId) -> usize {
+        debug_assert!(b1 < b2 && (b2 as usize) < k);
+        let (b1, b2) = (b1 as usize, b2 as usize);
+        b1 * k - b1 * (b1 + 1) / 2 + (b2 - b1 - 1)
+    }
+
+    /// The blocks of pair index `p`.
+    #[inline]
+    pub fn pair_blocks(&self, p: usize) -> (BlockId, BlockId) {
+        self.pairs[p]
+    }
+
+    /// Size the per-net stamp array (counted growth, free re-use).
+    pub fn ensure_nets(&mut self, m: usize) {
+        if self.net_marks.ensure(m) {
+            self.structural_allocs += 1;
+        }
+    }
+
+    /// Rebuild all candidate lists from the connectivity sets: one pass
+    /// over the nets, enumerating Λ(e) per net — **no per-pair scans**.
+    pub fn build(&mut self, phg: &PartitionedHypergraph) {
+        debug_assert_eq!(phg.k(), self.k);
+        let hg = phg.hypergraph();
+        self.ensure_nets(hg.num_nets());
+        for list in &mut self.cut_nets {
+            list.clear();
+        }
+        for e in hg.nets() {
+            if phg.connectivity(e) <= 1 {
+                continue;
+            }
+            self.block_buf.clear();
+            self.block_buf.extend(phg.connectivity_set(e));
+            // Λ iteration is ascending, so (buf[i], buf[j]) is ordered
+            for i in 0..self.block_buf.len() {
+                for j in i + 1..self.block_buf.len() {
+                    let p =
+                        Self::pair_index(self.k, self.block_buf[i], self.block_buf[j]);
+                    self.cut_nets[p].push(e);
+                }
+            }
+        }
+        self.builds += 1;
+    }
+
+    /// Is the pair adjacent according to the candidate lists? Exact right
+    /// after [`Self::build`]; afterwards a cheap over-approximation
+    /// (stale candidates are filtered by [`Self::compact_pair`]).
+    pub fn is_adjacent(&self, b1: BlockId, b2: BlockId) -> bool {
+        let (a, b) = if b1 < b2 { (b1, b2) } else { (b2, b1) };
+        !self.cut_nets[Self::pair_index(self.k, a, b)].is_empty()
+    }
+
+    /// Current candidate list of a pair (tests/diagnostics).
+    pub fn cut_net_candidates(&self, b1: BlockId, b2: BlockId) -> &[EdgeId] {
+        let (a, b) = if b1 < b2 { (b1, b2) } else { (b2, b1) };
+        &self.cut_nets[Self::pair_index(self.k, a, b)]
+    }
+
+    /// Incremental maintenance after flow refinement applied `moves`
+    /// between `b1` and `b2`: every net incident to a moved node may now
+    /// connect `b1`/`b2` with further blocks, so it is (re-)listed for all
+    /// pairs {b1, b2} × Λ(e). Only candidate *additions* are needed —
+    /// removals stay lazy — and only pairs involving the two touched
+    /// blocks can change, so the update is O(applied · degree · |Λ|).
+    pub fn note_moves(
+        &mut self,
+        phg: &PartitionedHypergraph,
+        b1: BlockId,
+        b2: BlockId,
+        applied: &[(NodeId, BlockId)],
+    ) {
+        let hg = phg.hypergraph();
+        let stamp = self.net_marks.next_gen();
+        for &(u, _) in applied {
+            for &e in hg.incident_nets(u) {
+                if !self.net_marks.mark_first(e as usize, stamp) {
+                    continue; // net already handled for this move set
+                }
+                if phg.connectivity(e) <= 1 {
+                    continue;
+                }
+                self.block_buf.clear();
+                self.block_buf.extend(phg.connectivity_set(e));
+                let has1 = self.block_buf.contains(&b1);
+                let has2 = self.block_buf.contains(&b2);
+                let (k, block_buf, cut_nets) = (self.k, &self.block_buf, &mut self.cut_nets);
+                for &b in block_buf {
+                    if has1 && b != b1 {
+                        let (x, y) = if b < b1 { (b, b1) } else { (b1, b) };
+                        cut_nets[Self::pair_index(k, x, y)].push(e);
+                    }
+                    // `b == b1` would re-add the (b1, b2) pair the first
+                    // branch already covers via `b == b2`
+                    if has2 && b != b2 && b != b1 {
+                        let (x, y) = if b < b2 { (b, b2) } else { (b2, b) };
+                        cut_nets[Self::pair_index(k, x, y)].push(e);
+                    }
+                }
+            }
+        }
+    }
+
+    /// Deduplicate pair `p`'s candidates, drop nets no longer cut between
+    /// the pair, and copy the compacted list into `out`. Returns the
+    /// number of live cut nets.
+    pub fn compact_pair(
+        &mut self,
+        phg: &PartitionedHypergraph,
+        p: usize,
+        out: &mut Vec<EdgeId>,
+    ) -> usize {
+        let (b1, b2) = self.pairs[p];
+        let stamp = self.net_marks.next_gen();
+        let net_marks = &mut self.net_marks;
+        self.cut_nets[p].retain(|&e| {
+            if !net_marks.mark_first(e as usize, stamp) {
+                return false; // duplicate candidate
+            }
+            phg.pin_count(e, b1) > 0 && phg.pin_count(e, b2) > 0
+        });
+        out.clear();
+        out.extend_from_slice(&self.cut_nets[p]);
+        out.len()
+    }
+
+    /// How often the candidate lists were rebuilt from a full Λ
+    /// enumeration (exactly once per `flow_refine` call).
+    pub fn builds(&self) -> usize {
+        self.builds
+    }
+
+    pub fn structural_allocs(&self) -> usize {
+        self.structural_allocs
+    }
+}
+
+/// Brute-force adjacency oracle (the pre-quotient-graph O(m) scan): do
+/// blocks `b1` and `b2` share a cut net? Kept for tests and diagnostics —
+/// the refinement hot path must never call this per pair.
+pub fn blocks_adjacent(phg: &PartitionedHypergraph, b1: BlockId, b2: BlockId) -> bool {
+    phg.hypergraph()
+        .nets()
+        .any(|e| phg.pin_count(e, b1) > 0 && phg.pin_count(e, b2) > 0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::generators::{planted_hypergraph, PlantedParams};
+    use crate::util::Rng;
+    use std::sync::Arc;
+
+    #[test]
+    fn pair_index_is_a_bijection() {
+        for k in [2usize, 3, 5, 9] {
+            let qg = QuotientGraph::new(k);
+            let mut seen = vec![false; qg.num_pairs()];
+            for b1 in 0..k as BlockId {
+                for b2 in b1 + 1..k as BlockId {
+                    let p = QuotientGraph::pair_index(k, b1, b2);
+                    assert!(!seen[p], "k={k}: index {p} reused");
+                    seen[p] = true;
+                    assert_eq!(qg.pair_blocks(p), (b1, b2));
+                }
+            }
+            assert!(seen.iter().all(|&s| s));
+        }
+    }
+
+    #[test]
+    fn build_matches_brute_force_oracle() {
+        for seed in 0..8u64 {
+            let k = 2 + (seed % 4) as usize;
+            let p = PlantedParams { n: 120, m: 240, blocks: k, ..Default::default() };
+            let hg = Arc::new(planted_hypergraph(&p, seed));
+            let n = hg.num_nodes();
+            let mut rng = Rng::new(seed ^ 0x77);
+            let parts: Vec<BlockId> =
+                (0..n).map(|_| rng.next_below(k) as BlockId).collect();
+            let phg = crate::partition::PartitionedHypergraph::new(hg, k);
+            phg.assign_all(&parts, 1);
+            let mut qg = QuotientGraph::new(k);
+            qg.build(&phg);
+            for b1 in 0..k as BlockId {
+                for b2 in b1 + 1..k as BlockId {
+                    assert_eq!(
+                        qg.is_adjacent(b1, b2),
+                        blocks_adjacent(&phg, b1, b2),
+                        "seed {seed}: pair ({b1},{b2})"
+                    );
+                }
+            }
+            assert_eq!(qg.builds(), 1);
+        }
+    }
+
+    #[test]
+    fn candidates_are_exactly_the_cut_nets_after_build() {
+        let hg = Arc::new(crate::hypergraph::Hypergraph::from_nets(
+            6,
+            &[vec![0, 1, 2], vec![2, 3], vec![3, 4, 5], vec![0, 5]],
+            None,
+            None,
+        ));
+        let phg = crate::partition::PartitionedHypergraph::new(hg, 3);
+        phg.assign_all(&[0, 0, 1, 1, 2, 2], 1);
+        let mut qg = QuotientGraph::new(3);
+        qg.build(&phg);
+        assert_eq!(qg.cut_net_candidates(0, 1), &[0]); // net {0,1,2}
+        assert_eq!(qg.cut_net_candidates(1, 2), &[2]); // net {3,4,5}
+        assert_eq!(qg.cut_net_candidates(0, 2), &[3]); // net {0,5}
+    }
+
+    #[test]
+    fn note_moves_relists_and_compact_filters() {
+        let hg = Arc::new(crate::hypergraph::Hypergraph::from_nets(
+            4,
+            &[vec![0, 1], vec![1, 2], vec![2, 3]],
+            None,
+            None,
+        ));
+        let mut phg = crate::partition::PartitionedHypergraph::new(hg, 3);
+        phg.set_uniform_max_weight(2.0);
+        phg.assign_all(&[0, 0, 1, 2], 1);
+        let mut qg = QuotientGraph::new(3);
+        qg.build(&phg);
+        assert!(qg.is_adjacent(0, 1) && qg.is_adjacent(1, 2));
+        assert!(!qg.is_adjacent(0, 2));
+        // move node 2 from block 1 to block 0 (as a (0,1)-pair refinement
+        // would): net {2,3} now connects blocks 0 and 2
+        phg.move_unchecked(2, 0, None);
+        qg.note_moves(&phg, 0, 1, &[(2, 1)]);
+        assert!(qg.is_adjacent(0, 2), "new adjacency must be discovered");
+        // pair (1,2) still lists net {2,3}, but compaction drops it
+        let mut out = Vec::new();
+        let live = qg.compact_pair(&phg, QuotientGraph::pair_index(3, 1, 2), &mut out);
+        assert_eq!(live, 0, "stale candidate must be filtered");
+        // pair (0,2)'s list is live and deduplicated
+        let live = qg.compact_pair(&phg, QuotientGraph::pair_index(3, 0, 2), &mut out);
+        assert_eq!(live, 1);
+        assert_eq!(out, vec![2]);
+    }
+}

@@ -1,0 +1,217 @@
+//! Per-worker pooled state for flow-based refinement.
+//!
+//! A [`FlowScratch`] holds everything one flow worker needs to process a
+//! block pair — the Lawler flow network, the push-relabel working state,
+//! the region/frontier buffers and generation-stamped node/net marks — so
+//! repeated `flow_refine` calls on one refinement workspace perform zero
+//! structural allocations after the first (the `structural_allocs`
+//! counter mirrors `PartitionPool::structural_allocs` and is asserted by
+//! tests and the `perf_hotpath` "flow refinement" bench pair).
+//!
+//! Generation-stamped marks replace the former `vec![false; n]` per-pair
+//! visited/seen arrays: a node (net) is marked in the current generation
+//! iff its stamp equals the generation counter, so clearing is a counter
+//! bump instead of an O(n) write — and there is no per-pair allocation.
+
+use super::maxflow::{FlowNetwork, PreflowScratch};
+use crate::{BlockId, EdgeId, NodeId, NodeWeight};
+use std::collections::VecDeque;
+
+/// A generation-stamped mark array: entry `i` is marked in the current
+/// generation iff `marks[i] == gen`, so "clear all marks" is a counter
+/// bump instead of an O(n) write. Wrap-around zeroes the storage once
+/// every `u32::MAX` generations. Shared by the flow scratch's node/net
+/// marks and the quotient graph's net dedup stamps.
+#[derive(Default)]
+pub(crate) struct StampMarks {
+    marks: Vec<u32>,
+    gen: u32,
+}
+
+impl StampMarks {
+    /// Grow to `n` entries; returns `true` when storage actually grew
+    /// (the callers count that as a structural allocation).
+    pub(crate) fn ensure(&mut self, n: usize) -> bool {
+        if self.marks.len() < n {
+            self.marks.resize(n, 0);
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Start a fresh generation (wrap-safe) and return its id.
+    pub(crate) fn next_gen(&mut self) -> u32 {
+        if self.gen == u32::MAX {
+            self.marks.fill(0);
+            self.gen = 0;
+        }
+        self.gen += 1;
+        self.gen
+    }
+
+    #[inline]
+    pub(crate) fn mark(&mut self, i: usize, gen: u32) {
+        self.marks[i] = gen;
+    }
+
+    #[inline]
+    pub(crate) fn is_marked(&self, i: usize, gen: u32) -> bool {
+        self.marks[i] == gen
+    }
+
+    /// Mark entry `i`; returns `true` on its first visit this generation.
+    #[inline]
+    pub(crate) fn mark_first(&mut self, i: usize, gen: u32) -> bool {
+        let first = self.marks[i] != gen;
+        self.marks[i] = gen;
+        first
+    }
+}
+
+/// Reusable working state of one flow worker.
+#[derive(Default)]
+pub struct FlowScratch {
+    /// pooled Lawler network (edge-list capacity survives across pairs)
+    pub(crate) net: FlowNetwork,
+    /// pooled push-relabel state for the incremental max-flow calls
+    pub(crate) preflow: PreflowScratch,
+
+    // ---- region of the current pair (aligned vectors) ----
+    /// region hypernodes (parent ids); flow-node id = 2 + index
+    pub(crate) region: Vec<NodeId>,
+    /// BFS distance of each region node from the cut (piercing heuristic)
+    pub(crate) distance: Vec<u32>,
+    /// original side of each region node (true = block b1)
+    pub(crate) side: Vec<bool>,
+    /// node weights aligned with `region`
+    pub(crate) weight: Vec<NodeWeight>,
+    /// nets of the Lawler expansion
+    pub(crate) nets: Vec<EdgeId>,
+
+    // ---- generation-stamped marks ----
+    node_marks: StampMarks,
+    net_marks: StampMarks,
+    /// flow-node id per hypernode; valid where the node carries the
+    /// region generation mark
+    pub(crate) flow_node: Vec<u32>,
+
+    // ---- BFS / frontier churn ----
+    pub(crate) frontier1: Vec<NodeId>,
+    pub(crate) frontier2: Vec<NodeId>,
+    pub(crate) bfs: VecDeque<(NodeId, u32)>,
+
+    // ---- FlowCutter state ----
+    pub(crate) source: Vec<bool>,
+    pub(crate) sink: Vec<bool>,
+    pub(crate) s_side: Vec<bool>,
+    pub(crate) t_side: Vec<bool>,
+    pub(crate) cands: Vec<usize>,
+    /// final per-region-node source-side assignment of a cutter run
+    pub(crate) assignment: Vec<bool>,
+
+    // ---- scheduler interaction ----
+    /// cut-net candidates of the pair being processed (copied out of the
+    /// quotient graph under the scheduler lock)
+    pub(crate) pair_nets: Vec<EdgeId>,
+    /// proposed moves `(node, target block)` of the current pair
+    pub(crate) moves: Vec<(NodeId, BlockId)>,
+    /// applied moves `(node, source block)` kept by the last pair
+    pub(crate) applied: Vec<(NodeId, BlockId)>,
+
+    structural_allocs: usize,
+}
+
+impl FlowScratch {
+    /// Size the node-/net-indexed mark arrays for a hypergraph with `n`
+    /// nodes and `m` nets. Growth is a counted structural allocation;
+    /// re-use at or below capacity is free.
+    pub fn ensure(&mut self, n: usize, m: usize) {
+        if self.node_marks.ensure(n) {
+            self.flow_node.resize(n, 0);
+            self.structural_allocs += 1;
+        }
+        if self.net_marks.ensure(m) {
+            self.structural_allocs += 1;
+        }
+    }
+
+    /// Start a fresh node-mark generation (wrap-safe).
+    pub(crate) fn next_node_gen(&mut self) -> u32 {
+        self.node_marks.next_gen()
+    }
+
+    /// Start a fresh net-mark generation (wrap-safe).
+    pub(crate) fn next_net_gen(&mut self) -> u32 {
+        self.net_marks.next_gen()
+    }
+
+    #[inline]
+    pub(crate) fn mark_node(&mut self, u: NodeId, gen: u32) {
+        self.node_marks.mark(u as usize, gen);
+    }
+
+    #[inline]
+    pub(crate) fn node_marked(&self, u: NodeId, gen: u32) -> bool {
+        self.node_marks.is_marked(u as usize, gen)
+    }
+
+    /// Mark net `e`; returns `true` on its first visit this generation.
+    #[inline]
+    pub(crate) fn mark_net(&mut self, e: EdgeId, gen: u32) -> bool {
+        self.net_marks.mark_first(e as usize, gen)
+    }
+
+    /// Re-point the pooled flow network at `n` flow nodes; growth of the
+    /// adjacency array is a counted structural allocation.
+    pub(crate) fn reset_network(&mut self, n: usize) {
+        if self.net.reset(n) {
+            self.structural_allocs += 1;
+        }
+    }
+
+    /// How often a node-/net-indexed buffer or the flow-network adjacency
+    /// had to grow. Constant across repeated `flow_refine` calls on one
+    /// workspace — the zero-allocation invariant of the flow scratch pool.
+    pub fn structural_allocs(&self) -> usize {
+        self.structural_allocs
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn marks_reset_by_generation_bump() {
+        let mut sc = FlowScratch::default();
+        sc.ensure(8, 4);
+        let allocs = sc.structural_allocs();
+        let g1 = sc.next_node_gen();
+        sc.mark_node(3, g1);
+        assert!(sc.node_marked(3, g1));
+        let g2 = sc.next_node_gen();
+        assert!(!sc.node_marked(3, g2), "new generation clears all marks");
+        let ge = sc.next_net_gen();
+        assert!(sc.mark_net(2, ge), "first visit in a generation");
+        assert!(!sc.mark_net(2, ge), "second visit is a duplicate");
+        // re-ensure at or below capacity is free
+        sc.ensure(8, 4);
+        sc.ensure(2, 1);
+        assert_eq!(sc.structural_allocs(), allocs);
+        sc.ensure(16, 4);
+        assert_eq!(sc.structural_allocs(), allocs + 1, "growth is counted");
+    }
+
+    #[test]
+    fn network_reset_growth_is_counted() {
+        let mut sc = FlowScratch::default();
+        sc.reset_network(10);
+        let base = sc.structural_allocs();
+        sc.reset_network(6);
+        sc.reset_network(10);
+        assert_eq!(sc.structural_allocs(), base, "within capacity: no alloc");
+        sc.reset_network(24);
+        assert_eq!(sc.structural_allocs(), base + 1);
+    }
+}

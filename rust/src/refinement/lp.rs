@@ -17,16 +17,21 @@ use crate::{BlockId, Gain, NodeId, NodeWeight};
 use std::sync::atomic::{AtomicI64, Ordering};
 use std::sync::Mutex;
 
-/// Reusable label-propagation scratch: the per-round node visit order and
-/// the localized frontier/next buffers. Owned by the refinement
-/// `Workspace` so repeated LP invocations across uncoarsening levels stop
-/// allocating per round; the capacity of the finest level is reused by
-/// every coarser one.
+/// Reusable label-propagation scratch: the per-round node visit order,
+/// the localized frontier/next buffers, and the deterministic variant's
+/// per-sub-round membership and move-wishlist buffers. Owned by the
+/// refinement `Workspace` so repeated LP invocations across uncoarsening
+/// levels stop allocating per round; the capacity of the finest level is
+/// reused by every coarser one.
 #[derive(Default)]
 pub struct LpScratch {
     order: Vec<u32>,
     frontier: Vec<NodeId>,
     next: Vec<NodeId>,
+    /// deterministic LP (§11): nodes of the current sub-round
+    det_members: Vec<NodeId>,
+    /// deterministic LP (§11): gain-sorted desired moves of a sub-round
+    det_desired: Vec<(Gain, NodeId, BlockId, BlockId)>,
 }
 
 /// Parallel label propagation; returns the total attributed improvement.
@@ -158,10 +163,36 @@ pub fn lp_refine_localized_with_scratch(
     total
 }
 
+/// Does node `u` belong to sub-round `s` of deterministic-LP round
+/// `round` (paper §11)? The salt is derived **here**, from `(seed,
+/// round)` only — independent of `s` — so for a fixed round the
+/// sub-rounds partition the node set: every node is considered in
+/// exactly one sub-round. (The historic bug mixed `s` into the salt,
+/// which put some nodes in several sub-rounds and others in none; the
+/// membership test pins this function, the single decision point.)
+#[inline]
+fn det_in_sub_round(seed: u64, round: usize, s: u64, sub_rounds: u64, u: NodeId) -> bool {
+    hash2(hash2(seed ^ 0x1b, round as u64), u as u64) % sub_rounds == s
+}
+
 /// Deterministic synchronous label propagation (paper §11): per sub-round,
 /// compute the highest-gain move of each node against the frozen
 /// partition, then select balance-preserving prefix swaps per block pair.
+/// Convenience wrapper allocating throwaway scratch — pipeline callers go
+/// through [`lp_refine_deterministic_with_scratch`].
 pub fn lp_refine_deterministic(phg: &PartitionedHypergraph, ctx: &Context) -> Gain {
+    lp_refine_deterministic_with_scratch(phg, ctx, &mut LpScratch::default())
+}
+
+/// Deterministic synchronous label propagation whose per-sub-round
+/// membership and move-wishlist buffers live on reusable workspace
+/// scratch. Bit-identical to the throwaway-scratch wrapper for any thread
+/// count (the wishlist is totally ordered by (gain, node) before use).
+pub fn lp_refine_deterministic_with_scratch(
+    phg: &PartitionedHypergraph,
+    ctx: &Context,
+    scratch: &mut LpScratch,
+) -> Gain {
     let n = phg.hypergraph().num_nodes();
     let k = phg.k();
     let sub_rounds = ctx.det_sub_rounds.max(1) as u64;
@@ -169,27 +200,32 @@ pub fn lp_refine_deterministic(phg: &PartitionedHypergraph, ctx: &Context) -> Ga
     for round in 0..ctx.lp_rounds {
         let mut round_gain: Gain = 0;
         for s in 0..sub_rounds {
-            let salt = hash2(ctx.seed ^ 0x1b, round as u64) ^ s;
-            // phase 1: calculate moves (frozen state)
-            let desired = Mutex::new(Vec::<(Gain, NodeId, BlockId, BlockId)>::new());
-            let members: Vec<NodeId> = (0..n as NodeId)
-                .filter(|&u| hash2(salt, u as u64) % sub_rounds == s % sub_rounds)
-                .collect();
-            parallel_chunks(members.len(), ctx.threads, |_, lo, hi| {
-                let mut local = Vec::new();
-                for &u in &members[lo..hi] {
-                    if !phg.is_border(u) {
-                        continue;
-                    }
-                    if let Some((g, t)) = phg.max_gain_move(u) {
-                        if g > 0 {
-                            local.push((g, u, phg.block_of(u), t));
+            // phase 1: calculate moves (frozen state); membership comes
+            // from the partitioning predicate (see det_in_sub_round)
+            scratch.det_members.clear();
+            scratch.det_members.extend(
+                (0..n as NodeId).filter(|&u| det_in_sub_round(ctx.seed, round, s, sub_rounds, u)),
+            );
+            let members = &scratch.det_members;
+            scratch.det_desired.clear();
+            {
+                let desired = Mutex::new(&mut scratch.det_desired);
+                parallel_chunks(members.len(), ctx.threads, |_, lo, hi| {
+                    let mut local = Vec::new();
+                    for &u in &members[lo..hi] {
+                        if !phg.is_border(u) {
+                            continue;
+                        }
+                        if let Some((g, t)) = phg.max_gain_move(u) {
+                            if g > 0 {
+                                local.push((g, u, phg.block_of(u), t));
+                            }
                         }
                     }
-                }
-                desired.lock().unwrap().extend(local);
-            });
-            let mut desired = desired.into_inner().unwrap();
+                    desired.lock().unwrap().extend(local);
+                });
+            }
+            let desired = &mut scratch.det_desired;
             // deterministic order: by gain desc, node id as tie-break
             desired.sort_unstable_by(|a, b| b.0.cmp(&a.0).then(a.1.cmp(&b.1)));
 
@@ -329,6 +365,47 @@ mod tests {
         assert!(g1 > 0);
         assert_eq!(g1, g4, "same improvement for any thread count");
         assert_eq!(p1, p4, "bit-identical partitions");
+    }
+
+    #[test]
+    fn deterministic_sub_rounds_partition_every_node() {
+        // paper §11: per round, the sub-rounds partition the node set —
+        // every node is a member of exactly one sub-round. This pins the
+        // s-independence of the salt inside det_in_sub_round: mixing `s`
+        // back into the hash (the historic bug) makes some nodes members
+        // of several sub-rounds and others of none, failing this count.
+        for seed in [0u64, 7, 0x1b2c3d] {
+            for round in [0usize, 1, 4] {
+                for sub_rounds in [1u64, 2, 5, 16] {
+                    for u in 0..500u32 {
+                        let hits = (0..sub_rounds)
+                            .filter(|&s| det_in_sub_round(seed, round, s, sub_rounds, u))
+                            .count();
+                        assert_eq!(
+                            hits, 1,
+                            "node {u} in {hits} sub-rounds of {sub_rounds} (round {round})"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn deterministic_lp_scratch_reuse_is_bit_identical() {
+        // the workspace-scratch path must match the throwaway-scratch
+        // wrapper exactly, including when the buffers are reused across
+        // instances (the ROADMAP "Workspace-aware LP" leftover)
+        let mut scratch = LpScratch::default();
+        for seed in [2u64, 9, 31] {
+            let (phg_a, _) = perturbed_planted(seed, 3);
+            let (phg_b, _) = perturbed_planted(seed, 3);
+            let c = ctx(Preset::Deterministic, 3, 2, seed);
+            let ga = lp_refine_deterministic(&phg_a, &c);
+            let gb = lp_refine_deterministic_with_scratch(&phg_b, &c, &mut scratch);
+            assert_eq!(ga, gb, "seed {seed}");
+            assert_eq!(phg_a.parts(), phg_b.parts(), "seed {seed}");
+        }
     }
 
     #[test]

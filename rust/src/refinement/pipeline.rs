@@ -33,6 +33,26 @@
 //! (between levels) and the bound `PartitionedHypergraph` (during
 //! refinement); the finest binding is simply returned to the caller.
 //! Values are rebuilt every level; memory is allocated once.
+//!
+//! ## Flow-scratch lifecycle
+//!
+//! Flow refinement (paper §8) runs on the workspace's
+//! [`FlowWorkspace`](crate::refinement::flow::FlowWorkspace): one
+//! [`FlowScratch`](crate::refinement::flow::FlowScratch) slot per flow
+//! worker (τ·k-capped, §8.1) holding the Lawler flow network, the
+//! push-relabel/FlowCutter working state and the generation-stamped
+//! region buffers, plus the incremental quotient graph and the
+//! active-pair wave buffers. Slots are created lazily on the first
+//! `flow_refine` call and sized to the level's node/net counts; because
+//! coarser levels address a prefix of the finest level's dimensions, a
+//! whole uncoarsening sequence sizes each slot at most once — every
+//! later call reuses the memory (`FlowWorkspace::structural_allocs` stays
+//! constant, asserted in tests and the `perf_hotpath` "flow refinement"
+//! bench pair). The quotient graph is rebuilt from the connectivity sets
+//! once per call and then maintained incrementally from applied moves;
+//! [`RefinementPipeline::refine_at_distance`] records each level's
+//! distance from the finest so flows run only on the
+//! `ctx.flow_finest_levels` finest levels (§8.1's cost model).
 
 use crate::coarsening::Level;
 use crate::coordinator::context::Context;
@@ -83,10 +103,19 @@ pub struct Workspace {
     pub(crate) scratch: Vec<SearchScratch>,
     /// reusable boundary-seed buffer
     pub(crate) boundary: Vec<NodeId>,
-    /// reusable label-propagation scratch (visit order + frontier churn)
+    /// reusable label-propagation scratch (visit order + frontier churn +
+    /// deterministic sub-round membership/move buffers)
     pub(crate) lp: lp::LpScratch,
     /// pooled §6.1 partition state rebound across uncoarsening levels
     pub(crate) pool: PartitionPool,
+    /// pooled flow-refinement state (per-worker scratch slots, incremental
+    /// quotient graph, scheduler wave buffers)
+    pub(crate) flow: flow::FlowWorkspace,
+    /// distance of the currently refined level from the finest (0 =
+    /// finest); set by [`RefinementPipeline::refine_at_distance`] so the
+    /// flow refiner can honor the §8.1 cost model (flows only on the
+    /// finest levels)
+    pub(crate) level_distance: usize,
     gain_table_inits: usize,
     gain_table_allocs: usize,
 }
@@ -104,6 +133,8 @@ impl Workspace {
             boundary: Vec::new(),
             lp: lp::LpScratch::default(),
             pool: PartitionPool::new(k),
+            flow: flow::FlowWorkspace::new(k),
+            level_distance: 0,
             gain_table_inits: 0,
             gain_table_allocs: 1,
         }
@@ -174,6 +205,12 @@ impl Workspace {
     pub fn gain_table_allocs(&self) -> usize {
         self.gain_table_allocs
     }
+
+    /// The pooled flow-refinement state (alloc/build counters for tests
+    /// and benches).
+    pub fn flow_workspace(&self) -> &flow::FlowWorkspace {
+        &self.flow
+    }
 }
 
 /// A refinement algorithm that runs inside the pipeline on the shared
@@ -196,7 +233,7 @@ impl Refiner for LpRefiner {
 
     fn refine(&mut self, phg: &PartitionedHypergraph, ws: &mut Workspace, ctx: &Context) -> Gain {
         if ctx.deterministic {
-            lp::lp_refine_deterministic(phg, ctx)
+            lp::lp_refine_deterministic_with_scratch(phg, ctx, &mut ws.lp)
         } else {
             lp::lp_refine_with_scratch(phg, ctx, &mut ws.lp)
         }
@@ -219,7 +256,10 @@ impl Refiner for FmRefiner {
     }
 }
 
-/// Parallel flow-based refinement (paper §8).
+/// Parallel flow-based refinement (paper §8) on the workspace's pooled
+/// flow state. Runs only within `ctx.flow_finest_levels` of the finest
+/// level (§8.1's cost model: flow problems on coarse levels are small and
+/// rarely pay for themselves; the big wins come from the finest levels).
 pub struct FlowRefiner;
 
 impl Refiner for FlowRefiner {
@@ -227,8 +267,11 @@ impl Refiner for FlowRefiner {
         "flows"
     }
 
-    fn refine(&mut self, phg: &PartitionedHypergraph, _ws: &mut Workspace, ctx: &Context) -> Gain {
-        flow::flow_refine(phg, ctx)
+    fn refine(&mut self, phg: &PartitionedHypergraph, ws: &mut Workspace, ctx: &Context) -> Gain {
+        if ws.level_distance >= ctx.flow_finest_levels.max(1) {
+            return 0;
+        }
+        flow::flow_refine_with_workspace(phg, ctx, &mut ws.flow)
     }
 }
 
@@ -282,11 +325,19 @@ impl RefinementPipeline {
     }
 
     /// Build the pipeline for an uncoarsening sequence whose finest level
-    /// is `hg`: sizes the gain table *and* reserves the partition pool so
-    /// every level of the hierarchy rebinds the same memory.
+    /// is `hg`: sizes the gain table, reserves the partition pool *and*
+    /// (for flow presets) the flow workspace so every level of the
+    /// hierarchy rebinds the same memory.
     pub fn new_for(ctx: &Context, hg: &Hypergraph) -> Self {
         let mut pipeline = Self::new(ctx, hg.num_nodes());
         pipeline.ws.reserve_partition(hg);
+        if ctx.use_flows {
+            pipeline.ws.flow.reserve(
+                flow::flow_workers(ctx, ctx.k),
+                hg.num_nodes(),
+                hg.num_nets(),
+            );
+        }
         pipeline
     }
 
@@ -342,7 +393,9 @@ impl RefinementPipeline {
             let finer =
                 if i == 0 { input_hg.clone() } else { levels[i - 1].coarse.clone() };
             phg = self.project_to_level(phg, finer, &levels[i].fine_to_coarse, ctx);
-            self.refine(&phg, ctx);
+            // after projecting over levels[i] the partition lives on
+            // levels[i-1].coarse, i.e. at distance i from the finest level
+            self.refine_at_distance(&phg, ctx, i);
         }
         phg
     }
@@ -358,12 +411,26 @@ impl RefinementPipeline {
         lp::lp_refine_localized_with_scratch(phg, ctx, nodes, &mut self.ws.lp)
     }
 
-    /// Run the full refiner stack on one level's partition. Called once
-    /// per uncoarsening level; reuses all workspace state.
+    /// Run the full refiner stack on the finest level's partition
+    /// (standalone refinement; equivalent to distance 0).
     pub fn refine(&mut self, phg: &PartitionedHypergraph, ctx: &Context) -> Gain {
+        self.refine_at_distance(phg, ctx, 0)
+    }
+
+    /// Run the full refiner stack on one level's partition, telling the
+    /// level-aware refiners how far from the finest level it sits
+    /// (`distance` 0 = finest). Called once per uncoarsening level;
+    /// reuses all workspace state.
+    pub fn refine_at_distance(
+        &mut self,
+        phg: &PartitionedHypergraph,
+        ctx: &Context,
+        distance: usize,
+    ) -> Gain {
         debug_assert_eq!(phg.k(), self.ws.k);
         self.ws.ensure_node_capacity(phg.hypergraph().num_nodes());
         self.ws.ensure_threads(ctx.threads);
+        self.ws.level_distance = distance;
         let timer = ctx.timer.clone();
         let mut total: Gain = 0;
         for r in self.stack.iter_mut() {
@@ -488,6 +555,79 @@ mod tests {
         pipe.refine(&phg, &c);
         assert!(phg.is_balanced(), "imbalance {}", phg.imbalance());
         phg.verify_consistency().unwrap();
+    }
+
+    #[test]
+    fn flows_run_only_on_finest_levels() {
+        // the flow refiner is level-gated (§8.1 cost model): at distances
+        // ≥ flow_finest_levels it must not even build the quotient graph
+        let mut c = ctx(Preset::DefaultFlows, 2, 2, 11);
+        c.flow_finest_levels = 2;
+        let phg = perturbed(11, 2, 0.3);
+        let mut pipe = RefinementPipeline::new(&c, phg.hypergraph().num_nodes());
+        pipe.refine_at_distance(&phg, &c, 5); // deep coarse level: skipped
+        assert_eq!(pipe.workspace().flow_workspace().quotient_builds(), 0);
+        pipe.refine_at_distance(&phg, &c, 2); // still outside the window
+        assert_eq!(pipe.workspace().flow_workspace().quotient_builds(), 0);
+        pipe.refine_at_distance(&phg, &c, 1); // finest-but-one: flows run
+        assert_eq!(pipe.workspace().flow_workspace().quotient_builds(), 1);
+        pipe.refine(&phg, &c); // finest level (distance 0)
+        assert_eq!(pipe.workspace().flow_workspace().quotient_builds(), 2);
+        assert!(phg.is_balanced());
+        phg.verify_consistency().unwrap();
+    }
+
+    #[test]
+    fn flow_workspace_is_reused_across_pipeline_levels() {
+        // per-level flow calls on one pipeline must stop allocating after
+        // the reserved first pass — the flow analogue of the gain-table
+        // and partition-pool invariants (threads = 1: identical passes,
+        // so the steady state is exact)
+        let mut c = ctx(Preset::DefaultFlows, 2, 1, 13);
+        c.flow_finest_levels = usize::MAX; // flows on every level
+        let sizes = [300usize, 220, 150, 90];
+        let hgs: Vec<_> = sizes
+            .iter()
+            .map(|&n_level| {
+                let p = PlantedParams {
+                    n: n_level,
+                    m: 2 * n_level,
+                    blocks: 2,
+                    ..Default::default()
+                };
+                Arc::new(planted_hypergraph(&p, n_level as u64))
+            })
+            .collect();
+        let mut pipe = RefinementPipeline::new_for(&c, &hgs[0]);
+        let mut run_levels = |pipe: &mut RefinementPipeline| {
+            for hg in hgs.iter().rev() {
+                let n_level = hg.num_nodes();
+                let parts: Vec<BlockId> =
+                    (0..n_level).map(|u| (u * 2 / n_level) as BlockId).collect();
+                let mut phg = PartitionedHypergraph::new(hg.clone(), 2);
+                phg.set_uniform_max_weight(0.3);
+                phg.assign_all(&parts, 1);
+                pipe.refine(&phg, &c);
+                phg.verify_consistency().unwrap();
+            }
+        };
+        // first uncoarsening pass reaches the steady state (the flow
+        // network's edge lists grow to the largest region encountered) …
+        run_levels(&mut pipe);
+        let allocs = pipe.workspace().flow_workspace().structural_allocs();
+        // … after which a whole further uncoarsening sequence on the same
+        // workspace performs zero structural allocations
+        run_levels(&mut pipe);
+        assert_eq!(
+            pipe.workspace().flow_workspace().structural_allocs(),
+            allocs,
+            "flow state must be reused across uncoarsening sequences"
+        );
+        assert_eq!(
+            pipe.workspace().flow_workspace().quotient_builds(),
+            2 * sizes.len(),
+            "one Λ enumeration per flow call"
+        );
     }
 
     #[test]

@@ -6,8 +6,11 @@
 //! production solver needs a repair path for tight ε, weighted inputs or
 //! infeasible starts (paper §12 "Limitations" discusses ε ≈ 0). This
 //! rebalancer processes overloaded blocks in decreasing overload order
-//! and relocates their cheapest boundary nodes (gain-ordered PQ,
-//! heaviest-fitting-first tie-break) into underloaded blocks.
+//! and relocates their cheapest nodes: candidates are popped from a
+//! max-gain PQ (node weight is not part of the key), each node goes to
+//! its best feasible target block with ties between targets broken
+//! toward the *lighter* block, and stale PQ keys are lazily re-inserted
+//! with their fresh gain rather than acted on or dropped.
 
 use crate::coordinator::context::Context;
 use crate::datastructures::AddressablePQ;

@@ -54,9 +54,11 @@ pub fn vcycle(phg: PartitionedHypergraph, ctx: &Context, cycles: usize) -> Parti
             coarse_parts = next;
         }
         // uncoarsen with the full refinement pipeline (no initial
-        // partitioning), rebinding the pooled state per level
+        // partitioning), rebinding the pooled state per level; the
+        // coarsest level is `levels.len()` away from the finest, so
+        // level-gated refiners (flows) concentrate on the finest levels
         current = pipeline.rebind_with_parts(current, hierarchy.coarsest(), &coarse_parts, ctx);
-        pipeline.refine(&current, ctx);
+        pipeline.refine_at_distance(&current, ctx, hierarchy.levels.len());
         current = pipeline.uncoarsen(&hierarchy.levels, &hg, current, ctx);
         if current.km1() < before && current.is_balanced() {
             best_parts = current.parts();

@@ -166,6 +166,45 @@ fn prop_refinement_never_worsens_or_unbalances() {
 }
 
 #[test]
+fn prop_flows_respect_non_uniform_weight_limits() {
+    // explicit per-block limits on weighted nodes (the set_max_weights
+    // path): flow refinement derives its region bounds from the actual
+    // limits and must hand back a partition satisfying every one of them
+    for seed in 0..SEEDS / 2 {
+        let hg = Arc::new(random_hypergraph(seed ^ 0x0f10));
+        let n = hg.num_nodes();
+        let mut rng = Rng::new(seed ^ 21);
+        let k = 2 + rng.next_below(3);
+        let parts = random_parts(&mut rng, n, k);
+        // non-uniform limits: each block's current weight plus a distinct
+        // slack, so the start is feasible and the limits all differ
+        let mut limits = vec![0i64; k];
+        for (u, &b) in parts.iter().enumerate() {
+            limits[b as usize] += hg.node_weight(u as NodeId);
+        }
+        for (b, l) in limits.iter_mut().enumerate() {
+            *l += 1 + (3 * b as i64 + seed as i64) % 7;
+        }
+        let mut phg = PartitionedHypergraph::new(hg.clone(), k);
+        phg.set_max_weights(limits.clone());
+        phg.assign_all(&parts, 1);
+        assert!(phg.is_balanced(), "seed {seed}: start must be feasible");
+        let before = phg.km1();
+        let ctx = Context::new(Preset::DefaultFlows, k, 0.1).with_threads(2).with_seed(seed);
+        let g = mtkahypar::refinement::flow::flow_refine(&phg, &ctx);
+        assert!(g >= 0, "seed {seed}");
+        assert_eq!(phg.km1(), before - g, "seed {seed}: attributed accounting");
+        for b in 0..k as BlockId {
+            assert!(
+                phg.block_weight(b) <= limits[b as usize],
+                "seed {seed}: block {b} exceeds its explicit limit"
+            );
+        }
+        phg.verify_consistency().unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+    }
+}
+
+#[test]
 fn prop_maxflow_equals_mincut_random_dags() {
     use mtkahypar::refinement::flow::maxflow::FlowNetwork;
     for seed in 0..SEEDS {
