@@ -5,6 +5,8 @@
 //! * gain-table update throughput,
 //! * rating-map aggregation (coarsening inner loop),
 //! * parallel contraction,
+//! * n-level batch boundary: snapshot contraction vs in-place dynamic
+//!   batch uncontraction (paper §9),
 //! * parallel gain recalculation,
 //! * one LP round,
 //! * AOT gain-tile execution + spectral execution (L1/L2 via PJRT).
@@ -14,6 +16,7 @@ use mtkahypar::coordinator::context::{Context, Preset};
 use mtkahypar::datastructures::RatingMap;
 use mtkahypar::generators::{planted_hypergraph, PlantedParams};
 use mtkahypar::hypergraph::contraction;
+use mtkahypar::hypergraph::dynamic::DynamicHypergraph;
 use mtkahypar::partition::{
     recalculate_gains, GainTable, Move, PartitionPool, PartitionedHypergraph,
 };
@@ -124,7 +127,7 @@ fn main() {
         std::hint::black_box(&fphg);
     });
     let mut pool = PartitionPool::new(k);
-    pool.reserve(&hg);
+    pool.reserve(&*hg);
     let mut bound = Some(pool.bind(coarse_hg.clone(), &coarse_parts, 0.03, 1));
     bench("level build x2: pooled in-place rebind", 5, 2 * n, || {
         let p = bound.take().unwrap();
@@ -137,6 +140,65 @@ fn main() {
         pool.structural_allocs(),
         1,
         "pooled rebind must not allocate per level"
+    );
+
+    // ---- batch boundary: snapshot contract vs dynamic uncontract ----
+    // One n-level batch boundary used to pay an O(n) union-find prefix
+    // rebuild plus a full parallel contraction; the dynamic hypergraph
+    // reverts the same batch by mutating pin-lists and incident-net
+    // prefixes in place at O(batch) cost (paper §9).
+    let mut dynhg = DynamicHypergraph::from_hypergraph(&hg);
+    dynhg.reserve_events(hg.num_pins());
+    let mut mementos = Vec::new();
+    for u in (1..n as NodeId).step_by(2) {
+        mementos.push(dynhg.contract(u, u - 1)); // pair odd onto even
+    }
+    let batch_at = mementos.len().saturating_sub(1024);
+    // `mementos` keeps the prefix (stays contracted); `live` is the batch
+    // reverted and re-applied per iteration, always using the mementos of
+    // the *latest* re-contraction (recorded slots must match the current
+    // event stack — never replay stale ones)
+    let mut live: Vec<_> = mementos.split_off(batch_at);
+    let batch_size = live.len();
+    bench("batch boundary: snapshot contract", 5, batch_size, || {
+        // the legacy path: union-find over the memento prefix + a full
+        // static re-contraction of the input
+        let mut rep_prefix: Vec<NodeId> = (0..n as NodeId).collect();
+        for m in &mementos {
+            rep_prefix[m.v as usize] = m.u;
+        }
+        for u in 0..n {
+            let mut r = rep_prefix[u] as usize;
+            while rep_prefix[r] as usize != r {
+                r = rep_prefix[r] as usize;
+            }
+            rep_prefix[u] = r as NodeId;
+        }
+        let snap = contraction::contract(&hg, &rep_prefix, 1);
+        std::hint::black_box(&snap.coarse);
+    });
+    // warm the uncontract/recontract cycle once so the counter below
+    // captures the steady state
+    let mut next = Vec::with_capacity(batch_size);
+    dynhg.uncontract_batch(&live);
+    for m in &live {
+        next.push(dynhg.contract(m.v, m.u));
+    }
+    std::mem::swap(&mut live, &mut next);
+    let dyn_grows = dynhg.structural_grows();
+    bench("batch boundary: dynamic uncontract", 5, batch_size, || {
+        dynhg.uncontract_batch(&live);
+        next.clear();
+        for m in &live {
+            next.push(dynhg.contract(m.v, m.u));
+        }
+        std::mem::swap(&mut live, &mut next);
+        std::hint::black_box(&dynhg);
+    });
+    assert_eq!(
+        dynhg.structural_grows(),
+        dyn_grows,
+        "the dynamic batch boundary must not allocate"
     );
 
     // ---- flow refinement: fresh scratch vs pooled workspace ----

@@ -10,7 +10,7 @@
 
 use crate::coordinator::context::Context;
 use crate::datastructures::RatingMap;
-use crate::hypergraph::Hypergraph;
+use crate::hypergraph::HypergraphOps;
 use crate::parallel::parallel_chunks;
 use crate::util::rng::hash2;
 use crate::util::Rng;
@@ -23,27 +23,34 @@ const CLUSTERED: u8 = 2;
 const NO_TARGET: u32 = u32::MAX;
 
 /// Shared state of one clustering pass.
-struct JoinState<'a> {
+struct JoinState<'a, H: HypergraphOps> {
     state: Vec<AtomicU8>,
     rep: Vec<AtomicU32>,
     /// desired target of each Joining node (cycle detection, §4.1)
     target: Vec<AtomicU32>,
     cluster_weight: Vec<AtomicI64>,
-    /// #nodes remaining after the joins performed so far
+    /// #live nodes remaining after the joins performed so far
     remaining: AtomicU64,
-    hg: &'a Hypergraph,
+    hg: &'a H,
     cmax: NodeWeight,
 }
 
-impl<'a> JoinState<'a> {
-    fn new(hg: &'a Hypergraph, cmax: NodeWeight) -> Self {
+impl<'a, H: HypergraphOps> JoinState<'a, H> {
+    fn new(hg: &'a H, cmax: NodeWeight) -> Self {
         let n = hg.num_nodes();
         JoinState {
-            state: (0..n).map(|_| AtomicU8::new(UNCLUSTERED)).collect(),
+            // inactive slots of a dynamic hypergraph enter as CLUSTERED:
+            // they are skipped as movers and (having no pins) can never be
+            // rated as targets
+            state: (0..n as NodeId)
+                .map(|u| {
+                    AtomicU8::new(if hg.is_active_node(u) { UNCLUSTERED } else { CLUSTERED })
+                })
+                .collect(),
             rep: (0..n as u32).map(AtomicU32::new).collect(),
             target: (0..n).map(|_| AtomicU32::new(NO_TARGET)).collect(),
             cluster_weight: (0..n).map(|u| AtomicI64::new(hg.node_weight(u as NodeId))).collect(),
-            remaining: AtomicU64::new(n as u64),
+            remaining: AtomicU64::new(hg.num_active_nodes() as u64),
             hg,
             cmax,
         }
@@ -153,8 +160,11 @@ impl<'a> JoinState<'a> {
 ///
 /// `floor` bounds how far a single pass may shrink (the paper's
 /// `c(V)/2.5` safeguard handled as a node-count floor = `limit`).
-pub fn cluster(
-    hg: &Hypergraph,
+/// Generic over the representation: the n-level driver runs it directly
+/// on the evolving [`crate::hypergraph::dynamic::DynamicHypergraph`]
+/// (inactive slots stay singletons; shrink accounting uses live nodes).
+pub fn cluster<H: HypergraphOps>(
+    hg: &H,
     ctx: &Context,
     communities: Option<&[u32]>,
     cmax: NodeWeight,
@@ -162,7 +172,8 @@ pub fn cluster(
 ) -> Vec<NodeId> {
     let n = hg.num_nodes();
     let js = JoinState::new(hg, cmax);
-    let min_remaining = (floor.max((n as f64 / ctx.shrink_limit) as usize)) as u64;
+    let min_remaining =
+        (floor.max((hg.num_active_nodes() as f64 / ctx.shrink_limit) as usize)) as u64;
 
     // random node order, deterministic in the seed
     let mut order: Vec<u32> = (0..n as u32).collect();
@@ -200,10 +211,10 @@ pub fn cluster(
 
 /// Evaluate the heavy-edge rating for `u` over the representatives of its
 /// net-neighbors (paper §4.1), respecting community and weight limits.
-fn best_target(
-    hg: &Hypergraph,
+fn best_target<H: HypergraphOps>(
+    hg: &H,
     u: NodeId,
-    js: &JoinState,
+    js: &JoinState<H>,
     communities: Option<&[u32]>,
     map: &mut RatingMap,
     seed: u64,

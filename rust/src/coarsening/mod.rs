@@ -53,7 +53,7 @@ pub fn coarsen(
         let rep = if ctx.deterministic {
             deterministic::cluster(&current, ctx, comms.as_deref(), cmax, limit)
         } else {
-            clustering::cluster(&current, ctx, comms.as_deref(), cmax, limit)
+            clustering::cluster(&*current, ctx, comms.as_deref(), cmax, limit)
         };
         let c = contraction::contract(&current, &rep, ctx.threads);
         let n_after = c.coarse.num_nodes();

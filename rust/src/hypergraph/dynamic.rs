@@ -1,0 +1,584 @@
+//! The dynamic hypergraph of the n-level scheme (paper §9, "The Dynamic
+//! Hypergraph Data Structure"; see also arXiv:2104.08107 §4).
+//!
+//! The n-level algorithm contracts **one node at a time** and uncontracts
+//! in **batches** during uncoarsening. Materializing a static snapshot per
+//! batch costs O(n + m) each time; this structure instead mutates the two
+//! incidence structures *in place* at O(Σ_{e ∈ I(v)} |e|) per contraction
+//! and O(batch events) per batch uncontraction:
+//!
+//! * **Pin lists** are shared arrays with *active-size markers*: every net
+//!   keeps its input-level capacity, and `active_pins[e]` marks the live
+//!   prefix. `contract(v, u)` visits each net of `v`: if `u` is already a
+//!   pin, `v`'s pin is swapped into the inactive suffix and the active
+//!   size shrinks (a *removed* pin); otherwise `v`'s slot is overwritten
+//!   with `u` (a *replaced* pin). Because uncontractions revert in LIFO
+//!   order, the inactive suffix behaves like a stack: the exact slot/swap
+//!   of every mutation is recorded as a [`PinEvent`] so the inverse
+//!   restores the precise permutation, keeping all recorded slots of
+//!   earlier events valid.
+//! * **Incident-net lists** are per-node vectors. `contract(v, u)` appends
+//!   `v`'s non-shared nets to `u`'s list and freezes `v`'s own list as the
+//!   record of `I(v)` at contraction time; the uncontraction truncates
+//!   `u`'s list back to its recorded prefix length — an in-place prefix
+//!   restore, no copying.
+//!
+//! ## Memento lifecycle
+//!
+//! `contract(v, u)` returns a [`Memento`] referencing the contraction's
+//! slice of the shared event stack. The n-level driver owns the memento
+//! sequence; [`DynamicHypergraph::uncontract_batch`] reverts a suffix of
+//! it (in reverse order) and leaves the events *above the stack cursor*
+//! intact, so the partition layer can afterwards replay the batch against
+//! Π/Φ/Λ: `PartitionedHypergraph::apply_uncontractions` assigns
+//! Π(v) ← Π(u) and increments Φ(e, Π(u)) for exactly the nets whose pin
+//! was *removed* (replaced pins swap `u → v` within the same block, which
+//! leaves Φ unchanged). Block weights are invariant under uncontraction
+//! (the cluster weight splits within one block), so the whole repair is
+//! O(Σ|I(batch)|) — no `rebuild_from_parts`, no snapshot contraction.
+//!
+//! [`DynamicHypergraph::freeze`] renders the current coarse state as a
+//! static [`Hypergraph`] (plus the coarse-id → slot mapping) so initial
+//! partitioning keeps running on the static snapshot it expects.
+
+use super::{Hypergraph, HypergraphOps};
+use crate::{EdgeId, EdgeWeight, NodeId, NodeWeight};
+
+/// One pin-list mutation of a contraction, recorded for exact inversion.
+#[derive(Clone, Copy, Debug)]
+struct PinEvent {
+    net: EdgeId,
+    /// absolute slot in the shared pin array that was mutated
+    slot: usize,
+    /// true: `v` swapped into the inactive suffix (shared net);
+    /// false: `v`'s slot overwritten with `u` (v-only net)
+    removed: bool,
+}
+
+/// Record of one `contract(v, u)`: the pair plus the contraction's slice
+/// of the event stack and the prefix length of `u`'s incident-net list.
+#[derive(Clone, Copy, Debug)]
+pub struct Memento {
+    /// contracted node (inactive while the memento is applied)
+    pub v: NodeId,
+    /// representative `v` was merged into
+    pub u: NodeId,
+    events_start: usize,
+    events_end: usize,
+    u_incident_len: usize,
+}
+
+/// Static snapshot of the current coarse state (see
+/// [`DynamicHypergraph::freeze`]).
+pub struct FrozenSnapshot {
+    /// the coarse hypergraph with consecutively renumbered nodes
+    pub hg: Hypergraph,
+    /// `to_dynamic[c]` = dynamic slot of coarse node `c`
+    pub to_dynamic: Vec<NodeId>,
+}
+
+/// The dynamic hypergraph (paper §9): in-place single-node contractions
+/// with a memento stack, reverted by in-place batch uncontractions.
+pub struct DynamicHypergraph {
+    /// net e's pin capacity is `net_offsets[e]..net_offsets[e+1]`
+    net_offsets: Vec<u64>,
+    /// shared pin array, mutated in place
+    pins: Vec<NodeId>,
+    /// live prefix length of each net's pin slice
+    active_pins: Vec<u32>,
+    net_weight: Vec<EdgeWeight>,
+    /// per-slot incident nets: exact `I(u)` for active `u`, the frozen
+    /// contraction-time `I(v)` for inactive `v`
+    incident: Vec<Vec<EdgeId>>,
+    /// current cluster weight for active slots, frozen for inactive ones
+    node_weight: Vec<NodeWeight>,
+    active: Vec<bool>,
+    num_active: usize,
+    num_active_pins: usize,
+    total_weight: NodeWeight,
+    /// input-level bound on |e| (sizes packed pin-count storage)
+    max_net_capacity: usize,
+    /// shared event stack; `event_cursor` is the live top (events above it
+    /// belong to just-reverted mementos and stay readable until the next
+    /// contraction)
+    events: Vec<PinEvent>,
+    event_cursor: usize,
+    structural_grows: usize,
+}
+
+impl DynamicHypergraph {
+    /// Build the dynamic structure from a static hypergraph (every node
+    /// active, every net at full size — the `Hypergraph →
+    /// DynamicHypergraph` conversion of the n-level driver).
+    pub fn from_hypergraph(hg: &Hypergraph) -> Self {
+        let n = hg.num_nodes();
+        let m = hg.num_nets();
+        let incident: Vec<Vec<EdgeId>> =
+            (0..n as NodeId).map(|u| hg.incident_nets(u).to_vec()).collect();
+        DynamicHypergraph {
+            net_offsets: hg.net_offsets.clone(),
+            pins: hg.pins.clone(),
+            active_pins: (0..m as EdgeId).map(|e| hg.net_size(e) as u32).collect(),
+            net_weight: hg.net_weight.clone(),
+            incident,
+            node_weight: hg.node_weight.clone(),
+            active: vec![true; n],
+            num_active: n,
+            num_active_pins: hg.num_pins(),
+            total_weight: hg.total_weight(),
+            max_net_capacity: hg.max_net_size(),
+            events: Vec::new(),
+            event_cursor: 0,
+            structural_grows: 0,
+        }
+    }
+
+    /// Iterator over the active (live) node slots.
+    pub fn active_nodes(&self) -> impl Iterator<Item = NodeId> + '_ {
+        (0..self.active.len() as NodeId).filter(move |&u| self.active[u as usize])
+    }
+
+    /// How often the event stack or an incident-net list had to grow its
+    /// allocation. Constant across `uncontract_batch` calls (the
+    /// uncoarsening path performs zero structural allocations) and across
+    /// re-contractions that fit the previously grown capacity.
+    pub fn structural_grows(&self) -> usize {
+        self.structural_grows
+    }
+
+    /// Pre-size the event stack. This is a head start, not an upper
+    /// bound: replaced-pin events are re-recorded when a later
+    /// contraction absorbs a net's current holder, so the total event
+    /// count is Σ|I(v)| at contraction time and can exceed the input pin
+    /// count — growth beyond the reservation is geometric and counted by
+    /// [`Self::structural_grows`]. The n-level driver reserves one event
+    /// per input pin, which covers typical hierarchies' first doubling.
+    pub fn reserve_events(&mut self, extra: usize) {
+        self.events.reserve(extra);
+    }
+
+    #[inline]
+    fn push_event(&mut self, ev: PinEvent) {
+        if self.events.len() == self.events.capacity() {
+            self.structural_grows += 1;
+        }
+        self.events.push(ev);
+    }
+
+    /// Contract `v` onto `u` (both active, `v != u`): merge `v`'s pins and
+    /// incident nets into `u` in place and record the memento. Cost
+    /// O(Σ_{e ∈ I(v)} |e|) — each net of `v` is scanned once to locate
+    /// `v`'s pin slot and detect whether `u` shares the net.
+    pub fn contract(&mut self, v: NodeId, u: NodeId) -> Memento {
+        assert_ne!(v, u, "cannot contract a node onto itself");
+        debug_assert!(self.active[v as usize], "contracted node must be active");
+        debug_assert!(self.active[u as usize], "representative must be active");
+        // drop events of previously reverted mementos before recording
+        self.events.truncate(self.event_cursor);
+        let events_start = self.events.len();
+        let u_incident_len = self.incident[u as usize].len();
+        // take v's list to split the borrow; it is put back untouched as
+        // the frozen I(v) record the uncontraction replays
+        let v_nets = std::mem::take(&mut self.incident[v as usize]);
+        for &e in &v_nets {
+            let off = self.net_offsets[e as usize] as usize;
+            let a = self.active_pins[e as usize] as usize;
+            let mut v_slot = usize::MAX;
+            let mut u_present = false;
+            for (i, &p) in self.pins[off..off + a].iter().enumerate() {
+                if p == v {
+                    v_slot = off + i;
+                    if u_present {
+                        break;
+                    }
+                } else if p == u {
+                    u_present = true;
+                    if v_slot != usize::MAX {
+                        break;
+                    }
+                }
+            }
+            debug_assert_ne!(v_slot, usize::MAX, "net {e} must contain pin {v}");
+            if u_present {
+                // shared net: swap v's pin into the inactive suffix
+                self.pins.swap(v_slot, off + a - 1);
+                self.active_pins[e as usize] = (a - 1) as u32;
+                self.num_active_pins -= 1;
+                self.push_event(PinEvent { net: e, slot: v_slot, removed: true });
+            } else {
+                // v-only net: the pin slot and the net pass to u
+                self.pins[v_slot] = u;
+                self.push_event(PinEvent { net: e, slot: v_slot, removed: false });
+                let list = &mut self.incident[u as usize];
+                if list.len() == list.capacity() {
+                    self.structural_grows += 1;
+                }
+                list.push(e);
+            }
+        }
+        self.incident[v as usize] = v_nets;
+        self.node_weight[u as usize] += self.node_weight[v as usize];
+        self.active[v as usize] = false;
+        self.num_active -= 1;
+        self.event_cursor = self.events.len();
+        Memento { v, u, events_start, events_end: self.events.len(), u_incident_len }
+    }
+
+    /// Revert a suffix of the contraction sequence **in place**. `batch`
+    /// must be the most recent still-applied mementos in their original
+    /// contraction order; they are reverted back-to-front (LIFO). Cost
+    /// O(batch events); performs zero allocations.
+    ///
+    /// The batch's events stay readable above the stack cursor afterwards
+    /// so [`Self::reactivated_nets`] can drive the partition layer's
+    /// incremental Φ/Λ repair.
+    pub fn uncontract_batch(&mut self, batch: &[Memento]) {
+        for m in batch.iter().rev() {
+            debug_assert_eq!(
+                self.event_cursor, m.events_end,
+                "mementos must be reverted in LIFO order"
+            );
+            debug_assert!(!self.active[m.v as usize]);
+            debug_assert!(self.active[m.u as usize]);
+            for ev in self.events[m.events_start..m.events_end].iter().rev() {
+                let off = self.net_offsets[ev.net as usize] as usize;
+                if ev.removed {
+                    // inverse of: swap(slot, off+a-1); active -= 1
+                    let a = self.active_pins[ev.net as usize] as usize;
+                    self.active_pins[ev.net as usize] = (a + 1) as u32;
+                    self.pins.swap(ev.slot, off + a);
+                    self.num_active_pins += 1;
+                    debug_assert_eq!(self.pins[ev.slot], m.v);
+                } else {
+                    debug_assert_eq!(self.pins[ev.slot], m.u);
+                    self.pins[ev.slot] = m.v;
+                }
+            }
+            self.incident[m.u as usize].truncate(m.u_incident_len);
+            self.node_weight[m.u as usize] -= self.node_weight[m.v as usize];
+            self.active[m.v as usize] = true;
+            self.num_active += 1;
+            self.event_cursor = m.events_start;
+        }
+    }
+
+    /// The nets whose pin list regained `m.v` when `m` was uncontracted
+    /// (*removed*-pin events): exactly the nets whose pin count Φ(e, Π(u))
+    /// must be incremented by the partition repair. Valid after
+    /// [`Self::uncontract_batch`] until the next contraction.
+    pub fn reactivated_nets<'a>(&'a self, m: &Memento) -> impl Iterator<Item = EdgeId> + 'a {
+        self.events[m.events_start..m.events_end]
+            .iter()
+            .filter(|ev| ev.removed)
+            .map(|ev| ev.net)
+    }
+
+    /// Render the current coarse state as a static [`Hypergraph`] with
+    /// consecutive node ids (nets shrunk to ≤ 1 pin are dropped; identical
+    /// nets are kept separate — the km1/cut metrics are unaffected). Used
+    /// once, for initial partitioning on the coarsest state.
+    pub fn freeze(&self) -> FrozenSnapshot {
+        let n = self.active.len();
+        let mut to_dynamic: Vec<NodeId> = Vec::with_capacity(self.num_active);
+        let mut to_coarse: Vec<NodeId> = vec![crate::INVALID_NODE; n];
+        for u in 0..n {
+            if self.active[u] {
+                to_coarse[u] = to_dynamic.len() as NodeId;
+                to_dynamic.push(u as NodeId);
+            }
+        }
+        let mut nets: Vec<Vec<NodeId>> = Vec::new();
+        let mut net_w: Vec<EdgeWeight> = Vec::new();
+        for e in 0..self.net_weight.len() as EdgeId {
+            let pins = HypergraphOps::pins(self, e);
+            if pins.len() < 2 {
+                continue;
+            }
+            nets.push(pins.iter().map(|&p| to_coarse[p as usize]).collect());
+            net_w.push(self.net_weight[e as usize]);
+        }
+        let node_w: Vec<NodeWeight> =
+            to_dynamic.iter().map(|&u| self.node_weight[u as usize]).collect();
+        let hg = Hypergraph::from_nets(to_dynamic.len(), &nets, Some(node_w), Some(net_w));
+        FrozenSnapshot { hg, to_dynamic }
+    }
+
+    /// Structural sanity check over the active state (tests and debug
+    /// assertions): incidence symmetry, distinct active pins, weight
+    /// conservation and counter consistency.
+    pub fn validate(&self) -> Result<(), String> {
+        let n = self.active.len();
+        let mut active_weight: NodeWeight = 0;
+        let mut seen_pins = 0usize;
+        for u in 0..n as NodeId {
+            if !self.active[u as usize] {
+                continue;
+            }
+            active_weight += self.node_weight[u as usize];
+            for &e in &self.incident[u as usize] {
+                if !HypergraphOps::pins(self, e).contains(&u) {
+                    return Err(format!("incidence mismatch: net {e} misses pin {u}"));
+                }
+            }
+        }
+        if active_weight != self.total_weight {
+            return Err(format!(
+                "active weight {active_weight} != total {}",
+                self.total_weight
+            ));
+        }
+        for e in 0..self.net_weight.len() as EdgeId {
+            let pins = HypergraphOps::pins(self, e);
+            seen_pins += pins.len();
+            let mut sorted: Vec<NodeId> = pins.to_vec();
+            sorted.sort_unstable();
+            for w in sorted.windows(2) {
+                if w[0] == w[1] {
+                    return Err(format!("net {e} has duplicate active pin {}", w[0]));
+                }
+            }
+            for &p in pins {
+                if !self.active[p as usize] {
+                    return Err(format!("net {e} has inactive pin {p}"));
+                }
+                if !self.incident[p as usize].contains(&e) {
+                    return Err(format!("pin {p} of net {e} misses the net in I({p})"));
+                }
+            }
+            let cap = (self.net_offsets[e as usize + 1] - self.net_offsets[e as usize]) as usize;
+            if pins.len() > cap {
+                return Err(format!("net {e} exceeds its pin capacity"));
+            }
+        }
+        if seen_pins != self.num_active_pins {
+            return Err(format!(
+                "pin counter {} != recount {seen_pins}",
+                self.num_active_pins
+            ));
+        }
+        if self.active.iter().filter(|&&a| a).count() != self.num_active {
+            return Err("active-node counter mismatch".into());
+        }
+        Ok(())
+    }
+}
+
+impl HypergraphOps for DynamicHypergraph {
+    #[inline]
+    fn num_nodes(&self) -> usize {
+        self.active.len()
+    }
+
+    #[inline]
+    fn num_nets(&self) -> usize {
+        self.net_weight.len()
+    }
+
+    #[inline]
+    fn num_pins(&self) -> usize {
+        self.num_active_pins
+    }
+
+    #[inline]
+    fn pins(&self, e: EdgeId) -> &[NodeId] {
+        let off = self.net_offsets[e as usize] as usize;
+        &self.pins[off..off + self.active_pins[e as usize] as usize]
+    }
+
+    #[inline]
+    fn incident_nets(&self, u: NodeId) -> &[EdgeId] {
+        if self.active[u as usize] {
+            &self.incident[u as usize]
+        } else {
+            &[]
+        }
+    }
+
+    #[inline]
+    fn node_weight(&self, u: NodeId) -> NodeWeight {
+        self.node_weight[u as usize]
+    }
+
+    #[inline]
+    fn net_weight(&self, e: EdgeId) -> EdgeWeight {
+        self.net_weight[e as usize]
+    }
+
+    #[inline]
+    fn total_weight(&self) -> NodeWeight {
+        self.total_weight
+    }
+
+    #[inline]
+    fn max_net_size(&self) -> usize {
+        self.max_net_capacity
+    }
+
+    #[inline]
+    fn is_active_node(&self, u: NodeId) -> bool {
+        self.active[u as usize]
+    }
+
+    #[inline]
+    fn num_active_nodes(&self) -> usize {
+        self.num_active
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Hypergraph {
+        // 7 nodes, 4 nets — the classic KaHyPar example topology
+        Hypergraph::from_nets(
+            7,
+            &[vec![0, 2], vec![0, 1, 3, 4], vec![3, 4, 6], vec![2, 5, 6]],
+            None,
+            None,
+        )
+    }
+
+    fn pin_set(d: &DynamicHypergraph, e: EdgeId) -> Vec<NodeId> {
+        let mut p: Vec<NodeId> = HypergraphOps::pins(d, e).to_vec();
+        p.sort_unstable();
+        p
+    }
+
+    #[test]
+    fn conversion_preserves_structure() {
+        let hg = tiny();
+        let d = DynamicHypergraph::from_hypergraph(&hg);
+        assert_eq!(HypergraphOps::num_nodes(&d), 7);
+        assert_eq!(HypergraphOps::num_nets(&d), 4);
+        assert_eq!(HypergraphOps::num_pins(&d), 12);
+        assert_eq!(d.num_active_nodes(), 7);
+        assert_eq!(pin_set(&d, 1), vec![0, 1, 3, 4]);
+        assert_eq!(HypergraphOps::total_weight(&d), 7);
+        d.validate().unwrap();
+    }
+
+    #[test]
+    fn contract_shared_and_exclusive_nets() {
+        let hg = tiny();
+        let mut d = DynamicHypergraph::from_hypergraph(&hg);
+        // contract 4 onto 3: net1 {0,1,3,4} and net2 {3,4,6} are shared
+        // (pin 4 removed), node 4 has no exclusive nets
+        let m = d.contract(4, 3);
+        assert_eq!(pin_set(&d, 1), vec![0, 1, 3]);
+        assert_eq!(pin_set(&d, 2), vec![3, 6]);
+        assert_eq!(HypergraphOps::node_weight(&d, 3), 2);
+        assert!(!d.is_active_node(4));
+        assert_eq!(d.num_active_nodes(), 6);
+        assert_eq!(d.reactivated_nets(&m).count(), 2);
+        d.validate().unwrap();
+
+        // contract 3 onto 0: net1 shared (remove 3); net2 {3,6} exclusive
+        // to 3 → pin replaced by 0
+        let m2 = d.contract(3, 0);
+        assert_eq!(pin_set(&d, 1), vec![0, 1]);
+        assert_eq!(pin_set(&d, 2), vec![0, 6]);
+        assert_eq!(HypergraphOps::node_weight(&d, 0), 3);
+        assert_eq!(d.reactivated_nets(&m2).count(), 1);
+        d.validate().unwrap();
+
+        // revert both; the structure must be bit-equivalent to the input
+        d.uncontract_batch(&[m, m2]);
+        assert_eq!(d.num_active_nodes(), 7);
+        for e in 0..4 {
+            assert_eq!(pin_set(&d, e), {
+                let mut p = hg.pins(e).to_vec();
+                p.sort_unstable();
+                p
+            });
+        }
+        for u in 0..7 {
+            assert_eq!(HypergraphOps::node_weight(&d, u), 1);
+            let mut a: Vec<EdgeId> = HypergraphOps::incident_nets(&d, u).to_vec();
+            a.sort_unstable();
+            let mut b: Vec<EdgeId> = hg.incident_nets(u).to_vec();
+            b.sort_unstable();
+            assert_eq!(a, b);
+        }
+        d.validate().unwrap();
+    }
+
+    #[test]
+    fn chained_contractions_revert_in_batches() {
+        let hg = tiny();
+        let mut d = DynamicHypergraph::from_hypergraph(&hg);
+        let seq =
+            vec![d.contract(1, 0), d.contract(4, 3), d.contract(3, 0), d.contract(6, 5)];
+        assert_eq!(d.num_active_nodes(), 3);
+        assert_eq!(HypergraphOps::node_weight(&d, 0), 4);
+        d.validate().unwrap();
+        // batch 1: revert the last two
+        d.uncontract_batch(&seq[2..]);
+        assert_eq!(d.num_active_nodes(), 5);
+        assert_eq!(HypergraphOps::node_weight(&d, 0), 2);
+        assert_eq!(HypergraphOps::node_weight(&d, 3), 2);
+        d.validate().unwrap();
+        // batch 2: back to the input
+        d.uncontract_batch(&seq[..2]);
+        assert_eq!(d.num_active_nodes(), 7);
+        assert_eq!(HypergraphOps::num_pins(&d), 12);
+        d.validate().unwrap();
+    }
+
+    #[test]
+    fn uncontraction_allocates_nothing() {
+        let hg = tiny();
+        let mut d = DynamicHypergraph::from_hypergraph(&hg);
+        d.reserve_events(16);
+        let seq = vec![d.contract(1, 0), d.contract(4, 3), d.contract(3, 0)];
+        let grows = d.structural_grows();
+        d.uncontract_batch(&seq);
+        assert_eq!(d.structural_grows(), grows, "uncontract must not allocate");
+        // re-contracting the same sequence fits the retained capacity
+        let mut d2_seq = Vec::new();
+        for m in &seq {
+            d2_seq.push(d.contract(m.v, m.u));
+        }
+        assert_eq!(d.structural_grows(), grows, "re-contraction reuses capacity");
+        d.uncontract_batch(&d2_seq);
+        d.validate().unwrap();
+    }
+
+    #[test]
+    fn freeze_matches_active_state() {
+        let hg = tiny();
+        let mut d = DynamicHypergraph::from_hypergraph(&hg);
+        d.contract(1, 0);
+        d.contract(4, 3);
+        let snap = d.freeze();
+        snap.hg.validate().unwrap();
+        assert_eq!(snap.hg.num_nodes(), 5);
+        assert_eq!(snap.hg.total_weight(), 7);
+        assert_eq!(snap.to_dynamic.len(), 5);
+        // every coarse node maps to an active slot with the same weight
+        for (c, &u) in snap.to_dynamic.iter().enumerate() {
+            assert!(d.is_active_node(u));
+            assert_eq!(snap.hg.node_weight(c as NodeId), HypergraphOps::node_weight(&d, u));
+        }
+        // no single-pin nets survive the freeze
+        for e in snap.hg.nets() {
+            assert!(snap.hg.net_size(e) >= 2);
+        }
+    }
+
+    #[test]
+    fn net_shrinks_to_single_pin_and_back() {
+        // net0 {0,2}: contracting 2 onto 0 shrinks it to {0}
+        let hg = tiny();
+        let mut d = DynamicHypergraph::from_hypergraph(&hg);
+        let m = d.contract(2, 0);
+        assert_eq!(pin_set(&d, 0), vec![0]);
+        // net3 {2,5,6} was exclusive to 2 → {0,5,6}
+        assert_eq!(pin_set(&d, 3), vec![0, 5, 6]);
+        d.validate().unwrap();
+        d.uncontract_batch(&[m]);
+        assert_eq!(pin_set(&d, 0), vec![0, 2]);
+        assert_eq!(pin_set(&d, 3), vec![2, 5, 6]);
+        d.validate().unwrap();
+    }
+}

@@ -1,16 +1,146 @@
-//! The static hypergraph data structure (paper §2, §4.2).
+//! The hypergraph data structures (paper §2, §4.2, §9).
 //!
-//! Stores the pin-lists of nets and the incident nets of nodes in two
-//! adjacency (CSR) arrays, plus node/net weights. Coarsening produces new
-//! `Hypergraph` values via [`contraction::contract`]; recursive
-//! bipartitioning extracts induced subhypergraphs via
-//! [`subhypergraph::extract_block`].
+//! Two representations share one read interface ([`HypergraphOps`]):
+//!
+//! * [`Hypergraph`] — the **static** CSR structure: the pin-lists of nets
+//!   and the incident nets of nodes in two adjacency arrays, plus node/net
+//!   weights. Multilevel coarsening produces new `Hypergraph` values via
+//!   [`contraction::contract`]; recursive bipartitioning extracts induced
+//!   subhypergraphs via [`subhypergraph::extract_block`].
+//! * [`dynamic::DynamicHypergraph`] — the **dynamic** structure of the
+//!   n-level scheme (paper §9): single-node contractions mutate the shared
+//!   pin-lists in place (active-size markers) and record a [`dynamic::Memento`]
+//!   on a stack; batch uncontractions revert the stack suffix at
+//!   O(Σ|I(batch)|) cost instead of re-materializing a snapshot.
+//!
+//! The partition layer ([`crate::partition::PartitionedHypergraph`]) and
+//! the localized refiners are generic over [`HypergraphOps`], so the same
+//! move operation, gain machinery and LP/FM searches run unchanged on
+//! either representation.
 
 pub mod bipartite;
 pub mod contraction;
+pub mod dynamic;
 pub mod subhypergraph;
 
 use crate::{EdgeId, EdgeWeight, NodeId, NodeWeight};
+
+/// Read-side interface shared by the static [`Hypergraph`] and the
+/// n-level [`dynamic::DynamicHypergraph`].
+///
+/// The dynamic structure keeps one slot per *input* node for its whole
+/// lifetime; contracted (inactive) slots report an empty incident-net
+/// list, degree 0 and `is_active_node == false`, and never appear in any
+/// pin list — so generic code that walks pins only ever reaches active
+/// nodes, and code that iterates `nodes()` must either tolerate isolated
+/// nodes (LP/FM/rebalance do: a node without nets is never a border node)
+/// or skip inactive slots explicitly (weight accumulation does).
+pub trait HypergraphOps: Send + Sync {
+    /// Number of node slots `n` (for the dynamic structure: input nodes,
+    /// including inactive ones — all node-indexed state is sized by this).
+    fn num_nodes(&self) -> usize;
+    /// Number of nets `m`.
+    fn num_nets(&self) -> usize;
+    /// Number of (active) pins `p`.
+    fn num_pins(&self) -> usize;
+    /// Pins of net `e` (the active prefix for the dynamic structure).
+    fn pins(&self, e: EdgeId) -> &[NodeId];
+    /// Incident nets `I(u)` (empty for inactive dynamic slots).
+    fn incident_nets(&self, u: NodeId) -> &[EdgeId];
+    /// Node weight `c(u)` — for the dynamic structure the *current
+    /// cluster* weight of an active representative.
+    fn node_weight(&self, u: NodeId) -> NodeWeight;
+    /// Net weight `ω(e)`.
+    fn net_weight(&self, e: EdgeId) -> EdgeWeight;
+    /// Total node weight `c(V)` (invariant under contraction).
+    fn total_weight(&self) -> NodeWeight;
+    /// Upper bound on `|e|` over the structure's lifetime (sizes packed
+    /// pin-count storage; the dynamic structure reports the input bound).
+    fn max_net_size(&self) -> usize;
+
+    /// Net size `|e|`.
+    #[inline]
+    fn net_size(&self, e: EdgeId) -> usize {
+        self.pins(e).len()
+    }
+
+    /// Node degree `d(u) = |I(u)|`.
+    #[inline]
+    fn degree(&self, u: NodeId) -> usize {
+        self.incident_nets(u).len()
+    }
+
+    /// Iterator over all node slots (including inactive dynamic slots).
+    #[inline]
+    fn nodes(&self) -> std::ops::Range<NodeId> {
+        0..self.num_nodes() as NodeId
+    }
+
+    /// Iterator over all net ids.
+    #[inline]
+    fn nets(&self) -> std::ops::Range<EdgeId> {
+        0..self.num_nets() as EdgeId
+    }
+
+    /// Is `u` a live node (always true for the static structure)?
+    #[inline]
+    fn is_active_node(&self, _u: NodeId) -> bool {
+        true
+    }
+
+    /// Number of live nodes (`num_nodes` for the static structure).
+    #[inline]
+    fn num_active_nodes(&self) -> usize {
+        self.num_nodes()
+    }
+}
+
+impl HypergraphOps for Hypergraph {
+    #[inline]
+    fn num_nodes(&self) -> usize {
+        Hypergraph::num_nodes(self)
+    }
+    #[inline]
+    fn num_nets(&self) -> usize {
+        Hypergraph::num_nets(self)
+    }
+    #[inline]
+    fn num_pins(&self) -> usize {
+        Hypergraph::num_pins(self)
+    }
+    #[inline]
+    fn pins(&self, e: EdgeId) -> &[NodeId] {
+        Hypergraph::pins(self, e)
+    }
+    #[inline]
+    fn incident_nets(&self, u: NodeId) -> &[EdgeId] {
+        Hypergraph::incident_nets(self, u)
+    }
+    #[inline]
+    fn node_weight(&self, u: NodeId) -> NodeWeight {
+        Hypergraph::node_weight(self, u)
+    }
+    #[inline]
+    fn net_weight(&self, e: EdgeId) -> EdgeWeight {
+        Hypergraph::net_weight(self, e)
+    }
+    #[inline]
+    fn total_weight(&self) -> NodeWeight {
+        Hypergraph::total_weight(self)
+    }
+    #[inline]
+    fn max_net_size(&self) -> usize {
+        Hypergraph::max_net_size(self)
+    }
+    #[inline]
+    fn net_size(&self, e: EdgeId) -> usize {
+        Hypergraph::net_size(self, e)
+    }
+    #[inline]
+    fn degree(&self, u: NodeId) -> usize {
+        Hypergraph::degree(self, u)
+    }
+}
 
 /// A weighted hypergraph `H = (V, E, c, ω)` in CSR form.
 #[derive(Clone, Debug, Default)]

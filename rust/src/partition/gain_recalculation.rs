@@ -12,6 +12,7 @@
 //! from `first_in` / `last_out` move indices and the non-moved pin counts.
 
 use super::PartitionedHypergraph;
+use crate::hypergraph::HypergraphOps;
 use crate::parallel::par_for_auto;
 use crate::util::AtomicBitset;
 use crate::{BlockId, EdgeId, Gain, NodeId};
@@ -25,26 +26,70 @@ pub struct Move {
     pub to: BlockId,
 }
 
+/// Reusable node/net-sized scratch of [`recalculate_gains_with_scratch`].
+///
+/// The two level-sized structures of Algorithm 6.2 — the per-node move
+/// index and the processed-net bitset — are kept allocated across calls
+/// and reset *sparsely* (only the entries the move sequence touched), so
+/// a seeded n-level FM invocation costs O(Σ|I(moves)|) instead of
+/// O(n + m) per batch. The invariant between calls: every `move_idx`
+/// entry is `u32::MAX` and every `processed` bit is clear.
+pub struct RecalcScratch {
+    move_idx: Vec<u32>,
+    processed: AtomicBitset,
+}
+
+impl Default for RecalcScratch {
+    fn default() -> Self {
+        RecalcScratch { move_idx: Vec::new(), processed: AtomicBitset::new(0) }
+    }
+}
+
+impl RecalcScratch {
+    /// Grow to cover `n` nodes and `m` nets (new entries enter in the
+    /// reset state; never shrinks).
+    pub fn ensure(&mut self, n: usize, m: usize) {
+        if self.move_idx.len() < n {
+            self.move_idx.resize(n, u32::MAX);
+        }
+        self.processed.ensure_len(m);
+    }
+}
+
 /// Recalculate the exact in-order gains of `moves` (Algorithm 6.2),
-/// parallel over the hyperedges touched by moved nodes.
+/// parallel over the hyperedges touched by moved nodes. Convenience
+/// wrapper allocating throwaway scratch — the FM workspace goes through
+/// [`recalculate_gains_with_scratch`].
 ///
 /// `phg` must reflect the state *after* all moves were applied.
-pub fn recalculate_gains(
-    phg: &PartitionedHypergraph,
+pub fn recalculate_gains<H: HypergraphOps>(
+    phg: &PartitionedHypergraph<H>,
     moves: &[Move],
     threads: usize,
+) -> Vec<Gain> {
+    let mut scratch = RecalcScratch::default();
+    recalculate_gains_with_scratch(phg, moves, threads, &mut scratch)
+}
+
+/// Algorithm 6.2 on reusable scratch (see [`RecalcScratch`]).
+pub fn recalculate_gains_with_scratch<H: HypergraphOps>(
+    phg: &PartitionedHypergraph<H>,
+    moves: &[Move],
+    threads: usize,
+    scratch: &mut RecalcScratch,
 ) -> Vec<Gain> {
     let hg = phg.hypergraph();
     let k = phg.k();
     let l = moves.len();
-    // move index per node (usize::MAX = unmoved)
-    let mut move_idx = vec![u32::MAX; hg.num_nodes()];
+    scratch.ensure(hg.num_nodes(), hg.num_nets());
+    let move_idx = &mut scratch.move_idx;
     for (i, m) in moves.iter().enumerate() {
         debug_assert_eq!(move_idx[m.node as usize], u32::MAX, "node moved twice");
         move_idx[m.node as usize] = i as u32;
     }
     let gains: Vec<AtomicI64> = (0..l).map(|_| AtomicI64::new(0)).collect();
-    let processed = AtomicBitset::new(hg.num_nets());
+    let processed = &scratch.processed;
+    let move_idx = &*move_idx;
 
     par_for_auto(l, threads, |mi| {
         let u = moves[mi].node;
@@ -52,15 +97,26 @@ pub fn recalculate_gains(
             if processed.test_and_set(e as usize) {
                 continue; // another thread handles this net
             }
-            process_net(phg, e, moves, &move_idx, &gains, k);
+            process_net(phg, e, moves, move_idx, &gains, k);
         }
     });
+
+    // sparse reset: exactly the touched entries go back to the between-
+    // calls invariant (all-MAX / all-clear)
+    par_for_auto(l, threads, |mi| {
+        for &e in hg.incident_nets(moves[mi].node) {
+            processed.clear_bit(e as usize);
+        }
+    });
+    for m in moves {
+        scratch.move_idx[m.node as usize] = u32::MAX;
+    }
     gains.into_iter().map(|g| g.into_inner()).collect()
 }
 
 /// Algorithm 6.2 for a single hyperedge.
-fn process_net(
-    phg: &PartitionedHypergraph,
+fn process_net<H: HypergraphOps>(
+    phg: &PartitionedHypergraph<H>,
     e: EdgeId,
     moves: &[Move],
     move_idx: &[u32],
@@ -123,8 +179,8 @@ pub fn best_prefix(gains: &[Gain]) -> (usize, Gain) {
 /// Revert the moves after the best prefix (in reverse order) and return
 /// `(prefix_len, prefix_gain)`. The partition afterwards reflects exactly
 /// `moves[..prefix_len]`.
-pub fn revert_to_best_prefix(
-    phg: &PartitionedHypergraph,
+pub fn revert_to_best_prefix<H: HypergraphOps>(
+    phg: &PartitionedHypergraph<H>,
     moves: &[Move],
     gains: &[Gain],
     gain_table: Option<&super::GainTable>,
@@ -138,8 +194,8 @@ pub fn revert_to_best_prefix(
 
 /// Reference implementation: sequential replay of the move sequence from
 /// the pre-move state. Used by tests to validate Algorithm 6.2.
-pub fn replay_gains_reference(
-    phg_pre: &PartitionedHypergraph,
+pub fn replay_gains_reference<H: HypergraphOps>(
+    phg_pre: &PartitionedHypergraph<H>,
     moves: &[Move],
 ) -> Vec<Gain> {
     moves
@@ -198,6 +254,34 @@ mod tests {
                 let got = recalculate_gains(&pre, &moves, threads);
                 assert_eq!(got, expected, "seed {seed} threads {threads}");
             }
+        }
+    }
+
+    #[test]
+    fn scratch_reuse_is_bit_identical() {
+        // the pooled scratch must behave exactly like throwaway scratch,
+        // including when reused across instances of different sizes (the
+        // sparse reset restores the between-calls invariant)
+        let mut scratch = RecalcScratch::default();
+        for seed in 0..10 {
+            let (hg, parts, k) = random_instance(seed ^ 0x55);
+            let mut rng = Rng::new(seed ^ 0x77);
+            let mut moves = Vec::new();
+            for u in rng.sample_indices(hg.num_nodes(), 12) {
+                let from = parts[u];
+                let to = ((from as usize + 1 + rng.next_below(k - 1)) % k) as BlockId;
+                moves.push(Move { node: u as NodeId, from, to });
+            }
+            let pre = PartitionedHypergraph::new(hg.clone(), k);
+            pre.assign_all(&parts, 1);
+            let expected = replay_gains_reference(&pre, &moves);
+            let fresh = recalculate_gains(&pre, &moves, 2);
+            let pooled = recalculate_gains_with_scratch(&pre, &moves, 2, &mut scratch);
+            assert_eq!(fresh, expected, "seed {seed}");
+            assert_eq!(pooled, expected, "seed {seed}: pooled scratch differs");
+            // run twice on the same scratch: the sparse reset must hold
+            let again = recalculate_gains_with_scratch(&pre, &moves, 2, &mut scratch);
+            assert_eq!(again, expected, "seed {seed}: second pooled run differs");
         }
     }
 

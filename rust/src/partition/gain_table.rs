@@ -9,6 +9,7 @@
 //! benefits after each round (the paper's "benefit peculiarities").
 
 use super::PartitionedHypergraph;
+use crate::hypergraph::HypergraphOps;
 use crate::parallel::par_for_auto;
 use crate::{BlockId, EdgeId, Gain, NodeId};
 use std::sync::atomic::{AtomicI64, Ordering};
@@ -53,7 +54,7 @@ impl GainTable {
     }
 
     /// Recompute all entries from the partition (parallel over nodes).
-    pub fn initialize(&self, phg: &PartitionedHypergraph, threads: usize) {
+    pub fn initialize<H: HypergraphOps>(&self, phg: &PartitionedHypergraph<H>, threads: usize) {
         let n = phg.hypergraph().num_nodes();
         par_for_auto(n, threads, |u| {
             let u = u as NodeId;
@@ -95,9 +96,9 @@ impl GainTable {
     }
 
     /// Best feasible move for `u` using only table lookups (O(k)).
-    pub fn max_gain_move(
+    pub fn max_gain_move<H: HypergraphOps>(
         &self,
-        phg: &PartitionedHypergraph,
+        phg: &PartitionedHypergraph<H>,
         u: NodeId,
     ) -> Option<(Gain, BlockId)> {
         let from = phg.block_of(u);
@@ -123,9 +124,9 @@ impl GainTable {
 
     /// Update rules 1–4 (paper §6.2), triggered by the move operation for
     /// each incident net with the post-transition pin counts.
-    pub(crate) fn update_for_pin_change(
+    pub(crate) fn update_for_pin_change<H: HypergraphOps>(
         &self,
-        phg: &PartitionedHypergraph,
+        phg: &PartitionedHypergraph<H>,
         e: EdgeId,
         from: BlockId,
         to: BlockId,
@@ -168,7 +169,7 @@ impl GainTable {
 
     /// Recompute `b(u)` from scratch (post-round benefit repair for moved
     /// nodes — the fix for the benefit race described in the paper).
-    pub fn recompute_benefit(&self, phg: &PartitionedHypergraph, u: NodeId) {
+    pub fn recompute_benefit<H: HypergraphOps>(&self, phg: &PartitionedHypergraph<H>, u: NodeId) {
         let from = phg.block_of(u);
         let mut b: Gain = 0;
         for &e in phg.hypergraph().incident_nets(u) {
@@ -182,9 +183,9 @@ impl GainTable {
     /// Exhaustive comparison against from-scratch values (test helper —
     /// Lemma 6.1: after quiescence, penalties are exact for all nodes and
     /// benefits exact for unmoved nodes; pass `moved` to skip those).
-    pub fn verify_against(
+    pub fn verify_against<H: HypergraphOps>(
         &self,
-        phg: &PartitionedHypergraph,
+        phg: &PartitionedHypergraph<H>,
         moved: &dyn Fn(NodeId) -> bool,
     ) -> Result<(), String> {
         for u in phg.hypergraph().nodes() {

@@ -28,6 +28,27 @@
 //! accumulates block weights in per-thread buffers merged once instead of
 //! issuing one `fetch_add` per node, and rebuilds each net's pin counts
 //! lock-free (nets own disjoint words of the packed array).
+//!
+//! ## Incremental repair (n-level uncontractions & delta rebinds)
+//!
+//! The structure is generic over [`HypergraphOps`], so the same Π/Φ/Λ
+//! state binds to the static [`Hypergraph`] *or* to the n-level
+//! [`DynamicHypergraph`](crate::hypergraph::dynamic::DynamicHypergraph).
+//! Two repair paths avoid the full value rebuild entirely:
+//!
+//! * [`PartitionedHypergraph::apply_uncontractions`] — after
+//!   `DynamicHypergraph::uncontract_batch` reverted a batch of mementos in
+//!   place, each uncontracted node inherits its representative's block
+//!   (Π(v) ← Π(u)) and only the nets whose pin list regained `v` get their
+//!   pin count Φ(e, Π(u)) incremented. Replaced pins (`u → v` within one
+//!   block) and the block weights are invariant, so the repair costs
+//!   O(Σ|I(batch)|) — the §9 batch boundary never touches the other
+//!   n − O(batch) nodes.
+//! * [`PartitionedHypergraph::apply_parts_delta`] — re-assigning a
+//!   partition on the *same* hypergraph (V-cycle restarts/restores) moves
+//!   only the nodes whose block actually changed, repairing Φ/Λ/weights
+//!   through the ordinary synchronized move operation instead of
+//!   rebuilding every net.
 
 pub mod connectivity;
 pub mod gain_recalculation;
@@ -43,7 +64,8 @@ pub use pool::PartitionPool;
 use pool::PartitionBuffers;
 
 use crate::datastructures::SpinLockVec;
-use crate::hypergraph::Hypergraph;
+use crate::hypergraph::dynamic::{DynamicHypergraph, Memento};
+use crate::hypergraph::{Hypergraph, HypergraphOps};
 use crate::parallel::{par_for_auto, parallel_chunks};
 use crate::{BlockId, EdgeId, Gain, NodeId, NodeWeight};
 use connectivity::ConnectivitySets;
@@ -51,9 +73,23 @@ use pin_counts::PinCountArray;
 use std::sync::atomic::{AtomicI64, AtomicU32, Ordering};
 use std::sync::Arc;
 
-/// A k-way partitioned hypergraph.
-pub struct PartitionedHypergraph {
-    hg: Arc<Hypergraph>,
+/// The reference block weight ⌈c(V)/k⌉ every balance-related computation
+/// must share (see [`PartitionedHypergraph::reference_block_weight`]).
+#[inline]
+pub(crate) fn reference_block_weight(total: NodeWeight, k: usize) -> f64 {
+    (total as f64 / k.max(1) as f64).ceil().max(1.0)
+}
+
+/// Standard `L_max = (1+ε)·⌈c(V)/k⌉` block weight limit (paper §2).
+pub(crate) fn max_weight_for(total: NodeWeight, k: usize, eps: f64) -> NodeWeight {
+    (reference_block_weight(total, k) * (1.0 + eps)).floor() as NodeWeight
+}
+
+/// A k-way partitioned hypergraph, generic over the hypergraph
+/// representation (`Hypergraph` by default; the n-level scheme binds the
+/// same pooled state to a `DynamicHypergraph`).
+pub struct PartitionedHypergraph<H: HypergraphOps = Hypergraph> {
+    hg: Arc<H>,
     k: usize,
     part: Vec<AtomicU32>,
     block_weight: Vec<AtomicI64>,
@@ -71,9 +107,27 @@ pub struct MoveOutcome {
 }
 
 impl PartitionedHypergraph {
+    /// The reference block weight ⌈c(V)/k⌉ every balance-related
+    /// computation must share: [`Self::max_weight_for`],
+    /// [`Self::imbalance`], `PartitionedGraph::imbalance` and
+    /// `metrics::imbalance`. Clamped to ≥ 1 so zero-weight inputs stay
+    /// finite. Keeping a single definition is what guarantees
+    /// `is_balanced()` and `imbalance() <= ε` can never disagree.
+    #[inline]
+    pub fn reference_block_weight(total: NodeWeight, k: usize) -> f64 {
+        reference_block_weight(total, k)
+    }
+
+    /// Standard `L_max = (1+ε)·⌈c(V)/k⌉` block weight limits (paper §2).
+    pub fn max_weight_for(total: NodeWeight, k: usize, eps: f64) -> NodeWeight {
+        max_weight_for(total, k, eps)
+    }
+}
+
+impl<H: HypergraphOps> PartitionedHypergraph<H> {
     /// Create an unassigned partition structure (all nodes in block 0
     /// after [`Self::assign_all`]; until then Π is undefined).
-    pub fn new(hg: Arc<Hypergraph>, k: usize) -> Self {
+    pub fn new(hg: Arc<H>, k: usize) -> Self {
         let bufs = PartitionBuffers::alloc(
             hg.num_nodes(),
             hg.num_nets(),
@@ -88,7 +142,7 @@ impl PartitionedHypergraph {
     /// the `num_nodes`/`num_nets` prefix. Π, Φ, Λ and the block weights
     /// are *stale* until [`Self::assign_all`] or
     /// [`Self::rebuild_from_parts`] runs.
-    pub(crate) fn from_buffers(hg: Arc<Hypergraph>, k: usize, bufs: PartitionBuffers) -> Self {
+    pub(crate) fn from_buffers(hg: Arc<H>, k: usize, bufs: PartitionBuffers) -> Self {
         debug_assert!(bufs.part.len() >= hg.num_nodes());
         debug_assert_eq!(bufs.block_weight.len(), k);
         debug_assert!(bufs.pin_counts.nets_capacity() >= hg.num_nets());
@@ -120,26 +174,10 @@ impl PartitionedHypergraph {
         }
     }
 
-    /// The reference block weight ⌈c(V)/k⌉ every balance-related
-    /// computation must share: [`Self::max_weight_for`],
-    /// [`Self::imbalance`], `PartitionedGraph::imbalance` and
-    /// `metrics::imbalance`. Clamped to ≥ 1 so zero-weight inputs stay
-    /// finite. Keeping a single definition is what guarantees
-    /// `is_balanced()` and `imbalance() <= ε` can never disagree.
-    #[inline]
-    pub fn reference_block_weight(total: NodeWeight, k: usize) -> f64 {
-        (total as f64 / k.max(1) as f64).ceil().max(1.0)
-    }
-
-    /// Standard `L_max = (1+ε)·⌈c(V)/k⌉` block weight limits (paper §2).
-    pub fn max_weight_for(total: NodeWeight, k: usize, eps: f64) -> NodeWeight {
-        (Self::reference_block_weight(total, k) * (1.0 + eps)).floor() as NodeWeight
-    }
-
     /// Set uniform maximum block weights from the imbalance ratio ε
     /// (fills the existing limit vector — rebind-safe, no allocation).
     pub fn set_uniform_max_weight(&mut self, eps: f64) {
-        let lmax = Self::max_weight_for(self.hg.total_weight(), self.k, eps);
+        let lmax = max_weight_for(self.hg.total_weight(), self.k, eps);
         self.max_block_weight.iter_mut().for_each(|w| *w = lmax);
     }
 
@@ -196,6 +234,11 @@ impl PartitionedHypergraph {
         parallel_chunks(n, threads, |_, s, e| {
             let mut local = vec![0 as NodeWeight; self.k];
             for u in s..e {
+                // inactive dynamic slots carry no weight of their own —
+                // their cluster weight lives at the active representative
+                if !self.hg.is_active_node(u as NodeId) {
+                    continue;
+                }
                 let b = self.part[u].load(Ordering::Relaxed) as usize;
                 debug_assert!(b < self.k);
                 local[b] += self.hg.node_weight(u as NodeId);
@@ -222,12 +265,12 @@ impl PartitionedHypergraph {
     // ------------------------------------------------------ accessors
 
     #[inline]
-    pub fn hypergraph(&self) -> &Hypergraph {
+    pub fn hypergraph(&self) -> &H {
         &self.hg
     }
 
     #[inline]
-    pub fn hypergraph_arc(&self) -> Arc<Hypergraph> {
+    pub fn hypergraph_arc(&self) -> Arc<H> {
         self.hg.clone()
     }
 
@@ -453,7 +496,7 @@ impl PartitionedHypergraph {
     /// by k. Robust against empty/zero-weight inputs (denominator clamped
     /// to 1) and blocks of weight 0 (they contribute −1, never NaN).
     pub fn imbalance(&self) -> f64 {
-        let per = Self::reference_block_weight(self.hg.total_weight(), self.k);
+        let per = reference_block_weight(self.hg.total_weight(), self.k);
         (0..self.k as BlockId)
             .map(|b| self.block_weight(b) as f64 / per - 1.0)
             .fold(-1.0, f64::max)
@@ -468,14 +511,16 @@ impl PartitionedHypergraph {
     /// (used by tests and debug assertions — Lemma 6.1's invariant).
     pub fn verify_consistency(&self) -> Result<(), String> {
         let parts = self.parts();
-        // block weights
+        // block weights (inactive dynamic slots carry no weight)
         let mut bw = vec![0 as NodeWeight; self.k];
         for u in self.hg.nodes() {
             let b = parts[u as usize] as usize;
             if b >= self.k {
                 return Err(format!("node {u} has invalid block"));
             }
-            bw[b] += self.hg.node_weight(u);
+            if self.hg.is_active_node(u) {
+                bw[b] += self.hg.node_weight(u);
+            }
         }
         for b in 0..self.k {
             if bw[b] != self.block_weight(b as BlockId) {
@@ -503,6 +548,64 @@ impl PartitionedHypergraph {
             }
         }
         Ok(())
+    }
+
+    // ------------------------------------------------- incremental repair
+
+    /// Re-assign the partition to `parts` by *delta repair*: only nodes
+    /// whose block actually changes are moved (through the synchronized
+    /// move operation), so Φ/Λ/weights are touched only for nets incident
+    /// to changed nodes — O(Σ|I(changed)|) instead of the O(n + m·k) full
+    /// value rebuild. The result is identical to
+    /// [`Self::assign_all`]`(parts)` on any starting state whose Π/Φ/Λ are
+    /// mutually consistent.
+    pub fn apply_parts_delta(&self, parts: &[BlockId], threads: usize) {
+        let n = self.hg.num_nodes();
+        assert_eq!(parts.len(), n);
+        par_for_auto(n, threads, |u| {
+            let to = parts[u];
+            debug_assert!((to as usize) < self.k);
+            if self.part[u].load(Ordering::Acquire) == to {
+                return;
+            }
+            if self.hg.is_active_node(u as NodeId) {
+                self.move_unchecked(u as NodeId, to, None);
+            } else {
+                // inactive dynamic slots have no pins and no weight of
+                // their own: re-labeling them is a pure Π store
+                self.part[u].store(to, Ordering::Release);
+            }
+        });
+    }
+}
+
+impl PartitionedHypergraph<DynamicHypergraph> {
+    /// Incremental Π/Φ/Λ repair after
+    /// [`DynamicHypergraph::uncontract_batch`] reverted `batch` in place
+    /// (paper §9): processed in the same reverse order, each uncontracted
+    /// node inherits its representative's *current* block (Π(v) ← Π(u)),
+    /// and Φ(e, Π(u)) is incremented for exactly the nets whose pin list
+    /// regained `v` ([`DynamicHypergraph::reactivated_nets`]). Replaced
+    /// pins swap `u → v` inside one block and block weights split within
+    /// one block, so nothing else changes — O(Σ|I(batch)|) total, zero
+    /// allocations, no `rebuild_from_parts`.
+    pub fn apply_uncontractions(&self, batch: &[Memento]) {
+        for m in batch.iter().rev() {
+            let b = self.block_of(m.u);
+            debug_assert!((b as usize) < self.k);
+            self.part[m.v as usize].store(b, Ordering::Release);
+            for e in self.hg.reactivated_nets(m) {
+                let ei = e as usize;
+                self.net_locks.lock(ei);
+                let phi = self.pin_counts.inc(ei, b as usize);
+                self.net_locks.unlock(ei);
+                // u itself still holds a pin of e in block b (a *removed*
+                // pin implies u was — and, with the batch suffix already
+                // reverted, still is — an active pin of e), so the net was
+                // already connected to b: Λ cannot change here.
+                debug_assert!(phi >= 2, "Φ({e},{b}) must have counted u already");
+            }
+        }
     }
 }
 

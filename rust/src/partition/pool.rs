@@ -22,10 +22,21 @@
 //! returned to the caller — the pool never copies level-sized state and
 //! never allocates after the first bind (asserted by the
 //! `structural_allocs` counter, mirroring the gain-table counters).
+//!
+//! Three rebind flavors differ in how the *values* are treated:
+//! [`PartitionPool::rebind_level`] projects + fully rebuilds (multilevel
+//! uncoarsening, counted by `value_rebuilds`);
+//! [`PartitionPool::rebind_with_parts`] delta-repairs when the hypergraph
+//! is unchanged (V-cycle restores, counted by `delta_repairs`); and the
+//! [`PartitionPool::park`]/[`PartitionPool::unpark`]/
+//! [`PartitionPool::rebind_preserving`] trio moves the buffers without
+//! touching values at all — the n-level batch loop parks the binding,
+//! mutates the dynamic hypergraph in place, unparks and repairs only the
+//! batch delta via `apply_uncontractions`.
 
 use super::{connectivity::ConnectivitySets, pin_counts::PinCountArray, PartitionedHypergraph};
 use crate::datastructures::SpinLockVec;
-use crate::hypergraph::Hypergraph;
+use crate::hypergraph::{Hypergraph, HypergraphOps};
 use crate::parallel::{par_for_auto, SharedSlice};
 use crate::{BlockId, NodeId, NodeWeight};
 use std::sync::atomic::{AtomicI64, AtomicU32};
@@ -63,7 +74,7 @@ impl PartitionBuffers {
     /// reclaimed from a partition with a different k (e.g. a V-cycle on
     /// an externally built partition) force a counted reallocation
     /// instead of silently reusing wrong-sized state.
-    fn fits(&self, hg: &Hypergraph, k: usize) -> bool {
+    fn fits<H: HypergraphOps>(&self, hg: &H, k: usize) -> bool {
         let m = hg.num_nets();
         self.block_weight.len() == k
             && self.pin_counts.blocks() == k
@@ -89,8 +100,14 @@ pub struct PartitionPool {
     /// coarse-Π snapshot for in-place projection (coarse-level-sized use
     /// of a finest-level-sized vector)
     proj_scratch: Vec<BlockId>,
+    /// buffers of a partition temporarily released ([`Self::park`]) while
+    /// the caller mutates the hypergraph the values refer to (n-level
+    /// batch uncontractions need `&mut` on the sole-owner structure)
+    parked: Option<PartitionBuffers>,
     structural_allocs: usize,
     rebinds: usize,
+    value_rebuilds: usize,
+    delta_repairs: usize,
 }
 
 impl PartitionPool {
@@ -104,14 +121,17 @@ impl PartitionPool {
             reserved_nets: 0,
             reserved_net_size: 0,
             proj_scratch: Vec::new(),
+            parked: None,
             structural_allocs: 0,
             rebinds: 0,
+            value_rebuilds: 0,
+            delta_repairs: 0,
         }
     }
 
     /// Record the finest-level dimensions; the first bind sizes the
     /// buffers (and the projection scratch) to cover them.
-    pub fn reserve(&mut self, hg: &Hypergraph) {
+    pub fn reserve<H: HypergraphOps>(&mut self, hg: &H) {
         self.reserved_nodes = self.reserved_nodes.max(hg.num_nodes());
         self.reserved_nets = self.reserved_nets.max(hg.num_nets());
         self.reserved_net_size = self.reserved_net_size.max(hg.max_net_size());
@@ -136,13 +156,29 @@ impl PartitionPool {
         self.rebinds
     }
 
+    /// How often the partition *values* (Π/Φ/Λ/weights) were rebuilt from
+    /// scratch — `assign_all` on a bind or the per-level
+    /// `rebuild_from_parts` of a projection rebind. The incremental
+    /// n-level path keeps this at 1 (the post-IP bind) across an entire
+    /// uncoarsening sequence: batch boundaries go through
+    /// [`Self::park`]/[`Self::unpark`] + `apply_uncontractions` instead.
+    pub fn value_rebuilds(&self) -> usize {
+        self.value_rebuilds
+    }
+
+    /// How often [`Self::rebind_with_parts`] could repair the values by a
+    /// same-hypergraph delta instead of a full rebuild.
+    pub fn delta_repairs(&self) -> usize {
+        self.delta_repairs
+    }
+
     /// Produce buffers able to host `hg`: reuse the `reclaimed` memory of
     /// the previous binding when it fits, otherwise perform one (counted)
     /// allocation sized to the maximum of `hg` and the reservation.
-    fn buffers_for(
+    fn buffers_for<H: HypergraphOps>(
         &mut self,
         reclaimed: Option<PartitionBuffers>,
-        hg: &Hypergraph,
+        hg: &H,
     ) -> PartitionBuffers {
         match reclaimed {
             Some(b) if b.fits(hg, self.k) => b,
@@ -160,15 +196,16 @@ impl PartitionPool {
 
     /// Shared bind sequence: buffers → partition → uniform limits → full
     /// assignment (the one place the bind semantics live).
-    fn bind_impl(
+    fn bind_impl<H: HypergraphOps>(
         &mut self,
         reclaimed: Option<PartitionBuffers>,
-        hg: Arc<Hypergraph>,
+        hg: Arc<H>,
         parts: &[BlockId],
         eps: f64,
         threads: usize,
-    ) -> PartitionedHypergraph {
-        let bufs = self.buffers_for(reclaimed, &hg);
+    ) -> PartitionedHypergraph<H> {
+        self.value_rebuilds += 1;
+        let bufs = self.buffers_for(reclaimed, &*hg);
         let mut phg = PartitionedHypergraph::from_buffers(hg, self.k, bufs);
         phg.set_uniform_max_weight(eps);
         phg.assign_all(parts, threads);
@@ -178,29 +215,90 @@ impl PartitionPool {
     /// Bind the pooled state to `hg` with the given assignment — the
     /// first (coarsest) level of an uncoarsening sequence. Uniform block
     /// weight limits are derived from `eps`.
-    pub fn bind(
+    pub fn bind<H: HypergraphOps>(
         &mut self,
-        hg: Arc<Hypergraph>,
+        hg: Arc<H>,
         parts: &[BlockId],
         eps: f64,
         threads: usize,
-    ) -> PartitionedHypergraph {
+    ) -> PartitionedHypergraph<H> {
         self.bind_impl(None, hg, parts, eps, threads)
     }
 
     /// Re-point an existing binding at `hg` with an explicit assignment
-    /// (V-cycle restarts, n-level batch snapshots). Reuses the memory of
-    /// `phg`; a full in-place value rebuild, no allocation.
-    pub fn rebind_with_parts(
+    /// (V-cycle restarts and restores). When `hg` **is** the hypergraph
+    /// `phg` is already bound to (and the block dimension matches), the
+    /// values are repaired by a *delta*: only nodes whose block changes
+    /// are moved, touching only their incident nets — the ROADMAP's
+    /// "true delta repair" instead of the full value rebuild. Otherwise
+    /// the memory is reused and the values rebuilt in full.
+    pub fn rebind_with_parts<H: HypergraphOps>(
         &mut self,
-        phg: PartitionedHypergraph,
-        hg: Arc<Hypergraph>,
+        mut phg: PartitionedHypergraph<H>,
+        hg: Arc<H>,
         parts: &[BlockId],
         eps: f64,
         threads: usize,
-    ) -> PartitionedHypergraph {
+    ) -> PartitionedHypergraph<H> {
         self.rebinds += 1;
+        if Arc::ptr_eq(&phg.hg, &hg) && phg.k() == self.k {
+            self.delta_repairs += 1;
+            phg.set_uniform_max_weight(eps);
+            phg.apply_parts_delta(parts, threads);
+            return phg;
+        }
         self.bind_impl(Some(phg.into_buffers()), hg, parts, eps, threads)
+    }
+
+    /// Temporarily release a bound partition's buffers back to the pool
+    /// **without touching the values**. Used by the n-level batch loop:
+    /// the partition must let go of its `Arc` so the driver can obtain
+    /// `&mut` on the sole-owner [`DynamicHypergraph`] and revert a batch
+    /// in place; [`Self::unpark`] re-binds the identical state afterwards.
+    pub fn park<H: HypergraphOps>(&mut self, phg: PartitionedHypergraph<H>) {
+        // hard assert: silently overwriting a parked partition would drop
+        // its values and hand the wrong state to the next unpark
+        assert!(self.parked.is_none(), "only one partition can be parked");
+        self.parked = Some(phg.into_buffers());
+    }
+
+    /// Re-bind the parked buffers to `hg`, preserving every Π/Φ/Λ/weight
+    /// value (no rebuild — the caller repairs the batch delta via
+    /// `apply_uncontractions`). Panics if the parked buffers cannot host
+    /// `hg`: the incremental path must never reallocate, because a fresh
+    /// allocation would lose the values it exists to preserve.
+    pub fn unpark<H: HypergraphOps>(&mut self, hg: Arc<H>, eps: f64) -> PartitionedHypergraph<H> {
+        let bufs = self.parked.take().expect("no parked partition buffers");
+        assert!(
+            bufs.fits(&*hg, self.k),
+            "parked buffers cannot host the hypergraph without losing values"
+        );
+        self.rebinds += 1;
+        let mut phg = PartitionedHypergraph::from_buffers(hg, self.k, bufs);
+        phg.set_uniform_max_weight(eps);
+        phg
+    }
+
+    /// Move a binding onto a *structurally equivalent* hypergraph of a
+    /// different representation, preserving all values (no rebuild). The
+    /// n-level driver uses this once, at the finest level: the fully
+    /// uncontracted [`DynamicHypergraph`](crate::hypergraph::dynamic::DynamicHypergraph)
+    /// has the same node/net id spaces and pin multisets as the static
+    /// input, so Π/Φ/Λ/weights carry over verbatim and the flow-capable
+    /// static refiner stack runs without one more `rebuild_from_parts`.
+    pub fn rebind_preserving<H1: HypergraphOps, H2: HypergraphOps>(
+        &mut self,
+        phg: PartitionedHypergraph<H1>,
+        hg: Arc<H2>,
+        eps: f64,
+    ) -> PartitionedHypergraph<H2> {
+        debug_assert_eq!(phg.hypergraph().num_nodes(), hg.num_nodes());
+        debug_assert_eq!(phg.hypergraph().num_nets(), hg.num_nets());
+        debug_assert_eq!(phg.hypergraph().total_weight(), hg.total_weight());
+        self.rebinds += 1;
+        let mut out = PartitionedHypergraph::from_buffers(hg, self.k, phg.into_buffers());
+        out.set_uniform_max_weight(eps);
+        out
     }
 
     /// The uncoarsening step: consume the refined `coarse` partition and
@@ -221,6 +319,7 @@ impl PartitionPool {
         debug_assert_eq!(coarse.k(), self.k);
         debug_assert_eq!(fine_to_coarse.len(), fine_hg.num_nodes());
         self.rebinds += 1;
+        self.value_rebuilds += 1;
         let coarse_n = coarse.hypergraph().num_nodes();
         if self.proj_scratch.len() < coarse_n {
             // only reachable when the pool was never reserved for the
@@ -235,7 +334,7 @@ impl PartitionPool {
                 unsafe { scratch.write(u, coarse.block_of(u as NodeId)) };
             });
         }
-        let bufs = self.buffers_for(Some(coarse.into_buffers()), &fine_hg);
+        let bufs = self.buffers_for(Some(coarse.into_buffers()), &*fine_hg);
         let mut fine = PartitionedHypergraph::from_buffers(fine_hg, self.k, bufs);
         fine.set_uniform_max_weight(eps);
         fine.store_projected(fine_to_coarse, &self.proj_scratch, threads);
@@ -301,7 +400,7 @@ mod tests {
                 (0..coarse_hg.num_nodes()).map(|_| rng.next_below(k) as BlockId).collect();
 
             let mut pool = PartitionPool::new(k);
-            pool.reserve(&fine_hg);
+            pool.reserve(&*fine_hg);
             let coarse_phg = pool.bind(coarse_hg.clone(), &coarse_parts, 0.5, 2);
             coarse_phg.verify_consistency().unwrap();
             let fine_phg = pool.rebind_level(coarse_phg, fine_hg.clone(), &fine_to_coarse, 0.5, 2);
@@ -355,7 +454,7 @@ mod tests {
             (0..coarse_hg.num_nodes()).map(|_| rng.next_below(k) as BlockId).collect();
 
         let mut pool = PartitionPool::new(k);
-        pool.reserve(&fine_hg);
+        pool.reserve(&*fine_hg);
         let mut phg = pool.bind(coarse_hg, &coarse_parts, 0.5, 2);
         phg = pool.rebind_level(phg, mid_hg, &mid_to_coarse, 0.5, 2);
         phg = pool.rebind_level(phg, fine_hg.clone(), &fine_to_mid, 0.5, 2);
@@ -373,6 +472,71 @@ mod tests {
         phg.verify_consistency().unwrap();
         assert_eq!(pool.structural_allocs(), 1);
         assert_eq!(pool.rebinds(), 3);
+    }
+
+    /// Same-hypergraph rebinds are delta repairs: only changed nodes are
+    /// moved, and the result is identical to a full rebuild.
+    #[test]
+    fn rebind_with_parts_delta_matches_full_rebuild() {
+        for seed in 0..6u64 {
+            let k = 2 + (seed % 3) as usize;
+            let hg = random_hypergraph(seed ^ 0x3d, 120, 220);
+            let n = hg.num_nodes();
+            let mut rng = Rng::new(seed ^ 0x91);
+            let parts_a: Vec<BlockId> = (0..n).map(|_| rng.next_below(k) as BlockId).collect();
+            let parts_b: Vec<BlockId> = parts_a
+                .iter()
+                .map(|&b| if rng.coin(0.2) { rng.next_below(k) as BlockId } else { b })
+                .collect();
+            let mut pool = PartitionPool::new(k);
+            pool.reserve(&*hg);
+            let phg = pool.bind(hg.clone(), &parts_a, 0.5, 2);
+            let phg = pool.rebind_with_parts(phg, hg.clone(), &parts_b, 0.5, 2);
+            assert_eq!(pool.delta_repairs(), 1, "same-hg rebind must delta-repair");
+            assert_eq!(pool.value_rebuilds(), 1, "only the bind rebuilds values");
+            phg.verify_consistency().unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+            assert_eq!(phg.parts(), parts_b, "seed {seed}");
+
+            let mut fresh = PartitionedHypergraph::new(hg.clone(), k);
+            fresh.set_uniform_max_weight(0.5);
+            fresh.assign_all(&parts_b, 1);
+            assert_eq!(phg.km1(), fresh.km1(), "seed {seed}");
+            for b in 0..k as BlockId {
+                assert_eq!(phg.block_weight(b), fresh.block_weight(b), "seed {seed}");
+            }
+            for e in hg.nets() {
+                for b in 0..k as BlockId {
+                    assert_eq!(
+                        phg.pin_count(e, b),
+                        fresh.pin_count(e, b),
+                        "seed {seed}: Φ({e},{b})"
+                    );
+                }
+            }
+        }
+    }
+
+    /// park/unpark moves the buffers without touching any value — the
+    /// n-level batch-boundary contract.
+    #[test]
+    fn park_unpark_preserves_values() {
+        let k = 3;
+        let hg = random_hypergraph(5, 90, 160);
+        let mut rng = Rng::new(23);
+        let parts: Vec<BlockId> =
+            (0..hg.num_nodes()).map(|_| rng.next_below(k) as BlockId).collect();
+        let mut pool = PartitionPool::new(k);
+        pool.reserve(&*hg);
+        let phg = pool.bind(hg.clone(), &parts, 0.5, 2);
+        let km1 = phg.km1();
+        let snapshot = phg.parts();
+        pool.park(phg);
+        let phg = pool.unpark(hg.clone(), 0.5);
+        assert_eq!(phg.parts(), snapshot);
+        assert_eq!(phg.km1(), km1);
+        phg.verify_consistency().unwrap();
+        assert_eq!(pool.value_rebuilds(), 1, "unpark must not rebuild values");
+        assert_eq!(pool.structural_allocs(), 1);
     }
 
     /// An unreserved pool still works (growth is counted, not silent).
@@ -402,7 +566,7 @@ mod tests {
         let zeros = vec![0 as BlockId; hg.num_nodes()];
         ext.assign_all(&zeros, 1);
         let mut pool = PartitionPool::new(4);
-        pool.reserve(&hg);
+        pool.reserve(&*hg);
         let parts: Vec<BlockId> = (0..hg.num_nodes()).map(|u| (u % 2) as BlockId).collect();
         let phg = pool.rebind_with_parts(ext, hg.clone(), &parts, 0.5, 1);
         assert_eq!(phg.k(), 4);
@@ -422,7 +586,7 @@ mod tests {
             (0..coarse_hg.num_nodes()).map(|_| rng.next_below(k) as BlockId).collect();
         let run = |threads: usize| {
             let mut pool = PartitionPool::new(k);
-            pool.reserve(&fine_hg);
+            pool.reserve(&*fine_hg);
             let phg = pool.bind(coarse_hg.clone(), &coarse_parts, 0.5, threads);
             let phg = pool.rebind_level(phg, fine_hg.clone(), &f2c, 0.5, threads);
             (phg.parts(), (0..k as BlockId).map(|b| phg.block_weight(b)).collect::<Vec<_>>())

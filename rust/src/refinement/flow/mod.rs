@@ -128,6 +128,14 @@ pub fn flow_refine_with_workspace(
     assert_eq!(fw.k, k, "flow workspace was built for a different k");
     let hg = phg.hypergraph();
     let objective_before = phg.km1().max(1);
+    // Deterministic mode (§11, SDet with flows): one worker draining the
+    // waves in a fixed (round, pair-id) order. With a single worker every
+    // construct/apply step sees the exact same partition state for any
+    // machine or requested thread count, so the result is reproducible;
+    // the wave promotion below additionally sorts re-activated pairs by
+    // pair id so the order is the *documented* one, not an artifact of
+    // report() interleaving.
+    let deterministic = ctx.deterministic;
 
     // one Λ enumeration builds the quotient graph; afterwards adjacency
     // is maintained incrementally from applied moves — zero net scans
@@ -147,8 +155,8 @@ pub fn flow_refine_with_workspace(
         return 0;
     }
 
-    // τ·k parallelism cap (§8.1)
-    let workers = flow_workers(ctx, k);
+    // τ·k parallelism cap (§8.1); deterministic mode serializes
+    let workers = if deterministic { 1 } else { flow_workers(ctx, k) };
     fw.ensure_workers(workers);
     for sc in fw.scratch.iter_mut().take(workers) {
         sc.ensure(hg.num_nodes(), hg.num_nets());
@@ -166,6 +174,7 @@ pub fn flow_refine_with_workspace(
             round_gain: 0,
             // a wave must earn ≥ 0.1% relative improvement to launch the next
             min_round_gain: ctx.flow_min_relative_improvement * objective_before as f64,
+            deterministic,
         }),
         idle: Condvar::new(),
     };
@@ -214,6 +223,9 @@ struct Scheduler<'a> {
     in_flight: usize,
     round_gain: i64,
     min_round_gain: f64,
+    /// fixed (round, pair-id) wave order (SDet): each promoted wave is
+    /// sorted by pair id instead of keeping report() arrival order
+    deterministic: bool,
 }
 
 /// The shared scheduler: state behind a mutex plus a condvar workers
@@ -248,6 +260,9 @@ impl SchedulerSync<'_> {
                 }
                 let state = &mut *g;
                 state.round_gain = 0;
+                if state.deterministic {
+                    state.next.sort_unstable();
+                }
                 state.current.extend(state.next.drain(..));
                 continue;
             }
@@ -511,6 +526,39 @@ mod tests {
         );
         // one Λ enumeration per call — never a per-pair net scan
         assert_eq!(fw.quotient_builds(), 5);
+    }
+
+    #[test]
+    fn deterministic_mode_is_thread_invariant() {
+        // under ctx.deterministic the scheduler serializes onto one worker
+        // and promotes waves in a fixed (round, pair-id) order, so the
+        // SDet preset can enable flows reproducibly: the result must be
+        // bit-identical for any requested thread count
+        let p = PlantedParams { n: 200, m: 400, blocks: 4, ..Default::default() };
+        let hg = Arc::new(planted_hypergraph(&p, 29));
+        let n = hg.num_nodes();
+        let mut rng = Rng::new(7);
+        let mut parts: Vec<BlockId> = (0..n).map(|u| (u * 4 / n) as BlockId).collect();
+        for _ in 0..30 {
+            parts[rng.next_below(n)] = rng.next_below(4) as BlockId;
+        }
+        let run = |threads: usize| {
+            let mut c = ctx(4, threads, 29);
+            c.deterministic = true;
+            let mut phg = PartitionedHypergraph::new(hg.clone(), 4);
+            phg.set_uniform_max_weight(0.25);
+            phg.assign_all(&parts, 1);
+            let before = phg.km1();
+            let g = flow_refine(&phg, &c);
+            assert_eq!(phg.km1(), before - g);
+            phg.verify_consistency().unwrap();
+            (g, phg.parts())
+        };
+        let (g1, p1) = run(1);
+        let (g4, p4) = run(4);
+        assert_eq!(g1, g4, "same improvement for any thread count");
+        assert_eq!(p1, p4, "deterministic flows must be bit-identical");
+        assert!(g1 >= 0);
     }
 
     #[test]

@@ -13,6 +13,7 @@
 //! all uncoarsening levels (the hash tables keep their capacity) instead
 //! of reallocating per FM call.
 
+use crate::hypergraph::HypergraphOps;
 use crate::partition::PartitionedHypergraph;
 use crate::util::fxhash::FxHashMap;
 use crate::{BlockId, EdgeId, Gain, NodeId, NodeWeight};
@@ -47,19 +48,28 @@ impl DeltaPartition {
     }
 
     #[inline]
-    pub fn block_of(&self, phg: &PartitionedHypergraph, u: NodeId) -> BlockId {
+    pub fn block_of<H: HypergraphOps>(&self, phg: &PartitionedHypergraph<H>, u: NodeId) -> BlockId {
         self.part.get(&u).copied().unwrap_or_else(|| phg.block_of(u))
     }
 
     #[inline]
-    pub fn pin_count(&self, phg: &PartitionedHypergraph, e: EdgeId, b: BlockId) -> i64 {
+    pub fn pin_count<H: HypergraphOps>(
+        &self,
+        phg: &PartitionedHypergraph<H>,
+        e: EdgeId,
+        b: BlockId,
+    ) -> i64 {
         let base = phg.pin_count(e, b) as i64;
         base + self.pin_delta.get(&(e as u64 * self.k as u64 + b as u64)).copied().unwrap_or(0)
             as i64
     }
 
     #[inline]
-    pub fn block_weight(&self, phg: &PartitionedHypergraph, b: BlockId) -> NodeWeight {
+    pub fn block_weight<H: HypergraphOps>(
+        &self,
+        phg: &PartitionedHypergraph<H>,
+        b: BlockId,
+    ) -> NodeWeight {
         phg.block_weight(b) + self.weight_delta[b as usize]
     }
 
@@ -70,9 +80,9 @@ impl DeltaPartition {
 
     /// Local move with balance check against combined weights.
     /// Returns the exact local connectivity gain.
-    pub fn try_move(
+    pub fn try_move<H: HypergraphOps>(
         &mut self,
-        phg: &PartitionedHypergraph,
+        phg: &PartitionedHypergraph<H>,
         u: NodeId,
         to: BlockId,
     ) -> Option<Gain> {
@@ -117,9 +127,9 @@ impl DeltaPartition {
     /// is `p(u,t) = W − Σ_{e: Φ(e,t)>0} ω(e)`, so accumulating the
     /// "present weight" per connected block in one sweep replaces the
     /// per-candidate re-scan.
-    pub fn max_gain_move(
+    pub fn max_gain_move<H: HypergraphOps>(
         &self,
-        phg: &PartitionedHypergraph,
+        phg: &PartitionedHypergraph<H>,
         u: NodeId,
     ) -> Option<(Gain, BlockId)> {
         let from = self.block_of(phg, u);

@@ -13,6 +13,13 @@
 //! per-thread search scratch) lives in the refinement pipeline's
 //! [`Workspace`] so uncoarsening reuses one allocation across levels;
 //! [`fm_refine`] wraps a transient workspace for standalone callers.
+//!
+//! **Seeded (n-level) searches skip the global gain table.** Re-initializing
+//! the table costs O(n·k) — fine once per uncoarsening level, but ruinous
+//! when FM runs after every §9 batch uncontraction. With an explicit seed
+//! set the searches are tiny, so PQ keys come from the delta-aware
+//! on-the-fly gain instead (adjacent blocks only) and the whole invocation
+//! stays O(Σ|I(touched)|), matching the dynamic-hypergraph batch cost.
 
 pub mod delta;
 pub mod stop;
@@ -21,8 +28,9 @@ pub use delta::DeltaPartition;
 pub use stop::AdaptiveStoppingRule;
 
 use crate::coordinator::context::Context;
+use crate::hypergraph::HypergraphOps;
 use crate::partition::{
-    gain_recalculation::{recalculate_gains, revert_to_best_prefix},
+    gain_recalculation::{recalculate_gains_with_scratch, revert_to_best_prefix},
     GainTable, Move, PartitionedHypergraph,
 };
 use crate::refinement::pipeline::{SearchScratch, Workspace};
@@ -50,15 +58,15 @@ const EXPANSION_NET_SIZE_LIMIT: usize = 512;
 /// Standalone entry point: allocates a transient [`Workspace`]. Inside
 /// the uncoarsening loop use the pipeline instead, which carries the
 /// workspace across levels.
-pub fn fm_refine(phg: &PartitionedHypergraph, ctx: &Context) -> FmStats {
+pub fn fm_refine<H: HypergraphOps>(phg: &PartitionedHypergraph<H>, ctx: &Context) -> FmStats {
     fm_refine_with_seeds(phg, ctx, None)
 }
 
 /// FM restricted to the given seed nodes (the highly-localized variant
 /// run after each n-level batch uncontraction, paper §9). `None` seeds
 /// all boundary nodes.
-pub fn fm_refine_with_seeds(
-    phg: &PartitionedHypergraph,
+pub fn fm_refine_with_seeds<H: HypergraphOps>(
+    phg: &PartitionedHypergraph<H>,
     ctx: &Context,
     seed_set: Option<&[NodeId]>,
 ) -> FmStats {
@@ -67,10 +75,12 @@ pub fn fm_refine_with_seeds(
 }
 
 /// The FM algorithm proper, running on a caller-provided [`Workspace`].
-/// The workspace's gain table is re-initialized in place for `phg`'s
-/// current assignment; no per-call allocations beyond the global move log.
-pub fn fm_refine_with_workspace(
-    phg: &PartitionedHypergraph,
+/// Global rounds (no seed set) re-initialize the workspace's gain table in
+/// place for `phg`'s current assignment; seeded (n-level batch) rounds
+/// skip the table entirely and run on on-the-fly gains, so their cost is
+/// bounded by the searched region, not by n.
+pub fn fm_refine_with_workspace<H: HypergraphOps>(
+    phg: &PartitionedHypergraph<H>,
     ctx: &Context,
     seed_set: Option<&[NodeId]>,
     ws: &mut Workspace,
@@ -80,7 +90,10 @@ pub fn fm_refine_with_workspace(
     let threads = ctx.threads.max(1);
     ws.ensure_node_capacity(n);
     ws.ensure_threads(threads);
-    ws.prepare_gain_table(phg, threads);
+    let use_table = seed_set.is_none();
+    if use_table {
+        ws.prepare_gain_table(phg, threads);
+    }
     let mut stats = FmStats::default();
 
     for round in 0..ctx.fm_max_rounds {
@@ -94,7 +107,16 @@ pub fn fm_refine_with_workspace(
             break;
         }
         Rng::new(hash2(ctx.seed ^ 0xf3, round as u64)).shuffle(&mut ws.boundary);
-        ws.reset_owner(n);
+        if use_table {
+            // Both modes maintain the all-clear ownership invariant across
+            // rounds (per-search release of unmoved nodes + the sparse
+            // end-of-round clear below), so this bulk clear is defensive
+            // re-establishment only. Global rounds keep it because they
+            // already pay the O(n·k) table init — O(n) is noise there and
+            // shields external workspaces with unknown history; seeded
+            // rounds must stay O(|region|) and rely on the invariant.
+            ws.reset_owner(n);
+        }
 
         let batch = ctx.fm_seeds_per_poll.max(1);
         let cursor = AtomicUsize::new(0);
@@ -103,7 +125,7 @@ pub fn fm_refine_with_workspace(
             // field-disjoint borrows of the workspace: the scratch slots go
             // to the worker threads, the gain table / owner bits / seed
             // pool are shared read-side
-            let gt = &ws.gain_table;
+            let gt = if use_table { Some(&ws.gain_table) } else { None };
             let owner = &ws.owner[..];
             let boundary = &ws.boundary[..];
             let cursor = &cursor;
@@ -130,12 +152,20 @@ pub fn fm_refine_with_workspace(
         if moves.is_empty() {
             break;
         }
-        let gains = recalculate_gains(phg, &moves, threads);
-        let (len, total) = revert_to_best_prefix(phg, &moves, &gains, Some(&ws.gain_table));
+        let gains = recalculate_gains_with_scratch(phg, &moves, threads, &mut ws.recalc);
+        let table = if use_table { Some(&ws.gain_table) } else { None };
+        let (len, total) = revert_to_best_prefix(phg, &moves, &gains, table);
         // repair benefits of all touched nodes (paper: recompute after the
         // round instead of immediately after each move)
+        if use_table {
+            for m in &moves {
+                ws.gain_table.recompute_benefit(phg, m.node);
+            }
+        }
+        // restore the all-clear ownership invariant sparsely (globally
+        // moved nodes kept their bit through the round)
         for m in &moves {
-            ws.gain_table.recompute_benefit(phg, m.node);
+            ws.owner[m.node as usize].store(false, Ordering::Release);
         }
         stats.rounds = round + 1;
         stats.improvement += total;
@@ -148,14 +178,28 @@ pub fn fm_refine_with_workspace(
 }
 
 /// One thread's localized FM search bound to its reusable scratch.
-struct LocalSearch<'a> {
-    phg: &'a PartitionedHypergraph,
-    gt: &'a GainTable,
+/// `gt` is `None` for seeded (n-level batch) searches: PQ keys then come
+/// from the delta-aware on-the-fly gain, keeping the search independent
+/// of the global table (which is never initialized in that mode).
+struct LocalSearch<'a, H: HypergraphOps> {
+    phg: &'a PartitionedHypergraph<H>,
+    gt: Option<&'a GainTable>,
     ctx: &'a Context,
     sc: &'a mut SearchScratch,
 }
 
-impl<'a> LocalSearch<'a> {
+impl<'a, H: HypergraphOps> LocalSearch<'a, H> {
+    /// PQ key for `u`: the cached table gain when the table is live, the
+    /// exact delta-aware gain otherwise (both are re-validated lazily at
+    /// pop time, so transiently stale keys only cost a reinsertion).
+    #[inline]
+    fn key_for(&self, u: NodeId) -> Option<(crate::Gain, crate::BlockId)> {
+        match self.gt {
+            Some(gt) => gt.max_gain_move(self.phg, u),
+            None => self.sc.delta.max_gain_move(self.phg, u),
+        }
+    }
+
     /// Algorithm 7.1's `LocalizedFMRefinement`.
     fn run(
         &mut self,
@@ -171,7 +215,7 @@ impl<'a> LocalSearch<'a> {
         for &u in seeds {
             if try_acquire(owner, u) {
                 self.sc.acquired.push(u);
-                if let Some((g, _)) = self.gt.max_gain_move(self.phg, u) {
+                if let Some((g, _)) = self.key_for(u) {
                     self.sc.pq.insert(u, g);
                 }
             }
@@ -234,18 +278,20 @@ impl<'a> LocalSearch<'a> {
         let sc = &mut *self.sc;
         let mut applied = 0usize;
         for m in sc.local_moves.iter() {
-            if self.phg.try_move(m.node, m.to, Some(self.gt)).is_some() {
+            if self.phg.try_move(m.node, m.to, self.gt).is_some() {
                 applied += 1;
             } else {
                 // rollback: another thread consumed the balance slack
                 for a in sc.local_moves[..applied].iter().rev() {
-                    self.phg.move_unchecked(a.node, a.from, Some(self.gt));
+                    self.phg.move_unchecked(a.node, a.from, self.gt);
                 }
                 // rolled-back nodes never reach the published move log, so
                 // the post-round benefit repair would miss them — repair
                 // here (update rules 2/4 leave movers' benefits stale)
-                for a in sc.local_moves[..applied].iter() {
-                    self.gt.recompute_benefit(self.phg, a.node);
+                if let Some(gt) = self.gt {
+                    for a in sc.local_moves[..applied].iter() {
+                        gt.recompute_benefit(self.phg, a.node);
+                    }
                 }
                 sc.local_moves.clear();
                 sc.delta.clear();
@@ -279,12 +325,12 @@ impl<'a> LocalSearch<'a> {
                     continue;
                 }
                 if self.sc.pq.contains(v) {
-                    if let Some((g, _)) = self.gt.max_gain_move(self.phg, v) {
+                    if let Some((g, _)) = self.key_for(v) {
                         self.sc.pq.adjust(v, g);
                     }
                 } else if !owner[v as usize].load(Ordering::Relaxed) && try_acquire(owner, v) {
                     self.sc.acquired.push(v);
-                    if let Some((g, _)) = self.gt.max_gain_move(self.phg, v) {
+                    if let Some((g, _)) = self.key_for(v) {
                         self.sc.pq.insert(v, g);
                     }
                 }
@@ -439,7 +485,7 @@ mod tests {
         sc.local_moves.push(Move { node: 1, from: 0, to: 1 });
         let global_moves: Mutex<Vec<Move>> = Mutex::new(Vec::new());
         let mut search =
-            LocalSearch { phg: &phg, gt: &ws.gain_table, ctx: &c, sc };
+            LocalSearch { phg: &phg, gt: Some(&ws.gain_table), ctx: &c, sc };
         assert!(!search.apply_globally(&global_moves), "conflict must be reported");
 
         assert!(global_moves.into_inner().unwrap().is_empty(), "nothing published");

@@ -9,6 +9,7 @@
 //! swaps between block pairs, prioritized by gain.
 
 use crate::coordinator::context::Context;
+use crate::hypergraph::HypergraphOps;
 use crate::parallel::parallel_chunks;
 use crate::partition::PartitionedHypergraph;
 use crate::util::rng::hash2;
@@ -37,13 +38,13 @@ pub struct LpScratch {
 /// Parallel label propagation; returns the total attributed improvement.
 /// Convenience wrapper allocating throwaway scratch — pipeline callers go
 /// through [`lp_refine_with_scratch`].
-pub fn lp_refine(phg: &PartitionedHypergraph, ctx: &Context) -> Gain {
+pub fn lp_refine<H: HypergraphOps>(phg: &PartitionedHypergraph<H>, ctx: &Context) -> Gain {
     lp_refine_with_scratch(phg, ctx, &mut LpScratch::default())
 }
 
 /// Parallel label propagation on reusable workspace scratch.
-pub fn lp_refine_with_scratch(
-    phg: &PartitionedHypergraph,
+pub fn lp_refine_with_scratch<H: HypergraphOps>(
+    phg: &PartitionedHypergraph<H>,
     ctx: &Context,
     scratch: &mut LpScratch,
 ) -> Gain {
@@ -95,8 +96,8 @@ pub fn lp_refine_with_scratch(
 /// Highly-localized label propagation (paper §9): restricted to the given
 /// node set plus one-hop expansion — run after each batch uncontraction.
 /// Convenience wrapper over [`lp_refine_localized_with_scratch`].
-pub fn lp_refine_localized(
-    phg: &PartitionedHypergraph,
+pub fn lp_refine_localized<H: HypergraphOps>(
+    phg: &PartitionedHypergraph<H>,
     ctx: &Context,
     nodes: &[NodeId],
 ) -> Gain {
@@ -106,8 +107,8 @@ pub fn lp_refine_localized(
 /// Localized label propagation whose frontier/next churn runs on reusable
 /// workspace scratch (one n-level run performs thousands of batch
 /// refinements; the buffers keep their capacity across all of them).
-pub fn lp_refine_localized_with_scratch(
-    phg: &PartitionedHypergraph,
+pub fn lp_refine_localized_with_scratch<H: HypergraphOps>(
+    phg: &PartitionedHypergraph<H>,
     ctx: &Context,
     nodes: &[NodeId],
     scratch: &mut LpScratch,
@@ -180,7 +181,10 @@ fn det_in_sub_round(seed: u64, round: usize, s: u64, sub_rounds: u64, u: NodeId)
 /// partition, then select balance-preserving prefix swaps per block pair.
 /// Convenience wrapper allocating throwaway scratch — pipeline callers go
 /// through [`lp_refine_deterministic_with_scratch`].
-pub fn lp_refine_deterministic(phg: &PartitionedHypergraph, ctx: &Context) -> Gain {
+pub fn lp_refine_deterministic<H: HypergraphOps>(
+    phg: &PartitionedHypergraph<H>,
+    ctx: &Context,
+) -> Gain {
     lp_refine_deterministic_with_scratch(phg, ctx, &mut LpScratch::default())
 }
 
@@ -188,8 +192,8 @@ pub fn lp_refine_deterministic(phg: &PartitionedHypergraph, ctx: &Context) -> Ga
 /// membership and move-wishlist buffers live on reusable workspace
 /// scratch. Bit-identical to the throwaway-scratch wrapper for any thread
 /// count (the wishlist is totally ordered by (gain, node) before use).
-pub fn lp_refine_deterministic_with_scratch(
-    phg: &PartitionedHypergraph,
+pub fn lp_refine_deterministic_with_scratch<H: HypergraphOps>(
+    phg: &PartitionedHypergraph<H>,
     ctx: &Context,
     scratch: &mut LpScratch,
 ) -> Gain {

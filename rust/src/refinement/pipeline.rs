@@ -57,7 +57,7 @@
 use crate::coarsening::Level;
 use crate::coordinator::context::Context;
 use crate::datastructures::AddressablePQ;
-use crate::hypergraph::Hypergraph;
+use crate::hypergraph::{Hypergraph, HypergraphOps};
 use crate::partition::{GainTable, Move, PartitionPool, PartitionedHypergraph};
 use crate::refinement::fm::{DeltaPartition, FmStats};
 use crate::refinement::{flow, fm, lp, rebalance};
@@ -106,6 +106,9 @@ pub struct Workspace {
     /// reusable label-propagation scratch (visit order + frontier churn +
     /// deterministic sub-round membership/move buffers)
     pub(crate) lp: lp::LpScratch,
+    /// reusable Algorithm-6.2 scratch (per-node move index + processed-net
+    /// bitset, reset sparsely) so seeded n-level FM rounds stay O(region)
+    pub(crate) recalc: crate::partition::gain_recalculation::RecalcScratch,
     /// pooled §6.1 partition state rebound across uncoarsening levels
     pub(crate) pool: PartitionPool,
     /// pooled flow-refinement state (per-worker scratch slots, incremental
@@ -132,6 +135,7 @@ impl Workspace {
             scratch: (0..threads).map(|_| SearchScratch::new(k, node_capacity)).collect(),
             boundary: Vec::new(),
             lp: lp::LpScratch::default(),
+            recalc: crate::partition::gain_recalculation::RecalcScratch::default(),
             pool: PartitionPool::new(k),
             flow: flow::FlowWorkspace::new(k),
             level_distance: 0,
@@ -142,7 +146,7 @@ impl Workspace {
 
     /// Reserve the partition pool for the finest-level hypergraph so the
     /// whole uncoarsening sequence runs on one structural allocation.
-    pub fn reserve_partition(&mut self, hg: &Hypergraph) {
+    pub fn reserve_partition<H: HypergraphOps>(&mut self, hg: &H) {
         self.pool.reserve(hg);
     }
 
@@ -172,7 +176,11 @@ impl Workspace {
     /// Recompute the gain table in place for the current assignment of
     /// `phg` (per-level repair after projection: values change, memory
     /// does not).
-    pub fn prepare_gain_table(&mut self, phg: &PartitionedHypergraph, threads: usize) {
+    pub fn prepare_gain_table<H: HypergraphOps>(
+        &mut self,
+        phg: &PartitionedHypergraph<H>,
+        threads: usize,
+    ) {
         debug_assert_eq!(phg.k(), self.k);
         self.ensure_node_capacity(phg.hypergraph().num_nodes());
         self.gain_table.initialize(phg, threads);
@@ -341,26 +349,56 @@ impl RefinementPipeline {
         pipeline
     }
 
-    /// Bind the pooled partition state to the coarsest level.
-    pub fn bind(
+    /// Bind the pooled partition state to the coarsest level (static or
+    /// dynamic representation).
+    pub fn bind<H: HypergraphOps>(
         &mut self,
-        hg: Arc<Hypergraph>,
+        hg: Arc<H>,
         parts: &[BlockId],
         ctx: &Context,
-    ) -> PartitionedHypergraph {
+    ) -> PartitionedHypergraph<H> {
         self.ws.pool.bind(hg, parts, ctx.epsilon, ctx.threads)
     }
 
     /// Re-point the pooled state at `hg` with an explicit assignment
-    /// (V-cycle restarts, n-level batch snapshots).
-    pub fn rebind_with_parts(
+    /// (V-cycle restarts; delta-repaired when `hg` is unchanged).
+    pub fn rebind_with_parts<H: HypergraphOps>(
         &mut self,
-        phg: PartitionedHypergraph,
-        hg: Arc<Hypergraph>,
+        phg: PartitionedHypergraph<H>,
+        hg: Arc<H>,
         parts: &[BlockId],
         ctx: &Context,
-    ) -> PartitionedHypergraph {
+    ) -> PartitionedHypergraph<H> {
         self.ws.pool.rebind_with_parts(phg, hg, parts, ctx.epsilon, ctx.threads)
+    }
+
+    /// Release the bound partition's buffers without touching the values
+    /// (n-level batch boundary; see [`crate::partition::PartitionPool::park`]).
+    pub fn park<H: HypergraphOps>(&mut self, phg: PartitionedHypergraph<H>) {
+        self.ws.pool.park(phg);
+    }
+
+    /// Re-bind the parked buffers to `hg`, values preserved; the caller
+    /// repairs the batch delta via `apply_uncontractions`.
+    pub fn unpark<H: HypergraphOps>(
+        &mut self,
+        hg: Arc<H>,
+        ctx: &Context,
+    ) -> PartitionedHypergraph<H> {
+        self.ws.pool.unpark(hg, ctx.epsilon)
+    }
+
+    /// Move a binding onto a structurally equivalent hypergraph of a
+    /// different representation, preserving all values (the n-level
+    /// finest-level hand-off from the dynamic structure to the static
+    /// input, which the flow-capable refiner stack runs on).
+    pub fn rebind_preserving<H1: HypergraphOps, H2: HypergraphOps>(
+        &mut self,
+        phg: PartitionedHypergraph<H1>,
+        hg: Arc<H2>,
+        ctx: &Context,
+    ) -> PartitionedHypergraph<H2> {
+        self.ws.pool.rebind_preserving(phg, hg, ctx.epsilon)
     }
 
     /// One zero-copy uncoarsening step: move the refined coarse partition
@@ -402,9 +440,9 @@ impl RefinementPipeline {
 
     /// Localized label propagation on the shared workspace scratch
     /// (n-level batch refinement, paper §9).
-    pub fn lp_localized(
+    pub fn lp_localized<H: HypergraphOps>(
         &mut self,
-        phg: &PartitionedHypergraph,
+        phg: &PartitionedHypergraph<H>,
         ctx: &Context,
         nodes: &[NodeId],
     ) -> Gain {
@@ -440,10 +478,12 @@ impl RefinementPipeline {
     }
 
     /// Localized FM restricted to `seeds` (n-level batch refinement,
-    /// paper §9), on the shared workspace.
-    pub fn fm_with_seeds(
+    /// paper §9), on the shared workspace. Seeded invocations bypass the
+    /// global gain table (see [`fm::fm_refine_with_workspace`]), so a
+    /// batch costs O(Σ|I(region)|), not O(n·k).
+    pub fn fm_with_seeds<H: HypergraphOps>(
         &mut self,
-        phg: &PartitionedHypergraph,
+        phg: &PartitionedHypergraph<H>,
         ctx: &Context,
         seeds: Option<&[NodeId]>,
     ) -> FmStats {

@@ -14,13 +14,14 @@
 
 use crate::coordinator::context::Context;
 use crate::datastructures::AddressablePQ;
+use crate::hypergraph::HypergraphOps;
 use crate::partition::PartitionedHypergraph;
 use crate::{BlockId, Gain, NodeId};
 
 /// Repair balance; returns the number of moves performed. The partition
 /// may remain imbalanced if no feasible relocation exists (caller checks
 /// `is_balanced`).
-pub fn rebalance(phg: &PartitionedHypergraph, ctx: &Context) -> usize {
+pub fn rebalance<H: HypergraphOps>(phg: &PartitionedHypergraph<H>, ctx: &Context) -> usize {
     let k = phg.k();
     let mut moves = 0usize;
     // repeat until no overloaded block makes progress
@@ -80,8 +81,8 @@ pub fn rebalance(phg: &PartitionedHypergraph, ctx: &Context) -> usize {
 }
 
 /// Cheapest feasible target block for evicting `u` from `heavy`.
-fn best_target(
-    phg: &PartitionedHypergraph,
+fn best_target<H: HypergraphOps>(
+    phg: &PartitionedHypergraph<H>,
     u: NodeId,
     heavy: BlockId,
 ) -> Option<(Gain, BlockId)> {

@@ -70,9 +70,11 @@ pub fn vcycle(phg: PartitionedHypergraph, ctx: &Context, cycles: usize) -> Parti
         }
     }
     if rejected_last {
-        // restore the best accepted assignment in place (values rebuilt,
-        // memory reused)
-        current.assign_all(&best_parts, ctx.threads);
+        // restore the best accepted assignment in place by delta repair:
+        // only nodes the rejected cycle actually moved are moved back, so
+        // Φ/Λ/weights are touched only around the diff instead of being
+        // rebuilt for the whole finest level
+        current.apply_parts_delta(&best_parts, ctx.threads);
         if !accepted_any && input_limits.len() == current.k() {
             // every cycle rejected: hand back the input partition's own
             // block weight limits along with its assignment

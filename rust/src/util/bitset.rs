@@ -111,6 +111,18 @@ impl AtomicBitset {
         self.bits == 0
     }
 
+    /// Grow to at least `bits` (new bits are zero); never shrinks.
+    /// Takes `&mut self`, so it cannot race with concurrent accessors.
+    pub fn ensure_len(&mut self, bits: usize) {
+        if bits > self.bits {
+            self.bits = bits;
+            let need = (bits + W - 1) / W;
+            while self.words.len() < need {
+                self.words.push(AtomicU64::new(0));
+            }
+        }
+    }
+
     #[inline]
     pub fn get(&self, i: usize) -> bool {
         (self.words[i / W].load(Ordering::Acquire) >> (i % W)) & 1 == 1

@@ -4,7 +4,8 @@
 
 use mtkahypar::coordinator::context::{Context, Preset};
 use mtkahypar::generators::{self, PlantedParams};
-use mtkahypar::hypergraph::{contraction, Hypergraph};
+use mtkahypar::hypergraph::dynamic::DynamicHypergraph;
+use mtkahypar::hypergraph::{contraction, Hypergraph, HypergraphOps};
 use mtkahypar::metrics;
 use mtkahypar::partition::{
     gain_recalculation::{recalculate_gains, replay_gains_reference},
@@ -316,7 +317,7 @@ fn prop_pooled_rebind_matches_fresh_construction_on_real_hierarchies() {
         let mut parts = random_parts(&mut rng, coarsest.num_nodes(), k);
 
         let mut pool = PartitionPool::new(k);
-        pool.reserve(&hg);
+        pool.reserve(&*hg);
         let mut phg = pool.bind(coarsest, &parts, 0.5, 2);
         phg.verify_consistency().unwrap_or_else(|e| panic!("seed {seed}: {e}"));
         for i in (0..hierarchy.levels.len()).rev() {
@@ -399,4 +400,144 @@ fn prop_pooled_uncoarsening_performs_zero_per_level_allocations() {
     );
     assert_eq!(pipeline.partition_pool().rebinds(), hierarchy.levels.len());
     assert_eq!(pipeline.workspace().gain_table_allocs(), 1);
+}
+
+#[test]
+fn prop_dynamic_uncontractions_match_snapshots() {
+    // Dynamic-vs-snapshot equivalence (paper §9): after every
+    // uncontract_batch, the dynamic structure's pins / incident nets /
+    // node weights — and the incrementally repaired Π/Φ/Λ/km1 — must be
+    // identical to a freshly contracted static snapshot at the same
+    // prefix of the contraction sequence.
+    use std::collections::HashMap;
+    for seed in 0..SEEDS / 3 {
+        let hg = Arc::new(random_hypergraph(seed ^ 0xd15c));
+        let n = hg.num_nodes();
+        let mut rng = Rng::new(seed ^ 0x44);
+        let k = 2 + (seed % 3) as usize;
+
+        // random single-contraction sequence down to ~n/4 active nodes
+        let mut dynhg = DynamicHypergraph::from_hypergraph(&hg);
+        let mut mementos = Vec::new();
+        while dynhg.num_active_nodes() > (n / 4).max(2) {
+            let actives: Vec<NodeId> = dynhg.active_nodes().collect();
+            let v = actives[rng.next_below(actives.len())];
+            let u = actives[rng.next_below(actives.len())];
+            if u != v {
+                mementos.push(dynhg.contract(v, u));
+            }
+        }
+        dynhg.validate().unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+
+        // pooled partition over the dynamic coarsest state
+        let coarse_parts: Vec<BlockId> =
+            (0..n).map(|_| rng.next_below(k) as BlockId).collect();
+        let mut pool = PartitionPool::new(k);
+        pool.reserve(&*hg);
+        let mut dyn_arc = Arc::new(dynhg);
+        let mut phg = pool.bind(dyn_arc.clone(), &coarse_parts, 0.5, 2);
+
+        let mut applied = mementos.len();
+        while applied > 0 {
+            let start = applied.saturating_sub(1 + rng.next_below(8));
+            let batch = &mementos[start..applied];
+            applied = start;
+
+            // the n-level batch boundary: park → in-place revert →
+            // unpark (values preserved) → incremental Π/Φ repair
+            pool.park(phg);
+            Arc::get_mut(&mut dyn_arc)
+                .expect("sole owner between batches")
+                .uncontract_batch(batch);
+            phg = pool.unpark(dyn_arc.clone(), 0.5);
+            phg.apply_uncontractions(batch);
+
+            // interleave a little "refinement": random moves of active
+            // nodes, so Π(v) ← Π(u) inherits refined blocks
+            let actives: Vec<NodeId> = dyn_arc.active_nodes().collect();
+            for _ in 0..4 {
+                let u = actives[rng.next_below(actives.len())];
+                let t = rng.next_below(k) as BlockId;
+                if t != phg.block_of(u) {
+                    phg.move_unchecked(u, t, None);
+                }
+            }
+
+            dyn_arc.validate().unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+            // Φ/Λ/weights consistent with Π over the *dynamic* structure
+            phg.verify_consistency().unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+
+            // ---- static snapshot at the same prefix ----
+            let mut rep: Vec<NodeId> = (0..n as NodeId).collect();
+            for m in &mementos[..applied] {
+                rep[m.v as usize] = m.u;
+            }
+            for u in 0..n {
+                let mut r = rep[u] as usize;
+                while rep[r] as usize != r {
+                    r = rep[r] as usize;
+                }
+                rep[u] = r as NodeId;
+            }
+            let c = contraction::contract(&hg, &rep, 2);
+
+            // node identity & weights: every active slot is a root whose
+            // cluster weight matches the snapshot's coarse node
+            let mut active_count = 0usize;
+            for u in dyn_arc.active_nodes() {
+                active_count += 1;
+                assert_eq!(rep[u as usize], u, "seed {seed}: active slots are roots");
+                assert_eq!(
+                    HypergraphOps::node_weight(&*dyn_arc, u),
+                    c.coarse.node_weight(c.fine_to_coarse[u as usize]),
+                    "seed {seed}: weight of root {u}"
+                );
+            }
+            assert_eq!(active_count, c.coarse.num_nodes(), "seed {seed}");
+
+            // pin-list equivalence: weighted multiset of (mapped, sorted)
+            // pin sets. The snapshot merges identical nets and drops
+            // single-pin nets; aggregating dynamic net weights by pin set
+            // must therefore coincide exactly.
+            let mut dyn_nets: HashMap<Vec<NodeId>, i64> = HashMap::new();
+            for e in HypergraphOps::nets(&*dyn_arc) {
+                let pins = HypergraphOps::pins(&*dyn_arc, e);
+                if pins.len() < 2 {
+                    continue;
+                }
+                let mut key: Vec<NodeId> =
+                    pins.iter().map(|&p| c.fine_to_coarse[p as usize]).collect();
+                key.sort_unstable();
+                *dyn_nets.entry(key).or_insert(0) += HypergraphOps::net_weight(&*dyn_arc, e);
+            }
+            let mut snap_nets: HashMap<Vec<NodeId>, i64> = HashMap::new();
+            for e in c.coarse.nets() {
+                let mut key: Vec<NodeId> = c.coarse.pins(e).to_vec();
+                key.sort_unstable();
+                *snap_nets.entry(key).or_insert(0) += c.coarse.net_weight(e);
+            }
+            assert_eq!(dyn_nets, snap_nets, "seed {seed}: pin-list multisets differ");
+
+            // partition equivalence: projecting Π onto the snapshot and
+            // rebuilding from scratch must reproduce km1 and block weights
+            let mut snap_parts: Vec<BlockId> = vec![0; c.coarse.num_nodes()];
+            for u in dyn_arc.active_nodes() {
+                snap_parts[c.fine_to_coarse[u as usize] as usize] = phg.block_of(u);
+            }
+            let mut fresh =
+                PartitionedHypergraph::new(Arc::new(c.coarse), k);
+            fresh.set_uniform_max_weight(0.5);
+            fresh.assign_all(&snap_parts, 1);
+            assert_eq!(phg.km1(), fresh.km1(), "seed {seed}: km1 after repair");
+            for b in 0..k as BlockId {
+                assert_eq!(
+                    phg.block_weight(b),
+                    fresh.block_weight(b),
+                    "seed {seed}: block weight {b}"
+                );
+            }
+        }
+        assert_eq!(pool.structural_allocs(), 1, "seed {seed}");
+        assert_eq!(pool.value_rebuilds(), 1, "seed {seed}: only the bind rebuilds");
+    }
 }
