@@ -1,6 +1,6 @@
-//! Internal baseline partitioners (DESIGN.md §2 substitution): the three
-//! algorithm classes the paper's 25-solver comparison reduces to, built
-//! on the same substrates so differences isolate the *algorithmic* gap:
+//! Internal baseline partitioners: the three algorithm classes the
+//! paper's 25-solver comparison reduces to, built on the same substrates
+//! so differences isolate the *algorithmic* gap:
 //!
 //! * **PaToH-like** — sequential multilevel with matching-based
 //!   coarsening and a single LP+weak-FM pass (fast sequential class:
@@ -79,6 +79,9 @@ pub fn bipart_like(hg: &Arc<Hypergraph>, ctx_in: &Context) -> PartitionedHypergr
         .with_threads(ctx_in.threads)
         .with_seed(ctx_in.seed);
     ctx.use_community_detection = false;
+    // BiPart has no FM at all — pin the baseline to synchronous LP even
+    // though our Deterministic preset now runs det-FM as well
+    ctx.use_fm = false;
     ctx.det_sub_rounds = 2; // coarser synchronization = weaker decisions
     ctx.lp_rounds = 2;
     ctx.ip_min_repetitions = 1;

@@ -22,40 +22,63 @@ const JOINING: u8 = 1;
 const CLUSTERED: u8 = 2;
 const NO_TARGET: u32 = u32::MAX;
 
-/// Shared state of one clustering pass.
-struct JoinState<'a, H: HypergraphOps> {
+/// Reusable buffers of a clustering pass: the four input-slot-sized
+/// vectors of the join protocol (node states, representatives, desired
+/// targets, cluster weights), the shuffled visit order and the flattened
+/// output. One n-level run performs O(log n) rating passes over the same
+/// slot space, and a multilevel hierarchy runs one pass per level —
+/// pooling the buffers in the driver's workspace means a pass *resets*
+/// O(n) values instead of allocating (and faulting in) six fresh vectors
+/// each time (the ROADMAP "pool JoinState + shuffle order" leftover).
+#[derive(Default)]
+pub struct ClusterScratch {
     state: Vec<AtomicU8>,
     rep: Vec<AtomicU32>,
-    /// desired target of each Joining node (cycle detection, §4.1)
     target: Vec<AtomicU32>,
     cluster_weight: Vec<AtomicI64>,
+    order: Vec<u32>,
+    rep_out: Vec<NodeId>,
+}
+
+impl ClusterScratch {
+    /// Grow to `hg`'s slot count and reset the live prefix for a fresh
+    /// pass (atomics are reset in place; capacity never shrinks, so a
+    /// multilevel hierarchy reuses the finest level's allocation).
+    fn prepare<H: HypergraphOps>(&mut self, hg: &H) {
+        let n = hg.num_nodes();
+        while self.state.len() < n {
+            self.state.push(AtomicU8::new(UNCLUSTERED));
+            self.rep.push(AtomicU32::new(0));
+            self.target.push(AtomicU32::new(NO_TARGET));
+            self.cluster_weight.push(AtomicI64::new(0));
+        }
+        for u in 0..n {
+            // inactive slots of a dynamic hypergraph enter as CLUSTERED:
+            // they are skipped as movers and (having no pins) can never
+            // be rated as targets
+            let s = if hg.is_active_node(u as NodeId) { UNCLUSTERED } else { CLUSTERED };
+            self.state[u].store(s, Ordering::Relaxed);
+            self.rep[u].store(u as u32, Ordering::Relaxed);
+            self.target[u].store(NO_TARGET, Ordering::Relaxed);
+            self.cluster_weight[u].store(hg.node_weight(u as NodeId), Ordering::Relaxed);
+        }
+    }
+}
+
+/// Shared state of one clustering pass, borrowing the pooled buffers.
+struct JoinState<'a, H: HypergraphOps> {
+    state: &'a [AtomicU8],
+    rep: &'a [AtomicU32],
+    /// desired target of each Joining node (cycle detection, §4.1)
+    target: &'a [AtomicU32],
+    cluster_weight: &'a [AtomicI64],
     /// #live nodes remaining after the joins performed so far
     remaining: AtomicU64,
     hg: &'a H,
     cmax: NodeWeight,
 }
 
-impl<'a, H: HypergraphOps> JoinState<'a, H> {
-    fn new(hg: &'a H, cmax: NodeWeight) -> Self {
-        let n = hg.num_nodes();
-        JoinState {
-            // inactive slots of a dynamic hypergraph enter as CLUSTERED:
-            // they are skipped as movers and (having no pins) can never be
-            // rated as targets
-            state: (0..n as NodeId)
-                .map(|u| {
-                    AtomicU8::new(if hg.is_active_node(u) { UNCLUSTERED } else { CLUSTERED })
-                })
-                .collect(),
-            rep: (0..n as u32).map(AtomicU32::new).collect(),
-            target: (0..n).map(|_| AtomicU32::new(NO_TARGET)).collect(),
-            cluster_weight: (0..n).map(|u| AtomicI64::new(hg.node_weight(u as NodeId))).collect(),
-            remaining: AtomicU64::new(hg.num_active_nodes() as u64),
-            hg,
-            cmax,
-        }
-    }
-
+impl<H: HypergraphOps> JoinState<'_, H> {
     #[inline]
     fn state_of(&self, u: NodeId) -> u8 {
         self.state[u as usize].load(Ordering::Acquire)
@@ -158,11 +181,8 @@ impl<'a, H: HypergraphOps> JoinState<'a, H> {
 
 /// Heavy-edge rating pass: returns an idempotent representative array.
 ///
-/// `floor` bounds how far a single pass may shrink (the paper's
-/// `c(V)/2.5` safeguard handled as a node-count floor = `limit`).
-/// Generic over the representation: the n-level driver runs it directly
-/// on the evolving [`crate::hypergraph::dynamic::DynamicHypergraph`]
-/// (inactive slots stay singletons; shrink accounting uses live nodes).
+/// Convenience wrapper allocating throwaway scratch — drivers that run
+/// many passes go through [`cluster_with_scratch`].
 pub fn cluster<H: HypergraphOps>(
     hg: &H,
     ctx: &Context,
@@ -170,14 +190,47 @@ pub fn cluster<H: HypergraphOps>(
     cmax: NodeWeight,
     floor: usize,
 ) -> Vec<NodeId> {
+    let mut scratch = ClusterScratch::default();
+    cluster_with_scratch(hg, ctx, communities, cmax, floor, &mut scratch).to_vec()
+}
+
+/// Heavy-edge rating pass on pooled [`ClusterScratch`] buffers; returns
+/// the idempotent representative array, borrowed from the scratch (valid
+/// until the next pass on the same scratch).
+///
+/// `floor` bounds how far a single pass may shrink (the paper's
+/// `c(V)/2.5` safeguard handled as a node-count floor = `limit`).
+/// Generic over the representation: the n-level driver runs it directly
+/// on the evolving [`crate::hypergraph::dynamic::DynamicHypergraph`]
+/// (inactive slots stay singletons; shrink accounting uses live nodes).
+pub fn cluster_with_scratch<'s, H: HypergraphOps>(
+    hg: &H,
+    ctx: &Context,
+    communities: Option<&[u32]>,
+    cmax: NodeWeight,
+    floor: usize,
+    scratch: &'s mut ClusterScratch,
+) -> &'s [NodeId] {
     let n = hg.num_nodes();
-    let js = JoinState::new(hg, cmax);
+    scratch.prepare(hg);
+    let ClusterScratch { state, rep, target, cluster_weight, order, rep_out } = scratch;
+    let js = JoinState {
+        state: &state[..n],
+        rep: &rep[..n],
+        target: &target[..n],
+        cluster_weight: &cluster_weight[..n],
+        remaining: AtomicU64::new(hg.num_active_nodes() as u64),
+        hg,
+        cmax,
+    };
     let min_remaining =
         (floor.max((hg.num_active_nodes() as f64 / ctx.shrink_limit) as usize)) as u64;
 
     // random node order, deterministic in the seed
-    let mut order: Vec<u32> = (0..n as u32).collect();
-    Rng::new(hash2(ctx.seed, n as u64)).shuffle(&mut order);
+    order.clear();
+    order.extend(0..n as u32);
+    Rng::new(hash2(ctx.seed, n as u64)).shuffle(order);
+    let order = &*order;
 
     parallel_chunks(n, ctx.threads, |_, s, e| {
         let mut map = RatingMap::with_default_capacity();
@@ -195,18 +248,18 @@ pub fn cluster<H: HypergraphOps>(
     });
 
     // flatten: rep[rep[u]] may lag one level behind on cycle breaks
-    let mut rep: Vec<NodeId> =
-        js.rep.iter().map(|r| r.load(Ordering::Relaxed)).collect();
+    rep_out.clear();
+    rep_out.extend(js.rep.iter().map(|r| r.load(Ordering::Relaxed)));
     for u in 0..n {
-        let mut r = rep[u] as usize;
+        let mut r = rep_out[u] as usize;
         let mut hops = 0;
-        while rep[r] as usize != r && hops < n {
-            r = rep[r] as usize;
+        while rep_out[r] as usize != r && hops < n {
+            r = rep_out[r] as usize;
             hops += 1;
         }
-        rep[u] = r as NodeId;
+        rep_out[u] = r as NodeId;
     }
-    rep
+    rep_out
 }
 
 /// Evaluate the heavy-edge rating for `u` over the representatives of its
@@ -329,6 +382,30 @@ mod tests {
             c.seed = seed;
             let rep = cluster(&hg, &c, None, hg.total_weight() / 4, 2);
             check_idempotent(&rep);
+        }
+    }
+
+    #[test]
+    fn scratch_reuse_matches_fresh_scratch() {
+        // pooled buffers must behave exactly like throwaway ones, even
+        // when reused across passes over hypergraphs of different sizes
+        // (the prepare() reset restores the between-passes invariant);
+        // single-threaded so the join protocol itself is deterministic
+        let mut scratch = ClusterScratch::default();
+        let mut c = ctx();
+        c.threads = 1;
+        for seed in 0..4u64 {
+            let hg = planted_hypergraph(
+                &PlantedParams { n: 120 + 40 * seed as usize, ..Default::default() },
+                seed,
+            );
+            c.seed = seed;
+            let cmax = hg.total_weight() / 16;
+            let fresh = cluster(&hg, &c, None, cmax, 8);
+            let pooled =
+                cluster_with_scratch(&hg, &c, None, cmax, 8, &mut scratch).to_vec();
+            assert_eq!(fresh, pooled, "seed {seed}");
+            check_idempotent(&pooled);
         }
     }
 

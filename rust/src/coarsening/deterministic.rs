@@ -6,10 +6,17 @@
 //! (node id as tie-breaker), and the longest prefix that respects the
 //! cluster weight limit c_max is applied. The approve-all shortcut skips
 //! the group-by stage for clusters whose aggregate incoming weight fits.
+//!
+//! Generic over [`HypergraphOps`]: the multilevel driver runs it on the
+//! static hypergraph per level, and the deterministic n-level path runs
+//! it directly on the evolving
+//! [`DynamicHypergraph`](crate::hypergraph::dynamic::DynamicHypergraph)
+//! (inactive slots stay singleton fixed points and are never rated as
+//! targets — their pins left the shared pin lists at contraction time).
 
 use crate::coordinator::context::Context;
 use crate::datastructures::RatingMap;
-use crate::hypergraph::Hypergraph;
+use crate::hypergraph::HypergraphOps;
 use crate::parallel::{par_sort_by_key, parallel_chunks};
 use crate::util::rng::hash2;
 use crate::{NodeId, NodeWeight};
@@ -18,8 +25,8 @@ use std::sync::Mutex;
 
 /// Deterministic clustering pass; returns an idempotent representative
 /// array that is bit-identical for any thread count.
-pub fn cluster(
-    hg: &Hypergraph,
+pub fn cluster<H: HypergraphOps>(
+    hg: &H,
     ctx: &Context,
     communities: Option<&[u32]>,
     cmax: NodeWeight,
@@ -31,17 +38,19 @@ pub fn cluster(
     // weight of each cluster, indexed by representative id
     let cluster_weight: Vec<AtomicI64> =
         (0..n).map(|u| AtomicI64::new(hg.node_weight(u as NodeId))).collect();
-    // #clusters so far (sequentially maintained between sub-rounds)
-    let mut num_clusters = n;
-    let min_clusters = floor.max((n as f64 / ctx.shrink_limit) as usize);
+    // #clusters so far (sequentially maintained between sub-rounds);
+    // inactive dynamic slots are not clusters and never become members
+    let mut num_clusters = hg.num_active_nodes();
+    let min_clusters = floor.max((hg.num_active_nodes() as f64 / ctx.shrink_limit) as usize);
     // roots that received members: frozen (cannot move anymore)
     let mut locked = vec![false; n];
 
     'outer: for s in 0..sub_rounds {
-        // members of this sub-round: unclustered (singleton) nodes only
+        // members of this sub-round: unclustered (singleton) live nodes
         let members: Vec<NodeId> = (0..n as NodeId)
             .filter(|&u| {
-                rep[u as usize] == u
+                hg.is_active_node(u)
+                    && rep[u as usize] == u
                     && !locked[u as usize]
                     && hash2(ctx.seed ^ 0xde7e_55, u as u64) % sub_rounds == s
             })
@@ -55,9 +64,16 @@ pub fn cluster(
             let mut map = RatingMap::with_default_capacity();
             let mut local = Vec::new();
             for &u in &members[lo..hi] {
-                if let Some(t) =
-                    best_target_frozen(hg, u, &rep, &cluster_weight, communities, &mut map, cmax, ctx.seed)
-                {
+                if let Some(t) = best_target_frozen(
+                    hg,
+                    u,
+                    &rep,
+                    &cluster_weight,
+                    communities,
+                    &mut map,
+                    cmax,
+                    ctx.seed,
+                ) {
                     local.push((u, t));
                 }
             }
@@ -121,8 +137,8 @@ pub fn cluster(
 
 /// Heavy-edge rating against the frozen `rep` state.
 #[allow(clippy::too_many_arguments)]
-fn best_target_frozen(
-    hg: &Hypergraph,
+fn best_target_frozen<H: HypergraphOps>(
+    hg: &H,
     u: NodeId,
     rep: &[NodeId],
     cluster_weight: &[AtomicI64],
@@ -214,6 +230,29 @@ mod tests {
         let rep = cluster(&hg, &ctx(2), Some(&comms), hg.total_weight(), 2);
         for u in 0..hg.num_nodes() {
             assert_eq!(comms[u], comms[rep[u] as usize]);
+        }
+    }
+
+    #[test]
+    fn dynamic_structure_active_slots_only() {
+        // the deterministic n-level path rates the evolving dynamic
+        // structure directly: inactive slots must stay singleton fixed
+        // points and the result must stay bit-identical across threads
+        use crate::hypergraph::dynamic::DynamicHypergraph;
+        let hg = planted_hypergraph(&PlantedParams::default(), 41);
+        let mut d = DynamicHypergraph::from_hypergraph(&hg);
+        let ms = vec![d.contract(1, 0), d.contract(3, 2), d.contract(5, 4)];
+        let cmax = hg.total_weight() / 16;
+        let r1 = cluster(&d, &ctx(1), None, cmax, 8);
+        let r4 = cluster(&d, &ctx(4), None, cmax, 8);
+        assert_eq!(r1, r4, "bit-identical on the dynamic structure");
+        for m in &ms {
+            assert_eq!(r1[m.v as usize], m.v, "inactive slots stay fixed points");
+        }
+        for (u, &r) in r1.iter().enumerate() {
+            if d.is_active_node(u as NodeId) {
+                assert!(d.is_active_node(r), "representatives must be active");
+            }
         }
     }
 

@@ -47,15 +47,27 @@ pub fn coarsen(
     let mut levels: Vec<Level> = Vec::new();
     let mut current = hg.clone();
     let mut comms: Option<Vec<u32>> = communities.map(|c| c.to_vec());
+    // one set of rating-pass buffers for the whole hierarchy (coarser
+    // levels reuse the input level's allocation)
+    let mut scratch = clustering::ClusterScratch::default();
 
     while current.num_nodes() > limit {
         let n_before = current.num_nodes();
-        let rep = if ctx.deterministic {
-            deterministic::cluster(&current, ctx, comms.as_deref(), cmax, limit)
+        let det_rep: Vec<NodeId>;
+        let rep: &[NodeId] = if ctx.deterministic {
+            det_rep = deterministic::cluster(&*current, ctx, comms.as_deref(), cmax, limit);
+            &det_rep
         } else {
-            clustering::cluster(&*current, ctx, comms.as_deref(), cmax, limit)
+            clustering::cluster_with_scratch(
+                &*current,
+                ctx,
+                comms.as_deref(),
+                cmax,
+                limit,
+                &mut scratch,
+            )
         };
-        let c = contraction::contract(&current, &rep, ctx.threads);
+        let c = contraction::contract(&current, rep, ctx.threads);
         let n_after = c.coarse.num_nodes();
         // stop if the pass did not shrink the hypergraph by more than 1%
         if (n_before - n_after) as f64 <= ctx.min_shrink * n_before as f64 {

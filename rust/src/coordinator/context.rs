@@ -9,7 +9,12 @@
 //! | `DefaultFlows` | Mt-KaHyPar-D-F | multilevel, LP + FM + flows |
 //! | `Quality` | Mt-KaHyPar-Q | n-level, localized LP + FM |
 //! | `QualityFlows` | Mt-KaHyPar-Q-F | n-level, + flows |
-//! | `Deterministic` | Mt-KaHyPar-SDet | deterministic multilevel, sync LP |
+//! | `Deterministic` | Mt-KaHyPar-SDet | deterministic multilevel, sync LP + sync FM |
+//!
+//! The paper's SDet is LP-only; our `Deterministic` preset additionally
+//! runs the synchronous deterministic FM
+//! ([`crate::refinement::fm::deterministic`]) — same §11 discipline,
+//! same thread-count invariance, better quality than LP alone.
 
 use crate::metrics::Objective;
 use crate::util::PhaseTimer;
@@ -172,8 +177,10 @@ impl Context {
                 ctx.use_flows = true;
             }
             Preset::Deterministic => {
+                // the paper's SDet drops FM entirely; we keep `use_fm` on
+                // and substitute the synchronous deterministic FM, so the
+                // preset's refiner stack is det-LP → det-FM (§11)
                 ctx.deterministic = true;
-                ctx.use_fm = false; // paper: SDet does not use the FM algorithm
             }
         }
         ctx
@@ -226,7 +233,7 @@ mod tests {
         let qf = Context::new(Preset::QualityFlows, 8, 0.03);
         assert!(qf.nlevel && qf.use_flows);
         let det = Context::new(Preset::Deterministic, 8, 0.03);
-        assert!(det.deterministic && !det.use_fm);
+        assert!(det.deterministic && det.use_fm, "SDet runs the deterministic FM");
         let s = Context::new(Preset::Speed, 8, 0.03);
         assert!(!s.use_fm);
     }

@@ -86,7 +86,10 @@ pub fn partition_graph_arc(g: Arc<Graph>, ctx: &Context) -> PartitionedGraph {
         pg.set_uniform_max_weight(ctx.epsilon);
         pg.assign_all(parts, ctx.threads);
         timer.time("label_propagation", || lp_refine_graph(&pg, ctx));
-        if ctx.use_fm {
+        // the graph specialization has no synchronous FM sibling yet, so
+        // `ctx.deterministic` keeps the pre-det-FM behavior (LP only)
+        // instead of silently running the asynchronous FM
+        if ctx.use_fm && !ctx.deterministic {
             timer.time("fm", || fm_refine_graph(&pg, ctx));
         }
         pg

@@ -14,7 +14,7 @@
 //!   size shrinks (a *removed* pin); otherwise `v`'s slot is overwritten
 //!   with `u` (a *replaced* pin). Because uncontractions revert in LIFO
 //!   order, the inactive suffix behaves like a stack: the exact slot/swap
-//!   of every mutation is recorded as a [`PinEvent`] so the inverse
+//!   of every mutation is recorded as a `PinEvent` so the inverse
 //!   restores the precise permutation, keeping all recorded slots of
 //!   earlier events valid.
 //! * **Incident-net lists** are per-node vectors. `contract(v, u)` appends

@@ -12,11 +12,17 @@
 //!   partitioning via work-stealing recursive bipartitioning over a
 //!   portfolio of techniques, and three refinement algorithms (label
 //!   propagation, parallel localized FM, parallel flow-based refinement),
-//!   plus the n-level scheme, a deterministic mode, and plain-graph
+//!   plus the n-level scheme, a deterministic mode (synchronous LP *and*
+//!   FM, bit-identical for any thread count), and plain-graph
 //!   data-structure specializations.
 //! * **L2/L1 (build-time Python, `python/compile`)** — a spectral
 //!   bipartitioner and a dense gain-tile Pallas kernel, AOT-lowered to HLO
 //!   text and executed from [`runtime`] through the PJRT CPU client.
+//!
+//! `rust/ARCHITECTURE.md` is the contributor-facing map: the module
+//! layout, the pooled-memory lifecycle (bind / rebind / park / unpark)
+//! and the determinism guarantees, with pointers into the module docs
+//! that carry the per-section paper-adaptation notes.
 //!
 //! ## Quickstart
 //!

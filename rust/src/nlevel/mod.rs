@@ -23,7 +23,19 @@
 //! level finishes with the full static refiner stack (global FM + flows
 //! for Q-F) after a value-preserving hand-off to the input hypergraph.
 //!
-//! ## Adaptation note (documented in DESIGN.md)
+//! ## Deterministic mode
+//!
+//! With `ctx.deterministic` the whole n-level pipeline is thread-count
+//! invariant: coarsening rates with the synchronous
+//! [`crate::coarsening::deterministic::cluster`] (generic over the
+//! dynamic structure; inactive slots stay fixed points) instead of the
+//! racy join protocol, and each batch boundary runs the *seeded
+//! deterministic FM* (§11 frozen gains + prefix selection on the batch
+//! region) in place of the asynchronous localized LP/FM pair — its move
+//! space subsumes the localized LP's positive single-node moves. The
+//! final static hand-off then runs the deterministic refiner stack.
+//!
+//! ## Adaptation note (§9)
 //! Earlier revisions materialized a static snapshot per batch boundary
 //! (an O(n) union-find prefix rebuild plus a parallel re-contraction);
 //! that adaptation is gone. The one remaining static snapshot is the
@@ -110,13 +122,37 @@ pub fn partition_with_stats(
     let mut dynhg = DynamicHypergraph::from_hypergraph(&hg);
     dynhg.reserve_events(hg.num_pins());
     let mut mementos: Vec<Memento> = Vec::new();
+    // pooled rating-pass buffers: every pass reuses the same six
+    // input-slot-sized vectors instead of allocating fresh ones
+    let mut cluster_scratch = clustering::ClusterScratch::default();
 
     timer.time("coarsening", || {
         while dynhg.num_active_nodes() > limit {
             let n_before = dynhg.num_active_nodes();
             // per-node best partner = clustering pass (the paper's rating);
-            // each cluster yields |C|−1 single contractions onto its root
-            let rep = clustering::cluster(&dynhg, ctx, communities.as_deref(), cmax, limit);
+            // each cluster yields |C|−1 single contractions onto its root.
+            // Deterministic mode rates synchronously (§11) so the memento
+            // sequence is thread-count invariant.
+            let det_rep: Vec<NodeId>;
+            let rep: &[NodeId] = if ctx.deterministic {
+                det_rep = crate::coarsening::deterministic::cluster(
+                    &dynhg,
+                    ctx,
+                    communities.as_deref(),
+                    cmax,
+                    limit,
+                );
+                &det_rep
+            } else {
+                clustering::cluster_with_scratch(
+                    &dynhg,
+                    ctx,
+                    communities.as_deref(),
+                    cmax,
+                    limit,
+                    &mut cluster_scratch,
+                )
+            };
             let pass_start = mementos.len();
             for v in 0..n as NodeId {
                 let u = rep[v as usize];
@@ -183,9 +219,22 @@ pub fn partition_with_stats(
         touched.extend(batch.iter().flat_map(|m| [m.v, m.u]));
         touched.sort_unstable();
         touched.dedup();
-        timer.time("localized_lp", || pipeline.lp_localized(&phg, ctx, &touched));
-        if ctx.use_fm {
+        if ctx.deterministic {
+            // thread-count invariance: the seeded deterministic FM
+            // replaces the racy localized LP/FM pair (its wishlist
+            // subsumes LP's positive single-node moves, and it expands
+            // around kept moves like the localized searches do). It runs
+            // regardless of `use_fm` — it doubles as the deterministic
+            // localized LP, and skipping it would leave batch boundaries
+            // entirely unrefined in LP-only deterministic configurations
             timer.time("localized_fm", || pipeline.fm_with_seeds(&phg, ctx, Some(&touched)));
+        } else {
+            timer.time("localized_lp", || pipeline.lp_localized(&phg, ctx, &touched));
+            if ctx.use_fm {
+                timer.time("localized_fm", || {
+                    pipeline.fm_with_seeds(&phg, ctx, Some(&touched))
+                });
+            }
         }
     }
 
@@ -278,6 +327,38 @@ mod tests {
         assert!(stats.contractions > 0);
         assert!(phg.is_balanced(), "imbalance {}", phg.imbalance());
         phg.verify_consistency().unwrap();
+    }
+
+    #[test]
+    fn nlevel_deterministic_is_thread_invariant() {
+        // deterministic n-level: synchronous rating on the dynamic
+        // structure, seeded det-FM at every batch boundary and the
+        // deterministic finest-level stack must be bit-identical for any
+        // thread count (threads pinned explicitly — the MTKH_TEST_THREADS
+        // override must not collapse the comparison)
+        let hg = Arc::new(planted_hypergraph(
+            &PlantedParams { n: 500, m: 900, blocks: 4, ..Default::default() },
+            19,
+        ));
+        let run = |threads: usize| {
+            let mut c =
+                Context::new(Preset::Deterministic, 4, 0.03).with_threads(threads).with_seed(19);
+            c.nlevel = true;
+            c.contraction_limit_factor = 24;
+            c.ip_min_repetitions = 2;
+            c.ip_max_repetitions = 3;
+            c.fm_max_rounds = 3;
+            c.nlevel_batch_size = 64;
+            let phg = partition(hg.clone(), &c);
+            assert!(phg.is_balanced(), "t={threads}: imbalance {}", phg.imbalance());
+            phg.verify_consistency().unwrap();
+            (phg.km1(), phg.parts())
+        };
+        let r1 = run(1);
+        let r2 = run(2);
+        let r4 = run(4);
+        assert_eq!(r1, r2, "t=1 vs t=2");
+        assert_eq!(r2, r4, "t=2 vs t=4");
     }
 
     #[test]

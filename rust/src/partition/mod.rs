@@ -33,7 +33,7 @@
 //!
 //! The structure is generic over [`HypergraphOps`], so the same Π/Φ/Λ
 //! state binds to the static [`Hypergraph`] *or* to the n-level
-//! [`DynamicHypergraph`](crate::hypergraph::dynamic::DynamicHypergraph).
+//! [`DynamicHypergraph`].
 //! Two repair paths avoid the full value rebuild entirely:
 //!
 //! * [`PartitionedHypergraph::apply_uncontractions`] — after

@@ -87,11 +87,20 @@ impl PartitionBuffers {
     }
 }
 
-/// Manager of one finest-level-sized [`PartitionBuffers`] allocation that
+/// Manager of one finest-level-sized `PartitionBuffers` allocation that
 /// always lives inside the [`PartitionedHypergraph`] bound to the current
 /// uncoarsening level; the pool carries the reservation, the reused
 /// projection scratch and the allocation counters, and moves the memory
 /// from one binding to the next.
+///
+/// Value semantics per operation (memory is always reused): [`Self::bind`]
+/// fully rebuilds, [`Self::rebind_level`] projects Π and rebuilds Φ/Λ,
+/// [`Self::rebind_with_parts`] delta-repairs on an unchanged hypergraph,
+/// and [`Self::park`]/[`Self::unpark`]/[`Self::rebind_preserving`] move
+/// the buffers with every value intact. The counters
+/// ([`Self::structural_allocs`], [`Self::value_rebuilds`],
+/// [`Self::delta_repairs`], [`Self::rebinds`]) exist so tests can pin
+/// which path ran — see the lifecycle table in `rust/ARCHITECTURE.md`.
 pub struct PartitionPool {
     k: usize,
     reserved_nodes: usize,

@@ -1,0 +1,532 @@
+//! Synchronous deterministic FM refinement (the ROADMAP "Deterministic
+//! FM" item; paper §11 discipline, see also *Deterministic Parallel
+//! Hypergraph Partitioning*, arXiv:2112.12704).
+//!
+//! ## §11 adaptation note
+//!
+//! The paper's deterministic configuration (SDet) makes preprocessing,
+//! coarsening and label propagation synchronous but leaves FM out
+//! entirely — its localized searches own nodes via atomics and publish
+//! moves in poll order, which no fixed schedule can reproduce. This
+//! module adapts the §11 *frozen gains + prefix selection* discipline to
+//! an FM-strength refiner instead of dropping FM from the deterministic
+//! preset:
+//!
+//! 1. **Frozen gains.** Each round computes every candidate's best move
+//!    against the round-start partition snapshot — from the workspace
+//!    [`GainTable`] in global mode (O(k) per lookup, §6.2), or from the
+//!    exact pin counts in seeded mode, where the table is never
+//!    initialized (the n-level batch-boundary cost argument of
+//!    [`super::fm_refine_with_workspace`]). Nothing is applied while
+//!    gains are computed, so the parallel phase only reads.
+//! 2. **Prefix selection per block pair.** Candidate moves (frozen gain
+//!    ≥ 0 — zero-gain plateau moves are admitted, unlike deterministic
+//!    LP's strictly positive filter) are grouped by block pair, each
+//!    pair's two directions sorted by `(gain desc, node id)`, and the
+//!    longest balance-feasible prefix pair is selected by the §11
+//!    two-pointer prefix-sum over move weights ([`select_prefixes`]).
+//!    Pairs are processed in a fixed ascending `(s, t)` order, so
+//!    opposite-direction conflicts resolve identically for every thread
+//!    count; application is sequential — no atomics race on Π.
+//! 3. **Balance-admissible best-prefix revert.** Each pair's selected
+//!    moves are applied merged across the two directions in
+//!    `(gain desc, node)` order, logging the exact attributed gain *and*
+//!    whether the pair's two blocks are within their limits right after
+//!    the move (its *admissibility* as a cut point — other blocks are
+//!    untouched since their own pair finished, and the §11 prefix-sum
+//!    selection proves every pair boundary feasible). The round then
+//!    reverts to the best admissible prefix of the move log (§6.3
+//!    flavor, ties toward the longest prefix so kept zero-gain plateau
+//!    moves survive). This is the FM ingredient: frozen gains go stale
+//!    as earlier moves apply — the mirror move of an already-uncut net
+//!    realizes −ω(e) instead of its frozen +ω(e) — and the revert keeps
+//!    the profitable prefix and undoes the rest, so a round can never
+//!    end worse than it started, which plain deterministic LP does not
+//!    guarantee.
+//!
+//! **Divergence from the paper:** §11 splits every round into
+//! `det_sub_rounds` hash-partitioned sub-rounds to keep the frozen state
+//! fresh for LP's cheap moves. Det-FM intentionally runs *synchronous
+//! full rounds* instead: the unit revert already repairs stale-gain
+//! damage exactly, and full rounds give the prefix selection the complete
+//! wishlist to trade off per pair. Seeded (n-level §9) invocations expand
+//! the candidate set around the nodes kept by the previous round — the
+//! synchronous analogue of localized FM's neighborhood expansion.
+//!
+//! Everything runs on the pipeline [`Workspace`]: the gain table for
+//! frozen gains, the shared [`DetScratch`](crate::refinement::DetScratch)
+//! (membership, wishlist, move log, weight-prefix buffers) and nothing
+//! per-invocation — repeated
+//! calls across uncoarsening levels allocate nothing new. The refiner is
+//! generic over [`HypergraphOps`], so the same code serves the static
+//! multilevel/V-cycle/baseline drivers and the n-level
+//! `DynamicHypergraph` path.
+
+use crate::coordinator::context::Context;
+use crate::hypergraph::HypergraphOps;
+use crate::parallel::parallel_chunks;
+use crate::partition::{GainTable, Move, PartitionedHypergraph};
+use crate::refinement::fm::{FmStats, EXPANSION_NET_SIZE_LIMIT};
+use crate::refinement::lp::select_prefixes;
+use crate::refinement::pipeline::Workspace;
+use crate::{BlockId, Gain, NodeId};
+use std::sync::Mutex;
+
+/// Synchronous deterministic FM; returns round/improvement statistics.
+///
+/// Standalone entry point allocating a transient [`Workspace`] — pipeline
+/// callers go through
+/// [`RefinementPipeline::fm_with_seeds`](crate::refinement::RefinementPipeline::fm_with_seeds)
+/// or the refiner stack, which carry the workspace across levels.
+pub fn fm_refine_deterministic<H: HypergraphOps>(
+    phg: &PartitionedHypergraph<H>,
+    ctx: &Context,
+) -> FmStats {
+    let mut ws = Workspace::new(phg.k(), ctx.threads, phg.hypergraph().num_nodes());
+    fm_refine_deterministic_with_workspace(phg, ctx, None, &mut ws)
+}
+
+/// The deterministic FM algorithm proper, on a caller-provided
+/// [`Workspace`]. Global rounds (no seed set) compute frozen gains from
+/// the workspace gain table (initialized once per invocation, maintained
+/// through the move update rules); seeded rounds skip the table and use
+/// exact pin-count gains, staying O(region) per n-level batch boundary.
+///
+/// Thread-count invariant by construction: the parallel phase only reads
+/// the frozen partition, its merged wishlist is totally ordered by
+/// `(gain, node)` before use, and all moves are applied — and reverted —
+/// sequentially in a fixed pair order.
+pub fn fm_refine_deterministic_with_workspace<H: HypergraphOps>(
+    phg: &PartitionedHypergraph<H>,
+    ctx: &Context,
+    seed_set: Option<&[NodeId]>,
+    ws: &mut Workspace,
+) -> FmStats {
+    assert_eq!(phg.k(), ws.k(), "workspace was built for a different k");
+    let n = phg.hypergraph().num_nodes();
+    let threads = ctx.threads.max(1);
+    ws.ensure_node_capacity(n);
+    let use_table = seed_set.is_none();
+    if use_table {
+        ws.prepare_gain_table(phg, threads);
+    }
+    // field-disjoint borrows: the det scratch is mutated, the gain table
+    // is read (and updated through interior mutability by the move ops)
+    let ws = &mut *ws;
+    let det = &mut ws.det;
+    let table: Option<&GainTable> = if use_table { Some(&ws.gain_table) } else { None };
+
+    if let Some(seeds) = seed_set {
+        det.candidates.clear();
+        det.candidates.extend_from_slice(seeds);
+        det.candidates.sort_unstable();
+        det.candidates.dedup();
+    }
+
+    let mut stats = FmStats::default();
+    for round in 0..ctx.fm_max_rounds {
+        // ---- candidates of this round (frozen-state border nodes) ----
+        det.members.clear();
+        match seed_set {
+            Some(_) => det.members.extend_from_slice(&det.candidates),
+            None => det.members.extend(0..n as NodeId),
+        }
+
+        // ---- phase 1: frozen best moves, computed in parallel ----
+        // Reads only; the merged wishlist is totally ordered below, so
+        // the nondeterministic per-thread collection order cannot show.
+        det.desired.clear();
+        {
+            let members = &det.members[..];
+            let desired = Mutex::new(&mut det.desired);
+            parallel_chunks(members.len(), threads, |_, lo, hi| {
+                let mut local: Vec<(Gain, NodeId, BlockId, BlockId)> = Vec::new();
+                for &u in &members[lo..hi] {
+                    if !phg.is_border(u) {
+                        continue;
+                    }
+                    let best = match table {
+                        Some(gt) => gt.max_gain_move(phg, u),
+                        None => phg.max_gain_move(u),
+                    };
+                    if let Some((g, t)) = best {
+                        // zero-gain plateau moves are admitted (see the
+                        // module doc); negative ones are not — the
+                        // best-prefix revert could only drop them again
+                        if g >= 0 {
+                            local.push((g, u, phg.block_of(u), t));
+                        }
+                    }
+                }
+                desired.lock().unwrap().extend(local);
+            });
+        }
+        if det.desired.is_empty() {
+            break;
+        }
+        // total order: block pair asc, direction, gain desc, node asc
+        det.desired.sort_unstable_by(|a, b| {
+            pair_dir(a).cmp(&pair_dir(b)).then(b.0.cmp(&a.0)).then(a.1.cmp(&b.1))
+        });
+
+        // ---- phase 2: sequential per-pair prefix application ----
+        det.moves.clear();
+        det.gains.clear();
+        det.admissible.clear();
+        let desired = &det.desired[..];
+        let mut i = 0;
+        while i < desired.len() {
+            let (pmin, pmax, _) = pair_dir(&desired[i]);
+            let mut j = i;
+            while j < desired.len() {
+                let (a, b, _) = pair_dir(&desired[j]);
+                if (a, b) != (pmin, pmax) {
+                    break;
+                }
+                j += 1;
+            }
+            // the sort puts the s→t direction (from == pmin) first
+            let mut mid = i;
+            while mid < j && desired[mid].2 == pmin {
+                mid += 1;
+            }
+            let st = &desired[i..mid];
+            let ts = &desired[mid..j];
+            i = j;
+
+            det.w_st.clear();
+            det.w_st.extend(st.iter().map(|m| phg.hypergraph().node_weight(m.1)));
+            det.w_ts.clear();
+            det.w_ts.extend(ts.iter().map(|m| phg.hypergraph().node_weight(m.1)));
+            let feasible_before = phg.block_weight(pmin) <= phg.max_block_weight(pmin)
+                && phg.block_weight(pmax) <= phg.max_block_weight(pmax);
+            let (len_st, len_ts) = select_prefixes(
+                &det.w_st,
+                &det.w_ts,
+                phg.block_weight(pmin),
+                phg.block_weight(pmax),
+                phg.max_block_weight(pmin),
+                phg.max_block_weight(pmax),
+            );
+            if len_st + len_ts == 0 {
+                continue;
+            }
+            // apply the two selected prefixes merged by (gain desc, node)
+            // — high-gain moves first, so a stale mirror move cannot drag
+            // an earlier genuine improvement past the revert cut
+            let (mut si, mut ti) = (0usize, 0usize);
+            while si < len_st || ti < len_ts {
+                let take_st = if si < len_st && ti < len_ts {
+                    let (x, y) = (&st[si], &ts[ti]);
+                    x.0 > y.0 || (x.0 == y.0 && x.1 < y.1)
+                } else {
+                    si < len_st
+                };
+                let m = if take_st {
+                    si += 1;
+                    &st[si - 1]
+                } else {
+                    ti += 1;
+                    &ts[ti - 1]
+                };
+                let out = phg.move_unchecked(m.1, m.3, table);
+                det.moves.push(Move { node: m.1, from: m.2, to: m.3 });
+                det.gains.push(out.attributed_gain);
+                // admissible cut point: the pair's blocks are inside their
+                // limits right now (no other block moved since its own
+                // pair finished, so this is a globally balanced state)
+                det.admissible.push(
+                    phg.block_weight(pmin) <= phg.max_block_weight(pmin)
+                        && phg.block_weight(pmax) <= phg.max_block_weight(pmax),
+                );
+            }
+            // the §11 prefix-sum selection proves the pair boundary
+            // feasible whenever the pair started feasible
+            debug_assert!(
+                !feasible_before || det.admissible.last().copied().unwrap_or(true),
+                "prefix selection violated a block weight limit"
+            );
+        }
+        if det.moves.is_empty() {
+            break;
+        }
+
+        // ---- balance-admissible best-prefix revert (§6.3 discipline) ----
+        // ties pick the longest admissible prefix, so zero-gain plateau
+        // moves behind a positive prefix survive the round
+        let mut cut = 0usize;
+        let mut total: Gain = 0;
+        let mut acc: Gain = 0;
+        for (p, &g) in det.gains.iter().enumerate() {
+            acc += g;
+            if det.admissible[p] && acc > 0 && acc >= total {
+                total = acc;
+                cut = p + 1;
+            }
+        }
+        for m in det.moves[cut..].iter().rev() {
+            phg.move_unchecked(m.node, m.from, table);
+        }
+        if let Some(gt) = table {
+            // movers' own benefits are the one thing the update rules
+            // leave stale (§6.2); repair them — applied and reverted alike
+            for m in &det.moves {
+                gt.recompute_benefit(phg, m.node);
+            }
+        }
+        stats.rounds = round + 1;
+        stats.improvement += total;
+        stats.moves_applied += cut;
+        if total <= 0 {
+            break;
+        }
+
+        // ---- seeded mode: expand around the kept moves (§9) ----
+        if seed_set.is_some() {
+            let hg = phg.hypergraph();
+            for m in &det.moves[..cut] {
+                for &e in hg.incident_nets(m.node) {
+                    if hg.net_size(e) <= EXPANSION_NET_SIZE_LIMIT {
+                        det.candidates.extend_from_slice(hg.pins(e));
+                    }
+                }
+            }
+            det.candidates.sort_unstable();
+            det.candidates.dedup();
+        }
+    }
+    stats
+}
+
+/// Sort/group key of a desired move: `(min block, max block, direction)`
+/// with direction 0 for `min → max` moves.
+#[inline]
+fn pair_dir(m: &(Gain, NodeId, BlockId, BlockId)) -> (BlockId, BlockId, u8) {
+    if m.2 < m.3 {
+        (m.2, m.3, 0)
+    } else {
+        (m.3, m.2, 1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::context::{Context, Preset};
+    use crate::generators::{planted_hypergraph, PlantedParams};
+    use crate::hypergraph::dynamic::DynamicHypergraph;
+    use crate::hypergraph::Hypergraph;
+    use crate::refinement::lp;
+    use crate::util::Rng;
+    use std::sync::Arc;
+
+    fn ctx(k: usize, threads: usize, seed: u64) -> Context {
+        Context::new(Preset::Deterministic, k, 0.03).with_threads(threads).with_seed(seed)
+    }
+
+    fn perturbed(seed: u64, k: usize, flips: usize) -> PartitionedHypergraph {
+        let p = PlantedParams { n: 300, m: 600, blocks: k, ..Default::default() };
+        let hg = Arc::new(planted_hypergraph(&p, seed));
+        let n = hg.num_nodes();
+        let mut rng = Rng::new(seed ^ 0x123);
+        let mut parts: Vec<BlockId> = (0..n).map(|u| (u * k / n) as BlockId).collect();
+        for _ in 0..flips {
+            parts[rng.next_below(n)] = rng.next_below(k) as BlockId;
+        }
+        let mut phg = PartitionedHypergraph::new(hg, k);
+        phg.set_uniform_max_weight(0.3);
+        phg.assign_all(&parts, 1);
+        phg
+    }
+
+    #[test]
+    fn improves_and_accounts_exactly() {
+        for threads in [1, 4] {
+            let phg = perturbed(2, 2, 60);
+            let before = phg.km1();
+            let stats = fm_refine_deterministic(&phg, &ctx(2, threads, 2));
+            assert!(stats.improvement > 0, "t={threads}: no improvement");
+            assert_eq!(phg.km1(), before - stats.improvement, "t={threads}");
+            assert!(phg.is_balanced());
+            phg.verify_consistency().unwrap();
+        }
+    }
+
+    #[test]
+    fn thread_count_invariant() {
+        // the §11 contract: bit-identical partitions and improvements for
+        // 1, 2 and 4 threads, global and seeded mode alike
+        for seed in [3u64, 11, 29] {
+            let reference: Vec<(i64, Vec<BlockId>)> = [1usize, 2, 4]
+                .iter()
+                .map(|&t| {
+                    let phg = perturbed(seed, 3, 70);
+                    let stats = fm_refine_deterministic(&phg, &ctx(3, t, seed));
+                    phg.verify_consistency().unwrap();
+                    (stats.improvement, phg.parts())
+                })
+                .collect();
+            assert_eq!(reference[0], reference[1], "seed {seed}: t=1 vs t=2");
+            assert_eq!(reference[1], reference[2], "seed {seed}: t=2 vs t=4");
+            let seeded: Vec<Vec<BlockId>> = [1usize, 4]
+                .iter()
+                .map(|&t| {
+                    let phg = perturbed(seed, 3, 70);
+                    let seeds: Vec<NodeId> =
+                        (0..phg.hypergraph().num_nodes() as NodeId).step_by(3).collect();
+                    let mut ws = Workspace::new(3, t, phg.hypergraph().num_nodes());
+                    fm_refine_deterministic_with_workspace(
+                        &phg,
+                        &ctx(3, t, seed),
+                        Some(&seeds),
+                        &mut ws,
+                    );
+                    phg.parts()
+                })
+                .collect();
+            assert_eq!(seeded[0], seeded[1], "seed {seed}: seeded mode");
+        }
+    }
+
+    #[test]
+    fn never_worsens() {
+        // the pair-unit best-prefix revert bounds every round at ≥ 0
+        for seed in 0..6u64 {
+            let phg = perturbed(seed, 3, 40);
+            let before = phg.km1();
+            let stats = fm_refine_deterministic(&phg, &ctx(3, 2, seed));
+            assert!(stats.improvement >= 0, "seed {seed}");
+            assert!(phg.km1() <= before, "seed {seed}");
+            phg.verify_consistency().unwrap();
+        }
+    }
+
+    #[test]
+    fn escapes_det_lp_mirror_oscillation() {
+        // nodes p=0 q=1 a=2 c=3 z=4, parts [0,1,0,0,1]; nets N0={p,q},
+        // N1={a,c}, N2={a,z}. Initially N0 and N2 are cut (km1 = 2) and
+        // every positive frozen move has a mirror: det-LP (one sub-round,
+        // no revert) applies p→1 together with the mirror q→0 and stalls
+        // at km1 = 1. Det-FM applies the same wishlist high-gain-first,
+        // and its admissible best-prefix revert keeps the profitable
+        // prefix (p, q, z in round 1; p in round 2) while undoing the
+        // realized mirror losses — two rounds reach the optimum km1 = 0.
+        let hg = Arc::new(Hypergraph::from_nets(
+            5,
+            &[vec![0, 1], vec![2, 3], vec![2, 4]],
+            None,
+            None,
+        ));
+        let build = || {
+            let mut phg = PartitionedHypergraph::new(hg.clone(), 2);
+            phg.set_max_weights(vec![5, 5]);
+            phg.assign_all(&[0, 1, 0, 0, 1], 1);
+            phg
+        };
+        let mut c = ctx(2, 2, 7);
+        c.det_sub_rounds = 1; // one synchronous wishlist per round
+        let lp_phg = build();
+        assert_eq!(lp_phg.km1(), 2);
+        lp::lp_refine_deterministic(&lp_phg, &c);
+        assert_eq!(lp_phg.km1(), 1, "det-LP keeps the mirror losses and stalls");
+
+        let fm_phg = build();
+        let stats = fm_refine_deterministic(&fm_phg, &c);
+        assert_eq!(fm_phg.km1(), 0, "det-FM reverts the mirror losses");
+        assert_eq!(stats.improvement, 2);
+        fm_phg.verify_consistency().unwrap();
+    }
+
+    #[test]
+    fn prefix_selection_respects_non_uniform_limits() {
+        // the required satellite property: under per-block set_max_weights
+        // (non-uniform, some blocks tight), no applied prefix may ever
+        // leave a block over its limit — across seeds and thread counts
+        for seed in 0..5u64 {
+            for threads in [1usize, 4] {
+                let p = PlantedParams { n: 200, m: 400, blocks: 3, ..Default::default() };
+                let hg = Arc::new(planted_hypergraph(&p, seed));
+                let n = hg.num_nodes();
+                let mut rng = Rng::new(seed ^ 0x77);
+                let mut parts: Vec<BlockId> =
+                    (0..n).map(|u| (u * 3 / n) as BlockId).collect();
+                for _ in 0..n / 6 {
+                    parts[rng.next_below(n)] = rng.next_below(3) as BlockId;
+                }
+                let mut phg = PartitionedHypergraph::new(hg, 3);
+                phg.assign_all(&parts, 1);
+                // non-uniform limits: one roomy block, two tight ones
+                // (slack 2 and 5 above the current weight)
+                let w0 = phg.block_weight(0);
+                let w1 = phg.block_weight(1);
+                phg.set_max_weights(vec![w0 + 2, w1 + 5, 2 * n as i64]);
+                assert!(phg.is_balanced());
+                let before = phg.km1();
+                let stats = fm_refine_deterministic(&phg, &ctx(3, threads, seed));
+                assert!(
+                    phg.is_balanced(),
+                    "seed {seed} t={threads}: weights {:?} limits {:?}",
+                    (0..3).map(|b| phg.block_weight(b)).collect::<Vec<_>>(),
+                    (0..3).map(|b| phg.max_block_weight(b)).collect::<Vec<_>>()
+                );
+                assert_eq!(phg.km1(), before - stats.improvement);
+                phg.verify_consistency().unwrap();
+            }
+        }
+    }
+
+    #[test]
+    fn runs_on_the_dynamic_hypergraph() {
+        // the HypergraphOps requirement: the same refiner on the n-level
+        // representation, global and seeded, matching the static result
+        let p = PlantedParams { n: 250, m: 450, blocks: 2, ..Default::default() };
+        let static_hg = Arc::new(planted_hypergraph(&p, 9));
+        let dyn_hg = Arc::new(DynamicHypergraph::from_hypergraph(&static_hg));
+        let n = static_hg.num_nodes();
+        let mut rng = Rng::new(0x5eed);
+        let mut parts: Vec<BlockId> = (0..n).map(|u| (u * 2 / n) as BlockId).collect();
+        for _ in 0..n / 5 {
+            parts[rng.next_below(n)] = rng.next_below(2) as BlockId;
+        }
+        let run_static = || {
+            let mut phg = PartitionedHypergraph::new(static_hg.clone(), 2);
+            phg.set_uniform_max_weight(0.3);
+            phg.assign_all(&parts, 1);
+            fm_refine_deterministic(&phg, &ctx(2, 2, 5));
+            phg.parts()
+        };
+        let run_dynamic = |seeds: Option<Vec<NodeId>>| {
+            let mut phg = PartitionedHypergraph::new(dyn_hg.clone(), 2);
+            phg.set_uniform_max_weight(0.3);
+            phg.assign_all(&parts, 1);
+            let mut ws = Workspace::new(2, 2, n);
+            fm_refine_deterministic_with_workspace(
+                &phg,
+                &ctx(2, 2, 5),
+                seeds.as_deref(),
+                &mut ws,
+            );
+            phg.verify_consistency().unwrap();
+            phg.parts()
+        };
+        assert_eq!(run_static(), run_dynamic(None), "static vs dynamic global mode");
+        let all: Vec<NodeId> = (0..n as NodeId).collect();
+        let seeded = run_dynamic(Some(all));
+        assert_eq!(seeded.len(), n, "seeded mode runs on the dynamic structure");
+    }
+
+    #[test]
+    fn workspace_reuse_is_bit_identical() {
+        // a dirty reused workspace must behave like a fresh one
+        let c = ctx(2, 2, 21);
+        let phg_a = perturbed(21, 2, 60);
+        let phg_b = perturbed(21, 2, 60);
+        let sa = fm_refine_deterministic(&phg_a, &c);
+        let mut ws = Workspace::new(2, 2, phg_b.hypergraph().num_nodes());
+        let other = perturbed(22, 2, 30);
+        fm_refine_deterministic_with_workspace(&other, &c, None, &mut ws);
+        let sb = fm_refine_deterministic_with_workspace(&phg_b, &c, None, &mut ws);
+        assert_eq!(sa.improvement, sb.improvement);
+        assert_eq!(phg_a.parts(), phg_b.parts());
+    }
+}

@@ -20,11 +20,23 @@
 //! set the searches are tiny, so PQ keys come from the delta-aware
 //! on-the-fly gain instead (adjacent blocks only) and the whole invocation
 //! stays O(Σ|I(touched)|), matching the dynamic-hypergraph batch cost.
+//! Batch boundaries are in-place `DynamicHypergraph` uncontractions (not
+//! materialized snapshots), so the partition the seeded search runs on is
+//! the same pooled state every batch — which is why the sparse
+//! ownership-reset and scratch invariants below matter.
+//!
+//! **Deterministic sibling:** under `ctx.deterministic` the pipeline runs
+//! [`deterministic::fm_refine_deterministic_with_workspace`] instead — a
+//! synchronous frozen-gain / prefix-selection variant (§11) that is
+//! bit-identical for every thread count. This module's algorithm is the
+//! asynchronous high-throughput path.
 
 pub mod delta;
+pub mod deterministic;
 pub mod stop;
 
 pub use delta::DeltaPartition;
+pub use deterministic::fm_refine_deterministic;
 pub use stop::AdaptiveStoppingRule;
 
 use crate::coordinator::context::Context;
@@ -50,8 +62,9 @@ pub struct FmStats {
 
 /// Cap on net size during search expansion: gain updates on huge nets are
 /// prohibitively expensive and rarely change decisions (the paper notes
-/// FM outliers on instances with many large nets).
-const EXPANSION_NET_SIZE_LIMIT: usize = 512;
+/// FM outliers on instances with many large nets). Shared with the
+/// deterministic variant's seeded candidate expansion.
+pub(crate) const EXPANSION_NET_SIZE_LIMIT: usize = 512;
 
 /// Parallel k-way FM refinement; returns round/improvement statistics.
 ///

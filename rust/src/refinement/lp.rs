@@ -18,21 +18,19 @@ use crate::{BlockId, Gain, NodeId, NodeWeight};
 use std::sync::atomic::{AtomicI64, Ordering};
 use std::sync::Mutex;
 
-/// Reusable label-propagation scratch: the per-round node visit order,
-/// the localized frontier/next buffers, and the deterministic variant's
-/// per-sub-round membership and move-wishlist buffers. Owned by the
-/// refinement `Workspace` so repeated LP invocations across uncoarsening
-/// levels stop allocating per round; the capacity of the finest level is
-/// reused by every coarser one.
+/// Reusable label-propagation scratch: the per-round node visit order and
+/// the localized frontier/next buffers. Owned by the refinement
+/// `Workspace` so repeated LP invocations across uncoarsening levels stop
+/// allocating per round; the capacity of the finest level is reused by
+/// every coarser one. The deterministic variant's membership and
+/// move-wishlist buffers live in the shared
+/// [`DetScratch`](crate::refinement::DetScratch) instead (deterministic
+/// FM uses the same sub-round shape, so the buffers are shared).
 #[derive(Default)]
 pub struct LpScratch {
     order: Vec<u32>,
     frontier: Vec<NodeId>,
     next: Vec<NodeId>,
-    /// deterministic LP (§11): nodes of the current sub-round
-    det_members: Vec<NodeId>,
-    /// deterministic LP (§11): gain-sorted desired moves of a sub-round
-    det_desired: Vec<(Gain, NodeId, BlockId, BlockId)>,
 }
 
 /// Parallel label propagation; returns the total attributed improvement.
@@ -185,17 +183,18 @@ pub fn lp_refine_deterministic<H: HypergraphOps>(
     phg: &PartitionedHypergraph<H>,
     ctx: &Context,
 ) -> Gain {
-    lp_refine_deterministic_with_scratch(phg, ctx, &mut LpScratch::default())
+    lp_refine_deterministic_with_scratch(phg, ctx, &mut crate::refinement::DetScratch::default())
 }
 
 /// Deterministic synchronous label propagation whose per-sub-round
-/// membership and move-wishlist buffers live on reusable workspace
-/// scratch. Bit-identical to the throwaway-scratch wrapper for any thread
-/// count (the wishlist is totally ordered by (gain, node) before use).
+/// membership and move-wishlist buffers live on the workspace's shared
+/// [`DetScratch`](crate::refinement::DetScratch). Bit-identical to the
+/// throwaway-scratch wrapper for any thread count (the wishlist is
+/// totally ordered by (gain, node) before use).
 pub fn lp_refine_deterministic_with_scratch<H: HypergraphOps>(
     phg: &PartitionedHypergraph<H>,
     ctx: &Context,
-    scratch: &mut LpScratch,
+    scratch: &mut crate::refinement::DetScratch,
 ) -> Gain {
     let n = phg.hypergraph().num_nodes();
     let k = phg.k();
@@ -206,14 +205,14 @@ pub fn lp_refine_deterministic_with_scratch<H: HypergraphOps>(
         for s in 0..sub_rounds {
             // phase 1: calculate moves (frozen state); membership comes
             // from the partitioning predicate (see det_in_sub_round)
-            scratch.det_members.clear();
-            scratch.det_members.extend(
+            scratch.members.clear();
+            scratch.members.extend(
                 (0..n as NodeId).filter(|&u| det_in_sub_round(ctx.seed, round, s, sub_rounds, u)),
             );
-            let members = &scratch.det_members;
-            scratch.det_desired.clear();
+            let members = &scratch.members;
+            scratch.desired.clear();
             {
-                let desired = Mutex::new(&mut scratch.det_desired);
+                let desired = Mutex::new(&mut scratch.desired);
                 parallel_chunks(members.len(), ctx.threads, |_, lo, hi| {
                     let mut local = Vec::new();
                     for &u in &members[lo..hi] {
@@ -229,7 +228,7 @@ pub fn lp_refine_deterministic_with_scratch<H: HypergraphOps>(
                     desired.lock().unwrap().extend(local);
                 });
             }
-            let desired = &mut scratch.det_desired;
+            let desired = &mut scratch.desired;
             // deterministic order: by gain desc, node id as tie-break
             desired.sort_unstable_by(|a, b| b.0.cmp(&a.0).then(a.1.cmp(&b.1)));
 
@@ -400,7 +399,7 @@ mod tests {
         // the workspace-scratch path must match the throwaway-scratch
         // wrapper exactly, including when the buffers are reused across
         // instances (the ROADMAP "Workspace-aware LP" leftover)
-        let mut scratch = LpScratch::default();
+        let mut scratch = crate::refinement::DetScratch::default();
         for seed in [2u64, 9, 31] {
             let (phg_a, _) = perturbed_planted(seed, 3);
             let (phg_b, _) = perturbed_planted(seed, 3);

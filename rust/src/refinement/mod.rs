@@ -5,6 +5,14 @@
 //! orchestrated by the [`pipeline::RefinementPipeline`], which owns the
 //! long-lived workspace (gain table, FM ownership bits, boundary buffers,
 //! per-thread search scratch) shared across uncoarsening levels.
+//!
+//! Every refiner has a **deterministic synchronous sibling** selected by
+//! `ctx.deterministic` (paper §11): [`lp::lp_refine_deterministic`],
+//! [`fm::fm_refine_deterministic`] and the single-worker flow schedule of
+//! [`flow::flow_refine_with_workspace`]. The synchronous variants share
+//! one [`DetScratch`] owned by the workspace — see the "Determinism
+//! guarantees" section of `rust/ARCHITECTURE.md` for what exactly is
+//! thread-count invariant and why.
 
 pub mod flow;
 pub mod fm;
@@ -19,3 +27,40 @@ pub mod vcycle;
 
 pub use rebalance::rebalance;
 pub use vcycle::vcycle;
+
+use crate::partition::Move;
+use crate::{BlockId, Gain, NodeId, NodeWeight};
+
+/// Shared scratch of the synchronous deterministic refiners (paper §11).
+///
+/// Both deterministic LP and deterministic FM follow the same sub-round
+/// shape — collect candidate *moves against a frozen partition* into a
+/// wishlist, totally order it, and apply balance-feasible prefixes per
+/// block pair — so they share one set of buffers, owned by the refinement
+/// [`Workspace`] and reused across rounds, refiner invocations and
+/// uncoarsening levels (the generalization of the former LP-private
+/// membership/wishlist vectors). Per-thread collection order is made
+/// irrelevant by the total `(gain, node)` sort before any buffer is read,
+/// which is what keeps the merged move buffers deterministic.
+#[derive(Default)]
+pub struct DetScratch {
+    /// candidate nodes of the current round / sub-round
+    pub(crate) members: Vec<NodeId>,
+    /// desired moves `(gain, node, from, to)` against the frozen state;
+    /// totally ordered before use
+    pub(crate) desired: Vec<(Gain, NodeId, BlockId, BlockId)>,
+    /// det-FM: persistent candidate set of a seeded invocation, expanded
+    /// around applied moves between rounds
+    pub(crate) candidates: Vec<NodeId>,
+    /// det-FM: sequential move log of one round
+    pub(crate) moves: Vec<Move>,
+    /// det-FM: exact attributed gains of the move log (in order)
+    pub(crate) gains: Vec<Gain>,
+    /// det-FM: per-position balance admissibility of a prefix cut (the
+    /// move's pair blocks are within their limits right after it) — the
+    /// best-prefix revert may only cut at admissible positions
+    pub(crate) admissible: Vec<bool>,
+    /// per-pair node-weight prefixes handed to `lp::select_prefixes`
+    pub(crate) w_st: Vec<NodeWeight>,
+    pub(crate) w_ts: Vec<NodeWeight>,
+}

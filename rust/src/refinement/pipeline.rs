@@ -17,11 +17,30 @@
 //! `rebalance → LP → FM → flows → rebalance`, with the rebalancer acting
 //! as the balance-repair fallback on both ends (repair infeasible
 //! projected partitions before quality work, guarantee feasibility after).
+//! Under `ctx.deterministic` the same stack positions select the
+//! synchronous §11 siblings — deterministic LP, deterministic FM
+//! ([`fm::deterministic`]) and the single-worker flow schedule — so the
+//! `Deterministic` preset runs `rebalance → det-LP → det-FM → rebalance`
+//! (plus det-flows when enabled) instead of silently dropping stages.
+//!
+//! ## Refiner contract
+//!
+//! A [`Refiner`] is called with a *consistent, bound* partition and the
+//! shared [`Workspace`]; it must leave the partition consistent (Π/Φ/Λ
+//! in sync, Lemma 6.1) and account its returned gain exactly against
+//! `km1`. Scratch ownership: a refiner may use any workspace buffer
+//! during its `refine` call but must not assume state survives from a
+//! previous call — the gain table is only valid if the refiner
+//! (re-)initializes it, ownership bits must be left all-clear, and the
+//! shared `DetScratch`/`LpScratch`/flow buffers are reset by their users.
+//! Level gating: [`RefinementPipeline::refine_at_distance`] records the
+//! current level's distance from the finest in `Workspace::level_distance`
+//! *before* running the stack; level-aware refiners (flows, §8.1 cost
+//! model) read it and return 0 without touching their state when gated.
 //!
 //! ## Pooled partition lifecycle
 //!
-//! Beyond the gain table, the workspace owns a
-//! [`PartitionPool`](crate::partition::PartitionPool): one
+//! Beyond the gain table, the workspace owns a [`PartitionPool`]: one
 //! finest-level-sized allocation of the §6.1 partition state (Π atomics,
 //! block weights, packed pin counts, connectivity bitsets, net locks).
 //! Drivers built with [`RefinementPipeline::new_for`] reserve that
@@ -32,7 +51,18 @@
 //! parallel value rebuild. Memory ownership alternates between the pool
 //! (between levels) and the bound `PartitionedHypergraph` (during
 //! refinement); the finest binding is simply returned to the caller.
-//! Values are rebuilt every level; memory is allocated once.
+//! Cross-level projections rebuild values; memory is allocated once.
+//!
+//! The n-level driver uses the value-preserving half of the pool API
+//! instead: [`RefinementPipeline::park`] releases the bound buffers so
+//! the driver can mutate the sole-owner `DynamicHypergraph` in place,
+//! [`RefinementPipeline::unpark`] re-binds the identical values, and the
+//! batch delta is repaired incrementally via `apply_uncontractions` — no
+//! value rebuild at any batch boundary (see
+//! [`PartitionPool::value_rebuilds`]). The final
+//! [`RefinementPipeline::rebind_preserving`] hands the finished values to
+//! the static input representation for the flow-capable finest-level
+//! stack.
 //!
 //! ## Flow-scratch lifecycle
 //!
@@ -103,9 +133,12 @@ pub struct Workspace {
     pub(crate) scratch: Vec<SearchScratch>,
     /// reusable boundary-seed buffer
     pub(crate) boundary: Vec<NodeId>,
-    /// reusable label-propagation scratch (visit order + frontier churn +
-    /// deterministic sub-round membership/move buffers)
+    /// reusable label-propagation scratch (visit order + frontier churn)
     pub(crate) lp: lp::LpScratch,
+    /// shared scratch of the synchronous deterministic refiners (§11):
+    /// sub-round membership, move wishlist, det-FM move log and the
+    /// per-pair prefix-selection buffers
+    pub(crate) det: crate::refinement::DetScratch,
     /// reusable Algorithm-6.2 scratch (per-node move index + processed-net
     /// bitset, reset sparsely) so seeded n-level FM rounds stay O(region)
     pub(crate) recalc: crate::partition::gain_recalculation::RecalcScratch,
@@ -135,6 +168,7 @@ impl Workspace {
             scratch: (0..threads).map(|_| SearchScratch::new(k, node_capacity)).collect(),
             boundary: Vec::new(),
             lp: lp::LpScratch::default(),
+            det: crate::refinement::DetScratch::default(),
             recalc: crate::partition::gain_recalculation::RecalcScratch::default(),
             pool: PartitionPool::new(k),
             flow: flow::FlowWorkspace::new(k),
@@ -223,6 +257,14 @@ impl Workspace {
 
 /// A refinement algorithm that runs inside the pipeline on the shared
 /// [`Workspace`]. Returns the attributed improvement (km1 decrease).
+///
+/// Contract (see the module-level "Refiner contract" section): the input
+/// partition is consistent and stays consistent; the returned gain
+/// accounts exactly against `km1`; workspace buffers may be used freely
+/// during the call but carry no inter-call guarantees (re-prepare what
+/// you need, leave ownership bits all-clear); level-gated refiners read
+/// the distance recorded by [`RefinementPipeline::refine_at_distance`]
+/// and must return 0 without touching their state when gated.
 pub trait Refiner: Send {
     /// Phase-timer name of this refiner.
     fn name(&self) -> &'static str;
@@ -241,15 +283,17 @@ impl Refiner for LpRefiner {
 
     fn refine(&mut self, phg: &PartitionedHypergraph, ws: &mut Workspace, ctx: &Context) -> Gain {
         if ctx.deterministic {
-            lp::lp_refine_deterministic_with_scratch(phg, ctx, &mut ws.lp)
+            lp::lp_refine_deterministic_with_scratch(phg, ctx, &mut ws.det)
         } else {
             lp::lp_refine_with_scratch(phg, ctx, &mut ws.lp)
         }
     }
 }
 
-/// Parallel localized FM (paper §7) running on the shared gain table,
-/// ownership bits and per-thread search scratch.
+/// Localized FM (paper §7) on the shared gain table, ownership bits and
+/// per-thread search scratch — or, under `ctx.deterministic`, the
+/// synchronous deterministic FM (§11 frozen gains + prefix selection) on
+/// the shared gain table and `DetScratch`.
 #[derive(Default)]
 pub struct FmRefiner;
 
@@ -259,7 +303,11 @@ impl Refiner for FmRefiner {
     }
 
     fn refine(&mut self, phg: &PartitionedHypergraph, ws: &mut Workspace, ctx: &Context) -> Gain {
-        let stats = fm::fm_refine_with_workspace(phg, ctx, None, ws);
+        let stats = if ctx.deterministic {
+            fm::deterministic::fm_refine_deterministic_with_workspace(phg, ctx, None, ws)
+        } else {
+            fm::fm_refine_with_workspace(phg, ctx, None, ws)
+        };
         stats.improvement
     }
 }
@@ -480,14 +528,26 @@ impl RefinementPipeline {
     /// Localized FM restricted to `seeds` (n-level batch refinement,
     /// paper §9), on the shared workspace. Seeded invocations bypass the
     /// global gain table (see [`fm::fm_refine_with_workspace`]), so a
-    /// batch costs O(Σ|I(region)|), not O(n·k).
+    /// batch costs O(Σ|I(region)|), not O(n·k). Under `ctx.deterministic`
+    /// this dispatches to the seeded synchronous deterministic FM, which
+    /// keeps the same table-free cost bound while staying thread-count
+    /// invariant.
     pub fn fm_with_seeds<H: HypergraphOps>(
         &mut self,
         phg: &PartitionedHypergraph<H>,
         ctx: &Context,
         seeds: Option<&[NodeId]>,
     ) -> FmStats {
-        fm::fm_refine_with_workspace(phg, ctx, seeds, &mut self.ws)
+        if ctx.deterministic {
+            fm::deterministic::fm_refine_deterministic_with_workspace(
+                phg,
+                ctx,
+                seeds,
+                &mut self.ws,
+            )
+        } else {
+            fm::fm_refine_with_workspace(phg, ctx, seeds, &mut self.ws)
+        }
     }
 
     /// The pooled partition state (alloc/rebind counters for tests and
@@ -668,6 +728,30 @@ mod tests {
             2 * sizes.len(),
             "one Λ enumeration per flow call"
         );
+    }
+
+    #[test]
+    fn deterministic_stack_runs_fm_and_is_thread_invariant() {
+        // the Deterministic preset keeps use_fm — FM no longer silently
+        // drops out; the det-FM stage runs — and the whole stack
+        // (rebalance → det-LP → det-FM → rebalance) is bit-identical
+        // across thread counts
+        let run = |threads: usize| {
+            let c = ctx(Preset::Deterministic, 3, threads, 9);
+            assert!(c.use_fm, "the Deterministic preset must run det-FM");
+            let phg = perturbed(9, 3, 0.3);
+            let mut pipe = RefinementPipeline::new(&c, phg.hypergraph().num_nodes());
+            let gain = pipe.refine(&phg, &c);
+            phg.verify_consistency().unwrap();
+            assert!(phg.is_balanced());
+            (gain, phg.km1(), phg.parts())
+        };
+        let r1 = run(1);
+        let r2 = run(2);
+        let r4 = run(4);
+        assert!(r1.0 > 0, "deterministic stack should improve the perturbed partition");
+        assert_eq!(r1, r2, "t=1 vs t=2");
+        assert_eq!(r2, r4, "t=2 vs t=4");
     }
 
     #[test]

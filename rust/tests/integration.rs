@@ -83,19 +83,47 @@ fn planted_partitions_recovered() {
 #[test]
 fn deterministic_is_bit_identical_everywhere() {
     let hg = generators::spm_hypergraph(400, 400, 5, 13);
-    let runs: Vec<Vec<BlockId>> = [1usize, 2, 4]
+    let runs: Vec<(i64, Vec<BlockId>)> = [1usize, 2, 4]
         .iter()
         .map(|&t| {
             let mut ctx = test_ctx(Preset::Deterministic, 4, 17);
             ctx.threads = t;
-            partitioner::partition(&hg, &ctx).parts()
+            let phg = partitioner::partition(&hg, &ctx);
+            (phg.km1(), phg.parts())
         })
         .collect();
     assert_eq!(runs[0], runs[1]);
     assert_eq!(runs[1], runs[2]);
     // and across repeated runs
     let again = partitioner::partition(&hg, &test_ctx(Preset::Deterministic, 4, 17)).parts();
-    assert_eq!(runs[0], again);
+    assert_eq!(runs[0].1, again);
+}
+
+#[test]
+fn deterministic_nlevel_is_bit_identical_across_threads() {
+    // the full Deterministic pipeline on the *n-level* driver: dynamic
+    // deterministic coarsening, seeded det-FM batch refinement and the
+    // deterministic finest-level stack — same seed, three thread counts,
+    // bit-identical Π and km1 (the det-multilevel twin of the test above)
+    let hg = generators::planted_hypergraph(
+        &PlantedParams { n: 450, m: 800, blocks: 4, ..Default::default() },
+        23,
+    );
+    let runs: Vec<(i64, Vec<BlockId>)> = [1usize, 2, 4]
+        .iter()
+        .map(|&t| {
+            let mut ctx = test_ctx(Preset::Deterministic, 4, 23);
+            ctx.threads = t;
+            ctx.nlevel = true;
+            ctx.nlevel_batch_size = 64;
+            let phg = partitioner::partition(&hg, &ctx);
+            assert!(phg.is_balanced(), "t={t}: imbalance {}", phg.imbalance());
+            phg.verify_consistency().unwrap();
+            (phg.km1(), phg.parts())
+        })
+        .collect();
+    assert_eq!(runs[0], runs[1], "t=1 vs t=2");
+    assert_eq!(runs[1], runs[2], "t=2 vs t=4");
 }
 
 #[test]
