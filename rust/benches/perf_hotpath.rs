@@ -77,6 +77,29 @@ fn main() {
     });
     bench("gain table full initialize", 5, n, || gt.initialize(&phg, 1));
 
+    // ---- gain update: km1 generic vs pre-refactor shape ----
+    // The GainPolicy refactor routes every move through monomorphized
+    // generic code; `Km1Policy` must compile down to the pre-refactor
+    // km1 update rules. The pair guards the zero-overhead claim: the
+    // km1-named wrapper (the pre-refactor call shape) and the explicit
+    // `try_move_p::<Km1Policy>` instantiation must run at the same
+    // ns/item (objective dispatch happens once per refinement call,
+    // never per move).
+    bench("gain update: pre-refactor km1 shape", 10, moves.len(), || {
+        for &(u, t) in &moves {
+            if phg.block_of(u) != t {
+                let _ = phg.try_move(u, t, Some(&gt));
+            }
+        }
+    });
+    bench("gain update: km1 via GainPolicy generic", 10, moves.len(), || {
+        for &(u, t) in &moves {
+            if phg.block_of(u) != t {
+                let _ = phg.try_move_p::<mtkahypar::partition::Km1Policy>(u, t, Some(&gt));
+            }
+        }
+    });
+
     // ---- refinement pipeline: per-level gain-table reuse ----
     // The uncoarsening loop runs refinement once per level. Before the
     // pipeline refactor each level paid GainTable::new (an O(n·k)

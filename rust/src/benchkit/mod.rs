@@ -40,7 +40,8 @@ pub fn run_hg(
         algorithm: name.to_string(),
         instance: instance.to_string(),
         k: ctx.k,
-        quality: phg.km1(),
+        // quality under the run's *configured* objective (km1 by default)
+        quality: phg.objective_value(ctx.objective),
         imbalance: phg.imbalance(),
         feasible: phg.is_balanced(),
         seconds,

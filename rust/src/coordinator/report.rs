@@ -1,5 +1,6 @@
 //! Result summaries printed by the CLI, examples and benches.
 
+use crate::metrics::Objective;
 use crate::partition::PartitionedHypergraph;
 
 /// Final partitioning statistics.
@@ -7,6 +8,10 @@ use crate::partition::PartitionedHypergraph;
 pub struct PartitionReport {
     pub algorithm: String,
     pub k: usize,
+    /// the objective the run was configured to optimize
+    pub objective: Objective,
+    /// value of `objective` on the final partition
+    pub objective_value: i64,
     pub km1: i64,
     pub cut: i64,
     pub soed: i64,
@@ -21,12 +26,15 @@ impl PartitionReport {
     pub fn from_partition(
         algorithm: &str,
         phg: &PartitionedHypergraph,
+        objective: Objective,
         seconds: f64,
         phases: Vec<(&'static str, f64)>,
     ) -> Self {
         PartitionReport {
             algorithm: algorithm.to_string(),
             k: phg.k(),
+            objective,
+            objective_value: phg.objective_value(objective),
             km1: phg.km1(),
             cut: phg.cut(),
             soed: phg.soed(),
@@ -40,6 +48,8 @@ impl PartitionReport {
     pub fn print(&self) {
         println!("================= {} =================", self.algorithm);
         println!("  k          = {}", self.k);
+        println!("  objective  = {} = {}", self.objective.name(), self.objective_value);
+        // all three metrics stay informational regardless of the objective
         println!("  km1 (λ−1)  = {}", self.km1);
         println!("  cut        = {}", self.cut);
         println!("  soed       = {}", self.soed);

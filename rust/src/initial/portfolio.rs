@@ -51,6 +51,9 @@ impl Technique {
 pub struct Bipartition {
     pub parts: Vec<BlockId>,
     pub km1: i64,
+    /// value of the *configured* objective (`ctx.objective`); equals
+    /// `km1` when partitioning under `Objective::Km1`
+    pub objective: i64,
     pub imbalance: f64,
 }
 
@@ -78,7 +81,7 @@ pub fn best_bipartition(
             // 95%-rule retirement after the minimum repetitions
             if rep >= ctx.ip_min_repetitions {
                 if let Some(b) = &best {
-                    if stats.mean() - 2.0 * stats.stddev() > b.km1 as f64 {
+                    if stats.mean() - 2.0 * stats.stddev() > b.objective as f64 {
                         break;
                     }
                 }
@@ -87,17 +90,18 @@ pub fn best_bipartition(
             let parts = run_technique(tech, hg, max0, max1, run_seed);
             // polish with sequential 2-way FM (paper §5)
             let refined = polish(hg, parts, max0, max1, ctx, run_seed);
-            stats.push(refined.km1 as f64);
+            stats.push(refined.objective as f64);
             let better = match &best {
                 None => true,
                 Some(b) => {
-                    // prefer feasible, then objective, then balance
+                    // prefer feasible, then configured objective, then balance
                     let bf = b.imbalance <= 0.0;
                     let rf = refined.imbalance <= 0.0;
                     (rf && !bf)
                         || (rf == bf
-                            && (refined.km1 < b.km1
-                                || (refined.km1 == b.km1 && refined.imbalance < b.imbalance)))
+                            && (refined.objective < b.objective
+                                || (refined.objective == b.objective
+                                    && refined.imbalance < b.imbalance)))
                 }
             };
             if better {
@@ -155,12 +159,14 @@ fn polish(
     fm_ctx.fm_max_rounds = 1;
     crate::refinement::fm::fm_refine(&phg, &fm_ctx);
     let km1 = phg.km1();
+    let objective = phg.objective_value(ctx.objective);
     // imbalance relative to the *given* limits (≤ 0 means feasible)
     let over0 = phg.block_weight(0) - max0;
     let over1 = phg.block_weight(1) - max1;
     Bipartition {
         parts: phg.parts(),
         km1,
+        objective,
         imbalance: over0.max(over1) as f64 / hg.total_weight() as f64,
     }
 }

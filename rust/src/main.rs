@@ -13,6 +13,7 @@ use mtkahypar::coordinator::report::PartitionReport;
 use mtkahypar::generators::{self, PlantedParams};
 use mtkahypar::graph::partitioner::partition_graph_arc;
 use mtkahypar::io;
+use mtkahypar::metrics::Objective;
 use std::path::PathBuf;
 use std::process::exit;
 use std::sync::Arc;
@@ -25,6 +26,7 @@ struct Args {
     k: usize,
     epsilon: f64,
     preset: Preset,
+    objective: Objective,
     threads: usize,
     seed: u64,
     out: Option<PathBuf>,
@@ -34,7 +36,7 @@ fn usage() -> ! {
     eprintln!(
         "usage: mtkahypar (--hgr FILE | --graph FILE | --demo) -k K [-e EPS] \
          [--preset speed|default|default-flows|quality|quality-flows|deterministic] \
-         [--threads T] [--seed S] [-o OUT]"
+         [--objective km1|cut|soed] [--threads T] [--seed S] [-o OUT]"
     );
     exit(2)
 }
@@ -47,6 +49,7 @@ fn parse_args() -> Args {
         k: 2,
         epsilon: 0.03,
         preset: Preset::Default,
+        objective: Objective::Km1,
         threads: 1,
         seed: 0,
         out: None,
@@ -79,6 +82,17 @@ fn parse_args() -> Args {
                     }
                 }
             }
+            "--objective" => {
+                args.objective = match next("--objective").as_str() {
+                    "km1" => Objective::Km1,
+                    "cut" => Objective::Cut,
+                    "soed" => Objective::Soed,
+                    other => {
+                        eprintln!("unknown objective {other}");
+                        usage()
+                    }
+                }
+            }
             "--threads" | "-t" => {
                 args.threads = next("--threads").parse().unwrap_or_else(|_| usage())
             }
@@ -101,7 +115,8 @@ fn main() {
     let args = parse_args();
     let ctx = Context::new(args.preset, args.k, args.epsilon)
         .with_seed(args.seed)
-        .with_threads(args.threads);
+        .with_threads(args.threads)
+        .with_objective(args.objective);
 
     if let Some(path) = &args.graph {
         let g = Arc::new(io::read_metis(path).unwrap_or_else(|e| {
@@ -142,8 +157,13 @@ fn main() {
     let start = Instant::now();
     let phg = partitioner::partition_arc(hg, &ctx);
     let secs = start.elapsed().as_secs_f64();
-    let report =
-        PartitionReport::from_partition(ctx.preset.name(), &phg, secs, ctx.timer.snapshot());
+    let report = PartitionReport::from_partition(
+        ctx.preset.name(),
+        &phg,
+        ctx.objective,
+        secs,
+        ctx.timer.snapshot(),
+    );
     report.print();
     if let Some(out) = &args.out {
         io::write_partition(&phg.parts(), out).expect("write partition");

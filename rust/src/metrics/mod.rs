@@ -11,6 +11,19 @@ pub enum Objective {
     Cut,
     /// connectivity metric f_{λ−1}
     Km1,
+    /// sum of external degrees f_s = f_{λ−1} + f_c
+    Soed,
+}
+
+impl Objective {
+    /// Short display name used by the coordinator report and the CLI.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Objective::Cut => "cut",
+            Objective::Km1 => "km1",
+            Objective::Soed => "soed",
+        }
+    }
 }
 
 /// Connectivity metric computed from scratch.
@@ -102,6 +115,7 @@ pub fn objective_hg(obj: Objective, hg: &Hypergraph, parts: &[BlockId], k: usize
     match obj {
         Objective::Cut => cut(hg, parts),
         Objective::Km1 => km1(hg, parts, k),
+        Objective::Soed => soed(hg, parts, k),
     }
 }
 

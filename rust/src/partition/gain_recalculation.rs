@@ -11,8 +11,10 @@
 //! *first* enters a block emptied that way increases it. Both are decided
 //! from `first_in` / `last_out` move indices and the non-moved pin counts.
 
+use super::objective::{GainPolicy, Km1Policy};
 use super::PartitionedHypergraph;
 use crate::hypergraph::HypergraphOps;
+use crate::metrics::Objective;
 use crate::parallel::par_for_auto;
 use crate::util::AtomicBitset;
 use crate::{BlockId, EdgeId, Gain, NodeId};
@@ -67,12 +69,38 @@ pub fn recalculate_gains<H: HypergraphOps>(
     moves: &[Move],
     threads: usize,
 ) -> Vec<Gain> {
+    recalculate_gains_p::<Km1Policy, H>(phg, moves, threads)
+}
+
+/// [`recalculate_gains`] for an arbitrary [`GainPolicy`].
+pub fn recalculate_gains_p<P: GainPolicy, H: HypergraphOps>(
+    phg: &PartitionedHypergraph<H>,
+    moves: &[Move],
+    threads: usize,
+) -> Vec<Gain> {
     let mut scratch = RecalcScratch::default();
-    recalculate_gains_with_scratch(phg, moves, threads, &mut scratch)
+    recalculate_gains_with_scratch_p::<P, H>(phg, moves, threads, &mut scratch)
 }
 
 /// Algorithm 6.2 on reusable scratch (see [`RecalcScratch`]).
 pub fn recalculate_gains_with_scratch<H: HypergraphOps>(
+    phg: &PartitionedHypergraph<H>,
+    moves: &[Move],
+    threads: usize,
+    scratch: &mut RecalcScratch,
+) -> Vec<Gain> {
+    recalculate_gains_with_scratch_p::<Km1Policy, H>(phg, moves, threads, scratch)
+}
+
+/// [`recalculate_gains_with_scratch`] for an arbitrary [`GainPolicy`].
+///
+/// The km1 instantiation uses the closed-form per-net rule below
+/// (`process_net`); connectivity-transition objectives (cut, soed) go
+/// through a restricted per-net replay (`process_net_replay`) that rewinds
+/// the net's pin counts to the pre-move state and re-applies its moved
+/// pins in move order, so `P::attributed_delta` sees the exact λ after
+/// each move — the same state the synchronized online update observes.
+pub fn recalculate_gains_with_scratch_p<P: GainPolicy, H: HypergraphOps>(
     phg: &PartitionedHypergraph<H>,
     moves: &[Move],
     threads: usize,
@@ -97,7 +125,11 @@ pub fn recalculate_gains_with_scratch<H: HypergraphOps>(
             if processed.test_and_set(e as usize) {
                 continue; // another thread handles this net
             }
-            process_net(phg, e, moves, move_idx, &gains, k);
+            if P::OBJECTIVE == Objective::Km1 {
+                process_net(phg, e, moves, move_idx, &gains, k);
+            } else {
+                process_net_replay::<P, H>(phg, e, moves, move_idx, &gains, k);
+            }
         }
     });
 
@@ -158,6 +190,59 @@ fn process_net<H: HypergraphOps>(
     }
 }
 
+/// Restricted replay for connectivity-transition objectives (cut, soed).
+///
+/// The km1 closed form above only needs to know *which* move empties or
+/// first re-occupies a block; cut-net gains additionally depend on the
+/// connectivity λ right after each move (the 2→1 / 1→2 Φ-transitions).
+/// So per net: rewind Φ from the post-state by undoing its moved pins,
+/// then replay those pins sorted by move index, maintaining λ
+/// incrementally and attributing each move via `P::attributed_delta` —
+/// O(|e| + t_e log t_e) per net where t_e is the net's moved-pin count.
+fn process_net_replay<P: GainPolicy, H: HypergraphOps>(
+    phg: &PartitionedHypergraph<H>,
+    e: EdgeId,
+    moves: &[Move],
+    move_idx: &[u32],
+    gains: &[AtomicI64],
+    k: usize,
+) {
+    let hg = phg.hypergraph();
+    let w = hg.net_weight(e);
+    let mut phi: Vec<i64> = (0..k).map(|b| phg.pin_count(e, b as BlockId) as i64).collect();
+    let mut touched: Vec<u32> = Vec::new();
+    for &u in hg.pins(e) {
+        let i = move_idx[u as usize];
+        if i != u32::MAX {
+            let m = moves[i as usize];
+            phi[m.to as usize] -= 1;
+            phi[m.from as usize] += 1;
+            touched.push(i);
+        }
+    }
+    if touched.is_empty() {
+        return;
+    }
+    touched.sort_unstable();
+    let mut lambda = phi.iter().filter(|&&c| c > 0).count() as u32;
+    for &i in &touched {
+        let m = moves[i as usize];
+        let (vs, vt) = (m.from as usize, m.to as usize);
+        phi[vs] -= 1;
+        if phi[vs] == 0 {
+            lambda -= 1;
+        }
+        if phi[vt] == 0 {
+            lambda += 1;
+        }
+        phi[vt] += 1;
+        let d = P::attributed_delta(w, phi[vs] as u32, phi[vt] as u32, lambda);
+        if d != 0 {
+            gains[i as usize].fetch_add(d, Ordering::Relaxed);
+        }
+    }
+}
+
 /// Find the prefix of `gains` with the largest cumulative sum.
 /// Returns `(prefix_len, prefix_gain)` — `(0, 0)` if every prefix is
 /// non-positive. Ties pick the *longest* prefix achieving the maximum
@@ -185,9 +270,20 @@ pub fn revert_to_best_prefix<H: HypergraphOps>(
     gains: &[Gain],
     gain_table: Option<&super::GainTable>,
 ) -> (usize, Gain) {
+    revert_to_best_prefix_p::<Km1Policy, H>(phg, moves, gains, gain_table)
+}
+
+/// [`revert_to_best_prefix`] for an arbitrary [`GainPolicy`] — the
+/// reverting moves maintain the gain table under the same policy.
+pub fn revert_to_best_prefix_p<P: GainPolicy, H: HypergraphOps>(
+    phg: &PartitionedHypergraph<H>,
+    moves: &[Move],
+    gains: &[Gain],
+    gain_table: Option<&super::GainTable>,
+) -> (usize, Gain) {
     let (len, total) = best_prefix(gains);
     for m in moves[len..].iter().rev() {
-        phg.move_unchecked(m.node, m.from, gain_table);
+        phg.move_unchecked_p::<P>(m.node, m.from, gain_table);
     }
     (len, total)
 }
@@ -198,11 +294,19 @@ pub fn replay_gains_reference<H: HypergraphOps>(
     phg_pre: &PartitionedHypergraph<H>,
     moves: &[Move],
 ) -> Vec<Gain> {
+    replay_gains_reference_p::<Km1Policy, H>(phg_pre, moves)
+}
+
+/// [`replay_gains_reference`] for an arbitrary [`GainPolicy`].
+pub fn replay_gains_reference_p<P: GainPolicy, H: HypergraphOps>(
+    phg_pre: &PartitionedHypergraph<H>,
+    moves: &[Move],
+) -> Vec<Gain> {
     moves
         .iter()
         .map(|m| {
-            let g = phg_pre.gain(m.node, m.to);
-            phg_pre.move_unchecked(m.node, m.to, None);
+            let g = phg_pre.gain_p::<P>(m.node, m.to);
+            phg_pre.move_unchecked_p::<P>(m.node, m.to, None);
             g
         })
         .collect()
@@ -253,6 +357,37 @@ mod tests {
             for threads in [1, 4] {
                 let got = recalculate_gains(&pre, &moves, threads);
                 assert_eq!(got, expected, "seed {seed} threads {threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn matches_sequential_replay_cut_and_soed() {
+        use crate::partition::{CutNetPolicy, SoedPolicy};
+        for seed in 0..12 {
+            let (hg, parts, k) = random_instance(seed ^ 0x9e);
+            let mut rng = Rng::new(seed ^ 0xdef);
+            let mut moves = Vec::new();
+            for u in rng.sample_indices(hg.num_nodes(), 15) {
+                let from = parts[u];
+                let to = ((from as usize + 1 + rng.next_below(k - 1)) % k) as BlockId;
+                moves.push(Move { node: u as NodeId, from, to });
+            }
+            // cut: reference replay from pre-state, then Alg. 6.2 on post
+            let pre = PartitionedHypergraph::new(hg.clone(), k);
+            pre.assign_all(&parts, 1);
+            let expected = replay_gains_reference_p::<CutNetPolicy, _>(&pre, &moves);
+            for threads in [1, 4] {
+                let got = recalculate_gains_p::<CutNetPolicy, _>(&pre, &moves, threads);
+                assert_eq!(got, expected, "cut seed {seed} threads {threads}");
+            }
+            // soed on a fresh pre-state
+            let pre = PartitionedHypergraph::new(hg.clone(), k);
+            pre.assign_all(&parts, 1);
+            let expected = replay_gains_reference_p::<SoedPolicy, _>(&pre, &moves);
+            for threads in [1, 4] {
+                let got = recalculate_gains_p::<SoedPolicy, _>(&pre, &moves, threads);
+                assert_eq!(got, expected, "soed seed {seed} threads {threads}");
             }
         }
     }

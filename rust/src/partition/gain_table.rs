@@ -8,8 +8,10 @@
 //! transiently stale, which the FM algorithm tolerates by recomputing
 //! benefits after each round (the paper's "benefit peculiarities").
 
+use super::objective::{GainPolicy, Km1Policy};
 use super::PartitionedHypergraph;
 use crate::hypergraph::HypergraphOps;
+use crate::metrics::Objective;
 use crate::parallel::par_for_auto;
 use crate::{BlockId, EdgeId, Gain, NodeId};
 use std::sync::atomic::{AtomicI64, Ordering};
@@ -54,7 +56,18 @@ impl GainTable {
     }
 
     /// Recompute all entries from the partition (parallel over nodes).
+    /// km1 entry point; [`Self::initialize_p`] is the generic form.
     pub fn initialize<H: HypergraphOps>(&self, phg: &PartitionedHypergraph<H>, threads: usize) {
+        self.initialize_p::<Km1Policy, H>(phg, threads);
+    }
+
+    /// Recompute all entries from the partition for policy `P`
+    /// (parallel over nodes).
+    pub fn initialize_p<P: GainPolicy, H: HypergraphOps>(
+        &self,
+        phg: &PartitionedHypergraph<H>,
+        threads: usize,
+    ) {
         let n = phg.hypergraph().num_nodes();
         par_for_auto(n, threads, |u| {
             let u = u as NodeId;
@@ -63,13 +76,11 @@ impl GainTable {
             let mut p = vec![0 as Gain; self.k];
             for &e in phg.hypergraph().incident_nets(u) {
                 let w = phg.hypergraph().net_weight(e);
-                if phg.pin_count(e, from) == 1 {
-                    b += w;
-                }
+                let sz =
+                    if P::NEEDS_NET_SIZE { phg.hypergraph().net_size(e) as u32 } else { 0 };
+                b += P::benefit_contrib(w, phg.pin_count(e, from), sz);
                 for t in 0..self.k {
-                    if phg.pin_count(e, t as BlockId) == 0 {
-                        p[t] += w;
-                    }
+                    p[t] += P::penalty_contrib(w, phg.pin_count(e, t as BlockId), sz);
                 }
             }
             self.benefit[u as usize].store(b, Ordering::Relaxed);
@@ -122,9 +133,38 @@ impl GainTable {
         best
     }
 
-    /// Update rules 1–4 (paper §6.2), triggered by the move operation for
-    /// each incident net with the post-transition pin counts.
-    pub(crate) fn update_for_pin_change<H: HypergraphOps>(
+    /// Per-objective trickle-in update, triggered by the move operation
+    /// for each incident net with the post-transition pin counts. The
+    /// dispatch is a `const` match: `Km1Policy` selects exactly the
+    /// pre-refactor rules 1–4 (the naive "generic delta" formulation
+    /// would add a mover-benefit update km1 deliberately omits — the
+    /// mover's benefit stays stale until [`Self::recompute_benefit_p`],
+    /// the paper's "benefit peculiarities").
+    pub(crate) fn update_for_pin_change<P: GainPolicy, H: HypergraphOps>(
+        &self,
+        phg: &PartitionedHypergraph<H>,
+        e: EdgeId,
+        from: BlockId,
+        to: BlockId,
+        phi_from_after: u32,
+        phi_to_after: u32,
+    ) {
+        match P::OBJECTIVE {
+            Objective::Km1 => {
+                self.update_km1(phg, e, from, to, phi_from_after, phi_to_after)
+            }
+            Objective::Cut => {
+                self.update_cut(phg, e, from, to, phi_from_after, phi_to_after)
+            }
+            Objective::Soed => {
+                self.update_km1(phg, e, from, to, phi_from_after, phi_to_after);
+                self.update_cut(phg, e, from, to, phi_from_after, phi_to_after);
+            }
+        }
+    }
+
+    /// Update rules 1–4 (paper §6.2) for the connectivity metric.
+    fn update_km1<H: HypergraphOps>(
         &self,
         phg: &PartitionedHypergraph<H>,
         e: EdgeId,
@@ -167,15 +207,83 @@ impl GainTable {
         }
     }
 
+    /// Cut-net trickle-in rules, mirroring the km1 discipline: benefit
+    /// b(v) = −ω(e) iff e is internal to v's block (Φ = |e|), penalty
+    /// p(v, t) = −ω(e) iff t can absorb e (Φ(e, t) = |e|−1). Only the
+    /// two blocks whose Φ changed need repairs; the mover's own benefit
+    /// follows the same stale-until-recompute convention as km1.
+    fn update_cut<H: HypergraphOps>(
+        &self,
+        phg: &PartitionedHypergraph<H>,
+        e: EdgeId,
+        from: BlockId,
+        to: BlockId,
+        phi_from_after: u32,
+        phi_to_after: u32,
+    ) {
+        let sz = phg.hypergraph().net_size(e) as u32;
+        if sz < 2 {
+            return; // single-pin nets are never cut
+        }
+        let w = phg.hypergraph().net_weight(e);
+        let pins = phg.hypergraph().pins(e);
+        // (C1) Φ(e, V_s) = |e|−1: e was internal to V_s — remaining V_s
+        // pins stop carrying the −ω benefit, and V_s becomes absorbable
+        // (p(·, V_s) gains the −ω term)
+        if phi_from_after + 1 == sz {
+            for &v in pins {
+                if phg.block_of(v) == from {
+                    self.benefit[v as usize].fetch_add(w, Ordering::AcqRel);
+                }
+                self.penalty[v as usize * self.k + from as usize]
+                    .fetch_sub(w, Ordering::AcqRel);
+            }
+        }
+        // (C2) Φ(e, V_s) = |e|−2: V_s stops being absorbable
+        if phi_from_after + 2 == sz {
+            for &v in pins {
+                self.penalty[v as usize * self.k + from as usize]
+                    .fetch_add(w, Ordering::AcqRel);
+            }
+        }
+        // (C3) Φ(e, V_t) = |e|−1: V_t becomes absorbable
+        if phi_to_after + 1 == sz {
+            for &v in pins {
+                self.penalty[v as usize * self.k + to as usize]
+                    .fetch_sub(w, Ordering::AcqRel);
+            }
+        }
+        // (C4) Φ(e, V_t) = |e|: e became internal to V_t — its pins gain
+        // the −ω benefit and V_t stops being absorbable
+        if phi_to_after == sz {
+            for &v in pins {
+                if phg.block_of(v) == to {
+                    self.benefit[v as usize].fetch_sub(w, Ordering::AcqRel);
+                }
+                self.penalty[v as usize * self.k + to as usize]
+                    .fetch_add(w, Ordering::AcqRel);
+            }
+        }
+    }
+
     /// Recompute `b(u)` from scratch (post-round benefit repair for moved
     /// nodes — the fix for the benefit race described in the paper).
+    /// km1 entry point.
     pub fn recompute_benefit<H: HypergraphOps>(&self, phg: &PartitionedHypergraph<H>, u: NodeId) {
+        self.recompute_benefit_p::<Km1Policy, H>(phg, u);
+    }
+
+    /// Recompute `b(u)` from scratch for policy `P`.
+    pub fn recompute_benefit_p<P: GainPolicy, H: HypergraphOps>(
+        &self,
+        phg: &PartitionedHypergraph<H>,
+        u: NodeId,
+    ) {
         let from = phg.block_of(u);
         let mut b: Gain = 0;
         for &e in phg.hypergraph().incident_nets(u) {
-            if phg.pin_count(e, from) == 1 {
-                b += phg.hypergraph().net_weight(e);
-            }
+            let sz = if P::NEEDS_NET_SIZE { phg.hypergraph().net_size(e) as u32 } else { 0 };
+            b += P::benefit_contrib(phg.hypergraph().net_weight(e), phg.pin_count(e, from), sz);
         }
         self.benefit[u as usize].store(b, Ordering::Release);
     }
@@ -183,7 +291,17 @@ impl GainTable {
     /// Exhaustive comparison against from-scratch values (test helper —
     /// Lemma 6.1: after quiescence, penalties are exact for all nodes and
     /// benefits exact for unmoved nodes; pass `moved` to skip those).
+    /// km1 entry point.
     pub fn verify_against<H: HypergraphOps>(
+        &self,
+        phg: &PartitionedHypergraph<H>,
+        moved: &dyn Fn(NodeId) -> bool,
+    ) -> Result<(), String> {
+        self.verify_against_p::<Km1Policy, H>(phg, moved)
+    }
+
+    /// Exhaustive comparison against from-scratch values of policy `P`.
+    pub fn verify_against_p<P: GainPolicy, H: HypergraphOps>(
         &self,
         phg: &PartitionedHypergraph<H>,
         moved: &dyn Fn(NodeId) -> bool,
@@ -192,9 +310,13 @@ impl GainTable {
             let from = phg.block_of(u);
             let mut b: Gain = 0;
             for &e in phg.hypergraph().incident_nets(u) {
-                if phg.pin_count(e, from) == 1 {
-                    b += phg.hypergraph().net_weight(e);
-                }
+                let sz =
+                    if P::NEEDS_NET_SIZE { phg.hypergraph().net_size(e) as u32 } else { 0 };
+                b += P::benefit_contrib(
+                    phg.hypergraph().net_weight(e),
+                    phg.pin_count(e, from),
+                    sz,
+                );
             }
             if !moved(u) && b != self.benefit(u) {
                 return Err(format!("benefit({u}): table {} real {b}", self.benefit(u)));
@@ -202,9 +324,13 @@ impl GainTable {
             for t in 0..self.k as BlockId {
                 let mut p: Gain = 0;
                 for &e in phg.hypergraph().incident_nets(u) {
-                    if phg.pin_count(e, t) == 0 {
-                        p += phg.hypergraph().net_weight(e);
-                    }
+                    let sz =
+                        if P::NEEDS_NET_SIZE { phg.hypergraph().net_size(e) as u32 } else { 0 };
+                    p += P::penalty_contrib(
+                        phg.hypergraph().net_weight(e),
+                        phg.pin_count(e, t),
+                        sz,
+                    );
                 }
                 if p != self.penalty(u, t) {
                     return Err(format!(

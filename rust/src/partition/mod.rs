@@ -54,12 +54,14 @@ pub mod connectivity;
 pub mod gain_recalculation;
 pub mod gain_table;
 pub mod graph_partition;
+pub mod objective;
 pub mod pin_counts;
 pub mod pool;
 
 pub use gain_recalculation::{best_prefix, recalculate_gains, Move};
 pub use gain_table::GainTable;
 pub use graph_partition::PartitionedGraph;
+pub use objective::{CutNetPolicy, GainPolicy, Km1Policy, SoedPolicy};
 pub use pool::PartitionPool;
 use pool::PartitionBuffers;
 
@@ -328,7 +330,20 @@ impl<H: HypergraphOps> PartitionedHypergraph<H> {
     /// success, applies the move and returns the attributed gain (sum over
     /// nets of ω(e) when Φ(e,from) drops to 0 minus ω(e) when Φ(e,to)
     /// rises to 1). `gain_table` (if given) receives the update rules 1–4.
+    ///
+    /// km1 entry point; [`Self::try_move_p`] is the policy-generic form.
     pub fn try_move(
+        &self,
+        u: NodeId,
+        to: BlockId,
+        gain_table: Option<&GainTable>,
+    ) -> Option<MoveOutcome> {
+        self.try_move_p::<Km1Policy>(u, to, gain_table)
+    }
+
+    /// Balance-checked move with the attributed gain (and gain-table
+    /// update rules) of policy `P`.
+    pub fn try_move_p<P: GainPolicy>(
         &self,
         u: NodeId,
         to: BlockId,
@@ -345,7 +360,7 @@ impl<H: HypergraphOps> PartitionedHypergraph<H> {
             self.block_weight[to as usize].fetch_sub(w, Ordering::AcqRel);
             return None;
         }
-        Some(self.apply_move(u, from, to, w, gain_table))
+        Some(self.apply_move::<P>(u, from, to, w, gain_table))
     }
 
     /// Move without the balance check (revert paths and rollback).
@@ -355,14 +370,24 @@ impl<H: HypergraphOps> PartitionedHypergraph<H> {
         to: BlockId,
         gain_table: Option<&GainTable>,
     ) -> MoveOutcome {
+        self.move_unchecked_p::<Km1Policy>(u, to, gain_table)
+    }
+
+    /// Unchecked move with the attributed gain of policy `P`.
+    pub fn move_unchecked_p<P: GainPolicy>(
+        &self,
+        u: NodeId,
+        to: BlockId,
+        gain_table: Option<&GainTable>,
+    ) -> MoveOutcome {
         let from = self.block_of(u);
         debug_assert_ne!(from, to);
         let w = self.hg.node_weight(u);
         self.block_weight[to as usize].fetch_add(w, Ordering::AcqRel);
-        self.apply_move(u, from, to, w, gain_table)
+        self.apply_move::<P>(u, from, to, w, gain_table)
     }
 
-    fn apply_move(
+    fn apply_move<P: GainPolicy>(
         &self,
         u: NodeId,
         from: BlockId,
@@ -385,17 +410,18 @@ impl<H: HypergraphOps> PartitionedHypergraph<H> {
             if phi_to == 1 {
                 self.conn.flip(ei, to as usize);
             }
+            // cut-style objectives attribute gains to λ 1↔2 transitions:
+            // λ after the move must be read under the same lock that
+            // serialized the pin-count update (compiled out for km1)
+            let lambda_after =
+                if P::NEEDS_CONNECTIVITY { self.conn.connectivity(ei) } else { 0 };
             self.net_locks.unlock(ei);
             // attributed gain (paper: decrease attributed to the move that
-            // zeroes Φ(e, V_s); increase to the one that makes Φ(e, V_t)=1)
-            if phi_from == 0 {
-                gain += we;
-            }
-            if phi_to == 1 {
-                gain -= we;
-            }
+            // zeroes Φ(e, V_s); increase to the one that makes Φ(e, V_t)=1
+            // — generalized per objective by the policy)
+            gain += P::attributed_delta(we, phi_from, phi_to, lambda_after);
             if let Some(gt) = gain_table {
-                gt.update_for_pin_change(self, e, from, to, phi_from, phi_to);
+                gt.update_for_pin_change::<P, H>(self, e, from, to, phi_from, phi_to);
             }
         }
         MoveOutcome { attributed_gain: gain }
@@ -404,8 +430,13 @@ impl<H: HypergraphOps> PartitionedHypergraph<H> {
     // ------------------------------------------------------ gains/metrics
 
     /// Exact move gain g_u(t) computed from the current pin counts
-    /// (benefit minus penalty; paper §6).
+    /// (benefit minus penalty; paper §6). km1 entry point.
     pub fn gain(&self, u: NodeId, to: BlockId) -> Gain {
+        self.gain_p::<Km1Policy>(u, to)
+    }
+
+    /// Exact move gain of policy `P` from the current pin counts.
+    pub fn gain_p<P: GainPolicy>(&self, u: NodeId, to: BlockId) -> Gain {
         let from = self.block_of(u);
         if from == to {
             return 0;
@@ -413,28 +444,30 @@ impl<H: HypergraphOps> PartitionedHypergraph<H> {
         let mut g = 0;
         for &e in self.hg.incident_nets(u) {
             let w = self.hg.net_weight(e);
-            if self.pin_count(e, from) == 1 {
-                g += w;
-            }
-            if self.pin_count(e, to) == 0 {
-                g -= w;
-            }
+            let sz = if P::NEEDS_NET_SIZE { self.hg.net_size(e) as u32 } else { 0 };
+            g += P::benefit_contrib(w, self.pin_count(e, from), sz);
+            g -= P::penalty_contrib(w, self.pin_count(e, to), sz);
         }
         g
     }
 
     /// Best move for `u` among blocks adjacent via its nets (ties broken
     /// toward the lighter block). Returns `(gain, block)`; `None` if `u`
-    /// has no feasible target distinct from its block.
+    /// has no feasible target distinct from its block. km1 entry point.
     pub fn max_gain_move(&self, u: NodeId) -> Option<(Gain, BlockId)> {
+        self.max_gain_move_p::<Km1Policy>(u)
+    }
+
+    /// Best move for `u` under policy `P` (same candidate enumeration
+    /// and lighter-block tie-break as the km1 form).
+    pub fn max_gain_move_p<P: GainPolicy>(&self, u: NodeId) -> Option<(Gain, BlockId)> {
         let from = self.block_of(u);
         let w = self.hg.node_weight(u);
         let mut benefit: Gain = 0;
         let mut candidates: Vec<BlockId> = Vec::new();
         for &e in self.hg.incident_nets(u) {
-            if self.pin_count(e, from) == 1 {
-                benefit += self.hg.net_weight(e);
-            }
+            let sz = if P::NEEDS_NET_SIZE { self.hg.net_size(e) as u32 } else { 0 };
+            benefit += P::benefit_contrib(self.hg.net_weight(e), self.pin_count(e, from), sz);
             for b in self.connectivity_set(e) {
                 if b != from && !candidates.contains(&b) {
                     candidates.push(b);
@@ -448,9 +481,8 @@ impl<H: HypergraphOps> PartitionedHypergraph<H> {
             }
             let mut penalty: Gain = 0;
             for &e in self.hg.incident_nets(u) {
-                if self.pin_count(e, t) == 0 {
-                    penalty += self.hg.net_weight(e);
-                }
+                let sz = if P::NEEDS_NET_SIZE { self.hg.net_size(e) as u32 } else { 0 };
+                penalty += P::penalty_contrib(self.hg.net_weight(e), self.pin_count(e, t), sz);
             }
             let g = benefit - penalty;
             match best {
@@ -485,6 +517,24 @@ impl<H: HypergraphOps> PartitionedHypergraph<H> {
     /// Sum-of-external-degrees metric f_s(Π) = km1 + cut.
     pub fn soed(&self) -> i64 {
         self.km1() + self.cut()
+    }
+
+    /// From-scratch metric of policy `P` from the connectivity sets.
+    pub fn objective_p<P: GainPolicy>(&self) -> i64 {
+        self.hg
+            .nets()
+            .map(|e| P::net_contribution(self.connectivity(e), self.hg.net_weight(e)))
+            .sum()
+    }
+
+    /// From-scratch value of a runtime-selected objective (driver-level
+    /// accept/reject decisions and reporting).
+    pub fn objective_value(&self, obj: crate::metrics::Objective) -> i64 {
+        match obj {
+            crate::metrics::Objective::Km1 => self.km1(),
+            crate::metrics::Objective::Cut => self.cut(),
+            crate::metrics::Objective::Soed => self.soed(),
+        }
     }
 
     /// Imbalance ε(Π) = max_b c(V_b)/⌈c(V)/k⌉ − 1.

@@ -1,0 +1,336 @@
+//! The objective layer: per-objective gain semantics behind one trait.
+//!
+//! The paper optimizes the connectivity metric f_{λ−1}; upstream
+//! Mt-KaHyPar ships a *portfolio* of objectives (cut-net, sum of external
+//! degrees) behind a single attributed-gain abstraction. [`GainPolicy`]
+//! is that abstraction here: a compile-time tag type providing the pure
+//! per-net math every refiner needs —
+//!
+//! * the **attributed delta** of one synchronized pin-count transition
+//!   (Algorithm 6.1's gain attribution, generalized per objective),
+//! * the **benefit/penalty contributions** of the §6.2 two-level gain
+//!   table (and of every from-scratch gain computation, which all take
+//!   the shape `gain(u→t) = Σ benefit(e, Φ(e, Π(u))) − Σ penalty(e,
+//!   Φ(e, t))`),
+//! * the **net contribution** to the from-scratch metric given λ(e),
+//! * the **bridging-edge capacity** of the §8.2 Lawler flow network.
+//!
+//! Everything is a `const`/`#[inline]` pure function of `(ω(e), Φ, λ,
+//! |e|)`, so monomorphizing a refiner over [`Km1Policy`] constant-folds
+//! to exactly the pre-refactor km1 code: `NEEDS_CONNECTIVITY = false`
+//! removes the λ read from the move loop, `NEEDS_NET_SIZE = false`
+//! removes the |e| lookup from the gain loops, and the contribution
+//! functions inline to the familiar `Φ(e, from) == 1` / `Φ(e, to) == 0`
+//! tests.
+//!
+//! ## Φ-transition rules per objective
+//!
+//! **km1** (connectivity, λ−1): a move decreases the metric by ω(e) iff
+//! it zeroes Φ(e, V_from) and increases it by ω(e) iff it makes
+//! Φ(e, V_to) = 1 — pure pin-count transitions, λ is never needed
+//! (Lemma 6.1).
+//!
+//! **cut-net**: ω(e) leaves the cut only on a λ: 2→1 transition and
+//! enters it only on a 1→2 transition. Both are detectable from the same
+//! synchronized state: the move changes λ(e) by
+//! `[Φ(e,to)=1 after] − [Φ(e,from)=0 after] ∈ {−1, 0, +1}`, and λ(e)
+//! *after* the move is read under the same per-net lock that serialized
+//! the pin-count update. Per net, the signed 1↔2 boundary crossings
+//! telescope over any concurrent move sequence to
+//! `ω(e)·([λ_start ≥ 2] − [λ_end ≥ 2])`, so summed attributed cut gains
+//! are exact exactly like km1's (the cut analogue of Lemma 6.1).
+//!
+//! **soed** (sum of external degrees) = km1 + cut, composed term-wise in
+//! every rule.
+//!
+//! ## Benefit/penalty shapes
+//!
+//! km1 keeps the textbook non-negative contributions (benefit ω(e) iff
+//! Φ(e, own) = 1; penalty ω(e) iff Φ(e, t) = 0). The cut-net metric fits
+//! the same `b − p` decomposition with *signed* contributions: the
+//! benefit of leaving the own block is −ω(e) iff the net is internal
+//! (Φ(e, own) = |e|), the penalty of entering t is −ω(e) iff t can
+//! absorb the net (Φ(e, t) = |e|−1) — so `b − p` is the exact cut delta.
+//! All cut contributions carry a |e| ≥ 2 guard: single-pin nets (which
+//! the dynamic n-level structure can expose) are never cut.
+
+use crate::metrics::Objective;
+use crate::Gain;
+
+/// Per-objective gain semantics (see the module docs). Implementors are
+/// zero-sized tag types; every refiner that makes objective-improvement
+/// decisions is generic over this trait and monomorphized per objective.
+pub trait GainPolicy: Copy + Send + Sync + 'static {
+    /// The runtime objective this policy implements.
+    const OBJECTIVE: Objective;
+    /// Does [`Self::attributed_delta`] need λ(e) after the move? When
+    /// `false` the move loop skips the connectivity read entirely.
+    const NEEDS_CONNECTIVITY: bool;
+    /// Do the contribution functions need |e|? When `false` the gain
+    /// loops skip the net-size lookup.
+    const NEEDS_NET_SIZE: bool;
+
+    /// Attributed objective delta of one move on one net, from the
+    /// synchronized pin-count transition (`phi_*_after` are the values
+    /// *after* the move, as returned by the locked dec/inc) and — for
+    /// connectivity-transition objectives — λ(e) after the move, read
+    /// under the same lock. Positive = the objective decreased.
+    fn attributed_delta(w: i64, phi_from_after: u32, phi_to_after: u32, lambda_after: u32)
+        -> Gain;
+
+    /// Benefit contribution of net `e` (weight `w`, |e| = `size`) to
+    /// moving a pin out of a block holding `phi_own` of its pins.
+    fn benefit_contrib(w: i64, phi_own: u32, size: u32) -> Gain;
+
+    /// Penalty contribution of net `e` (weight `w`, |e| = `size`) to
+    /// moving a pin into a block holding `phi_target` of its pins.
+    fn penalty_contrib(w: i64, phi_target: u32, size: u32) -> Gain;
+
+    /// Contribution of a net with connectivity `lambda` and weight `w`
+    /// to the from-scratch metric.
+    fn net_contribution(lambda: u32, w: i64) -> i64;
+
+    /// Capacity of the Lawler bridging edge `e_in → e_out` (paper §8.2)
+    /// for a net of weight `w`; `external` is true when the net has pins
+    /// in blocks other than the refined pair (for cut-style objectives
+    /// such a net stays cut no matter how the pair is split, so cutting
+    /// it inside the flow network is free).
+    fn bridging_capacity(w: i64, external: bool) -> i64;
+}
+
+/// Connectivity metric f_{λ−1} — the paper's objective; monomorphizing
+/// over this policy reproduces the pre-refactor code paths exactly.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Km1Policy;
+
+impl GainPolicy for Km1Policy {
+    const OBJECTIVE: Objective = Objective::Km1;
+    const NEEDS_CONNECTIVITY: bool = false;
+    const NEEDS_NET_SIZE: bool = false;
+
+    #[inline(always)]
+    fn attributed_delta(w: i64, phi_from_after: u32, phi_to_after: u32, _lambda_after: u32) -> Gain {
+        let mut g = 0;
+        if phi_from_after == 0 {
+            g += w;
+        }
+        if phi_to_after == 1 {
+            g -= w;
+        }
+        g
+    }
+
+    #[inline(always)]
+    fn benefit_contrib(w: i64, phi_own: u32, _size: u32) -> Gain {
+        if phi_own == 1 {
+            w
+        } else {
+            0
+        }
+    }
+
+    #[inline(always)]
+    fn penalty_contrib(w: i64, phi_target: u32, _size: u32) -> Gain {
+        if phi_target == 0 {
+            w
+        } else {
+            0
+        }
+    }
+
+    #[inline(always)]
+    fn net_contribution(lambda: u32, w: i64) -> i64 {
+        lambda.saturating_sub(1) as i64 * w
+    }
+
+    #[inline(always)]
+    fn bridging_capacity(w: i64, _external: bool) -> i64 {
+        w
+    }
+}
+
+/// Cut-net metric f_c: ω(e) counts iff λ(e) ≥ 2. Attributed gains fire
+/// only on λ 2→1 / 1→2 transitions (see the module docs).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CutNetPolicy;
+
+impl GainPolicy for CutNetPolicy {
+    const OBJECTIVE: Objective = Objective::Cut;
+    const NEEDS_CONNECTIVITY: bool = true;
+    const NEEDS_NET_SIZE: bool = true;
+
+    #[inline(always)]
+    fn attributed_delta(w: i64, phi_from_after: u32, phi_to_after: u32, lambda_after: u32) -> Gain {
+        // λ delta of this move: +1 iff the target block is new, −1 iff
+        // the source block emptied (both can happen; then λ is unchanged)
+        let entered = i32::from(phi_to_after == 1);
+        let left = i32::from(phi_from_after == 0);
+        match entered - left {
+            -1 if lambda_after == 1 => w,  // 2→1: net left the cut
+            1 if lambda_after == 2 => -w,  // 1→2: net entered the cut
+            _ => 0,
+        }
+    }
+
+    #[inline(always)]
+    fn benefit_contrib(w: i64, phi_own: u32, size: u32) -> Gain {
+        // leaving the own block cuts a currently internal net
+        if size >= 2 && phi_own == size {
+            -w
+        } else {
+            0
+        }
+    }
+
+    #[inline(always)]
+    fn penalty_contrib(w: i64, phi_target: u32, size: u32) -> Gain {
+        // entering t uncuts the net iff t holds all other pins
+        if size >= 2 && phi_target + 1 == size {
+            -w
+        } else {
+            0
+        }
+    }
+
+    #[inline(always)]
+    fn net_contribution(lambda: u32, w: i64) -> i64 {
+        if lambda >= 2 {
+            w
+        } else {
+            0
+        }
+    }
+
+    #[inline(always)]
+    fn bridging_capacity(w: i64, external: bool) -> i64 {
+        if external {
+            0
+        } else {
+            w
+        }
+    }
+}
+
+/// Sum of external degrees f_s = f_{λ−1} + f_c, composed term-wise.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SoedPolicy;
+
+impl GainPolicy for SoedPolicy {
+    const OBJECTIVE: Objective = Objective::Soed;
+    const NEEDS_CONNECTIVITY: bool = true;
+    const NEEDS_NET_SIZE: bool = true;
+
+    #[inline(always)]
+    fn attributed_delta(w: i64, phi_from_after: u32, phi_to_after: u32, lambda_after: u32) -> Gain {
+        Km1Policy::attributed_delta(w, phi_from_after, phi_to_after, lambda_after)
+            + CutNetPolicy::attributed_delta(w, phi_from_after, phi_to_after, lambda_after)
+    }
+
+    #[inline(always)]
+    fn benefit_contrib(w: i64, phi_own: u32, size: u32) -> Gain {
+        Km1Policy::benefit_contrib(w, phi_own, size)
+            + CutNetPolicy::benefit_contrib(w, phi_own, size)
+    }
+
+    #[inline(always)]
+    fn penalty_contrib(w: i64, phi_target: u32, size: u32) -> Gain {
+        Km1Policy::penalty_contrib(w, phi_target, size)
+            + CutNetPolicy::penalty_contrib(w, phi_target, size)
+    }
+
+    #[inline(always)]
+    fn net_contribution(lambda: u32, w: i64) -> i64 {
+        Km1Policy::net_contribution(lambda, w) + CutNetPolicy::net_contribution(lambda, w)
+    }
+
+    #[inline(always)]
+    fn bridging_capacity(w: i64, external: bool) -> i64 {
+        Km1Policy::bridging_capacity(w, external) + CutNetPolicy::bridging_capacity(w, external)
+    }
+}
+
+/// Monomorphize `$body` over the policy matching a runtime
+/// [`Objective`]: inside each arm `$P` is a type alias for the selected
+/// policy, so `$body` can call `some_generic_fn::<$P>(…)`. This is the
+/// single dispatch point between `ctx.objective` and the generic refiner
+/// stack — `Objective::Km1` selects exactly the pre-refactor code.
+macro_rules! with_policy {
+    ($obj:expr, $P:ident => $body:expr) => {
+        match $obj {
+            $crate::metrics::Objective::Km1 => {
+                type $P = $crate::partition::objective::Km1Policy;
+                $body
+            }
+            $crate::metrics::Objective::Cut => {
+                type $P = $crate::partition::objective::CutNetPolicy;
+                $body
+            }
+            $crate::metrics::Objective::Soed => {
+                type $P = $crate::partition::objective::SoedPolicy;
+                $body
+            }
+        }
+    };
+}
+pub(crate) use with_policy;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn km1_transitions() {
+        // zeroing the source block gains w; first pin in the target costs w
+        assert_eq!(Km1Policy::attributed_delta(3, 0, 2, 0), 3);
+        assert_eq!(Km1Policy::attributed_delta(3, 1, 1, 0), -3);
+        assert_eq!(Km1Policy::attributed_delta(3, 0, 1, 0), 0); // both: λ shifts blocks
+        assert_eq!(Km1Policy::attributed_delta(3, 2, 3, 0), 0);
+    }
+
+    #[test]
+    fn cut_fires_only_on_boundary_transitions() {
+        // λ 2→1 (source emptied, λ_after = 1): net leaves the cut
+        assert_eq!(CutNetPolicy::attributed_delta(5, 0, 4, 1), 5);
+        // λ 1→2 (target entered, λ_after = 2): net enters the cut
+        assert_eq!(CutNetPolicy::attributed_delta(5, 2, 1, 2), -5);
+        // λ 3→2: still cut, no attributed change
+        assert_eq!(CutNetPolicy::attributed_delta(5, 0, 4, 2), 0);
+        // λ 2→3: was already cut
+        assert_eq!(CutNetPolicy::attributed_delta(5, 2, 1, 3), 0);
+        // sole-pin shuffle: source emptied AND target entered, λ stays 1
+        assert_eq!(CutNetPolicy::attributed_delta(5, 0, 1, 1), 0);
+    }
+
+    #[test]
+    fn cut_contributions_guard_single_pin_nets() {
+        assert_eq!(CutNetPolicy::benefit_contrib(5, 1, 1), 0);
+        assert_eq!(CutNetPolicy::penalty_contrib(5, 0, 1), 0);
+        // internal net: leaving cuts it (benefit −w)
+        assert_eq!(CutNetPolicy::benefit_contrib(5, 4, 4), -5);
+        assert_eq!(CutNetPolicy::benefit_contrib(5, 3, 4), 0);
+        // absorbing target: entering uncuts it (penalty −w)
+        assert_eq!(CutNetPolicy::penalty_contrib(5, 3, 4), -5);
+        assert_eq!(CutNetPolicy::penalty_contrib(5, 2, 4), 0);
+    }
+
+    #[test]
+    fn soed_composes() {
+        for lambda in 1..5u32 {
+            assert_eq!(
+                SoedPolicy::net_contribution(lambda, 7),
+                Km1Policy::net_contribution(lambda, 7) + CutNetPolicy::net_contribution(lambda, 7)
+            );
+        }
+        assert_eq!(SoedPolicy::net_contribution(1, 7), 0);
+        assert_eq!(SoedPolicy::net_contribution(2, 7), 14);
+    }
+
+    #[test]
+    fn bridging_capacities() {
+        assert_eq!(Km1Policy::bridging_capacity(4, true), 4);
+        assert_eq!(CutNetPolicy::bridging_capacity(4, true), 0);
+        assert_eq!(CutNetPolicy::bridging_capacity(4, false), 4);
+        assert_eq!(SoedPolicy::bridging_capacity(4, true), 4);
+        assert_eq!(SoedPolicy::bridging_capacity(4, false), 8);
+    }
+}

@@ -26,6 +26,7 @@ pub use quotient::{blocks_adjacent, QuotientGraph};
 pub use scratch::FlowScratch;
 
 use crate::coordinator::context::Context;
+use crate::partition::objective::{with_policy, GainPolicy};
 use crate::partition::PartitionedHypergraph;
 use crate::{BlockId, Gain, NodeId};
 use network::RegionConfig;
@@ -127,7 +128,8 @@ pub fn flow_refine_with_workspace(
     }
     assert_eq!(fw.k, k, "flow workspace was built for a different k");
     let hg = phg.hypergraph();
-    let objective_before = phg.km1().max(1);
+    // §8.1 relative-improvement gating measures the *configured* objective
+    let objective_before = phg.objective_value(ctx.objective).max(1);
     // Deterministic mode (§11, SDet with flows): one worker draining the
     // waves in a fixed (round, pair-id) order. With a single worker every
     // construct/apply step sees the exact same partition state for any
@@ -189,7 +191,9 @@ pub fn flow_refine_with_workspace(
                         // in-flight slot so peers blocked in claim() can
                         // finish and the scope propagates the panic
                         let mut guard = InFlightGuard { sched, armed: true };
-                        let delta = refine_pair(phg, ctx, b1, b2, sc, apply_lock);
+                        let delta = with_policy!(ctx.objective, P => {
+                            refine_pair::<P>(phg, ctx, b1, b2, sc, apply_lock)
+                        });
                         if delta > 0 {
                             total_gain.fetch_add(delta, Ordering::Relaxed);
                         }
@@ -332,7 +336,7 @@ impl Drop for InFlightGuard<'_, '_> {
 /// Candidate cut nets are expected in `sc.pair_nets`; applied moves are
 /// left in `sc.applied` (empty when nothing was kept). Moves are kept
 /// only when their attributed gain is strictly positive.
-fn refine_pair(
+fn refine_pair<P: GainPolicy>(
     phg: &PartitionedHypergraph,
     ctx: &Context,
     b1: BlockId,
@@ -342,7 +346,7 @@ fn refine_pair(
 ) -> Gain {
     sc.applied.clear();
     let cfg = RegionConfig::for_pair(phg, ctx.flow_alpha, ctx.flow_distance, b1, b2);
-    let Some(fp) = network::construct_region(phg, b1, b2, &cfg, sc) else {
+    let Some(fp) = network::construct_region_p::<P>(phg, b1, b2, &cfg, sc) else {
         return 0;
     };
     let Some(res) = cutter::flow_cutter(sc, &fp, cfg.max_w1, cfg.max_w2) else {
@@ -397,11 +401,11 @@ fn refine_pair(
     let mut delta: Gain = 0;
     for &(u, from) in sc.applied.iter() {
         let to = if from == b1 { b2 } else { b1 };
-        delta += phg.move_unchecked(u, to, None).attributed_gain;
+        delta += phg.move_unchecked_p::<P>(u, to, None).attributed_gain;
     }
     if delta <= 0 {
         for &(u, from) in sc.applied.iter().rev() {
-            phg.move_unchecked(u, from, None);
+            phg.move_unchecked_p::<P>(u, from, None);
         }
         sc.applied.clear();
         return 0;

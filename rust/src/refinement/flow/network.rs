@@ -9,6 +9,7 @@
 //! instead of an O(m) scan over all nets.
 
 use super::scratch::FlowScratch;
+use crate::partition::objective::{GainPolicy, Km1Policy};
 use crate::partition::PartitionedHypergraph;
 use crate::{BlockId, EdgeId, NodeId, NodeWeight};
 
@@ -84,6 +85,24 @@ pub fn cut_nets_between(
 // that owns the iterated vectors, so iterator-style borrows cannot work
 #[allow(clippy::needless_range_loop)]
 pub fn construct_region(
+    phg: &PartitionedHypergraph,
+    b1: BlockId,
+    b2: BlockId,
+    cfg: &RegionConfig,
+    sc: &mut FlowScratch,
+) -> Option<FlowProblem> {
+    construct_region_p::<Km1Policy>(phg, b1, b2, cfg, sc)
+}
+
+/// [`construct_region`] for an arbitrary [`GainPolicy`]: the bridging
+/// edge of each net carries `P::bridging_capacity(ω, external)` — for
+/// cut-net, a net with pins in a third block stays cut no matter how the
+/// pair separates, so its bridging capacity drops to 0 (cutting it is
+/// free), while km1 always pays ω for the extra λ. The external-pin scan
+/// is gated on `P::NEEDS_CONNECTIVITY`, so the km1 instantiation builds
+/// the exact pre-refactor network, edge order included.
+#[allow(clippy::needless_range_loop)]
+pub fn construct_region_p<P: GainPolicy>(
     phg: &PartitionedHypergraph,
     b1: BlockId,
     b2: BlockId,
@@ -177,7 +196,13 @@ pub fn construct_region(
         let w = hg.net_weight(e);
         let e_in = e_in_base + 2 * j as u32;
         let e_out = e_in + 1;
-        sc.net.add_edge(e_in, e_out, w); // bridging edge
+        // compiled out for km1 (NEEDS_CONNECTIVITY = false)
+        let external = P::NEEDS_CONNECTIVITY
+            && hg.pins(e).iter().any(|&p| {
+                let bp = phg.block_of(p);
+                bp != b1 && bp != b2
+            });
+        sc.net.add_edge(e_in, e_out, P::bridging_capacity(w, external)); // bridging edge
         let mut touches_source = false;
         let mut touches_sink = false;
         for &p in hg.pins(e) {

@@ -14,6 +14,8 @@
 //! of reallocating per FM call.
 
 use crate::hypergraph::HypergraphOps;
+use crate::metrics::Objective;
+use crate::partition::objective::{GainPolicy, Km1Policy};
 use crate::partition::PartitionedHypergraph;
 use crate::util::fxhash::FxHashMap;
 use crate::{BlockId, EdgeId, Gain, NodeId, NodeWeight};
@@ -86,6 +88,20 @@ impl DeltaPartition {
         u: NodeId,
         to: BlockId,
     ) -> Option<Gain> {
+        self.try_move_p::<Km1Policy, H>(phg, u, to)
+    }
+
+    /// [`Self::try_move`] for an arbitrary [`GainPolicy`]: the returned
+    /// gain is the exact local objective delta in the combined state.
+    /// Cut-net deltas come from the internal-net test on the combined pin
+    /// counts (`Φ(e,to)=|e|` after ⇔ the net leaves the cut, `Φ(e,from)=|e|`
+    /// before ⇔ it enters), which needs no connectivity tracking.
+    pub fn try_move_p<P: GainPolicy, H: HypergraphOps>(
+        &mut self,
+        phg: &PartitionedHypergraph<H>,
+        u: NodeId,
+        to: BlockId,
+    ) -> Option<Gain> {
         let from = self.block_of(phg, u);
         if from == to {
             return None;
@@ -110,11 +126,39 @@ impl DeltaPartition {
             *dto += 1;
             let phi_to = phg.pin_count(e, to) as i64 + *dto as i64;
             debug_assert!(phi_from >= 0);
-            if phi_from == 0 {
-                gain += we;
-            }
-            if phi_to == 1 {
-                gain -= we;
+            match P::OBJECTIVE {
+                Objective::Km1 => {
+                    if phi_from == 0 {
+                        gain += we;
+                    }
+                    if phi_to == 1 {
+                        gain -= we;
+                    }
+                }
+                Objective::Cut => {
+                    let sz = phg.hypergraph().net_size(e) as i64;
+                    if phi_to == sz {
+                        gain += we;
+                    }
+                    if phi_from + 1 == sz {
+                        gain -= we;
+                    }
+                }
+                Objective::Soed => {
+                    let sz = phg.hypergraph().net_size(e) as i64;
+                    if phi_from == 0 {
+                        gain += we;
+                    }
+                    if phi_to == 1 {
+                        gain -= we;
+                    }
+                    if phi_to == sz {
+                        gain += we;
+                    }
+                    if phi_from + 1 == sz {
+                        gain -= we;
+                    }
+                }
             }
         }
         Some(gain)
@@ -132,32 +176,48 @@ impl DeltaPartition {
         phg: &PartitionedHypergraph<H>,
         u: NodeId,
     ) -> Option<(Gain, BlockId)> {
+        self.max_gain_move_p::<Km1Policy, H>(phg, u)
+    }
+
+    /// [`Self::max_gain_move`] for an arbitrary [`GainPolicy`]. The
+    /// present-weight trick generalizes: `p(u,t) = pbase + corr(t)` where
+    /// `pbase = Σ_e pc(ω, 0)` is target-independent and the correction
+    /// `corr(t) = Σ_{e: Φ(e,t)>0} pc(ω, Φ(e,t)) − pc(ω, 0)` is only
+    /// accumulated for connected blocks — for km1 this folds to exactly
+    /// `W − present[t]`, so the km1 instantiation is the pre-refactor
+    /// sweep bit-for-bit.
+    pub fn max_gain_move_p<P: GainPolicy, H: HypergraphOps>(
+        &self,
+        phg: &PartitionedHypergraph<H>,
+        u: NodeId,
+    ) -> Option<(Gain, BlockId)> {
         let from = self.block_of(phg, u);
         let w = phg.hypergraph().node_weight(u);
         let hg = phg.hypergraph();
         let mut benefit: Gain = 0;
-        let mut total_w: Gain = 0;
-        // present[t] = Σ ω(e) over nets with at least one pin in t
-        let mut present: Vec<(BlockId, Gain)> = Vec::new();
+        let mut pbase: Gain = 0;
+        // corr[t] = Σ over nets with a pin in t of pc(ω,Φ(e,t)) − pc(ω,0)
+        let mut corr: Vec<(BlockId, Gain)> = Vec::new();
         let ku = self.k as u64;
         for &e in hg.incident_nets(u) {
             let we = hg.net_weight(e);
-            total_w += we;
-            if self.pin_count(phg, e, from) == 1 {
-                benefit += we;
-            }
-            let mut add = |b: BlockId| {
+            let sz = if P::NEEDS_NET_SIZE { hg.net_size(e) as u32 } else { 0 };
+            benefit += P::benefit_contrib(we, self.pin_count(phg, e, from) as u32, sz);
+            let absent = P::penalty_contrib(we, 0, sz);
+            pbase += absent;
+            let mut add = |b: BlockId, phi: i64| {
                 if b == from {
                     return;
                 }
-                match present.iter_mut().find(|(pb, _)| *pb == b) {
-                    Some((_, pw)) => *pw += we,
-                    None => present.push((b, we)),
+                let c = P::penalty_contrib(we, phi as u32, sz) - absent;
+                match corr.iter_mut().find(|(pb, _)| *pb == b) {
+                    Some((_, pw)) => *pw += c,
+                    None => corr.push((b, c)),
                 }
             };
             if self.pin_delta.is_empty() {
                 for b in phg.connectivity_set(e) {
-                    add(b);
+                    add(b, phg.pin_count(e, b) as i64);
                 }
             } else {
                 // combined state: global connectivity adjusted by deltas
@@ -167,18 +227,19 @@ impl DeltaPartition {
                         .get(&(e as u64 * ku + b as u64))
                         .copied()
                         .unwrap_or(0) as i64;
-                    if phg.pin_count(e, b) as i64 + d > 0 {
-                        add(b);
+                    let phi = phg.pin_count(e, b) as i64 + d;
+                    if phi > 0 {
+                        add(b, phi);
                     }
                 }
             }
         }
         let mut best: Option<(Gain, BlockId)> = None;
-        for &(t, pw) in &present {
+        for &(t, c) in &corr {
             if self.block_weight(phg, t) + w > phg.max_block_weight(t) {
                 continue;
             }
-            let g = benefit - (total_w - pw);
+            let g = benefit - (pbase + c);
             match best {
                 None => best = Some((g, t)),
                 Some((bg, bb)) => {
@@ -265,6 +326,55 @@ mod tests {
             assert_eq!(out.attributed_gain, *lg);
         }
         phg.verify_consistency().unwrap();
+    }
+
+    #[test]
+    fn local_gains_match_global_replay_cut_and_soed() {
+        use crate::partition::{CutNetPolicy, SoedPolicy};
+        fn check<P: GainPolicy>() {
+            let phg = setup();
+            let mut d = DeltaPartition::new(phg.k());
+            let mut rng = crate::util::Rng::new(17);
+            let mut local_gains = Vec::new();
+            let mut moves = Vec::new();
+            let mut moved = vec![false; 7];
+            for _ in 0..10 {
+                let u = rng.next_below(7) as NodeId;
+                if moved[u as usize] {
+                    continue;
+                }
+                let to = 1 - d.block_of(&phg, u);
+                if let Some(g) = d.try_move_p::<P, _>(&phg, u, to) {
+                    moved[u as usize] = true;
+                    local_gains.push(g);
+                    moves.push((u, to));
+                }
+            }
+            for ((u, to), lg) in moves.iter().zip(&local_gains) {
+                let out = phg.move_unchecked_p::<P>(*u, *to, None);
+                assert_eq!(out.attributed_gain, *lg);
+            }
+            phg.verify_consistency().unwrap();
+        }
+        check::<CutNetPolicy>();
+        check::<SoedPolicy>();
+    }
+
+    #[test]
+    fn max_gain_move_cut_matches_exhaustive() {
+        use crate::partition::CutNetPolicy;
+        let phg = setup();
+        let d = DeltaPartition::new(phg.k());
+        for u in 0..7 {
+            let from = phg.block_of(u);
+            let to = 1 - from;
+            // exhaustive reference: gain_p from the global structure
+            let want = phg.gain_p::<CutNetPolicy>(u, to);
+            if let Some((g, t)) = d.max_gain_move_p::<CutNetPolicy, _>(&phg, u) {
+                assert_eq!(t, to);
+                assert_eq!(g, want, "node {u}");
+            }
+        }
     }
 
     #[test]

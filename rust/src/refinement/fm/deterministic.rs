@@ -65,6 +65,7 @@
 use crate::coordinator::context::Context;
 use crate::hypergraph::HypergraphOps;
 use crate::parallel::parallel_chunks;
+use crate::partition::objective::{with_policy, GainPolicy};
 use crate::partition::{GainTable, Move, PartitionedHypergraph};
 use crate::refinement::fm::{FmStats, EXPANSION_NET_SIZE_LIMIT};
 use crate::refinement::lp::select_prefixes;
@@ -102,13 +103,24 @@ pub fn fm_refine_deterministic_with_workspace<H: HypergraphOps>(
     seed_set: Option<&[NodeId]>,
     ws: &mut Workspace,
 ) -> FmStats {
+    with_policy!(ctx.objective, P => {
+        fm_refine_deterministic_with_workspace_p::<P, H>(phg, ctx, seed_set, ws)
+    })
+}
+
+fn fm_refine_deterministic_with_workspace_p<P: GainPolicy, H: HypergraphOps>(
+    phg: &PartitionedHypergraph<H>,
+    ctx: &Context,
+    seed_set: Option<&[NodeId]>,
+    ws: &mut Workspace,
+) -> FmStats {
     assert_eq!(phg.k(), ws.k(), "workspace was built for a different k");
     let n = phg.hypergraph().num_nodes();
     let threads = ctx.threads.max(1);
     ws.ensure_node_capacity(n);
     let use_table = seed_set.is_none();
     if use_table {
-        ws.prepare_gain_table(phg, threads);
+        ws.prepare_gain_table_p::<P, H>(phg, threads);
     }
     // field-disjoint borrows: the det scratch is mutated, the gain table
     // is read (and updated through interior mutability by the move ops)
@@ -147,7 +159,7 @@ pub fn fm_refine_deterministic_with_workspace<H: HypergraphOps>(
                     }
                     let best = match table {
                         Some(gt) => gt.max_gain_move(phg, u),
-                        None => phg.max_gain_move(u),
+                        None => phg.max_gain_move_p::<P>(u),
                     };
                     if let Some((g, t)) = best {
                         // zero-gain plateau moves are admitted (see the
@@ -229,7 +241,7 @@ pub fn fm_refine_deterministic_with_workspace<H: HypergraphOps>(
                     ti += 1;
                     &ts[ti - 1]
                 };
-                let out = phg.move_unchecked(m.1, m.3, table);
+                let out = phg.move_unchecked_p::<P>(m.1, m.3, table);
                 det.moves.push(Move { node: m.1, from: m.2, to: m.3 });
                 det.gains.push(out.attributed_gain);
                 // admissible cut point: the pair's blocks are inside their
@@ -265,13 +277,13 @@ pub fn fm_refine_deterministic_with_workspace<H: HypergraphOps>(
             }
         }
         for m in det.moves[cut..].iter().rev() {
-            phg.move_unchecked(m.node, m.from, table);
+            phg.move_unchecked_p::<P>(m.node, m.from, table);
         }
         if let Some(gt) = table {
             // movers' own benefits are the one thing the update rules
             // leave stale (§6.2); repair them — applied and reverted alike
             for m in &det.moves {
-                gt.recompute_benefit(phg, m.node);
+                gt.recompute_benefit_p::<P, H>(phg, m.node);
             }
         }
         stats.rounds = round + 1;

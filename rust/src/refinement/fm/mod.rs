@@ -41,14 +41,16 @@ pub use stop::AdaptiveStoppingRule;
 
 use crate::coordinator::context::Context;
 use crate::hypergraph::HypergraphOps;
+use crate::partition::objective::{with_policy, GainPolicy};
 use crate::partition::{
-    gain_recalculation::{recalculate_gains_with_scratch, revert_to_best_prefix},
+    gain_recalculation::{recalculate_gains_with_scratch_p, revert_to_best_prefix_p},
     GainTable, Move, PartitionedHypergraph,
 };
 use crate::refinement::pipeline::{SearchScratch, Workspace};
 use crate::util::rng::hash2;
 use crate::util::Rng;
 use crate::{Gain, NodeId};
+use std::marker::PhantomData;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::Mutex;
 
@@ -98,6 +100,15 @@ pub fn fm_refine_with_workspace<H: HypergraphOps>(
     seed_set: Option<&[NodeId]>,
     ws: &mut Workspace,
 ) -> FmStats {
+    with_policy!(ctx.objective, P => fm_refine_with_workspace_p::<P, H>(phg, ctx, seed_set, ws))
+}
+
+fn fm_refine_with_workspace_p<P: GainPolicy, H: HypergraphOps>(
+    phg: &PartitionedHypergraph<H>,
+    ctx: &Context,
+    seed_set: Option<&[NodeId]>,
+    ws: &mut Workspace,
+) -> FmStats {
     assert_eq!(phg.k(), ws.k(), "workspace was built for a different k");
     let n = phg.hypergraph().num_nodes();
     let threads = ctx.threads.max(1);
@@ -105,7 +116,7 @@ pub fn fm_refine_with_workspace<H: HypergraphOps>(
     ws.ensure_threads(threads);
     let use_table = seed_set.is_none();
     if use_table {
-        ws.prepare_gain_table(phg, threads);
+        ws.prepare_gain_table_p::<P, H>(phg, threads);
     }
     let mut stats = FmStats::default();
 
@@ -146,7 +157,8 @@ pub fn fm_refine_with_workspace<H: HypergraphOps>(
             std::thread::scope(|s| {
                 for sc in ws.scratch.iter_mut().take(threads) {
                     s.spawn(move || {
-                        let mut search = LocalSearch { phg, gt, ctx, sc };
+                        let mut search =
+                            LocalSearch::<P, H> { phg, gt, ctx, sc, _policy: PhantomData };
                         loop {
                             let start = cursor.fetch_add(batch, Ordering::Relaxed);
                             if start >= boundary.len() {
@@ -165,14 +177,14 @@ pub fn fm_refine_with_workspace<H: HypergraphOps>(
         if moves.is_empty() {
             break;
         }
-        let gains = recalculate_gains_with_scratch(phg, &moves, threads, &mut ws.recalc);
+        let gains = recalculate_gains_with_scratch_p::<P, H>(phg, &moves, threads, &mut ws.recalc);
         let table = if use_table { Some(&ws.gain_table) } else { None };
-        let (len, total) = revert_to_best_prefix(phg, &moves, &gains, table);
+        let (len, total) = revert_to_best_prefix_p::<P, H>(phg, &moves, &gains, table);
         // repair benefits of all touched nodes (paper: recompute after the
         // round instead of immediately after each move)
         if use_table {
             for m in &moves {
-                ws.gain_table.recompute_benefit(phg, m.node);
+                ws.gain_table.recompute_benefit_p::<P, H>(phg, m.node);
             }
         }
         // restore the all-clear ownership invariant sparsely (globally
@@ -194,14 +206,15 @@ pub fn fm_refine_with_workspace<H: HypergraphOps>(
 /// `gt` is `None` for seeded (n-level batch) searches: PQ keys then come
 /// from the delta-aware on-the-fly gain, keeping the search independent
 /// of the global table (which is never initialized in that mode).
-struct LocalSearch<'a, H: HypergraphOps> {
+struct LocalSearch<'a, P: GainPolicy, H: HypergraphOps> {
     phg: &'a PartitionedHypergraph<H>,
     gt: Option<&'a GainTable>,
     ctx: &'a Context,
     sc: &'a mut SearchScratch,
+    _policy: PhantomData<P>,
 }
 
-impl<'a, H: HypergraphOps> LocalSearch<'a, H> {
+impl<'a, P: GainPolicy, H: HypergraphOps> LocalSearch<'a, P, H> {
     /// PQ key for `u`: the cached table gain when the table is live, the
     /// exact delta-aware gain otherwise (both are re-validated lazily at
     /// pop time, so transiently stale keys only cost a reinsertion).
@@ -209,7 +222,7 @@ impl<'a, H: HypergraphOps> LocalSearch<'a, H> {
     fn key_for(&self, u: NodeId) -> Option<(crate::Gain, crate::BlockId)> {
         match self.gt {
             Some(gt) => gt.max_gain_move(self.phg, u),
-            None => self.sc.delta.max_gain_move(self.phg, u),
+            None => self.sc.delta.max_gain_move_p::<P, H>(self.phg, u),
         }
     }
 
@@ -239,13 +252,15 @@ impl<'a, H: HypergraphOps> LocalSearch<'a, H> {
 
         while let Some((u, g)) = self.sc.pq.pop_max() {
             // lazy PQ: recompute the exact (delta-aware) best move
-            let Some((g2, t2)) = self.sc.delta.max_gain_move(self.phg, u) else { continue };
+            let Some((g2, t2)) = self.sc.delta.max_gain_move_p::<P, H>(self.phg, u) else {
+                continue;
+            };
             if g2 < g {
                 self.sc.pq.insert(u, g2);
                 continue;
             }
             let from = self.sc.delta.block_of(self.phg, u);
-            let Some(gain) = self.sc.delta.try_move(self.phg, u, t2) else { continue };
+            let Some(gain) = self.sc.delta.try_move_p::<P, H>(self.phg, u, t2) else { continue };
             debug_assert_eq!(gain, g2);
             dtotal += gain;
             self.sc.local_moves.push(Move { node: u, from, to: t2 });
@@ -291,19 +306,19 @@ impl<'a, H: HypergraphOps> LocalSearch<'a, H> {
         let sc = &mut *self.sc;
         let mut applied = 0usize;
         for m in sc.local_moves.iter() {
-            if self.phg.try_move(m.node, m.to, self.gt).is_some() {
+            if self.phg.try_move_p::<P>(m.node, m.to, self.gt).is_some() {
                 applied += 1;
             } else {
                 // rollback: another thread consumed the balance slack
                 for a in sc.local_moves[..applied].iter().rev() {
-                    self.phg.move_unchecked(a.node, a.from, self.gt);
+                    self.phg.move_unchecked_p::<P>(a.node, a.from, self.gt);
                 }
                 // rolled-back nodes never reach the published move log, so
                 // the post-round benefit repair would miss them — repair
                 // here (update rules 2/4 leave movers' benefits stale)
                 if let Some(gt) = self.gt {
                     for a in sc.local_moves[..applied].iter() {
-                        gt.recompute_benefit(self.phg, a.node);
+                        gt.recompute_benefit_p::<P, H>(self.phg, a.node);
                     }
                 }
                 sc.local_moves.clear();
@@ -497,8 +512,13 @@ mod tests {
         sc.local_moves.push(Move { node: 0, from: 0, to: 1 });
         sc.local_moves.push(Move { node: 1, from: 0, to: 1 });
         let global_moves: Mutex<Vec<Move>> = Mutex::new(Vec::new());
-        let mut search =
-            LocalSearch { phg: &phg, gt: Some(&ws.gain_table), ctx: &c, sc };
+        let mut search = LocalSearch::<crate::partition::Km1Policy, _> {
+            phg: &phg,
+            gt: Some(&ws.gain_table),
+            ctx: &c,
+            sc,
+            _policy: PhantomData,
+        };
         assert!(!search.apply_globally(&global_moves), "conflict must be reported");
 
         assert!(global_moves.into_inner().unwrap().is_empty(), "nothing published");

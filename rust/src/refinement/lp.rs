@@ -11,6 +11,7 @@
 use crate::coordinator::context::Context;
 use crate::hypergraph::HypergraphOps;
 use crate::parallel::parallel_chunks;
+use crate::partition::objective::{with_policy, GainPolicy};
 use crate::partition::PartitionedHypergraph;
 use crate::util::rng::hash2;
 use crate::util::Rng;
@@ -40,8 +41,17 @@ pub fn lp_refine<H: HypergraphOps>(phg: &PartitionedHypergraph<H>, ctx: &Context
     lp_refine_with_scratch(phg, ctx, &mut LpScratch::default())
 }
 
-/// Parallel label propagation on reusable workspace scratch.
+/// Parallel label propagation on reusable workspace scratch. Dispatches
+/// on `ctx.objective` to the monomorphized policy instantiation.
 pub fn lp_refine_with_scratch<H: HypergraphOps>(
+    phg: &PartitionedHypergraph<H>,
+    ctx: &Context,
+    scratch: &mut LpScratch,
+) -> Gain {
+    with_policy!(ctx.objective, P => lp_refine_with_scratch_p::<P, H>(phg, ctx, scratch))
+}
+
+fn lp_refine_with_scratch_p<P: GainPolicy, H: HypergraphOps>(
     phg: &PartitionedHypergraph<H>,
     ctx: &Context,
     scratch: &mut LpScratch,
@@ -60,17 +70,17 @@ pub fn lp_refine_with_scratch<H: HypergraphOps>(
                 if !phg.is_border(u) {
                     continue;
                 }
-                if let Some((g, t)) = phg.max_gain_move(u) {
+                if let Some((g, t)) = phg.max_gain_move_p::<P>(u) {
                     // only positive gain moves (paper: LP cannot escape
                     // local optima)
                     if g <= 0 {
                         continue;
                     }
                     let from = phg.block_of(u);
-                    if let Some(out) = phg.try_move(u, t, None) {
+                    if let Some(out) = phg.try_move_p::<P>(u, t, None) {
                         if out.attributed_gain < 0 {
                             // conflict: revert immediately (§6.1)
-                            let back = phg.move_unchecked(u, from, None);
+                            let back = phg.move_unchecked_p::<P>(u, from, None);
                             moved_this_round.fetch_add(
                                 out.attributed_gain + back.attributed_gain,
                                 Ordering::Relaxed,
@@ -111,6 +121,17 @@ pub fn lp_refine_localized_with_scratch<H: HypergraphOps>(
     nodes: &[NodeId],
     scratch: &mut LpScratch,
 ) -> Gain {
+    with_policy!(ctx.objective, P => {
+        lp_refine_localized_with_scratch_p::<P, H>(phg, ctx, nodes, scratch)
+    })
+}
+
+fn lp_refine_localized_with_scratch_p<P: GainPolicy, H: HypergraphOps>(
+    phg: &PartitionedHypergraph<H>,
+    ctx: &Context,
+    nodes: &[NodeId],
+    scratch: &mut LpScratch,
+) -> Gain {
     let mut total: Gain = 0;
     scratch.frontier.clear();
     scratch.frontier.extend_from_slice(nodes);
@@ -125,12 +146,12 @@ pub fn lp_refine_localized_with_scratch<H: HypergraphOps>(
                 if !phg.is_border(u) {
                     continue;
                 }
-                if let Some((g, t)) = phg.max_gain_move(u) {
+                if let Some((g, t)) = phg.max_gain_move_p::<P>(u) {
                     if g > 0 {
                         let from = phg.block_of(u);
-                        if let Some(out) = phg.try_move(u, t, None) {
+                        if let Some(out) = phg.try_move_p::<P>(u, t, None) {
                             if out.attributed_gain < 0 {
-                                let back = phg.move_unchecked(u, from, None);
+                                let back = phg.move_unchecked_p::<P>(u, from, None);
                                 gained.fetch_add(
                                     out.attributed_gain + back.attributed_gain,
                                     Ordering::Relaxed,
@@ -196,6 +217,16 @@ pub fn lp_refine_deterministic_with_scratch<H: HypergraphOps>(
     ctx: &Context,
     scratch: &mut crate::refinement::DetScratch,
 ) -> Gain {
+    with_policy!(ctx.objective, P => {
+        lp_refine_deterministic_with_scratch_p::<P, H>(phg, ctx, scratch)
+    })
+}
+
+fn lp_refine_deterministic_with_scratch_p<P: GainPolicy, H: HypergraphOps>(
+    phg: &PartitionedHypergraph<H>,
+    ctx: &Context,
+    scratch: &mut crate::refinement::DetScratch,
+) -> Gain {
     let n = phg.hypergraph().num_nodes();
     let k = phg.k();
     let sub_rounds = ctx.det_sub_rounds.max(1) as u64;
@@ -219,7 +250,7 @@ pub fn lp_refine_deterministic_with_scratch<H: HypergraphOps>(
                         if !phg.is_border(u) {
                             continue;
                         }
-                        if let Some((g, t)) = phg.max_gain_move(u) {
+                        if let Some((g, t)) = phg.max_gain_move_p::<P>(u) {
                             if g > 0 {
                                 local.push((g, u, phg.block_of(u), t));
                             }
@@ -253,11 +284,11 @@ pub fn lp_refine_deterministic_with_scratch<H: HypergraphOps>(
                         phg.max_block_weight(tblk),
                     );
                     for m in &m_st[..i] {
-                        let out = phg.move_unchecked(m.1, tblk, None);
+                        let out = phg.move_unchecked_p::<P>(m.1, tblk, None);
                         round_gain += out.attributed_gain;
                     }
                     for m in &m_ts[..j] {
-                        let out = phg.move_unchecked(m.1, sblk, None);
+                        let out = phg.move_unchecked_p::<P>(m.1, sblk, None);
                         round_gain += out.attributed_gain;
                     }
                 }

@@ -215,9 +215,21 @@ impl Workspace {
         phg: &PartitionedHypergraph<H>,
         threads: usize,
     ) {
+        self.prepare_gain_table_p::<crate::partition::Km1Policy, H>(phg, threads);
+    }
+
+    /// [`Self::prepare_gain_table`] for an arbitrary
+    /// [`GainPolicy`](crate::partition::GainPolicy): the table's
+    /// benefit/penalty terms are filled with the policy's contribution
+    /// rules.
+    pub fn prepare_gain_table_p<P: crate::partition::GainPolicy, H: HypergraphOps>(
+        &mut self,
+        phg: &PartitionedHypergraph<H>,
+        threads: usize,
+    ) {
         debug_assert_eq!(phg.k(), self.k);
         self.ensure_node_capacity(phg.hypergraph().num_nodes());
-        self.gain_table.initialize(phg, threads);
+        self.gain_table.initialize_p::<P, H>(phg, threads);
         self.gain_table_inits += 1;
     }
 
@@ -346,9 +358,9 @@ impl Refiner for RebalanceRefiner {
         if phg.is_balanced() {
             return 0;
         }
-        let before = phg.km1();
+        let before = phg.objective_value(ctx.objective);
         rebalance::rebalance(phg, ctx);
-        before - phg.km1()
+        before - phg.objective_value(ctx.objective)
     }
 }
 

@@ -15,13 +15,21 @@
 use crate::coordinator::context::Context;
 use crate::datastructures::AddressablePQ;
 use crate::hypergraph::HypergraphOps;
+use crate::partition::objective::{with_policy, GainPolicy};
 use crate::partition::PartitionedHypergraph;
 use crate::{BlockId, Gain, NodeId};
 
 /// Repair balance; returns the number of moves performed. The partition
 /// may remain imbalanced if no feasible relocation exists (caller checks
-/// `is_balanced`).
+/// `is_balanced`). Eviction cost is measured under `ctx.objective`.
 pub fn rebalance<H: HypergraphOps>(phg: &PartitionedHypergraph<H>, ctx: &Context) -> usize {
+    with_policy!(ctx.objective, P => rebalance_p::<P, H>(phg, ctx))
+}
+
+fn rebalance_p<P: GainPolicy, H: HypergraphOps>(
+    phg: &PartitionedHypergraph<H>,
+    ctx: &Context,
+) -> usize {
     let k = phg.k();
     let mut moves = 0usize;
     // repeat until no overloaded block makes progress
@@ -45,7 +53,7 @@ pub fn rebalance<H: HypergraphOps>(phg: &PartitionedHypergraph<H>, ctx: &Context
         let mut pq = AddressablePQ::new();
         for u in phg.hypergraph().nodes() {
             if phg.block_of(u) == heavy {
-                if let Some((g, _)) = best_target(phg, u, heavy) {
+                if let Some((g, _)) = best_target::<P, H>(phg, u, heavy) {
                     pq.insert(u, g);
                 }
             }
@@ -58,14 +66,14 @@ pub fn rebalance<H: HypergraphOps>(phg: &PartitionedHypergraph<H>, ctx: &Context
             // if the node got *worse*, reinsert with the fresh gain
             // instead of silently dropping it (the historic bug lost
             // evictable nodes here and reported an unrepairable block).
-            match best_target(phg, u, heavy) {
+            match best_target::<P, H>(phg, u, heavy) {
                 None => continue, // no feasible target anymore this round
                 Some((g, t)) => {
                     if g < key {
                         pq.insert(u, g);
                         continue;
                     }
-                    if phg.try_move(u, t, None).is_some() {
+                    if phg.try_move_p::<P>(u, t, None).is_some() {
                         moves += 1;
                         progressed = true;
                     }
@@ -81,7 +89,7 @@ pub fn rebalance<H: HypergraphOps>(phg: &PartitionedHypergraph<H>, ctx: &Context
 }
 
 /// Cheapest feasible target block for evicting `u` from `heavy`.
-fn best_target<H: HypergraphOps>(
+fn best_target<P: GainPolicy, H: HypergraphOps>(
     phg: &PartitionedHypergraph<H>,
     u: NodeId,
     heavy: BlockId,
@@ -92,7 +100,7 @@ fn best_target<H: HypergraphOps>(
         if t == heavy || phg.block_weight(t) + w > phg.max_block_weight(t) {
             continue;
         }
-        let g = phg.gain(u, t);
+        let g = phg.gain_p::<P>(u, t);
         match best {
             None => best = Some((g, t)),
             Some((bg, bb)) => {

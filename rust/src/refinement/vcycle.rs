@@ -38,7 +38,7 @@ pub fn vcycle(phg: PartitionedHypergraph, ctx: &Context, cycles: usize) -> Parti
     let mut accepted_any = false;
     let mut rejected_last = false;
     for _ in 0..cycles {
-        let before = current.km1();
+        let before = current.objective_value(ctx.objective);
         // at the loop top `best_parts` equals the current assignment
         // (initially by construction, afterwards by the acceptance
         // branch), so no second Π snapshot is needed per cycle.
@@ -60,7 +60,7 @@ pub fn vcycle(phg: PartitionedHypergraph, ctx: &Context, cycles: usize) -> Parti
         current = pipeline.rebind_with_parts(current, hierarchy.coarsest(), &coarse_parts, ctx);
         pipeline.refine_at_distance(&current, ctx, hierarchy.levels.len());
         current = pipeline.uncoarsen(&hierarchy.levels, &hg, current, ctx);
-        if current.km1() < before && current.is_balanced() {
+        if current.objective_value(ctx.objective) < before && current.is_balanced() {
             best_parts = current.parts();
             accepted_any = true;
             rejected_last = false;

@@ -403,6 +403,115 @@ fn prop_pooled_uncoarsening_performs_zero_per_level_allocations() {
 }
 
 #[test]
+fn prop_refiner_gains_equal_objective_delta_for_every_objective() {
+    // Objective-portfolio contract: for each configured objective the
+    // attributed gain every refiner returns must equal the from-scratch
+    // metric delta — no refiner may improve km1 while claiming cut.
+    use mtkahypar::metrics::Objective;
+    for obj in [Objective::Km1, Objective::Cut, Objective::Soed] {
+        for seed in 0..SEEDS / 3 {
+            let hg = Arc::new(random_hypergraph(seed ^ 0x0b1e));
+            let mut rng = Rng::new(seed ^ 8);
+            let k = 2 + rng.next_below(4);
+            let mut phg = PartitionedHypergraph::new(hg.clone(), k);
+            phg.set_uniform_max_weight(0.5);
+            phg.assign_all(&random_parts(&mut rng, hg.num_nodes(), k), 1);
+            let mut ctx = Context::new(Preset::DefaultFlows, k, 0.5)
+                .with_threads(2)
+                .with_seed(seed)
+                .with_objective(obj);
+            ctx.fm_max_rounds = 2;
+
+            let before = phg.objective_value(obj);
+            let g = mtkahypar::refinement::lp::lp_refine(&phg, &ctx);
+            assert_eq!(phg.objective_value(obj), before - g, "{obj:?} seed {seed}: LP");
+
+            let before = phg.objective_value(obj);
+            let stats = mtkahypar::refinement::fm::fm_refine(&phg, &ctx);
+            assert_eq!(
+                phg.objective_value(obj),
+                before - stats.improvement,
+                "{obj:?} seed {seed}: FM"
+            );
+
+            let before = phg.objective_value(obj);
+            let g = mtkahypar::refinement::flow::flow_refine(&phg, &ctx);
+            assert_eq!(phg.objective_value(obj), before - g, "{obj:?} seed {seed}: flows");
+
+            // the incremental value agrees with the metrics module
+            assert_eq!(
+                phg.objective_value(obj),
+                metrics::objective_hg(obj, &hg, &phg.parts(), k),
+                "{obj:?} seed {seed}: incremental vs from-scratch"
+            );
+            phg.verify_consistency().unwrap_or_else(|e| panic!("{obj:?} seed {seed}: {e}"));
+        }
+    }
+}
+
+#[test]
+fn prop_deterministic_refiners_account_exactly_for_every_objective() {
+    use mtkahypar::metrics::Objective;
+    for obj in [Objective::Km1, Objective::Cut, Objective::Soed] {
+        for seed in 0..SEEDS / 3 {
+            let hg = Arc::new(random_hypergraph(seed ^ 0xde7));
+            let mut rng = Rng::new(seed ^ 9);
+            let k = 2 + rng.next_below(3);
+            let mut phg = PartitionedHypergraph::new(hg.clone(), k);
+            phg.set_uniform_max_weight(0.5);
+            phg.assign_all(&random_parts(&mut rng, hg.num_nodes(), k), 1);
+            let mut ctx = Context::new(Preset::Deterministic, k, 0.5)
+                .with_threads(2)
+                .with_seed(seed)
+                .with_objective(obj);
+            ctx.fm_max_rounds = 2;
+
+            let before = phg.objective_value(obj);
+            let g = mtkahypar::refinement::lp::lp_refine_deterministic(&phg, &ctx);
+            assert_eq!(phg.objective_value(obj), before - g, "{obj:?} seed {seed}: det-LP");
+
+            let before = phg.objective_value(obj);
+            let stats = mtkahypar::refinement::fm::deterministic::fm_refine_deterministic(
+                &phg, &ctx,
+            );
+            assert_eq!(
+                phg.objective_value(obj),
+                before - stats.improvement,
+                "{obj:?} seed {seed}: det-FM"
+            );
+            phg.verify_consistency().unwrap_or_else(|e| panic!("{obj:?} seed {seed}: {e}"));
+        }
+    }
+}
+
+#[test]
+fn prop_deterministic_vcycle_thread_invariant() {
+    // Deterministic preset end-to-end including V-cycles: partition +
+    // vcycle must produce bit-identical assignments at 1, 2 and 4
+    // threads (PR-5 leftover; §11 determinism guarantee).
+    for seed in 0..SEEDS / 6 {
+        let p = PlantedParams { n: 300, m: 550, blocks: 3, ..Default::default() };
+        let hg = Arc::new(generators::planted_hypergraph(&p, seed));
+        let run = |threads: usize| {
+            let mut ctx = Context::new(Preset::Deterministic, 3, 0.1)
+                .with_threads(threads)
+                .with_seed(seed);
+            ctx.contraction_limit_factor = 24;
+            ctx.ip_min_repetitions = 1;
+            ctx.ip_max_repetitions = 2;
+            ctx.fm_max_rounds = 2;
+            let phg =
+                mtkahypar::coordinator::partitioner::partition_arc(hg.clone(), &ctx);
+            let improved = mtkahypar::refinement::vcycle(phg, &ctx, 2);
+            (improved.km1(), improved.parts())
+        };
+        let r1 = run(1);
+        assert_eq!(r1, run(2), "seed {seed}: 1 vs 2 threads");
+        assert_eq!(r1, run(4), "seed {seed}: 1 vs 4 threads");
+    }
+}
+
+#[test]
 fn prop_dynamic_uncontractions_match_snapshots() {
     // Dynamic-vs-snapshot equivalence (paper §9): after every
     // uncontract_batch, the dynamic structure's pins / incident nets /
