@@ -31,6 +31,8 @@ pub fn patoh_like(hg: &Arc<Hypergraph>, ctx_in: &Context) -> PartitionedHypergra
     ctx.fm_max_rounds = 2;
     ctx.ip_min_repetitions = 1;
     ctx.ip_max_repetitions = 3;
+    // standalone driver: arm the deadline for this run
+    ctx.cancel.arm(ctx.time_limit);
 
     // matching-based coarsening hierarchy
     let limit = ctx.contraction_limit().max(2 * ctx.k);
@@ -38,6 +40,12 @@ pub fn patoh_like(hg: &Arc<Hypergraph>, ctx_in: &Context) -> PartitionedHypergra
     let mut levels: Vec<crate::coarsening::Level> = Vec::new();
     let mut current = hg.clone();
     while current.num_nodes() > limit {
+        // cancellation checkpoint (same pass-boundary discipline as the
+        // main coarsener: a shorter hierarchy is fully usable)
+        if ctx.cancel.is_expired() {
+            ctx.cancel.note_early_stop();
+            break;
+        }
         let n_before = current.num_nodes();
         let rep = matching::match_nodes(&current, cmax, ctx.seed ^ levels.len() as u64);
         let c = contraction::contract(&current, &rep, 1);
@@ -87,6 +95,8 @@ pub fn bipart_like(hg: &Arc<Hypergraph>, ctx_in: &Context) -> PartitionedHypergr
     ctx.ip_min_repetitions = 1;
     ctx.ip_max_repetitions = 1;
     ctx.contraction_limit_factor = ctx_in.contraction_limit_factor;
+    // the fresh Context must still honor the caller's wall-clock budget
+    ctx.time_limit = ctx_in.time_limit;
     partitioner::partition_arc(hg.clone(), &ctx)
 }
 

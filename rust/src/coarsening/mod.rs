@@ -52,6 +52,13 @@ pub fn coarsen(
     let mut scratch = clustering::ClusterScratch::default();
 
     while current.num_nodes() > limit {
+        // cancellation checkpoint at the pass boundary: a shorter
+        // hierarchy is fully usable — IP just runs on a larger coarsest
+        // level and uncoarsening visits fewer levels
+        if ctx.cancel.is_expired() {
+            ctx.cancel.note_early_stop();
+            break;
+        }
         let n_before = current.num_nodes();
         let det_rep: Vec<NodeId>;
         let rep: &[NodeId] = if ctx.deterministic {

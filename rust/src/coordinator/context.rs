@@ -17,8 +17,10 @@
 //! same thread-count invariance, better quality than LP alone.
 
 use crate::metrics::Objective;
-use crate::util::PhaseTimer;
+use crate::util::error::Result;
+use crate::util::{CancelToken, PhaseTimer};
 use std::sync::Arc;
+use std::time::Duration;
 
 /// Named configuration presets.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
@@ -119,6 +121,14 @@ pub struct Context {
     pub deterministic: bool,
     pub det_sub_rounds: usize,
 
+    // ---- resilience ----
+    /// wall-clock budget for one driver run; `None` (the default) keeps
+    /// the whole resilience layer inert and results bit-identical
+    pub time_limit: Option<Duration>,
+    /// shared cancellation token, armed with `time_limit` at driver entry
+    /// and polled at every component checkpoint
+    pub cancel: Arc<CancelToken>,
+
     /// per-phase wall-clock accounting (Fig. 11)
     pub timer: Arc<PhaseTimer>,
 }
@@ -159,6 +169,8 @@ impl Context {
             nlevel_batch_size: 1000,
             deterministic: false,
             det_sub_rounds: 16,
+            time_limit: None,
+            cancel: Arc::new(CancelToken::new()),
             timer: Arc::new(PhaseTimer::new()),
         };
         match preset {
@@ -201,6 +213,50 @@ impl Context {
         self
     }
 
+    /// Set a wall-clock budget for each driver run. The budget clock
+    /// starts when a driver is entered, not here.
+    pub fn with_time_limit(mut self, limit: Duration) -> Self {
+        self.time_limit = Some(limit);
+        self
+    }
+
+    /// Fallible constructor: [`Context::new`] plus [`Context::validate`].
+    pub fn try_new(preset: Preset, k: usize, epsilon: f64) -> Result<Self> {
+        let ctx = Context::new(preset, k, epsilon);
+        ctx.validate()?;
+        Ok(ctx)
+    }
+
+    /// Check the configuration invariants every driver assumes, as a
+    /// structured error instead of a panic deep inside the pipeline.
+    pub fn validate(&self) -> Result<()> {
+        if self.k < 2 {
+            crate::bail!("k must be at least 2, got {}", self.k);
+        }
+        if !self.epsilon.is_finite() || self.epsilon < 0.0 {
+            crate::bail!("epsilon must be finite and non-negative, got {}", self.epsilon);
+        }
+        if self.threads < 1 {
+            crate::bail!("thread count must be at least 1, got {}", self.threads);
+        }
+        if let Some(limit) = self.time_limit {
+            if limit.is_zero() {
+                crate::bail!("time limit must be positive");
+            }
+        }
+        Ok(())
+    }
+
+    /// Instance-level validation at partition entry: the configuration
+    /// must be sane *and* admit a partition of this instance.
+    pub fn validate_for_instance(&self, num_nodes: usize) -> Result<()> {
+        self.validate()?;
+        if self.k > num_nodes {
+            crate::bail!("k = {} exceeds the instance's {} nodes", self.k, num_nodes);
+        }
+        Ok(())
+    }
+
     /// Coarsening stops at this many nodes (`160·k`, paper §4.1).
     pub fn contraction_limit(&self) -> usize {
         self.contraction_limit_factor * self.k
@@ -236,6 +292,18 @@ mod tests {
         assert!(det.deterministic && det.use_fm, "SDet runs the deterministic FM");
         let s = Context::new(Preset::Speed, 8, 0.03);
         assert!(!s.use_fm);
+    }
+
+    #[test]
+    fn validation_catches_bad_configs() {
+        assert!(Context::try_new(Preset::Default, 1, 0.03).is_err(), "k < 2");
+        assert!(Context::try_new(Preset::Default, 4, -0.5).is_err(), "negative epsilon");
+        assert!(Context::try_new(Preset::Default, 4, f64::NAN).is_err(), "NaN epsilon");
+        let ok = Context::try_new(Preset::Default, 4, 0.03).unwrap();
+        assert!(ok.validate_for_instance(3).is_err(), "k > num_nodes");
+        assert!(ok.validate_for_instance(4).is_ok());
+        assert!(ok.clone().with_time_limit(Duration::ZERO).validate().is_err());
+        assert!(ok.with_time_limit(Duration::from_millis(50)).validate().is_ok());
     }
 
     #[test]

@@ -6,3 +6,4 @@ pub mod partitioner;
 pub mod report;
 
 pub use context::{Context, Preset};
+pub use report::DegradationReport;

@@ -6,11 +6,13 @@
 
 use crate::coarsening::{self, Hierarchy};
 use crate::coordinator::context::Context;
+use crate::coordinator::report::DegradationReport;
 use crate::hypergraph::Hypergraph;
 use crate::initial;
 use crate::partition::PartitionedHypergraph;
 use crate::preprocessing::{detect_communities, LouvainConfig};
 use crate::refinement::RefinementPipeline;
+use crate::util::error::Result;
 use crate::BlockId;
 use std::sync::Arc;
 
@@ -20,8 +22,33 @@ pub fn partition(hg: &Hypergraph, ctx: &Context) -> PartitionedHypergraph {
     partition_arc(Arc::new(hg.clone()), ctx)
 }
 
+/// [`partition_arc`] with the configuration validated against the
+/// instance first (k ≥ 2, k ≤ n, sane ε/threads/time limit) — the entry
+/// point for untrusted configurations such as the CLI's.
+pub fn try_partition_arc(hg: Arc<Hypergraph>, ctx: &Context) -> Result<PartitionedHypergraph> {
+    ctx.validate_for_instance(hg.num_nodes())?;
+    Ok(partition_arc(hg, ctx))
+}
+
+/// [`partition_arc`] plus a [`DegradationReport`] describing what the
+/// resilient runtime shed or repaired to meet `ctx.time_limit`. With no
+/// time limit and no injected faults the report is all-zero and the
+/// partition is bit-identical to `partition_arc`'s.
+pub fn partition_arc_with_report(
+    hg: Arc<Hypergraph>,
+    ctx: &Context,
+) -> (PartitionedHypergraph, DegradationReport) {
+    let phg = partition_arc(hg, ctx);
+    let report = DegradationReport::from_token(&ctx.cancel, ctx.time_limit);
+    (phg, report)
+}
+
 /// Full pipeline on a shared hypergraph.
 pub fn partition_arc(hg: Arc<Hypergraph>, ctx: &Context) -> PartitionedHypergraph {
+    // arm the shared deadline for this run (no-op when `time_limit` is
+    // unset: the token never reads the clock and every checkpoint stays
+    // inert, preserving bit-identical results)
+    ctx.cancel.arm(ctx.time_limit);
     if ctx.nlevel {
         return crate::nlevel::partition(hg, ctx);
     }

@@ -2,6 +2,9 @@
 
 use crate::metrics::Objective;
 use crate::partition::PartitionedHypergraph;
+use crate::util::cancel::{CancelToken, DegradationLevel};
+use std::sync::atomic::Ordering;
+use std::time::Duration;
 
 /// Final partitioning statistics.
 #[derive(Clone, Debug)]
@@ -20,6 +23,77 @@ pub struct PartitionReport {
     pub seconds: f64,
     /// (phase name, seconds)
     pub phases: Vec<(&'static str, f64)>,
+}
+
+/// What the resilient runtime did to meet a deadline (or recover from an
+/// isolated panic) during one partitioning run. Snapshot of the
+/// [`CancelToken`] counters; with no time limit set and no injected
+/// faults every field is zero/`Full` and `degraded()` is `false`.
+#[derive(Clone, Debug, Default)]
+pub struct DegradationReport {
+    /// the configured wall-clock budget, if any
+    pub time_limit: Option<Duration>,
+    /// whether the deadline fired (or was force-expired) during the run
+    pub expired: bool,
+    /// deepest degradation level the run reached
+    pub max_level: DegradationLevel,
+    /// flow refiner invocations shed by the ladder
+    pub flows_shed: usize,
+    /// FM invocations capped to a single round
+    pub fm_capped: usize,
+    /// FM invocations shed entirely
+    pub fm_shed: usize,
+    /// LP invocations shed (RebalanceOnly floor)
+    pub lp_shed: usize,
+    /// loops (coarsening passes, V-cycles, flow waves, batch refinement,
+    /// IP repetitions) that stopped early at a cancellation checkpoint
+    pub early_stops: usize,
+    /// isolated panics recovered by revalidate + repair
+    pub panics_recovered: usize,
+}
+
+impl DegradationReport {
+    /// Snapshot the token's counters after a run.
+    pub fn from_token(cancel: &CancelToken, time_limit: Option<Duration>) -> Self {
+        DegradationReport {
+            time_limit,
+            expired: cancel.is_expired(),
+            max_level: cancel.max_level(),
+            flows_shed: cancel.flows_shed.load(Ordering::Relaxed),
+            fm_capped: cancel.fm_capped.load(Ordering::Relaxed),
+            fm_shed: cancel.fm_shed.load(Ordering::Relaxed),
+            lp_shed: cancel.lp_shed.load(Ordering::Relaxed),
+            early_stops: cancel.early_stops.load(Ordering::Relaxed),
+            panics_recovered: cancel.panics_recovered.load(Ordering::Relaxed),
+        }
+    }
+
+    /// `true` if the run shed any work, stopped any loop early or
+    /// recovered from a panic — i.e. the result may differ from an
+    /// unconstrained run.
+    pub fn degraded(&self) -> bool {
+        self.max_level > DegradationLevel::Full
+            || self.flows_shed + self.fm_capped + self.fm_shed + self.lp_shed > 0
+            || self.early_stops > 0
+            || self.panics_recovered > 0
+    }
+
+    /// One-line summary (stderr-friendly; the CLI prints this when a run
+    /// actually degraded).
+    pub fn summary(&self) -> String {
+        format!(
+            "degradation: level={} expired={} shed(flows/fm/lp)={}/{}/{} \
+             fm_capped={} early_stops={} panics_recovered={}",
+            self.max_level.name(),
+            self.expired,
+            self.flows_shed,
+            self.fm_shed,
+            self.lp_shed,
+            self.fm_capped,
+            self.early_stops,
+            self.panics_recovered,
+        )
+    }
 }
 
 impl PartitionReport {

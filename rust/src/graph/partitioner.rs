@@ -25,6 +25,8 @@ pub fn partition_graph(g: &Graph, ctx: &Context) -> PartitionedGraph {
 
 pub fn partition_graph_arc(g: Arc<Graph>, ctx: &Context) -> PartitionedGraph {
     let timer = ctx.timer.clone();
+    // standalone driver: arm the deadline for this run (no-op when unset)
+    ctx.cancel.arm(ctx.time_limit);
     // ---- preprocessing: Louvain runs directly on the graph ----
     let communities = if ctx.use_community_detection {
         Some(timer.time("preprocessing", || {
@@ -55,6 +57,12 @@ pub fn partition_graph_arc(g: Arc<Graph>, ctx: &Context) -> PartitionedGraph {
     let mut comms = communities;
     timer.time("coarsening", || {
         while current.num_nodes() > limit {
+            // cancellation checkpoint at the pass boundary, as in the
+            // hypergraph coarsener: a shorter hierarchy stays usable
+            if ctx.cancel.is_expired() {
+                ctx.cancel.note_early_stop();
+                break;
+            }
             let n_before = current.num_nodes();
             let rep = cluster_graph(&current, ctx, comms.as_deref(), cmax, limit);
             let c = gcontract::contract(&current, &rep, ctx.threads);
@@ -209,6 +217,11 @@ pub fn lp_refine_graph(pg: &PartitionedGraph, ctx: &Context) -> Gain {
     let n = pg.graph().num_nodes();
     let mut total: Gain = 0;
     for round in 0..ctx.lp_rounds {
+        // cancellation checkpoint: finish only whole rounds
+        if ctx.cancel.is_expired() {
+            ctx.cancel.note_early_stop();
+            break;
+        }
         pg.reset_edge_sync();
         let mut order: Vec<u32> = (0..n as u32).collect();
         Rng::new(hash2(ctx.seed, 0x61 ^ round as u64)).shuffle(&mut order);
@@ -245,6 +258,11 @@ pub fn fm_refine_graph(pg: &PartitionedGraph, ctx: &Context) -> Gain {
     let n = pg.graph().num_nodes();
     let mut total: Gain = 0;
     for round in 0..ctx.fm_max_rounds {
+        // cancellation checkpoint: finish only whole rounds
+        if ctx.cancel.is_expired() {
+            ctx.cancel.note_early_stop();
+            break;
+        }
         pg.reset_edge_sync();
         let mut boundary: Vec<NodeId> = (0..n as NodeId).filter(|&u| pg.is_border(u)).collect();
         if boundary.is_empty() {

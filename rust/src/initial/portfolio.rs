@@ -75,9 +75,16 @@ pub fn best_bipartition(
             best = Some(refined);
         }
     }
-    for tech in Technique::all() {
+    'techniques: for tech in Technique::all() {
         let mut stats = RunningStats::default();
         for rep in 0..ctx.ip_max_repetitions {
+            // cancellation checkpoint, honored only once some candidate
+            // exists — the portfolio must always produce a bipartition,
+            // deadline or not
+            if best.is_some() && ctx.cancel.is_expired() {
+                ctx.cancel.note_early_stop();
+                break 'techniques;
+            }
             // 95%-rule retirement after the minimum repetitions
             if rep >= ctx.ip_min_repetitions {
                 if let Some(b) = &best {
@@ -87,9 +94,24 @@ pub fn best_bipartition(
                 }
             }
             let run_seed = rng.next_u64();
-            let parts = run_technique(tech, hg, max0, max1, run_seed);
-            // polish with sequential 2-way FM (paper §5)
-            let refined = polish(hg, parts, max0, max1, ctx, run_seed);
+            // candidate isolation: a failing technique run is dropped and
+            // the portfolio carries on with the other candidates
+            let candidate = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                crate::util::failpoints::fire(
+                    crate::util::failpoints::IP_CANDIDATE,
+                    &ctx.cancel,
+                );
+                let parts = run_technique(tech, hg, max0, max1, run_seed);
+                // polish with sequential 2-way FM (paper §5)
+                polish(hg, parts, max0, max1, ctx, run_seed)
+            }));
+            let refined = match candidate {
+                Ok(r) => r,
+                Err(_) => {
+                    ctx.cancel.note_panic_recovered();
+                    continue;
+                }
+            };
             stats.push(refined.objective as f64);
             let better = match &best {
                 None => true,

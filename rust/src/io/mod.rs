@@ -32,35 +32,71 @@ pub fn read_hmetis(path: &Path) -> Result<Hypergraph> {
     }
     let (m, n) = (head[0], head[1]);
     let fmt = head.get(2).copied().unwrap_or(0);
+    if !matches!(fmt, 0 | 1 | 10 | 11) {
+        bail!("bad hMetis fmt {fmt} (expected one of 0, 1, 10, 11): {header}");
+    }
+    if n == 0 {
+        bail!("hMetis header declares zero nodes: {header}");
+    }
     let has_net_w = fmt % 10 == 1;
     let has_node_w = fmt / 10 == 1;
 
     let mut nets = Vec::with_capacity(m);
     let mut net_w = Vec::with_capacity(m);
-    for _ in 0..m {
-        let line = lines.next().context("truncated hMetis net section")??;
+    for e in 0..m {
+        let line = lines
+            .next()
+            .with_context(|| format!("truncated hMetis net section: {e} of {m} nets"))??;
         let mut toks = line.split_whitespace();
         let w = if has_net_w {
-            toks.next().context("missing net weight")?.parse::<i64>()?
+            let w = toks.next().context("missing net weight")?.parse::<i64>()?;
+            if w <= 0 {
+                bail!("net {} has non-positive weight {w}", e + 1);
+            }
+            w
         } else {
             1
         };
+        // pin ids are 1-based in the file; 0 would wrap the u64 subtraction
+        // and anything > n would index out of bounds downstream
         let pins: Vec<NodeId> = toks
-            .map(|t| t.parse::<u64>().map(|v| (v - 1) as NodeId))
-            .collect::<Result<_, _>>()?;
+            .map(|t| {
+                let v = t.parse::<u64>()?;
+                if v == 0 || v > n as u64 {
+                    bail!("net {} has pin id {v} outside 1..={n}", e + 1);
+                }
+                Ok((v - 1) as NodeId)
+            })
+            .collect::<Result<_>>()?;
+        if pins.is_empty() {
+            bail!("net {} has no pins", e + 1);
+        }
         net_w.push(w);
         nets.push(pins);
     }
     let node_w = if has_node_w {
         let mut w = Vec::with_capacity(n);
-        for _ in 0..n {
-            let line = lines.next().context("truncated node-weight section")??;
-            w.push(line.trim().parse::<i64>()?);
+        for u in 0..n {
+            let line = lines.next().with_context(|| {
+                format!("truncated node-weight section: {u} of {n} weights")
+            })??;
+            let wt = line.trim().parse::<i64>()?;
+            if wt <= 0 {
+                bail!("node {} has non-positive weight {wt}", u + 1);
+            }
+            w.push(wt);
         }
         Some(w)
     } else {
         None
     };
+    if lines.next().is_some() {
+        bail!("trailing data after the declared {m} nets{}", if has_node_w {
+            " and node weights"
+        } else {
+            ""
+        });
+    }
     Ok(Hypergraph::from_nets(n, &nets, node_w, Some(net_w)))
 }
 
@@ -114,22 +150,39 @@ pub fn read_metis(path: &Path) -> Result<Graph> {
     }
     let n = head[0];
     let fmt = head.get(2).copied().unwrap_or(0);
+    if !matches!(fmt, 0 | 1 | 10 | 11) {
+        bail!("bad Metis fmt {fmt} (expected one of 0, 1, 10, 11): {header}");
+    }
     let has_edge_w = fmt % 10 == 1;
     let has_node_w = (fmt / 10) % 10 == 1;
 
     let mut adj: Vec<Vec<(NodeId, i64)>> = vec![Vec::new(); n];
     let mut node_w = vec![1i64; n];
     for u in 0..n {
-        let line = lines.next().context("truncated Metis adjacency")??;
+        let line = lines
+            .next()
+            .with_context(|| format!("truncated Metis adjacency: {u} of {n} lines"))??;
         let mut toks = line.split_whitespace();
         if has_node_w {
-            node_w[u] = toks.next().context("missing node weight")?.parse()?;
+            let wt: i64 = toks.next().context("missing node weight")?.parse()?;
+            if wt <= 0 {
+                bail!("node {} has non-positive weight {wt}", u + 1);
+            }
+            node_w[u] = wt;
         }
         loop {
             let Some(v_tok) = toks.next() else { break };
             let v: u64 = v_tok.parse()?;
+            // neighbor ids are 1-based; 0 would wrap the subtraction
+            if v == 0 || v > n as u64 {
+                bail!("node {} has neighbor id {v} outside 1..={n}", u + 1);
+            }
             let w = if has_edge_w {
-                toks.next().context("missing edge weight")?.parse::<i64>()?
+                let w = toks.next().context("missing edge weight")?.parse::<i64>()?;
+                if w <= 0 {
+                    bail!("edge ({}, {v}) has non-positive weight {w}", u + 1);
+                }
+                w
             } else {
                 1
             };

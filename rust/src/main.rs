@@ -2,14 +2,17 @@
 //!
 //! ```text
 //! mtkahypar --hgr instance.hgr -k 8 [-e 0.03] [--preset default]
-//!           [--threads 4] [--seed 0] [-o partition.out]
+//!           [--threads 4] [--seed 0] [--time-limit SECS] [-o partition.out]
 //! mtkahypar --graph instance.graph -k 8 ...            # Metis format
 //! mtkahypar --demo                                      # synthetic demo
 //! ```
+//!
+//! Exit codes: 0 success, 2 usage error, 3 input read/parse error,
+//! 4 invalid configuration, 5 imbalanced result, 6 output write error.
 
 use mtkahypar::coordinator::context::{Context, Preset};
 use mtkahypar::coordinator::partitioner;
-use mtkahypar::coordinator::report::PartitionReport;
+use mtkahypar::coordinator::report::{DegradationReport, PartitionReport};
 use mtkahypar::generators::{self, PlantedParams};
 use mtkahypar::graph::partitioner::partition_graph_arc;
 use mtkahypar::io;
@@ -17,7 +20,13 @@ use mtkahypar::metrics::Objective;
 use std::path::PathBuf;
 use std::process::exit;
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
+
+const EXIT_USAGE: i32 = 2;
+const EXIT_READ: i32 = 3;
+const EXIT_CONFIG: i32 = 4;
+const EXIT_IMBALANCED: i32 = 5;
+const EXIT_WRITE: i32 = 6;
 
 struct Args {
     hgr: Option<PathBuf>,
@@ -29,6 +38,7 @@ struct Args {
     objective: Objective,
     threads: usize,
     seed: u64,
+    time_limit: Option<Duration>,
     out: Option<PathBuf>,
 }
 
@@ -36,9 +46,9 @@ fn usage() -> ! {
     eprintln!(
         "usage: mtkahypar (--hgr FILE | --graph FILE | --demo) -k K [-e EPS] \
          [--preset speed|default|default-flows|quality|quality-flows|deterministic] \
-         [--objective km1|cut|soed] [--threads T] [--seed S] [-o OUT]"
+         [--objective km1|cut|soed] [--threads T] [--seed S] [--time-limit SECS] [-o OUT]"
     );
-    exit(2)
+    exit(EXIT_USAGE)
 }
 
 fn parse_args() -> Args {
@@ -52,6 +62,7 @@ fn parse_args() -> Args {
         objective: Objective::Km1,
         threads: 1,
         seed: 0,
+        time_limit: None,
         out: None,
     };
     let mut it = std::env::args().skip(1);
@@ -97,6 +108,14 @@ fn parse_args() -> Args {
                 args.threads = next("--threads").parse().unwrap_or_else(|_| usage())
             }
             "--seed" | "-s" => args.seed = next("--seed").parse().unwrap_or_else(|_| usage()),
+            "--time-limit" => {
+                let secs: f64 = next("--time-limit").parse().unwrap_or_else(|_| usage());
+                if !secs.is_finite() || secs <= 0.0 {
+                    eprintln!("--time-limit must be a positive number of seconds");
+                    usage()
+                }
+                args.time_limit = Some(Duration::from_secs_f64(secs));
+            }
             "-o" | "--output" => args.out = Some(PathBuf::from(next("-o"))),
             "-h" | "--help" => usage(),
             other => {
@@ -113,16 +132,25 @@ fn parse_args() -> Args {
 
 fn main() {
     let args = parse_args();
-    let ctx = Context::new(args.preset, args.k, args.epsilon)
+    let mut ctx = Context::new(args.preset, args.k, args.epsilon)
         .with_seed(args.seed)
         .with_threads(args.threads)
         .with_objective(args.objective);
+    ctx.time_limit = args.time_limit;
+    if let Err(e) = ctx.validate() {
+        eprintln!("invalid configuration: {e:#}");
+        exit(EXIT_CONFIG);
+    }
 
     if let Some(path) = &args.graph {
         let g = Arc::new(io::read_metis(path).unwrap_or_else(|e| {
             eprintln!("error reading {path:?}: {e:#}");
-            exit(1)
+            exit(EXIT_READ)
         }));
+        if let Err(e) = ctx.validate_for_instance(g.num_nodes()) {
+            eprintln!("invalid configuration: {e:#}");
+            exit(EXIT_CONFIG);
+        }
         eprintln!("graph: n={} m={}", g.num_nodes(), g.num_edges() / 2);
         let start = Instant::now();
         let pg = partition_graph_arc(g, &ctx);
@@ -135,7 +163,13 @@ fn main() {
             secs
         );
         if let Some(out) = &args.out {
-            io::write_partition(&pg.parts(), out).expect("write partition");
+            if let Err(e) = io::write_partition(&pg.parts(), out) {
+                eprintln!("error writing {out:?}: {e:#}");
+                exit(EXIT_WRITE);
+            }
+        }
+        if !pg.is_balanced() {
+            exit(EXIT_IMBALANCED);
         }
         return;
     }
@@ -150,9 +184,13 @@ fn main() {
         let path = args.hgr.as_ref().unwrap();
         Arc::new(io::read_hmetis(path).unwrap_or_else(|e| {
             eprintln!("error reading {path:?}: {e:#}");
-            exit(1)
+            exit(EXIT_READ)
         }))
     };
+    if let Err(e) = ctx.validate_for_instance(hg.num_nodes()) {
+        eprintln!("invalid configuration: {e:#}");
+        exit(EXIT_CONFIG);
+    }
     eprintln!("hypergraph: n={} m={} pins={}", hg.num_nodes(), hg.num_nets(), hg.num_pins());
     let start = Instant::now();
     let phg = partitioner::partition_arc(hg, &ctx);
@@ -165,10 +203,17 @@ fn main() {
         ctx.timer.snapshot(),
     );
     report.print();
+    let degradation = DegradationReport::from_token(&ctx.cancel, ctx.time_limit);
+    if degradation.degraded() {
+        eprintln!("{}", degradation.summary());
+    }
     if let Some(out) = &args.out {
-        io::write_partition(&phg.parts(), out).expect("write partition");
+        if let Err(e) = io::write_partition(&phg.parts(), out) {
+            eprintln!("error writing {out:?}: {e:#}");
+            exit(EXIT_WRITE);
+        }
     }
     if !phg.is_balanced() {
-        exit(1);
+        exit(EXIT_IMBALANCED);
     }
 }

@@ -94,6 +94,8 @@ pub fn partition_with_stats(
     ctx: &Context,
 ) -> (PartitionedHypergraph, NLevelStats) {
     let timer = ctx.timer.clone();
+    // standalone driver: arm the deadline for this run (no-op when unset)
+    ctx.cancel.arm(ctx.time_limit);
     let n = hg.num_nodes();
     let mut stats = NLevelStats::default();
 
@@ -128,6 +130,13 @@ pub fn partition_with_stats(
 
     timer.time("coarsening", || {
         while dynhg.num_active_nodes() > limit {
+            // cancellation checkpoint at the pass boundary (same
+            // discipline as the static coarsener): a shorter memento
+            // sequence just means fewer batches to uncoarsen
+            if ctx.cancel.is_expired() {
+                ctx.cancel.note_early_stop();
+                break;
+            }
             let n_before = dynhg.num_active_nodes();
             // per-node best partner = clustering pass (the paper's rating);
             // each cluster yields |C|−1 single contractions onto its root.
@@ -198,6 +207,7 @@ pub fn partition_with_stats(
     let b_max = ctx.nlevel_batch_size.max(1);
     let mut remaining = mementos.len();
     let mut touched: Vec<NodeId> = Vec::new();
+    let mut noted_expiry = false;
     while remaining > 0 {
         let batch_start = remaining.saturating_sub(b_max);
         let batch = &mementos[batch_start..remaining];
@@ -214,26 +224,59 @@ pub fn partition_with_stats(
         stats.batches += 1;
 
         // localized refinement around the uncontracted nodes (§9);
-        // ids are stable, so the batch pairs are the seeds directly
+        // ids are stable, so the batch pairs are the seeds directly.
+        // Deadline: the uncontractions above can never be shed — they
+        // restore the input structure — but the refinement around them
+        // can, so an expired budget degrades to plain uncoarsening
+        if ctx.cancel.is_expired() {
+            if !noted_expiry {
+                ctx.cancel.note_early_stop();
+                noted_expiry = true;
+            }
+            continue;
+        }
         touched.clear();
         touched.extend(batch.iter().flat_map(|m| [m.v, m.u]));
         touched.sort_unstable();
         touched.dedup();
-        if ctx.deterministic {
-            // thread-count invariance: the seeded deterministic FM
-            // replaces the racy localized LP/FM pair (its wishlist
-            // subsumes LP's positive single-node moves, and it expands
-            // around kept moves like the localized searches do). It runs
-            // regardless of `use_fm` — it doubles as the deterministic
-            // localized LP, and skipping it would leave batch boundaries
-            // entirely unrefined in LP-only deterministic configurations
-            timer.time("localized_fm", || pipeline.fm_with_seeds(&phg, ctx, Some(&touched)));
-        } else {
-            timer.time("localized_lp", || pipeline.lp_localized(&phg, ctx, &touched));
-            if ctx.use_fm {
-                timer.time("localized_fm", || {
-                    pipeline.fm_with_seeds(&phg, ctx, Some(&touched))
-                });
+        // panic isolation: the structure mutation already completed, so a
+        // batch whose localized refinement unwinds is repaired
+        // (revalidate, rebuild from Π if needed, rebalance) and
+        // uncoarsening continues with the next batch
+        let refined = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            crate::util::failpoints::fire(
+                crate::util::failpoints::BATCH_UNCONTRACTION,
+                &ctx.cancel,
+            );
+            if ctx.deterministic {
+                // thread-count invariance: the seeded deterministic FM
+                // replaces the racy localized LP/FM pair (its wishlist
+                // subsumes LP's positive single-node moves, and it expands
+                // around kept moves like the localized searches do). It
+                // runs regardless of `use_fm` — it doubles as the
+                // deterministic localized LP, and skipping it would leave
+                // batch boundaries entirely unrefined in LP-only
+                // deterministic configurations
+                timer.time("localized_fm", || pipeline.fm_with_seeds(&phg, ctx, Some(&touched)));
+            } else {
+                timer.time("localized_lp", || pipeline.lp_localized(&phg, ctx, &touched));
+                if ctx.use_fm {
+                    timer.time("localized_fm", || {
+                        pipeline.fm_with_seeds(&phg, ctx, Some(&touched));
+                    });
+                }
+            }
+        }));
+        let worker_panicked = pipeline.workspace_mut().take_worker_panic();
+        if refined.is_err() || worker_panicked {
+            ctx.cancel.note_panic_recovered();
+            let ws = pipeline.workspace_mut();
+            ws.reset_owner(ws.owner.len());
+            if phg.validate().is_err() {
+                phg.rebuild_from_parts(ctx.threads);
+            }
+            if !phg.is_balanced() {
+                crate::refinement::rebalance::rebalance(&phg, ctx);
             }
         }
     }

@@ -600,6 +600,14 @@ impl<H: HypergraphOps> PartitionedHypergraph<H> {
         Ok(())
     }
 
+    /// Full Π/Φ/Λ/block-weight consistency check as a structured error —
+    /// the revalidation contract of the panic-recovery path: after a
+    /// worker is isolated, the pipeline calls this and repairs via
+    /// [`Self::rebuild_from_parts`] when it fails.
+    pub fn validate(&self) -> crate::util::error::Result<()> {
+        self.verify_consistency().map_err(crate::util::error::Error::msg)
+    }
+
     // ------------------------------------------------- incremental repair
 
     /// Re-assign the partition to `parts` by *delta repair*: only nodes

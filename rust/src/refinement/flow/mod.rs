@@ -45,6 +45,10 @@ pub struct FlowWorkspace {
     sched_current: VecDeque<u32>,
     sched_next: Vec<u32>,
     sched_queued: Vec<bool>,
+    /// set when a flow worker panicked during the last call (the worker
+    /// itself is isolated; the pipeline consumes this via
+    /// [`FlowWorkspace::take_worker_panic`] to poison + repair)
+    worker_panicked: bool,
 }
 
 impl FlowWorkspace {
@@ -56,7 +60,13 @@ impl FlowWorkspace {
             sched_current: VecDeque::new(),
             sched_next: Vec::new(),
             sched_queued: Vec::new(),
+            worker_panicked: false,
         }
+    }
+
+    /// Read and reset the worker-panic verdict of the last flow call.
+    pub fn take_worker_panic(&mut self) -> bool {
+        std::mem::take(&mut self.worker_panicked)
     }
 
     pub fn k(&self) -> usize {
@@ -166,6 +176,7 @@ pub fn flow_refine_with_workspace(
 
     let total_gain = AtomicI64::new(0);
     let apply_lock = Mutex::new(());
+    let worker_panic = std::sync::atomic::AtomicBool::new(false);
     let sched = SchedulerSync {
         state: Mutex::new(Scheduler {
             quotient: &mut fw.quotient,
@@ -179,31 +190,53 @@ pub fn flow_refine_with_workspace(
             deterministic,
         }),
         idle: Condvar::new(),
+        cancel: &ctx.cancel,
     };
     std::thread::scope(|s| {
         for sc in fw.scratch.iter_mut().take(workers) {
             let (sched, apply_lock, total_gain) = (&sched, &apply_lock, &total_gain);
-            s.spawn(move || loop {
-                match sched.claim(phg, &mut sc.pair_nets) {
-                    Claim::Done => break,
-                    Claim::Pair(b1, b2) => {
-                        // if refine_pair unwinds, the guard releases the
-                        // in-flight slot so peers blocked in claim() can
-                        // finish and the scope propagates the panic
-                        let mut guard = InFlightGuard { sched, armed: true };
-                        let delta = with_policy!(ctx.objective, P => {
-                            refine_pair::<P>(phg, ctx, b1, b2, sc, apply_lock)
-                        });
-                        if delta > 0 {
-                            total_gain.fetch_add(delta, Ordering::Relaxed);
+            let worker_panic = &worker_panic;
+            s.spawn(move || {
+                // panic isolation: a dying pair refinement must not abort
+                // the process; the guard below releases the in-flight slot
+                // during the unwind so peers blocked in claim() finish,
+                // and the flag routes the failure into the pipeline's
+                // poison/repair path
+                let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| loop {
+                    match sched.claim(phg, &mut sc.pair_nets) {
+                        Claim::Done => break,
+                        Claim::Pair(b1, b2) => {
+                            let mut guard = InFlightGuard { sched, armed: true };
+                            let delta = with_policy!(ctx.objective, P => {
+                                refine_pair::<P>(phg, ctx, b1, b2, sc, apply_lock)
+                            });
+                            // wave-tail injection site: the guard is still
+                            // armed, so an injected panic exercises the
+                            // in-flight release path
+                            crate::util::failpoints::fire(
+                                crate::util::failpoints::FLOW_WAVE_TAIL,
+                                &ctx.cancel,
+                            );
+                            if delta > 0 {
+                                total_gain.fetch_add(delta, Ordering::Relaxed);
+                            }
+                            guard.armed = false;
+                            sched.report(phg, b1, b2, &sc.applied, delta);
                         }
-                        guard.armed = false;
-                        sched.report(phg, b1, b2, &sc.applied, delta);
                     }
+                }));
+                if caught.is_err() {
+                    worker_panic.store(true, Ordering::Relaxed);
                 }
             });
         }
     });
+    if worker_panic.load(Ordering::Relaxed) {
+        fw.worker_panicked = true;
+    }
+    if ctx.cancel.is_expired() {
+        ctx.cancel.note_early_stop();
+    }
     total_gain.load(Ordering::Relaxed)
 }
 
@@ -238,12 +271,31 @@ struct Scheduler<'a> {
 struct SchedulerSync<'a> {
     state: Mutex<Scheduler<'a>>,
     idle: Condvar,
+    /// deadline token polled at wave/claim boundaries
+    cancel: &'a crate::util::CancelToken,
+}
+
+// the scheduler state is consistent at every lock release, even when the
+// releasing worker is mid-unwind (the failure is handled by the pipeline's
+// repair path) — never let mutex poisoning cascade into further panics
+fn relock<T>(r: Result<T, std::sync::PoisonError<T>>) -> T {
+    r.unwrap_or_else(|e| e.into_inner())
 }
 
 impl SchedulerSync<'_> {
     fn claim(&self, phg: &PartitionedHypergraph, out: &mut Vec<crate::EdgeId>) -> Claim {
-        let mut g = self.state.lock().unwrap();
+        let mut g = relock(self.state.lock());
         loop {
+            // cancellation checkpoint: stop handing out pairs on expiry;
+            // in-flight peers finish their pair and report normally
+            if self.cancel.is_expired() {
+                if g.in_flight == 0 {
+                    self.idle.notify_all();
+                    return Claim::Done;
+                }
+                g = relock(self.idle.wait(g));
+                continue;
+            }
             if let Some(p) = g.current.pop_front() {
                 let p = p as usize;
                 g.queued[p] = false;
@@ -270,7 +322,7 @@ impl SchedulerSync<'_> {
                 state.current.extend(state.next.drain(..));
                 continue;
             }
-            g = self.idle.wait(g).unwrap();
+            g = relock(self.idle.wait(g));
         }
     }
 
@@ -283,7 +335,7 @@ impl SchedulerSync<'_> {
         delta: Gain,
     ) {
         {
-            let mut g = self.state.lock().unwrap();
+            let mut g = relock(self.state.lock());
             let state = &mut *g;
             state.in_flight -= 1;
             if delta > 0 && !applied.is_empty() {
@@ -324,9 +376,7 @@ struct InFlightGuard<'s, 'a> {
 impl Drop for InFlightGuard<'_, '_> {
     fn drop(&mut self) {
         if self.armed {
-            if let Ok(mut g) = self.sched.state.lock() {
-                g.in_flight -= 1;
-            }
+            relock(self.sched.state.lock()).in_flight -= 1;
             self.sched.idle.notify_all();
         }
     }

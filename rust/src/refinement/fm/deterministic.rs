@@ -137,6 +137,13 @@ fn fm_refine_deterministic_with_workspace_p<P: GainPolicy, H: HypergraphOps>(
 
     let mut stats = FmStats::default();
     for round in 0..ctx.fm_max_rounds {
+        // cancellation checkpoint at the synchronous round boundary: only
+        // whole rounds are ever observable, so stopping here keeps the
+        // partition at a consistent §11 state
+        if ctx.cancel.is_expired() {
+            ctx.cancel.note_early_stop();
+            break;
+        }
         // ---- candidates of this round (frozen-state border nodes) ----
         det.members.clear();
         match seed_set {

@@ -121,6 +121,11 @@ fn fm_refine_with_workspace_p<P: GainPolicy, H: HypergraphOps>(
     let mut stats = FmStats::default();
 
     for round in 0..ctx.fm_max_rounds {
+        // cancellation checkpoint: finish only whole rounds
+        if ctx.cancel.is_expired() {
+            ctx.cancel.note_early_stop();
+            break;
+        }
         // --- seed pool: boundary nodes (of the seed set), random order ---
         ws.boundary.clear();
         match seed_set {
@@ -145,6 +150,7 @@ fn fm_refine_with_workspace_p<P: GainPolicy, H: HypergraphOps>(
         let batch = ctx.fm_seeds_per_poll.max(1);
         let cursor = AtomicUsize::new(0);
         let global_moves: Mutex<Vec<Move>> = Mutex::new(Vec::new());
+        let worker_panic = AtomicBool::new(false);
         {
             // field-disjoint borrows of the workspace: the scratch slots go
             // to the worker threads, the gain table / owner bits / seed
@@ -154,26 +160,62 @@ fn fm_refine_with_workspace_p<P: GainPolicy, H: HypergraphOps>(
             let boundary = &ws.boundary[..];
             let cursor = &cursor;
             let global_moves = &global_moves;
+            let worker_panic = &worker_panic;
             std::thread::scope(|s| {
                 for sc in ws.scratch.iter_mut().take(threads) {
                     s.spawn(move || {
-                        let mut search =
-                            LocalSearch::<P, H> { phg, gt, ctx, sc, _policy: PhantomData };
-                        loop {
-                            let start = cursor.fetch_add(batch, Ordering::Relaxed);
-                            if start >= boundary.len() {
-                                break;
-                            }
-                            let end = (start + batch).min(boundary.len());
-                            search.run(&boundary[start..end], owner, global_moves);
+                        // panic isolation: searches publish whole move
+                        // sequences, so containing an unwind here leaves
+                        // the global move log valid; the flag routes the
+                        // failure into the pipeline's poison/repair path
+                        // instead of aborting the process
+                        let caught = std::panic::catch_unwind(
+                            std::panic::AssertUnwindSafe(|| {
+                                let mut search = LocalSearch::<P, H> {
+                                    phg,
+                                    gt,
+                                    ctx,
+                                    sc,
+                                    _policy: PhantomData,
+                                };
+                                loop {
+                                    let start = cursor.fetch_add(batch, Ordering::Relaxed);
+                                    if start >= boundary.len() {
+                                        break;
+                                    }
+                                    // cancellation checkpoint between seed
+                                    // batches: published work stays applied
+                                    if ctx.cancel.is_expired() {
+                                        break;
+                                    }
+                                    crate::util::failpoints::fire(
+                                        crate::util::failpoints::GAIN_TABLE_UPDATE,
+                                        &ctx.cancel,
+                                    );
+                                    let end = (start + batch).min(boundary.len());
+                                    search.run(&boundary[start..end], owner, global_moves);
+                                }
+                            }),
+                        );
+                        if caught.is_err() {
+                            worker_panic.store(true, Ordering::Relaxed);
                         }
                     });
                 }
             });
         }
 
+        if worker_panic.load(Ordering::Relaxed) {
+            // a worker died: its published moves are whole and consistent,
+            // but the round's log may be incomplete — skip the §6.3 revert
+            // bookkeeping and surface the failure so the pipeline poisons
+            // this refiner and runs the validate/repair path
+            ws.worker_panic = true;
+            break;
+        }
+
         // --- global recalculation + best-prefix revert (§6.3) ---
-        let moves = global_moves.into_inner().unwrap();
+        let moves = global_moves.into_inner().unwrap_or_else(|e| e.into_inner());
         if moves.is_empty() {
             break;
         }

@@ -59,6 +59,11 @@ fn lp_refine_with_scratch_p<P: GainPolicy, H: HypergraphOps>(
     let n = phg.hypergraph().num_nodes();
     let total = AtomicI64::new(0);
     for round in 0..ctx.lp_rounds {
+        // cancellation checkpoint: finish only whole rounds
+        if ctx.cancel.is_expired() {
+            ctx.cancel.note_early_stop();
+            break;
+        }
         let order = &mut scratch.order;
         order.clear();
         order.extend(0..n as u32);
@@ -136,6 +141,11 @@ fn lp_refine_localized_with_scratch_p<P: GainPolicy, H: HypergraphOps>(
     scratch.frontier.clear();
     scratch.frontier.extend_from_slice(nodes);
     for _ in 0..ctx.lp_rounds.max(1) {
+        // cancellation checkpoint: finish only whole frontier rounds
+        if ctx.cancel.is_expired() {
+            ctx.cancel.note_early_stop();
+            break;
+        }
         scratch.next.clear();
         let frontier = &scratch.frontier;
         let gained = AtomicI64::new(0);
@@ -232,6 +242,14 @@ fn lp_refine_deterministic_with_scratch_p<P: GainPolicy, H: HypergraphOps>(
     let sub_rounds = ctx.det_sub_rounds.max(1) as u64;
     let mut total: Gain = 0;
     for round in 0..ctx.lp_rounds {
+        // cancellation checkpoint at the synchronous round boundary: a
+        // partially executed round is never observable (§11 discipline —
+        // when the deadline fires mid-run determinism is forfeited anyway,
+        // but the partition is always left at a consistent round boundary)
+        if ctx.cancel.is_expired() {
+            ctx.cancel.note_early_stop();
+            break;
+        }
         let mut round_gain: Gain = 0;
         for s in 0..sub_rounds {
             // phase 1: calculate moves (frozen state); membership comes

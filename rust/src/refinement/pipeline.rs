@@ -91,8 +91,9 @@ use crate::hypergraph::{Hypergraph, HypergraphOps};
 use crate::partition::{GainTable, Move, PartitionPool, PartitionedHypergraph};
 use crate::refinement::fm::{DeltaPartition, FmStats};
 use crate::refinement::{flow, fm, lp, rebalance};
-use crate::util::Bitset;
+use crate::util::{Bitset, DegradationLevel};
 use crate::{BlockId, Gain, NodeId};
+use std::panic::AssertUnwindSafe;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 
@@ -152,6 +153,10 @@ pub struct Workspace {
     /// flow refiner can honor the §8.1 cost model (flows only on the
     /// finest levels)
     pub(crate) level_distance: usize,
+    /// set by FM/flow invocations whose scoped worker threads panicked
+    /// (the worker itself is isolated by `catch_unwind`); the pipeline
+    /// consumes it to poison the refiner and trigger the repair path
+    pub(crate) worker_panic: bool,
     gain_table_inits: usize,
     gain_table_allocs: usize,
 }
@@ -173,9 +178,15 @@ impl Workspace {
             pool: PartitionPool::new(k),
             flow: flow::FlowWorkspace::new(k),
             level_distance: 0,
+            worker_panic: false,
             gain_table_inits: 0,
             gain_table_allocs: 1,
         }
+    }
+
+    /// Read and reset the worker-panic flag (one pipeline stage's verdict).
+    pub(crate) fn take_worker_panic(&mut self) -> bool {
+        std::mem::take(&mut self.worker_panic)
     }
 
     /// Reserve the partition pool for the finest-level hypergraph so the
@@ -283,6 +294,28 @@ pub trait Refiner: Send {
     /// Refine `phg` in place using the shared workspace.
     fn refine(&mut self, phg: &PartitionedHypergraph, ws: &mut Workspace, ctx: &Context)
         -> Gain;
+    /// Where the degradation ladder sheds this refiner under deadline
+    /// pressure. `Never` (the default) marks feasibility stages that must
+    /// always run.
+    fn shed_class(&self) -> ShedClass {
+        ShedClass::Never
+    }
+}
+
+/// Degradation-ladder classification of a pipeline stage: at which
+/// [`DegradationLevel`] the stage is skipped (quality order — flows go
+/// first, the rebalancer never goes).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ShedClass {
+    /// feasibility stage, runs at every pressure level
+    Never,
+    /// shed at [`DegradationLevel::SkipFlows`]
+    Flows,
+    /// capped at [`DegradationLevel::CapFm`], shed at
+    /// [`DegradationLevel::LpOnly`]
+    Fm,
+    /// shed at [`DegradationLevel::RebalanceOnly`]
+    Lp,
 }
 
 /// Label propagation (parallel or deterministic-synchronous, paper §6.1/§11).
@@ -299,6 +332,10 @@ impl Refiner for LpRefiner {
         } else {
             lp::lp_refine_with_scratch(phg, ctx, &mut ws.lp)
         }
+    }
+
+    fn shed_class(&self) -> ShedClass {
+        ShedClass::Lp
     }
 }
 
@@ -322,6 +359,10 @@ impl Refiner for FmRefiner {
         };
         stats.improvement
     }
+
+    fn shed_class(&self) -> ShedClass {
+        ShedClass::Fm
+    }
 }
 
 /// Parallel flow-based refinement (paper §8) on the workspace's pooled
@@ -339,7 +380,15 @@ impl Refiner for FlowRefiner {
         if ws.level_distance >= ctx.flow_finest_levels.max(1) {
             return 0;
         }
-        flow::flow_refine_with_workspace(phg, ctx, &mut ws.flow)
+        let gain = flow::flow_refine_with_workspace(phg, ctx, &mut ws.flow);
+        if ws.flow.take_worker_panic() {
+            ws.worker_panic = true;
+        }
+        gain
+    }
+
+    fn shed_class(&self) -> ShedClass {
+        ShedClass::Flows
     }
 }
 
@@ -369,6 +418,10 @@ impl Refiner for RebalanceRefiner {
 pub struct RefinementPipeline {
     ws: Workspace,
     stack: Vec<Box<dyn Refiner>>,
+    /// per-stack-slot poison marks: a refiner whose worker panicked is
+    /// taken out of rotation for the rest of the run (the repair path
+    /// restores partition consistency; the refiner's own state is suspect)
+    poisoned: Vec<bool>,
 }
 
 impl RefinementPipeline {
@@ -389,7 +442,12 @@ impl RefinementPipeline {
         // … and guarantee feasibility on exit (flows/FM preserve balance,
         // but tight ε inputs may still need the fallback)
         stack.push(Box::new(RebalanceRefiner));
-        RefinementPipeline { ws: Workspace::new(ctx.k, ctx.threads, node_capacity), stack }
+        let poisoned = vec![false; stack.len()];
+        RefinementPipeline {
+            ws: Workspace::new(ctx.k, ctx.threads, node_capacity),
+            stack,
+            poisoned,
+        }
     }
 
     /// Build the pipeline for an uncoarsening sequence whose finest level
@@ -531,10 +589,88 @@ impl RefinementPipeline {
         self.ws.level_distance = distance;
         let timer = ctx.timer.clone();
         let mut total: Gain = 0;
-        for r in self.stack.iter_mut() {
-            total += timer.time(r.name(), || r.refine(phg, &mut self.ws, ctx));
+        for (slot, r) in self.stack.iter_mut().enumerate() {
+            if self.poisoned[slot] {
+                continue;
+            }
+            // graceful degradation: shed quality stages as the budget runs
+            // out, in quality order; the rebalancer (ShedClass::Never)
+            // always runs so the result stays feasible. With no deadline
+            // armed `level()` is constant Full and nothing here triggers.
+            let level = ctx.cancel.level();
+            let class = r.shed_class();
+            let shed = match class {
+                ShedClass::Never => false,
+                ShedClass::Flows => level >= DegradationLevel::SkipFlows,
+                ShedClass::Fm => level >= DegradationLevel::LpOnly,
+                ShedClass::Lp => level >= DegradationLevel::RebalanceOnly,
+            };
+            if shed {
+                match class {
+                    ShedClass::Flows => &ctx.cancel.flows_shed,
+                    ShedClass::Fm => &ctx.cancel.fm_shed,
+                    _ => &ctx.cancel.lp_shed,
+                }
+                .fetch_add(1, Ordering::Relaxed);
+                continue;
+            }
+            let capped;
+            let rctx = if class == ShedClass::Fm
+                && level >= DegradationLevel::CapFm
+                && ctx.fm_max_rounds > 1
+            {
+                ctx.cancel.fm_capped.fetch_add(1, Ordering::Relaxed);
+                let mut c = ctx.clone();
+                c.fm_max_rounds = 1;
+                capped = c;
+                &capped
+            } else {
+                ctx
+            };
+            // panic isolation: a refiner that unwinds (or whose scoped
+            // workers did — see Workspace::worker_panic) is poisoned and
+            // the shared partition state is revalidated and repaired
+            // before the stack continues with the remaining refiners
+            let ws = &mut self.ws;
+            let outcome = std::panic::catch_unwind(AssertUnwindSafe(|| {
+                timer.time(r.name(), || r.refine(phg, ws, rctx))
+            }));
+            let worker_panicked = self.ws.take_worker_panic();
+            match outcome {
+                Ok(gain) if !worker_panicked => total += gain,
+                _ => {
+                    self.poisoned[slot] = true;
+                    Self::repair_after_panic(&mut self.ws, phg, ctx);
+                }
+            }
         }
         total
+    }
+
+    /// Post-panic recovery: clear FM ownership bits a dead worker may
+    /// have leaked, revalidate the shared Π/Φ/Λ state and rebuild it from
+    /// Π if the isolated worker left it inconsistent, then restore
+    /// balance — the partition is fully usable by the remaining refiners
+    /// afterwards.
+    fn repair_after_panic(ws: &mut Workspace, phg: &PartitionedHypergraph, ctx: &Context) {
+        ctx.cancel.note_panic_recovered();
+        ws.reset_owner(ws.owner.len());
+        if phg.validate().is_err() {
+            phg.rebuild_from_parts(ctx.threads);
+        }
+        if !phg.is_balanced() {
+            rebalance::rebalance(phg, ctx);
+        }
+    }
+
+    /// Names of refiners poisoned by an isolated panic (diagnostics).
+    pub fn poisoned_refiners(&self) -> Vec<&'static str> {
+        self.stack
+            .iter()
+            .zip(&self.poisoned)
+            .filter(|(_, &p)| p)
+            .map(|(r, _)| r.name())
+            .collect()
     }
 
     /// Localized FM restricted to `seeds` (n-level batch refinement,

@@ -26,6 +26,8 @@ use crate::{BlockId, NodeWeight};
 /// allocation of Π/Φ/Λ/lock storage.
 pub fn vcycle(phg: PartitionedHypergraph, ctx: &Context, cycles: usize) -> PartitionedHypergraph {
     let hg = phg.hypergraph_arc();
+    // standalone driver: arm the deadline for this run
+    ctx.cancel.arm(ctx.time_limit);
     let mut pipeline = RefinementPipeline::new_for(ctx, &hg);
     let mut current = phg;
     // best assignment seen so far (values only; the memory stays pooled),
@@ -38,6 +40,12 @@ pub fn vcycle(phg: PartitionedHypergraph, ctx: &Context, cycles: usize) -> Parti
     let mut accepted_any = false;
     let mut rejected_last = false;
     for _ in 0..cycles {
+        // cancellation checkpoint: whole cycles only — `best_parts` always
+        // holds the best accepted assignment, so stopping here returns it
+        if ctx.cancel.is_expired() {
+            ctx.cancel.note_early_stop();
+            break;
+        }
         let before = current.objective_value(ctx.objective);
         // at the loop top `best_parts` equals the current assignment
         // (initially by construction, afterwards by the acceptance

@@ -1,0 +1,259 @@
+//! Cooperative cancellation and the graceful-degradation ladder.
+//!
+//! A [`CancelToken`] is shared (via `Arc` on the
+//! [`Context`](crate::coordinator::context::Context)) between the driver
+//! and every component it runs. Drivers *arm* the token with the
+//! configured wall-clock budget at entry; components poll it at their
+//! natural checkpoints — LP/FM round boundaries, flow wave boundaries,
+//! coarsening passes, IP repetitions, n-level batches — and stop cleanly
+//! when it reports expiry. Nothing is ever interrupted mid-operation, so
+//! the partition stays consistent at every checkpoint.
+//!
+//! Between "full stack" and "expired" the token exposes a pressure
+//! [`DegradationLevel`] derived from the fraction of the budget already
+//! spent. The refinement pipeline sheds work in quality order as pressure
+//! rises (skip flows → cap FM rounds → LP only → rebalance only), so a
+//! run under deadline always ends with a balanced partition rather than
+//! a timeout.
+//!
+//! **Invariance:** an unarmed token (no `time_limit` configured) never
+//! reads the clock — `is_expired()` is a pair of relaxed atomic loads and
+//! `level()` is constant [`DegradationLevel::Full`]. With no deadline the
+//! whole resilience layer is a no-op and results are bit-identical to a
+//! build without it (the §11 determinism guarantees are untouched).
+
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicU8, AtomicUsize, Ordering};
+use std::time::{Duration, Instant};
+
+/// How much work the pipeline may shed under deadline pressure, in
+/// quality order. Higher levels shed strictly more.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum DegradationLevel {
+    /// no pressure: run the full refiner stack
+    #[default]
+    Full = 0,
+    /// ≥ 50% of the budget spent: skip flow refinement
+    SkipFlows = 1,
+    /// ≥ 70%: additionally cap FM at one round per level
+    CapFm = 2,
+    /// ≥ 85%: LP + rebalance only
+    LpOnly = 3,
+    /// expired (or forced): rebalance only — feasibility, not quality
+    RebalanceOnly = 4,
+}
+
+impl DegradationLevel {
+    fn from_u8(v: u8) -> Self {
+        match v {
+            0 => DegradationLevel::Full,
+            1 => DegradationLevel::SkipFlows,
+            2 => DegradationLevel::CapFm,
+            3 => DegradationLevel::LpOnly,
+            _ => DegradationLevel::RebalanceOnly,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            DegradationLevel::Full => "full",
+            DegradationLevel::SkipFlows => "skip-flows",
+            DegradationLevel::CapFm => "cap-fm",
+            DegradationLevel::LpOnly => "lp-only",
+            DegradationLevel::RebalanceOnly => "rebalance-only",
+        }
+    }
+}
+
+/// Shared deadline token. All timestamps are nanoseconds relative to the
+/// token's creation instant so they fit in atomics; `u64::MAX` means
+/// "unarmed". Cheap enough to poll at every round/wave/batch boundary.
+pub struct CancelToken {
+    origin: Instant,
+    /// ns offset at which the current run was armed (`MAX` = unarmed)
+    armed_ns: AtomicU64,
+    /// ns offset of the deadline (`MAX` = none)
+    deadline_ns: AtomicU64,
+    /// explicit cancellation / forced expiry (failpoints, callers)
+    forced: AtomicBool,
+    /// high-water mark of observed degradation levels
+    max_level: AtomicU8,
+    // ---- shed accounting for the DegradationReport ----
+    pub(crate) flows_shed: AtomicUsize,
+    pub(crate) fm_capped: AtomicUsize,
+    pub(crate) fm_shed: AtomicUsize,
+    pub(crate) lp_shed: AtomicUsize,
+    pub(crate) early_stops: AtomicUsize,
+    pub(crate) panics_recovered: AtomicUsize,
+}
+
+impl Default for CancelToken {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl CancelToken {
+    pub fn new() -> Self {
+        CancelToken {
+            origin: Instant::now(),
+            armed_ns: AtomicU64::new(u64::MAX),
+            deadline_ns: AtomicU64::new(u64::MAX),
+            forced: AtomicBool::new(false),
+            max_level: AtomicU8::new(0),
+            flows_shed: AtomicUsize::new(0),
+            fm_capped: AtomicUsize::new(0),
+            fm_shed: AtomicUsize::new(0),
+            lp_shed: AtomicUsize::new(0),
+            early_stops: AtomicUsize::new(0),
+            panics_recovered: AtomicUsize::new(0),
+        }
+    }
+
+    #[inline]
+    fn now_ns(&self) -> u64 {
+        self.origin.elapsed().as_nanos().min(u64::MAX as u128 - 1) as u64
+    }
+
+    /// Arm (or disarm, with `None`) the token for one driver run. Called
+    /// by every driver at entry; re-arming restarts the budget clock and
+    /// clears a previous run's forced expiry (the shed counters are
+    /// cumulative for the token's lifetime).
+    pub fn arm(&self, limit: Option<Duration>) {
+        self.forced.store(false, Ordering::Relaxed);
+        match limit {
+            Some(d) => {
+                let now = self.now_ns();
+                let dl = now.saturating_add(d.as_nanos().min(u64::MAX as u128 - 1) as u64);
+                self.armed_ns.store(now, Ordering::Relaxed);
+                self.deadline_ns.store(dl, Ordering::Relaxed);
+            }
+            None => {
+                self.armed_ns.store(u64::MAX, Ordering::Relaxed);
+                self.deadline_ns.store(u64::MAX, Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// Force immediate expiry (explicit cancellation; also the failpoint
+    /// `Expire` action).
+    pub fn force_expire(&self) {
+        self.forced.store(true, Ordering::Relaxed);
+        self.max_level.fetch_max(DegradationLevel::RebalanceOnly as u8, Ordering::Relaxed);
+    }
+
+    /// Has the deadline passed (or expiry been forced)? Reads the clock
+    /// only when a deadline is armed.
+    #[inline]
+    pub fn is_expired(&self) -> bool {
+        if self.forced.load(Ordering::Relaxed) {
+            return true;
+        }
+        let dl = self.deadline_ns.load(Ordering::Relaxed);
+        dl != u64::MAX && self.now_ns() >= dl
+    }
+
+    /// Current pressure level. Constant `Full` while unarmed.
+    pub fn level(&self) -> DegradationLevel {
+        if self.forced.load(Ordering::Relaxed) {
+            return DegradationLevel::RebalanceOnly;
+        }
+        let armed = self.armed_ns.load(Ordering::Relaxed);
+        let dl = self.deadline_ns.load(Ordering::Relaxed);
+        if armed == u64::MAX || dl == u64::MAX {
+            return DegradationLevel::Full;
+        }
+        let now = self.now_ns();
+        let level = if now >= dl {
+            DegradationLevel::RebalanceOnly
+        } else {
+            let spent = (now - armed) as f64 / (dl - armed).max(1) as f64;
+            if spent >= 0.85 {
+                DegradationLevel::LpOnly
+            } else if spent >= 0.70 {
+                DegradationLevel::CapFm
+            } else if spent >= 0.50 {
+                DegradationLevel::SkipFlows
+            } else {
+                DegradationLevel::Full
+            }
+        };
+        self.max_level.fetch_max(level as u8, Ordering::Relaxed);
+        level
+    }
+
+    /// Highest pressure level observed so far (for reporting).
+    pub fn max_level(&self) -> DegradationLevel {
+        DegradationLevel::from_u8(self.max_level.load(Ordering::Relaxed))
+    }
+
+    /// Record that a component stopped early at a cancellation checkpoint.
+    #[inline]
+    pub fn note_early_stop(&self) {
+        self.early_stops.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record a worker/refiner panic that was isolated and repaired.
+    #[inline]
+    pub fn note_panic_recovered(&self) {
+        self.panics_recovered.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unarmed_token_is_inert() {
+        let t = CancelToken::new();
+        assert!(!t.is_expired());
+        assert_eq!(t.level(), DegradationLevel::Full);
+        assert_eq!(t.max_level(), DegradationLevel::Full);
+    }
+
+    #[test]
+    fn zero_budget_expires_immediately() {
+        let t = CancelToken::new();
+        t.arm(Some(Duration::ZERO));
+        assert!(t.is_expired());
+        assert_eq!(t.level(), DegradationLevel::RebalanceOnly);
+    }
+
+    #[test]
+    fn force_expire_overrides_everything() {
+        let t = CancelToken::new();
+        t.arm(Some(Duration::from_secs(3600)));
+        assert!(!t.is_expired());
+        t.force_expire();
+        assert!(t.is_expired());
+        assert_eq!(t.level(), DegradationLevel::RebalanceOnly);
+        assert_eq!(t.max_level(), DegradationLevel::RebalanceOnly);
+    }
+
+    #[test]
+    fn generous_budget_stays_full() {
+        let t = CancelToken::new();
+        t.arm(Some(Duration::from_secs(3600)));
+        assert!(!t.is_expired());
+        assert_eq!(t.level(), DegradationLevel::Full);
+    }
+
+    #[test]
+    fn disarm_resets_expiry() {
+        let t = CancelToken::new();
+        t.arm(Some(Duration::ZERO));
+        assert!(t.is_expired());
+        t.arm(None);
+        assert!(!t.is_expired());
+        assert_eq!(t.level(), DegradationLevel::Full);
+    }
+
+    #[test]
+    fn ladder_is_ordered() {
+        assert!(DegradationLevel::Full < DegradationLevel::SkipFlows);
+        assert!(DegradationLevel::SkipFlows < DegradationLevel::CapFm);
+        assert!(DegradationLevel::CapFm < DegradationLevel::LpOnly);
+        assert!(DegradationLevel::LpOnly < DegradationLevel::RebalanceOnly);
+    }
+}

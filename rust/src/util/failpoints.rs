@@ -1,0 +1,148 @@
+//! Deterministic fault injection for the resilience tests.
+//!
+//! A *failpoint* is a named site in the codebase where a configured fault
+//! — a panic, a delay, or forced deadline expiry — can be triggered
+//! deterministically. The four sites cover the shared-state hot spots the
+//! recovery machinery must survive:
+//!
+//! | site | location |
+//! |---|---|
+//! | [`GAIN_TABLE_UPDATE`] | FM worker, before publishing a local move sequence |
+//! | [`FLOW_WAVE_TAIL`] | flow worker, after refining a block pair (in-flight guard armed) |
+//! | [`BATCH_UNCONTRACTION`] | n-level driver, localized refinement after a batch uncontraction |
+//! | [`IP_CANDIDATE`] | initial-partitioning portfolio, per candidate attempt |
+//!
+//! The whole module compiles to no-ops unless the off-by-default
+//! `failpoints` Cargo feature is enabled — `fire()` is then an empty
+//! inline function, so production builds carry zero overhead and remain
+//! bit-identical. With the feature on, sites stay inert until configured
+//! via [`configure`]; tests must serialize configuration (the registry is
+//! process-global) and [`clear`] it afterwards.
+
+use crate::util::cancel::CancelToken;
+use std::time::Duration;
+
+/// FM worker: before local moves are published and applied globally.
+pub const GAIN_TABLE_UPDATE: &str = "gain-table-update";
+/// Flow worker: tail of one block-pair refinement, guard still armed.
+pub const FLOW_WAVE_TAIL: &str = "flow-wave-tail";
+/// n-level driver: localized refinement following a batch uncontraction.
+pub const BATCH_UNCONTRACTION: &str = "batch-uncontraction";
+/// Initial partitioning: one portfolio candidate attempt.
+pub const IP_CANDIDATE: &str = "ip-candidate";
+
+/// The fault a configured site injects when hit.
+#[derive(Clone, Copy, Debug)]
+pub enum Action {
+    /// panic with a recognizable message (drives the recovery tests)
+    Panic,
+    /// sleep, simulating a slow worker under a deadline
+    Delay(Duration),
+    /// force the run's `CancelToken` to expire
+    Expire,
+}
+
+/// Trigger the failpoint `site`. No-op unless the `failpoints` feature is
+/// enabled *and* the site has been configured with remaining hits.
+#[inline(always)]
+pub fn fire(site: &str, cancel: &CancelToken) {
+    #[cfg(feature = "failpoints")]
+    enabled::fire_impl(site, cancel);
+    #[cfg(not(feature = "failpoints"))]
+    {
+        let _ = (site, cancel);
+    }
+}
+
+/// Arm `site` to inject `action` for the next `times` hits (then it
+/// disarms itself; use `usize::MAX` for "every hit").
+#[cfg(feature = "failpoints")]
+pub fn configure(site: &str, action: Action, times: usize) {
+    enabled::configure_impl(site, action, times);
+}
+
+/// Disarm every failpoint (test teardown).
+#[cfg(feature = "failpoints")]
+pub fn clear() {
+    enabled::clear_impl();
+}
+
+#[cfg(feature = "failpoints")]
+mod enabled {
+    use super::Action;
+    use crate::util::cancel::CancelToken;
+    use std::collections::HashMap;
+    use std::sync::{Mutex, OnceLock};
+
+    struct Entry {
+        action: Action,
+        remaining: usize,
+    }
+
+    fn registry() -> &'static Mutex<HashMap<String, Entry>> {
+        static REGISTRY: OnceLock<Mutex<HashMap<String, Entry>>> = OnceLock::new();
+        REGISTRY.get_or_init(|| Mutex::new(HashMap::new()))
+    }
+
+    // a panicking failpoint unwinds through arbitrary test threads; never
+    // let mutex poisoning turn a configured fault into a cascading one
+    fn lock() -> std::sync::MutexGuard<'static, HashMap<String, Entry>> {
+        registry().lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    pub(super) fn configure_impl(site: &str, action: Action, times: usize) {
+        lock().insert(site.to_string(), Entry { action, remaining: times });
+    }
+
+    pub(super) fn clear_impl() {
+        lock().clear();
+    }
+
+    pub(super) fn fire_impl(site: &str, cancel: &CancelToken) {
+        let action = {
+            let mut reg = lock();
+            let Some(entry) = reg.get_mut(site) else { return };
+            if entry.remaining == 0 {
+                return;
+            }
+            entry.remaining -= 1;
+            let action = entry.action;
+            if entry.remaining == 0 {
+                reg.remove(site);
+            }
+            action
+            // guard dropped here — the action must run unlocked so a
+            // panic cannot wedge the registry for other threads
+        };
+        match action {
+            Action::Panic => panic!("failpoint '{site}' triggered"),
+            Action::Delay(d) => std::thread::sleep(d),
+            Action::Expire => cancel.force_expire(),
+        }
+    }
+}
+
+#[cfg(all(test, feature = "failpoints"))]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn countdown_disarms_and_expire_hits_token() {
+        let t = CancelToken::new();
+        configure("fp-test-site", Action::Expire, 1);
+        fire("fp-test-site", &t);
+        assert!(t.is_expired(), "Expire action must force the token");
+        // the single configured hit is consumed; firing again is inert
+        let t2 = CancelToken::new();
+        fire("fp-test-site", &t2);
+        assert!(!t2.is_expired());
+        clear();
+    }
+
+    #[test]
+    fn unconfigured_site_is_inert() {
+        let t = CancelToken::new();
+        fire("fp-never-configured", &t);
+        assert!(!t.is_expired());
+    }
+}

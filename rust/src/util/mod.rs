@@ -1,13 +1,17 @@
-//! Small shared utilities: deterministic RNG, bitsets, timers, statistics.
+//! Small shared utilities: deterministic RNG, bitsets, timers, statistics,
+//! cooperative cancellation and fault injection.
 
 pub mod bitset;
+pub mod cancel;
 pub mod error;
+pub mod failpoints;
 pub mod fxhash;
 pub mod rng;
 pub mod stats;
 pub mod timer;
 
 pub use bitset::{AtomicBitset, Bitset};
+pub use cancel::{CancelToken, DegradationLevel};
 pub use rng::Rng;
 pub use timer::PhaseTimer;
 

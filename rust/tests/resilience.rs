@@ -1,0 +1,391 @@
+//! Resilience tests: malformed-instance corpus, configuration
+//! validation, deadline/degradation behavior of every driver, and (with
+//! `--features failpoints`) panic-injection recovery at each failpoint
+//! site.
+
+use mtkahypar::coordinator::context::{Context, Preset};
+use mtkahypar::coordinator::partitioner;
+use mtkahypar::generators::{planted_hypergraph, PlantedParams};
+use mtkahypar::io;
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn small_ctx(preset: Preset, k: usize, threads: usize, seed: u64) -> Context {
+    let mut c = Context::new(preset, k, 0.03).with_threads(threads).with_seed(seed);
+    c.contraction_limit_factor = 24;
+    c.ip_min_repetitions = 1;
+    c.ip_max_repetitions = 2;
+    c.fm_max_rounds = 2;
+    c.nlevel_batch_size = 64;
+    c
+}
+
+fn small_instance(seed: u64) -> Arc<mtkahypar::hypergraph::Hypergraph> {
+    Arc::new(planted_hypergraph(
+        &PlantedParams { n: 400, m: 700, blocks: 4, p_intra: 0.85, ..Default::default() },
+        seed,
+    ))
+}
+
+// ---------------------------------------------------------------------
+// Malformed-instance corpus: every case must return Err, never panic.
+// ---------------------------------------------------------------------
+
+fn corpus_file(name: &str, contents: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join("mtkahypar_resilience_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let p = dir.join(name);
+    std::fs::write(&p, contents).unwrap();
+    p
+}
+
+#[test]
+fn hmetis_rejects_malformed_instances() {
+    let cases: &[(&str, &str)] = &[
+        // a pin id of 0 used to wrap the 1-based conversion on u64
+        ("zero_pin.hgr", "2 4\n1 2\n0 3\n"),
+        ("oob_pin.hgr", "2 4\n1 2\n3 5\n"),
+        ("oob_pin_large.hgr", "1 4\n1 999999999\n"),
+        ("truncated_nets.hgr", "3 4\n1 2\n2 3\n"),
+        ("empty_net.hgr", "2 4 1\n3 1 2\n7\n"),
+        ("zero_net_weight.hgr", "2 4 1\n0 1 2\n1 3 4\n"),
+        ("negative_net_weight.hgr", "2 4 1\n-2 1 2\n1 3 4\n"),
+        ("zero_node_weight.hgr", "1 2 10\n1 2\n1\n0\n"),
+        ("negative_node_weight.hgr", "1 2 10\n1 2\n1\n-5\n"),
+        ("truncated_node_weights.hgr", "1 2 10\n1 2\n1\n"),
+        ("bad_fmt.hgr", "1 2 7\n1 2\n"),
+        ("junk_tokens.hgr", "2 4\n1 banana\n3 4\n"),
+        ("junk_header.hgr", "two four\n1 2\n"),
+        ("short_header.hgr", "3\n1 2\n"),
+        ("zero_nodes.hgr", "1 0\n1\n"),
+        ("trailing_data.hgr", "1 4\n1 2\n3 4\n"),
+        ("empty.hgr", ""),
+        ("comments_only.hgr", "% nothing here\n% still nothing\n"),
+    ];
+    for (name, contents) in cases {
+        let p = corpus_file(name, contents);
+        let r = io::read_hmetis(&p);
+        assert!(r.is_err(), "{name} must be rejected, got {:?}", r.map(|h| h.num_nodes()));
+    }
+}
+
+#[test]
+fn metis_rejects_malformed_instances() {
+    let cases: &[(&str, &str)] = &[
+        ("zero_neighbor.graph", "2 1\n0\n1\n"),
+        ("oob_neighbor.graph", "2 1\n2\n3\n"),
+        ("truncated.graph", "3 2\n2\n1\n"),
+        ("bad_fmt.graph", "2 1 5\n2\n1\n"),
+        ("junk.graph", "2 1\nx\n1\n"),
+        ("zero_node_weight.graph", "2 1 10\n0 2\n1 1\n"),
+        ("zero_edge_weight.graph", "2 1 1\n2 0\n1 0\n"),
+        ("short_header.graph", "2\n"),
+        ("empty.graph", ""),
+    ];
+    for (name, contents) in cases {
+        let p = corpus_file(name, contents);
+        let r = io::read_metis(&p);
+        assert!(r.is_err(), "{name} must be rejected, got {:?}", r.map(|g| g.num_nodes()));
+    }
+}
+
+#[test]
+fn hmetis_still_accepts_wellformed_instances() {
+    // the hardening must not reject valid files
+    let p = corpus_file("ok.hgr", "% comment\n3 4 11\n2 1 2\n1 2 3\n3 3 4 1\n1\n2\n1\n1\n");
+    let hg = io::read_hmetis(&p).unwrap();
+    assert_eq!(hg.num_nodes(), 4);
+    assert_eq!(hg.num_nets(), 3);
+    assert_eq!(hg.net_weight(0), 2);
+    assert_eq!(hg.node_weight(1), 2);
+    hg.validate().unwrap();
+}
+
+// ---------------------------------------------------------------------
+// Configuration validation
+// ---------------------------------------------------------------------
+
+#[test]
+fn context_validation_rejects_bad_configs() {
+    assert!(Context::try_new(Preset::Default, 1, 0.03).is_err(), "k=1");
+    assert!(Context::try_new(Preset::Default, 0, 0.03).is_err(), "k=0");
+    assert!(Context::try_new(Preset::Default, 4, -0.1).is_err(), "negative epsilon");
+    assert!(Context::try_new(Preset::Default, 4, f64::NAN).is_err(), "NaN epsilon");
+    assert!(Context::try_new(Preset::Default, 4, 0.03).is_ok());
+
+    let ctx = Context::new(Preset::Default, 64, 0.03);
+    assert!(ctx.validate_for_instance(32).is_err(), "k > n");
+    assert!(ctx.validate_for_instance(64).is_ok());
+
+    let mut z = Context::new(Preset::Default, 4, 0.03);
+    z.time_limit = Some(Duration::ZERO);
+    assert!(z.validate().is_err(), "zero time limit");
+    let ok = Context::new(Preset::Default, 4, 0.03).with_time_limit(Duration::from_secs(1));
+    assert!(ok.validate().is_ok());
+}
+
+#[test]
+fn try_partition_arc_rejects_oversized_k() {
+    let hg = small_instance(1);
+    let ctx = small_ctx(Preset::Default, hg.num_nodes() + 1, 1, 1);
+    assert!(partitioner::try_partition_arc(hg.clone(), &ctx).is_err());
+    let ctx = small_ctx(Preset::Default, 4, 1, 1);
+    let phg = partitioner::try_partition_arc(hg, &ctx).unwrap();
+    assert!(phg.is_balanced());
+}
+
+// ---------------------------------------------------------------------
+// Deadlines: every driver must return a balanced, consistent partition
+// even with an already-expired budget.
+// ---------------------------------------------------------------------
+
+/// An expired-on-arrival budget (set directly: `validate()` rejects a
+/// zero limit from user configuration, but the runtime must survive it).
+fn expired_ctx(preset: Preset, k: usize, threads: usize, seed: u64) -> Context {
+    let mut c = small_ctx(preset, k, threads, seed);
+    c.time_limit = Some(Duration::ZERO);
+    c
+}
+
+#[test]
+fn multilevel_meets_expired_deadline() {
+    let hg = small_instance(3);
+    for preset in [Preset::Default, Preset::DefaultFlows, Preset::Speed, Preset::Deterministic] {
+        let ctx = expired_ctx(preset, 4, 2, 3);
+        let (phg, report) = partitioner::partition_arc_with_report(hg.clone(), &ctx);
+        assert!(phg.is_balanced(), "{preset:?}: imbalance {}", phg.imbalance());
+        phg.validate().unwrap();
+        assert!(report.expired, "{preset:?}: zero budget must read as expired");
+        assert!(report.degraded(), "{preset:?}: zero budget must degrade");
+    }
+}
+
+#[test]
+fn nlevel_meets_expired_deadline() {
+    let hg = small_instance(5);
+    for preset in [Preset::Quality, Preset::QualityFlows] {
+        let ctx = expired_ctx(preset, 4, 2, 5);
+        let phg = partitioner::partition_arc(hg.clone(), &ctx);
+        assert!(phg.is_balanced(), "{preset:?}: imbalance {}", phg.imbalance());
+        phg.validate().unwrap();
+    }
+}
+
+#[test]
+fn nlevel_tight_but_nonzero_deadline_still_balanced() {
+    // a budget that expires mid-run (not on arrival) exercises the
+    // degradation ladder rather than the floor
+    let hg = small_instance(7);
+    let mut ctx = small_ctx(Preset::Quality, 4, 2, 7);
+    ctx.time_limit = Some(Duration::from_millis(5));
+    let phg = partitioner::partition_arc(hg, &ctx);
+    assert!(phg.is_balanced(), "imbalance {}", phg.imbalance());
+    phg.validate().unwrap();
+}
+
+#[test]
+fn vcycle_meets_expired_deadline() {
+    let hg = small_instance(9);
+    let ctx = small_ctx(Preset::Default, 4, 2, 9);
+    let phg = partitioner::partition_arc(hg, &ctx);
+    let before = phg.parts();
+    let mut vctx = small_ctx(Preset::Default, 4, 2, 9);
+    vctx.time_limit = Some(Duration::ZERO);
+    let improved = mtkahypar::refinement::vcycle(phg, &vctx, 3);
+    assert!(improved.is_balanced());
+    improved.validate().unwrap();
+    // an expired-on-arrival budget means zero cycles ran: the input
+    // partition comes back untouched
+    assert_eq!(improved.parts(), before);
+}
+
+#[test]
+fn baselines_meet_expired_deadline() {
+    let hg = small_instance(11);
+    for (name, phg) in [
+        ("patoh", mtkahypar::benchkit::baselines::patoh_like(&hg, &expired_ctx(Preset::Default, 4, 1, 11))),
+        ("zoltan", mtkahypar::benchkit::baselines::zoltan_like(&hg, &expired_ctx(Preset::Default, 4, 2, 11))),
+        ("bipart", mtkahypar::benchkit::baselines::bipart_like(&hg, &expired_ctx(Preset::Default, 4, 2, 11))),
+    ] {
+        assert!(phg.is_balanced(), "{name}: imbalance {}", phg.imbalance());
+        phg.validate().unwrap();
+    }
+}
+
+#[test]
+fn degradation_report_is_clean_without_deadline() {
+    let hg = small_instance(13);
+    let ctx = small_ctx(Preset::Default, 4, 2, 13);
+    let (phg, report) = partitioner::partition_arc_with_report(hg, &ctx);
+    assert!(phg.is_balanced());
+    assert!(!report.degraded(), "no deadline, no faults: {}", report.summary());
+    assert!(!report.expired);
+    assert_eq!(report.panics_recovered, 0);
+}
+
+// ---------------------------------------------------------------------
+// Bit-identity: an armed-but-never-binding deadline must not change the
+// result (the checkpoints only read the clock, they never act early).
+// ---------------------------------------------------------------------
+
+#[test]
+fn generous_deadline_is_bit_identical() {
+    // single-threaded for the async presets (their multi-threaded runs
+    // are racy run-to-run, so only t=1 admits an exact comparison);
+    // the Deterministic preset is compared at 2 threads
+    let hg = small_instance(17);
+    for (preset, threads) in
+        [(Preset::Default, 1), (Preset::Quality, 1), (Preset::Deterministic, 2)]
+    {
+        let base =
+            partitioner::partition_arc(hg.clone(), &small_ctx(preset, 4, threads, 17)).parts();
+        let mut ctx = small_ctx(preset, 4, threads, 17);
+        ctx.time_limit = Some(Duration::from_secs(3600));
+        let limited = partitioner::partition_arc(hg.clone(), &ctx).parts();
+        assert_eq!(base, limited, "{preset:?}: unused deadline changed the result");
+    }
+}
+
+#[test]
+fn deterministic_preset_with_deadline_is_thread_invariant() {
+    // the Deterministic preset must stay bit-identical across thread
+    // counts even with a (generous, never-firing) deadline armed
+    let hg = small_instance(19);
+    let run = |threads: usize| {
+        let mut c = small_ctx(Preset::Deterministic, 4, threads, 19);
+        c.time_limit = Some(Duration::from_secs(3600));
+        partitioner::partition_arc(hg.clone(), &c).parts()
+    };
+    let p1 = run(1);
+    assert_eq!(p1, run(2));
+    assert_eq!(p1, run(4));
+}
+
+// ---------------------------------------------------------------------
+// Failpoint injection: panics at every site must be isolated, the
+// partition repaired, and the run completed. Feature-gated; the sites
+// compile to no-ops otherwise.
+// ---------------------------------------------------------------------
+
+#[cfg(feature = "failpoints")]
+mod failpoint_recovery {
+    use super::*;
+    use mtkahypar::util::failpoints::{self, Action};
+    use std::sync::Mutex;
+
+    /// The failpoint registry is process-global: serialize these tests
+    /// and always clear the registry afterwards. The panic hook is
+    /// silenced for the duration so injected panics don't spam stderr.
+    static FP_LOCK: Mutex<()> = Mutex::new(());
+
+    fn with_failpoint<R>(site: &str, action: Action, times: usize, f: impl FnOnce() -> R) -> R {
+        let _guard = FP_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        let prev_hook = std::panic::take_hook();
+        std::panic::set_hook(Box::new(|_| {}));
+        failpoints::configure(site, action, times);
+        let result = f();
+        failpoints::clear();
+        std::panic::set_hook(prev_hook);
+        result
+    }
+
+    #[test]
+    fn fm_worker_panic_is_recovered() {
+        let hg = small_instance(23);
+        let ctx = small_ctx(Preset::Default, 4, 2, 23);
+        let (phg, report) = with_failpoint(failpoints::GAIN_TABLE_UPDATE, Action::Panic, 1, || {
+            partitioner::partition_arc_with_report(hg.clone(), &ctx)
+        });
+        assert!(phg.is_balanced(), "imbalance {}", phg.imbalance());
+        phg.validate().unwrap();
+        assert!(report.panics_recovered >= 1, "{}", report.summary());
+    }
+
+    #[test]
+    fn flow_worker_panic_is_recovered() {
+        let hg = small_instance(29);
+        let ctx = small_ctx(Preset::DefaultFlows, 4, 2, 29);
+        let (phg, report) = with_failpoint(failpoints::FLOW_WAVE_TAIL, Action::Panic, 1, || {
+            partitioner::partition_arc_with_report(hg.clone(), &ctx)
+        });
+        assert!(phg.is_balanced(), "imbalance {}", phg.imbalance());
+        phg.validate().unwrap();
+        assert!(report.panics_recovered >= 1, "{}", report.summary());
+    }
+
+    #[test]
+    fn batch_refinement_panic_is_recovered() {
+        let hg = small_instance(31);
+        let ctx = small_ctx(Preset::Quality, 4, 2, 31);
+        let (phg, report) = with_failpoint(failpoints::BATCH_UNCONTRACTION, Action::Panic, 1, || {
+            partitioner::partition_arc_with_report(hg.clone(), &ctx)
+        });
+        assert!(phg.is_balanced(), "imbalance {}", phg.imbalance());
+        phg.validate().unwrap();
+        assert!(report.panics_recovered >= 1, "{}", report.summary());
+    }
+
+    #[test]
+    fn ip_candidate_panic_is_recovered() {
+        let hg = small_instance(37);
+        let ctx = small_ctx(Preset::Default, 4, 2, 37);
+        let (phg, report) = with_failpoint(failpoints::IP_CANDIDATE, Action::Panic, 1, || {
+            partitioner::partition_arc_with_report(hg.clone(), &ctx)
+        });
+        assert!(phg.is_balanced(), "imbalance {}", phg.imbalance());
+        phg.validate().unwrap();
+        assert!(report.panics_recovered >= 1, "{}", report.summary());
+    }
+
+    #[test]
+    fn repeated_panics_at_every_site_still_complete() {
+        // several injections per site, flows + n-level in one run
+        let hg = small_instance(41);
+        let ctx = small_ctx(Preset::QualityFlows, 4, 2, 41);
+        let _guard = FP_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        let prev_hook = std::panic::take_hook();
+        std::panic::set_hook(Box::new(|_| {}));
+        failpoints::configure(failpoints::GAIN_TABLE_UPDATE, Action::Panic, 2);
+        failpoints::configure(failpoints::FLOW_WAVE_TAIL, Action::Panic, 2);
+        failpoints::configure(failpoints::BATCH_UNCONTRACTION, Action::Panic, 2);
+        failpoints::configure(failpoints::IP_CANDIDATE, Action::Panic, 2);
+        let (phg, report) = partitioner::partition_arc_with_report(hg, &ctx);
+        failpoints::clear();
+        std::panic::set_hook(prev_hook);
+        assert!(phg.is_balanced(), "imbalance {}", phg.imbalance());
+        phg.validate().unwrap();
+        assert!(report.panics_recovered >= 1, "{}", report.summary());
+    }
+
+    #[test]
+    fn forced_expiry_failpoint_degrades_gracefully() {
+        // Expire mid-run via the IP-candidate site: everything after
+        // initial partitioning runs at the RebalanceOnly floor
+        let hg = small_instance(43);
+        let mut ctx = small_ctx(Preset::Default, 4, 2, 43);
+        ctx.time_limit = Some(Duration::from_secs(3600));
+        let (phg, report) = with_failpoint(failpoints::IP_CANDIDATE, Action::Expire, 1, || {
+            partitioner::partition_arc_with_report(hg.clone(), &ctx)
+        });
+        assert!(phg.is_balanced(), "imbalance {}", phg.imbalance());
+        phg.validate().unwrap();
+        assert!(report.expired, "{}", report.summary());
+        assert!(report.degraded(), "{}", report.summary());
+    }
+
+    #[test]
+    fn delay_failpoint_burns_the_budget() {
+        // a slow worker under a short deadline: the run must still finish
+        // balanced, shedding whatever the spent budget demands
+        let hg = small_instance(47);
+        let mut ctx = small_ctx(Preset::Default, 4, 2, 47);
+        ctx.time_limit = Some(Duration::from_millis(30));
+        let (phg, _report) =
+            with_failpoint(failpoints::IP_CANDIDATE, Action::Delay(Duration::from_millis(40)), 1, || {
+                partitioner::partition_arc_with_report(hg.clone(), &ctx)
+            });
+        assert!(phg.is_balanced(), "imbalance {}", phg.imbalance());
+        phg.validate().unwrap();
+    }
+}
