@@ -14,7 +14,7 @@
 use mtkahypar::coarsening::{project_partition, Level};
 use mtkahypar::coordinator::context::{Context, Preset};
 use mtkahypar::datastructures::RatingMap;
-use mtkahypar::generators::{planted_hypergraph, PlantedParams};
+use mtkahypar::generators::{mesh_graph, planted_hypergraph, PlantedParams};
 use mtkahypar::hypergraph::contraction;
 use mtkahypar::hypergraph::dynamic::DynamicHypergraph;
 use mtkahypar::partition::{
@@ -306,6 +306,45 @@ fn main() {
     bench("one LP round over all nodes", 5, n, || {
         let _ = lp::lp_refine(&phg3, &ctx);
     });
+
+    // ---- graph refine: hypergraph-shaped state vs CSR two-pin kernels ----
+    // The same plain graph refined through both PartitionState backends.
+    // The hypergraph-shaped run materializes the topology as two-pin nets
+    // and pays Φ pin-count arrays plus Λ connectivity sets; the Graph
+    // instantiation keeps one packed endpoint-block word per undirected
+    // edge and recomputes gains in a single CSR adjacency scan.
+    let gm = mesh_graph(64, 64);
+    let gk = 4usize;
+    let gn = gm.num_nodes();
+    let gparts: Vec<BlockId> = (0..gn).map(|u| (u * gk / gn) as BlockId).collect();
+    let mut gctx = Context::new(Preset::Speed, gk, 0.05).with_threads(1).with_seed(5);
+    gctx.lp_rounds = 2;
+    let ghg = Arc::new(gm.to_hypergraph());
+    let mut hview = PartitionedHypergraph::new(ghg, gk);
+    hview.set_uniform_max_weight(0.05);
+    bench("graph refine: hypergraph-shaped state", 5, gn, || {
+        hview.assign_all(&gparts, 1);
+        let _ = lp::lp_refine(&hview, &gctx);
+    });
+    let garc = Arc::new(gm);
+    let pins_before = mtkahypar::partition::pin_counts::allocation_count();
+    let conn_before = mtkahypar::partition::connectivity::allocation_count();
+    let mut gview = mtkahypar::partition::PartitionedGraph::new(garc, gk);
+    gview.set_uniform_max_weight(0.05);
+    bench("graph refine: CSR two-pin kernels", 5, gn, || {
+        gview.assign_all(&gparts, 1);
+        let _ = lp::lp_refine(&gview, &gctx);
+    });
+    assert_eq!(
+        mtkahypar::partition::pin_counts::allocation_count(),
+        pins_before,
+        "the graph path must never allocate a pin-count array"
+    );
+    assert_eq!(
+        mtkahypar::partition::connectivity::allocation_count(),
+        conn_before,
+        "the graph path must never allocate connectivity sets"
+    );
 
     // ---- runtime (L1/L2 via PJRT) ----
     if let Some(rt) = mtkahypar::runtime::global() {

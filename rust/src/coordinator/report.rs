@@ -1,5 +1,6 @@
 //! Result summaries printed by the CLI, examples and benches.
 
+use crate::hypergraph::HypergraphOps;
 use crate::metrics::Objective;
 use crate::partition::PartitionedHypergraph;
 use crate::util::cancel::{CancelToken, DegradationLevel};
@@ -97,9 +98,14 @@ impl DegradationReport {
 }
 
 impl PartitionReport {
-    pub fn from_partition(
+    /// Works for both representations: on a [`PartitionedGraph`]
+    /// (`H = Graph`) km1 and cut coincide with the edge cut and
+    /// soed is exactly `2 * cut` (every cut edge has Λ = 2).
+    ///
+    /// [`PartitionedGraph`]: crate::partition::PartitionedGraph
+    pub fn from_partition<H: HypergraphOps>(
         algorithm: &str,
-        phg: &PartitionedHypergraph,
+        phg: &PartitionedHypergraph<H>,
         objective: Objective,
         seconds: f64,
         phases: Vec<(&'static str, f64)>,

@@ -3,16 +3,25 @@
 //! A graph is a hypergraph whose nets all have exactly two pins, but the
 //! hypergraph representation wastes memory and cache: GP tools use *one*
 //! adjacency array. This module provides that optimized representation
-//! plus its parallel contraction algorithm; [`crate::partition::graph_partition`]
-//! provides the matching partition data structure with on-the-fly gains.
+//! plus its parallel contraction algorithm. [`Graph`] implements
+//! [`HypergraphOps`] with each undirected edge as an implicit two-pin net
+//! (`net_size() == 2` is a compile-time-specializable fact), so the whole
+//! generic partition/refinement stack runs on it directly — paired with
+//! [`crate::partition::state::TwoPinState`], which derives Φ and
+//! Λ(e) ∈ {1, 2} from the two endpoint blocks instead of allocating
+//! pin-count arrays and connectivity bitsets.
 
 pub mod contraction;
 pub mod partitioner;
 
-use crate::{EdgeWeight, NodeId, NodeWeight};
+use crate::hypergraph::HypergraphOps;
+use crate::partition::state::TwoPinState;
+use crate::{EdgeId, EdgeWeight, NodeId, NodeWeight};
 
 /// An undirected weighted graph stored as directed CSR (each undirected
-/// edge appears in both endpoint lists, as the paper's data structure).
+/// edge appears in both endpoint lists, as the paper's data structure),
+/// plus the undirected-net view: every directed slot knows its undirected
+/// edge id, and each undirected edge stores its canonical pin pair.
 #[derive(Clone, Debug, Default)]
 pub struct Graph {
     pub(crate) offsets: Vec<u64>,
@@ -20,6 +29,14 @@ pub struct Graph {
     pub(crate) edge_weight: Vec<EdgeWeight>,
     pub(crate) node_weight: Vec<NodeWeight>,
     pub(crate) total_weight: NodeWeight,
+    /// undirected edge id of each directed CSR slot (aligned with
+    /// `targets`) — a node's incident-net list is a slice of this
+    pub(crate) uedge: Vec<EdgeId>,
+    /// canonical `(min, max)` endpoint pair per undirected edge, two
+    /// entries each — the pin list of the implicit two-pin net
+    pub(crate) upins: Vec<NodeId>,
+    /// weight per undirected edge
+    pub(crate) uweight: Vec<EdgeWeight>,
 }
 
 impl Graph {
@@ -93,7 +110,79 @@ impl Graph {
             offsets.push(targets.len() as u64);
         }
         let total_weight = node_weight.iter().sum();
-        Graph { offsets, targets, edge_weight, node_weight, total_weight }
+        let (uedge, upins, uweight) =
+            Self::build_undirected(n, &offsets, &targets, &edge_weight);
+        Graph { offsets, targets, edge_weight, node_weight, total_weight, uedge, upins, uweight }
+    }
+
+    /// Pair the two directed slots of each undirected edge under one id —
+    /// the implicit two-pin-net view. Directed slots are keyed by their
+    /// canonical `(min, max, weight)` triple and sorted by slot within
+    /// each group; since the smaller endpoint's CSR slots all precede the
+    /// larger's, the i-th forward slot pairs with the i-th reverse slot.
+    /// Parallel edges of equal weight pair arbitrarily among themselves,
+    /// which is fine: each still gets its own undirected id, and both
+    /// slots of an id always belong to *opposite* endpoints (the
+    /// invariant the two-pin partition state's packed endpoint words
+    /// rely on).
+    fn build_undirected(
+        n: usize,
+        offsets: &[u64],
+        targets: &[NodeId],
+        edge_weight: &[EdgeWeight],
+    ) -> (Vec<EdgeId>, Vec<NodeId>, Vec<EdgeWeight>) {
+        let mut keyed: Vec<(NodeId, NodeId, EdgeWeight, u32)> =
+            Vec::with_capacity(targets.len());
+        for u in 0..n {
+            for slot in offsets[u] as usize..offsets[u + 1] as usize {
+                let v = targets[slot];
+                debug_assert_ne!(u as NodeId, v, "self-loops must be dropped upstream");
+                keyed.push((
+                    (u as NodeId).min(v),
+                    (u as NodeId).max(v),
+                    edge_weight[slot],
+                    slot as u32,
+                ));
+            }
+        }
+        debug_assert!(keyed.len() % 2 == 0, "adjacency must be symmetric");
+        keyed.sort_unstable();
+        let num_u = keyed.len() / 2;
+        let mut uedge = vec![0 as EdgeId; targets.len()];
+        let mut upins = vec![0 as NodeId; 2 * num_u];
+        let mut uweight = vec![0 as EdgeWeight; num_u];
+        let mut id = 0usize;
+        let mut i = 0usize;
+        while i < keyed.len() {
+            let (x, y, w, _) = keyed[i];
+            let mut j = i;
+            while j < keyed.len() && (keyed[j].0, keyed[j].1, keyed[j].2) == (x, y, w) {
+                j += 1;
+            }
+            let c = (j - i) / 2;
+            debug_assert!((j - i) % 2 == 0, "unpaired directed edge — asymmetric adjacency");
+            for t in 0..c {
+                // keyed[i..i+c] are x's slots, keyed[i+c..j] are y's
+                // (x < y ⇒ x's CSR slots come first in slot order)
+                let sx = keyed[i + t].3 as usize;
+                let sy = keyed[i + c + t].3 as usize;
+                debug_assert!(targets[sx] == y && targets[sy] == x);
+                uedge[sx] = id as EdgeId;
+                uedge[sy] = id as EdgeId;
+                upins[2 * id] = x;
+                upins[2 * id + 1] = y;
+                uweight[id] = w;
+                id += 1;
+            }
+            i = j;
+        }
+        (uedge, upins, uweight)
+    }
+
+    /// Number of undirected edges (= implicit two-pin nets).
+    #[inline]
+    pub fn num_undirected_edges(&self) -> usize {
+        self.uweight.len()
     }
 
     /// Build from an undirected edge list (symmetrized here).
@@ -151,7 +240,69 @@ impl Graph {
                 }
             }
         }
+        if self.uedge.len() != self.targets.len() || self.upins.len() != 2 * self.uweight.len() {
+            return Err("undirected view sizes".into());
+        }
+        for (slot, &e) in self.uedge.iter().enumerate() {
+            let (x, y) = (self.upins[2 * e as usize], self.upins[2 * e as usize + 1]);
+            let v = self.targets[slot];
+            if x >= y {
+                return Err(format!("undirected edge {e} pins not canonical"));
+            }
+            if v != x && v != y {
+                return Err(format!("slot {slot} maps to undirected edge {e} missing its target"));
+            }
+        }
         Ok(())
+    }
+}
+
+/// The two-pin-net view: each undirected edge is a net of exactly two
+/// pins, a node's incident nets are the undirected ids of its adjacency
+/// slice, and the partition state is [`TwoPinState`] — no pin-count or
+/// connectivity-set allocations anywhere on this path (paper §10).
+impl HypergraphOps for Graph {
+    type State = TwoPinState;
+
+    #[inline]
+    fn num_nodes(&self) -> usize {
+        Graph::num_nodes(self)
+    }
+    #[inline]
+    fn num_nets(&self) -> usize {
+        self.uweight.len()
+    }
+    #[inline]
+    fn num_pins(&self) -> usize {
+        self.upins.len()
+    }
+    #[inline]
+    fn pins(&self, e: EdgeId) -> &[NodeId] {
+        &self.upins[2 * e as usize..2 * e as usize + 2]
+    }
+    #[inline]
+    fn incident_nets(&self, u: NodeId) -> &[EdgeId] {
+        &self.uedge[self.offsets[u as usize] as usize..self.offsets[u as usize + 1] as usize]
+    }
+    #[inline]
+    fn node_weight(&self, u: NodeId) -> NodeWeight {
+        Graph::node_weight(self, u)
+    }
+    #[inline]
+    fn net_weight(&self, e: EdgeId) -> EdgeWeight {
+        self.uweight[e as usize]
+    }
+    #[inline]
+    fn total_weight(&self) -> NodeWeight {
+        Graph::total_weight(self)
+    }
+    #[inline]
+    fn max_net_size(&self) -> usize {
+        2
+    }
+    #[inline]
+    fn net_size(&self, _e: EdgeId) -> usize {
+        2
     }
 }
 
@@ -188,5 +339,50 @@ mod tests {
     fn self_loops_dropped() {
         let g = Graph::from_edges(2, &[(0, 0, 5), (0, 1, 1)], None);
         assert_eq!(g.num_edges(), 2);
+    }
+
+    #[test]
+    fn uedge_ids_pair_up() {
+        let edges: Vec<(NodeId, NodeId, i64)> =
+            (0..6).map(|u| (u, (u + 1) % 6, 1)).collect();
+        let g = Graph::from_edges(6, &edges, None);
+        assert_eq!(HypergraphOps::num_nets(&g), 6);
+        let mut count = vec![0usize; 6];
+        for &e in &g.uedge {
+            count[e as usize] += 1;
+        }
+        assert!(count.iter().all(|&c| c == 2), "every undirected id appears twice");
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn two_pin_net_view_matches_hypergraph() {
+        let g = path4();
+        let hg = g.to_hypergraph();
+        assert_eq!(HypergraphOps::num_nets(&g), hg.num_nets());
+        assert_eq!(HypergraphOps::num_pins(&g), hg.num_pins());
+        for u in g.nodes() {
+            assert_eq!(HypergraphOps::degree(&g, u), g.degree(u));
+        }
+        // per-net pin sets agree up to net id permutation
+        let mut g_nets: Vec<(Vec<NodeId>, i64)> = (0..HypergraphOps::num_nets(&g))
+            .map(|e| (HypergraphOps::pins(&g, e as u32).to_vec(), HypergraphOps::net_weight(&g, e as u32)))
+            .collect();
+        let mut h_nets: Vec<(Vec<NodeId>, i64)> = (0..hg.num_nets())
+            .map(|e| (hg.pins(e as u32).to_vec(), hg.net_weight(e as u32)))
+            .collect();
+        g_nets.sort();
+        h_nets.sort();
+        assert_eq!(g_nets, h_nets);
+    }
+
+    #[test]
+    fn parallel_edges_get_distinct_net_ids() {
+        // from_adjacency with a doubled edge: both survive as separate nets
+        let adj = vec![vec![(1, 2), (1, 3)], vec![(0, 2), (0, 3)]];
+        let g = Graph::from_adjacency(&adj, None);
+        assert_eq!(HypergraphOps::num_nets(&g), 2);
+        assert_eq!(g.uweight.iter().sum::<i64>(), 5);
+        g.validate().unwrap();
     }
 }

@@ -1,28 +1,35 @@
-//! Graph partitioning pipeline on the optimized plain-graph data
-//! structures (paper §10): drop-in replacements for coarsening, label
-//! propagation and FM refinement that exploit the single adjacency array
-//! and on-the-fly edge-cut gains. Initial partitioning converts the
-//! (small) coarsest graph to its hypergraph view and reuses the portfolio
-//! (paper: "initial partitioning uses all algorithms within multilevel
-//! recursive bipartitioning").
+//! Graph partitioning driver on the optimized plain-graph data
+//! structures (paper §10): graph-native coarsening (heavy-edge clustering
+//! on the single adjacency array, or the synchronous §11 clustering under
+//! `ctx.deterministic`), initial partitioning through the hypergraph
+//! portfolio on the (small) coarsest level's two-pin view, and
+//! uncoarsening on the *shared* pooled
+//! [`RefinementPipeline`](crate::refinement::RefinementPipeline) — the
+//! same `rebalance → LP → (det-)FM → rebalance` stack the hypergraph
+//! drivers run, instantiated over `PartitionedGraph`'s
+//! [`TwoPinState`](crate::partition::TwoPinState) (on-the-fly two-pin
+//! gains, no gain table, no pin-count/connectivity-set allocations). One
+//! finest-level-sized partition allocation is rebound across all levels,
+//! with the PR-7 degradation ladder, cancellation checkpoints and panic
+//! isolation applying unchanged.
 
 use super::{contraction as gcontract, Graph};
 use crate::coordinator::context::Context;
-use crate::datastructures::{AddressablePQ, RatingMap};
+use crate::datastructures::RatingMap;
 use crate::initial;
 use crate::parallel::parallel_chunks;
 use crate::partition::PartitionedGraph;
+use crate::refinement::RefinementPipeline;
 use crate::util::rng::hash2;
 use crate::util::Rng;
-use crate::{BlockId, Gain, NodeId, NodeWeight};
+use crate::{BlockId, NodeId, NodeWeight};
 use std::sync::atomic::{AtomicI64, AtomicU32, AtomicU8, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 
-/// Multilevel graph partitioning (the §10 pipeline).
-pub fn partition_graph(g: &Graph, ctx: &Context) -> PartitionedGraph {
-    partition_graph_arc(Arc::new(g.clone()), ctx)
-}
-
+/// Multilevel graph partitioning (the §10 pipeline). Takes the graph by
+/// `Arc` so binding the finest level costs a reference count, not a CSR
+/// deep copy (the former `partition_graph(&g)` wrapper cloned the whole
+/// adjacency structure per call).
 pub fn partition_graph_arc(g: Arc<Graph>, ctx: &Context) -> PartitionedGraph {
     let timer = ctx.timer.clone();
     // standalone driver: arm the deadline for this run (no-op when unset)
@@ -64,7 +71,21 @@ pub fn partition_graph_arc(g: Arc<Graph>, ctx: &Context) -> PartitionedGraph {
                 break;
             }
             let n_before = current.num_nodes();
-            let rep = cluster_graph(&current, ctx, comms.as_deref(), cmax, limit);
+            // the deterministic preset reuses the synchronous §11
+            // clustering, which is generic over HypergraphOps and therefore
+            // runs on the two-pin net view directly; graph contraction is
+            // thread-count invariant given the clustering
+            let rep = if ctx.deterministic {
+                crate::coarsening::deterministic::cluster(
+                    &*current,
+                    ctx,
+                    comms.as_deref(),
+                    cmax,
+                    limit,
+                )
+            } else {
+                cluster_graph(&current, ctx, comms.as_deref(), cmax, limit)
+            };
             let c = gcontract::contract(&current, &rep, ctx.threads);
             if n_before - c.coarse.num_nodes() <= (ctx.min_shrink * n_before as f64) as usize {
                 break;
@@ -83,31 +104,29 @@ pub fn partition_graph_arc(g: Arc<Graph>, ctx: &Context) -> PartitionedGraph {
     });
 
     // ---- initial partitioning via the hypergraph portfolio ----
-    let mut parts: Vec<BlockId> = timer.time("initial_partitioning", || {
+    let parts: Vec<BlockId> = timer.time("initial_partitioning", || {
         let coarsest_hg = Arc::new(current.to_hypergraph());
         initial::initial_partition(coarsest_hg, ctx)
     });
 
-    // ---- uncoarsening with graph-specialized refinement ----
-    let refine = |g: Arc<Graph>, parts: &[BlockId]| -> PartitionedGraph {
-        let mut pg = PartitionedGraph::new(g, ctx.k);
-        pg.set_uniform_max_weight(ctx.epsilon);
-        pg.assign_all(parts, ctx.threads);
-        timer.time("label_propagation", || lp_refine_graph(&pg, ctx));
-        // the graph specialization has no synchronous FM sibling yet, so
-        // `ctx.deterministic` keeps the pre-det-FM behavior (LP only)
-        // instead of silently running the asynchronous FM
-        if ctx.use_fm && !ctx.deterministic {
-            timer.time("fm", || fm_refine_graph(&pg, ctx));
-        }
-        pg
-    };
+    // ---- uncoarsening on the shared pooled pipeline ----
+    // One finest-level-sized Workspace<TwoPinState> (endpoint-pair words
+    // instead of Φ/Λ, empty gain table); each level rebinds the same
+    // memory and runs the full refiner stack with the degradation ladder
+    // and panic isolation of the hypergraph drivers.
+    let mut pipe = RefinementPipeline::new_for_graph(ctx, &g);
+    let coarsest: Arc<Graph> =
+        levels.last().map(|l| l.coarse.clone()).unwrap_or_else(|| g.clone());
+    let mut pg = pipe.bind(coarsest, &parts, ctx);
+    pipe.refine_at_distance(&pg, ctx, levels.len());
     for i in (0..levels.len()).rev() {
-        let pg = refine(levels[i].coarse.clone(), &parts);
-        let refined = pg.parts();
-        parts = levels[i].fine_to_coarse.iter().map(|&c| refined[c as usize]).collect();
+        let finer = if i == 0 { g.clone() } else { levels[i - 1].coarse.clone() };
+        pg = pipe.project_to_level(pg, finer, &levels[i].fine_to_coarse, ctx);
+        // after projecting over levels[i] the partition lives at distance
+        // i from the finest level (the uncoarsen() convention)
+        pipe.refine_at_distance(&pg, ctx, i);
     }
-    refine(g, &parts)
+    pg
 }
 
 // ---------------------------------------------------------------- coarsen
@@ -210,131 +229,6 @@ pub fn cluster_graph(
     out
 }
 
-// ------------------------------------------------------------------- LP
-
-/// Label propagation on the graph partition (on-the-fly gains, §10.2).
-pub fn lp_refine_graph(pg: &PartitionedGraph, ctx: &Context) -> Gain {
-    let n = pg.graph().num_nodes();
-    let mut total: Gain = 0;
-    for round in 0..ctx.lp_rounds {
-        // cancellation checkpoint: finish only whole rounds
-        if ctx.cancel.is_expired() {
-            ctx.cancel.note_early_stop();
-            break;
-        }
-        pg.reset_edge_sync();
-        let mut order: Vec<u32> = (0..n as u32).collect();
-        Rng::new(hash2(ctx.seed, 0x61 ^ round as u64)).shuffle(&mut order);
-        let gained = AtomicI64::new(0);
-        parallel_chunks(n, ctx.threads, |_, s, e| {
-            for &u in &order[s..e] {
-                if !pg.is_border(u) {
-                    continue;
-                }
-                if let Some((g, t)) = pg.max_gain_move(u) {
-                    if g > 0 {
-                        if let Some(attr) = pg.try_move(u, t) {
-                            gained.fetch_add(attr, Ordering::Relaxed);
-                        }
-                    }
-                }
-            }
-        });
-        let delta = gained.load(Ordering::Relaxed);
-        total += delta;
-        if delta <= 0 {
-            break;
-        }
-    }
-    total
-}
-
-// ------------------------------------------------------------------- FM
-
-/// Boundary FM on the graph partition: per round each node moves at most
-/// once; moves apply directly to the global partition with CAS-attributed
-/// gains, and the round's move sequence is reverted to its best prefix.
-pub fn fm_refine_graph(pg: &PartitionedGraph, ctx: &Context) -> Gain {
-    let n = pg.graph().num_nodes();
-    let mut total: Gain = 0;
-    for round in 0..ctx.fm_max_rounds {
-        // cancellation checkpoint: finish only whole rounds
-        if ctx.cancel.is_expired() {
-            ctx.cancel.note_early_stop();
-            break;
-        }
-        pg.reset_edge_sync();
-        let mut boundary: Vec<NodeId> = (0..n as NodeId).filter(|&u| pg.is_border(u)).collect();
-        if boundary.is_empty() {
-            break;
-        }
-        Rng::new(hash2(ctx.seed ^ 0x6f, round as u64)).shuffle(&mut boundary);
-        let moved: Vec<AtomicU8> = (0..n).map(|_| AtomicU8::new(0)).collect();
-        let seq: Mutex<Vec<(NodeId, BlockId, Gain)>> = Mutex::new(Vec::new());
-
-        parallel_chunks(boundary.len(), ctx.threads, |_, s, e| {
-            let mut pq = AddressablePQ::new();
-            let mut local: Vec<(NodeId, BlockId, Gain)> = Vec::new();
-            for &u in &boundary[s..e] {
-                if moved[u as usize].swap(1, Ordering::AcqRel) == 0 {
-                    if let Some((g, _)) = pg.max_gain_move(u) {
-                        pq.insert(u, g);
-                    } else {
-                        moved[u as usize].store(0, Ordering::Release);
-                    }
-                }
-            }
-            let mut stop = crate::refinement::fm::AdaptiveStoppingRule::new(1.0, n);
-            while let Some((u, g)) = pq.pop_max() {
-                let Some((g2, t)) = pg.max_gain_move(u) else { continue };
-                if g2 < g {
-                    pq.insert(u, g2);
-                    continue;
-                }
-                let from = pg.block_of(u);
-                let Some(attr) = pg.try_move(u, t) else { continue };
-                local.push((u, from, attr));
-                stop.push(attr);
-                if attr > 0 {
-                    stop.improvement_found();
-                }
-                // expand to neighbors
-                for (v, _) in pg.graph().neighbors(u) {
-                    if pq.contains(v) {
-                        if let Some((gv, _)) = pg.max_gain_move(v) {
-                            pq.adjust(v, gv);
-                        }
-                    } else if moved[v as usize].swap(1, Ordering::AcqRel) == 0 {
-                        if let Some((gv, _)) = pg.max_gain_move(v) {
-                            pq.insert(v, gv);
-                        } else {
-                            moved[v as usize].store(0, Ordering::Release);
-                        }
-                    }
-                }
-                if stop.should_stop() {
-                    break;
-                }
-            }
-            seq.lock().unwrap().extend(local);
-        });
-
-        // best prefix by attributed gains (exact in the sequential case;
-        // see DESIGN.md for the concurrent approximation note)
-        let seq = seq.into_inner().unwrap();
-        let gains: Vec<Gain> = seq.iter().map(|&(_, _, g)| g).collect();
-        let (len, prefix_gain) = crate::partition::best_prefix(&gains);
-        for &(u, from, _) in seq[len..].iter().rev() {
-            pg.move_unchecked(u, from);
-        }
-        total += prefix_gain;
-        if prefix_gain <= 0 {
-            break;
-        }
-    }
-    total
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -342,8 +236,20 @@ mod tests {
     use crate::generators::{mesh_graph, rmat_graph};
     use crate::metrics;
 
+    /// Thread count for the graph-driver tests, overridable via
+    /// `MTKH_TEST_THREADS` (CI runs this suite at 4 threads too).
+    fn test_threads(default: usize) -> usize {
+        std::env::var("MTKH_TEST_THREADS")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+            .max(1)
+    }
+
     fn ctx(k: usize, threads: usize, seed: u64) -> Context {
-        let mut c = Context::new(Preset::Default, k, 0.03).with_threads(threads).with_seed(seed);
+        let mut c = Context::new(Preset::Default, k, 0.03)
+            .with_threads(test_threads(threads))
+            .with_seed(seed);
         c.contraction_limit_factor = 24;
         c.ip_min_repetitions = 2;
         c.ip_max_repetitions = 3;
@@ -353,8 +259,8 @@ mod tests {
 
     #[test]
     fn graph_pipeline_on_mesh() {
-        let g = mesh_graph(24, 24);
-        let pg = partition_graph(&g, &ctx(4, 2, 3));
+        let g = Arc::new(mesh_graph(24, 24));
+        let pg = partition_graph_arc(g.clone(), &ctx(4, 2, 3));
         assert!(pg.is_balanced(), "imbalance {}", pg.imbalance());
         pg.verify_consistency().unwrap();
         // a 24×24 mesh split in 4 should cut far less than all edges
@@ -366,8 +272,8 @@ mod tests {
 
     #[test]
     fn graph_pipeline_on_powerlaw() {
-        let g = rmat_graph(9, 8, 5);
-        let pg = partition_graph(&g, &ctx(2, 2, 5));
+        let g = Arc::new(rmat_graph(9, 8, 5));
+        let pg = partition_graph_arc(g, &ctx(2, 2, 5));
         assert!(pg.is_balanced());
         pg.verify_consistency().unwrap();
     }
@@ -385,23 +291,80 @@ mod tests {
     }
 
     #[test]
-    fn graph_fm_improves_bad_partition() {
+    fn pipeline_improves_bad_partition_and_accounts_exactly() {
         let g = Arc::new(mesh_graph(16, 16));
         let n = g.num_nodes();
-        // stripes: terrible cut for k=2
+        // stripes: terrible cut for k=2 (but perfectly balanced)
         let parts: Vec<BlockId> = (0..n).map(|u| ((u / 16) % 2) as BlockId).collect();
-        let mut pg = PartitionedGraph::new(g, 2);
-        pg.set_uniform_max_weight(0.05);
-        pg.assign_all(&parts, 1);
-        let before = pg.cut();
-        // single-threaded: attributed-gain accounting is exact only
-        // sequentially (the concurrent prefix revert uses apply-time
-        // gains — see the module docs / DESIGN.md)
-        let c = ctx(2, 1, 9);
-        let g1 = lp_refine_graph(&pg, &c);
-        let g2 = fm_refine_graph(&pg, &c);
-        assert!(g1 + g2 > 0, "lp {g1} fm {g2}");
-        assert_eq!(pg.cut(), before - g1 - g2, "attributed accounting");
+        let c = ctx(2, 2, 9);
+        let mut pipe = RefinementPipeline::new_for_graph(&c, &g);
+        let pg = pipe.bind(g.clone(), &parts, &c);
+        let before = pg.km1();
+        let gain = pipe.refine(&pg, &c);
+        assert!(gain > 0, "LP+FM must improve the stripes");
+        // exact accounting even at 2 threads: the endpoint-pair CAS words
+        // attribute every concurrent two-pin gain exactly (telescoping)
+        assert_eq!(pg.km1(), before - gain, "attributed accounting");
         assert!(pg.is_balanced());
+        pg.verify_consistency().unwrap();
+        assert_eq!(pg.km1(), metrics::graph_cut(&g, &pg.parts()));
+    }
+
+    #[test]
+    fn graph_uncoarsening_reuses_one_partition_allocation() {
+        // the pooled-lifecycle invariant on the graph instantiation: one
+        // structural allocation across bind + project_to_level
+        let g = Arc::new(mesh_graph(16, 16));
+        let c = ctx(2, 2, 7);
+        let rep = cluster_graph(&g, &c, None, 8, 32);
+        let lvl = gcontract::contract(&g, &rep, 2);
+        let coarse = Arc::new(lvl.coarse);
+        let parts: Vec<BlockId> =
+            (0..coarse.num_nodes()).map(|u| (u % 2) as BlockId).collect();
+        let mut pipe = RefinementPipeline::new_for_graph(&c, &g);
+        let mut pg = pipe.bind(coarse, &parts, &c);
+        pipe.refine_at_distance(&pg, &c, 1);
+        pg = pipe.project_to_level(pg, g.clone(), &lvl.fine_to_coarse, &c);
+        pipe.refine_at_distance(&pg, &c, 0);
+        assert_eq!(pipe.partition_pool().structural_allocs(), 1);
+        assert_eq!(pipe.partition_pool().rebinds(), 1);
+        assert!(pg.is_balanced());
+        pg.verify_consistency().unwrap();
+    }
+
+    #[test]
+    fn graph_pipeline_uses_no_gain_table() {
+        // USE_GAIN_TABLE = false for the two-pin state: the workspace
+        // table has zero rows and FM runs on on-the-fly adjacency gains
+        let g = Arc::new(mesh_graph(8, 8));
+        let c = ctx(2, 1, 1);
+        let pipe = RefinementPipeline::new_for_graph(&c, &g);
+        assert_eq!(pipe.workspace().gain_table().node_capacity(), 0);
+    }
+
+    #[test]
+    fn deterministic_graph_driver_thread_invariant() {
+        // the Deterministic preset on the graph driver: bit-identical
+        // results at 1/2/4 threads (det clustering + det-LP + det-FM)
+        let g = Arc::new(mesh_graph(20, 20));
+        let run = |threads: usize| {
+            let mut c = Context::new(Preset::Deterministic, 3, 0.03)
+                .with_threads(threads)
+                .with_seed(11);
+            c.contraction_limit_factor = 24;
+            c.ip_min_repetitions = 2;
+            c.ip_max_repetitions = 3;
+            c.fm_max_rounds = 3;
+            assert!(c.use_fm, "the Deterministic preset must run det-FM");
+            let pg = partition_graph_arc(g.clone(), &c);
+            pg.verify_consistency().unwrap();
+            assert!(pg.is_balanced());
+            (pg.km1(), pg.parts())
+        };
+        let r1 = run(1);
+        let r2 = run(2);
+        let r4 = run(4);
+        assert_eq!(r1, r2, "t=1 vs t=2");
+        assert_eq!(r2, r4, "t=2 vs t=4");
     }
 }

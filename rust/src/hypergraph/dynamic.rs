@@ -364,6 +364,8 @@ impl DynamicHypergraph {
 }
 
 impl HypergraphOps for DynamicHypergraph {
+    type State = crate::partition::state::PhiLambdaState;
+
     #[inline]
     fn num_nodes(&self) -> usize {
         self.active.len()

@@ -35,7 +35,12 @@ use crate::{EdgeId, EdgeWeight, NodeId, NodeWeight};
 /// nodes, and code that iterates `nodes()` must either tolerate isolated
 /// nodes (LP/FM/rebalance do: a node without nets is never a border node)
 /// or skip inactive slots explicitly (weight accumulation does).
-pub trait HypergraphOps: Send + Sync {
+pub trait HypergraphOps: Send + Sync + Sized {
+    /// The partition state this representation pairs with: the packed
+    /// Φ/Λ machinery for hypergraphs, the derived two-pin state for plain
+    /// graphs (see [`crate::partition::state`]).
+    type State: crate::partition::state::StateOps<Self>;
+
     /// Number of node slots `n` (for the dynamic structure: input nodes,
     /// including inactive ones — all node-indexed state is sized by this).
     fn num_nodes(&self) -> usize;
@@ -96,6 +101,8 @@ pub trait HypergraphOps: Send + Sync {
 }
 
 impl HypergraphOps for Hypergraph {
+    type State = crate::partition::state::PhiLambdaState;
+
     #[inline]
     fn num_nodes(&self) -> usize {
         Hypergraph::num_nodes(self)

@@ -155,13 +155,21 @@ fn main() {
         let start = Instant::now();
         let pg = partition_graph_arc(g, &ctx);
         let secs = start.elapsed().as_secs_f64();
-        println!(
-            "edge cut = {}, imbalance = {:.4} ({}), time = {:.3}s",
-            pg.cut(),
-            pg.imbalance(),
-            if pg.is_balanced() { "balanced" } else { "IMBALANCED" },
-            secs
+        // same report as the hypergraph branch; on plain graphs km1 and
+        // cut coincide (edge cut) and soed = 2 * cut, so --objective only
+        // changes which of the equivalent values is highlighted
+        let report = PartitionReport::from_partition(
+            ctx.preset.name(),
+            &pg,
+            ctx.objective,
+            secs,
+            ctx.timer.snapshot(),
         );
+        report.print();
+        let degradation = DegradationReport::from_token(&ctx.cancel, ctx.time_limit);
+        if degradation.degraded() {
+            eprintln!("{}", degradation.summary());
+        }
         if let Some(out) = &args.out {
             if let Err(e) = io::write_partition(&pg.parts(), out) {
                 eprintln!("error writing {out:?}: {e:#}");

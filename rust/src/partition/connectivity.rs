@@ -5,7 +5,18 @@
 //! corresponding bit using an atomic xor operation"; λ(e) is a popcount
 //! over a snapshot.
 
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+
+/// Process-wide count of [`ConnectivitySets`] constructions. The
+/// plain-graph specialization must never allocate connectivity bitsets
+/// (Λ(e) ∈ {1,2} is derived from the two endpoint blocks); the structural
+/// bench/test pair snapshots this counter around a graph run to prove it.
+static ALLOCATIONS: AtomicUsize = AtomicUsize::new(0);
+
+/// Number of `ConnectivitySets::new` calls since process start.
+pub fn allocation_count() -> usize {
+    ALLOCATIONS.load(Ordering::Relaxed)
+}
 
 /// Flat `m × ⌈k/64⌉` array of connectivity bitsets.
 pub struct ConnectivitySets {
@@ -16,6 +27,7 @@ pub struct ConnectivitySets {
 
 impl ConnectivitySets {
     pub fn new(num_nets: usize, k: usize) -> Self {
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
         let words_per_net = (k + 63) / 64;
         ConnectivitySets {
             words: (0..num_nets * words_per_net).map(|_| AtomicU64::new(0)).collect(),
@@ -52,20 +64,12 @@ impl ConnectivitySets {
     }
 
     /// Iterate the blocks of Λ(e) from a snapshot (count-trailing-zeros walk).
-    pub fn iter(&self, e: usize) -> impl Iterator<Item = usize> + '_ {
+    ///
+    /// Returns the concrete [`ConnSetIter`] so state abstractions can name
+    /// the type (the `ConnIter` enum of `partition::state` wraps it).
+    pub fn iter(&self, e: usize) -> ConnSetIter<'_> {
         let base = self.base(e);
-        (0..self.words_per_net).flat_map(move |wi| {
-            let mut w = self.words[base + wi].load(Ordering::Acquire);
-            std::iter::from_fn(move || {
-                if w == 0 {
-                    None
-                } else {
-                    let b = w.trailing_zeros() as usize;
-                    w &= w - 1;
-                    Some(wi * 64 + b)
-                }
-            })
-        })
+        ConnSetIter { words: &self.words[base..base + self.words_per_net], wi: 0, cur: 0 }
     }
 
     /// Number of nets this array has storage for (pooled reuse: coarser
@@ -90,6 +94,37 @@ impl ConnectivitySets {
     pub fn clear_nets(&self, num_nets: usize) {
         for w in &self.words[..num_nets * self.words_per_net] {
             w.store(0, Ordering::Relaxed);
+        }
+    }
+}
+
+/// Snapshot iterator over one net's connectivity bitset: loads each word
+/// once (`Acquire`) and walks its set bits via count-trailing-zeros.
+pub struct ConnSetIter<'a> {
+    /// the net's `words_per_net` words
+    words: &'a [AtomicU64],
+    /// index of the *next* word to load (the word `cur` came from is `wi - 1`)
+    wi: usize,
+    /// remaining bits of the current word's snapshot
+    cur: u64,
+}
+
+impl<'a> Iterator for ConnSetIter<'a> {
+    type Item = usize;
+
+    #[inline]
+    fn next(&mut self) -> Option<usize> {
+        loop {
+            if self.cur != 0 {
+                let b = self.cur.trailing_zeros() as usize;
+                self.cur &= self.cur - 1;
+                return Some((self.wi - 1) * 64 + b);
+            }
+            if self.wi >= self.words.len() {
+                return None;
+            }
+            self.cur = self.words[self.wi].load(Ordering::Acquire);
+            self.wi += 1;
         }
     }
 }

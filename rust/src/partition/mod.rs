@@ -53,27 +53,30 @@
 pub mod connectivity;
 pub mod gain_recalculation;
 pub mod gain_table;
-pub mod graph_partition;
 pub mod objective;
 pub mod pin_counts;
 pub mod pool;
+pub mod state;
 
 pub use gain_recalculation::{best_prefix, recalculate_gains, Move};
 pub use gain_table::GainTable;
-pub use graph_partition::PartitionedGraph;
 pub use objective::{CutNetPolicy, GainPolicy, Km1Policy, SoedPolicy};
 pub use pool::PartitionPool;
+pub use state::{ConnIter, PartitionState, PhiLambdaState, StateOps, TwoPinState};
 use pool::PartitionBuffers;
 
-use crate::datastructures::SpinLockVec;
 use crate::hypergraph::dynamic::{DynamicHypergraph, Memento};
 use crate::hypergraph::{Hypergraph, HypergraphOps};
 use crate::parallel::{par_for_auto, parallel_chunks};
 use crate::{BlockId, EdgeId, Gain, NodeId, NodeWeight};
-use connectivity::ConnectivitySets;
-use pin_counts::PinCountArray;
 use std::sync::atomic::{AtomicI64, AtomicU32, Ordering};
 use std::sync::Arc;
+
+/// A partitioned plain graph: the generic structure bound to a CSR
+/// [`Graph`](crate::graph::Graph), whose state is the two-pin
+/// specialization [`TwoPinState`] (no pin-count arrays, no connectivity
+/// bitsets, no per-net locks — paper §10).
+pub type PartitionedGraph = PartitionedHypergraph<crate::graph::Graph>;
 
 /// The reference block weight ⌈c(V)/k⌉ every balance-related computation
 /// must share (see [`PartitionedHypergraph::reference_block_weight`]).
@@ -96,9 +99,7 @@ pub struct PartitionedHypergraph<H: HypergraphOps = Hypergraph> {
     part: Vec<AtomicU32>,
     block_weight: Vec<AtomicI64>,
     max_block_weight: Vec<NodeWeight>,
-    pin_counts: PinCountArray,
-    conn: ConnectivitySets,
-    net_locks: SpinLockVec,
+    state: H::State,
 }
 
 /// Outcome of a [`PartitionedHypergraph::try_move`].
@@ -144,20 +145,15 @@ impl<H: HypergraphOps> PartitionedHypergraph<H> {
     /// the `num_nodes`/`num_nets` prefix. Π, Φ, Λ and the block weights
     /// are *stale* until [`Self::assign_all`] or
     /// [`Self::rebuild_from_parts`] runs.
-    pub(crate) fn from_buffers(hg: Arc<H>, k: usize, bufs: PartitionBuffers) -> Self {
+    pub(crate) fn from_buffers(hg: Arc<H>, k: usize, bufs: PartitionBuffers<H::State>) -> Self {
         debug_assert!(bufs.part.len() >= hg.num_nodes());
         debug_assert_eq!(bufs.block_weight.len(), k);
-        debug_assert!(bufs.pin_counts.nets_capacity() >= hg.num_nets());
-        debug_assert!(bufs.pin_counts.can_represent(hg.max_net_size()));
-        debug_assert!(bufs.conn.nets_capacity() >= hg.num_nets());
-        debug_assert!(bufs.net_locks.len() >= hg.num_nets());
+        debug_assert!(bufs.state.fits(hg.num_nets(), hg.max_net_size(), k));
         PartitionedHypergraph {
             part: bufs.part,
             block_weight: bufs.block_weight,
             max_block_weight: bufs.max_block_weight,
-            pin_counts: bufs.pin_counts,
-            conn: bufs.conn,
-            net_locks: bufs.net_locks,
+            state: bufs.state,
             hg,
             k,
         }
@@ -165,14 +161,12 @@ impl<H: HypergraphOps> PartitionedHypergraph<H> {
 
     /// Release the structural buffers back to a pool (consumes the
     /// partition; the hypergraph `Arc` is dropped, the memory survives).
-    pub(crate) fn into_buffers(self) -> PartitionBuffers {
+    pub(crate) fn into_buffers(self) -> PartitionBuffers<H::State> {
         PartitionBuffers {
             part: self.part,
             block_weight: self.block_weight,
             max_block_weight: self.max_block_weight,
-            pin_counts: self.pin_counts,
-            conn: self.conn,
-            net_locks: self.net_locks,
+            state: self.state,
         }
     }
 
@@ -251,17 +245,7 @@ impl<H: HypergraphOps> PartitionedHypergraph<H> {
                 }
             }
         });
-        let m = self.hg.num_nets();
-        self.pin_counts.clear_nets(m);
-        self.conn.clear_nets(m);
-        par_for_auto(m, threads, |e| {
-            for &p in self.hg.pins(e as EdgeId) {
-                let b = self.part[p as usize].load(Ordering::Relaxed) as usize;
-                if self.pin_counts.inc(e, b) == 1 {
-                    self.conn.flip(e, b);
-                }
-            }
-        });
+        self.state.rebuild(self, threads);
     }
 
     // ------------------------------------------------------ accessors
@@ -286,6 +270,13 @@ impl<H: HypergraphOps> PartitionedHypergraph<H> {
         self.part[u as usize].load(Ordering::Acquire)
     }
 
+    /// Relaxed Π read for bulk value rebuilds (the preceding Π stores use
+    /// `Relaxed` too; the parallel-for join provides the ordering).
+    #[inline]
+    pub(crate) fn block_of_relaxed(&self, u: NodeId) -> BlockId {
+        self.part[u as usize].load(Ordering::Relaxed)
+    }
+
     #[inline]
     pub fn block_weight(&self, b: BlockId) -> NodeWeight {
         self.block_weight[b as usize].load(Ordering::Acquire)
@@ -298,22 +289,22 @@ impl<H: HypergraphOps> PartitionedHypergraph<H> {
 
     #[inline]
     pub fn pin_count(&self, e: EdgeId, b: BlockId) -> u32 {
-        self.pin_counts.get(e as usize, b as usize)
+        self.state.pin_count(self, e, b)
     }
 
     #[inline]
     pub fn connectivity(&self, e: EdgeId) -> u32 {
-        self.conn.connectivity(e as usize)
+        self.state.connectivity(self, e)
     }
 
     /// Iterate the connectivity set Λ(e).
-    pub fn connectivity_set(&self, e: EdgeId) -> impl Iterator<Item = BlockId> + '_ {
-        self.conn.iter(e as usize).map(|b| b as BlockId)
+    pub fn connectivity_set(&self, e: EdgeId) -> ConnIter<'_> {
+        self.state.connectivity_iter(self, e)
     }
 
     /// Is `u` incident to at least one cut net?
     pub fn is_border(&self, u: NodeId) -> bool {
-        self.hg.incident_nets(u).iter().any(|&e| self.connectivity(e) > 1)
+        self.state.is_border(self, u)
     }
 
     /// Snapshot of the block assignment (pooled bindings may hold more
@@ -397,33 +388,9 @@ impl<H: HypergraphOps> PartitionedHypergraph<H> {
     ) -> MoveOutcome {
         self.part[u as usize].store(to, Ordering::Release);
         self.block_weight[from as usize].fetch_sub(w, Ordering::AcqRel);
-        let mut gain: Gain = 0;
-        for &e in self.hg.incident_nets(u) {
-            let ei = e as usize;
-            let we = self.hg.net_weight(e);
-            self.net_locks.lock(ei);
-            let phi_from = self.pin_counts.dec(ei, from as usize);
-            if phi_from == 0 {
-                self.conn.flip(ei, from as usize);
-            }
-            let phi_to = self.pin_counts.inc(ei, to as usize);
-            if phi_to == 1 {
-                self.conn.flip(ei, to as usize);
-            }
-            // cut-style objectives attribute gains to λ 1↔2 transitions:
-            // λ after the move must be read under the same lock that
-            // serialized the pin-count update (compiled out for km1)
-            let lambda_after =
-                if P::NEEDS_CONNECTIVITY { self.conn.connectivity(ei) } else { 0 };
-            self.net_locks.unlock(ei);
-            // attributed gain (paper: decrease attributed to the move that
-            // zeroes Φ(e, V_s); increase to the one that makes Φ(e, V_t)=1
-            // — generalized per objective by the policy)
-            gain += P::attributed_delta(we, phi_from, phi_to, lambda_after);
-            if let Some(gt) = gain_table {
-                gt.update_for_pin_change::<P, H>(self, e, from, to, phi_from, phi_to);
-            }
-        }
+        // the per-net Φ/Λ transitions (Algorithm 6.1) — or the two-pin
+        // endpoint-word transitions on graphs — live in the state
+        let gain = self.state.apply_move::<P>(self, u, from, to, gain_table);
         MoveOutcome { attributed_gain: gain }
     }
 
@@ -435,20 +402,11 @@ impl<H: HypergraphOps> PartitionedHypergraph<H> {
         self.gain_p::<Km1Policy>(u, to)
     }
 
-    /// Exact move gain of policy `P` from the current pin counts.
+    /// Exact move gain of policy `P` (delegated to the state's kernel:
+    /// benefit − penalty over pin counts for hypergraphs, the single
+    /// adjacency-array pass for graphs).
     pub fn gain_p<P: GainPolicy>(&self, u: NodeId, to: BlockId) -> Gain {
-        let from = self.block_of(u);
-        if from == to {
-            return 0;
-        }
-        let mut g = 0;
-        for &e in self.hg.incident_nets(u) {
-            let w = self.hg.net_weight(e);
-            let sz = if P::NEEDS_NET_SIZE { self.hg.net_size(e) as u32 } else { 0 };
-            g += P::benefit_contrib(w, self.pin_count(e, from), sz);
-            g -= P::penalty_contrib(w, self.pin_count(e, to), sz);
-        }
-        g
+        self.state.gain::<P>(self, u, to)
     }
 
     /// Best move for `u` among blocks adjacent via its nets (ties broken
@@ -459,42 +417,10 @@ impl<H: HypergraphOps> PartitionedHypergraph<H> {
     }
 
     /// Best move for `u` under policy `P` (same candidate enumeration
-    /// and lighter-block tie-break as the km1 form).
+    /// and lighter-block tie-break as the km1 form; delegated to the
+    /// state's kernel).
     pub fn max_gain_move_p<P: GainPolicy>(&self, u: NodeId) -> Option<(Gain, BlockId)> {
-        let from = self.block_of(u);
-        let w = self.hg.node_weight(u);
-        let mut benefit: Gain = 0;
-        let mut candidates: Vec<BlockId> = Vec::new();
-        for &e in self.hg.incident_nets(u) {
-            let sz = if P::NEEDS_NET_SIZE { self.hg.net_size(e) as u32 } else { 0 };
-            benefit += P::benefit_contrib(self.hg.net_weight(e), self.pin_count(e, from), sz);
-            for b in self.connectivity_set(e) {
-                if b != from && !candidates.contains(&b) {
-                    candidates.push(b);
-                }
-            }
-        }
-        let mut best: Option<(Gain, BlockId)> = None;
-        for t in candidates {
-            if self.block_weight(t) + w > self.max_block_weight(t) {
-                continue;
-            }
-            let mut penalty: Gain = 0;
-            for &e in self.hg.incident_nets(u) {
-                let sz = if P::NEEDS_NET_SIZE { self.hg.net_size(e) as u32 } else { 0 };
-                penalty += P::penalty_contrib(self.hg.net_weight(e), self.pin_count(e, t), sz);
-            }
-            let g = benefit - penalty;
-            match best {
-                None => best = Some((g, t)),
-                Some((bg, bb)) => {
-                    if g > bg || (g == bg && self.block_weight(t) < self.block_weight(bb)) {
-                        best = Some((g, t));
-                    }
-                }
-            }
-        }
-        best
+        self.state.max_gain_move::<P>(self, u)
     }
 
     /// Connectivity metric f_{λ−1}(Π).
@@ -581,23 +507,8 @@ impl<H: HypergraphOps> PartitionedHypergraph<H> {
                 ));
             }
         }
-        // pin counts + connectivity
-        for e in self.hg.nets() {
-            let mut phi = vec![0u32; self.k];
-            for &p in self.hg.pins(e) {
-                phi[parts[p as usize] as usize] += 1;
-            }
-            for (b, &cnt) in phi.iter().enumerate() {
-                if self.pin_count(e, b as BlockId) != cnt {
-                    return Err(format!("Φ({e},{b}) mismatch"));
-                }
-                let in_lambda = self.conn.contains(e as usize, b);
-                if in_lambda != (cnt > 0) {
-                    return Err(format!("Λ({e}) bit {b} mismatch"));
-                }
-            }
-        }
-        Ok(())
+        // structural state (pin counts + connectivity, or endpoint words)
+        self.state.verify(self)
     }
 
     /// Full Π/Φ/Λ/block-weight consistency check as a structured error —
@@ -654,9 +565,9 @@ impl PartitionedHypergraph<DynamicHypergraph> {
             self.part[m.v as usize].store(b, Ordering::Release);
             for e in self.hg.reactivated_nets(m) {
                 let ei = e as usize;
-                self.net_locks.lock(ei);
-                let phi = self.pin_counts.inc(ei, b as usize);
-                self.net_locks.unlock(ei);
+                self.state.net_locks.lock(ei);
+                let phi = self.state.pin_counts.inc(ei, b as usize);
+                self.state.net_locks.unlock(ei);
                 // u itself still holds a pin of e in block b (a *removed*
                 // pin implies u was — and, with the batch suffix already
                 // reverted, still is — an active pin of e), so the net was

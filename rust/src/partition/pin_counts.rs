@@ -8,7 +8,18 @@
 //! word level (readers may see values mid-move, exactly like the paper).
 
 use std::cell::UnsafeCell;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+
+/// Process-wide count of [`PinCountArray`] constructions. The plain-graph
+/// specialization must never allocate packed pin counts (Φ(e, ·) over a
+/// two-pin net is derived from the two endpoint blocks); the structural
+/// bench/test pair snapshots this counter around a graph run to prove it.
+static ALLOCATIONS: AtomicUsize = AtomicUsize::new(0);
+
+/// Number of `PinCountArray::new` calls since process start.
+pub fn allocation_count() -> usize {
+    ALLOCATIONS.load(Ordering::Relaxed)
+}
 
 /// Packed `m × k` table of pin counts Φ(e, V_i).
 pub struct PinCountArray {
@@ -27,6 +38,7 @@ pub struct PinCountArray {
 impl PinCountArray {
     /// `max_value` is the largest representable count (max net size).
     pub fn new(num_nets: usize, k: usize, max_value: usize) -> Self {
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
         let bits = (usize::BITS - max_value.max(1).leading_zeros()).max(1);
         let per_word = (64 / bits) as usize;
         let words_per_net = (k + per_word - 1) / per_word.max(1);

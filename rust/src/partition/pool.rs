@@ -34,9 +34,9 @@
 //! mutates the dynamic hypergraph in place, unparks and repairs only the
 //! batch delta via `apply_uncontractions`.
 
-use super::{connectivity::ConnectivitySets, pin_counts::PinCountArray, PartitionedHypergraph};
-use crate::datastructures::SpinLockVec;
-use crate::hypergraph::{Hypergraph, HypergraphOps};
+use super::state::{PartitionState, PhiLambdaState};
+use super::PartitionedHypergraph;
+use crate::hypergraph::HypergraphOps;
 use crate::parallel::{par_for_auto, SharedSlice};
 use crate::{BlockId, NodeId, NodeWeight};
 use std::sync::atomic::{AtomicI64, AtomicU32};
@@ -44,17 +44,17 @@ use std::sync::Arc;
 
 /// The §6.1 state a [`PartitionedHypergraph`] is made of, detached from
 /// any hypergraph. Only values tied to a specific binding are stale;
-/// the memory itself is always valid for any hypergraph that fits.
-pub(crate) struct PartitionBuffers {
+/// the memory itself is always valid for any hypergraph that fits. The
+/// per-net portion (Φ/Λ/locks for hypergraphs, endpoint-pair words for
+/// plain graphs) lives behind the [`PartitionState`] parameter.
+pub(crate) struct PartitionBuffers<S: PartitionState = PhiLambdaState> {
     pub(crate) part: Vec<AtomicU32>,
     pub(crate) block_weight: Vec<AtomicI64>,
     pub(crate) max_block_weight: Vec<NodeWeight>,
-    pub(crate) pin_counts: PinCountArray,
-    pub(crate) conn: ConnectivitySets,
-    pub(crate) net_locks: SpinLockVec,
+    pub(crate) state: S,
 }
 
-impl PartitionBuffers {
+impl<S: PartitionState> PartitionBuffers<S> {
     /// One structural allocation covering `n` nodes, `m` nets with counts
     /// up to `max_net_size`, and `k` blocks.
     pub(crate) fn alloc(n: usize, m: usize, max_net_size: usize, k: usize) -> Self {
@@ -62,9 +62,7 @@ impl PartitionBuffers {
             part: (0..n).map(|_| AtomicU32::new(0)).collect(),
             block_weight: (0..k).map(|_| AtomicI64::new(0)).collect(),
             max_block_weight: vec![NodeWeight::MAX; k],
-            pin_counts: PinCountArray::new(m, k, max_net_size.max(1)),
-            conn: ConnectivitySets::new(m, k),
-            net_locks: SpinLockVec::new(m),
+            state: S::alloc(m, max_net_size.max(1), k),
         }
     }
 
@@ -74,16 +72,10 @@ impl PartitionBuffers {
     /// reclaimed from a partition with a different k (e.g. a V-cycle on
     /// an externally built partition) force a counted reallocation
     /// instead of silently reusing wrong-sized state.
-    fn fits<H: HypergraphOps>(&self, hg: &H, k: usize) -> bool {
-        let m = hg.num_nets();
+    fn fits<H: HypergraphOps<State = S>>(&self, hg: &H, k: usize) -> bool {
         self.block_weight.len() == k
-            && self.pin_counts.blocks() == k
-            && self.conn.blocks() == k
             && self.part.len() >= hg.num_nodes()
-            && self.pin_counts.nets_capacity() >= m
-            && self.pin_counts.can_represent(hg.max_net_size())
-            && self.conn.nets_capacity() >= m
-            && self.net_locks.len() >= m
+            && self.state.fits(hg.num_nets(), hg.max_net_size(), k)
     }
 }
 
@@ -101,7 +93,7 @@ impl PartitionBuffers {
 /// ([`Self::structural_allocs`], [`Self::value_rebuilds`],
 /// [`Self::delta_repairs`], [`Self::rebinds`]) exist so tests can pin
 /// which path ran — see the lifecycle table in `rust/ARCHITECTURE.md`.
-pub struct PartitionPool {
+pub struct PartitionPool<S: PartitionState = PhiLambdaState> {
     k: usize,
     reserved_nodes: usize,
     reserved_nets: usize,
@@ -112,14 +104,14 @@ pub struct PartitionPool {
     /// buffers of a partition temporarily released ([`Self::park`]) while
     /// the caller mutates the hypergraph the values refer to (n-level
     /// batch uncontractions need `&mut` on the sole-owner structure)
-    parked: Option<PartitionBuffers>,
+    parked: Option<PartitionBuffers<S>>,
     structural_allocs: usize,
     rebinds: usize,
     value_rebuilds: usize,
     delta_repairs: usize,
 }
 
-impl PartitionPool {
+impl<S: PartitionState> PartitionPool<S> {
     /// An empty pool for `k`-way partitions. Call [`Self::reserve`] with
     /// the finest hypergraph before the first bind so the single
     /// allocation covers the whole uncoarsening sequence.
@@ -184,11 +176,11 @@ impl PartitionPool {
     /// Produce buffers able to host `hg`: reuse the `reclaimed` memory of
     /// the previous binding when it fits, otherwise perform one (counted)
     /// allocation sized to the maximum of `hg` and the reservation.
-    fn buffers_for<H: HypergraphOps>(
+    fn buffers_for<H: HypergraphOps<State = S>>(
         &mut self,
-        reclaimed: Option<PartitionBuffers>,
+        reclaimed: Option<PartitionBuffers<S>>,
         hg: &H,
-    ) -> PartitionBuffers {
+    ) -> PartitionBuffers<S> {
         match reclaimed {
             Some(b) if b.fits(hg, self.k) => b,
             _ => {
@@ -205,9 +197,9 @@ impl PartitionPool {
 
     /// Shared bind sequence: buffers → partition → uniform limits → full
     /// assignment (the one place the bind semantics live).
-    fn bind_impl<H: HypergraphOps>(
+    fn bind_impl<H: HypergraphOps<State = S>>(
         &mut self,
-        reclaimed: Option<PartitionBuffers>,
+        reclaimed: Option<PartitionBuffers<S>>,
         hg: Arc<H>,
         parts: &[BlockId],
         eps: f64,
@@ -224,7 +216,7 @@ impl PartitionPool {
     /// Bind the pooled state to `hg` with the given assignment — the
     /// first (coarsest) level of an uncoarsening sequence. Uniform block
     /// weight limits are derived from `eps`.
-    pub fn bind<H: HypergraphOps>(
+    pub fn bind<H: HypergraphOps<State = S>>(
         &mut self,
         hg: Arc<H>,
         parts: &[BlockId],
@@ -241,7 +233,7 @@ impl PartitionPool {
     /// are moved, touching only their incident nets — the ROADMAP's
     /// "true delta repair" instead of the full value rebuild. Otherwise
     /// the memory is reused and the values rebuilt in full.
-    pub fn rebind_with_parts<H: HypergraphOps>(
+    pub fn rebind_with_parts<H: HypergraphOps<State = S>>(
         &mut self,
         mut phg: PartitionedHypergraph<H>,
         hg: Arc<H>,
@@ -264,7 +256,7 @@ impl PartitionPool {
     /// the partition must let go of its `Arc` so the driver can obtain
     /// `&mut` on the sole-owner [`DynamicHypergraph`] and revert a batch
     /// in place; [`Self::unpark`] re-binds the identical state afterwards.
-    pub fn park<H: HypergraphOps>(&mut self, phg: PartitionedHypergraph<H>) {
+    pub fn park<H: HypergraphOps<State = S>>(&mut self, phg: PartitionedHypergraph<H>) {
         // hard assert: silently overwriting a parked partition would drop
         // its values and hand the wrong state to the next unpark
         assert!(self.parked.is_none(), "only one partition can be parked");
@@ -276,7 +268,11 @@ impl PartitionPool {
     /// `apply_uncontractions`). Panics if the parked buffers cannot host
     /// `hg`: the incremental path must never reallocate, because a fresh
     /// allocation would lose the values it exists to preserve.
-    pub fn unpark<H: HypergraphOps>(&mut self, hg: Arc<H>, eps: f64) -> PartitionedHypergraph<H> {
+    pub fn unpark<H: HypergraphOps<State = S>>(
+        &mut self,
+        hg: Arc<H>,
+        eps: f64,
+    ) -> PartitionedHypergraph<H> {
         let bufs = self.parked.take().expect("no parked partition buffers");
         assert!(
             bufs.fits(&*hg, self.k),
@@ -295,12 +291,16 @@ impl PartitionPool {
     /// has the same node/net id spaces and pin multisets as the static
     /// input, so Π/Φ/Λ/weights carry over verbatim and the flow-capable
     /// static refiner stack runs without one more `rebuild_from_parts`.
-    pub fn rebind_preserving<H1: HypergraphOps, H2: HypergraphOps>(
+    pub fn rebind_preserving<H1, H2>(
         &mut self,
         phg: PartitionedHypergraph<H1>,
         hg: Arc<H2>,
         eps: f64,
-    ) -> PartitionedHypergraph<H2> {
+    ) -> PartitionedHypergraph<H2>
+    where
+        H1: HypergraphOps<State = S>,
+        H2: HypergraphOps<State = S>,
+    {
         debug_assert_eq!(phg.hypergraph().num_nodes(), hg.num_nodes());
         debug_assert_eq!(phg.hypergraph().num_nets(), hg.num_nets());
         debug_assert_eq!(phg.hypergraph().total_weight(), hg.total_weight());
@@ -317,14 +317,14 @@ impl PartitionPool {
     /// the coarse-prefix Π snapshot into the pool's reused scratch (the
     /// fine Π cannot be written while the coarse Π still lives in the
     /// same atomics).
-    pub fn rebind_level(
+    pub fn rebind_level<H: HypergraphOps<State = S>>(
         &mut self,
-        coarse: PartitionedHypergraph,
-        fine_hg: Arc<Hypergraph>,
+        coarse: PartitionedHypergraph<H>,
+        fine_hg: Arc<H>,
         fine_to_coarse: &[NodeId],
         eps: f64,
         threads: usize,
-    ) -> PartitionedHypergraph {
+    ) -> PartitionedHypergraph<H> {
         debug_assert_eq!(coarse.k(), self.k);
         debug_assert_eq!(fine_to_coarse.len(), fine_hg.num_nodes());
         self.rebinds += 1;
@@ -356,7 +356,7 @@ impl PartitionPool {
 mod tests {
     use super::*;
     use crate::coordinator::context::{Context, Preset};
-    use crate::hypergraph::contraction;
+    use crate::hypergraph::{contraction, Hypergraph};
     use crate::util::Rng;
 
     fn random_hypergraph(seed: u64, n: usize, m: usize) -> Arc<Hypergraph> {
@@ -607,7 +607,7 @@ mod tests {
     fn pool_is_usable_through_context_dimensions() {
         // smoke: k from a Context, as the pipeline wires it
         let ctx = Context::new(Preset::Default, 3, 0.1);
-        let pool = PartitionPool::new(ctx.k);
+        let pool: PartitionPool = PartitionPool::new(ctx.k);
         assert_eq!(pool.k(), 3);
         assert_eq!(pool.structural_allocs(), 0);
     }

@@ -1,0 +1,716 @@
+//! The partition-state abstraction: what a [`PartitionedHypergraph`]
+//! stores *besides* Π and the block weights (paper §6.1 vs §10).
+//!
+//! The generic hypergraph state [`PhiLambdaState`] is the paper's packed
+//! pin-count array Φ(e, V_i) under per-net spin locks plus connectivity
+//! bitsets Λ(e). The plain-graph state [`TwoPinState`] exploits that every
+//! net of a [`Graph`] has exactly two pins: Φ(e, ·) and Λ(e) ∈ {1, 2} are
+//! *derived* from the two endpoint blocks, so the graph path allocates no
+//! pin-count array, no bitsets and no per-net locks — one packed
+//! `AtomicU64` per undirected edge replaces all three (§10's "single
+//! adjacency array + on-the-fly gains" optimization).
+//!
+//! ## Exact attributed gains on the two-pin state
+//!
+//! [`TwoPinState`] keeps, per undirected edge e = (x, y) with x < y, one
+//! word holding `Π(x) << 32 | Π(y)`. A mover at endpoint u CAS-updates its
+//! *own* half to the target block; the word returned by the atomic
+//! read-modify-write carries the other endpoint's block **at the
+//! linearization point**, from which the post-move pin counts
+//! Φ(e, from) ∈ {0, 1}, Φ(e, to) ∈ {1, 2} and λ(e) ∈ {1, 2} are
+//! synthesized and fed to the same [`GainPolicy::attributed_delta`] the
+//! hypergraph move loop uses. Per word the transitions telescope, so
+//! summed attributed gains are exact under any interleaving — the graph
+//! analogue of Lemma 6.1, with no locks and no per-round resets.
+
+use super::connectivity::{ConnSetIter, ConnectivitySets};
+use super::gain_table::GainTable;
+use super::objective::GainPolicy;
+use super::pin_counts::PinCountArray;
+use super::PartitionedHypergraph;
+use crate::datastructures::SpinLockVec;
+use crate::graph::Graph;
+use crate::hypergraph::HypergraphOps;
+use crate::metrics::Objective;
+use crate::parallel::par_for_auto;
+use crate::{BlockId, EdgeId, Gain, NodeId};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Structural storage of a partition, independent of the bound
+/// (hyper)graph: how it is allocated, whether pooled buffers fit a level,
+/// and whether the §6.2 gain table applies.
+///
+/// The [`pool::PartitionPool`](super::pool::PartitionPool) and
+/// [`Workspace`](crate::refinement::pipeline::Workspace) are generic over
+/// this trait so one pooled allocation drives the whole uncoarsening
+/// hierarchy for either representation.
+pub trait PartitionState: Send + Sync + Sized {
+    /// Does the two-level gain table (§6.2) apply to this state? The
+    /// two-pin state computes a node's best move in O(deg) from the
+    /// adjacency array, so the table would only add maintenance cost —
+    /// the FM drivers skip building it when this is `false`.
+    const USE_GAIN_TABLE: bool;
+
+    /// Allocate state for `num_nets` nets of size ≤ `max_net_size` and
+    /// `k` blocks.
+    fn alloc(num_nets: usize, max_net_size: usize, k: usize) -> Self;
+
+    /// Can this (possibly pooled, larger) allocation serve a structure
+    /// with `num_nets` nets of size ≤ `max_net_size` under `k` blocks?
+    fn fits(&self, num_nets: usize, max_net_size: usize, k: usize) -> bool;
+}
+
+/// The per-representation operations a [`PartitionedHypergraph`] delegates
+/// to its state: value rebuilds, Φ/Λ queries, the synchronized move with
+/// attributed gain, and the gain kernels.
+///
+/// Methods receive the owning partition (`phg`) because every state
+/// derives its answers from Π and the bound structure; `phg.state` is
+/// `self` (same allocation), the double reference is just the shape
+/// delegation takes.
+pub trait StateOps<H: HypergraphOps>: PartitionState {
+    /// Recompute the state's values from Π for the `num_nets` prefix
+    /// (memory reused, the pooled per-level repair).
+    fn rebuild(&self, phg: &PartitionedHypergraph<H>, threads: usize);
+
+    /// Φ(e, b).
+    fn pin_count(&self, phg: &PartitionedHypergraph<H>, e: EdgeId, b: BlockId) -> u32;
+
+    /// λ(e).
+    fn connectivity(&self, phg: &PartitionedHypergraph<H>, e: EdgeId) -> u32;
+
+    /// Iterate Λ(e).
+    fn connectivity_iter<'a>(
+        &'a self,
+        phg: &'a PartitionedHypergraph<H>,
+        e: EdgeId,
+    ) -> ConnIter<'a>;
+
+    /// Apply the state updates of moving `u` from `from` to `to` and
+    /// return the attributed gain. Π and the block weights have already
+    /// been updated by the caller ([`PartitionedHypergraph`] keeps the
+    /// balance reservation protocol); this performs the per-net Φ/Λ
+    /// transitions of Algorithm 6.1 (or the two-pin equivalent) and the
+    /// gain-table update rules when a table is supplied.
+    fn apply_move<P: GainPolicy>(
+        &self,
+        phg: &PartitionedHypergraph<H>,
+        u: NodeId,
+        from: BlockId,
+        to: BlockId,
+        gain_table: Option<&GainTable>,
+    ) -> Gain;
+
+    /// Exact gain of moving `u` to `to` under policy `P`.
+    fn gain<P: GainPolicy>(&self, phg: &PartitionedHypergraph<H>, u: NodeId, to: BlockId)
+        -> Gain;
+
+    /// Best feasible move for `u` under policy `P` (ties broken toward
+    /// the lighter block, candidates in first-encounter order).
+    fn max_gain_move<P: GainPolicy>(
+        &self,
+        phg: &PartitionedHypergraph<H>,
+        u: NodeId,
+    ) -> Option<(Gain, BlockId)>;
+
+    /// Is `u` incident to a cut net?
+    fn is_border(&self, phg: &PartitionedHypergraph<H>, u: NodeId) -> bool;
+
+    /// Check the state against a from-scratch recomputation from Π.
+    fn verify(&self, phg: &PartitionedHypergraph<H>) -> Result<(), String>;
+}
+
+/// Iterator over a connectivity set Λ(e) — dense bitset walk for the
+/// hypergraph state, at most two derived blocks for the two-pin state.
+pub enum ConnIter<'a> {
+    Dense(ConnSetIter<'a>),
+    TwoPin { first: Option<BlockId>, second: Option<BlockId> },
+}
+
+impl Iterator for ConnIter<'_> {
+    type Item = BlockId;
+
+    #[inline]
+    fn next(&mut self) -> Option<BlockId> {
+        match self {
+            ConnIter::Dense(it) => it.next().map(|b| b as BlockId),
+            ConnIter::TwoPin { first, second } => first.take().or_else(|| second.take()),
+        }
+    }
+}
+
+// ===================================================================
+// PhiLambdaState — the paper's §6.1 hypergraph machinery
+// ===================================================================
+
+/// Packed pin counts Φ under per-net spin locks + connectivity bitsets Λ:
+/// the general hypergraph partition state (paper §6.1).
+pub struct PhiLambdaState {
+    pub(crate) pin_counts: PinCountArray,
+    pub(crate) conn: ConnectivitySets,
+    pub(crate) net_locks: SpinLockVec,
+}
+
+impl PartitionState for PhiLambdaState {
+    const USE_GAIN_TABLE: bool = true;
+
+    fn alloc(num_nets: usize, max_net_size: usize, k: usize) -> Self {
+        PhiLambdaState {
+            pin_counts: PinCountArray::new(num_nets, k, max_net_size.max(1)),
+            conn: ConnectivitySets::new(num_nets, k),
+            net_locks: SpinLockVec::new(num_nets),
+        }
+    }
+
+    fn fits(&self, num_nets: usize, max_net_size: usize, k: usize) -> bool {
+        self.pin_counts.blocks() == k
+            && self.conn.blocks() == k
+            && self.pin_counts.nets_capacity() >= num_nets
+            && self.pin_counts.can_represent(max_net_size)
+            && self.conn.nets_capacity() >= num_nets
+            && self.net_locks.len() >= num_nets
+    }
+}
+
+impl<H: HypergraphOps<State = PhiLambdaState>> StateOps<H> for PhiLambdaState {
+    fn rebuild(&self, phg: &PartitionedHypergraph<H>, threads: usize) {
+        let m = phg.hypergraph().num_nets();
+        self.pin_counts.clear_nets(m);
+        self.conn.clear_nets(m);
+        // lock-free: every net owns disjoint words of the packed array
+        par_for_auto(m, threads, |e| {
+            for &p in phg.hypergraph().pins(e as EdgeId) {
+                let b = phg.block_of_relaxed(p) as usize;
+                if self.pin_counts.inc(e, b) == 1 {
+                    self.conn.flip(e, b);
+                }
+            }
+        });
+    }
+
+    #[inline]
+    fn pin_count(&self, _phg: &PartitionedHypergraph<H>, e: EdgeId, b: BlockId) -> u32 {
+        self.pin_counts.get(e as usize, b as usize)
+    }
+
+    #[inline]
+    fn connectivity(&self, _phg: &PartitionedHypergraph<H>, e: EdgeId) -> u32 {
+        self.conn.connectivity(e as usize)
+    }
+
+    #[inline]
+    fn connectivity_iter<'a>(
+        &'a self,
+        _phg: &'a PartitionedHypergraph<H>,
+        e: EdgeId,
+    ) -> ConnIter<'a> {
+        ConnIter::Dense(self.conn.iter(e as usize))
+    }
+
+    fn apply_move<P: GainPolicy>(
+        &self,
+        phg: &PartitionedHypergraph<H>,
+        u: NodeId,
+        from: BlockId,
+        to: BlockId,
+        gain_table: Option<&GainTable>,
+    ) -> Gain {
+        let hg = phg.hypergraph();
+        let mut gain: Gain = 0;
+        for &e in hg.incident_nets(u) {
+            let ei = e as usize;
+            let we = hg.net_weight(e);
+            self.net_locks.lock(ei);
+            let phi_from = self.pin_counts.dec(ei, from as usize);
+            if phi_from == 0 {
+                self.conn.flip(ei, from as usize);
+            }
+            let phi_to = self.pin_counts.inc(ei, to as usize);
+            if phi_to == 1 {
+                self.conn.flip(ei, to as usize);
+            }
+            // cut-style objectives attribute gains to λ 1↔2 transitions:
+            // λ after the move must be read under the same lock that
+            // serialized the pin-count update (compiled out for km1)
+            let lambda_after =
+                if P::NEEDS_CONNECTIVITY { self.conn.connectivity(ei) } else { 0 };
+            self.net_locks.unlock(ei);
+            // attributed gain (paper: decrease attributed to the move that
+            // zeroes Φ(e, V_s); increase to the one that makes Φ(e, V_t)=1
+            // — generalized per objective by the policy)
+            gain += P::attributed_delta(we, phi_from, phi_to, lambda_after);
+            if let Some(gt) = gain_table {
+                gt.update_for_pin_change::<P, H>(phg, e, from, to, phi_from, phi_to);
+            }
+        }
+        gain
+    }
+
+    fn gain<P: GainPolicy>(
+        &self,
+        phg: &PartitionedHypergraph<H>,
+        u: NodeId,
+        to: BlockId,
+    ) -> Gain {
+        let from = phg.block_of(u);
+        if from == to {
+            return 0;
+        }
+        let hg = phg.hypergraph();
+        let mut g = 0;
+        for &e in hg.incident_nets(u) {
+            let w = hg.net_weight(e);
+            let sz = if P::NEEDS_NET_SIZE { hg.net_size(e) as u32 } else { 0 };
+            g += P::benefit_contrib(w, self.pin_counts.get(e as usize, from as usize), sz);
+            g -= P::penalty_contrib(w, self.pin_counts.get(e as usize, to as usize), sz);
+        }
+        g
+    }
+
+    fn max_gain_move<P: GainPolicy>(
+        &self,
+        phg: &PartitionedHypergraph<H>,
+        u: NodeId,
+    ) -> Option<(Gain, BlockId)> {
+        let from = phg.block_of(u);
+        let hg = phg.hypergraph();
+        let w = hg.node_weight(u);
+        let mut benefit: Gain = 0;
+        let mut candidates: Vec<BlockId> = Vec::new();
+        for &e in hg.incident_nets(u) {
+            let sz = if P::NEEDS_NET_SIZE { hg.net_size(e) as u32 } else { 0 };
+            benefit += P::benefit_contrib(
+                hg.net_weight(e),
+                self.pin_counts.get(e as usize, from as usize),
+                sz,
+            );
+            for b in self.conn.iter(e as usize) {
+                let b = b as BlockId;
+                if b != from && !candidates.contains(&b) {
+                    candidates.push(b);
+                }
+            }
+        }
+        let mut best: Option<(Gain, BlockId)> = None;
+        for t in candidates {
+            if phg.block_weight(t) + w > phg.max_block_weight(t) {
+                continue;
+            }
+            let mut penalty: Gain = 0;
+            for &e in hg.incident_nets(u) {
+                let sz = if P::NEEDS_NET_SIZE { hg.net_size(e) as u32 } else { 0 };
+                penalty += P::penalty_contrib(
+                    hg.net_weight(e),
+                    self.pin_counts.get(e as usize, t as usize),
+                    sz,
+                );
+            }
+            let g = benefit - penalty;
+            match best {
+                None => best = Some((g, t)),
+                Some((bg, bb)) => {
+                    if g > bg || (g == bg && phg.block_weight(t) < phg.block_weight(bb)) {
+                        best = Some((g, t));
+                    }
+                }
+            }
+        }
+        best
+    }
+
+    #[inline]
+    fn is_border(&self, phg: &PartitionedHypergraph<H>, u: NodeId) -> bool {
+        phg.hypergraph()
+            .incident_nets(u)
+            .iter()
+            .any(|&e| self.conn.connectivity(e as usize) > 1)
+    }
+
+    fn verify(&self, phg: &PartitionedHypergraph<H>) -> Result<(), String> {
+        let hg = phg.hypergraph();
+        let parts = phg.parts();
+        let k = phg.k();
+        for e in hg.nets() {
+            let mut phi = vec![0u32; k];
+            for &p in hg.pins(e) {
+                phi[parts[p as usize] as usize] += 1;
+            }
+            for (b, &cnt) in phi.iter().enumerate() {
+                if self.pin_counts.get(e as usize, b) != cnt {
+                    return Err(format!("Φ({e},{b}) mismatch"));
+                }
+                let in_lambda = self.conn.contains(e as usize, b);
+                if in_lambda != (cnt > 0) {
+                    return Err(format!("Λ({e}) bit {b} mismatch"));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+// ===================================================================
+// TwoPinState — the §10 plain-graph specialization
+// ===================================================================
+
+/// Partition state of a plain graph: one packed endpoint-block word per
+/// undirected edge, nothing else. Φ(e, ·), Λ(e) ∈ {1, 2}, border status
+/// and all gains are derived from endpoint blocks (see the module docs).
+pub struct TwoPinState {
+    /// `Π(x) << 32 | Π(y)` per undirected edge e = (x, y), x < y.
+    words: Vec<AtomicU64>,
+}
+
+impl TwoPinState {
+    /// The policy-collapse factor on graphs: km1 and cut-net per-edge
+    /// gains are algebraically identical on two-pin nets, and soed is
+    /// exactly twice that (each cut edge contributes λ−1 = 1 to km1 and
+    /// ω(e) to cut). One scaled kernel serves the whole portfolio.
+    #[inline]
+    fn scale<P: GainPolicy>() -> Gain {
+        if matches!(P::OBJECTIVE, Objective::Soed) {
+            2
+        } else {
+            1
+        }
+    }
+
+    #[inline]
+    fn endpoints(word: u64) -> (BlockId, BlockId) {
+        ((word >> 32) as BlockId, word as BlockId)
+    }
+}
+
+impl PartitionState for TwoPinState {
+    const USE_GAIN_TABLE: bool = false;
+
+    fn alloc(num_nets: usize, _max_net_size: usize, _k: usize) -> Self {
+        TwoPinState { words: (0..num_nets).map(|_| AtomicU64::new(0)).collect() }
+    }
+
+    fn fits(&self, num_nets: usize, _max_net_size: usize, _k: usize) -> bool {
+        self.words.len() >= num_nets
+    }
+}
+
+impl StateOps<Graph> for TwoPinState {
+    fn rebuild(&self, phg: &PartitionedHypergraph<Graph>, threads: usize) {
+        let m = phg.hypergraph().num_nets();
+        par_for_auto(m, threads, |e| {
+            let ps = phg.hypergraph().pins(e as EdgeId);
+            let bx = phg.block_of_relaxed(ps[0]) as u64;
+            let by = phg.block_of_relaxed(ps[1]) as u64;
+            self.words[e].store((bx << 32) | by, Ordering::Relaxed);
+        });
+    }
+
+    #[inline]
+    fn pin_count(&self, _phg: &PartitionedHypergraph<Graph>, e: EdgeId, b: BlockId) -> u32 {
+        let (bx, by) = Self::endpoints(self.words[e as usize].load(Ordering::Acquire));
+        u32::from(bx == b) + u32::from(by == b)
+    }
+
+    #[inline]
+    fn connectivity(&self, _phg: &PartitionedHypergraph<Graph>, e: EdgeId) -> u32 {
+        let (bx, by) = Self::endpoints(self.words[e as usize].load(Ordering::Acquire));
+        if bx == by {
+            1
+        } else {
+            2
+        }
+    }
+
+    #[inline]
+    fn connectivity_iter<'a>(
+        &'a self,
+        _phg: &'a PartitionedHypergraph<Graph>,
+        e: EdgeId,
+    ) -> ConnIter<'a> {
+        let (bx, by) = Self::endpoints(self.words[e as usize].load(Ordering::Acquire));
+        ConnIter::TwoPin { first: Some(bx), second: if by != bx { Some(by) } else { None } }
+    }
+
+    fn apply_move<P: GainPolicy>(
+        &self,
+        phg: &PartitionedHypergraph<Graph>,
+        u: NodeId,
+        from: BlockId,
+        to: BlockId,
+        gain_table: Option<&GainTable>,
+    ) -> Gain {
+        debug_assert!(gain_table.is_none(), "no gain table on the two-pin state");
+        let g = phg.hypergraph();
+        let lo = g.offsets[u as usize] as usize;
+        let hi = g.offsets[u as usize + 1] as usize;
+        let mut gain: Gain = 0;
+        for slot in lo..hi {
+            let v = g.targets[slot];
+            let e = g.uedge[slot] as usize;
+            let w = g.edge_weight[slot];
+            // own half: high 32 bits iff u is the smaller (canonical x)
+            let shift = if u < v { 32 } else { 0 };
+            let mask = 0xffff_ffffu64 << shift;
+            let prev = self.words[e]
+                .fetch_update(Ordering::AcqRel, Ordering::Acquire, |cur| {
+                    Some((cur & !mask) | ((to as u64) << shift))
+                })
+                .unwrap();
+            debug_assert_eq!((prev >> shift) as u32, from, "moves of one node are serialized");
+            // the other endpoint's block at the linearization point of
+            // this edge's transition — synthesize the post-move Φ/λ
+            let other = (prev >> (32 - shift)) as BlockId;
+            let phi_from_after = u32::from(other == from);
+            let phi_to_after = 1 + u32::from(other == to);
+            let lambda_after = if other == to { 1 } else { 2 };
+            gain += P::attributed_delta(w, phi_from_after, phi_to_after, lambda_after);
+        }
+        gain
+    }
+
+    fn gain<P: GainPolicy>(
+        &self,
+        phg: &PartitionedHypergraph<Graph>,
+        u: NodeId,
+        to: BlockId,
+    ) -> Gain {
+        let from = phg.block_of(u);
+        if from == to {
+            return 0;
+        }
+        let g = phg.hypergraph();
+        let mut w_from: Gain = 0;
+        let mut w_to: Gain = 0;
+        for (v, w) in g.neighbors(u) {
+            let b = phg.block_of(v);
+            if b == from {
+                w_from += w;
+            } else if b == to {
+                w_to += w;
+            }
+        }
+        Self::scale::<P>() * (w_to - w_from)
+    }
+
+    fn max_gain_move<P: GainPolicy>(
+        &self,
+        phg: &PartitionedHypergraph<Graph>,
+        u: NodeId,
+    ) -> Option<(Gain, BlockId)> {
+        let from = phg.block_of(u);
+        let g = phg.hypergraph();
+        let wu = g.node_weight(u);
+        // single adjacency pass: weight toward the own block plus the
+        // aggregated weight toward each adjacent foreign block
+        let mut w_from: Gain = 0;
+        let mut cand: Vec<(BlockId, Gain)> = Vec::new();
+        for (v, w) in g.neighbors(u) {
+            let b = phg.block_of(v);
+            if b == from {
+                w_from += w;
+                continue;
+            }
+            match cand.iter_mut().find(|(cb, _)| *cb == b) {
+                Some((_, acc)) => *acc += w,
+                None => cand.push((b, w)),
+            }
+        }
+        let scale = Self::scale::<P>();
+        let mut best: Option<(Gain, BlockId)> = None;
+        for (t, wt) in cand {
+            if phg.block_weight(t) + wu > phg.max_block_weight(t) {
+                continue;
+            }
+            let gn = scale * (wt - w_from);
+            match best {
+                None => best = Some((gn, t)),
+                Some((bg, bb)) => {
+                    if gn > bg || (gn == bg && phg.block_weight(t) < phg.block_weight(bb)) {
+                        best = Some((gn, t));
+                    }
+                }
+            }
+        }
+        best
+    }
+
+    #[inline]
+    fn is_border(&self, phg: &PartitionedHypergraph<Graph>, u: NodeId) -> bool {
+        let from = phg.block_of(u);
+        phg.hypergraph().neighbors(u).any(|(v, _)| phg.block_of(v) != from)
+    }
+
+    fn verify(&self, phg: &PartitionedHypergraph<Graph>) -> Result<(), String> {
+        let g = phg.hypergraph();
+        let parts = phg.parts();
+        for e in 0..g.num_nets() {
+            let ps = g.pins(e as EdgeId);
+            let (bx, by) = Self::endpoints(self.words[e].load(Ordering::Acquire));
+            if bx != parts[ps[0] as usize] || by != parts[ps[1] as usize] {
+                return Err(format!(
+                    "edge {e} word ({bx},{by}) vs Π ({},{})",
+                    parts[ps[0] as usize], parts[ps[1] as usize]
+                ));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::graph::Graph;
+    use crate::partition::PartitionedGraph;
+    use crate::{BlockId, Gain, NodeId};
+    use std::sync::atomic::{AtomicBool, AtomicI64, Ordering};
+    use std::sync::Arc;
+
+    fn ring(n: usize) -> Graph {
+        let edges: Vec<(NodeId, NodeId, i64)> =
+            (0..n).map(|u| (u as NodeId, ((u + 1) % n) as NodeId, 1)).collect();
+        Graph::from_edges(n, &edges, None)
+    }
+
+    fn setup(parts: &[BlockId], k: usize) -> PartitionedGraph {
+        let g = Arc::new(ring(parts.len()));
+        let mut pg = PartitionedGraph::new(g, k);
+        pg.set_uniform_max_weight(1.0);
+        pg.assign_all(parts, 2);
+        pg
+    }
+
+    #[test]
+    fn cut_and_gain() {
+        // ring of 8 split in halves: exactly 2 cut edges
+        let pg = setup(&[0, 0, 0, 0, 1, 1, 1, 1], 2);
+        assert_eq!(pg.cut(), 2);
+        assert_eq!(pg.km1(), 2, "km1 == cut on graphs");
+        assert_eq!(pg.soed(), 4);
+        // node 3 sits at a boundary: one neighbor per side
+        assert_eq!(pg.gain(3, 1), 0);
+        assert!(pg.is_border(3));
+        assert!(!pg.is_border(1));
+        pg.verify_consistency().unwrap();
+    }
+
+    #[test]
+    fn attributed_gain_matches_cut_delta_sequential() {
+        let pg = setup(&[0, 1, 0, 1, 0, 1, 0, 1, 0, 1], 2);
+        let mut cut = pg.cut();
+        let mut rng = crate::util::Rng::new(7);
+        for _ in 0..20 {
+            let u = rng.next_below(10) as NodeId;
+            let to = 1 - pg.block_of(u);
+            let expected = pg.gain(u, to);
+            if let Some(out) = pg.try_move(u, to, None) {
+                assert_eq!(out.attributed_gain, expected, "sequential attributed == exact");
+                cut -= out.attributed_gain;
+                assert_eq!(pg.cut(), cut);
+            }
+        }
+        pg.verify_consistency().unwrap();
+    }
+
+    #[test]
+    fn concurrent_moves_once_per_node_sum_exactly() {
+        for trial in 0..10u64 {
+            let pg = setup(&[0, 1, 0, 1, 0, 1, 0, 1, 0, 1, 0, 1], 2);
+            let before = pg.cut();
+            let total = AtomicI64::new(0);
+            let claimed: Vec<AtomicBool> = (0..12).map(|_| AtomicBool::new(false)).collect();
+            std::thread::scope(|s| {
+                for t in 0..4u64 {
+                    let pg = &pg;
+                    let total = &total;
+                    let claimed = &claimed;
+                    s.spawn(move || {
+                        let mut rng = crate::util::Rng::new(trial * 31 + t);
+                        for _ in 0..6 {
+                            let u = rng.next_below(12) as NodeId;
+                            if claimed[u as usize].swap(true, Ordering::AcqRel) {
+                                continue; // each node moves at most once
+                            }
+                            let to = 1 - pg.block_of(u);
+                            if let Some(out) = pg.try_move(u, to, None) {
+                                total.fetch_add(out.attributed_gain, Ordering::Relaxed);
+                            }
+                        }
+                    });
+                }
+            });
+            pg.verify_consistency().unwrap();
+            assert_eq!(
+                before - total.load(Ordering::Relaxed),
+                pg.cut(),
+                "attributed gains sum exactly (trial {trial})"
+            );
+        }
+    }
+
+    #[test]
+    fn balance_rejection() {
+        let g = Arc::new(ring(4));
+        let mut pg = PartitionedGraph::new(g, 2);
+        pg.set_max_weights(vec![2, 2]);
+        pg.assign_all(&[0, 0, 1, 1], 1);
+        assert!(pg.try_move(0, 1, None).is_none(), "target block at its limit");
+        assert_eq!(pg.block_weight(1), 2, "reservation reverted");
+        pg.verify_consistency().unwrap();
+    }
+
+    #[test]
+    fn policy_gains_collapse_on_graphs() {
+        use crate::partition::objective::{CutNetPolicy, Km1Policy, SoedPolicy};
+        let pg = setup(&[0, 0, 1, 1, 2, 2, 1, 0], 3);
+        for u in 0..8 as NodeId {
+            for t in 0..3 as BlockId {
+                let km1 = pg.gain_p::<Km1Policy>(u, t);
+                let cut = pg.gain_p::<CutNetPolicy>(u, t);
+                let soed = pg.gain_p::<SoedPolicy>(u, t);
+                assert_eq!(km1, cut, "km1 == cut gain on two-pin nets");
+                assert_eq!(soed, 2 * km1, "soed == 2 · km1 on two-pin nets");
+            }
+        }
+    }
+
+    #[test]
+    fn two_pin_state_matches_hypergraph_view() {
+        // same assignment on the CSR graph and its 2-pin-net hypergraph
+        // view: every metric and every Φ/Λ query must agree
+        let g = ring(9);
+        let parts: Vec<BlockId> = (0..9).map(|u| (u % 3) as BlockId).collect();
+        let pg = {
+            let mut pg = PartitionedGraph::new(Arc::new(g.clone()), 3);
+            pg.set_uniform_max_weight(1.0);
+            pg.assign_all(&parts, 2);
+            pg
+        };
+        let ph = {
+            let mut ph =
+                crate::partition::PartitionedHypergraph::new(Arc::new(g.to_hypergraph()), 3);
+            ph.set_uniform_max_weight(1.0);
+            ph.assign_all(&parts, 2);
+            ph
+        };
+        assert_eq!(pg.km1(), ph.km1());
+        assert_eq!(pg.cut(), ph.cut());
+        assert_eq!(pg.soed(), ph.soed());
+        assert_eq!(pg.cut(), crate::metrics::graph_cut(&g, &parts));
+        for u in 0..9 as NodeId {
+            assert_eq!(pg.is_border(u), ph.is_border(u));
+            for t in 0..3 as BlockId {
+                assert_eq!(pg.gain(u, t), ph.gain(u, t), "gain({u},{t})");
+            }
+        }
+    }
+
+    #[test]
+    fn max_gain_move_single_pass_matches_generic_shape() {
+        let pg = setup(&[0, 0, 0, 0, 0, 1, 1, 1, 1, 2, 2, 2], 3);
+        for u in 0..12 as NodeId {
+            if let Some((g, t)) = pg.max_gain_move(u) {
+                assert_eq!(g, pg.gain(u, t), "reported gain is the exact gain");
+                assert!(t != pg.block_of(u));
+            }
+        }
+    }
+}

@@ -167,6 +167,15 @@ pub fn flow_refine_with_workspace(
         return 0;
     }
 
+    // region-scale autotuning (§8.2 leftover): derive the per-pair
+    // region parameters once per call from the average net size and the
+    // quotient-graph density — pure function of instance statistics, so
+    // deterministic mode stays thread-count invariant
+    let density = fw.sched_current.len() as f64 / fw.quotient.num_pairs().max(1) as f64;
+    let avg_net_size = hg.num_pins() as f64 / hg.num_nets().max(1) as f64;
+    let (alpha, distance) =
+        RegionConfig::autotune(ctx.flow_alpha, ctx.flow_distance, avg_net_size, density, k);
+
     // τ·k parallelism cap (§8.1); deterministic mode serializes
     let workers = if deterministic { 1 } else { flow_workers(ctx, k) };
     fw.ensure_workers(workers);
@@ -208,7 +217,7 @@ pub fn flow_refine_with_workspace(
                         Claim::Pair(b1, b2) => {
                             let mut guard = InFlightGuard { sched, armed: true };
                             let delta = with_policy!(ctx.objective, P => {
-                                refine_pair::<P>(phg, ctx, b1, b2, sc, apply_lock)
+                                refine_pair::<P>(phg, alpha, distance, b1, b2, sc, apply_lock)
                             });
                             // wave-tail injection site: the guard is still
                             // armed, so an injected panic exercises the
@@ -388,14 +397,15 @@ impl Drop for InFlightGuard<'_, '_> {
 /// only when their attributed gain is strictly positive.
 fn refine_pair<P: GainPolicy>(
     phg: &PartitionedHypergraph,
-    ctx: &Context,
+    alpha: f64,
+    max_distance: usize,
     b1: BlockId,
     b2: BlockId,
     sc: &mut FlowScratch,
     apply_lock: &Mutex<()>,
 ) -> Gain {
     sc.applied.clear();
-    let cfg = RegionConfig::for_pair(phg, ctx.flow_alpha, ctx.flow_distance, b1, b2);
+    let cfg = RegionConfig::for_pair(phg, alpha, max_distance, b1, b2);
     let Some(fp) = network::construct_region_p::<P>(phg, b1, b2, &cfg, sc) else {
         return 0;
     };

@@ -55,6 +55,47 @@ impl RegionConfig {
             max_w2: phg.max_block_weight(b2),
         }
     }
+
+    /// Region-scale autotuning: adapt the configured `(α, δ)` to instance
+    /// statistics, computed once per `flow_refine` call.
+    ///
+    /// * `avg_net_size` governs how much weight one BFS hop absorbs.
+    ///   Near-graph instances (avg |e| ≤ 3, e.g. the two-pin nets of a
+    ///   plain graph) collect regions slowly, so the hop horizon widens
+    ///   by one; heavy-tailed instances (avg |e| ≥ 16) blow past the
+    ///   weight bound in a single hop, so it contracts by one.
+    /// * `density` (adjacent block pairs / all pairs of the quotient
+    ///   graph) measures how many regions compete for the same blocks at
+    ///   once. With many blocks (k ≥ 8) and a dense quotient graph the
+    ///   per-pair scale α shrinks — `α / (1 + density·k/8)` — so the
+    ///   concurrent regions stay near-disjoint; for small k or sparse
+    ///   quotient graphs α is left at the configured value (the §8.2
+    ///   default already saturates the weight bound there).
+    ///
+    /// The mid band (3 < avg |e| < 16, k < 8) reproduces the configured
+    /// values exactly, so typical hypergraph runs are unchanged. α never
+    /// drops below 1 and δ never below 1.
+    pub fn autotune(
+        base_alpha: f64,
+        base_distance: usize,
+        avg_net_size: f64,
+        density: f64,
+        k: usize,
+    ) -> (f64, usize) {
+        let distance = if avg_net_size <= 3.0 {
+            base_distance + 1
+        } else if avg_net_size >= 16.0 {
+            base_distance.saturating_sub(1).max(1)
+        } else {
+            base_distance.max(1)
+        };
+        let alpha = if k >= 8 {
+            (base_alpha / (1.0 + density * k as f64 / 8.0)).max(1.0)
+        } else {
+            base_alpha
+        };
+        (alpha, distance)
+    }
 }
 
 pub const SOURCE: u32 = 0;
@@ -344,6 +385,27 @@ mod tests {
         snk[SINK as usize] = true;
         let f = sc.net.max_preflow(&src, &snk);
         assert_eq!(f, 1, "chain min cut is one net");
+    }
+
+    #[test]
+    fn region_autotune_scales_with_instance_statistics() {
+        // mid-band statistics reproduce the configured defaults exactly
+        assert_eq!(RegionConfig::autotune(16.0, 2, 4.5, 1.0, 4), (16.0, 2));
+        // near-graph instances (two-pin nets) widen the hop horizon
+        assert_eq!(RegionConfig::autotune(16.0, 2, 2.0, 0.3, 4), (16.0, 3));
+        // heavy-tailed net sizes contract it, never below one hop
+        assert_eq!(RegionConfig::autotune(16.0, 2, 40.0, 0.3, 4), (16.0, 1));
+        assert_eq!(RegionConfig::autotune(16.0, 1, 40.0, 0.3, 4), (16.0, 1));
+        // dense quotient graphs with many blocks shrink α ...
+        let (dense_a, dense_d) = RegionConfig::autotune(16.0, 2, 4.5, 1.0, 16);
+        assert!(dense_a < 16.0 && dense_a >= 1.0, "α = {dense_a}");
+        assert_eq!(dense_d, 2);
+        // ... monotonically in the density
+        let (sparse_a, _) = RegionConfig::autotune(16.0, 2, 4.5, 0.1, 16);
+        assert!(sparse_a > dense_a);
+        // α is floored at 1 even under extreme pressure
+        let (floor_a, _) = RegionConfig::autotune(1.0, 2, 4.5, 1.0, 64);
+        assert_eq!(floor_a, 1.0);
     }
 
     #[test]

@@ -66,7 +66,7 @@ use crate::coordinator::context::Context;
 use crate::hypergraph::HypergraphOps;
 use crate::parallel::parallel_chunks;
 use crate::partition::objective::{with_policy, GainPolicy};
-use crate::partition::{GainTable, Move, PartitionedHypergraph};
+use crate::partition::{GainTable, Move, PartitionState, PartitionedHypergraph};
 use crate::refinement::fm::{FmStats, EXPANSION_NET_SIZE_LIMIT};
 use crate::refinement::lp::select_prefixes;
 use crate::refinement::pipeline::Workspace;
@@ -101,7 +101,7 @@ pub fn fm_refine_deterministic_with_workspace<H: HypergraphOps>(
     phg: &PartitionedHypergraph<H>,
     ctx: &Context,
     seed_set: Option<&[NodeId]>,
-    ws: &mut Workspace,
+    ws: &mut Workspace<H::State>,
 ) -> FmStats {
     with_policy!(ctx.objective, P => {
         fm_refine_deterministic_with_workspace_p::<P, H>(phg, ctx, seed_set, ws)
@@ -112,13 +112,15 @@ fn fm_refine_deterministic_with_workspace_p<P: GainPolicy, H: HypergraphOps>(
     phg: &PartitionedHypergraph<H>,
     ctx: &Context,
     seed_set: Option<&[NodeId]>,
-    ws: &mut Workspace,
+    ws: &mut Workspace<H::State>,
 ) -> FmStats {
     assert_eq!(phg.k(), ws.k(), "workspace was built for a different k");
     let n = phg.hypergraph().num_nodes();
     let threads = ctx.threads.max(1);
     ws.ensure_node_capacity(n);
-    let use_table = seed_set.is_none();
+    // two-pin states skip the table in global mode too: frozen best moves
+    // come straight from max_gain_move_p's single adjacency scan
+    let use_table = seed_set.is_none() && <H::State as PartitionState>::USE_GAIN_TABLE;
     if use_table {
         ws.prepare_gain_table_p::<P, H>(phg, threads);
     }

@@ -44,7 +44,7 @@ use crate::hypergraph::HypergraphOps;
 use crate::partition::objective::{with_policy, GainPolicy};
 use crate::partition::{
     gain_recalculation::{recalculate_gains_with_scratch_p, revert_to_best_prefix_p},
-    GainTable, Move, PartitionedHypergraph,
+    GainTable, Move, PartitionState, PartitionedHypergraph,
 };
 use crate::refinement::pipeline::{SearchScratch, Workspace};
 use crate::util::rng::hash2;
@@ -98,7 +98,7 @@ pub fn fm_refine_with_workspace<H: HypergraphOps>(
     phg: &PartitionedHypergraph<H>,
     ctx: &Context,
     seed_set: Option<&[NodeId]>,
-    ws: &mut Workspace,
+    ws: &mut Workspace<H::State>,
 ) -> FmStats {
     with_policy!(ctx.objective, P => fm_refine_with_workspace_p::<P, H>(phg, ctx, seed_set, ws))
 }
@@ -107,14 +107,17 @@ fn fm_refine_with_workspace_p<P: GainPolicy, H: HypergraphOps>(
     phg: &PartitionedHypergraph<H>,
     ctx: &Context,
     seed_set: Option<&[NodeId]>,
-    ws: &mut Workspace,
+    ws: &mut Workspace<H::State>,
 ) -> FmStats {
     assert_eq!(phg.k(), ws.k(), "workspace was built for a different k");
     let n = phg.hypergraph().num_nodes();
     let threads = ctx.threads.max(1);
     ws.ensure_node_capacity(n);
     ws.ensure_threads(threads);
-    let use_table = seed_set.is_none();
+    // two-pin states never consult the §6.2 table: a node's exact best
+    // move is one adjacency scan, so the table would be pure maintenance
+    // overhead (and its memory is never allocated — see `Workspace::new`)
+    let use_table = seed_set.is_none() && <H::State as PartitionState>::USE_GAIN_TABLE;
     if use_table {
         ws.prepare_gain_table_p::<P, H>(phg, threads);
     }
@@ -136,7 +139,7 @@ fn fm_refine_with_workspace_p<P: GainPolicy, H: HypergraphOps>(
             break;
         }
         Rng::new(hash2(ctx.seed ^ 0xf3, round as u64)).shuffle(&mut ws.boundary);
-        if use_table {
+        if seed_set.is_none() {
             // Both modes maintain the all-clear ownership invariant across
             // rounds (per-search release of unmoved nodes + the sparse
             // end-of-round clear below), so this bulk clear is defensive

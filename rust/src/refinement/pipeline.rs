@@ -87,8 +87,11 @@
 use crate::coarsening::Level;
 use crate::coordinator::context::Context;
 use crate::datastructures::AddressablePQ;
+use crate::graph::Graph;
 use crate::hypergraph::{Hypergraph, HypergraphOps};
-use crate::partition::{GainTable, Move, PartitionPool, PartitionedHypergraph};
+use crate::partition::{
+    GainTable, Move, PartitionPool, PartitionState, PartitionedHypergraph, PhiLambdaState,
+};
 use crate::refinement::fm::{DeltaPartition, FmStats};
 use crate::refinement::{flow, fm, lp, rebalance};
 use crate::util::{Bitset, DegradationLevel};
@@ -126,7 +129,15 @@ impl SearchScratch {
 
 /// The long-lived refinement state: one allocation per `partition_arc`
 /// call, shared by every level and every refiner of the pipeline.
-pub struct Workspace {
+///
+/// Generic over the [`PartitionState`] of the structures it refines:
+/// the hypergraph drivers use the default `Workspace<PhiLambdaState>`
+/// (gain table + Φ/Λ pool), the plain-graph driver uses
+/// `Workspace<TwoPinState>` — same scratch, same pool discipline, but
+/// the §6.2 gain table stays empty (`USE_GAIN_TABLE = false`: two-pin
+/// gains are a single adjacency scan, a table would only add
+/// maintenance cost).
+pub struct Workspace<S: PartitionState = PhiLambdaState> {
     pub(crate) k: usize,
     pub(crate) gain_table: GainTable,
     /// FM node-ownership bits (one per node of the finest level)
@@ -144,7 +155,7 @@ pub struct Workspace {
     /// bitset, reset sparsely) so seeded n-level FM rounds stay O(region)
     pub(crate) recalc: crate::partition::gain_recalculation::RecalcScratch,
     /// pooled §6.1 partition state rebound across uncoarsening levels
-    pub(crate) pool: PartitionPool,
+    pub(crate) pool: PartitionPool<S>,
     /// pooled flow-refinement state (per-worker scratch slots, incremental
     /// quotient graph, scheduler wave buffers)
     pub(crate) flow: flow::FlowWorkspace,
@@ -161,14 +172,17 @@ pub struct Workspace {
     gain_table_allocs: usize,
 }
 
-impl Workspace {
+impl<S: PartitionState> Workspace<S> {
     /// Allocate a workspace for partitions with `k` blocks, up to
     /// `node_capacity` nodes and `threads` worker threads.
     pub fn new(k: usize, threads: usize, node_capacity: usize) -> Self {
         let threads = threads.max(1);
+        // states that never consult the §6.2 table (two-pin graphs) get a
+        // zero-row table; the growth path below is gated the same way
+        let table_capacity = if S::USE_GAIN_TABLE { node_capacity } else { 0 };
         Workspace {
             k,
-            gain_table: GainTable::new(node_capacity, k),
+            gain_table: GainTable::new(table_capacity, k),
             owner: (0..node_capacity).map(|_| AtomicBool::new(false)).collect(),
             scratch: (0..threads).map(|_| SearchScratch::new(k, node_capacity)).collect(),
             boundary: Vec::new(),
@@ -198,7 +212,7 @@ impl Workspace {
     /// Grow node-indexed state to `n` entries (no-op when the finest-level
     /// capacity already covers it — the common case in uncoarsening).
     pub fn ensure_node_capacity(&mut self, n: usize) {
-        if self.gain_table.ensure_node_capacity(n) {
+        if S::USE_GAIN_TABLE && self.gain_table.ensure_node_capacity(n) {
             self.gain_table_allocs += 1;
         }
         if n > self.owner.len() {
@@ -221,7 +235,7 @@ impl Workspace {
     /// Recompute the gain table in place for the current assignment of
     /// `phg` (per-level repair after projection: values change, memory
     /// does not).
-    pub fn prepare_gain_table<H: HypergraphOps>(
+    pub fn prepare_gain_table<H: HypergraphOps<State = S>>(
         &mut self,
         phg: &PartitionedHypergraph<H>,
         threads: usize,
@@ -233,12 +247,15 @@ impl Workspace {
     /// [`GainPolicy`](crate::partition::GainPolicy): the table's
     /// benefit/penalty terms are filled with the policy's contribution
     /// rules.
-    pub fn prepare_gain_table_p<P: crate::partition::GainPolicy, H: HypergraphOps>(
+    pub fn prepare_gain_table_p<P: crate::partition::GainPolicy, H: HypergraphOps<State = S>>(
         &mut self,
         phg: &PartitionedHypergraph<H>,
         threads: usize,
     ) {
         debug_assert_eq!(phg.k(), self.k);
+        if !S::USE_GAIN_TABLE {
+            return;
+        }
         self.ensure_node_capacity(phg.hypergraph().num_nodes());
         self.gain_table.initialize_p::<P, H>(phg, threads);
         self.gain_table_inits += 1;
@@ -288,12 +305,16 @@ impl Workspace {
 /// you need, leave ownership bits all-clear); level-gated refiners read
 /// the distance recorded by [`RefinementPipeline::refine_at_distance`]
 /// and must return 0 without touching their state when gated.
-pub trait Refiner: Send {
+pub trait Refiner<R: HypergraphOps = Hypergraph>: Send {
     /// Phase-timer name of this refiner.
     fn name(&self) -> &'static str;
     /// Refine `phg` in place using the shared workspace.
-    fn refine(&mut self, phg: &PartitionedHypergraph, ws: &mut Workspace, ctx: &Context)
-        -> Gain;
+    fn refine(
+        &mut self,
+        phg: &PartitionedHypergraph<R>,
+        ws: &mut Workspace<R::State>,
+        ctx: &Context,
+    ) -> Gain;
     /// Where the degradation ladder sheds this refiner under deadline
     /// pressure. `Never` (the default) marks feasibility stages that must
     /// always run.
@@ -321,12 +342,17 @@ pub enum ShedClass {
 /// Label propagation (parallel or deterministic-synchronous, paper §6.1/§11).
 pub struct LpRefiner;
 
-impl Refiner for LpRefiner {
+impl<R: HypergraphOps> Refiner<R> for LpRefiner {
     fn name(&self) -> &'static str {
         "label_propagation"
     }
 
-    fn refine(&mut self, phg: &PartitionedHypergraph, ws: &mut Workspace, ctx: &Context) -> Gain {
+    fn refine(
+        &mut self,
+        phg: &PartitionedHypergraph<R>,
+        ws: &mut Workspace<R::State>,
+        ctx: &Context,
+    ) -> Gain {
         if ctx.deterministic {
             lp::lp_refine_deterministic_with_scratch(phg, ctx, &mut ws.det)
         } else {
@@ -346,12 +372,17 @@ impl Refiner for LpRefiner {
 #[derive(Default)]
 pub struct FmRefiner;
 
-impl Refiner for FmRefiner {
+impl<R: HypergraphOps> Refiner<R> for FmRefiner {
     fn name(&self) -> &'static str {
         "fm"
     }
 
-    fn refine(&mut self, phg: &PartitionedHypergraph, ws: &mut Workspace, ctx: &Context) -> Gain {
+    fn refine(
+        &mut self,
+        phg: &PartitionedHypergraph<R>,
+        ws: &mut Workspace<R::State>,
+        ctx: &Context,
+    ) -> Gain {
         let stats = if ctx.deterministic {
             fm::deterministic::fm_refine_deterministic_with_workspace(phg, ctx, None, ws)
         } else {
@@ -371,12 +402,17 @@ impl Refiner for FmRefiner {
 /// rarely pay for themselves; the big wins come from the finest levels).
 pub struct FlowRefiner;
 
-impl Refiner for FlowRefiner {
+impl Refiner<Hypergraph> for FlowRefiner {
     fn name(&self) -> &'static str {
         "flows"
     }
 
-    fn refine(&mut self, phg: &PartitionedHypergraph, ws: &mut Workspace, ctx: &Context) -> Gain {
+    fn refine(
+        &mut self,
+        phg: &PartitionedHypergraph,
+        ws: &mut Workspace,
+        ctx: &Context,
+    ) -> Gain {
         if ws.level_distance >= ctx.flow_finest_levels.max(1) {
             return 0;
         }
@@ -398,12 +434,17 @@ impl Refiner for FlowRefiner {
 /// the (usually negative) attributed km1 change.
 pub struct RebalanceRefiner;
 
-impl Refiner for RebalanceRefiner {
+impl<R: HypergraphOps> Refiner<R> for RebalanceRefiner {
     fn name(&self) -> &'static str {
         "rebalance"
     }
 
-    fn refine(&mut self, phg: &PartitionedHypergraph, _ws: &mut Workspace, ctx: &Context) -> Gain {
+    fn refine(
+        &mut self,
+        phg: &PartitionedHypergraph<R>,
+        _ws: &mut Workspace<R::State>,
+        ctx: &Context,
+    ) -> Gain {
         if phg.is_balanced() {
             return 0;
         }
@@ -414,10 +455,16 @@ impl Refiner for RebalanceRefiner {
 }
 
 /// The per-`partition_arc` refinement pipeline: a [`Workspace`] plus the
-/// refiner stack derived from the context's preset.
-pub struct RefinementPipeline {
-    ws: Workspace,
-    stack: Vec<Box<dyn Refiner>>,
+/// refiner stack derived from the context's preset. Generic over the
+/// refined representation: `RefinementPipeline` (default) drives
+/// hypergraph uncoarsening with the full
+/// `rebalance → LP → FM → flows → rebalance` stack;
+/// [`RefinementPipeline::<Graph>::new_for_graph`] builds the same
+/// pipeline over the CSR two-pin state (no flow stage — flows are
+/// Λ-set/quotient-graph machinery with no graph counterpart yet).
+pub struct RefinementPipeline<R: HypergraphOps = Hypergraph> {
+    ws: Workspace<R::State>,
+    stack: Vec<Box<dyn Refiner<R>>>,
     /// per-stack-slot poison marks: a refiner whose worker panicked is
     /// taken out of rotation for the rest of the run (the repair path
     /// restores partition consistency; the refiner's own state is suspect)
@@ -467,71 +514,6 @@ impl RefinementPipeline {
         pipeline
     }
 
-    /// Bind the pooled partition state to the coarsest level (static or
-    /// dynamic representation).
-    pub fn bind<H: HypergraphOps>(
-        &mut self,
-        hg: Arc<H>,
-        parts: &[BlockId],
-        ctx: &Context,
-    ) -> PartitionedHypergraph<H> {
-        self.ws.pool.bind(hg, parts, ctx.epsilon, ctx.threads)
-    }
-
-    /// Re-point the pooled state at `hg` with an explicit assignment
-    /// (V-cycle restarts; delta-repaired when `hg` is unchanged).
-    pub fn rebind_with_parts<H: HypergraphOps>(
-        &mut self,
-        phg: PartitionedHypergraph<H>,
-        hg: Arc<H>,
-        parts: &[BlockId],
-        ctx: &Context,
-    ) -> PartitionedHypergraph<H> {
-        self.ws.pool.rebind_with_parts(phg, hg, parts, ctx.epsilon, ctx.threads)
-    }
-
-    /// Release the bound partition's buffers without touching the values
-    /// (n-level batch boundary; see [`crate::partition::PartitionPool::park`]).
-    pub fn park<H: HypergraphOps>(&mut self, phg: PartitionedHypergraph<H>) {
-        self.ws.pool.park(phg);
-    }
-
-    /// Re-bind the parked buffers to `hg`, values preserved; the caller
-    /// repairs the batch delta via `apply_uncontractions`.
-    pub fn unpark<H: HypergraphOps>(
-        &mut self,
-        hg: Arc<H>,
-        ctx: &Context,
-    ) -> PartitionedHypergraph<H> {
-        self.ws.pool.unpark(hg, ctx.epsilon)
-    }
-
-    /// Move a binding onto a structurally equivalent hypergraph of a
-    /// different representation, preserving all values (the n-level
-    /// finest-level hand-off from the dynamic structure to the static
-    /// input, which the flow-capable refiner stack runs on).
-    pub fn rebind_preserving<H1: HypergraphOps, H2: HypergraphOps>(
-        &mut self,
-        phg: PartitionedHypergraph<H1>,
-        hg: Arc<H2>,
-        ctx: &Context,
-    ) -> PartitionedHypergraph<H2> {
-        self.ws.pool.rebind_preserving(phg, hg, ctx.epsilon)
-    }
-
-    /// One zero-copy uncoarsening step: move the refined coarse partition
-    /// onto the finer hypergraph, projecting Π through `fine_to_coarse`
-    /// in place (no snapshot, no intermediate assignment vector).
-    pub fn project_to_level(
-        &mut self,
-        coarse: PartitionedHypergraph,
-        fine_hg: Arc<Hypergraph>,
-        fine_to_coarse: &[NodeId],
-        ctx: &Context,
-    ) -> PartitionedHypergraph {
-        self.ws.pool.rebind_level(coarse, fine_hg, fine_to_coarse, ctx.epsilon, ctx.threads)
-    }
-
     /// Run the full zero-copy uncoarsening sequence over `levels`
     /// (coarsest → finest): per level, rebind the pooled partition onto
     /// the finer hypergraph (`input_hg` below level 0 — the convention of
@@ -555,10 +537,112 @@ impl RefinementPipeline {
         }
         phg
     }
+}
+
+impl RefinementPipeline<Graph> {
+    /// Build the pipeline for a plain-graph uncoarsening sequence whose
+    /// finest level is `g`: the same stack positions as the hypergraph
+    /// pipeline minus the flow stage
+    /// (`rebalance → LP → (det-)FM → rebalance`), on a
+    /// `Workspace<TwoPinState>` whose gain table stays empty and whose
+    /// pooled partition buffers hold one endpoint-pair word per
+    /// undirected edge instead of packed pin counts + connectivity sets.
+    /// Under `ctx.deterministic` the LP/FM slots select the synchronous
+    /// §11 siblings exactly as on hypergraphs.
+    pub fn new_for_graph(ctx: &Context, g: &Graph) -> Self {
+        let mut stack: Vec<Box<dyn Refiner<Graph>>> = Vec::new();
+        stack.push(Box::new(RebalanceRefiner));
+        stack.push(Box::new(LpRefiner));
+        if ctx.use_fm {
+            stack.push(Box::new(FmRefiner));
+        }
+        // no flow stage: flows are Λ-set/quotient-graph machinery with no
+        // two-pin specialization yet (see rust/ARCHITECTURE.md)
+        stack.push(Box::new(RebalanceRefiner));
+        let poisoned = vec![false; stack.len()];
+        let mut pipeline = RefinementPipeline {
+            ws: Workspace::new(ctx.k, ctx.threads, g.num_nodes()),
+            stack,
+            poisoned,
+        };
+        pipeline.ws.reserve_partition(g);
+        pipeline
+    }
+}
+
+impl<R: HypergraphOps> RefinementPipeline<R> {
+    /// Bind the pooled partition state to the coarsest level (static or
+    /// dynamic representation).
+    pub fn bind<H: HypergraphOps<State = R::State>>(
+        &mut self,
+        hg: Arc<H>,
+        parts: &[BlockId],
+        ctx: &Context,
+    ) -> PartitionedHypergraph<H> {
+        self.ws.pool.bind(hg, parts, ctx.epsilon, ctx.threads)
+    }
+
+    /// Re-point the pooled state at `hg` with an explicit assignment
+    /// (V-cycle restarts; delta-repaired when `hg` is unchanged).
+    pub fn rebind_with_parts<H: HypergraphOps<State = R::State>>(
+        &mut self,
+        phg: PartitionedHypergraph<H>,
+        hg: Arc<H>,
+        parts: &[BlockId],
+        ctx: &Context,
+    ) -> PartitionedHypergraph<H> {
+        self.ws.pool.rebind_with_parts(phg, hg, parts, ctx.epsilon, ctx.threads)
+    }
+
+    /// Release the bound partition's buffers without touching the values
+    /// (n-level batch boundary; see [`crate::partition::PartitionPool::park`]).
+    pub fn park<H: HypergraphOps<State = R::State>>(&mut self, phg: PartitionedHypergraph<H>) {
+        self.ws.pool.park(phg);
+    }
+
+    /// Re-bind the parked buffers to `hg`, values preserved; the caller
+    /// repairs the batch delta via `apply_uncontractions`.
+    pub fn unpark<H: HypergraphOps<State = R::State>>(
+        &mut self,
+        hg: Arc<H>,
+        ctx: &Context,
+    ) -> PartitionedHypergraph<H> {
+        self.ws.pool.unpark(hg, ctx.epsilon)
+    }
+
+    /// Move a binding onto a structurally equivalent hypergraph of a
+    /// different representation, preserving all values (the n-level
+    /// finest-level hand-off from the dynamic structure to the static
+    /// input, which the flow-capable refiner stack runs on).
+    pub fn rebind_preserving<H1, H2>(
+        &mut self,
+        phg: PartitionedHypergraph<H1>,
+        hg: Arc<H2>,
+        ctx: &Context,
+    ) -> PartitionedHypergraph<H2>
+    where
+        H1: HypergraphOps<State = R::State>,
+        H2: HypergraphOps<State = R::State>,
+    {
+        self.ws.pool.rebind_preserving(phg, hg, ctx.epsilon)
+    }
+
+    /// One zero-copy uncoarsening step: move the refined coarse partition
+    /// onto the finer hypergraph, projecting Π through `fine_to_coarse`
+    /// in place (no snapshot, no intermediate assignment vector).
+    pub fn project_to_level(
+        &mut self,
+        coarse: PartitionedHypergraph<R>,
+        fine_hg: Arc<R>,
+        fine_to_coarse: &[NodeId],
+        ctx: &Context,
+    ) -> PartitionedHypergraph<R> {
+        self.ws.pool.rebind_level(coarse, fine_hg, fine_to_coarse, ctx.epsilon, ctx.threads)
+    }
 
     /// Localized label propagation on the shared workspace scratch
     /// (n-level batch refinement, paper §9).
-    pub fn lp_localized<H: HypergraphOps>(
+    pub fn lp_localized<H: HypergraphOps<State = R::State>>(
         &mut self,
         phg: &PartitionedHypergraph<H>,
         ctx: &Context,
@@ -569,7 +653,7 @@ impl RefinementPipeline {
 
     /// Run the full refiner stack on the finest level's partition
     /// (standalone refinement; equivalent to distance 0).
-    pub fn refine(&mut self, phg: &PartitionedHypergraph, ctx: &Context) -> Gain {
+    pub fn refine(&mut self, phg: &PartitionedHypergraph<R>, ctx: &Context) -> Gain {
         self.refine_at_distance(phg, ctx, 0)
     }
 
@@ -579,7 +663,7 @@ impl RefinementPipeline {
     /// reuses all workspace state.
     pub fn refine_at_distance(
         &mut self,
-        phg: &PartitionedHypergraph,
+        phg: &PartitionedHypergraph<R>,
         ctx: &Context,
         distance: usize,
     ) -> Gain {
@@ -652,7 +736,7 @@ impl RefinementPipeline {
     /// Π if the isolated worker left it inconsistent, then restore
     /// balance — the partition is fully usable by the remaining refiners
     /// afterwards.
-    fn repair_after_panic(ws: &mut Workspace, phg: &PartitionedHypergraph, ctx: &Context) {
+    fn repair_after_panic(ws: &mut Workspace<R::State>, phg: &PartitionedHypergraph<R>, ctx: &Context) {
         ctx.cancel.note_panic_recovered();
         ws.reset_owner(ws.owner.len());
         if phg.validate().is_err() {
@@ -680,7 +764,7 @@ impl RefinementPipeline {
     /// this dispatches to the seeded synchronous deterministic FM, which
     /// keeps the same table-free cost bound while staying thread-count
     /// invariant.
-    pub fn fm_with_seeds<H: HypergraphOps>(
+    pub fn fm_with_seeds<H: HypergraphOps<State = R::State>>(
         &mut self,
         phg: &PartitionedHypergraph<H>,
         ctx: &Context,
@@ -700,16 +784,16 @@ impl RefinementPipeline {
 
     /// The pooled partition state (alloc/rebind counters for tests and
     /// benches).
-    pub fn partition_pool(&self) -> &PartitionPool {
+    pub fn partition_pool(&self) -> &PartitionPool<R::State> {
         &self.ws.pool
     }
 
     /// The shared workspace (gain-table and allocation-stat access).
-    pub fn workspace(&self) -> &Workspace {
+    pub fn workspace(&self) -> &Workspace<R::State> {
         &self.ws
     }
 
-    pub fn workspace_mut(&mut self) -> &mut Workspace {
+    pub fn workspace_mut(&mut self) -> &mut Workspace<R::State> {
         &mut self.ws
     }
 }
@@ -905,7 +989,7 @@ mod tests {
     #[test]
     fn capacity_growth_is_tracked() {
         let c = ctx(Preset::Default, 2, 1, 1);
-        let mut ws = Workspace::new(2, 1, 64);
+        let mut ws: Workspace = Workspace::new(2, 1, 64);
         assert_eq!(ws.gain_table_allocs(), 1);
         ws.ensure_node_capacity(32); // prefix use: no growth
         assert_eq!(ws.gain_table_allocs(), 1);

@@ -6,7 +6,7 @@ use mtkahypar::benchkit::baselines;
 use mtkahypar::coordinator::context::{Context, Preset};
 use mtkahypar::coordinator::partitioner;
 use mtkahypar::generators::{self, PlantedParams, SatRepresentation};
-use mtkahypar::graph::partitioner::partition_graph;
+use mtkahypar::graph::partitioner::partition_graph_arc;
 use mtkahypar::hypergraph::Hypergraph;
 use mtkahypar::metrics::{self, Objective};
 use mtkahypar::{io, BlockId};
@@ -162,9 +162,9 @@ fn nondeterministic_seeds_vary_but_quality_stable() {
 
 #[test]
 fn graph_pipeline_and_io_roundtrip() {
-    let g = generators::mesh_graph(20, 20);
+    let g = Arc::new(generators::mesh_graph(20, 20));
     let ctx = test_ctx(Preset::Default, 4, 7);
-    let pg = partition_graph(&g, &ctx);
+    let pg = partition_graph_arc(g.clone(), &ctx);
     assert!(pg.is_balanced());
     assert_eq!(pg.cut(), metrics::graph_cut(&g, &pg.parts()));
 
@@ -174,6 +174,33 @@ fn graph_pipeline_and_io_roundtrip() {
     let pfile = dir.join("mesh.part");
     io::write_partition(&pg.parts(), &pfile).unwrap();
     assert_eq!(io::read_partition(&pfile).unwrap(), pg.parts());
+}
+
+#[test]
+fn graph_and_two_pin_hypergraph_view_agree() {
+    // a partitioned graph and the same assignment on the graph's 2-pin
+    // hypergraph view must be metrically indistinguishable: identical
+    // km1/cut/soed, both balanced, and km1 == cut == the weight of the
+    // cut edges (the two-pin collapse the graph fast path relies on)
+    let g = Arc::new(generators::mesh_graph(18, 18));
+    let ctx = test_ctx(Preset::Default, 3, 13);
+    let pg = partition_graph_arc(g.clone(), &ctx);
+    pg.verify_consistency().unwrap();
+    let hg = Arc::new(g.to_hypergraph());
+    let mut phg = mtkahypar::partition::PartitionedHypergraph::new(hg, 3);
+    phg.set_uniform_max_weight(0.03);
+    phg.assign_all(&pg.parts(), 2);
+    phg.verify_consistency().unwrap();
+    assert_eq!(pg.km1(), phg.km1(), "km1 agrees across representations");
+    assert_eq!(pg.cut(), phg.cut(), "cut agrees across representations");
+    assert_eq!(
+        pg.objective_value(Objective::Soed),
+        phg.objective_value(Objective::Soed),
+        "soed agrees (and equals 2·cut on graphs)"
+    );
+    assert_eq!(pg.objective_value(Objective::Soed), 2 * pg.cut());
+    assert!(pg.is_balanced() && phg.is_balanced());
+    assert_eq!(pg.km1(), metrics::graph_cut(&g, &pg.parts()));
 }
 
 #[test]
