@@ -5,7 +5,10 @@
 //!   rationale "increasingly better solution quality at higher cost"),
 //! * portfolio breadth (1 technique vs all nine, §5),
 //! * V-cycles as post-processing (§4.3's alternative),
-//! * bulk piercing on/off is implicit in flows' runtime (cutter warm-up).
+//! * bulk piercing on/off is implicit in flows' runtime (cutter warm-up),
+//! * the deterministic tier: the paper's SDet (det-LP only) vs our
+//!   Deterministic preset (det-LP → det-FM, §11) — the quality the
+//!   synchronous FM buys back while keeping bit-identity.
 
 use mtkahypar::benchkit::{self, suites};
 use mtkahypar::coordinator::context::{Context, Preset};
@@ -16,6 +19,15 @@ use std::time::Instant;
 
 fn base_ctx(seed: u64) -> Context {
     let mut ctx = Context::new(Preset::Default, 8, 0.03).with_threads(4).with_seed(seed);
+    ctx.contraction_limit_factor = 24;
+    ctx.ip_min_repetitions = 2;
+    ctx.ip_max_repetitions = 4;
+    ctx.fm_max_rounds = 4;
+    ctx
+}
+
+fn det_ctx(seed: u64) -> Context {
+    let mut ctx = Context::new(Preset::Deterministic, 8, 0.03).with_threads(4).with_seed(seed);
     ctx.contraction_limit_factor = 24;
     ctx.ip_min_repetitions = 2;
     ctx.ip_max_repetitions = 4;
@@ -60,6 +72,15 @@ fn main() {
                 c
             }),
         ),
+        (
+            "SDet (paper: det-LP only)",
+            Box::new(|s| {
+                let mut c = det_ctx(s);
+                c.use_fm = false;
+                c
+            }),
+        ),
+        ("SDet + det-FM (our Deterministic)", Box::new(det_ctx)),
     ];
 
     let mut rows = Vec::new();
@@ -117,6 +138,8 @@ fn main() {
     println!(
         "\n=> expectations: removing community detection and FM hurt quality; flows and \
          V-cycles improve it at extra cost; a 1-rep portfolio is faster but worse \
-         (paper §4.3/§5 and the V-cycle discussion: ~2× runtime for post-processing)."
+         (paper §4.3/§5 and the V-cycle discussion: ~2× runtime for post-processing). \
+         The deterministic pair isolates det-FM: SDet+det-FM must close most of the \
+         LP-only gap to D while both SDet rows stay bit-identical across thread counts."
     );
 }

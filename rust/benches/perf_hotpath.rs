@@ -18,7 +18,7 @@ use mtkahypar::generators::{mesh_graph, planted_hypergraph, PlantedParams};
 use mtkahypar::hypergraph::contraction;
 use mtkahypar::hypergraph::dynamic::DynamicHypergraph;
 use mtkahypar::partition::{
-    recalculate_gains, GainTable, Move, PartitionPool, PartitionedHypergraph,
+    recalculate_gains, GainTable, KStateMode, Move, PartitionPool, PartitionedHypergraph,
 };
 use mtkahypar::refinement::{flow, lp, Workspace};
 use mtkahypar::util::Rng;
@@ -135,7 +135,8 @@ fn main() {
     let half_rep: Vec<NodeId> = (0..n as NodeId).map(|u| u - (u % 2)).collect();
     let c2 = contraction::contract(&hg, &half_rep, 1);
     let coarse_hg = Arc::new(c2.coarse);
-    let level = Level { coarse: coarse_hg.clone(), fine_to_coarse: c2.fine_to_coarse };
+    let level =
+        Level { coarse: coarse_hg.clone(), fine_to_coarse: c2.fine_to_coarse, net_map: c2.net_map };
     let coarse_n = coarse_hg.num_nodes();
     let coarse_parts: Vec<BlockId> =
         (0..coarse_n).map(|u| (u * k / coarse_n) as BlockId).collect();
@@ -155,7 +156,8 @@ fn main() {
     bench("level build x2: pooled in-place rebind", 5, 2 * n, || {
         let p = bound.take().unwrap();
         let p = pool.rebind_with_parts(p, coarse_hg.clone(), &coarse_parts, 0.03, 1);
-        let p = pool.rebind_level(p, hg.clone(), &level.fine_to_coarse, 0.03, 1);
+        let p =
+            pool.rebind_level(p, hg.clone(), &level.fine_to_coarse, Some(&level.net_map), 0.03, 1);
         std::hint::black_box(&p);
         bound = Some(p);
     });
@@ -344,6 +346,70 @@ fn main() {
         mtkahypar::partition::connectivity::allocation_count(),
         conn_before,
         "the graph path must never allocate connectivity sets"
+    );
+
+    // ---- large-k layer: dense O(n·k)/O(m·k) state vs SparseKState ----
+    // At k = 128 the dense layout pays k-proportional initialization and
+    // memory (packed Φ arrays, Λ bitsets, (k+1)·n gain-table words); the
+    // sparse layout keeps per-net (block → count) mini-tables sized by
+    // min(|e|, k) and a gain cache holding only the penalty entries for
+    // blocks in Λ(I(u)), so both init and update costs follow locality,
+    // not k. The counters pin the memory claim: the sparse run must never
+    // allocate a packed pin-count array or a connectivity bitset, and the
+    // whole run (init + 5k moves) performs exactly one arena allocation.
+    let bk = 128usize;
+    let bp = PlantedParams { n: 6_000, m: 11_000, blocks: bk, ..Default::default() };
+    let bhg = Arc::new(planted_hypergraph(&bp, 77));
+    let bn = bhg.num_nodes();
+    let bparts: Vec<BlockId> = (0..bn).map(|u| (u * bk / bn) as BlockId).collect();
+    let mut brng = Rng::new(13);
+    let bmoves: Vec<(NodeId, BlockId)> = (0..5_000)
+        .map(|_| (brng.next_below(bn) as NodeId, brng.next_below(bk) as BlockId))
+        .collect();
+
+    let mut dense_phg = PartitionedHypergraph::new_with_mode(bhg.clone(), bk, KStateMode::Dense);
+    dense_phg.set_uniform_max_weight(1.0);
+    dense_phg.assign_all(&bparts, 1);
+    let dense_gt = GainTable::with_mode(bn, bk, KStateMode::Dense);
+    bench("gain init k=128: dense O(n*k)", 5, bn, || dense_gt.initialize(&dense_phg, 1));
+
+    let pins_before = mtkahypar::partition::pin_counts::allocation_count();
+    let conn_before = mtkahypar::partition::connectivity::allocation_count();
+    let arena_before = mtkahypar::partition::sparse_state::allocation_count();
+    let mut sparse_phg = PartitionedHypergraph::new_with_mode(bhg.clone(), bk, KStateMode::Sparse);
+    sparse_phg.set_uniform_max_weight(1.0);
+    sparse_phg.assign_all(&bparts, 1);
+    let sparse_gt = GainTable::with_mode(bn, bk, KStateMode::Sparse);
+    bench("gain init k=128: sparse O(pins)", 5, bn, || sparse_gt.initialize(&sparse_phg, 1));
+
+    bench("phi/lambda update k=128: packed (dense)", 10, bmoves.len(), || {
+        for &(u, t) in &bmoves {
+            if dense_phg.block_of(u) != t {
+                let _ = dense_phg.try_move(u, t, Some(&dense_gt));
+            }
+        }
+    });
+    bench("phi/lambda update k=128: hashed (sparse)", 10, bmoves.len(), || {
+        for &(u, t) in &bmoves {
+            if sparse_phg.block_of(u) != t {
+                let _ = sparse_phg.try_move(u, t, Some(&sparse_gt));
+            }
+        }
+    });
+    assert_eq!(
+        mtkahypar::partition::pin_counts::allocation_count(),
+        pins_before,
+        "the sparse large-k path must never allocate a packed pin-count array"
+    );
+    assert_eq!(
+        mtkahypar::partition::connectivity::allocation_count(),
+        conn_before,
+        "the sparse large-k path must never allocate connectivity bitsets"
+    );
+    assert_eq!(
+        mtkahypar::partition::sparse_state::allocation_count(),
+        arena_before + 1,
+        "one arena allocation for the whole sparse run — init and moves reuse it"
     );
 
     // ---- runtime (L1/L2 via PJRT) ----

@@ -56,6 +56,7 @@ pub fn patoh_like(hg: &Arc<Hypergraph>, ctx_in: &Context) -> PartitionedHypergra
         levels.push(crate::coarsening::Level {
             coarse: coarse.clone(),
             fine_to_coarse: c.fine_to_coarse,
+            net_map: c.net_map,
         });
         current = coarse;
     }

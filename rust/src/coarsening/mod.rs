@@ -8,7 +8,7 @@ pub mod matching;
 
 use crate::coordinator::context::Context;
 use crate::hypergraph::{contraction, Hypergraph};
-use crate::NodeId;
+use crate::{EdgeId, NodeId};
 use std::sync::Arc;
 
 /// One level of the multilevel hierarchy.
@@ -17,6 +17,10 @@ pub struct Level {
     pub coarse: Arc<Hypergraph>,
     /// node mapping from the finer hypergraph into `coarse`
     pub fine_to_coarse: Vec<NodeId>,
+    /// net mapping from the finer hypergraph into `coarse`
+    /// (`EdgeId::MAX` for nets dropped by the contraction) — drives the
+    /// Φ/Λ delta repair during uncoarsening instead of full rebuilds
+    pub net_map: Vec<EdgeId>,
 }
 
 /// The full coarsening hierarchy: `input` followed by `levels` of
@@ -89,7 +93,11 @@ pub fn coarsen(
             comms = Some(coarse_comms);
         }
         let coarse = Arc::new(c.coarse);
-        levels.push(Level { coarse: coarse.clone(), fine_to_coarse: c.fine_to_coarse });
+        levels.push(Level {
+            coarse: coarse.clone(),
+            fine_to_coarse: c.fine_to_coarse,
+            net_map: c.net_map,
+        });
         current = coarse;
     }
     Hierarchy { input: hg, levels }

@@ -17,6 +17,7 @@
 //! same thread-count invariance, better quality than LP alone.
 
 use crate::metrics::Objective;
+use crate::partition::KStateChoice;
 use crate::util::error::Result;
 use crate::util::{CancelToken, PhaseTimer};
 use std::sync::Arc;
@@ -69,6 +70,11 @@ pub struct Context {
     pub seed: u64,
     pub threads: usize,
     pub objective: Objective,
+    /// partition-state / gain-table layout (`--kstate`): `Auto` (the
+    /// default) picks the dense packed Φ/Λ arrays for small k and the
+    /// sparse (block → count) mini-table layout above
+    /// [`crate::partition::SPARSE_K_THRESHOLD`]; `MTKH_KSTATE` overrides
+    pub kstate: KStateChoice,
 
     // ---- coarsening (paper §4) ----
     /// coarsening stops at `contraction_limit_factor · k` nodes
@@ -142,6 +148,7 @@ impl Context {
             seed: 0,
             threads: 1,
             objective: Objective::Km1,
+            kstate: KStateChoice::Auto,
             contraction_limit_factor: 160,
             min_shrink: 0.01,
             shrink_limit: 2.5,
@@ -210,6 +217,12 @@ impl Context {
 
     pub fn with_objective(mut self, obj: Objective) -> Self {
         self.objective = obj;
+        self
+    }
+
+    /// Force the dense or sparse partition-state layout (`--kstate`).
+    pub fn with_kstate(mut self, kstate: KStateChoice) -> Self {
+        self.kstate = kstate;
         self
     }
 

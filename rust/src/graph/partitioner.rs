@@ -121,7 +121,7 @@ pub fn partition_graph_arc(g: Arc<Graph>, ctx: &Context) -> PartitionedGraph {
     pipe.refine_at_distance(&pg, ctx, levels.len());
     for i in (0..levels.len()).rev() {
         let finer = if i == 0 { g.clone() } else { levels[i - 1].coarse.clone() };
-        pg = pipe.project_to_level(pg, finer, &levels[i].fine_to_coarse, ctx);
+        pg = pipe.project_to_level(pg, finer, &levels[i].fine_to_coarse, None, ctx);
         // after projecting over levels[i] the partition lives at distance
         // i from the finest level (the uncoarsen() convention)
         pipe.refine_at_distance(&pg, ctx, i);
@@ -324,7 +324,7 @@ mod tests {
         let mut pipe = RefinementPipeline::new_for_graph(&c, &g);
         let mut pg = pipe.bind(coarse, &parts, &c);
         pipe.refine_at_distance(&pg, &c, 1);
-        pg = pipe.project_to_level(pg, g.clone(), &lvl.fine_to_coarse, &c);
+        pg = pipe.project_to_level(pg, g.clone(), &lvl.fine_to_coarse, None, &c);
         pipe.refine_at_distance(&pg, &c, 0);
         assert_eq!(pipe.partition_pool().structural_allocs(), 1);
         assert_eq!(pipe.partition_pool().rebinds(), 1);

@@ -16,7 +16,7 @@
 
 use super::{build_incidence, Hypergraph};
 use crate::parallel::{self, par_for_auto, parallel_prefix_sum, SharedSlice};
-use crate::{EdgeWeight, NodeId, NodeWeight};
+use crate::{EdgeId, EdgeWeight, NodeId, NodeWeight};
 use std::sync::atomic::{AtomicI64, Ordering};
 
 /// Result of a contraction: the coarse hypergraph plus the mapping from
@@ -24,6 +24,12 @@ use std::sync::atomic::{AtomicI64, Ordering};
 pub struct Contraction {
     pub coarse: Hypergraph,
     pub fine_to_coarse: Vec<NodeId>,
+    /// Fine net id → coarse net id. `EdgeId::MAX` marks nets dropped
+    /// during contraction (all pins in one cluster — uniform under any
+    /// projected partition); an INRSRT duplicate maps to its surviving
+    /// representative. Lets [`crate::partition::PartitionPool::rebind_level`]
+    /// repair Φ/Λ per net across the level instead of rebuilding them.
+    pub net_map: Vec<EdgeId>,
 }
 
 /// Net fingerprint — identical nets necessarily agree on it.
@@ -103,6 +109,7 @@ pub fn contract(hg: &Hypergraph, rep: &[NodeId], threads: usize) -> Contraction 
     // Within each (fingerprint, size) group compare pairwise; keep one
     // representative and add up the weights of its duplicates.
     let mut keep: Vec<(u32, EdgeWeight)> = Vec::with_capacity(entries.len());
+    let mut dups: Vec<(u32, u32)> = Vec::new(); // (duplicate, representative)
     let mut g = 0usize;
     while g < entries.len() {
         let mut h = g + 1;
@@ -130,6 +137,7 @@ pub fn contract(hg: &Hypergraph, rep: &[NodeId], threads: usize) -> Contraction 
                     if coarse_nets[ej as usize].as_ref().unwrap() == pi {
                         consumed[j - g] = true;
                         w += hg.net_weight(ej);
+                        dups.push((ej, ei));
                     }
                 }
                 keep.push((ei, w));
@@ -139,6 +147,15 @@ pub fn contract(hg: &Hypergraph, rep: &[NodeId], threads: usize) -> Contraction 
     }
     // Deterministic output order: sort surviving nets by original id.
     parallel::par_sort_by_key(&mut keep, threads, |&(e, _)| e);
+
+    // Fine→coarse net mapping for the cross-level Φ/Λ delta repair.
+    let mut net_map = vec![EdgeId::MAX; m];
+    for (new_id, &(e, _)) in keep.iter().enumerate() {
+        net_map[e as usize] = new_id as EdgeId;
+    }
+    for &(dup, rep_e) in &dups {
+        net_map[dup as usize] = net_map[rep_e as usize];
+    }
 
     // ---- 5. build coarse CSRs ----
     let mut net_offsets = Vec::with_capacity(keep.len() + 1);
@@ -163,7 +180,7 @@ pub fn contract(hg: &Hypergraph, rep: &[NodeId], threads: usize) -> Contraction 
         total_weight: hg.total_weight(),
     };
     debug_assert!(coarse.validate().is_ok());
-    Contraction { coarse, fine_to_coarse }
+    Contraction { coarse, fine_to_coarse, net_map }
 }
 
 #[cfg(test)]
@@ -231,6 +248,48 @@ mod tests {
     fn fingerprint_order_invariant() {
         assert_eq!(fingerprint(&[1, 5, 9]), fingerprint(&[9, 1, 5]));
         assert_ne!(fingerprint(&[1, 5, 9]), fingerprint(&[1, 5, 8]));
+    }
+
+    #[test]
+    fn net_map_tracks_survivors_drops_and_duplicates() {
+        let hg = tiny();
+        // cluster {0,1,3,4} -> rep 0; {2}; {5}; {6}
+        let rep = vec![0, 0, 2, 0, 0, 5, 6];
+        let c = contract(&hg, &rep, 2);
+        // net 1 = {0,1,3,4} collapses to a single cluster -> dropped
+        assert_eq!(c.net_map[1], crate::EdgeId::MAX);
+        // survivors map to consecutive coarse ids in original order
+        assert_eq!(c.net_map[0], 0);
+        assert_eq!(c.net_map[2], 1);
+        assert_eq!(c.net_map[3], 2);
+        // every non-MAX entry names a net with the matching coarse pins
+        for (e, &ce) in c.net_map.iter().enumerate() {
+            if ce == crate::EdgeId::MAX {
+                continue;
+            }
+            let mut projected: Vec<NodeId> = hg
+                .pins(e as crate::EdgeId)
+                .iter()
+                .map(|&p| c.fine_to_coarse[p as usize])
+                .collect();
+            projected.sort_unstable();
+            projected.dedup();
+            assert_eq!(c.coarse.pins(ce), &projected[..], "net {e}");
+        }
+
+        // duplicates point at their surviving representative
+        let hg2 = Hypergraph::from_nets(
+            4,
+            &[vec![0, 2], vec![1, 2], vec![0, 3], vec![1, 3]],
+            None,
+            Some(vec![1, 2, 3, 4]),
+        );
+        let c2 = contract(&hg2, &vec![0, 0, 2, 3], 1);
+        assert_eq!(c2.coarse.num_nets(), 2);
+        assert_eq!(c2.net_map[0], c2.net_map[1], "identical nets share a coarse id");
+        assert_eq!(c2.net_map[2], c2.net_map[3]);
+        assert_ne!(c2.net_map[0], c2.net_map[2]);
+        assert!(c2.net_map.iter().all(|&e| e != crate::EdgeId::MAX));
     }
 
     #[test]

@@ -42,7 +42,10 @@
 //! partitioning keeps running on the static snapshot it expects.
 
 use super::{Hypergraph, HypergraphOps};
+use crate::parallel::{par_for_auto, SharedSlice};
+use crate::util::fxhash::FxHashMap;
 use crate::{EdgeId, EdgeWeight, NodeId, NodeWeight};
+use std::sync::atomic::{AtomicUsize, Ordering};
 
 /// One pin-list mutation of a contraction, recorded for exact inversion.
 #[derive(Clone, Copy, Debug)]
@@ -262,6 +265,96 @@ impl DynamicHypergraph {
         }
     }
 
+    /// Parallel variant of [`Self::uncontract_batch`]: reverts the same
+    /// suffix with the pin-list repairs of *distinct nets* running
+    /// concurrently.
+    ///
+    /// The sequential replay reverts all events in global LIFO order; an
+    /// event only touches its own net's pin region and active-size marker,
+    /// so events of distinct nets commute and per-net reverse order is
+    /// equivalent. Three phases:
+    ///
+    /// 1. group the batch's events by net (sequential, O(batch events)),
+    /// 2. revert each net's event list back-to-front — net groups are
+    ///    disjoint, so they run in parallel without synchronization,
+    /// 3. per-memento O(1) bookkeeping (incident-list truncation, weights,
+    ///    activation) sequentially in LIFO order.
+    ///
+    /// The batch boundary stays O(Σ|I(batch)|) total work; the result is
+    /// bit-identical to `uncontract_batch` regardless of thread count.
+    pub fn uncontract_batch_parallel(&mut self, batch: &[Memento], threads: usize) {
+        if threads <= 1 || batch.len() <= 1 {
+            self.uncontract_batch(batch);
+            return;
+        }
+        let start = batch[0].events_start;
+        debug_assert_eq!(
+            self.event_cursor,
+            batch[batch.len() - 1].events_end,
+            "mementos must be the applied suffix"
+        );
+
+        // Phase 1: group events by net, keeping per-net stack order. The
+        // tuple records everything phase 2 needs: the mutated slot, the
+        // event kind and the contracted/representative pair.
+        let mut groups: FxHashMap<EdgeId, Vec<(usize, bool, NodeId, NodeId)>> =
+            FxHashMap::default();
+        for m in batch {
+            for ev in &self.events[m.events_start..m.events_end] {
+                groups.entry(ev.net).or_default().push((ev.slot, ev.removed, m.v, m.u));
+            }
+        }
+        let groups: Vec<(EdgeId, Vec<(usize, bool, NodeId, NodeId)>)> =
+            groups.into_iter().collect();
+
+        // Phase 2: disjoint per-net reverts in parallel.
+        let restored = {
+            let pins = SharedSlice::new(&mut self.pins);
+            let active_pins = SharedSlice::new(&mut self.active_pins);
+            let net_offsets = &self.net_offsets;
+            let restored = AtomicUsize::new(0);
+            par_for_auto(groups.len(), threads, |gi| {
+                let (e, evs) = &groups[gi];
+                let e = *e as usize;
+                let off = net_offsets[e] as usize;
+                let mut local = 0usize;
+                for &(slot, removed, v, u) in evs.iter().rev() {
+                    // SAFETY: this thread exclusively owns net e's pin
+                    // region and active-size marker (groups are disjoint).
+                    unsafe {
+                        if removed {
+                            // inverse of: swap(slot, off+a-1); active -= 1
+                            let a = *active_pins.read(e) as usize;
+                            active_pins.write(e, (a + 1) as u32);
+                            let tail = *pins.read(off + a);
+                            pins.write(off + a, *pins.read(slot));
+                            pins.write(slot, tail);
+                            debug_assert_eq!(*pins.read(slot), v);
+                            local += 1;
+                        } else {
+                            debug_assert_eq!(*pins.read(slot), u);
+                            pins.write(slot, v);
+                        }
+                    }
+                }
+                restored.fetch_add(local, Ordering::Relaxed);
+            });
+            restored.into_inner()
+        };
+        self.num_active_pins += restored;
+
+        // Phase 3: O(1) bookkeeping per memento, LIFO like the sequential
+        // path (repeated representatives truncate to shrinking prefixes).
+        for m in batch.iter().rev() {
+            debug_assert!(!self.active[m.v as usize]);
+            self.incident[m.u as usize].truncate(m.u_incident_len);
+            self.node_weight[m.u as usize] -= self.node_weight[m.v as usize];
+            self.active[m.v as usize] = true;
+            self.num_active += 1;
+        }
+        self.event_cursor = start;
+    }
+
     /// The nets whose pin list regained `m.v` when `m` was uncontracted
     /// (*removed*-pin events): exactly the nets whose pin count Φ(e, Π(u))
     /// must be incremented by the partition repair. Valid after
@@ -364,7 +457,7 @@ impl DynamicHypergraph {
 }
 
 impl HypergraphOps for DynamicHypergraph {
-    type State = crate::partition::state::PhiLambdaState;
+    type State = crate::partition::state::HgState;
 
     #[inline]
     fn num_nodes(&self) -> usize {
@@ -414,6 +507,13 @@ impl HypergraphOps for DynamicHypergraph {
     #[inline]
     fn max_net_size(&self) -> usize {
         self.max_net_capacity
+    }
+
+    #[inline]
+    fn net_pin_capacity(&self, e: EdgeId) -> usize {
+        // full slot-range size: pins regained by uncontraction must fit
+        // the sparse state's per-net region for the structure's lifetime
+        (self.net_offsets[e as usize + 1] - self.net_offsets[e as usize]) as usize
     }
 
     #[inline]
@@ -544,6 +644,63 @@ mod tests {
         assert_eq!(d.structural_grows(), grows, "re-contraction reuses capacity");
         d.uncontract_batch(&d2_seq);
         d.validate().unwrap();
+    }
+
+    #[test]
+    fn parallel_uncontract_matches_sequential() {
+        // a larger random-ish instance so batches span many nets
+        let mut nets = Vec::new();
+        for i in 0..40u32 {
+            let a = (i * 7) % 60;
+            let b = (i * 13 + 3) % 60;
+            let c = (i * 29 + 11) % 60;
+            let d = (i * 31 + 17) % 60;
+            let mut net = vec![a, b, c, d];
+            net.sort_unstable();
+            net.dedup();
+            if net.len() >= 2 {
+                nets.push(net);
+            }
+        }
+        let hg = Hypergraph::from_nets(60, &nets, None, None);
+        let contract_pairs: Vec<(NodeId, NodeId)> =
+            (0..30).map(|i| (30 + i as NodeId, i as NodeId)).collect();
+
+        let run = |parallel: usize| {
+            let mut d = DynamicHypergraph::from_hypergraph(&hg);
+            let seq: Vec<Memento> =
+                contract_pairs.iter().map(|&(v, u)| d.contract(v, u)).collect();
+            // revert in two batches
+            if parallel > 1 {
+                d.uncontract_batch_parallel(&seq[15..], parallel);
+                d.uncontract_batch_parallel(&seq[..15], parallel);
+            } else {
+                d.uncontract_batch(&seq[15..]);
+                d.uncontract_batch(&seq[..15]);
+            }
+            d.validate().unwrap();
+            d
+        };
+
+        let a = run(1);
+        let b = run(4);
+        assert_eq!(a.num_active_nodes(), 60);
+        assert_eq!(b.num_active_nodes(), 60);
+        assert_eq!(a.pins, b.pins, "pin arrays must be bit-identical");
+        assert_eq!(a.active_pins, b.active_pins);
+        assert_eq!(a.num_active_pins, b.num_active_pins);
+        for u in 0..60 {
+            assert_eq!(a.incident[u], b.incident[u]);
+            assert_eq!(a.node_weight[u], b.node_weight[u]);
+        }
+        // both match the original input
+        for e in 0..HypergraphOps::num_nets(&a) as EdgeId {
+            assert_eq!(pin_set(&a, e), {
+                let mut p = hg.pins(e).to_vec();
+                p.sort_unstable();
+                p
+            });
+        }
     }
 
     #[test]

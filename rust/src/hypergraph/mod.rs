@@ -69,6 +69,15 @@ pub trait HypergraphOps: Send + Sync + Sized {
         self.pins(e).len()
     }
 
+    /// Upper bound on `|e|` over the structure's *lifetime* (sizes the
+    /// sparse Φ/Λ slot arena so per-net regions survive n-level pin
+    /// growth). Equals `net_size` for static structures; the dynamic
+    /// structure reports the full slot-range size of the net.
+    #[inline]
+    fn net_pin_capacity(&self, e: EdgeId) -> usize {
+        self.net_size(e)
+    }
+
     /// Node degree `d(u) = |I(u)|`.
     #[inline]
     fn degree(&self, u: NodeId) -> usize {
@@ -101,7 +110,7 @@ pub trait HypergraphOps: Send + Sync + Sized {
 }
 
 impl HypergraphOps for Hypergraph {
-    type State = crate::partition::state::PhiLambdaState;
+    type State = crate::partition::state::HgState;
 
     #[inline]
     fn num_nodes(&self) -> usize {

@@ -17,6 +17,7 @@ use mtkahypar::generators::{self, PlantedParams};
 use mtkahypar::graph::partitioner::partition_graph_arc;
 use mtkahypar::io;
 use mtkahypar::metrics::Objective;
+use mtkahypar::partition::KStateChoice;
 use std::path::PathBuf;
 use std::process::exit;
 use std::sync::Arc;
@@ -39,6 +40,7 @@ struct Args {
     threads: usize,
     seed: u64,
     time_limit: Option<Duration>,
+    kstate: KStateChoice,
     out: Option<PathBuf>,
 }
 
@@ -46,7 +48,8 @@ fn usage() -> ! {
     eprintln!(
         "usage: mtkahypar (--hgr FILE | --graph FILE | --demo) -k K [-e EPS] \
          [--preset speed|default|default-flows|quality|quality-flows|deterministic] \
-         [--objective km1|cut|soed] [--threads T] [--seed S] [--time-limit SECS] [-o OUT]"
+         [--objective km1|cut|soed] [--threads T] [--seed S] [--time-limit SECS] \
+         [--kstate dense|sparse|auto] [-o OUT]"
     );
     exit(EXIT_USAGE)
 }
@@ -63,6 +66,7 @@ fn parse_args() -> Args {
         threads: 1,
         seed: 0,
         time_limit: None,
+        kstate: KStateChoice::Auto,
         out: None,
     };
     let mut it = std::env::args().skip(1);
@@ -116,6 +120,17 @@ fn parse_args() -> Args {
                 }
                 args.time_limit = Some(Duration::from_secs_f64(secs));
             }
+            "--kstate" => {
+                args.kstate = match next("--kstate").as_str() {
+                    "dense" => KStateChoice::Dense,
+                    "sparse" => KStateChoice::Sparse,
+                    "auto" => KStateChoice::Auto,
+                    other => {
+                        eprintln!("unknown kstate {other}");
+                        usage()
+                    }
+                }
+            }
             "-o" | "--output" => args.out = Some(PathBuf::from(next("-o"))),
             "-h" | "--help" => usage(),
             other => {
@@ -135,7 +150,8 @@ fn main() {
     let mut ctx = Context::new(args.preset, args.k, args.epsilon)
         .with_seed(args.seed)
         .with_threads(args.threads)
-        .with_objective(args.objective);
+        .with_objective(args.objective)
+        .with_kstate(args.kstate);
     ctx.time_limit = args.time_limit;
     if let Err(e) = ctx.validate() {
         eprintln!("invalid configuration: {e:#}");

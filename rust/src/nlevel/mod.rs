@@ -43,9 +43,12 @@
 //! partitioning runs on — after it, uncoarsening performs **zero**
 //! snapshot contractions and **zero** full `rebuild_from_parts` value
 //! rebuilds (asserted by [`NLevelStats`] counters in the tests). Batch
-//! uncontractions are reverted sequentially per batch (the paper
-//! parallelizes within a batch; on this testbed the batch work is far
-//! below the refinement work it unlocks).
+//! uncontractions are reverted **in parallel within each batch**
+//! ([`DynamicHypergraph::uncontract_batch_parallel`]): the batch's event
+//! log is grouped by net, each net's pin-list/prefix reverts replay
+//! independently across threads, and the per-node LIFO bookkeeping runs
+//! as a short sequential epilogue — the result is bit-identical to the
+//! sequential revert for every thread count.
 
 use crate::coarsening::clustering;
 use crate::coordinator::context::Context;
@@ -218,7 +221,7 @@ pub fn partition_with_stats(
         pipeline.park(phg);
         Arc::get_mut(&mut dyn_arc)
             .expect("the parked partition was the only other owner")
-            .uncontract_batch(batch);
+            .uncontract_batch_parallel(batch, ctx.threads);
         phg = pipeline.unpark(dyn_arc.clone(), ctx);
         phg.apply_uncontractions(batch);
         stats.batches += 1;
@@ -368,6 +371,28 @@ mod tests {
         assert_eq!(stats.structural_allocs, 1, "one pooled allocation for the whole run");
         assert!(stats.batches >= 2, "expected a multi-batch uncoarsening");
         assert!(stats.contractions > 0);
+        assert!(phg.is_balanced(), "imbalance {}", phg.imbalance());
+        phg.verify_consistency().unwrap();
+    }
+
+    #[test]
+    fn nlevel_sparse_state_uncoarsening_is_fully_incremental() {
+        // The SparseKState path must preserve the pooled lifecycle: one
+        // structural allocation sized by the dynamic slot ranges (pin
+        // capacities are stable across uncontractions), one value rebuild
+        // at the post-IP bind, and value-preserving unparks at every
+        // batch boundary — same invariants as the dense twin above.
+        let hg = Arc::new(planted_hypergraph(
+            &PlantedParams { n: 600, m: 1100, blocks: 4, ..Default::default() },
+            13,
+        ));
+        let mut c = ctx(Preset::Quality, 4, 2, 13);
+        c.kstate = crate::partition::KStateChoice::Sparse;
+        let (phg, stats) = partition_with_stats(hg, &c);
+        assert_eq!(stats.value_rebuilds, 1, "only the post-IP bind may rebuild values");
+        assert_eq!(stats.rebinds, stats.batches + 1);
+        assert_eq!(stats.structural_allocs, 1, "one pooled sparse allocation for the run");
+        assert!(stats.batches >= 2, "expected a multi-batch uncoarsening");
         assert!(phg.is_balanced(), "imbalance {}", phg.imbalance());
         phg.verify_consistency().unwrap();
     }

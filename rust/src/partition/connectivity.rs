@@ -89,6 +89,15 @@ impl ConnectivitySets {
         self.clear_nets(self.nets_capacity());
     }
 
+    /// Zero the bitset of a single net (exclusive-phase per-net repair
+    /// on the cross-level delta path).
+    pub fn clear_net(&self, e: usize) {
+        let base = self.base(e);
+        for w in &self.words[base..base + self.words_per_net] {
+            w.store(0, Ordering::Relaxed);
+        }
+    }
+
     /// Zero the bitsets of the first `num_nets` nets only (per-level
     /// rebuild on a pooled array).
     pub fn clear_nets(&self, num_nets: usize) {

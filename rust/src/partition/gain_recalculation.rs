@@ -107,7 +107,6 @@ pub fn recalculate_gains_with_scratch_p<P: GainPolicy, H: HypergraphOps>(
     scratch: &mut RecalcScratch,
 ) -> Vec<Gain> {
     let hg = phg.hypergraph();
-    let k = phg.k();
     let l = moves.len();
     scratch.ensure(hg.num_nodes(), hg.num_nets());
     let move_idx = &mut scratch.move_idx;
@@ -126,9 +125,9 @@ pub fn recalculate_gains_with_scratch_p<P: GainPolicy, H: HypergraphOps>(
                 continue; // another thread handles this net
             }
             if P::OBJECTIVE == Objective::Km1 {
-                process_net(phg, e, moves, move_idx, &gains, k);
+                process_net(phg, e, moves, move_idx, &gains);
             } else {
-                process_net_replay::<P, H>(phg, e, moves, move_idx, &gains, k);
+                process_net_replay::<P, H>(phg, e, moves, move_idx, &gains);
             }
         }
     });
@@ -146,45 +145,68 @@ pub fn recalculate_gains_with_scratch_p<P: GainPolicy, H: HypergraphOps>(
     gains.into_iter().map(|g| g.into_inner()).collect()
 }
 
-/// Algorithm 6.2 for a single hyperedge.
+/// Per-block bookkeeping of [`process_net`] — one entry per block the
+/// net's pins touch, so a net costs O(|e|·λ'(e)) instead of O(k).
+#[derive(Clone, Copy)]
+struct NetBlock {
+    block: BlockId,
+    first_in: u32,
+    last_out: i64,
+    non_moved: u32,
+}
+
+fn net_block(blocks: &mut Vec<NetBlock>, b: BlockId) -> &mut NetBlock {
+    match blocks.iter().position(|x| x.block == b) {
+        Some(i) => &mut blocks[i],
+        None => {
+            blocks.push(NetBlock { block: b, first_in: u32::MAX, last_out: i64::MIN, non_moved: 0 });
+            blocks.last_mut().unwrap()
+        }
+    }
+}
+
+/// Algorithm 6.2 for a single hyperedge. Touches only the blocks the
+/// net's pins occupy or move between — no k-sized scratch, so large-k
+/// runs pay per-net work proportional to the net, not to k.
 fn process_net<H: HypergraphOps>(
     phg: &PartitionedHypergraph<H>,
     e: EdgeId,
     moves: &[Move],
     move_idx: &[u32],
     gains: &[AtomicI64],
-    k: usize,
 ) {
     let hg = phg.hypergraph();
     let w = hg.net_weight(e);
-    let mut first_in = vec![u32::MAX; k];
-    let mut last_out = vec![i64::MIN; k];
-    let mut non_moved = vec![0u32; k];
+    let pins = hg.pins(e);
+    let mut blocks: Vec<NetBlock> = Vec::with_capacity(pins.len().min(16));
 
-    for &u in hg.pins(e) {
+    for &u in pins {
         let i = move_idx[u as usize];
         if i != u32::MAX {
             let m = moves[i as usize];
-            last_out[m.from as usize] = last_out[m.from as usize].max(i as i64);
-            first_in[m.to as usize] = first_in[m.to as usize].min(i);
+            let s = net_block(&mut blocks, m.from);
+            s.last_out = s.last_out.max(i as i64);
+            let t = net_block(&mut blocks, m.to);
+            t.first_in = t.first_in.min(i);
         } else {
-            non_moved[phg.block_of(u) as usize] += 1;
+            net_block(&mut blocks, phg.block_of(u)).non_moved += 1;
         }
     }
 
-    for &u in hg.pins(e) {
+    for &u in pins {
         let i = move_idx[u as usize];
         if i == u32::MAX {
             continue;
         }
         let m = moves[i as usize];
-        let (vs, vt) = (m.from as usize, m.to as usize);
+        let s = *net_block(&mut blocks, m.from);
         // connectivity decrease: u last out of V_s, emptied, before any in
-        if last_out[vs] == i as i64 && (i as u64) < first_in[vs] as u64 && non_moved[vs] == 0 {
+        if s.last_out == i as i64 && (i as u64) < s.first_in as u64 && s.non_moved == 0 {
             gains[i as usize].fetch_add(w, Ordering::Relaxed);
         }
+        let t = *net_block(&mut blocks, m.to);
         // connectivity increase: u first into V_t after everyone left
-        if first_in[vt] == i && i as i64 > last_out[vt] && non_moved[vt] == 0 {
+        if t.first_in == i && i as i64 > t.last_out && t.non_moved == 0 {
             gains[i as usize].fetch_sub(w, Ordering::Relaxed);
         }
     }
@@ -205,18 +227,32 @@ fn process_net_replay<P: GainPolicy, H: HypergraphOps>(
     moves: &[Move],
     move_idx: &[u32],
     gains: &[AtomicI64],
-    k: usize,
 ) {
     let hg = phg.hypergraph();
     let w = hg.net_weight(e);
-    let mut phi: Vec<i64> = (0..k).map(|b| phg.pin_count(e, b as BlockId) as i64).collect();
+    // sparse Φ over the ≤ |Λ(e)| + t_e blocks this net can see during
+    // the replay (post-state connectivity plus rewound from-blocks) — no
+    // k-sized scratch
+    let mut phi: Vec<(BlockId, i64)> = Vec::new();
+    for b in phg.connectivity_set(e) {
+        phi.push((b, phg.pin_count(e, b) as i64));
+    }
+    fn phi_slot(phi: &mut Vec<(BlockId, i64)>, b: BlockId) -> &mut i64 {
+        match phi.iter().position(|&(pb, _)| pb == b) {
+            Some(i) => &mut phi[i].1,
+            None => {
+                phi.push((b, 0));
+                &mut phi.last_mut().unwrap().1
+            }
+        }
+    }
     let mut touched: Vec<u32> = Vec::new();
     for &u in hg.pins(e) {
         let i = move_idx[u as usize];
         if i != u32::MAX {
             let m = moves[i as usize];
-            phi[m.to as usize] -= 1;
-            phi[m.from as usize] += 1;
+            *phi_slot(&mut phi, m.to) -= 1;
+            *phi_slot(&mut phi, m.from) += 1;
             touched.push(i);
         }
     }
@@ -224,19 +260,26 @@ fn process_net_replay<P: GainPolicy, H: HypergraphOps>(
         return;
     }
     touched.sort_unstable();
-    let mut lambda = phi.iter().filter(|&&c| c > 0).count() as u32;
+    let mut lambda = phi.iter().filter(|&&(_, c)| c > 0).count() as u32;
     for &i in &touched {
         let m = moves[i as usize];
-        let (vs, vt) = (m.from as usize, m.to as usize);
-        phi[vs] -= 1;
-        if phi[vs] == 0 {
-            lambda -= 1;
-        }
-        if phi[vt] == 0 {
-            lambda += 1;
-        }
-        phi[vt] += 1;
-        let d = P::attributed_delta(w, phi[vs] as u32, phi[vt] as u32, lambda);
+        let phi_s = {
+            let s = phi_slot(&mut phi, m.from);
+            *s -= 1;
+            if *s == 0 {
+                lambda -= 1;
+            }
+            *s
+        };
+        let phi_t = {
+            let t = phi_slot(&mut phi, m.to);
+            if *t == 0 {
+                lambda += 1;
+            }
+            *t += 1;
+            *t
+        };
+        let d = P::attributed_delta(w, phi_s as u32, phi_t as u32, lambda);
         if d != 0 {
             gains[i as usize].fetch_add(d, Ordering::Relaxed);
         }

@@ -56,13 +56,18 @@ pub mod gain_table;
 pub mod objective;
 pub mod pin_counts;
 pub mod pool;
+pub mod sparse_state;
 pub mod state;
 
 pub use gain_recalculation::{best_prefix, recalculate_gains, Move};
 pub use gain_table::GainTable;
 pub use objective::{CutNetPolicy, GainPolicy, Km1Policy, SoedPolicy};
 pub use pool::PartitionPool;
-pub use state::{ConnIter, PartitionState, PhiLambdaState, StateOps, TwoPinState};
+pub use sparse_state::SparseKState;
+pub use state::{
+    resolve_kstate, ConnIter, HgState, KStateChoice, KStateMode, PartitionState, PhiLambdaState,
+    StateDims, StateOps, TwoPinState, SPARSE_K_THRESHOLD,
+};
 use pool::PartitionBuffers;
 
 use crate::hypergraph::dynamic::{DynamicHypergraph, Memento};
@@ -129,14 +134,19 @@ impl PartitionedHypergraph {
 
 impl<H: HypergraphOps> PartitionedHypergraph<H> {
     /// Create an unassigned partition structure (all nodes in block 0
-    /// after [`Self::assign_all`]; until then Π is undefined).
+    /// after [`Self::assign_all`]; until then Π is undefined). The state
+    /// mode is auto-selected from k (see [`resolve_kstate`]).
     pub fn new(hg: Arc<H>, k: usize) -> Self {
-        let bufs = PartitionBuffers::alloc(
-            hg.num_nodes(),
-            hg.num_nets(),
-            hg.max_net_size().max(1),
-            k,
-        );
+        Self::new_with_mode(hg, k, resolve_kstate(KStateChoice::Auto, k))
+    }
+
+    /// Create an unassigned partition structure with an explicit state
+    /// mode — the dense/sparse equivalence tests and large-k callers
+    /// force the representation here; graph partitions ignore the mode
+    /// (their state is always the two-pin specialization).
+    pub fn new_with_mode(hg: Arc<H>, k: usize, mode: KStateMode) -> Self {
+        let dims = StateDims::for_hg(&*hg, k, mode);
+        let bufs = PartitionBuffers::alloc(&dims);
         Self::from_buffers(hg, k, bufs)
     }
 
@@ -148,7 +158,7 @@ impl<H: HypergraphOps> PartitionedHypergraph<H> {
     pub(crate) fn from_buffers(hg: Arc<H>, k: usize, bufs: PartitionBuffers<H::State>) -> Self {
         debug_assert!(bufs.part.len() >= hg.num_nodes());
         debug_assert_eq!(bufs.block_weight.len(), k);
-        debug_assert!(bufs.state.fits(hg.num_nets(), hg.max_net_size(), k));
+        debug_assert!(bufs.state.fits(&StateDims::for_hg(&*hg, k, bufs.state.mode())));
         PartitionedHypergraph {
             part: bufs.part,
             block_weight: bufs.block_weight,
@@ -546,6 +556,37 @@ impl<H: HypergraphOps> PartitionedHypergraph<H> {
             }
         });
     }
+
+    /// Cross-level Φ/Λ delta repair after a projection from the coarser
+    /// level (Π must already hold the projected assignment). `net_map` is
+    /// the fine → coarse net mapping recorded by `contraction::contract`:
+    /// a net mapped to `EdgeId::MAX` was dropped because *all its pins
+    /// contracted into one cluster*, so under the projected Π it is
+    /// uniform and its values are filled in O(1) plus a row clear;
+    /// surviving nets are recounted from their pins. Block weights are
+    /// untouched — projection preserves every per-block total exactly
+    /// (cluster weights are the sums of their members).
+    pub(crate) fn repair_level_delta(&self, net_map: &[EdgeId], threads: usize) {
+        let m = self.hg.num_nets();
+        debug_assert_eq!(net_map.len(), m);
+        // per-level layout first (no-op on fixed-stride states): the
+        // sparse arena regions must match *this* hypergraph before any
+        // per-net reset touches them
+        self.state.begin_level(self);
+        par_for_auto(m, threads, |e| {
+            let eid = e as EdgeId;
+            if net_map[e] == EdgeId::MAX {
+                match self.hg.pins(eid).first() {
+                    Some(&p0) => {
+                        self.state.reset_net_uniform(self, eid, self.block_of_relaxed(p0))
+                    }
+                    None => self.state.reset_net_recount(self, eid),
+                }
+            } else {
+                self.state.reset_net_recount(self, eid);
+            }
+        });
+    }
 }
 
 impl PartitionedHypergraph<DynamicHypergraph> {
@@ -564,10 +605,7 @@ impl PartitionedHypergraph<DynamicHypergraph> {
             debug_assert!((b as usize) < self.k);
             self.part[m.v as usize].store(b, Ordering::Release);
             for e in self.hg.reactivated_nets(m) {
-                let ei = e as usize;
-                self.state.net_locks.lock(ei);
-                let phi = self.state.pin_counts.inc(ei, b as usize);
-                self.state.net_locks.unlock(ei);
+                let phi = self.state.uncontract_inc(e as usize, b);
                 // u itself still holds a pin of e in block b (a *removed*
                 // pin implies u was — and, with the batch suffix already
                 // reverted, still is — an active pin of e), so the net was

@@ -132,6 +132,14 @@ impl PinCountArray {
         self.clear_nets(self.nets_capacity());
     }
 
+    /// Zero the packed row of a single net (exclusive-phase per-net
+    /// repair on the cross-level delta path).
+    pub fn clear_net(&self, e: usize) {
+        for w in &self.words[e * self.words_per_net..(e + 1) * self.words_per_net] {
+            w.store(0, Ordering::Relaxed);
+        }
+    }
+
     /// Zero the entries of the first `num_nets` nets only (per-level
     /// rebuild on a pooled array: stale counts of a previous binding past
     /// the current hypergraph's nets are never read and need no clearing).

@@ -34,11 +34,11 @@
 //! mutates the dynamic hypergraph in place, unparks and repairs only the
 //! batch delta via `apply_uncontractions`.
 
-use super::state::{PartitionState, PhiLambdaState};
+use super::state::{resolve_kstate, HgState, KStateChoice, KStateMode, PartitionState, StateDims};
 use super::PartitionedHypergraph;
 use crate::hypergraph::HypergraphOps;
 use crate::parallel::{par_for_auto, SharedSlice};
-use crate::{BlockId, NodeId, NodeWeight};
+use crate::{BlockId, EdgeId, NodeId, NodeWeight};
 use std::sync::atomic::{AtomicI64, AtomicU32};
 use std::sync::Arc;
 
@@ -47,7 +47,7 @@ use std::sync::Arc;
 /// the memory itself is always valid for any hypergraph that fits. The
 /// per-net portion (Φ/Λ/locks for hypergraphs, endpoint-pair words for
 /// plain graphs) lives behind the [`PartitionState`] parameter.
-pub(crate) struct PartitionBuffers<S: PartitionState = PhiLambdaState> {
+pub(crate) struct PartitionBuffers<S: PartitionState = HgState> {
     pub(crate) part: Vec<AtomicU32>,
     pub(crate) block_weight: Vec<AtomicI64>,
     pub(crate) max_block_weight: Vec<NodeWeight>,
@@ -55,27 +55,26 @@ pub(crate) struct PartitionBuffers<S: PartitionState = PhiLambdaState> {
 }
 
 impl<S: PartitionState> PartitionBuffers<S> {
-    /// One structural allocation covering `n` nodes, `m` nets with counts
-    /// up to `max_net_size`, and `k` blocks.
-    pub(crate) fn alloc(n: usize, m: usize, max_net_size: usize, k: usize) -> Self {
+    /// One structural allocation covering the given dimensions.
+    pub(crate) fn alloc(dims: &StateDims) -> Self {
         PartitionBuffers {
-            part: (0..n).map(|_| AtomicU32::new(0)).collect(),
-            block_weight: (0..k).map(|_| AtomicI64::new(0)).collect(),
-            max_block_weight: vec![NodeWeight::MAX; k],
-            state: S::alloc(m, max_net_size.max(1), k),
+            part: (0..dims.num_nodes).map(|_| AtomicU32::new(0)).collect(),
+            block_weight: (0..dims.k).map(|_| AtomicI64::new(0)).collect(),
+            max_block_weight: vec![NodeWeight::MAX; dims.k],
+            state: S::alloc(dims),
         }
     }
 
-    /// Can these buffers host a `k`-way partition of `hg` without
+    /// Can these buffers host a partition of the given dimensions without
     /// reallocation? The block dimension must match exactly — the packed
     /// pin-count layout and the weight vectors are k-shaped, so buffers
     /// reclaimed from a partition with a different k (e.g. a V-cycle on
     /// an externally built partition) force a counted reallocation
     /// instead of silently reusing wrong-sized state.
-    fn fits<H: HypergraphOps<State = S>>(&self, hg: &H, k: usize) -> bool {
-        self.block_weight.len() == k
-            && self.part.len() >= hg.num_nodes()
-            && self.state.fits(hg.num_nets(), hg.max_net_size(), k)
+    fn fits(&self, dims: &StateDims) -> bool {
+        self.block_weight.len() == dims.k
+            && self.part.len() >= dims.num_nodes
+            && self.state.fits(dims)
     }
 }
 
@@ -93,11 +92,16 @@ impl<S: PartitionState> PartitionBuffers<S> {
 /// ([`Self::structural_allocs`], [`Self::value_rebuilds`],
 /// [`Self::delta_repairs`], [`Self::rebinds`]) exist so tests can pin
 /// which path ran — see the lifecycle table in `rust/ARCHITECTURE.md`.
-pub struct PartitionPool<S: PartitionState = PhiLambdaState> {
+pub struct PartitionPool<S: PartitionState = HgState> {
     k: usize,
+    /// state layout new allocations use (resolved once — per-run choice)
+    mode: KStateMode,
     reserved_nodes: usize,
     reserved_nets: usize,
     reserved_net_size: usize,
+    /// sparse-arena reservation (Σ slot need at the finest level; slot
+    /// needs only shrink under contraction, so this covers every level)
+    reserved_pin_budget: usize,
     /// coarse-Π snapshot for in-place projection (coarse-level-sized use
     /// of a finest-level-sized vector)
     proj_scratch: Vec<BlockId>,
@@ -112,15 +116,24 @@ pub struct PartitionPool<S: PartitionState = PhiLambdaState> {
 }
 
 impl<S: PartitionState> PartitionPool<S> {
-    /// An empty pool for `k`-way partitions. Call [`Self::reserve`] with
-    /// the finest hypergraph before the first bind so the single
+    /// An empty pool for `k`-way partitions in the automatically resolved
+    /// state layout (dense below [`super::state::SPARSE_K_THRESHOLD`],
+    /// sparse above, `MTKH_KSTATE` overriding). Call [`Self::reserve`]
+    /// with the finest hypergraph before the first bind so the single
     /// allocation covers the whole uncoarsening sequence.
     pub fn new(k: usize) -> Self {
+        Self::with_mode(k, resolve_kstate(KStateChoice::Auto, k))
+    }
+
+    /// An empty pool with an explicitly chosen state layout.
+    pub fn with_mode(k: usize, mode: KStateMode) -> Self {
         PartitionPool {
             k,
+            mode,
             reserved_nodes: 0,
             reserved_nets: 0,
             reserved_net_size: 0,
+            reserved_pin_budget: 0,
             proj_scratch: Vec::new(),
             parked: None,
             structural_allocs: 0,
@@ -136,6 +149,10 @@ impl<S: PartitionState> PartitionPool<S> {
         self.reserved_nodes = self.reserved_nodes.max(hg.num_nodes());
         self.reserved_nets = self.reserved_nets.max(hg.num_nets());
         self.reserved_net_size = self.reserved_net_size.max(hg.max_net_size());
+        if self.mode == KStateMode::Sparse {
+            let dims = StateDims::for_hg(hg, self.k, self.mode);
+            self.reserved_pin_budget = self.reserved_pin_budget.max(dims.pin_budget);
+        }
         if self.proj_scratch.len() < self.reserved_nodes {
             self.proj_scratch.resize(self.reserved_nodes, 0);
         }
@@ -143,6 +160,13 @@ impl<S: PartitionState> PartitionPool<S> {
 
     pub fn k(&self) -> usize {
         self.k
+    }
+
+    /// State layout this pool allocates (buffers reclaimed from an
+    /// external partition may temporarily carry the other layout; they
+    /// are reused as long as they fit their own layout's dimensions).
+    pub fn mode(&self) -> KStateMode {
+        self.mode
     }
 
     /// How often buffer memory was allocated. Stays at 1 across an entire
@@ -182,15 +206,18 @@ impl<S: PartitionState> PartitionPool<S> {
         hg: &H,
     ) -> PartitionBuffers<S> {
         match reclaimed {
-            Some(b) if b.fits(hg, self.k) => b,
+            // the fit check uses the *buffer's* layout, not the pool's:
+            // reclaimed dense buffers that still cover `hg` are fine to
+            // keep using (the layouts are semantically interchangeable)
+            Some(b) if b.fits(&StateDims::for_hg(hg, self.k, b.state.mode())) => b,
             _ => {
                 self.structural_allocs += 1;
-                PartitionBuffers::alloc(
-                    hg.num_nodes().max(self.reserved_nodes),
-                    hg.num_nets().max(self.reserved_nets),
-                    hg.max_net_size().max(self.reserved_net_size).max(1),
-                    self.k,
-                )
+                let mut dims = StateDims::for_hg(hg, self.k, self.mode);
+                dims.num_nodes = dims.num_nodes.max(self.reserved_nodes);
+                dims.num_nets = dims.num_nets.max(self.reserved_nets);
+                dims.max_net_size = dims.max_net_size.max(self.reserved_net_size).max(1);
+                dims.pin_budget = dims.pin_budget.max(self.reserved_pin_budget);
+                PartitionBuffers::alloc(&dims)
             }
         }
     }
@@ -275,7 +302,7 @@ impl<S: PartitionState> PartitionPool<S> {
     ) -> PartitionedHypergraph<H> {
         let bufs = self.parked.take().expect("no parked partition buffers");
         assert!(
-            bufs.fits(&*hg, self.k),
+            bufs.fits(&StateDims::for_hg(&*hg, self.k, bufs.state.mode())),
             "parked buffers cannot host the hypergraph without losing values"
         );
         self.rebinds += 1;
@@ -317,18 +344,25 @@ impl<S: PartitionState> PartitionPool<S> {
     /// the coarse-prefix Π snapshot into the pool's reused scratch (the
     /// fine Π cannot be written while the coarse Π still lives in the
     /// same atomics).
+    /// When `net_map` is provided (fine net → coarse net, `EdgeId::MAX`
+    /// for nets dropped during contraction), Φ/Λ are repaired net-by-net
+    /// from the projected Π instead of rebuilt from scratch: dropped
+    /// nets became single-cluster, hence uniform under the projection
+    /// (O(1) reset), and surviving nets are recounted locally. The delta
+    /// path requires reused buffers — a counted structural reallocation
+    /// falls back to the full rebuild.
     pub fn rebind_level<H: HypergraphOps<State = S>>(
         &mut self,
         coarse: PartitionedHypergraph<H>,
         fine_hg: Arc<H>,
         fine_to_coarse: &[NodeId],
+        net_map: Option<&[EdgeId]>,
         eps: f64,
         threads: usize,
     ) -> PartitionedHypergraph<H> {
         debug_assert_eq!(coarse.k(), self.k);
         debug_assert_eq!(fine_to_coarse.len(), fine_hg.num_nodes());
         self.rebinds += 1;
-        self.value_rebuilds += 1;
         let coarse_n = coarse.hypergraph().num_nodes();
         if self.proj_scratch.len() < coarse_n {
             // only reachable when the pool was never reserved for the
@@ -343,11 +377,25 @@ impl<S: PartitionState> PartitionPool<S> {
                 unsafe { scratch.write(u, coarse.block_of(u as NodeId)) };
             });
         }
+        let allocs_before = self.structural_allocs;
         let bufs = self.buffers_for(Some(coarse.into_buffers()), &*fine_hg);
+        let reused = self.structural_allocs == allocs_before;
         let mut fine = PartitionedHypergraph::from_buffers(fine_hg, self.k, bufs);
         fine.set_uniform_max_weight(eps);
         fine.store_projected(fine_to_coarse, &self.proj_scratch, threads);
-        fine.rebuild_from_parts(threads);
+        match net_map {
+            // block weights need no repair on either path: projection
+            // through fine_to_coarse preserves them exactly (a cluster's
+            // weight is the sum of its members' weights)
+            Some(map) if reused && map.len() == fine.hypergraph().num_nets() => {
+                self.delta_repairs += 1;
+                fine.repair_level_delta(map, threads);
+            }
+            _ => {
+                self.value_rebuilds += 1;
+                fine.rebuild_from_parts(threads);
+            }
+        }
         fine
     }
 }
@@ -396,6 +444,31 @@ mod tests {
         (Arc::new(c.coarse), c.fine_to_coarse)
     }
 
+    /// Like [`random_level`] but also keeps the fine→coarse net map.
+    fn random_level_full(
+        hg: &Arc<Hypergraph>,
+        seed: u64,
+    ) -> (Arc<Hypergraph>, Vec<NodeId>, Vec<EdgeId>) {
+        let n = hg.num_nodes();
+        let mut rng = Rng::new(seed ^ 0xabcd);
+        let mut rep: Vec<NodeId> = (0..n as NodeId).collect();
+        for u in 0..n {
+            let t = rng.next_below(n);
+            if rep[t] == t as NodeId {
+                rep[u] = t as NodeId;
+            }
+        }
+        for u in 0..n {
+            let mut r = rep[u] as usize;
+            while rep[r] as usize != r {
+                r = rep[r] as usize;
+            }
+            rep[u] = r as NodeId;
+        }
+        let c = contraction::contract(hg, &rep, 2);
+        (Arc::new(c.coarse), c.fine_to_coarse, c.net_map)
+    }
+
     /// Pin counts, connectivity sets and block weights after an in-place
     /// rebind must be identical to a freshly constructed partition.
     #[test]
@@ -412,7 +485,8 @@ mod tests {
             pool.reserve(&*fine_hg);
             let coarse_phg = pool.bind(coarse_hg.clone(), &coarse_parts, 0.5, 2);
             coarse_phg.verify_consistency().unwrap();
-            let fine_phg = pool.rebind_level(coarse_phg, fine_hg.clone(), &fine_to_coarse, 0.5, 2);
+            let fine_phg =
+                pool.rebind_level(coarse_phg, fine_hg.clone(), &fine_to_coarse, None, 0.5, 2);
             fine_phg.verify_consistency().unwrap();
 
             // reference: legacy constructor on the projected assignment
@@ -449,6 +523,65 @@ mod tests {
         }
     }
 
+    /// The cross-level delta repair (net map supplied) yields the exact
+    /// partition a full rebuild would, while the `value_rebuilds`
+    /// counter stays at the initial bind's single rebuild.
+    #[test]
+    fn rebind_level_delta_repair_matches_full_rebuild() {
+        for mode in [KStateMode::Dense, KStateMode::Sparse] {
+            for seed in 0..8u64 {
+                let k = 2 + (seed % 4) as usize;
+                let fine_hg = random_hypergraph(seed ^ 0x77, 90 + seed as usize * 11, 160);
+                let (mid_hg, fine_to_mid, net_map_fine) = random_level_full(&fine_hg, seed);
+                let (coarse_hg, mid_to_coarse, net_map_mid) = random_level_full(&mid_hg, seed ^ 9);
+                let mut rng = Rng::new(seed ^ 0x52);
+                let coarse_parts: Vec<BlockId> =
+                    (0..coarse_hg.num_nodes()).map(|_| rng.next_below(k) as BlockId).collect();
+
+                let mut pool = PartitionPool::with_mode(k, mode);
+                pool.reserve(&*fine_hg);
+                let mut phg = pool.bind(coarse_hg, &coarse_parts, 0.5, 2);
+                phg = pool.rebind_level(phg, mid_hg, &mid_to_coarse, Some(&net_map_mid), 0.5, 2);
+                phg.verify_consistency().unwrap();
+                phg =
+                    pool.rebind_level(phg, fine_hg.clone(), &fine_to_mid, Some(&net_map_fine), 0.5, 2);
+                phg.verify_consistency().unwrap();
+
+                assert_eq!(pool.structural_allocs(), 1, "seed {seed} ({mode:?})");
+                assert_eq!(pool.value_rebuilds(), 1, "seed {seed} ({mode:?}): only the bind rebuilds");
+                assert_eq!(pool.delta_repairs(), 2, "seed {seed} ({mode:?})");
+
+                // reference: legacy constructor on the twice-projected Π
+                let ref_parts: Vec<BlockId> = fine_to_mid
+                    .iter()
+                    .map(|&m| coarse_parts[mid_to_coarse[m as usize] as usize])
+                    .collect();
+                let mut fresh = PartitionedHypergraph::new(fine_hg.clone(), k);
+                fresh.set_uniform_max_weight(0.5);
+                fresh.assign_all(&ref_parts, 1);
+
+                assert_eq!(phg.parts(), fresh.parts(), "seed {seed} ({mode:?}): Π");
+                for b in 0..k as BlockId {
+                    assert_eq!(phg.block_weight(b), fresh.block_weight(b), "seed {seed} ({mode:?})");
+                }
+                for e in fine_hg.nets() {
+                    assert_eq!(
+                        phg.connectivity(e),
+                        fresh.connectivity(e),
+                        "seed {seed} ({mode:?}): λ({e})"
+                    );
+                    for b in 0..k as BlockId {
+                        assert_eq!(
+                            phg.pin_count(e, b),
+                            fresh.pin_count(e, b),
+                            "seed {seed} ({mode:?}): Φ({e},{b})"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
     /// A reserved pool performs exactly one structural allocation across
     /// an entire multi-level rebind sequence.
     #[test]
@@ -465,8 +598,8 @@ mod tests {
         let mut pool = PartitionPool::new(k);
         pool.reserve(&*fine_hg);
         let mut phg = pool.bind(coarse_hg, &coarse_parts, 0.5, 2);
-        phg = pool.rebind_level(phg, mid_hg, &mid_to_coarse, 0.5, 2);
-        phg = pool.rebind_level(phg, fine_hg.clone(), &fine_to_mid, 0.5, 2);
+        phg = pool.rebind_level(phg, mid_hg, &mid_to_coarse, None, 0.5, 2);
+        phg = pool.rebind_level(phg, fine_hg.clone(), &fine_to_mid, None, 0.5, 2);
         phg.verify_consistency().unwrap();
         assert_eq!(
             pool.structural_allocs(),
@@ -597,7 +730,7 @@ mod tests {
             let mut pool = PartitionPool::new(k);
             pool.reserve(&*fine_hg);
             let phg = pool.bind(coarse_hg.clone(), &coarse_parts, 0.5, threads);
-            let phg = pool.rebind_level(phg, fine_hg.clone(), &f2c, 0.5, threads);
+            let phg = pool.rebind_level(phg, fine_hg.clone(), &f2c, None, 0.5, threads);
             (phg.parts(), (0..k as BlockId).map(|b| phg.block_weight(b)).collect::<Vec<_>>())
         };
         assert_eq!(run(1), run(4));

@@ -1,0 +1,850 @@
+//! `SparseKState` — the large-k partition state: per-net (block → count)
+//! mini-tables instead of the dense §6.1 `m·k` layout.
+//!
+//! The dense [`PhiLambdaState`](super::state::PhiLambdaState) packs Φ as
+//! an `m·k` array and Λ as `m·⌈k/64⌉` bitset words: perfect while a row
+//! of blocks fits a cache line, quadratic waste at the k-in-the-thousands
+//! regimes (SpMV/data placement). Mt-KaHyPar's shared-memory line keeps
+//! only the blocks *actually present* in a net; this module is that
+//! layout:
+//!
+//! - Per net `e`, an **entry region** of `c(e) = min(cap(e), k)` packed
+//!   `(block+1) << 32 | count` words, of which the first λ(e) form a
+//!   compact prefix of live entries (λ(e) ≤ min(|e|, k) ≤ c(e), so the
+//!   region never overflows: `apply_move` decrements `from` before
+//!   incrementing `to`). Λ(e) iteration scans the prefix — O(|Λ(e)|).
+//! - Nets with `c(e) >` [`LINEAR_CUTOFF`] also carry an open-addressed
+//!   **index region** of `(2·c(e)).next_power_of_two()` slots mapping
+//!   `block+1 → entry index` (empty = 0, tombstone = `u64::MAX`), so
+//!   Φ(e, b) lookups stay O(1) on huge nets. Writers (serialized by the
+//!   per-net spin lock) keep the index exact; lock-free readers verify
+//!   the pointed-at entry's tag and fall back to the linear prefix scan
+//!   on any mismatch.
+//! - `cap(e)` is [`HypergraphOps::net_pin_capacity`] — the *lifetime*
+//!   slot capacity, so one layout computed at bind time survives n-level
+//!   pin-list growth between value rebuilds (park → uncontract → unpark
+//!   never reallocates or relayouts).
+//!
+//! Total memory: `Σ_e slot_need(min(cap(e), k))` arena words plus O(m)
+//! offsets/λ/locks — independent of k for bounded net sizes, and
+//! monotone non-increasing under contraction (each coarse net maps
+//! injectively to a fine net of no smaller capacity), so the pool's
+//! finest-level reservation serves every level.
+//!
+//! Concurrency contract: identical to the dense state. Writers hold the
+//! net's spin lock; readers are lock-free and may observe a mid-move
+//! snapshot (a block transiently duplicated or missing during a
+//! swap-remove) — the same tolerance class as the dense bitset's
+//! non-atomic flip pairs, and invisible in the quiescent phases where
+//! verification and the equivalence tests run.
+
+use super::gain_table::GainTable;
+use super::objective::GainPolicy;
+use super::state::{ConnIter, KStateMode, PartitionState, StateDims, StateOps};
+use super::PartitionedHypergraph;
+use crate::datastructures::SpinLockVec;
+use crate::hypergraph::HypergraphOps;
+use crate::parallel::par_for_auto;
+use crate::{BlockId, EdgeId, Gain, NodeId};
+use std::sync::atomic::{AtomicU32, AtomicU64, AtomicUsize, Ordering};
+
+/// Process-wide count of [`SparseKState`] constructions — the sparse
+/// twin of `pin_counts::allocation_count` / `connectivity::allocation_count`,
+/// snapshotted by `perf_hotpath` to prove the pooled lifecycle allocates
+/// exactly once on the large-k path.
+static ALLOCATIONS: AtomicUsize = AtomicUsize::new(0);
+
+/// Number of `SparseKState` allocations since process start.
+pub fn allocation_count() -> usize {
+    ALLOCATIONS.load(Ordering::Relaxed)
+}
+
+/// Entry capacities at or below this get no hash index: a linear scan of
+/// ≤ 8 packed words beats a probe sequence.
+const LINEAR_CUTOFF: usize = 8;
+
+/// Index-slot tombstone (a deleted block's probe-chain placeholder).
+const TOMBSTONE: u64 = u64::MAX;
+
+/// Index slots of a net with entry capacity `c`: power-of-two table at
+/// load factor ≤ 1/2, or none below the linear cutoff.
+#[inline]
+pub(crate) fn index_cap(entry_cap: usize) -> usize {
+    if entry_cap > LINEAR_CUTOFF {
+        (2 * entry_cap).next_power_of_two()
+    } else {
+        0
+    }
+}
+
+/// Arena words a net with entry capacity `c` occupies (entry region plus
+/// optional index region) — the unit [`StateDims::pin_budget`] sums.
+#[inline]
+pub(crate) fn net_slot_need(entry_cap: usize) -> usize {
+    entry_cap + index_cap(entry_cap)
+}
+
+/// Fibonacci-style mixer for the block → probe-start hash.
+#[inline]
+fn hash_block(b: BlockId) -> u64 {
+    (b as u64).wrapping_add(1).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+}
+
+#[inline]
+fn pack_entry(b: BlockId, count: u32) -> u64 {
+    ((b as u64 + 1) << 32) | count as u64
+}
+
+/// `block + 1` of an entry or index word; 0 = empty.
+#[inline]
+fn tag_of(word: u64) -> u64 {
+    word >> 32
+}
+
+#[inline]
+fn count_of(word: u64) -> u32 {
+    word as u32
+}
+
+/// Per-net open-addressed Φ/Λ mini-tables over one pooled arena.
+pub struct SparseKState {
+    /// Per-net arena start (len ≥ m+1); rewritten by `rebuild`'s layout
+    /// pass, which runs in the exclusive bind phase (atomics only for
+    /// interior mutability through `&self`).
+    offsets: Vec<AtomicU64>,
+    /// Per-net entry capacity `c(e) = min(cap(e), k)` (len ≥ m).
+    entry_cap: Vec<AtomicU32>,
+    /// The mini-table arena: entry region then index region per net.
+    slots: Vec<AtomicU64>,
+    /// λ(e) — live entries of net e.
+    lambda: Vec<AtomicU32>,
+    net_locks: SpinLockVec,
+    k: usize,
+}
+
+impl SparseKState {
+    /// `(arena offset, entry capacity, index capacity)` of net `e`.
+    #[inline]
+    fn net_regions(&self, e: usize) -> (usize, usize, usize) {
+        let off = self.offsets[e].load(Ordering::Relaxed) as usize;
+        let c = self.entry_cap[e].load(Ordering::Relaxed) as usize;
+        (off, c, index_cap(c))
+    }
+
+    // ------------------------------------------------- lock-free reads
+
+    /// Φ(e, b) without the net lock: index probe (verified against the
+    /// entry tag), falling back to the compact-prefix scan.
+    fn phi(&self, e: usize, b: BlockId) -> u32 {
+        let (off, c, x) = self.net_regions(e);
+        if x > 0 {
+            let base = off + c;
+            let mask = x - 1;
+            let mut i = (hash_block(b) as usize) & mask;
+            for _ in 0..x {
+                let w = self.slots[base + i].load(Ordering::Acquire);
+                if w == 0 {
+                    return 0;
+                }
+                if w != TOMBSTONE && tag_of(w) == b as u64 + 1 {
+                    let idx = count_of(w) as usize;
+                    if idx < c {
+                        let ew = self.slots[off + idx].load(Ordering::Acquire);
+                        if tag_of(ew) == b as u64 + 1 {
+                            return count_of(ew);
+                        }
+                    }
+                    break; // index raced a swap-remove: rescan linearly
+                }
+                i = (i + 1) & mask;
+            }
+        }
+        self.phi_linear(off, c, b)
+    }
+
+    fn phi_linear(&self, off: usize, c: usize, b: BlockId) -> u32 {
+        for i in 0..c {
+            let w = self.slots[off + i].load(Ordering::Acquire);
+            if w == 0 {
+                return 0;
+            }
+            if tag_of(w) == b as u64 + 1 {
+                return count_of(w);
+            }
+        }
+        0
+    }
+
+    // ------------------------------------ writer-side index maintenance
+    // (net lock held — the index mirrors the entry region exactly)
+
+    fn index_find(&self, off: usize, c: usize, x: usize, b: BlockId) -> Option<usize> {
+        let base = off + c;
+        let mask = x - 1;
+        let mut i = (hash_block(b) as usize) & mask;
+        for _ in 0..x {
+            let w = self.slots[base + i].load(Ordering::Relaxed);
+            if w == 0 {
+                return None;
+            }
+            if w != TOMBSTONE && tag_of(w) == b as u64 + 1 {
+                return Some(count_of(w) as usize);
+            }
+            i = (i + 1) & mask;
+        }
+        None
+    }
+
+    fn index_insert(&self, off: usize, c: usize, x: usize, b: BlockId, entry_idx: usize) {
+        let base = off + c;
+        let mask = x - 1;
+        let mut i = (hash_block(b) as usize) & mask;
+        let mut reuse: Option<usize> = None;
+        for _ in 0..x {
+            let w = self.slots[base + i].load(Ordering::Relaxed);
+            if w == 0 {
+                let t = reuse.unwrap_or(i);
+                self.slots[base + t]
+                    .store(((b as u64 + 1) << 32) | entry_idx as u64, Ordering::Release);
+                return;
+            }
+            if w == TOMBSTONE && reuse.is_none() {
+                reuse = Some(i);
+            }
+            i = (i + 1) & mask;
+        }
+        let t = reuse.expect("open-addressed index keeps load factor ≤ 1/2");
+        self.slots[base + t].store(((b as u64 + 1) << 32) | entry_idx as u64, Ordering::Release);
+    }
+
+    fn index_update(&self, off: usize, c: usize, x: usize, b: BlockId, entry_idx: usize) {
+        let base = off + c;
+        let mask = x - 1;
+        let mut i = (hash_block(b) as usize) & mask;
+        for _ in 0..x {
+            let w = self.slots[base + i].load(Ordering::Relaxed);
+            if w != 0 && w != TOMBSTONE && tag_of(w) == b as u64 + 1 {
+                self.slots[base + i]
+                    .store(((b as u64 + 1) << 32) | entry_idx as u64, Ordering::Release);
+                return;
+            }
+            debug_assert!(w != 0, "index_update: live block missing from index");
+            i = (i + 1) & mask;
+        }
+        debug_assert!(false, "index_update: live block missing from index");
+    }
+
+    fn index_remove(&self, off: usize, c: usize, x: usize, b: BlockId) {
+        let base = off + c;
+        let mask = x - 1;
+        let mut i = (hash_block(b) as usize) & mask;
+        for _ in 0..x {
+            let w = self.slots[base + i].load(Ordering::Relaxed);
+            if w != 0 && w != TOMBSTONE && tag_of(w) == b as u64 + 1 {
+                self.slots[base + i].store(TOMBSTONE, Ordering::Release);
+                return;
+            }
+            debug_assert!(w != 0, "index_remove: live block missing from index");
+            i = (i + 1) & mask;
+        }
+        debug_assert!(false, "index_remove: live block missing from index");
+    }
+
+    // --------------------------------------------- serialized mutation
+    // (net lock held, or the net owned exclusively during a rebuild)
+
+    /// Entry position of block `b`, via the index when present.
+    fn find_pos(&self, off: usize, c: usize, x: usize, b: BlockId) -> Option<usize> {
+        if x > 0 {
+            self.index_find(off, c, x, b)
+        } else {
+            (0..c).take_while(|&i| self.slots[off + i].load(Ordering::Relaxed) != 0).find(|&i| {
+                tag_of(self.slots[off + i].load(Ordering::Relaxed)) == b as u64 + 1
+            })
+        }
+    }
+
+    /// Φ(e, b) += 1, inserting a live entry at position λ(e) when the
+    /// block is new; returns the new count.
+    fn add_pin_serialized(&self, e: usize, b: BlockId) -> u32 {
+        let (off, c, x) = self.net_regions(e);
+        if let Some(i) = self.find_pos(off, c, x, b) {
+            let w = self.slots[off + i].load(Ordering::Relaxed);
+            let cnt = count_of(w) + 1;
+            self.slots[off + i].store(pack_entry(b, cnt), Ordering::Release);
+            return cnt;
+        }
+        let lam = self.lambda[e].load(Ordering::Relaxed) as usize;
+        assert!(lam < c, "sparse Φ mini-table overflow: λ(e) exceeds min(cap(e), k)");
+        self.slots[off + lam].store(pack_entry(b, 1), Ordering::Release);
+        if x > 0 {
+            self.index_insert(off, c, x, b, lam);
+        }
+        self.lambda[e].store(lam as u32 + 1, Ordering::Release);
+        1
+    }
+
+    /// Φ(e, b) -= 1, swap-removing the entry (and compacting the prefix)
+    /// when it reaches zero; returns the new count.
+    fn remove_pin_serialized(&self, e: usize, b: BlockId) -> u32 {
+        let (off, c, x) = self.net_regions(e);
+        let i = self
+            .find_pos(off, c, x, b)
+            .expect("decrementing Φ(e, b) requires a live entry for b");
+        let w = self.slots[off + i].load(Ordering::Relaxed);
+        let cnt = count_of(w) - 1;
+        if cnt > 0 {
+            self.slots[off + i].store(pack_entry(b, cnt), Ordering::Release);
+            return cnt;
+        }
+        let lam = self.lambda[e].load(Ordering::Relaxed) as usize;
+        debug_assert!(lam >= 1);
+        let last = lam - 1;
+        if i != last {
+            // fill the hole with the tail entry *before* zeroing the tail,
+            // so lock-free prefix scans never stop short of a live block
+            let mv = self.slots[off + last].load(Ordering::Relaxed);
+            self.slots[off + i].store(mv, Ordering::Release);
+            if x > 0 {
+                self.index_update(off, c, x, (tag_of(mv) - 1) as BlockId, i);
+            }
+        }
+        self.slots[off + last].store(0, Ordering::Release);
+        if x > 0 {
+            self.index_remove(off, c, x, b);
+        }
+        self.lambda[e].store(last as u32, Ordering::Release);
+        0
+    }
+
+    /// Zero net `e`'s entry/index regions and λ (exclusive phase).
+    fn clear_net_serialized(&self, e: usize) {
+        let (off, c, x) = self.net_regions(e);
+        for i in 0..c + x {
+            self.slots[off + i].store(0, Ordering::Relaxed);
+        }
+        self.lambda[e].store(0, Ordering::Relaxed);
+    }
+
+    /// n-level uncontraction repair: a reactivated pin joins block `b`
+    /// which is already live in Λ(e); locked count-only increment.
+    pub(crate) fn uncontract_inc(&self, e: usize, b: BlockId) -> u32 {
+        self.net_locks.lock(e);
+        let (off, c, x) = self.net_regions(e);
+        let i = self
+            .find_pos(off, c, x, b)
+            .expect("uncontracted pin's block must already be live in Λ(e)");
+        let w = self.slots[off + i].load(Ordering::Relaxed);
+        let cnt = count_of(w) + 1;
+        self.slots[off + i].store(pack_entry(b, cnt), Ordering::Release);
+        self.net_locks.unlock(e);
+        cnt
+    }
+}
+
+impl PartitionState for SparseKState {
+    const USE_GAIN_TABLE: bool = true;
+
+    fn alloc(dims: &StateDims) -> Self {
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        SparseKState {
+            offsets: (0..dims.num_nets + 1).map(|_| AtomicU64::new(0)).collect(),
+            entry_cap: (0..dims.num_nets).map(|_| AtomicU32::new(0)).collect(),
+            slots: (0..dims.pin_budget).map(|_| AtomicU64::new(0)).collect(),
+            lambda: (0..dims.num_nets).map(|_| AtomicU32::new(0)).collect(),
+            net_locks: SpinLockVec::new(dims.num_nets),
+            k: dims.k,
+        }
+    }
+
+    fn fits(&self, dims: &StateDims) -> bool {
+        self.k == dims.k
+            && self.offsets.len() > dims.num_nets
+            && self.entry_cap.len() >= dims.num_nets
+            && self.lambda.len() >= dims.num_nets
+            && self.net_locks.len() >= dims.num_nets
+            && self.slots.len() >= dims.pin_budget
+    }
+
+    fn mode(&self) -> KStateMode {
+        KStateMode::Sparse
+    }
+}
+
+impl<H: HypergraphOps> StateOps<H> for SparseKState {
+    fn rebuild(&self, phg: &PartitionedHypergraph<H>, threads: usize) {
+        let hg = phg.hypergraph();
+        let m = hg.num_nets();
+        StateOps::<H>::begin_level(self, phg);
+        // Parallel per-net recount — each net owns disjoint arena words.
+        par_for_auto(m, threads, |e| {
+            self.clear_net_serialized(e);
+            for &p in hg.pins(e as EdgeId) {
+                self.add_pin_serialized(e, phg.block_of_relaxed(p));
+            }
+        });
+    }
+
+    /// Sequential layout pass: per-net regions from lifetime pin
+    /// capacities (O(m) stores, no allocation — the pooled arena is
+    /// sized for the finest level and capacities only shrink upward).
+    fn begin_level(&self, phg: &PartitionedHypergraph<H>) {
+        let hg = phg.hypergraph();
+        let m = hg.num_nets();
+        let mut off = 0u64;
+        for e in 0..m {
+            self.offsets[e].store(off, Ordering::Relaxed);
+            let c = hg.net_pin_capacity(e as EdgeId).min(self.k);
+            self.entry_cap[e].store(c as u32, Ordering::Relaxed);
+            off += net_slot_need(c) as u64;
+        }
+        self.offsets[m].store(off, Ordering::Relaxed);
+        assert!(
+            off as usize <= self.slots.len(),
+            "sparse state arena too small for this level (pool fits() must gate binds)"
+        );
+    }
+
+    #[inline]
+    fn pin_count(&self, _phg: &PartitionedHypergraph<H>, e: EdgeId, b: BlockId) -> u32 {
+        self.phi(e as usize, b)
+    }
+
+    #[inline]
+    fn connectivity(&self, _phg: &PartitionedHypergraph<H>, e: EdgeId) -> u32 {
+        self.lambda[e as usize].load(Ordering::Acquire)
+    }
+
+    #[inline]
+    fn connectivity_iter<'a>(
+        &'a self,
+        _phg: &'a PartitionedHypergraph<H>,
+        e: EdgeId,
+    ) -> ConnIter<'a> {
+        let (off, c, _x) = self.net_regions(e as usize);
+        ConnIter::Sparse(SparseConnIter { slots: &self.slots[off..off + c], i: 0 })
+    }
+
+    fn apply_move<P: GainPolicy>(
+        &self,
+        phg: &PartitionedHypergraph<H>,
+        u: NodeId,
+        from: BlockId,
+        to: BlockId,
+        gain_table: Option<&GainTable>,
+    ) -> Gain {
+        let hg = phg.hypergraph();
+        let mut gain: Gain = 0;
+        for &e in hg.incident_nets(u) {
+            let ei = e as usize;
+            let we = hg.net_weight(e);
+            self.net_locks.lock(ei);
+            // dec before inc keeps λ(e) ≤ min(|e|, k) throughout, so the
+            // entry region cannot overflow mid-transition
+            let phi_from = self.remove_pin_serialized(ei, from);
+            let phi_to = self.add_pin_serialized(ei, to);
+            let lambda_after =
+                if P::NEEDS_CONNECTIVITY { self.lambda[ei].load(Ordering::Relaxed) } else { 0 };
+            self.net_locks.unlock(ei);
+            gain += P::attributed_delta(we, phi_from, phi_to, lambda_after);
+            if let Some(gt) = gain_table {
+                gt.update_for_pin_change::<P, H>(phg, e, from, to, phi_from, phi_to);
+            }
+        }
+        gain
+    }
+
+    fn gain<P: GainPolicy>(
+        &self,
+        phg: &PartitionedHypergraph<H>,
+        u: NodeId,
+        to: BlockId,
+    ) -> Gain {
+        let from = phg.block_of(u);
+        if from == to {
+            return 0;
+        }
+        let hg = phg.hypergraph();
+        let mut g = 0;
+        for &e in hg.incident_nets(u) {
+            let w = hg.net_weight(e);
+            let sz = if P::NEEDS_NET_SIZE { hg.net_size(e) as u32 } else { 0 };
+            g += P::benefit_contrib(w, self.phi(e as usize, from), sz);
+            g -= P::penalty_contrib(w, self.phi(e as usize, to), sz);
+        }
+        g
+    }
+
+    fn max_gain_move<P: GainPolicy>(
+        &self,
+        phg: &PartitionedHypergraph<H>,
+        u: NodeId,
+    ) -> Option<(Gain, BlockId)> {
+        let from = phg.block_of(u);
+        let hg = phg.hypergraph();
+        let w = hg.node_weight(u);
+        let mut benefit: Gain = 0;
+        let mut candidates: Vec<BlockId> = Vec::new();
+        for &e in hg.incident_nets(u) {
+            let sz = if P::NEEDS_NET_SIZE { hg.net_size(e) as u32 } else { 0 };
+            benefit += P::benefit_contrib(hg.net_weight(e), self.phi(e as usize, from), sz);
+            for b in StateOps::<H>::connectivity_iter(self, phg, e) {
+                if b != from && !candidates.contains(&b) {
+                    candidates.push(b);
+                }
+            }
+        }
+        // Candidate *placement* in the entry prefixes depends on move
+        // history, so unlike the dense bitset walk the enumeration order
+        // here is not canonical — break ties by a total order (gain desc,
+        // block weight asc, block id asc) to stay order-independent.
+        let mut best: Option<(Gain, BlockId)> = None;
+        for t in candidates {
+            if phg.block_weight(t) + w > phg.max_block_weight(t) {
+                continue;
+            }
+            let mut penalty: Gain = 0;
+            for &e in hg.incident_nets(u) {
+                let sz = if P::NEEDS_NET_SIZE { hg.net_size(e) as u32 } else { 0 };
+                penalty += P::penalty_contrib(hg.net_weight(e), self.phi(e as usize, t), sz);
+            }
+            let g = benefit - penalty;
+            match best {
+                None => best = Some((g, t)),
+                Some((bg, bb)) => {
+                    let (wt, wb) = (phg.block_weight(t), phg.block_weight(bb));
+                    if g > bg || (g == bg && (wt < wb || (wt == wb && t < bb))) {
+                        best = Some((g, t));
+                    }
+                }
+            }
+        }
+        best
+    }
+
+    #[inline]
+    fn is_border(&self, phg: &PartitionedHypergraph<H>, u: NodeId) -> bool {
+        phg.hypergraph()
+            .incident_nets(u)
+            .iter()
+            .any(|&e| self.lambda[e as usize].load(Ordering::Acquire) > 1)
+    }
+
+    fn reset_net_uniform(&self, phg: &PartitionedHypergraph<H>, e: EdgeId, b: BlockId) {
+        let ei = e as usize;
+        self.clear_net_serialized(ei);
+        let sz = phg.hypergraph().net_size(e) as u32;
+        if sz > 0 {
+            let (off, c, x) = self.net_regions(ei);
+            debug_assert!(c >= 1);
+            self.slots[off].store(pack_entry(b, sz), Ordering::Release);
+            if x > 0 {
+                self.index_insert(off, c, x, b, 0);
+            }
+            self.lambda[ei].store(1, Ordering::Release);
+        }
+    }
+
+    fn reset_net_recount(&self, phg: &PartitionedHypergraph<H>, e: EdgeId) {
+        let ei = e as usize;
+        self.clear_net_serialized(ei);
+        for &p in phg.hypergraph().pins(e) {
+            self.add_pin_serialized(ei, phg.block_of_relaxed(p));
+        }
+    }
+
+    fn verify(&self, phg: &PartitionedHypergraph<H>) -> Result<(), String> {
+        let hg = phg.hypergraph();
+        let parts = phg.parts();
+        for e in hg.nets() {
+            let ei = e as usize;
+            let mut expect: Vec<(BlockId, u32)> = Vec::new();
+            for &p in hg.pins(e) {
+                let b = parts[p as usize];
+                match expect.iter_mut().find(|(eb, _)| *eb == b) {
+                    Some((_, c)) => *c += 1,
+                    None => expect.push((b, 1)),
+                }
+            }
+            let (off, c, _x) = self.net_regions(ei);
+            let lam = self.lambda[ei].load(Ordering::Acquire) as usize;
+            if lam != expect.len() {
+                return Err(format!("λ({e}) = {lam}, expected {}", expect.len()));
+            }
+            let mut seen: Vec<BlockId> = Vec::new();
+            for i in 0..lam {
+                let w = self.slots[off + i].load(Ordering::Acquire);
+                if w == 0 {
+                    return Err(format!("net {e}: hole at live entry {i} (prefix not compact)"));
+                }
+                let b = (tag_of(w) - 1) as BlockId;
+                if seen.contains(&b) {
+                    return Err(format!("net {e}: duplicate entry for block {b}"));
+                }
+                seen.push(b);
+                match expect.iter().find(|(eb, _)| *eb == b) {
+                    Some((_, cnt)) if *cnt == count_of(w) => {}
+                    Some((_, cnt)) => {
+                        return Err(format!(
+                            "Φ({e},{b}) = {}, expected {cnt}",
+                            count_of(w)
+                        ))
+                    }
+                    None => return Err(format!("net {e}: stale entry for block {b}")),
+                }
+                if self.phi(ei, b) != count_of(w) {
+                    return Err(format!("net {e}: index lookup for block {b} diverges"));
+                }
+            }
+            for i in lam..c {
+                if self.slots[off + i].load(Ordering::Acquire) != 0 {
+                    return Err(format!("net {e}: live word past λ at entry {i}"));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Snapshot iterator over a net's live entry prefix — O(|Λ(e)|).
+pub struct SparseConnIter<'a> {
+    slots: &'a [AtomicU64],
+    i: usize,
+}
+
+impl Iterator for SparseConnIter<'_> {
+    type Item = BlockId;
+
+    #[inline]
+    fn next(&mut self) -> Option<BlockId> {
+        while self.i < self.slots.len() {
+            let w = self.slots[self.i].load(Ordering::Acquire);
+            self.i += 1;
+            if w == 0 {
+                return None;
+            }
+            return Some((tag_of(w) - 1) as BlockId);
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::hypergraph::Hypergraph;
+    use crate::partition::objective::{CutNetPolicy, GainPolicy, Km1Policy, SoedPolicy};
+    use crate::partition::state::KStateMode;
+    use crate::partition::PartitionedHypergraph;
+    use crate::{BlockId, NodeId};
+    use std::sync::atomic::{AtomicBool, AtomicI64, Ordering};
+    use std::sync::Arc;
+
+    fn random_hypergraph(n: usize, m: usize, max_size: usize, seed: u64) -> Hypergraph {
+        let mut rng = crate::util::Rng::new(seed);
+        let mut nets = Vec::with_capacity(m);
+        for _ in 0..m {
+            let sz = 2 + rng.next_below((max_size - 1) as u64) as usize;
+            let mut pins: Vec<NodeId> = Vec::with_capacity(sz);
+            while pins.len() < sz {
+                let p = rng.next_below(n as u64) as NodeId;
+                if !pins.contains(&p) {
+                    pins.push(p);
+                }
+            }
+            nets.push(pins);
+        }
+        Hypergraph::from_nets(n, &nets, None, None)
+    }
+
+    fn twin_partitions(
+        hg: &Arc<Hypergraph>,
+        k: usize,
+        parts: &[BlockId],
+    ) -> (PartitionedHypergraph, PartitionedHypergraph) {
+        let mut dense = PartitionedHypergraph::new_with_mode(hg.clone(), k, KStateMode::Dense);
+        dense.set_uniform_max_weight(1.0);
+        dense.assign_all(parts, 2);
+        let mut sparse = PartitionedHypergraph::new_with_mode(hg.clone(), k, KStateMode::Sparse);
+        sparse.set_uniform_max_weight(1.0);
+        sparse.assign_all(parts, 2);
+        (dense, sparse)
+    }
+
+    fn assert_state_parity(dense: &PartitionedHypergraph, sparse: &PartitionedHypergraph) {
+        let hg = dense.hypergraph();
+        let k = dense.k();
+        assert_eq!(dense.km1(), sparse.km1());
+        assert_eq!(dense.cut(), sparse.cut());
+        assert_eq!(dense.soed(), sparse.soed());
+        for e in hg.nets() {
+            assert_eq!(
+                dense.connectivity(e),
+                sparse.connectivity(e),
+                "λ({e}) diverges between states"
+            );
+            for b in 0..k as BlockId {
+                assert_eq!(
+                    dense.pin_count(e, b),
+                    sparse.pin_count(e, b),
+                    "Φ({e},{b}) diverges between states"
+                );
+            }
+            let mut dl: Vec<BlockId> = dense.connectivity_set(e).collect();
+            let mut sl: Vec<BlockId> = sparse.connectivity_set(e).collect();
+            dl.sort_unstable();
+            sl.sort_unstable();
+            assert_eq!(dl, sl, "Λ({e}) diverges between states");
+        }
+        for u in hg.nodes() {
+            assert_eq!(dense.is_border(u), sparse.is_border(u));
+            for t in 0..k as BlockId {
+                assert_eq!(dense.gain_p::<Km1Policy>(u, t), sparse.gain_p::<Km1Policy>(u, t));
+                assert_eq!(
+                    dense.gain_p::<CutNetPolicy>(u, t),
+                    sparse.gain_p::<CutNetPolicy>(u, t)
+                );
+                assert_eq!(dense.gain_p::<SoedPolicy>(u, t), sparse.gain_p::<SoedPolicy>(u, t));
+            }
+        }
+    }
+
+    fn randomized_parity_for<P: GainPolicy>(k: usize, seed: u64) {
+        let n = 60;
+        let hg = Arc::new(random_hypergraph(n, 40, 10, seed));
+        let parts: Vec<BlockId> = (0..n).map(|u| (u % k) as BlockId).collect();
+        let (dense, sparse) = twin_partitions(&hg, k, &parts);
+        dense.verify_consistency().unwrap();
+        sparse.verify_consistency().unwrap();
+        let mut rng = crate::util::Rng::new(seed ^ 0xABCD);
+        for _ in 0..200 {
+            let u = rng.next_below(n as u64) as NodeId;
+            let to = rng.next_below(k as u64) as BlockId;
+            if to == dense.block_of(u) {
+                continue;
+            }
+            let gd = dense.try_move_p::<P>(u, to, None);
+            let gs = sparse.try_move_p::<P>(u, to, None);
+            match (gd, gs) {
+                (Some(d), Some(s)) => {
+                    assert_eq!(d.attributed_gain, s.attributed_gain, "attributed gain diverges")
+                }
+                (None, None) => {}
+                _ => panic!("balance outcome diverges between states"),
+            }
+        }
+        dense.verify_consistency().unwrap();
+        sparse.verify_consistency().unwrap();
+        assert_state_parity(&dense, &sparse);
+    }
+
+    #[test]
+    fn randomized_moves_keep_dense_and_sparse_identical_km1() {
+        randomized_parity_for::<Km1Policy>(5, 11);
+        randomized_parity_for::<Km1Policy>(17, 12);
+    }
+
+    #[test]
+    fn randomized_moves_keep_dense_and_sparse_identical_cut() {
+        randomized_parity_for::<CutNetPolicy>(5, 21);
+        randomized_parity_for::<CutNetPolicy>(17, 22);
+    }
+
+    #[test]
+    fn randomized_moves_keep_dense_and_sparse_identical_soed() {
+        randomized_parity_for::<SoedPolicy>(5, 31);
+        randomized_parity_for::<SoedPolicy>(17, 32);
+    }
+
+    #[test]
+    fn large_k_exercises_the_index_region() {
+        // one huge net over 200 nodes spread across 128 blocks: entry
+        // capacity min(200, 128) = 128 > LINEAR_CUTOFF forces the
+        // open-addressed index path for every lookup
+        let n = 200usize;
+        let k = 128usize;
+        let mut nets: Vec<Vec<NodeId>> = vec![(0..n as NodeId).collect()];
+        for u in 0..(n as NodeId) - 1 {
+            nets.push(vec![u, u + 1]);
+        }
+        let hg = Arc::new(Hypergraph::from_nets(n, &nets, None, None));
+        let parts: Vec<BlockId> = (0..n).map(|u| (u % k) as BlockId).collect();
+        let (dense, sparse) = twin_partitions(&hg, k, &parts);
+        assert_state_parity(&dense, &sparse);
+        let mut rng = crate::util::Rng::new(99);
+        for _ in 0..500 {
+            let u = rng.next_below(n as u64) as NodeId;
+            let to = rng.next_below(k as u64) as BlockId;
+            if to == dense.block_of(u) {
+                continue;
+            }
+            let gd = dense.try_move_p::<Km1Policy>(u, to, None);
+            let gs = sparse.try_move_p::<Km1Policy>(u, to, None);
+            assert_eq!(gd.map(|o| o.attributed_gain), gs.map(|o| o.attributed_gain));
+        }
+        sparse.verify_consistency().unwrap();
+        assert_state_parity(&dense, &sparse);
+    }
+
+    #[test]
+    fn concurrent_moves_once_per_node_sum_exactly_on_sparse() {
+        for trial in 0..6u64 {
+            let n = 48usize;
+            let k = 6usize;
+            let hg = Arc::new(random_hypergraph(n, 30, 8, 1000 + trial));
+            let parts: Vec<BlockId> = (0..n).map(|u| (u % k) as BlockId).collect();
+            let mut phg =
+                PartitionedHypergraph::new_with_mode(hg.clone(), k, KStateMode::Sparse);
+            phg.set_uniform_max_weight(1.0);
+            phg.assign_all(&parts, 2);
+            let before = phg.km1();
+            let total = AtomicI64::new(0);
+            let claimed: Vec<AtomicBool> = (0..n).map(|_| AtomicBool::new(false)).collect();
+            std::thread::scope(|s| {
+                for t in 0..4u64 {
+                    let phg = &phg;
+                    let total = &total;
+                    let claimed = &claimed;
+                    s.spawn(move || {
+                        let mut rng = crate::util::Rng::new(trial * 37 + t);
+                        for _ in 0..24 {
+                            let u = rng.next_below(n as u64) as NodeId;
+                            if claimed[u as usize].swap(true, Ordering::AcqRel) {
+                                continue;
+                            }
+                            let to = rng.next_below(k as u64) as BlockId;
+                            if to == phg.block_of(u) {
+                                continue;
+                            }
+                            if let Some(out) = phg.try_move(u, to, None) {
+                                total.fetch_add(out.attributed_gain, Ordering::Relaxed);
+                            }
+                        }
+                    });
+                }
+            });
+            phg.verify_consistency().unwrap();
+            assert_eq!(
+                before - total.load(Ordering::Relaxed),
+                phg.km1(),
+                "attributed gains sum exactly (trial {trial})"
+            );
+        }
+    }
+
+    #[test]
+    fn sparse_max_gain_move_reports_exact_gains() {
+        let n = 40usize;
+        let k = 8usize;
+        let hg = Arc::new(random_hypergraph(n, 25, 6, 77));
+        let parts: Vec<BlockId> = (0..n).map(|u| (u % k) as BlockId).collect();
+        let mut phg = PartitionedHypergraph::new_with_mode(hg, k, KStateMode::Sparse);
+        phg.set_uniform_max_weight(1.0);
+        phg.assign_all(&parts, 2);
+        for u in 0..n as NodeId {
+            if let Some((g, t)) = phg.max_gain_move(u) {
+                assert_eq!(g, phg.gain(u, t), "reported gain is the exact gain");
+                assert_ne!(t, phg.block_of(u));
+            }
+        }
+    }
+}

@@ -27,6 +27,7 @@ use super::connectivity::{ConnSetIter, ConnectivitySets};
 use super::gain_table::GainTable;
 use super::objective::GainPolicy;
 use super::pin_counts::PinCountArray;
+use super::sparse_state::{net_slot_need, SparseConnIter, SparseKState};
 use super::PartitionedHypergraph;
 use crate::datastructures::SpinLockVec;
 use crate::graph::Graph;
@@ -35,6 +36,110 @@ use crate::metrics::Objective;
 use crate::parallel::par_for_auto;
 use crate::{BlockId, EdgeId, Gain, NodeId};
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::OnceLock;
+
+// ===================================================================
+// State-mode selection (dense §6.1 layout vs the large-k sparse layout)
+// ===================================================================
+
+/// Which Φ/Λ + gain-cache representation a hypergraph run uses.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KStateMode {
+    /// Packed `m·k` pin counts + `m·⌈k/64⌉` connectivity bitsets + the
+    /// dense `n·k` gain table (paper §6.1/§6.2) — the right trade while
+    /// a row of blocks is about a cache line.
+    Dense,
+    /// Per-net (block → count) mini-tables sized by `min(|e|, k)` and a
+    /// two-level per-node gain cache over Λ(I(u)) — memory and
+    /// initialization independent of k.
+    Sparse,
+}
+
+/// User-facing selection knob (`--kstate`, `Context::kstate`): `Auto`
+/// picks [`KStateMode::Sparse`] above [`SPARSE_K_THRESHOLD`] blocks.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum KStateChoice {
+    #[default]
+    Auto,
+    Dense,
+    Sparse,
+}
+
+/// Above this k, `Auto` switches to the sparse state: beyond a cache
+/// line of blocks per row, the dense layout's `O(m·k)` packed entries
+/// and `O(n·k)` gain-table initialization start to dominate the run.
+pub const SPARSE_K_THRESHOLD: usize = 64;
+
+/// Process-wide override, read once: `MTKH_KSTATE=dense|sparse` forces
+/// the mode for every run (the CI large-k lane uses this to push the
+/// whole integration suite through the sparse path).
+fn env_kstate() -> Option<KStateMode> {
+    static FORCED: OnceLock<Option<KStateMode>> = OnceLock::new();
+    *FORCED.get_or_init(|| match std::env::var("MTKH_KSTATE").ok().as_deref() {
+        Some("dense") => Some(KStateMode::Dense),
+        Some("sparse") => Some(KStateMode::Sparse),
+        _ => None,
+    })
+}
+
+/// Resolve the effective state mode for a run with `k` blocks: the
+/// `MTKH_KSTATE` environment override wins, then an explicit choice,
+/// then `Auto` selects by k.
+pub fn resolve_kstate(choice: KStateChoice, k: usize) -> KStateMode {
+    if let Some(forced) = env_kstate() {
+        return forced;
+    }
+    match choice {
+        KStateChoice::Dense => KStateMode::Dense,
+        KStateChoice::Sparse => KStateMode::Sparse,
+        KStateChoice::Auto => {
+            if k > SPARSE_K_THRESHOLD {
+                KStateMode::Sparse
+            } else {
+                KStateMode::Dense
+            }
+        }
+    }
+}
+
+/// The allocation-relevant dimensions of a partitioned structure — what
+/// [`PartitionState::alloc`] sizes against and [`PartitionState::fits`]
+/// checks a pooled buffer against.
+#[derive(Clone, Copy, Debug)]
+pub struct StateDims {
+    pub num_nodes: usize,
+    pub num_nets: usize,
+    /// Largest Φ value any net can reach (≥ 1).
+    pub max_net_size: usize,
+    /// Sparse mini-table arena words, `Σ_e slot_need(min(cap(e), k))`;
+    /// 0 under a dense mode (not computed — dense sizing ignores it).
+    pub pin_budget: usize,
+    pub k: usize,
+    pub mode: KStateMode,
+}
+
+impl StateDims {
+    /// Measure `hg` for `k` blocks under `mode`. The sparse pin budget
+    /// derives from [`HypergraphOps::net_pin_capacity`] (lifetime slot
+    /// capacities), so a layout computed from these dims survives
+    /// n-level pin-list growth between value rebuilds.
+    pub fn for_hg<H: HypergraphOps>(hg: &H, k: usize, mode: KStateMode) -> Self {
+        let pin_budget = match mode {
+            KStateMode::Dense => 0,
+            KStateMode::Sparse => (0..hg.num_nets())
+                .map(|e| net_slot_need(hg.net_pin_capacity(e as EdgeId).min(k)))
+                .sum(),
+        };
+        StateDims {
+            num_nodes: hg.num_nodes(),
+            num_nets: hg.num_nets(),
+            max_net_size: hg.max_net_size().max(1),
+            pin_budget,
+            k,
+            mode,
+        }
+    }
+}
 
 /// Structural storage of a partition, independent of the bound
 /// (hyper)graph: how it is allocated, whether pooled buffers fit a level,
@@ -51,13 +156,18 @@ pub trait PartitionState: Send + Sync + Sized {
     /// the FM drivers skip building it when this is `false`.
     const USE_GAIN_TABLE: bool;
 
-    /// Allocate state for `num_nets` nets of size ≤ `max_net_size` and
-    /// `k` blocks.
-    fn alloc(num_nets: usize, max_net_size: usize, k: usize) -> Self;
+    /// Allocate state sized for `dims`.
+    fn alloc(dims: &StateDims) -> Self;
 
     /// Can this (possibly pooled, larger) allocation serve a structure
-    /// with `num_nets` nets of size ≤ `max_net_size` under `k` blocks?
-    fn fits(&self, num_nets: usize, max_net_size: usize, k: usize) -> bool;
+    /// with the given dims?
+    fn fits(&self, dims: &StateDims) -> bool;
+
+    /// The mode this allocation answers to — lets callers rebuild
+    /// matching [`StateDims`] for a buffer of unknown provenance.
+    fn mode(&self) -> KStateMode {
+        KStateMode::Dense
+    }
 }
 
 /// The per-representation operations a [`PartitionedHypergraph`] delegates
@@ -116,14 +226,33 @@ pub trait StateOps<H: HypergraphOps>: PartitionState {
     /// Is `u` incident to a cut net?
     fn is_border(&self, phg: &PartitionedHypergraph<H>, u: NodeId) -> bool;
 
+    /// Prepare per-level internal layout for the currently bound
+    /// hypergraph *without touching values* — a no-op for fixed-stride
+    /// states; the sparse state recomputes its per-net arena regions
+    /// here. `rebuild` implies it; callers that skip `rebuild` (the
+    /// cross-level delta repair) must invoke it before any
+    /// `reset_net_*` call.
+    fn begin_level(&self, _phg: &PartitionedHypergraph<H>) {}
+
+    /// Exclusive-phase repair: overwrite net `e`'s values as if all its
+    /// pins sat in block `b` — the dropped-net fast path of the
+    /// cross-level delta repair (`e` must be uniform under Π).
+    fn reset_net_uniform(&self, phg: &PartitionedHypergraph<H>, e: EdgeId, b: BlockId);
+
+    /// Exclusive-phase repair: overwrite net `e`'s values by recounting
+    /// its pins from Π.
+    fn reset_net_recount(&self, phg: &PartitionedHypergraph<H>, e: EdgeId);
+
     /// Check the state against a from-scratch recomputation from Π.
     fn verify(&self, phg: &PartitionedHypergraph<H>) -> Result<(), String>;
 }
 
 /// Iterator over a connectivity set Λ(e) — dense bitset walk for the
-/// hypergraph state, at most two derived blocks for the two-pin state.
+/// §6.1 hypergraph state, a compact entry-prefix scan for the sparse
+/// state, at most two derived blocks for the two-pin state.
 pub enum ConnIter<'a> {
     Dense(ConnSetIter<'a>),
+    Sparse(SparseConnIter<'a>),
     TwoPin { first: Option<BlockId>, second: Option<BlockId> },
 }
 
@@ -134,6 +263,7 @@ impl Iterator for ConnIter<'_> {
     fn next(&mut self) -> Option<BlockId> {
         match self {
             ConnIter::Dense(it) => it.next().map(|b| b as BlockId),
+            ConnIter::Sparse(it) => it.next(),
             ConnIter::TwoPin { first, second } => first.take().or_else(|| second.take()),
         }
     }
@@ -154,25 +284,25 @@ pub struct PhiLambdaState {
 impl PartitionState for PhiLambdaState {
     const USE_GAIN_TABLE: bool = true;
 
-    fn alloc(num_nets: usize, max_net_size: usize, k: usize) -> Self {
+    fn alloc(dims: &StateDims) -> Self {
         PhiLambdaState {
-            pin_counts: PinCountArray::new(num_nets, k, max_net_size.max(1)),
-            conn: ConnectivitySets::new(num_nets, k),
-            net_locks: SpinLockVec::new(num_nets),
+            pin_counts: PinCountArray::new(dims.num_nets, dims.k, dims.max_net_size.max(1)),
+            conn: ConnectivitySets::new(dims.num_nets, dims.k),
+            net_locks: SpinLockVec::new(dims.num_nets),
         }
     }
 
-    fn fits(&self, num_nets: usize, max_net_size: usize, k: usize) -> bool {
-        self.pin_counts.blocks() == k
-            && self.conn.blocks() == k
-            && self.pin_counts.nets_capacity() >= num_nets
-            && self.pin_counts.can_represent(max_net_size)
-            && self.conn.nets_capacity() >= num_nets
-            && self.net_locks.len() >= num_nets
+    fn fits(&self, dims: &StateDims) -> bool {
+        self.pin_counts.blocks() == dims.k
+            && self.conn.blocks() == dims.k
+            && self.pin_counts.nets_capacity() >= dims.num_nets
+            && self.pin_counts.can_represent(dims.max_net_size)
+            && self.conn.nets_capacity() >= dims.num_nets
+            && self.net_locks.len() >= dims.num_nets
     }
 }
 
-impl<H: HypergraphOps<State = PhiLambdaState>> StateOps<H> for PhiLambdaState {
+impl<H: HypergraphOps> StateOps<H> for PhiLambdaState {
     fn rebuild(&self, phg: &PartitionedHypergraph<H>, threads: usize) {
         let m = phg.hypergraph().num_nets();
         self.pin_counts.clear_nets(m);
@@ -326,6 +456,29 @@ impl<H: HypergraphOps<State = PhiLambdaState>> StateOps<H> for PhiLambdaState {
             .any(|&e| self.conn.connectivity(e as usize) > 1)
     }
 
+    fn reset_net_uniform(&self, phg: &PartitionedHypergraph<H>, e: EdgeId, b: BlockId) {
+        let ei = e as usize;
+        self.pin_counts.clear_net(ei);
+        self.conn.clear_net(ei);
+        let sz = phg.hypergraph().net_size(e) as u32;
+        if sz > 0 {
+            self.pin_counts.set(ei, b as usize, sz);
+            self.conn.flip(ei, b as usize);
+        }
+    }
+
+    fn reset_net_recount(&self, phg: &PartitionedHypergraph<H>, e: EdgeId) {
+        let ei = e as usize;
+        self.pin_counts.clear_net(ei);
+        self.conn.clear_net(ei);
+        for &p in phg.hypergraph().pins(e) {
+            let b = phg.block_of_relaxed(p) as usize;
+            if self.pin_counts.inc(ei, b) == 1 {
+                self.conn.flip(ei, b);
+            }
+        }
+    }
+
     fn verify(&self, phg: &PartitionedHypergraph<H>) -> Result<(), String> {
         let hg = phg.hypergraph();
         let parts = phg.parts();
@@ -384,12 +537,12 @@ impl TwoPinState {
 impl PartitionState for TwoPinState {
     const USE_GAIN_TABLE: bool = false;
 
-    fn alloc(num_nets: usize, _max_net_size: usize, _k: usize) -> Self {
-        TwoPinState { words: (0..num_nets).map(|_| AtomicU64::new(0)).collect() }
+    fn alloc(dims: &StateDims) -> Self {
+        TwoPinState { words: (0..dims.num_nets).map(|_| AtomicU64::new(0)).collect() }
     }
 
-    fn fits(&self, num_nets: usize, _max_net_size: usize, _k: usize) -> bool {
-        self.words.len() >= num_nets
+    fn fits(&self, dims: &StateDims) -> bool {
+        self.words.len() >= dims.num_nets
     }
 }
 
@@ -539,6 +692,18 @@ impl StateOps<Graph> for TwoPinState {
         phg.hypergraph().neighbors(u).any(|(v, _)| phg.block_of(v) != from)
     }
 
+    fn reset_net_uniform(&self, _phg: &PartitionedHypergraph<Graph>, e: EdgeId, b: BlockId) {
+        let w = ((b as u64) << 32) | b as u64;
+        self.words[e as usize].store(w, Ordering::Relaxed);
+    }
+
+    fn reset_net_recount(&self, phg: &PartitionedHypergraph<Graph>, e: EdgeId) {
+        let ps = phg.hypergraph().pins(e);
+        let bx = phg.block_of_relaxed(ps[0]) as u64;
+        let by = phg.block_of_relaxed(ps[1]) as u64;
+        self.words[e as usize].store((bx << 32) | by, Ordering::Relaxed);
+    }
+
     fn verify(&self, phg: &PartitionedHypergraph<Graph>) -> Result<(), String> {
         let g = phg.hypergraph();
         let parts = phg.parts();
@@ -553,6 +718,147 @@ impl StateOps<Graph> for TwoPinState {
             }
         }
         Ok(())
+    }
+}
+
+// ===================================================================
+// HgState — the k-selected hypergraph state (dense or sparse)
+// ===================================================================
+
+/// The hypergraph partition state, selected per run from k and the
+/// `--kstate` / `MTKH_KSTATE` knobs: the dense §6.1 [`PhiLambdaState`]
+/// while `k·m` words are cheap, the [`SparseKState`] mini-table layout
+/// above [`SPARSE_K_THRESHOLD`]. Both variants implement every
+/// [`StateOps`] method with identical Φ/Λ/gain semantics, so refinement
+/// code never branches on the representation.
+pub enum HgState {
+    Dense(PhiLambdaState),
+    Sparse(SparseKState),
+}
+
+macro_rules! hg_delegate {
+    ($self:ident, $s:ident => $body:expr) => {
+        match $self {
+            HgState::Dense($s) => $body,
+            HgState::Sparse($s) => $body,
+        }
+    };
+}
+
+impl HgState {
+    /// n-level uncontraction repair: net `e` regained a pin whose block
+    /// `b` is already in Λ(e) — a locked count-only increment (Λ never
+    /// changes). Returns Φ(e, b) after.
+    pub(crate) fn uncontract_inc(&self, e: usize, b: BlockId) -> u32 {
+        match self {
+            HgState::Dense(s) => {
+                s.net_locks.lock(e);
+                let phi = s.pin_counts.inc(e, b as usize);
+                s.net_locks.unlock(e);
+                phi
+            }
+            HgState::Sparse(s) => s.uncontract_inc(e, b),
+        }
+    }
+}
+
+impl PartitionState for HgState {
+    const USE_GAIN_TABLE: bool = true;
+
+    fn alloc(dims: &StateDims) -> Self {
+        match dims.mode {
+            KStateMode::Dense => HgState::Dense(PhiLambdaState::alloc(dims)),
+            KStateMode::Sparse => HgState::Sparse(SparseKState::alloc(dims)),
+        }
+    }
+
+    fn fits(&self, dims: &StateDims) -> bool {
+        match (self, dims.mode) {
+            (HgState::Dense(s), KStateMode::Dense) => s.fits(dims),
+            (HgState::Sparse(s), KStateMode::Sparse) => s.fits(dims),
+            _ => false,
+        }
+    }
+
+    fn mode(&self) -> KStateMode {
+        match self {
+            HgState::Dense(_) => KStateMode::Dense,
+            HgState::Sparse(_) => KStateMode::Sparse,
+        }
+    }
+}
+
+impl<H: HypergraphOps> StateOps<H> for HgState {
+    fn rebuild(&self, phg: &PartitionedHypergraph<H>, threads: usize) {
+        hg_delegate!(self, s => StateOps::<H>::rebuild(s, phg, threads))
+    }
+
+    #[inline]
+    fn pin_count(&self, phg: &PartitionedHypergraph<H>, e: EdgeId, b: BlockId) -> u32 {
+        hg_delegate!(self, s => StateOps::<H>::pin_count(s, phg, e, b))
+    }
+
+    #[inline]
+    fn connectivity(&self, phg: &PartitionedHypergraph<H>, e: EdgeId) -> u32 {
+        hg_delegate!(self, s => StateOps::<H>::connectivity(s, phg, e))
+    }
+
+    #[inline]
+    fn connectivity_iter<'a>(
+        &'a self,
+        phg: &'a PartitionedHypergraph<H>,
+        e: EdgeId,
+    ) -> ConnIter<'a> {
+        hg_delegate!(self, s => StateOps::<H>::connectivity_iter(s, phg, e))
+    }
+
+    fn apply_move<P: GainPolicy>(
+        &self,
+        phg: &PartitionedHypergraph<H>,
+        u: NodeId,
+        from: BlockId,
+        to: BlockId,
+        gain_table: Option<&GainTable>,
+    ) -> Gain {
+        hg_delegate!(self, s => s.apply_move::<P>(phg, u, from, to, gain_table))
+    }
+
+    fn gain<P: GainPolicy>(
+        &self,
+        phg: &PartitionedHypergraph<H>,
+        u: NodeId,
+        to: BlockId,
+    ) -> Gain {
+        hg_delegate!(self, s => s.gain::<P>(phg, u, to))
+    }
+
+    fn max_gain_move<P: GainPolicy>(
+        &self,
+        phg: &PartitionedHypergraph<H>,
+        u: NodeId,
+    ) -> Option<(Gain, BlockId)> {
+        hg_delegate!(self, s => s.max_gain_move::<P>(phg, u))
+    }
+
+    #[inline]
+    fn is_border(&self, phg: &PartitionedHypergraph<H>, u: NodeId) -> bool {
+        hg_delegate!(self, s => StateOps::<H>::is_border(s, phg, u))
+    }
+
+    fn begin_level(&self, phg: &PartitionedHypergraph<H>) {
+        hg_delegate!(self, s => StateOps::<H>::begin_level(s, phg))
+    }
+
+    fn reset_net_uniform(&self, phg: &PartitionedHypergraph<H>, e: EdgeId, b: BlockId) {
+        hg_delegate!(self, s => StateOps::<H>::reset_net_uniform(s, phg, e, b))
+    }
+
+    fn reset_net_recount(&self, phg: &PartitionedHypergraph<H>, e: EdgeId) {
+        hg_delegate!(self, s => StateOps::<H>::reset_net_recount(s, phg, e))
+    }
+
+    fn verify(&self, phg: &PartitionedHypergraph<H>) -> Result<(), String> {
+        hg_delegate!(self, s => StateOps::<H>::verify(s, phg))
     }
 }
 

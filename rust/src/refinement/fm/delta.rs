@@ -24,9 +24,25 @@ use crate::{BlockId, EdgeId, Gain, NodeId, NodeWeight};
 pub struct DeltaPartition {
     k: usize,
     part: FxHashMap<NodeId, BlockId>,
-    /// (e·k + b) → delta on Φ(e, b)
-    pin_delta: FxHashMap<u64, i32>,
+    /// e → per-block deltas on Φ(e, ·), a short linear-scan list (one
+    /// entry per block the local moves touched on that net) — keying by
+    /// net instead of (e·k + b) keeps the overlay enumerable per net, so
+    /// the combined-state gain scan visits only adjacent blocks instead
+    /// of all k
+    pin_delta: FxHashMap<EdgeId, Vec<(BlockId, i32)>>,
     weight_delta: Vec<NodeWeight>,
+}
+
+/// Find-or-insert a block's delta slot in a net's short delta list.
+#[inline]
+fn delta_slot(list: &mut Vec<(BlockId, i32)>, b: BlockId) -> &mut i32 {
+    match list.iter().position(|&(db, _)| db == b) {
+        Some(i) => &mut list[i].1,
+        None => {
+            list.push((b, 0));
+            &mut list.last_mut().unwrap().1
+        }
+    }
 }
 
 impl DeltaPartition {
@@ -62,8 +78,13 @@ impl DeltaPartition {
         b: BlockId,
     ) -> i64 {
         let base = phg.pin_count(e, b) as i64;
-        base + self.pin_delta.get(&(e as u64 * self.k as u64 + b as u64)).copied().unwrap_or(0)
-            as i64
+        let d = self
+            .pin_delta
+            .get(&e)
+            .and_then(|list| list.iter().find(|&&(db, _)| db == b))
+            .map(|&(_, d)| d)
+            .unwrap_or(0);
+        base + d as i64
     }
 
     #[inline]
@@ -102,6 +123,7 @@ impl DeltaPartition {
         u: NodeId,
         to: BlockId,
     ) -> Option<Gain> {
+        debug_assert_eq!(self.k, phg.k(), "overlay not retargeted to this partition");
         let from = self.block_of(phg, u);
         if from == to {
             return None;
@@ -114,17 +136,21 @@ impl DeltaPartition {
         self.weight_delta[from as usize] -= w;
         self.weight_delta[to as usize] += w;
         let mut gain: Gain = 0;
-        let ku = self.k as u64;
         for &e in phg.hypergraph().incident_nets(u) {
             let we = phg.hypergraph().net_weight(e);
-            let kf = e as u64 * ku + from as u64;
-            let kt = e as u64 * ku + to as u64;
-            let dfrom = self.pin_delta.entry(kf).or_insert(0);
-            *dfrom -= 1;
-            let phi_from = phg.pin_count(e, from) as i64 + *dfrom as i64;
-            let dto = self.pin_delta.entry(kt).or_insert(0);
-            *dto += 1;
-            let phi_to = phg.pin_count(e, to) as i64 + *dto as i64;
+            let list = self.pin_delta.entry(e).or_default();
+            let dfrom = {
+                let d = delta_slot(list, from);
+                *d -= 1;
+                *d
+            };
+            let dto = {
+                let d = delta_slot(list, to);
+                *d += 1;
+                *d
+            };
+            let phi_from = phg.pin_count(e, from) as i64 + dfrom as i64;
+            let phi_to = phg.pin_count(e, to) as i64 + dto as i64;
             debug_assert!(phi_from >= 0);
             match P::OBJECTIVE {
                 Objective::Km1 => {
@@ -198,7 +224,6 @@ impl DeltaPartition {
         let mut pbase: Gain = 0;
         // corr[t] = Σ over nets with a pin in t of pc(ω,Φ(e,t)) − pc(ω,0)
         let mut corr: Vec<(BlockId, Gain)> = Vec::new();
-        let ku = self.k as u64;
         for &e in hg.incident_nets(u) {
             let we = hg.net_weight(e);
             let sz = if P::NEEDS_NET_SIZE { hg.net_size(e) as u32 } else { 0 };
@@ -215,21 +240,31 @@ impl DeltaPartition {
                     None => corr.push((b, c)),
                 }
             };
-            if self.pin_delta.is_empty() {
-                for b in phg.connectivity_set(e) {
-                    add(b, phg.pin_count(e, b) as i64);
+            match self.pin_delta.get(&e) {
+                None => {
+                    for b in phg.connectivity_set(e) {
+                        add(b, phg.pin_count(e, b) as i64);
+                    }
                 }
-            } else {
-                // combined state: global connectivity adjusted by deltas
-                for b in 0..self.k as BlockId {
-                    let d = self
-                        .pin_delta
-                        .get(&(e as u64 * ku + b as u64))
-                        .copied()
-                        .unwrap_or(0) as i64;
-                    let phi = phg.pin_count(e, b) as i64 + d;
-                    if phi > 0 {
-                        add(b, phi);
+                Some(list) => {
+                    // combined state, still adjacent-blocks-only: the
+                    // global Λ(e) adjusted by local deltas …
+                    for b in phg.connectivity_set(e) {
+                        let d = list
+                            .iter()
+                            .find(|&&(db, _)| db == b)
+                            .map(|&(_, d)| d)
+                            .unwrap_or(0);
+                        let phi = phg.pin_count(e, b) as i64 + d as i64;
+                        if phi > 0 {
+                            add(b, phi);
+                        }
+                    }
+                    // … plus blocks the local moves alone made adjacent
+                    for &(b, d) in list {
+                        if d > 0 && phg.pin_count(e, b) == 0 {
+                            add(b, d as i64);
+                        }
                     }
                 }
             }
@@ -243,9 +278,12 @@ impl DeltaPartition {
             match best {
                 None => best = Some((g, t)),
                 Some((bg, bb)) => {
-                    if g > bg
-                        || (g == bg && self.block_weight(phg, t) < self.block_weight(phg, bb))
-                    {
+                    // total order (gain desc, weight asc, block id asc):
+                    // candidate order follows Λ enumeration, which is not
+                    // canonical on the sparse state — a first-encounter
+                    // tie-break would be schedule-dependent there
+                    let (wt, wb) = (self.block_weight(phg, t), self.block_weight(phg, bb));
+                    if g > bg || (g == bg && (wt < wb || (wt == wb && t < bb))) {
                         best = Some((g, t));
                     }
                 }

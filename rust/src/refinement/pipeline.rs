@@ -47,11 +47,13 @@
 //! capacity up front, [`RefinementPipeline::bind`] the coarsest level,
 //! then [`RefinementPipeline::project_to_level`] per uncoarsening step —
 //! which moves the *same memory* to the finer hypergraph, projects Π
-//! through the contraction mapping in place and repairs Φ/Λ/weights by a
-//! parallel value rebuild. Memory ownership alternates between the pool
-//! (between levels) and the bound `PartitionedHypergraph` (during
-//! refinement); the finest binding is simply returned to the caller.
-//! Cross-level projections rebuild values; memory is allocated once.
+//! through the contraction mapping in place and repairs Φ/Λ per net from
+//! the contraction's fine→coarse net map (dropped nets reset in O(1),
+//! survivors recounted locally; a full parallel value rebuild remains
+//! the fallback when no net map is available). Memory ownership
+//! alternates between the pool (between levels) and the bound
+//! `PartitionedHypergraph` (during refinement); the finest binding is
+//! simply returned to the caller. Memory is allocated once.
 //!
 //! The n-level driver uses the value-preserving half of the pool API
 //! instead: [`RefinementPipeline::park`] releases the bound buffers so
@@ -90,7 +92,8 @@ use crate::datastructures::AddressablePQ;
 use crate::graph::Graph;
 use crate::hypergraph::{Hypergraph, HypergraphOps};
 use crate::partition::{
-    GainTable, Move, PartitionPool, PartitionState, PartitionedHypergraph, PhiLambdaState,
+    resolve_kstate, GainTable, HgState, KStateChoice, KStateMode, Move, PartitionPool,
+    PartitionState, PartitionedHypergraph,
 };
 use crate::refinement::fm::{DeltaPartition, FmStats};
 use crate::refinement::{flow, fm, lp, rebalance};
@@ -131,13 +134,14 @@ impl SearchScratch {
 /// call, shared by every level and every refiner of the pipeline.
 ///
 /// Generic over the [`PartitionState`] of the structures it refines:
-/// the hypergraph drivers use the default `Workspace<PhiLambdaState>`
-/// (gain table + Φ/Λ pool), the plain-graph driver uses
+/// the hypergraph drivers use the default `Workspace<HgState>` (gain
+/// table + Φ/Λ pool, dense or sparse layout per
+/// [`resolve_kstate`]), the plain-graph driver uses
 /// `Workspace<TwoPinState>` — same scratch, same pool discipline, but
 /// the §6.2 gain table stays empty (`USE_GAIN_TABLE = false`: two-pin
 /// gains are a single adjacency scan, a table would only add
 /// maintenance cost).
-pub struct Workspace<S: PartitionState = PhiLambdaState> {
+pub struct Workspace<S: PartitionState = HgState> {
     pub(crate) k: usize,
     pub(crate) gain_table: GainTable,
     /// FM node-ownership bits (one per node of the finest level)
@@ -174,22 +178,30 @@ pub struct Workspace<S: PartitionState = PhiLambdaState> {
 
 impl<S: PartitionState> Workspace<S> {
     /// Allocate a workspace for partitions with `k` blocks, up to
-    /// `node_capacity` nodes and `threads` worker threads.
+    /// `node_capacity` nodes and `threads` worker threads, in the
+    /// auto-selected state/gain-table layout for `k`.
     pub fn new(k: usize, threads: usize, node_capacity: usize) -> Self {
+        Self::with_mode(k, threads, node_capacity, resolve_kstate(KStateChoice::Auto, k))
+    }
+
+    /// [`Self::new`] with an explicit dense/sparse layout choice — the
+    /// pooled partition state and the §6.2 gain table use matching
+    /// layouts (`--kstate`).
+    pub fn with_mode(k: usize, threads: usize, node_capacity: usize, mode: KStateMode) -> Self {
         let threads = threads.max(1);
         // states that never consult the §6.2 table (two-pin graphs) get a
         // zero-row table; the growth path below is gated the same way
         let table_capacity = if S::USE_GAIN_TABLE { node_capacity } else { 0 };
         Workspace {
             k,
-            gain_table: GainTable::new(table_capacity, k),
+            gain_table: GainTable::with_mode(table_capacity, k, mode),
             owner: (0..node_capacity).map(|_| AtomicBool::new(false)).collect(),
             scratch: (0..threads).map(|_| SearchScratch::new(k, node_capacity)).collect(),
             boundary: Vec::new(),
             lp: lp::LpScratch::default(),
             det: crate::refinement::DetScratch::default(),
             recalc: crate::partition::gain_recalculation::RecalcScratch::default(),
-            pool: PartitionPool::new(k),
+            pool: PartitionPool::with_mode(k, mode),
             flow: flow::FlowWorkspace::new(k),
             level_distance: 0,
             worker_panic: false,
@@ -491,7 +503,12 @@ impl RefinementPipeline {
         stack.push(Box::new(RebalanceRefiner));
         let poisoned = vec![false; stack.len()];
         RefinementPipeline {
-            ws: Workspace::new(ctx.k, ctx.threads, node_capacity),
+            ws: Workspace::with_mode(
+                ctx.k,
+                ctx.threads,
+                node_capacity,
+                resolve_kstate(ctx.kstate, ctx.k),
+            ),
             stack,
             poisoned,
         }
@@ -530,7 +547,13 @@ impl RefinementPipeline {
         for i in (0..levels.len()).rev() {
             let finer =
                 if i == 0 { input_hg.clone() } else { levels[i - 1].coarse.clone() };
-            phg = self.project_to_level(phg, finer, &levels[i].fine_to_coarse, ctx);
+            phg = self.project_to_level(
+                phg,
+                finer,
+                &levels[i].fine_to_coarse,
+                Some(&levels[i].net_map),
+                ctx,
+            );
             // after projecting over levels[i] the partition lives on
             // levels[i-1].coarse, i.e. at distance i from the finest level
             self.refine_at_distance(&phg, ctx, i);
@@ -561,7 +584,12 @@ impl RefinementPipeline<Graph> {
         stack.push(Box::new(RebalanceRefiner));
         let poisoned = vec![false; stack.len()];
         let mut pipeline = RefinementPipeline {
-            ws: Workspace::new(ctx.k, ctx.threads, g.num_nodes()),
+            ws: Workspace::with_mode(
+                ctx.k,
+                ctx.threads,
+                g.num_nodes(),
+                resolve_kstate(ctx.kstate, ctx.k),
+            ),
             stack,
             poisoned,
         };
@@ -629,15 +657,25 @@ impl<R: HypergraphOps> RefinementPipeline<R> {
 
     /// One zero-copy uncoarsening step: move the refined coarse partition
     /// onto the finer hypergraph, projecting Π through `fine_to_coarse`
-    /// in place (no snapshot, no intermediate assignment vector).
+    /// in place (no snapshot, no intermediate assignment vector). A
+    /// contraction net map turns the per-level Φ/Λ value rebuild into a
+    /// per-net delta repair (see [`PartitionPool::rebind_level`]).
     pub fn project_to_level(
         &mut self,
         coarse: PartitionedHypergraph<R>,
         fine_hg: Arc<R>,
         fine_to_coarse: &[NodeId],
+        net_map: Option<&[crate::EdgeId]>,
         ctx: &Context,
     ) -> PartitionedHypergraph<R> {
-        self.ws.pool.rebind_level(coarse, fine_hg, fine_to_coarse, ctx.epsilon, ctx.threads)
+        self.ws.pool.rebind_level(
+            coarse,
+            fine_hg,
+            fine_to_coarse,
+            net_map,
+            ctx.epsilon,
+            ctx.threads,
+        )
     }
 
     /// Localized label propagation on the shared workspace scratch

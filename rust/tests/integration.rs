@@ -292,6 +292,141 @@ fn cut_and_soed_run_end_to_end_through_all_drivers() {
 }
 
 #[test]
+fn sparse_state_runs_every_driver_for_every_objective() {
+    use mtkahypar::partition::KStateChoice;
+    // The forced SparseKState end-to-end, mirroring
+    // `cut_and_soed_run_end_to_end_through_all_drivers`: multilevel,
+    // V-cycle, n-level and the baseline class under km1/cut/soed must
+    // keep the incremental objective exact against the from-scratch
+    // metric, stay balanced and verify. Quality must land in the dense
+    // twin's band — bit-identical results are not guaranteed (the dense
+    // scan enumerates blocks in ascending order, the sparse state in Λ
+    // entry order with a total-order tie-break, so equal-gain moves may
+    // resolve differently), but the values computed along the way are
+    // the same, which the state/gain-table property tests pin exactly.
+    let hg = Arc::new(generators::planted_hypergraph(
+        &PlantedParams { n: 350, m: 600, blocks: 3, ..Default::default() },
+        43,
+    ));
+    for obj in [Objective::Km1, Objective::Cut, Objective::Soed] {
+        // multilevel driver, dense vs sparse
+        let dctx = test_ctx(Preset::Default, 3, 7)
+            .with_objective(obj)
+            .with_kstate(KStateChoice::Dense);
+        let sctx = test_ctx(Preset::Default, 3, 7)
+            .with_objective(obj)
+            .with_kstate(KStateChoice::Sparse);
+        let dphg = partitioner::partition_arc(hg.clone(), &dctx);
+        let sphg = partitioner::partition_arc(hg.clone(), &sctx);
+        sphg.verify_consistency().unwrap_or_else(|e| panic!("{obj:?} sparse multilevel: {e}"));
+        assert!(sphg.is_balanced(), "{obj:?} sparse multilevel");
+        assert_eq!(
+            sphg.objective_value(obj),
+            metrics::objective_hg(obj, &hg, &sphg.parts(), 3),
+            "{obj:?} sparse multilevel: incremental vs from-scratch"
+        );
+        let (dv, sv) = (dphg.objective_value(obj) as f64, sphg.objective_value(obj) as f64);
+        assert!(
+            sv <= dv * 1.5 + 8.0 && dv <= sv * 1.5 + 8.0,
+            "{obj:?}: dense {dv} vs sparse {sv} quality diverged"
+        );
+        // V-cycle driver on top of the sparse result
+        let before = sphg.objective_value(obj);
+        let improved = mtkahypar::refinement::vcycle(sphg, &sctx, 1);
+        assert!(
+            improved.objective_value(obj) <= before,
+            "{obj:?} sparse vcycle worsened: {} > {before}",
+            improved.objective_value(obj)
+        );
+        improved.verify_consistency().unwrap_or_else(|e| panic!("{obj:?} sparse vcycle: {e}"));
+        // n-level driver
+        let mut nctx = test_ctx(Preset::Default, 3, 7)
+            .with_objective(obj)
+            .with_kstate(KStateChoice::Sparse);
+        nctx.nlevel = true;
+        nctx.nlevel_batch_size = 64;
+        let nphg = partitioner::partition_arc(hg.clone(), &nctx);
+        assert!(nphg.is_balanced(), "{obj:?} sparse n-level");
+        nphg.verify_consistency().unwrap_or_else(|e| panic!("{obj:?} sparse n-level: {e}"));
+        assert_eq!(
+            nphg.objective_value(obj),
+            metrics::objective_hg(obj, &hg, &nphg.parts(), 3),
+            "{obj:?} sparse n-level: incremental vs from-scratch"
+        );
+        // baseline driver class
+        let b = baselines::zoltan_like(&hg, &sctx);
+        assert_eq!(
+            b.objective_value(obj),
+            metrics::objective_hg(obj, &hg, &b.parts(), 3),
+            "{obj:?} sparse baseline"
+        );
+    }
+}
+
+#[test]
+fn large_k_sparse_state_end_to_end() {
+    // k = 128 sits above SPARSE_K_THRESHOLD, so `Auto` resolves to the
+    // sparse state on its own — the regime the k-adaptive layer exists
+    // for (the CI matrix additionally reruns the whole suite with
+    // MTKH_KSTATE=sparse to force it at small k). ε is widened to 0.1:
+    // at ~16 nodes per block the default 3 % leaves no integral slack.
+    let hg = Arc::new(generators::planted_hypergraph(
+        &PlantedParams { n: 2000, m: 3500, blocks: 16, ..Default::default() },
+        51,
+    ));
+    let mut ctx = Context::new(Preset::Default, 128, 0.1)
+        .with_threads(2)
+        .with_seed(3)
+        .with_objective(test_objective());
+    ctx.contraction_limit_factor = 8;
+    ctx.ip_min_repetitions = 2;
+    ctx.ip_max_repetitions = 3;
+    ctx.fm_max_rounds = 2;
+    let obj = ctx.objective;
+    let phg = partitioner::partition_arc(hg.clone(), &ctx);
+    assert!(phg.is_balanced(), "k=128: imbalance {}", phg.imbalance());
+    phg.verify_consistency().unwrap();
+    assert_eq!(
+        phg.objective_value(obj),
+        metrics::objective_hg(obj, &hg, &phg.parts(), 128),
+        "k=128: incremental vs from-scratch"
+    );
+    assert!(
+        metrics::block_weights_hg(&hg, &phg.parts(), 128).iter().all(|&w| w > 0),
+        "k=128: no empty blocks"
+    );
+}
+
+#[test]
+fn deterministic_sparse_state_is_bit_identical_across_threads() {
+    use mtkahypar::partition::KStateChoice;
+    // Satellite of the large-k layer: the Deterministic preset with the
+    // sparse state forced on must stay bit-identical at 1/2/4 threads on
+    // both the multilevel and the n-level driver. This exercises the
+    // non-canonical Λ enumeration order under deterministic refinement —
+    // every selection over it must go through the total-order tie-break.
+    let hg = generators::spm_hypergraph(350, 350, 5, 29);
+    let run = |t: usize, nlevel: bool| {
+        let mut ctx =
+            test_ctx(Preset::Deterministic, 4, 29).with_kstate(KStateChoice::Sparse);
+        ctx.threads = t;
+        ctx.nlevel = nlevel;
+        ctx.nlevel_batch_size = 64;
+        let phg = partitioner::partition(&hg, &ctx);
+        assert!(phg.is_balanced(), "nlevel={nlevel} t={t}: imbalance {}", phg.imbalance());
+        phg.verify_consistency().unwrap();
+        (phg.km1(), phg.parts())
+    };
+    for nlevel in [false, true] {
+        let r1 = run(1, nlevel);
+        let r2 = run(2, nlevel);
+        let r4 = run(4, nlevel);
+        assert_eq!(r1, r2, "nlevel={nlevel}: t=1 vs t=2");
+        assert_eq!(r2, r4, "nlevel={nlevel}: t=2 vs t=4");
+    }
+}
+
+#[test]
 fn runtime_oracle_agrees_when_artifacts_present() {
     let Some(rt) = mtkahypar::runtime::global() else {
         eprintln!("artifacts not built; skipping");

@@ -330,6 +330,7 @@ fn prop_pooled_rebind_matches_fresh_construction_on_real_hierarchies() {
                 phg,
                 finer.clone(),
                 &hierarchy.levels[i].fine_to_coarse,
+                Some(&hierarchy.levels[i].net_map),
                 0.5,
                 2,
             );
@@ -399,6 +400,17 @@ fn prop_pooled_uncoarsening_performs_zero_per_level_allocations() {
         "uncoarsening must not allocate partition storage per level"
     );
     assert_eq!(pipeline.partition_pool().rebinds(), hierarchy.levels.len());
+    assert_eq!(
+        pipeline.partition_pool().value_rebuilds(),
+        1,
+        "only the initial bind may rebuild Φ/Λ from scratch — every \
+         uncoarsening level must take the net_map delta-repair path"
+    );
+    assert_eq!(
+        pipeline.partition_pool().delta_repairs(),
+        hierarchy.levels.len(),
+        "every projection must be a counted per-net delta repair"
+    );
     assert_eq!(pipeline.workspace().gain_table_allocs(), 1);
 }
 
