@@ -9,6 +9,7 @@
 //!   batch uncontraction (paper §9),
 //! * parallel gain recalculation,
 //! * one LP round,
+//! * warm-start repartitioning (V-cycle apply) vs cold multilevel,
 //! * AOT gain-tile execution + spectral execution (L1/L2 via PJRT).
 
 use mtkahypar::coarsening::{project_partition, Level};
@@ -21,6 +22,7 @@ use mtkahypar::partition::{
     recalculate_gains, GainTable, KStateMode, Move, PartitionPool, PartitionedHypergraph,
 };
 use mtkahypar::refinement::{flow, lp, Workspace};
+use mtkahypar::repartition::{Change, ChangeBatch, RepartitionConfig, Repartitioner};
 use mtkahypar::util::Rng;
 use mtkahypar::{BlockId, NodeId};
 use std::sync::Arc;
@@ -411,6 +413,62 @@ fn main() {
         arena_before + 1,
         "one arena allocation for the whole sparse run — init and moves reuse it"
     );
+
+    // ---- repartitioning: warm V-cycle serving vs cold multilevel ----
+    {
+        use mtkahypar::hypergraph::HypergraphOps;
+        let rk = 4usize;
+        let rp = PlantedParams { n: 4_000, m: 7_000, blocks: rk, ..Default::default() };
+        let rhg = Arc::new(planted_hypergraph(&rp, 11));
+        let mut rctx = Context::new(Preset::Default, rk, 0.05).with_seed(11).with_threads(1);
+        rctx.contraction_limit_factor = 24;
+        rctx.ip_min_repetitions = 1;
+        rctx.ip_max_repetitions = 2;
+        rctx.fm_max_rounds = 2;
+        let mut rep = Repartitioner::new(rhg.clone(), rctx.clone(), RepartitionConfig::default());
+        assert_eq!(rep.partition_pool().structural_allocs(), 1, "one session bind");
+        let mut crng = Rng::new(13);
+        bench("repartition: warm V-cycle apply", 10, 4, || {
+            // slot-reusing churn: one node and one net out, equivalents in
+            let (victim_node, victim_net, victim_size, pins) = {
+                let hgd = rep.hypergraph();
+                let active: Vec<NodeId> = hgd.active_nodes().collect();
+                let victim_node = active[crng.next_below(active.len())];
+                let e = hgd
+                    .nets()
+                    .max_by_key(|&e| HypergraphOps::pins(hgd, e).len())
+                    .expect("instance has nets");
+                let size = HypergraphOps::pins(hgd, e).len();
+                let pins: Vec<NodeId> = crng
+                    .sample_indices(active.len(), size)
+                    .into_iter()
+                    .map(|i| active[i])
+                    .filter(|&u| u != victim_node)
+                    .take(size.saturating_sub(1).max(1))
+                    .collect();
+                (victim_node, e, size, pins)
+            };
+            assert!(victim_size >= 2);
+            let mut batch = ChangeBatch::new();
+            batch.push(Change::RemoveNet { net: victim_net });
+            batch.push(Change::RemoveNode { node: victim_node });
+            batch.push(Change::InsertNode { weight: 1 });
+            batch.push(Change::InsertNet { pins, weight: 1 });
+            let ms = rep.apply(&batch).expect("churn batch applies");
+            assert!(ms.balanced);
+        });
+        // the acceptance criterion of the serving path, asserted on the
+        // pool counters: every warm apply above ran allocation-free
+        assert_eq!(
+            rep.partition_pool().structural_allocs(),
+            1,
+            "warm V-cycle applies must make zero structural allocations"
+        );
+        bench("repartition: cold multilevel baseline", 10, 4, || {
+            let cold = mtkahypar::coordinator::partitioner::partition_arc(rhg.clone(), &rctx);
+            assert!(cold.is_balanced());
+        });
+    }
 
     // ---- runtime (L1/L2 via PJRT) ----
     if let Some(rt) = mtkahypar::runtime::global() {

@@ -40,6 +40,21 @@
 //! [`DynamicHypergraph::freeze`] renders the current coarse state as a
 //! static [`Hypergraph`] (plus the coarse-id → slot mapping) so initial
 //! partitioning keeps running on the static snapshot it expects.
+//!
+//! ## Online mutation
+//!
+//! Beyond the contraction/uncontraction cycle, the structure supports
+//! *permanent* finest-level edits for incremental repartitioning
+//! ([`crate::repartition`]): [`DynamicHypergraph::insert_node`],
+//! [`DynamicHypergraph::remove_node`], [`DynamicHypergraph::insert_net`],
+//! [`DynamicHypergraph::remove_net`] and
+//! [`DynamicHypergraph::update_weight`]. These reuse the same in-place
+//! active-prefix pin machinery as contraction but are not recorded as
+//! events — they are irreversible, so they are only legal while no
+//! contraction is outstanding (`event_cursor == 0`); each call clears the
+//! stale event stack. Removed node and net slots go onto free lists and
+//! are reused by later insertions, so bounded churn reaches a zero-growth
+//! steady state (observable via [`DynamicHypergraph::structural_grows`]).
 
 use super::{Hypergraph, HypergraphOps};
 use crate::parallel::{par_for_auto, SharedSlice};
@@ -107,6 +122,12 @@ pub struct DynamicHypergraph {
     events: Vec<PinEvent>,
     event_cursor: usize,
     structural_grows: usize,
+    /// node slots vacated by [`Self::remove_node`], reused by
+    /// [`Self::insert_node`]
+    free_nodes: Vec<NodeId>,
+    /// net slots vacated by [`Self::remove_net`], reused by
+    /// [`Self::insert_net`] when the slot capacity fits
+    free_nets: Vec<EdgeId>,
 }
 
 impl DynamicHypergraph {
@@ -133,6 +154,8 @@ impl DynamicHypergraph {
             events: Vec::new(),
             event_cursor: 0,
             structural_grows: 0,
+            free_nodes: Vec::new(),
+            free_nets: Vec::new(),
         }
     }
 
@@ -364,6 +387,178 @@ impl DynamicHypergraph {
             .iter()
             .filter(|ev| ev.removed)
             .map(|ev| ev.net)
+    }
+
+    /// Online mutations are permanent finest-level edits; they cannot
+    /// coexist with applied contractions (no memento could revert across
+    /// them). Errors unless every contraction has been uncontracted.
+    fn check_mutable(&mut self) -> Result<(), String> {
+        if self.event_cursor != 0 {
+            return Err("online mutation with applied contractions outstanding".into());
+        }
+        // drop events of reverted mementos: their recorded slots become
+        // stale the moment the structure is edited
+        self.events.clear();
+        Ok(())
+    }
+
+    /// Set the weight of an active node, returning the previous weight.
+    pub fn update_weight(&mut self, u: NodeId, w: NodeWeight) -> Result<NodeWeight, String> {
+        self.check_mutable()?;
+        if (u as usize) >= self.active.len() || !self.active[u as usize] {
+            return Err(format!("update_weight: node {u} is not active"));
+        }
+        if w <= 0 {
+            return Err(format!("update_weight: weight must be positive, got {w}"));
+        }
+        let old = self.node_weight[u as usize];
+        self.node_weight[u as usize] = w;
+        self.total_weight += w - old;
+        Ok(old)
+    }
+
+    /// Insert a new node of weight `w`, returning its id. Reuses a slot
+    /// vacated by [`Self::remove_node`] when one is free (no allocation);
+    /// otherwise appends a slot (counted by [`Self::structural_grows`]).
+    pub fn insert_node(&mut self, w: NodeWeight) -> Result<NodeId, String> {
+        self.check_mutable()?;
+        if w <= 0 {
+            return Err(format!("insert_node: weight must be positive, got {w}"));
+        }
+        let u = match self.free_nodes.pop() {
+            Some(u) => {
+                debug_assert!(!self.active[u as usize]);
+                debug_assert!(self.incident[u as usize].is_empty());
+                self.active[u as usize] = true;
+                self.node_weight[u as usize] = w;
+                u
+            }
+            None => {
+                let u = self.active.len() as NodeId;
+                self.active.push(true);
+                self.node_weight.push(w);
+                self.incident.push(Vec::new());
+                self.structural_grows += 1;
+                u
+            }
+        };
+        self.num_active += 1;
+        self.total_weight += w;
+        Ok(u)
+    }
+
+    /// Remove an active node: its pin is swapped out of every incident
+    /// net's live prefix (nets may legitimately shrink to one or zero
+    /// pins) and the slot goes onto the free list for reuse. Cost
+    /// O(Σ_{e ∈ I(u)} |e|); allocates nothing.
+    pub fn remove_node(&mut self, u: NodeId) -> Result<(), String> {
+        self.check_mutable()?;
+        if (u as usize) >= self.active.len() || !self.active[u as usize] {
+            return Err(format!("remove_node: node {u} is not active"));
+        }
+        let mut nets = std::mem::take(&mut self.incident[u as usize]);
+        for &e in &nets {
+            let off = self.net_offsets[e as usize] as usize;
+            let a = self.active_pins[e as usize] as usize;
+            let slot = self.pins[off..off + a]
+                .iter()
+                .position(|&p| p == u)
+                .expect("incidence invariant: net must contain the pin");
+            self.pins.swap(off + slot, off + a - 1);
+            self.active_pins[e as usize] = (a - 1) as u32;
+            self.num_active_pins -= 1;
+        }
+        nets.clear();
+        self.incident[u as usize] = nets; // capacity retained for reuse
+        self.active[u as usize] = false;
+        self.num_active -= 1;
+        self.total_weight -= self.node_weight[u as usize];
+        self.free_nodes.push(u);
+        Ok(())
+    }
+
+    /// Insert a net over `pins` (distinct active nodes; single-pin nets
+    /// are allowed and simply never cut) with weight `w`, returning its
+    /// id. Reuses a slot vacated by [`Self::remove_net`] whose pin
+    /// capacity fits; otherwise appends to the shared pin array (counted
+    /// by [`Self::structural_grows`]).
+    pub fn insert_net(&mut self, new_pins: &[NodeId], w: EdgeWeight) -> Result<EdgeId, String> {
+        self.check_mutable()?;
+        if new_pins.is_empty() {
+            return Err("insert_net: a net needs at least one pin".into());
+        }
+        if w <= 0 {
+            return Err(format!("insert_net: weight must be positive, got {w}"));
+        }
+        for (i, &p) in new_pins.iter().enumerate() {
+            if (p as usize) >= self.active.len() || !self.active[p as usize] {
+                return Err(format!("insert_net: pin {p} is not an active node"));
+            }
+            if new_pins[..i].contains(&p) {
+                return Err(format!("insert_net: duplicate pin {p}"));
+            }
+        }
+        let reuse = self
+            .free_nets
+            .iter()
+            .position(|&e| self.net_pin_capacity(e) >= new_pins.len());
+        let e = match reuse {
+            Some(i) => {
+                let e = self.free_nets.swap_remove(i);
+                let off = self.net_offsets[e as usize] as usize;
+                self.pins[off..off + new_pins.len()].copy_from_slice(new_pins);
+                self.active_pins[e as usize] = new_pins.len() as u32;
+                self.net_weight[e as usize] = w;
+                e
+            }
+            None => {
+                let e = self.net_weight.len() as EdgeId;
+                self.pins.extend_from_slice(new_pins);
+                self.net_offsets.push(self.pins.len() as u64);
+                self.active_pins.push(new_pins.len() as u32);
+                self.net_weight.push(w);
+                self.structural_grows += 1;
+                e
+            }
+        };
+        for &p in new_pins {
+            let list = &mut self.incident[p as usize];
+            if list.len() == list.capacity() {
+                self.structural_grows += 1;
+            }
+            list.push(e);
+        }
+        self.num_active_pins += new_pins.len();
+        self.max_net_capacity = self.max_net_capacity.max(new_pins.len());
+        Ok(e)
+    }
+
+    /// Remove a net: it is deleted from every pin's incident list and the
+    /// slot goes onto the free list for reuse by [`Self::insert_net`].
+    /// Removing a net that earlier node removals already emptied is fine.
+    /// Cost O(Σ_{p ∈ e} |I(p)|); allocates nothing.
+    pub fn remove_net(&mut self, e: EdgeId) -> Result<(), String> {
+        self.check_mutable()?;
+        if (e as usize) >= self.net_weight.len() {
+            return Err(format!("remove_net: net {e} does not exist"));
+        }
+        if self.free_nets.contains(&e) {
+            return Err(format!("remove_net: net {e} was already removed"));
+        }
+        let off = self.net_offsets[e as usize] as usize;
+        let a = self.active_pins[e as usize] as usize;
+        for i in off..off + a {
+            let p = self.pins[i] as usize;
+            let pos = self.incident[p]
+                .iter()
+                .position(|&f| f == e)
+                .expect("incidence invariant: pin must list the net");
+            self.incident[p].swap_remove(pos);
+        }
+        self.num_active_pins -= a;
+        self.active_pins[e as usize] = 0;
+        self.free_nets.push(e);
+        Ok(())
     }
 
     /// Render the current coarse state as a static [`Hypergraph`] with
@@ -723,6 +918,122 @@ mod tests {
         for e in snap.hg.nets() {
             assert!(snap.hg.net_size(e) >= 2);
         }
+    }
+
+    #[test]
+    fn online_mutations_keep_validate_green() {
+        let hg = tiny();
+        let mut d = DynamicHypergraph::from_hypergraph(&hg);
+
+        let old = d.update_weight(5, 3).unwrap();
+        assert_eq!(old, 1);
+        assert_eq!(HypergraphOps::total_weight(&d), 9);
+        d.validate().unwrap();
+
+        let u = d.insert_node(2).unwrap();
+        assert_eq!(u, 7);
+        assert_eq!(d.num_active_nodes(), 8);
+        assert_eq!(HypergraphOps::total_weight(&d), 11);
+        d.validate().unwrap();
+
+        let e = d.insert_net(&[u, 0, 5], 2).unwrap();
+        assert_eq!(pin_set(&d, e), vec![0, 5, u]);
+        assert!(HypergraphOps::incident_nets(&d, u).contains(&e));
+        d.validate().unwrap();
+
+        d.remove_net(e).unwrap();
+        assert!(HypergraphOps::pins(&d, e).is_empty());
+        assert!(!HypergraphOps::incident_nets(&d, 0).contains(&e));
+        d.validate().unwrap();
+
+        d.remove_node(u).unwrap();
+        assert_eq!(d.num_active_nodes(), 7);
+        assert_eq!(HypergraphOps::total_weight(&d), 9);
+        d.validate().unwrap();
+    }
+
+    #[test]
+    fn slot_reuse_reaches_zero_growth_steady_state() {
+        let hg = tiny();
+        let mut d = DynamicHypergraph::from_hypergraph(&hg);
+        // first round grows: fresh node slot, fresh net slot
+        let u = d.insert_node(1).unwrap();
+        let e = d.insert_net(&[u, 0], 1).unwrap();
+        d.remove_net(e).unwrap();
+        d.remove_node(u).unwrap();
+        let grows = d.structural_grows();
+        // bounded churn afterwards reuses the vacated slots
+        for _ in 0..5 {
+            let u2 = d.insert_node(1).unwrap();
+            assert_eq!(u2, u, "node slot must be reused");
+            let e2 = d.insert_net(&[u2, 0], 1).unwrap();
+            assert_eq!(e2, e, "net slot must be reused");
+            d.remove_net(e2).unwrap();
+            d.remove_node(u2).unwrap();
+            d.validate().unwrap();
+        }
+        assert_eq!(d.structural_grows(), grows, "steady-state churn must not allocate");
+    }
+
+    #[test]
+    fn removing_a_node_can_empty_a_net() {
+        let hg = tiny();
+        let mut d = DynamicHypergraph::from_hypergraph(&hg);
+        // net0 = {0, 2}: removing both pins empties it
+        d.remove_node(0).unwrap();
+        assert_eq!(pin_set(&d, 0), vec![2]);
+        d.validate().unwrap();
+        d.remove_node(2).unwrap();
+        assert!(HypergraphOps::pins(&d, 0).is_empty());
+        d.validate().unwrap();
+        // the emptied net contributes nothing and can still be removed
+        d.remove_net(0).unwrap();
+        d.validate().unwrap();
+    }
+
+    #[test]
+    fn mutation_error_paths_leave_state_intact() {
+        let hg = tiny();
+        let mut d = DynamicHypergraph::from_hypergraph(&hg);
+        assert!(d.update_weight(0, 0).is_err());
+        assert!(d.update_weight(99, 1).is_err());
+        assert!(d.insert_node(-1).is_err());
+        assert!(d.insert_net(&[], 1).is_err());
+        assert!(d.insert_net(&[0, 0], 1).is_err(), "duplicate pins");
+        assert!(d.insert_net(&[0, 99], 1).is_err(), "inactive pin");
+        assert!(d.insert_net(&[0, 1], 0).is_err(), "non-positive weight");
+        assert!(d.remove_net(99).is_err());
+        d.remove_node(6).unwrap();
+        assert!(d.remove_node(6).is_err(), "double removal");
+        assert!(d.insert_net(&[0, 6], 1).is_err(), "removed node as pin");
+        d.validate().unwrap();
+
+        // single-pin nets are allowed
+        let e = d.insert_net(&[3], 1).unwrap();
+        assert_eq!(pin_set(&d, e), vec![3]);
+        d.validate().unwrap();
+        d.remove_net(e).unwrap();
+        assert!(d.remove_net(e).is_err(), "double removal of a net");
+        d.validate().unwrap();
+    }
+
+    #[test]
+    fn mutations_require_no_outstanding_contractions() {
+        let hg = tiny();
+        let mut d = DynamicHypergraph::from_hypergraph(&hg);
+        let m = d.contract(4, 3);
+        assert!(d.insert_node(1).is_err());
+        assert!(d.remove_node(0).is_err());
+        assert!(d.update_weight(0, 2).is_err());
+        d.uncontract_batch(&[m]);
+        // fully reverted: mutations become legal again
+        let u = d.insert_node(1).unwrap();
+        d.validate().unwrap();
+        // and contraction still works after a mutation
+        let m2 = d.contract(u, 0);
+        d.validate().unwrap();
+        d.uncontract_batch(&[m2]);
+        d.validate().unwrap();
     }
 
     #[test]

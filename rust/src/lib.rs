@@ -50,6 +50,7 @@ pub mod parallel;
 pub mod partition;
 pub mod preprocessing;
 pub mod refinement;
+pub mod repartition;
 pub mod runtime;
 pub mod util;
 
@@ -82,5 +83,8 @@ pub mod prelude {
     pub use crate::hypergraph::Hypergraph;
     pub use crate::metrics::Objective;
     pub use crate::partition::PartitionedHypergraph;
+    pub use crate::repartition::{
+        Change, ChangeBatch, MoveSet, RepartitionConfig, RepartitionSession, Repartitioner,
+    };
     pub use crate::{BlockId, EdgeId, Gain, NodeId};
 }

@@ -5,7 +5,14 @@
 //!           [--threads 4] [--seed 0] [--time-limit SECS] [-o partition.out]
 //! mtkahypar --graph instance.graph -k 8 ...            # Metis format
 //! mtkahypar --demo                                      # synthetic demo
+//! mtkahypar --hgr instance.hgr -k 8 --repartition changes.txt
+//!                                  # warm-start repartitioning stream
 //! ```
+//!
+//! `--repartition` partitions the instance once, then streams the change
+//! batches from the file (see [`mtkahypar::repartition::parse_changes`]
+//! for the line format) through the warm-start repartitioner, printing
+//! one migration summary per batch and the final quality report.
 //!
 //! Exit codes: 0 success, 2 usage error, 3 input read/parse error,
 //! 4 invalid configuration, 5 imbalanced result, 6 output write error.
@@ -18,6 +25,7 @@ use mtkahypar::graph::partitioner::partition_graph_arc;
 use mtkahypar::io;
 use mtkahypar::metrics::Objective;
 use mtkahypar::partition::KStateChoice;
+use mtkahypar::repartition::{self, RepartitionConfig, RepartitionSession};
 use std::path::PathBuf;
 use std::process::exit;
 use std::sync::Arc;
@@ -42,6 +50,8 @@ struct Args {
     time_limit: Option<Duration>,
     kstate: KStateChoice,
     out: Option<PathBuf>,
+    repartition: Option<PathBuf>,
+    migration_cap: Option<f64>,
 }
 
 fn usage() -> ! {
@@ -49,7 +59,8 @@ fn usage() -> ! {
         "usage: mtkahypar (--hgr FILE | --graph FILE | --demo) -k K [-e EPS] \
          [--preset speed|default|default-flows|quality|quality-flows|deterministic] \
          [--objective km1|cut|soed] [--threads T] [--seed S] [--time-limit SECS] \
-         [--kstate dense|sparse|auto] [-o OUT]"
+         [--kstate dense|sparse|auto] [--repartition CHANGES] \
+         [--migration-cap FRAC] [-o OUT]"
     );
     exit(EXIT_USAGE)
 }
@@ -68,6 +79,8 @@ fn parse_args() -> Args {
         time_limit: None,
         kstate: KStateChoice::Auto,
         out: None,
+        repartition: None,
+        migration_cap: None,
     };
     let mut it = std::env::args().skip(1);
     while let Some(a) = it.next() {
@@ -131,6 +144,17 @@ fn parse_args() -> Args {
                     }
                 }
             }
+            "--repartition" => {
+                args.repartition = Some(PathBuf::from(next("--repartition")))
+            }
+            "--migration-cap" => {
+                let frac: f64 = next("--migration-cap").parse().unwrap_or_else(|_| usage());
+                if !frac.is_finite() || frac < 0.0 {
+                    eprintln!("--migration-cap must be a non-negative fraction");
+                    usage()
+                }
+                args.migration_cap = Some(frac);
+            }
             "-o" | "--output" => args.out = Some(PathBuf::from(next("-o"))),
             "-h" | "--help" => usage(),
             other => {
@@ -140,6 +164,10 @@ fn parse_args() -> Args {
         }
     }
     if !args.demo && args.hgr.is_none() && args.graph.is_none() {
+        usage()
+    }
+    if args.repartition.is_some() && args.graph.is_some() {
+        eprintln!("--repartition runs on hypergraph instances (--hgr or --demo)");
         usage()
     }
     args
@@ -216,6 +244,55 @@ fn main() {
         exit(EXIT_CONFIG);
     }
     eprintln!("hypergraph: n={} m={} pins={}", hg.num_nodes(), hg.num_nets(), hg.num_pins());
+
+    if let Some(changes_path) = &args.repartition {
+        let batches = repartition::parse_changes(changes_path).unwrap_or_else(|e| {
+            eprintln!("error reading {changes_path:?}: {e:#}");
+            exit(EXIT_READ)
+        });
+        let cfg = RepartitionConfig {
+            max_migration_fraction: args.migration_cap,
+            ..RepartitionConfig::default()
+        };
+        let start = Instant::now();
+        let mut session = RepartitionSession::new(ctx.clone(), cfg);
+        session.bind(hg);
+        eprintln!("bound instance ({} change batches queued)", batches.len());
+        for (i, batch) in batches.iter().enumerate() {
+            match session.apply(batch) {
+                Ok(ms) => eprintln!("batch {}: {}", i + 1, ms.summary()),
+                Err(e) => {
+                    eprintln!("batch {}: rejected change: {e}", i + 1);
+                    exit(EXIT_READ);
+                }
+            }
+        }
+        let secs = start.elapsed().as_secs_f64();
+        let rep = session.repartitioner().unwrap();
+        let report = PartitionReport::from_partition(
+            ctx.preset.name(),
+            rep.partition(),
+            ctx.objective,
+            secs,
+            ctx.timer.snapshot(),
+        );
+        report.print();
+        let degradation = DegradationReport::from_token(&ctx.cancel, ctx.time_limit);
+        if degradation.degraded() {
+            eprintln!("{}", degradation.summary());
+        }
+        if let Some(out) = &args.out {
+            if let Err(e) = io::write_partition(&rep.partition().parts(), out) {
+                eprintln!("error writing {out:?}: {e:#}");
+                exit(EXIT_WRITE);
+            }
+        }
+        if !rep.partition().is_balanced() {
+            exit(EXIT_IMBALANCED);
+        }
+        return;
+    }
+
     let start = Instant::now();
     let phg = partitioner::partition_arc(hg, &ctx);
     let secs = start.elapsed().as_secs_f64();

@@ -311,6 +311,58 @@ impl<S: PartitionState> PartitionPool<S> {
         phg
     }
 
+    /// Would [`Self::unpark`] succeed for `hg`? False when nothing is
+    /// parked or when the parked buffers are too small (e.g. the caller
+    /// appended node/net slots past the reservation while the partition
+    /// was parked). The repartitioner uses this to pick between the
+    /// value-preserving unpark and the counted growth path of
+    /// [`Self::unpark_with_parts`].
+    pub fn parked_fits<H: HypergraphOps<State = S>>(&self, hg: &H) -> bool {
+        match &self.parked {
+            Some(bufs) => bufs.fits(&StateDims::for_hg(hg, self.k, bufs.state.mode())),
+            None => false,
+        }
+    }
+
+    /// Re-bind the parked buffers to `hg` with an explicit assignment and
+    /// a full value rebuild. This is the clean recovery from mutations
+    /// that outgrew the parked buffers: [`Self::unpark`] would panic
+    /// (it must preserve values and cannot), whereas here the caller
+    /// supplies the values, so the memory is reused when it fits and
+    /// reallocated (counted) when it doesn't.
+    pub fn unpark_with_parts<H: HypergraphOps<State = S>>(
+        &mut self,
+        hg: Arc<H>,
+        parts: &[BlockId],
+        eps: f64,
+        threads: usize,
+    ) -> PartitionedHypergraph<H> {
+        let bufs = self.parked.take().expect("no parked partition buffers");
+        self.rebinds += 1;
+        self.bind_impl(Some(bufs), hg, parts, eps, threads)
+    }
+
+    /// Widen the reservation beyond any hypergraph seen so far — headroom
+    /// for online growth ([`crate::repartition`] sizes the arena for the
+    /// expected churn so insertions stay within the first allocation).
+    pub fn reserve_headroom(
+        &mut self,
+        nodes: usize,
+        nets: usize,
+        net_size: usize,
+        pin_budget: usize,
+    ) {
+        self.reserved_nodes += nodes;
+        self.reserved_nets += nets;
+        self.reserved_net_size = self.reserved_net_size.max(net_size);
+        if self.mode == KStateMode::Sparse {
+            self.reserved_pin_budget += pin_budget;
+        }
+        if self.proj_scratch.len() < self.reserved_nodes {
+            self.proj_scratch.resize(self.reserved_nodes, 0);
+        }
+    }
+
     /// Move a binding onto a *structurally equivalent* hypergraph of a
     /// different representation, preserving all values (no rebuild). The
     /// n-level driver uses this once, at the finest level: the fully
@@ -679,6 +731,38 @@ mod tests {
         phg.verify_consistency().unwrap();
         assert_eq!(pool.value_rebuilds(), 1, "unpark must not rebuild values");
         assert_eq!(pool.structural_allocs(), 1);
+    }
+
+    /// The parked-growth escape hatch: when the hypergraph outgrows the
+    /// parked buffers, `parked_fits` says so and `unpark_with_parts`
+    /// reallocates (counted) instead of panicking; within the
+    /// reservation it reuses the parked memory.
+    #[test]
+    fn unpark_with_parts_handles_growth() {
+        let k = 2;
+        let small = random_hypergraph(31, 50, 80);
+        let big = random_hypergraph(32, 300, 500);
+        let parts_small: Vec<BlockId> =
+            (0..small.num_nodes()).map(|u| (u % k) as BlockId).collect();
+        let parts_big: Vec<BlockId> = (0..big.num_nodes()).map(|u| (u % k) as BlockId).collect();
+
+        let mut pool = PartitionPool::new(k);
+        pool.reserve(&*small);
+        let phg = pool.bind(small.clone(), &parts_small, 0.5, 1);
+        pool.park(phg);
+        assert!(pool.parked_fits(&*small));
+        assert!(!pool.parked_fits(&*big), "bigger instance must not claim to fit");
+        let phg = pool.unpark_with_parts(big.clone(), &parts_big, 0.5, 1);
+        phg.verify_consistency().unwrap();
+        assert_eq!(pool.structural_allocs(), 2, "growth must be counted");
+
+        // within the (now bigger) buffers the same path reuses memory
+        pool.park(phg);
+        assert!(pool.parked_fits(&*small));
+        let phg = pool.unpark_with_parts(small, &parts_small, 0.5, 1);
+        phg.verify_consistency().unwrap();
+        assert_eq!(pool.structural_allocs(), 2, "shrink must reuse the parked memory");
+        assert!(!pool.parked_fits(&*big), "nothing parked anymore");
     }
 
     /// An unreserved pool still works (growth is counted, not silent).

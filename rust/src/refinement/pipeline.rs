@@ -638,6 +638,39 @@ impl<R: HypergraphOps> RefinementPipeline<R> {
         self.ws.pool.unpark(hg, ctx.epsilon)
     }
 
+    /// Would [`Self::unpark`] succeed for `hg`? See
+    /// [`crate::partition::PartitionPool::parked_fits`].
+    pub fn parked_fits<H: HypergraphOps<State = R::State>>(&self, hg: &H) -> bool {
+        self.ws.pool.parked_fits(hg)
+    }
+
+    /// Reserve pool headroom beyond the bound instance so a stream of
+    /// online insertions stays within the first allocation (see
+    /// [`crate::partition::PartitionPool::reserve_headroom`]).
+    pub fn reserve_headroom(
+        &mut self,
+        nodes: usize,
+        nets: usize,
+        net_size: usize,
+        pin_budget: usize,
+    ) {
+        self.ws.pool.reserve_headroom(nodes, nets, net_size, pin_budget);
+    }
+
+    /// Re-bind the parked buffers to `hg` with an explicit assignment and
+    /// a full value rebuild — the growth-tolerant unpark the
+    /// repartitioner falls back to when online mutations outgrew the
+    /// parked buffers (see
+    /// [`crate::partition::PartitionPool::unpark_with_parts`]).
+    pub fn unpark_with_parts<H: HypergraphOps<State = R::State>>(
+        &mut self,
+        hg: Arc<H>,
+        parts: &[BlockId],
+        ctx: &Context,
+    ) -> PartitionedHypergraph<H> {
+        self.ws.pool.unpark_with_parts(hg, parts, ctx.epsilon, ctx.threads)
+    }
+
     /// Move a binding onto a structurally equivalent hypergraph of a
     /// different representation, preserving all values (the n-level
     /// finest-level hand-off from the dynamic structure to the static

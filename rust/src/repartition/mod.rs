@@ -1,0 +1,939 @@
+//! Warm-start repartitioning on the dynamic hypergraph.
+//!
+//! The paper motivates partitioning as the backbone of distributed data
+//! placement, where the hypergraph evolves under traffic and nobody
+//! should pay full multilevel cost per request. This module is that
+//! story's serving layer: it keeps one partition *bound* to a
+//! [`DynamicHypergraph`], accepts [`ChangeBatch`]es of online mutations
+//! (insert/remove nodes and nets, weight updates), maps the previous
+//! assignment Π onto the mutated structure, and repairs quality with
+//! localized refinement plus a bounded-migration V-cycle from the cached
+//! partition (the established warm-start scheme, arXiv:2010.10272 §4.3)
+//! — all through the pooled [`RefinementPipeline`], so a stream of
+//! batches runs on **one** warm arena: after the first session bind the
+//! partition pool performs zero structural allocations as long as churn
+//! stays within the slot free-lists and the reserved headroom (asserted
+//! by the pool counters in the tests and `perf_hotpath`).
+//!
+//! ## One `apply` call
+//!
+//! 1. **Park** the bound partition (its buffers return to the pool) and
+//!    mutate the sole-owner dynamic structure in place — the same
+//!    boundary discipline as the n-level batch loop.
+//! 2. **Unpark** onto the mutated structure. If the mutations outgrew
+//!    the parked buffers (insertions past the reservation), the pool's
+//!    growth path ([`crate::partition::PartitionPool::unpark_with_parts`])
+//!    reallocates *cleanly* (counted) instead of corrupting state.
+//! 3. **Map Π**: surviving nodes keep their block; new nodes are seeded
+//!    into the lightest block and immediately improved by a gain-greedy
+//!    relocation under the run's objective.
+//! 4. **Localized refinement** around every touched node (LP + FM, or
+//!    the synchronous deterministic FM under the `Deterministic` preset)
+//!    with the PR-7 panic isolation: an unwinding worker is recovered,
+//!    the partition revalidated/rebuilt and rebalanced, and the request
+//!    still completes.
+//! 5. **Warm V-cycle** (optional, `RepartitionConfig::vcycles`): freeze
+//!    the active structure, V-cycle from the current assignment with the
+//!    blocks as coarsening communities, and carry the improvement back —
+//!    every rebind stays inside the pooled buffers.
+//! 6. **Migration bound**: nodes whose block changed are reverted
+//!    (cheapest-first) until the migrated weight respects
+//!    `RepartitionConfig::max_migration_fraction`; the returned
+//!    [`MoveSet`] reports migration volume alongside quality.
+//!
+//! [`RepartitionSession`] adds the long-lived batch mode: partitions are
+//! cached keyed by a structural instance hash, so re-binding a
+//! previously seen instance skips the cold multilevel run entirely. The
+//! CLI exposes the stream mode as `--repartition changes.txt`.
+
+use crate::coarsening;
+use crate::coordinator::context::Context;
+use crate::coordinator::partitioner;
+use crate::hypergraph::dynamic::DynamicHypergraph;
+use crate::hypergraph::{Hypergraph, HypergraphOps};
+use crate::partition::objective::with_policy;
+use crate::partition::{PartitionPool, PartitionedHypergraph};
+use crate::refinement::{rebalance, RefinementPipeline};
+use crate::util::error::{Context as ErrCtx, Result as IoResult};
+use crate::util::failpoints;
+use crate::util::fxhash::FxHashMap;
+use crate::{BlockId, EdgeId, EdgeWeight, NodeId, NodeWeight};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::path::Path;
+use std::sync::Arc;
+
+/// One online mutation of the finest-level hypergraph.
+#[derive(Clone, Debug)]
+pub enum Change {
+    /// add a node of the given weight (its id is reported as a placement)
+    InsertNode { weight: NodeWeight },
+    /// remove an active node (its pins leave every incident net)
+    RemoveNode { node: NodeId },
+    /// add a net over existing active nodes
+    InsertNet { pins: Vec<NodeId>, weight: EdgeWeight },
+    /// remove a net
+    RemoveNet { net: EdgeId },
+    /// set a node's weight
+    UpdateWeight { node: NodeId, weight: NodeWeight },
+}
+
+/// An ordered batch of changes applied atomically by
+/// [`Repartitioner::apply`] (one park/unpark cycle, one refinement pass).
+#[derive(Clone, Debug, Default)]
+pub struct ChangeBatch {
+    pub changes: Vec<Change>,
+}
+
+impl ChangeBatch {
+    pub fn new() -> Self {
+        ChangeBatch { changes: Vec::new() }
+    }
+
+    pub fn push(&mut self, c: Change) -> &mut Self {
+        self.changes.push(c);
+        self
+    }
+
+    pub fn len(&self) -> usize {
+        self.changes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.changes.is_empty()
+    }
+}
+
+/// The outcome of one [`Repartitioner::apply`]: which nodes moved, how
+/// much weight migrated, and the quality of the repaired partition.
+#[derive(Clone, Debug)]
+pub struct MoveSet {
+    /// surviving nodes whose block changed: `(node, from, to)`
+    pub moves: Vec<(NodeId, BlockId, BlockId)>,
+    /// nodes inserted by this batch and their assigned block
+    pub placements: Vec<(NodeId, BlockId)>,
+    /// total weight of the `moves` (placements are not migration — a new
+    /// node has to be placed somewhere)
+    pub migrated_weight: NodeWeight,
+    /// the configured absolute migration bound, if any
+    pub migration_limit: Option<NodeWeight>,
+    /// objective value of the repaired partition (per `ctx.objective`)
+    pub objective: i64,
+    pub imbalance: f64,
+    pub balanced: bool,
+}
+
+impl MoveSet {
+    /// Does the migration volume respect the configured bound?
+    pub fn bound_satisfied(&self) -> bool {
+        self.migration_limit.map_or(true, |l| self.migrated_weight <= l)
+    }
+
+    /// One-line summary for stream-mode logging.
+    pub fn summary(&self) -> String {
+        format!(
+            "moved {} nodes (weight {}{}) placed {} objective {} imbalance {:.4}{}",
+            self.moves.len(),
+            self.migrated_weight,
+            self.migration_limit.map_or(String::new(), |l| format!("/{l}")),
+            self.placements.len(),
+            self.objective,
+            self.imbalance,
+            if self.balanced { "" } else { " IMBALANCED" },
+        )
+    }
+}
+
+/// Knobs of the warm-start service.
+#[derive(Clone, Debug)]
+pub struct RepartitionConfig {
+    /// cap migrated weight per `apply` at this fraction of the total
+    /// node weight (`None`: unbounded)
+    pub max_migration_fraction: Option<f64>,
+    /// warm V-cycles per `apply` (0 disables the multilevel repair)
+    pub vcycles: usize,
+    /// baseline mode: skip all quality repair, only restore balance —
+    /// the floor the warm start is measured against in the tests
+    pub rebalance_only: bool,
+    /// extra node slots reserved in the pool beyond the bound instance,
+    /// so insertions past the free-list stay within the first allocation
+    pub headroom_nodes: usize,
+    /// extra net slots reserved in the pool
+    pub headroom_nets: usize,
+    /// largest net the reservation must accommodate (0: the instance's)
+    pub headroom_net_size: usize,
+}
+
+impl Default for RepartitionConfig {
+    fn default() -> Self {
+        RepartitionConfig {
+            max_migration_fraction: None,
+            vcycles: 1,
+            rebalance_only: false,
+            headroom_nodes: 0,
+            headroom_nets: 0,
+            headroom_net_size: 0,
+        }
+    }
+}
+
+/// The warm-start repartitioner: one dynamic hypergraph, one cached
+/// partition, one pooled refinement arena, many [`Self::apply`] calls.
+pub struct Repartitioner {
+    ctx: Context,
+    cfg: RepartitionConfig,
+    pipeline: RefinementPipeline,
+    dynhg: Arc<DynamicHypergraph>,
+    phg: Option<PartitionedHypergraph<DynamicHypergraph>>,
+    // ---- reused per-apply scratch ----
+    /// pre-batch assignment (migration accounting)
+    prev_parts: Vec<BlockId>,
+    /// assignment handed to the rebuild on the mutated structure
+    next_parts: Vec<BlockId>,
+    /// nodes whose neighborhood a batch touched (refinement seeds)
+    touched: Vec<NodeId>,
+    /// per-block weights for the greedy placement seed
+    bw: Vec<NodeWeight>,
+}
+
+impl Repartitioner {
+    /// Cold start: run full multilevel partitioning once, then bind the
+    /// result to the dynamic structure for incremental serving.
+    pub fn new(hg: Arc<Hypergraph>, ctx: Context, cfg: RepartitionConfig) -> Self {
+        let phg = partitioner::partition_arc(hg.clone(), &ctx);
+        let parts = phg.parts();
+        drop(phg);
+        Self::new_with_parts(hg, &parts, ctx, cfg)
+    }
+
+    /// Warm start from an existing assignment (session cache hits): the
+    /// multilevel run is skipped entirely.
+    pub fn new_with_parts(
+        hg: Arc<Hypergraph>,
+        parts: &[BlockId],
+        ctx: Context,
+        cfg: RepartitionConfig,
+    ) -> Self {
+        assert_eq!(parts.len(), hg.num_nodes(), "assignment must cover the instance");
+        let dynhg = Arc::new(DynamicHypergraph::from_hypergraph(&hg));
+        let mut pipeline = RefinementPipeline::new_for(&ctx, &hg);
+        pipeline.workspace_mut().reserve_partition(&*dynhg);
+        if cfg.headroom_nodes > 0 || cfg.headroom_nets > 0 || cfg.headroom_net_size > 0 {
+            // sparse pin budget: every headroom net may need min(|e|, k)
+            // slots, bounded by the reserved max net size
+            let slot = cfg.headroom_net_size.max(hg.max_net_size()).min(ctx.k);
+            pipeline.reserve_headroom(
+                cfg.headroom_nodes,
+                cfg.headroom_nets,
+                cfg.headroom_net_size,
+                cfg.headroom_nets * slot,
+            );
+        }
+        pipeline
+            .workspace_mut()
+            .ensure_node_capacity(hg.num_nodes() + cfg.headroom_nodes);
+        // the first (and ideally only) structural allocation of the session
+        let phg = pipeline.bind(dynhg.clone(), parts, &ctx);
+        Repartitioner {
+            ctx,
+            cfg,
+            pipeline,
+            dynhg,
+            phg: Some(phg),
+            prev_parts: Vec::new(),
+            next_parts: Vec::new(),
+            touched: Vec::new(),
+            bw: Vec::new(),
+        }
+    }
+
+    /// The bound partition (valid between `apply` calls).
+    pub fn partition(&self) -> &PartitionedHypergraph<DynamicHypergraph> {
+        self.phg.as_ref().expect("no partition bound (apply in progress?)")
+    }
+
+    /// The mutated dynamic structure.
+    pub fn hypergraph(&self) -> &DynamicHypergraph {
+        &self.dynhg
+    }
+
+    /// The pooled partition state (allocation counters for the tests).
+    pub fn partition_pool(&self) -> &PartitionPool {
+        self.pipeline.partition_pool()
+    }
+
+    pub fn context(&self) -> &Context {
+        &self.ctx
+    }
+
+    /// Apply one change batch: mutate, remap Π, refine, bound migration.
+    /// On a bad change the batch stops at the offending mutation, the
+    /// partition is still restored to a consistent state on whatever was
+    /// applied, and the error is returned.
+    pub fn apply(&mut self, batch: &ChangeBatch) -> Result<MoveSet, String> {
+        let phg = self
+            .phg
+            .take()
+            .ok_or_else(|| "no partition bound (previous apply failed hard)".to_string())?;
+        // each request runs under its own deadline arming, like a driver
+        self.ctx.cancel.arm(self.ctx.time_limit);
+        let n_before = HypergraphOps::num_nodes(phg.hypergraph());
+        self.prev_parts.clear();
+        self.prev_parts.extend(phg.parts());
+        self.touched.clear();
+
+        // ---- park + mutate (n-level batch-boundary discipline) ----
+        self.pipeline.park(phg);
+        let mut new_nodes: Vec<NodeId> = Vec::new();
+        let mut batch_err: Option<String> = None;
+        match Arc::get_mut(&mut self.dynhg) {
+            None => {
+                batch_err =
+                    Some("dynamic hypergraph is shared; drop outside references first".into())
+            }
+            Some(hg_mut) => {
+                for change in &batch.changes {
+                    let r = apply_change(hg_mut, change, &mut new_nodes, &mut self.touched);
+                    if let Err(e) = r {
+                        batch_err = Some(e);
+                        break;
+                    }
+                }
+            }
+        }
+
+        // ---- unpark onto the mutated structure ----
+        let n_now = HypergraphOps::num_nodes(&*self.dynhg);
+        debug_assert!(n_now >= n_before, "node slots never shrink");
+        self.next_parts.clear();
+        self.next_parts.extend_from_slice(&self.prev_parts);
+        self.next_parts.resize(n_now, 0);
+
+        // greedy placement seed: new nodes go to the lightest block
+        // (deterministic: ties toward the lower block id)
+        let k = self.ctx.k;
+        self.bw.clear();
+        self.bw.resize(k, 0);
+        for u in self.dynhg.active_nodes() {
+            if !new_nodes.contains(&u) {
+                self.bw[self.next_parts[u as usize] as usize] +=
+                    HypergraphOps::node_weight(&*self.dynhg, u);
+            }
+        }
+        let mut placements: Vec<(NodeId, BlockId)> = Vec::with_capacity(new_nodes.len());
+        for &u in &new_nodes {
+            let b = (0..k).min_by_key(|&b| (self.bw[b], b)).unwrap() as BlockId;
+            self.bw[b as usize] += HypergraphOps::node_weight(&*self.dynhg, u);
+            self.next_parts[u as usize] = b;
+            placements.push((u, b));
+        }
+
+        let phg = if self.pipeline.parked_fits(&*self.dynhg) {
+            // warm path: the parked buffers host the mutated structure,
+            // the values are rebuilt in place — zero structural allocation
+            let phg = self.pipeline.unpark(self.dynhg.clone(), &self.ctx);
+            phg.assign_all(&self.next_parts, self.ctx.threads);
+            phg
+        } else {
+            // growth path: mutations outgrew the buffers (or the state
+            // layout); reallocate cleanly, counted by the pool
+            self.pipeline.unpark_with_parts(self.dynhg.clone(), &self.next_parts, &self.ctx)
+        };
+
+        if let Some(e) = batch_err {
+            // the structure holds whatever prefix of the batch applied;
+            // the partition above is consistent with it — report and bail
+            self.phg = Some(phg);
+            return Err(e);
+        }
+
+        // gain-greedy improvement of the placement seeds
+        with_policy!(self.ctx.objective, P => {
+            for p in placements.iter_mut() {
+                if let Some((gain, to)) = phg.max_gain_move_p::<P>(p.0) {
+                    if gain > 0 && phg.try_move_p::<P>(p.0, to, None).is_some() {
+                        p.1 = to;
+                    }
+                }
+            }
+        });
+
+        // ---- localized refinement around the touched neighborhood ----
+        self.touched.sort_unstable();
+        self.touched.dedup();
+        let dynhg = &self.dynhg;
+        self.touched.retain(|&u| dynhg.is_active_node(u));
+        self.pipeline.workspace_mut().ensure_node_capacity(n_now);
+        let refined = {
+            let pipeline = &mut self.pipeline;
+            let ctx = &self.ctx;
+            let cfg = &self.cfg;
+            let touched = &self.touched;
+            catch_unwind(AssertUnwindSafe(|| {
+                failpoints::fire(failpoints::REPARTITION_APPLY, &ctx.cancel);
+                if !cfg.rebalance_only && !touched.is_empty() {
+                    if ctx.deterministic {
+                        // thread-count invariance: the synchronous
+                        // deterministic FM doubles as the localized LP
+                        pipeline.fm_with_seeds(&phg, ctx, Some(touched));
+                    } else {
+                        pipeline.lp_localized(&phg, ctx, touched);
+                        if ctx.use_fm {
+                            pipeline.fm_with_seeds(&phg, ctx, Some(touched));
+                        }
+                    }
+                }
+            }))
+        };
+        let worker_panicked = self.pipeline.workspace_mut().take_worker_panic();
+        if refined.is_err() || worker_panicked {
+            // panic isolation (PR-7 ladder): recover, revalidate, rebalance
+            self.ctx.cancel.note_panic_recovered();
+            let ws = self.pipeline.workspace_mut();
+            ws.reset_owner(ws.owner.len());
+            if phg.validate().is_err() {
+                phg.rebuild_from_parts(self.ctx.threads);
+            }
+        }
+        if !phg.is_balanced() {
+            rebalance::rebalance(&phg, &self.ctx);
+        }
+
+        // ---- warm V-cycle on the frozen active structure ----
+        let phg = if self.cfg.vcycles > 0
+            && !self.cfg.rebalance_only
+            && !self.ctx.cancel.is_expired()
+            && self.dynhg.num_active_nodes() >= 2 * k
+        {
+            self.warm_vcycle(phg)
+        } else {
+            phg
+        };
+
+        // ---- migration accounting + bound ----
+        let total_weight = HypergraphOps::total_weight(&*self.dynhg);
+        let migration_limit = self.cfg.max_migration_fraction.map(|f| {
+            ((f * total_weight as f64).ceil() as NodeWeight).max(0)
+        });
+        new_nodes.sort_unstable();
+        let is_new = |u: NodeId| new_nodes.binary_search(&u).is_ok();
+        let mut migrated: Vec<(NodeId, BlockId, BlockId)> = Vec::new();
+        let mut migrated_weight: NodeWeight = 0;
+        for u in self.dynhg.active_nodes() {
+            if (u as usize) < n_before && !is_new(u) {
+                let from = self.prev_parts[u as usize];
+                let to = phg.block_of(u);
+                if from != to {
+                    migrated.push((u, from, to));
+                    migrated_weight += HypergraphOps::node_weight(&*self.dynhg, u);
+                }
+            }
+        }
+        if let Some(limit) = migration_limit {
+            if migrated_weight > limit {
+                migrated_weight =
+                    enforce_migration_bound(&phg, &self.ctx, &mut migrated, migrated_weight, limit);
+            }
+        }
+        // reverts may have unbalanced blocks the migrations were fixing
+        if !phg.is_balanced() {
+            rebalance::rebalance(&phg, &self.ctx);
+            // a forced rebalance can re-migrate: re-account (bound may be
+            // exceeded; the MoveSet reports it instead of hiding it)
+            migrated.clear();
+            migrated_weight = 0;
+            for u in self.dynhg.active_nodes() {
+                if (u as usize) < n_before && !is_new(u) {
+                    let from = self.prev_parts[u as usize];
+                    let to = phg.block_of(u);
+                    if from != to {
+                        migrated.push((u, from, to));
+                        migrated_weight += HypergraphOps::node_weight(&*self.dynhg, u);
+                    }
+                }
+            }
+        }
+        for p in placements.iter_mut() {
+            p.1 = phg.block_of(p.0);
+        }
+
+        let result = MoveSet {
+            moves: migrated,
+            placements,
+            migrated_weight,
+            migration_limit,
+            objective: phg.objective_value(self.ctx.objective),
+            imbalance: phg.imbalance(),
+            balanced: phg.is_balanced(),
+        };
+        self.phg = Some(phg);
+        Ok(result)
+    }
+
+    /// V-cycle the current assignment on a frozen snapshot of the active
+    /// structure (blocks as coarsening communities, arXiv:2010.10272
+    /// §4.3), then carry the improved assignment back onto the dynamic
+    /// binding. Every rebind reuses the pooled buffers: the snapshot is
+    /// no larger than the dynamic structure, so the pool's fit check
+    /// keeps the whole cycle allocation-free.
+    fn warm_vcycle(
+        &mut self,
+        phg: PartitionedHypergraph<DynamicHypergraph>,
+    ) -> PartitionedHypergraph<DynamicHypergraph> {
+        let mut parts_dyn = phg.parts();
+        let snap = self.dynhg.freeze();
+        let snap_hg = Arc::new(snap.hg);
+        let mut parts_s: Vec<BlockId> =
+            snap.to_dynamic.iter().map(|&u| parts_dyn[u as usize]).collect();
+        self.pipeline.park(phg);
+        let mut cur = self.pipeline.unpark_with_parts(snap_hg.clone(), &parts_s, &self.ctx);
+        for _ in 0..self.cfg.vcycles {
+            if self.ctx.cancel.is_expired() {
+                self.ctx.cancel.note_early_stop();
+                break;
+            }
+            let before = cur.objective_value(self.ctx.objective);
+            let hierarchy = coarsening::coarsen(snap_hg.clone(), &self.ctx, Some(&parts_s));
+            let mut coarse_parts: Vec<BlockId> = parts_s.clone();
+            for level in &hierarchy.levels {
+                let mut next = vec![0 as BlockId; level.coarse.num_nodes()];
+                for (u, &c) in level.fine_to_coarse.iter().enumerate() {
+                    next[c as usize] = coarse_parts[u];
+                }
+                coarse_parts = next;
+            }
+            cur = self.pipeline.rebind_with_parts(
+                cur,
+                hierarchy.coarsest(),
+                &coarse_parts,
+                &self.ctx,
+            );
+            self.pipeline.refine_at_distance(&cur, &self.ctx, hierarchy.levels.len());
+            cur = self.pipeline.uncoarsen(&hierarchy.levels, &snap_hg, cur, &self.ctx);
+            if cur.objective_value(self.ctx.objective) < before && cur.is_balanced() {
+                parts_s = cur.parts();
+            } else {
+                // rejected: delta-restore the best accepted assignment
+                cur.apply_parts_delta(&parts_s, self.ctx.threads);
+                break;
+            }
+        }
+        for (c, &u) in snap.to_dynamic.iter().enumerate() {
+            parts_dyn[u as usize] = parts_s[c];
+        }
+        self.pipeline.park(cur);
+        self.pipeline.unpark_with_parts(self.dynhg.clone(), &parts_dyn, &self.ctx)
+    }
+}
+
+/// Apply one change, recording new node ids and the touched neighborhood
+/// (refinement seeds: every node whose gain structure the change shifts).
+fn apply_change(
+    hg: &mut DynamicHypergraph,
+    change: &Change,
+    new_nodes: &mut Vec<NodeId>,
+    touched: &mut Vec<NodeId>,
+) -> Result<(), String> {
+    match change {
+        Change::InsertNode { weight } => {
+            let u = hg.insert_node(*weight)?;
+            new_nodes.push(u);
+            touched.push(u);
+        }
+        Change::RemoveNode { node } => {
+            for &e in HypergraphOps::incident_nets(hg, *node) {
+                for &p in HypergraphOps::pins(hg, e) {
+                    if p != *node {
+                        touched.push(p);
+                    }
+                }
+            }
+            hg.remove_node(*node)?;
+        }
+        Change::InsertNet { pins, weight } => {
+            hg.insert_net(pins, *weight)?;
+            touched.extend_from_slice(pins);
+        }
+        Change::RemoveNet { net } => {
+            if (*net as usize) < HypergraphOps::num_nets(hg) {
+                touched.extend_from_slice(HypergraphOps::pins(hg, *net));
+            }
+            hg.remove_net(*net)?;
+        }
+        Change::UpdateWeight { node, weight } => {
+            hg.update_weight(*node, *weight)?;
+            touched.push(*node);
+        }
+    }
+    Ok(())
+}
+
+/// Revert migrations cheapest-first until the bound holds. Deterministic:
+/// candidates are ordered by (revert gain desc, node id), reverts run
+/// sequentially through balance-checked moves. Returns the remaining
+/// migrated weight (the bound can stay violated when reverts would
+/// overload blocks; the caller reports `bound_satisfied` accordingly).
+fn enforce_migration_bound(
+    phg: &PartitionedHypergraph<DynamicHypergraph>,
+    ctx: &Context,
+    migrated: &mut Vec<(NodeId, BlockId, BlockId)>,
+    mut migrated_weight: NodeWeight,
+    limit: NodeWeight,
+) -> NodeWeight {
+    with_policy!(ctx.objective, P => {
+        let mut order: Vec<(i64, NodeId, BlockId)> =
+            migrated.iter().map(|&(u, from, _)| (phg.gain_p::<P>(u, from), u, from)).collect();
+        // revert the cheapest migrations first: highest revert gain means
+        // the move bought the least quality for its migration cost
+        order.sort_unstable_by(|a, b| b.0.cmp(&a.0).then(a.1.cmp(&b.1)));
+        let mut reverted: Vec<NodeId> = Vec::new();
+        for &(_, u, from) in &order {
+            if migrated_weight <= limit {
+                break;
+            }
+            if phg.try_move_p::<P>(u, from, None).is_some() {
+                migrated_weight -= HypergraphOps::node_weight(phg.hypergraph(), u);
+                reverted.push(u);
+            }
+        }
+        // reverted is in revert order, not sorted — linear containment is
+        // fine for the typically-small revert set
+        migrated.retain(|&(u, _, _)| !reverted.contains(&u));
+    });
+    migrated_weight
+}
+
+// ---------------------------------------------------------------------
+// Long-lived session: cached partitions keyed by instance hash
+// ---------------------------------------------------------------------
+
+/// Structural hash of the *active* state of a hypergraph: node ids and
+/// weights, plus per-net weight and an order-independent pin digest (pin
+/// order inside a net is not canonical on the dynamic structure). Two
+/// instances hash equal iff they expose the same active nodes/nets in
+/// the same id space — exactly when a cached assignment is reusable.
+pub fn instance_hash<H: HypergraphOps>(hg: &H) -> u64 {
+    #[inline]
+    fn splitmix(mut x: u64) -> u64 {
+        x = x.wrapping_add(0x9e3779b97f4a7c15);
+        x = (x ^ (x >> 30)).wrapping_mul(0xbf58476d1ce4e5b9);
+        x = (x ^ (x >> 27)).wrapping_mul(0x94d049bb133111eb);
+        x ^ (x >> 31)
+    }
+    let mut h: u64 = 0xcbf29ce484222325;
+    let mut mix = |v: u64| {
+        h = (h ^ splitmix(v)).wrapping_mul(0x100000001b3);
+    };
+    for u in 0..hg.num_nodes() as NodeId {
+        if hg.is_active_node(u) {
+            mix(u as u64);
+            mix(hg.node_weight(u) as u64);
+        }
+    }
+    for e in hg.nets() {
+        let pins = hg.pins(e);
+        if pins.is_empty() {
+            continue; // removed / emptied slots are structurally absent
+        }
+        let mut digest: u64 = 0;
+        for &p in pins {
+            digest ^= splitmix(p as u64);
+        }
+        mix(e as u64);
+        mix(digest);
+        mix(hg.net_weight(e) as u64);
+    }
+    h
+}
+
+/// Long-lived serving mode: bind instances, stream change batches, and
+/// cache partitions keyed by [`instance_hash`] so a previously seen
+/// instance warm-starts without a multilevel run.
+pub struct RepartitionSession {
+    ctx: Context,
+    cfg: RepartitionConfig,
+    rep: Option<Repartitioner>,
+    cache: FxHashMap<u64, Vec<BlockId>>,
+    hits: usize,
+    misses: usize,
+}
+
+impl RepartitionSession {
+    pub fn new(ctx: Context, cfg: RepartitionConfig) -> Self {
+        RepartitionSession { ctx, cfg, rep: None, cache: FxHashMap::default(), hits: 0, misses: 0 }
+    }
+
+    /// Bind an instance: a cache hit restores the stored assignment (no
+    /// multilevel run), a miss pays the cold start once and caches it.
+    pub fn bind(&mut self, hg: Arc<Hypergraph>) -> &mut Repartitioner {
+        self.stash_current();
+        let key = instance_hash(&*hg);
+        let rep = match self.cache.get(&key) {
+            Some(parts) if parts.len() == hg.num_nodes() => {
+                self.hits += 1;
+                Repartitioner::new_with_parts(hg, parts, self.ctx.clone(), self.cfg.clone())
+            }
+            _ => {
+                self.misses += 1;
+                let rep = Repartitioner::new(hg, self.ctx.clone(), self.cfg.clone());
+                self.cache.insert(key, rep.partition().parts());
+                rep
+            }
+        };
+        self.rep = Some(rep);
+        self.rep.as_mut().unwrap()
+    }
+
+    /// Apply a batch through the bound repartitioner and re-cache the
+    /// post-batch assignment under the mutated instance's hash.
+    pub fn apply(&mut self, batch: &ChangeBatch) -> Result<MoveSet, String> {
+        let rep = self.rep.as_mut().ok_or_else(|| "no instance bound".to_string())?;
+        let result = rep.apply(batch)?;
+        let key = instance_hash(rep.hypergraph());
+        self.cache.insert(key, rep.partition().parts());
+        Ok(result)
+    }
+
+    /// Cache the currently bound partition under its current hash (also
+    /// runs automatically when `bind` replaces the instance).
+    pub fn stash_current(&mut self) {
+        if let Some(rep) = &self.rep {
+            let key = instance_hash(rep.hypergraph());
+            self.cache.insert(key, rep.partition().parts());
+        }
+    }
+
+    pub fn repartitioner(&self) -> Option<&Repartitioner> {
+        self.rep.as_ref()
+    }
+
+    pub fn cache_hits(&self) -> usize {
+        self.hits
+    }
+
+    pub fn cache_misses(&self) -> usize {
+        self.misses
+    }
+}
+
+// ---------------------------------------------------------------------
+// Change-stream parsing (the CLI's `--repartition changes.txt`)
+// ---------------------------------------------------------------------
+
+/// Parse a change stream. Line format (`%`/`#` start comments):
+///
+/// ```text
+/// insert-node <weight>
+/// remove-node <node>
+/// insert-net <weight> <pin> <pin> ...
+/// remove-net <net>
+/// update-weight <node> <weight>
+/// apply
+/// ```
+///
+/// `apply` closes the current batch; a trailing batch without `apply` is
+/// flushed at end of file.
+pub fn parse_changes(path: &Path) -> IoResult<Vec<ChangeBatch>> {
+    fn num<'a>(
+        tok: &mut impl Iterator<Item = &'a str>,
+        lineno: usize,
+        op: &str,
+        what: &str,
+    ) -> IoResult<i64> {
+        tok.next()
+            .ok_or_else(|| {
+                crate::util::error::Error::msg(format!(
+                    "line {lineno}: '{op}' is missing its {what}"
+                ))
+            })?
+            .parse::<i64>()
+            .with_context(|| format!("line {lineno}: bad {what}"))
+    }
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("cannot read change stream {}", path.display()))?;
+    let mut batches: Vec<ChangeBatch> = Vec::new();
+    let mut current = ChangeBatch::new();
+    for (i, raw) in text.lines().enumerate() {
+        let lineno = i + 1;
+        let line = raw.split(['%', '#']).next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        let mut tok = line.split_whitespace();
+        let op = tok.next().unwrap();
+        match op {
+            "insert-node" => {
+                current.push(Change::InsertNode { weight: num(&mut tok, lineno, op, "weight")? });
+            }
+            "remove-node" => {
+                current.push(Change::RemoveNode {
+                    node: num(&mut tok, lineno, op, "node id")? as NodeId,
+                });
+            }
+            "insert-net" => {
+                let weight = num(&mut tok, lineno, op, "weight")?;
+                let mut pins: Vec<NodeId> = Vec::new();
+                for t in tok.by_ref() {
+                    pins.push(
+                        t.parse::<NodeId>()
+                            .with_context(|| format!("line {lineno}: bad pin '{t}'"))?,
+                    );
+                }
+                current.push(Change::InsertNet { pins, weight });
+            }
+            "remove-net" => {
+                current.push(Change::RemoveNet {
+                    net: num(&mut tok, lineno, op, "net id")? as EdgeId,
+                });
+            }
+            "update-weight" => {
+                let node = num(&mut tok, lineno, op, "node id")? as NodeId;
+                let weight = num(&mut tok, lineno, op, "weight")?;
+                current.push(Change::UpdateWeight { node, weight });
+            }
+            "apply" => {
+                batches.push(std::mem::take(&mut current));
+            }
+            other => {
+                crate::bail!("line {lineno}: unknown change op '{other}'");
+            }
+        }
+        if tok.next().is_some() && op != "insert-net" {
+            crate::bail!("line {lineno}: trailing tokens after '{op}'");
+        }
+    }
+    if !current.is_empty() {
+        batches.push(current);
+    }
+    Ok(batches)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::context::Preset;
+    use crate::generators::{planted_hypergraph, PlantedParams};
+
+    fn small_ctx(k: usize) -> Context {
+        let mut c = Context::new(Preset::Default, k, 0.1).with_threads(2).with_seed(5);
+        c.contraction_limit_factor = 24;
+        c.ip_min_repetitions = 1;
+        c.ip_max_repetitions = 2;
+        c.fm_max_rounds = 2;
+        c
+    }
+
+    fn small_instance(seed: u64) -> Arc<Hypergraph> {
+        Arc::new(planted_hypergraph(
+            &PlantedParams { n: 300, m: 500, blocks: 4, ..Default::default() },
+            seed,
+        ))
+    }
+
+    #[test]
+    fn apply_smoke_insert_remove_update() {
+        let hg = small_instance(11);
+        let mut rep = Repartitioner::new(hg, small_ctx(4), RepartitionConfig::default());
+        let mut batch = ChangeBatch::new();
+        batch.push(Change::InsertNode { weight: 2 });
+        batch.push(Change::UpdateWeight { node: 3, weight: 4 });
+        batch.push(Change::RemoveNode { node: 17 });
+        batch.push(Change::InsertNet { pins: vec![1, 2, 5], weight: 1 });
+        let ms = rep.apply(&batch).unwrap();
+        assert_eq!(ms.placements.len(), 1);
+        assert!(ms.balanced, "imbalance {}", ms.imbalance);
+        rep.hypergraph().validate().unwrap();
+        rep.partition().verify_consistency().unwrap();
+        // the new node got a real block
+        let (u, b) = ms.placements[0];
+        assert_eq!(rep.partition().block_of(u), b);
+    }
+
+    #[test]
+    fn apply_error_keeps_state_consistent() {
+        let hg = small_instance(13);
+        let mut rep = Repartitioner::new(hg, small_ctx(4), RepartitionConfig::default());
+        let before_nodes = rep.hypergraph().num_active_nodes();
+        let mut batch = ChangeBatch::new();
+        batch.push(Change::RemoveNode { node: 5 });
+        batch.push(Change::RemoveNode { node: 5 }); // double removal: error
+        batch.push(Change::InsertNode { weight: 1 }); // never reached
+        let err = rep.apply(&batch).unwrap_err();
+        assert!(err.contains("not active"), "{err}");
+        // the applied prefix stands, the partition is consistent on it
+        assert_eq!(rep.hypergraph().num_active_nodes(), before_nodes - 1);
+        rep.hypergraph().validate().unwrap();
+        rep.partition().verify_consistency().unwrap();
+        // and the next batch runs normally
+        let ms = rep.apply(&ChangeBatch::new()).unwrap();
+        assert!(ms.moves.is_empty() || ms.balanced);
+    }
+
+    #[test]
+    fn session_caches_by_instance_hash() {
+        let hg = small_instance(17);
+        let mut session =
+            RepartitionSession::new(small_ctx(4), RepartitionConfig::default());
+        session.bind(hg.clone());
+        assert_eq!(session.cache_misses(), 1);
+        let obj = session.repartitioner().unwrap().partition().km1();
+        // re-binding the identical instance is a hit, not a second run
+        session.bind(hg);
+        assert_eq!(session.cache_hits(), 1);
+        assert_eq!(session.cache_misses(), 1);
+        assert_eq!(session.repartitioner().unwrap().partition().km1(), obj);
+    }
+
+    #[test]
+    fn instance_hash_tracks_structure_not_pin_order() {
+        let hg = small_instance(19);
+        let d1 = DynamicHypergraph::from_hypergraph(&hg);
+        let mut d2 = DynamicHypergraph::from_hypergraph(&hg);
+        assert_eq!(instance_hash(&d1), instance_hash(&*hg));
+        // a contract/uncontract round-trip permutes pins within nets but
+        // restores the same structure
+        let m = d2.contract(1, 0);
+        let h_contracted = instance_hash(&d2);
+        d2.uncontract_batch(&[m]);
+        assert_eq!(instance_hash(&d1), instance_hash(&d2));
+        assert_ne!(instance_hash(&d1), h_contracted);
+        // mutations change the hash
+        let mut d3 = DynamicHypergraph::from_hypergraph(&hg);
+        d3.update_weight(0, 5).unwrap();
+        assert_ne!(instance_hash(&d1), instance_hash(&d3));
+    }
+
+    #[test]
+    fn parse_changes_roundtrip() {
+        let dir = std::env::temp_dir();
+        let path = dir.join("mtkh_test_changes.txt");
+        std::fs::write(
+            &path,
+            "% a comment\ninsert-node 2\ninsert-net 1 0 4 9 % inline\napply\n\
+             remove-net 3\nupdate-weight 7 5\napply\nremove-node 1\n",
+        )
+        .unwrap();
+        let batches = parse_changes(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(batches.len(), 3, "trailing batch flushed at EOF");
+        assert_eq!(batches[0].len(), 2);
+        assert!(matches!(batches[0].changes[0], Change::InsertNode { weight: 2 }));
+        assert!(
+            matches!(&batches[0].changes[1], Change::InsertNet { pins, weight: 1 } if pins == &[0, 4, 9])
+        );
+        assert_eq!(batches[1].len(), 2);
+        assert_eq!(batches[2].len(), 1);
+    }
+
+    #[test]
+    fn parse_changes_rejects_garbage() {
+        let dir = std::env::temp_dir();
+        let path = dir.join("mtkh_test_changes_bad.txt");
+        std::fs::write(&path, "frobnicate 3\n").unwrap();
+        assert!(parse_changes(&path).is_err());
+        std::fs::write(&path, "insert-node\n").unwrap();
+        assert!(parse_changes(&path).is_err(), "missing weight");
+        std::fs::write(&path, "remove-node 3 4\n").unwrap();
+        assert!(parse_changes(&path).is_err(), "trailing tokens");
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -11,6 +11,7 @@
 //! | [`FLOW_WAVE_TAIL`] | flow worker, after refining a block pair (in-flight guard armed) |
 //! | [`BATCH_UNCONTRACTION`] | n-level driver, localized refinement after a batch uncontraction |
 //! | [`IP_CANDIDATE`] | initial-partitioning portfolio, per candidate attempt |
+//! | [`REPARTITION_APPLY`] | repartitioner, localized refinement after a change batch is applied |
 //!
 //! The whole module compiles to no-ops unless the off-by-default
 //! `failpoints` Cargo feature is enabled — `fire()` is then an empty
@@ -30,6 +31,9 @@ pub const FLOW_WAVE_TAIL: &str = "flow-wave-tail";
 pub const BATCH_UNCONTRACTION: &str = "batch-uncontraction";
 /// Initial partitioning: one portfolio candidate attempt.
 pub const IP_CANDIDATE: &str = "ip-candidate";
+/// Repartitioner: localized refinement after a change batch was applied
+/// to the dynamic structure (the partition is already rebound).
+pub const REPARTITION_APPLY: &str = "repartition-apply";
 
 /// The fault a configured site injects when hit.
 #[derive(Clone, Copy, Debug)]

@@ -145,3 +145,111 @@ fn all_presets_survive_degenerate_inputs() {
         phg.verify_consistency().unwrap();
     }
 }
+
+// ---------------------------------------------------------------------
+// Online-mutation edge cases through the warm-start repartitioner: the
+// degenerate change batches a serving deployment will eventually see.
+// ---------------------------------------------------------------------
+
+mod repartition_edges {
+    use super::*;
+    use mtkahypar::hypergraph::HypergraphOps;
+    use mtkahypar::repartition::{Change, ChangeBatch, RepartitionConfig, Repartitioner};
+
+    /// A 2-regular chain with one triangle net at the head.
+    fn chain_instance(n: usize) -> Arc<Hypergraph> {
+        let mut nets: Vec<Vec<u32>> = vec![vec![0, 1, 2]];
+        for i in 0..(n as u32 - 1) {
+            nets.push(vec![i, i + 1]);
+        }
+        Arc::new(Hypergraph::from_nets(n, &nets, None, None))
+    }
+
+    fn rep_ctx(k: usize, eps: f64) -> Context {
+        let mut c = ctx(k);
+        c.epsilon = eps;
+        c
+    }
+
+    #[test]
+    fn weight_update_flipping_balance_is_repaired() {
+        let hg = chain_instance(12);
+        let mut rep =
+            Repartitioner::new(hg, rep_ctx(2, 0.1), RepartitionConfig::default());
+        assert!(rep.partition().is_balanced());
+        // one node jumps from weight 1 to 5: its block overflows the
+        // (recomputed) L_max and apply must migrate nodes out
+        let heavy = 0u32;
+        let mut batch = ChangeBatch::new();
+        batch.push(Change::UpdateWeight { node: heavy, weight: 5 });
+        let ms = rep.apply(&batch).unwrap();
+        assert!(ms.balanced, "imbalance {} after weight flip", ms.imbalance);
+        rep.partition().verify_consistency().unwrap();
+        assert_eq!(HypergraphOps::node_weight(rep.hypergraph(), heavy), 5);
+    }
+
+    #[test]
+    fn removing_nodes_until_a_net_empties() {
+        let hg = chain_instance(14);
+        let mut rep =
+            Repartitioner::new(hg, rep_ctx(2, 0.2), RepartitionConfig::default());
+        // the triangle net {0,1,2} loses all three pins in one batch
+        let mut batch = ChangeBatch::new();
+        for u in [0u32, 1, 2] {
+            batch.push(Change::RemoveNode { node: u });
+        }
+        let ms = rep.apply(&batch).unwrap();
+        assert!(ms.balanced);
+        rep.hypergraph().validate().unwrap();
+        rep.partition().verify_consistency().unwrap();
+        assert!(HypergraphOps::pins(rep.hypergraph(), 0).is_empty(), "net 0 emptied");
+        // the emptied net is still removable (its slot is not yet free)
+        let mut cleanup = ChangeBatch::new();
+        cleanup.push(Change::RemoveNet { net: 0 });
+        rep.apply(&cleanup).unwrap();
+        rep.hypergraph().validate().unwrap();
+    }
+
+    #[test]
+    fn single_pin_net_insert_is_objective_neutral() {
+        let hg = chain_instance(12);
+        // rebalance-only, no V-cycles: the partition must not move, so
+        // the λ=1 net's zero contribution is observable exactly
+        let cfg = RepartitionConfig {
+            rebalance_only: true,
+            vcycles: 0,
+            ..RepartitionConfig::default()
+        };
+        let mut rep = Repartitioner::new(hg, rep_ctx(2, 0.2), cfg);
+        let before = rep.partition().km1();
+        let soed_before = rep.partition().soed();
+        let mut batch = ChangeBatch::new();
+        batch.push(Change::InsertNet { pins: vec![5], weight: 3 });
+        let ms = rep.apply(&batch).unwrap();
+        assert!(ms.balanced);
+        assert_eq!(ms.objective, before, "single-pin net must contribute 0");
+        assert_eq!(rep.partition().km1(), before);
+        assert_eq!(rep.partition().soed(), soed_before);
+        rep.partition().verify_consistency().unwrap();
+    }
+
+    #[test]
+    fn failed_batch_keeps_the_service_alive() {
+        let hg = chain_instance(12);
+        let mut rep =
+            Repartitioner::new(hg, rep_ctx(2, 0.2), RepartitionConfig::default());
+        let mut bad = ChangeBatch::new();
+        bad.push(Change::InsertNode { weight: 2 });
+        bad.push(Change::UpdateWeight { node: 999, weight: 1 }); // invalid
+        assert!(rep.apply(&bad).is_err());
+        // the applied prefix (the insert) is in, the state is consistent,
+        // and the next batch serves normally
+        rep.hypergraph().validate().unwrap();
+        rep.partition().verify_consistency().unwrap();
+        let mut ok = ChangeBatch::new();
+        ok.push(Change::InsertNode { weight: 1 });
+        let ms = rep.apply(&ok).unwrap();
+        assert!(ms.balanced);
+        assert_eq!(ms.placements.len(), 1);
+    }
+}

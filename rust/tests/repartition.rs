@@ -1,0 +1,368 @@
+//! Property tests for the warm-start repartitioning service: after
+//! random change-batch sequences the incrementally maintained partition
+//! matches a freshly built one, warm-start quality beats the
+//! rebalance-only baseline, migration volume respects the configured
+//! bound, the Deterministic preset stays thread-invariant through
+//! `apply`, and the steady-state serving path performs zero pool
+//! structural allocations after the first session bind.
+//!
+//! The suite runs under both Φ/Λ layouts: CI repeats it with
+//! `MTKH_KSTATE=sparse` (the env override wins over the per-test
+//! `KStateChoice`), and the explicit dense/sparse loop below covers both
+//! in a plain run.
+
+use mtkahypar::coordinator::context::{Context, Preset};
+use mtkahypar::generators::{planted_hypergraph, PlantedParams};
+use mtkahypar::hypergraph::{Hypergraph, HypergraphOps};
+use mtkahypar::partition::{KStateChoice, PartitionedHypergraph};
+use mtkahypar::repartition::{
+    Change, ChangeBatch, RepartitionConfig, RepartitionSession, Repartitioner,
+};
+use mtkahypar::util::Rng;
+use mtkahypar::{coordinator::partitioner, metrics, BlockId, EdgeId, NodeId};
+use std::sync::Arc;
+
+fn test_threads() -> usize {
+    std::env::var("MTKH_TEST_THREADS").ok().and_then(|v| v.parse().ok()).unwrap_or(2)
+}
+
+fn small_ctx(preset: Preset, k: usize, seed: u64) -> Context {
+    let mut c = Context::new(preset, k, 0.1).with_threads(test_threads()).with_seed(seed);
+    c.contraction_limit_factor = 24;
+    c.ip_min_repetitions = 1;
+    c.ip_max_repetitions = 2;
+    c.fm_max_rounds = 2;
+    c
+}
+
+fn small_instance(seed: u64) -> Arc<Hypergraph> {
+    Arc::new(planted_hypergraph(
+        &PlantedParams { n: 300, m: 520, blocks: 4, ..Default::default() },
+        seed,
+    ))
+}
+
+/// Generate a random batch that is valid against the *current* dynamic
+/// structure (removals target live ids, net pins target active nodes).
+fn random_batch(rep: &Repartitioner, rng: &mut Rng, size: usize) -> ChangeBatch {
+    let hg = rep.hypergraph();
+    let mut active: Vec<NodeId> = hg.active_nodes().collect();
+    let mut live_nets: Vec<EdgeId> =
+        hg.nets().filter(|&e| !HypergraphOps::pins(hg, e).is_empty()).collect();
+    let mut batch = ChangeBatch::new();
+    for _ in 0..size {
+        match rng.next_below(5) {
+            0 => {
+                batch.push(Change::InsertNode { weight: 1 + rng.next_below(3) as i64 });
+            }
+            1 if active.len() > 16 => {
+                let i = rng.next_below(active.len());
+                batch.push(Change::RemoveNode { node: active.swap_remove(i) });
+            }
+            2 if active.len() >= 4 => {
+                let pins: Vec<NodeId> = rng
+                    .sample_indices(active.len(), 2 + rng.next_below(3))
+                    .into_iter()
+                    .map(|i| active[i])
+                    .collect();
+                batch.push(Change::InsertNet { pins, weight: 1 + rng.next_below(2) as i64 });
+            }
+            3 if !live_nets.is_empty() => {
+                let i = rng.next_below(live_nets.len());
+                batch.push(Change::RemoveNet { net: live_nets.swap_remove(i) });
+            }
+            _ => {
+                let u = active[rng.next_below(active.len())];
+                batch.push(Change::UpdateWeight { node: u, weight: 1 + rng.next_below(4) as i64 });
+            }
+        }
+    }
+    batch
+}
+
+/// The partition the service maintains incrementally must agree with one
+/// built from scratch on the mutated structure: same consistency
+/// invariants (Π/Φ/Λ/block weights, via `verify_consistency`) and the
+/// same objective values as the frozen snapshot evaluated externally.
+#[test]
+fn matches_fresh_partition_after_random_batches() {
+    for (kstate, seed) in [(KStateChoice::Dense, 71u64), (KStateChoice::Sparse, 73)] {
+        let ctx = small_ctx(Preset::Default, 4, seed).with_kstate(kstate);
+        let mut rep =
+            Repartitioner::new(small_instance(seed), ctx, RepartitionConfig::default());
+        let mut rng = Rng::new(seed ^ 0xfeed);
+        for round in 0..4 {
+            let batch = random_batch(&rep, &mut rng, 12);
+            let ms = rep.apply(&batch).unwrap_or_else(|e| panic!("round {round}: {e}"));
+            assert!(ms.balanced, "round {round}: imbalance {}", ms.imbalance);
+            rep.hypergraph().validate().unwrap_or_else(|e| panic!("round {round}: {e}"));
+            rep.partition()
+                .verify_consistency()
+                .unwrap_or_else(|e| panic!("round {round}: {e}"));
+
+            // freeze the active structure and re-evaluate the objective
+            // from scratch on the static snapshot: single-pin and empty
+            // nets drop out, contributing 0 to every objective, so the
+            // values must agree exactly
+            let snap = rep.hypergraph().freeze();
+            let parts_dyn = rep.partition().parts();
+            let parts_snap: Vec<BlockId> =
+                snap.to_dynamic.iter().map(|&u| parts_dyn[u as usize]).collect();
+            assert_eq!(
+                rep.partition().km1(),
+                metrics::km1(&snap.hg, &parts_snap, 4),
+                "round {round}: km1 must match a from-scratch evaluation"
+            );
+            let mut fresh = PartitionedHypergraph::new(Arc::new(snap.hg), 4);
+            fresh.set_uniform_max_weight(0.1);
+            fresh.assign_all(&parts_snap, test_threads());
+            fresh.verify_consistency().unwrap();
+            assert_eq!(rep.partition().km1(), fresh.km1(), "round {round}");
+            assert_eq!(rep.partition().cut(), fresh.cut(), "round {round}");
+            assert_eq!(rep.partition().soed(), fresh.soed(), "round {round}");
+            for b in 0..4 {
+                assert_eq!(
+                    rep.partition().block_weight(b),
+                    fresh.block_weight(b),
+                    "round {round}: block {b} weight"
+                );
+            }
+        }
+    }
+}
+
+/// Warm-start repair (localized refinement + V-cycle) must end at least
+/// as good as the rebalance-only floor on the same mapped partition.
+#[test]
+fn warm_start_beats_rebalance_only_baseline() {
+    let hg = small_instance(77);
+    let cold = partitioner::partition_arc(hg.clone(), &small_ctx(Preset::Default, 4, 77));
+    let parts = cold.parts();
+    drop(cold);
+
+    let run = |rebalance_only: bool| {
+        let cfg = RepartitionConfig { rebalance_only, ..RepartitionConfig::default() };
+        let ctx = small_ctx(Preset::Default, 4, 77);
+        let mut rep = Repartitioner::new_with_parts(hg.clone(), &parts, ctx, cfg);
+        let mut rng = Rng::new(0xbead);
+        for _ in 0..3 {
+            let batch = random_batch(&rep, &mut rng, 10);
+            rep.apply(&batch).unwrap();
+        }
+        (rep.partition().km1(), rep.partition().is_balanced())
+    };
+    let (warm, warm_balanced) = run(false);
+    let (base, base_balanced) = run(true);
+    assert!(warm_balanced && base_balanced);
+    assert!(warm <= base, "warm start km1 {warm} must not lose to rebalance-only {base}");
+}
+
+/// The migrated weight reported per batch respects the configured bound
+/// and equals the recomputed sum over the reported moves.
+#[test]
+fn migration_volume_respects_bound() {
+    let hg = small_instance(81);
+    let cfg = RepartitionConfig {
+        max_migration_fraction: Some(0.2),
+        ..RepartitionConfig::default()
+    };
+    let ctx = small_ctx(Preset::Default, 4, 81);
+    let mut rep = Repartitioner::new(hg, ctx, cfg);
+    let mut rng = Rng::new(0xcafe);
+    for round in 0..4 {
+        let batch = random_batch(&rep, &mut rng, 10);
+        let ms = rep.apply(&batch).unwrap();
+        let limit = ms.migration_limit.expect("bound configured");
+        let recomputed: i64 = ms
+            .moves
+            .iter()
+            .map(|&(u, _, _)| HypergraphOps::node_weight(rep.hypergraph(), u))
+            .sum();
+        assert_eq!(ms.migrated_weight, recomputed, "round {round}: reported volume");
+        for &(u, from, to) in &ms.moves {
+            assert_ne!(from, to);
+            assert_eq!(rep.partition().block_of(u), to, "round {round}: move applied");
+        }
+        if ms.balanced {
+            assert!(
+                ms.bound_satisfied(),
+                "round {round}: migrated {} over limit {limit}",
+                ms.migrated_weight
+            );
+        }
+    }
+}
+
+/// Under the Deterministic preset, `apply` is bit-identical for any
+/// thread count: same instance, same starting assignment, same batches
+/// → same partition at 1, 2 and 4 threads.
+#[test]
+fn deterministic_apply_is_thread_invariant() {
+    let hg = small_instance(83);
+    let cold =
+        partitioner::partition_arc(hg.clone(), &small_ctx(Preset::Deterministic, 4, 83).with_threads(1));
+    let parts = cold.parts();
+    drop(cold);
+
+    let run = |threads: usize| {
+        let ctx = small_ctx(Preset::Deterministic, 4, 83).with_threads(threads);
+        let mut rep = Repartitioner::new_with_parts(
+            hg.clone(),
+            &parts,
+            ctx,
+            RepartitionConfig::default(),
+        );
+        // the batch stream itself is fixed up front (same seed, and the
+        // generator only reads structure, which evolves identically)
+        let mut rng = Rng::new(0xdead);
+        let mut out = Vec::new();
+        for _ in 0..3 {
+            let batch = random_batch(&rep, &mut rng, 8);
+            rep.apply(&batch).unwrap();
+            out.push(rep.partition().parts());
+        }
+        out
+    };
+    let p1 = run(1);
+    assert_eq!(p1, run(2), "threads=2 diverged");
+    assert_eq!(p1, run(4), "threads=4 diverged");
+}
+
+/// The acceptance criterion of the serving path: after the first session
+/// bind, slot-reusing churn batches keep the pool at exactly one
+/// structural allocation — park, mutate, unpark, refine and the warm
+/// V-cycle all run inside the originally bound buffers.
+#[test]
+fn steady_state_apply_makes_zero_structural_allocations() {
+    for (kstate, seed) in [(KStateChoice::Dense, 87u64), (KStateChoice::Sparse, 89)] {
+        let ctx = small_ctx(Preset::Default, 4, seed).with_kstate(kstate);
+        let mut rep =
+            Repartitioner::new(small_instance(seed), ctx, RepartitionConfig::default());
+        assert_eq!(rep.partition_pool().structural_allocs(), 1, "session bind");
+        let mut rng = Rng::new(seed ^ 0xace);
+        for round in 0..5 {
+            // churn that stays within the slot free-lists: every insert
+            // is preceded by a removal of at least equal capacity
+            let hg = rep.hypergraph();
+            let active: Vec<NodeId> = hg.active_nodes().collect();
+            let victim_net = hg
+                .nets()
+                .max_by_key(|&e| HypergraphOps::pins(hg, e).len())
+                .expect("instance has nets");
+            let victim_size = HypergraphOps::pins(hg, victim_net).len();
+            assert!(victim_size >= 3, "churn net too small to re-insert below capacity");
+            let victim_node = active[rng.next_below(active.len())];
+            let mut batch = ChangeBatch::new();
+            batch.push(Change::RemoveNet { net: victim_net });
+            batch.push(Change::RemoveNode { node: victim_node });
+            batch.push(Change::InsertNode { weight: 1 });
+            // pins must exclude the node removed above — it is inactive
+            // by the time the net insert applies
+            let pins: Vec<NodeId> = rng
+                .sample_indices(active.len(), victim_size)
+                .into_iter()
+                .map(|i| active[i])
+                .filter(|&u| u != victim_node)
+                .take(victim_size - 1)
+                .collect();
+            batch.push(Change::InsertNet { pins, weight: 1 });
+            let ms = rep.apply(&batch).unwrap_or_else(|e| panic!("round {round}: {e}"));
+            assert!(ms.balanced, "round {round}");
+            assert_eq!(
+                rep.partition_pool().structural_allocs(),
+                1,
+                "round {round} ({kstate:?}): the warm path must not allocate"
+            );
+        }
+        rep.partition().verify_consistency().unwrap();
+    }
+}
+
+/// A batch whose insertions outgrow the parked buffers takes the pool's
+/// growth path: exactly one counted reallocation, consistent state, and
+/// subsequent batches are warm again at the new capacity.
+#[test]
+fn growth_past_reservation_reallocates_cleanly() {
+    let ctx = small_ctx(Preset::Default, 4, 91);
+    let mut rep = Repartitioner::new(small_instance(91), ctx, RepartitionConfig::default());
+    assert_eq!(rep.partition_pool().structural_allocs(), 1);
+    let mut batch = ChangeBatch::new();
+    for _ in 0..64 {
+        batch.push(Change::InsertNode { weight: 1 });
+    }
+    // a net wider than anything in the instance forces the state layout
+    // past its reservation as well
+    let wide: Vec<NodeId> = (0..40).collect();
+    batch.push(Change::InsertNet { pins: wide, weight: 1 });
+    let ms = rep.apply(&batch).unwrap();
+    assert_eq!(ms.placements.len(), 64);
+    assert_eq!(
+        rep.partition_pool().structural_allocs(),
+        2,
+        "growth must be one clean counted reallocation"
+    );
+    rep.hypergraph().validate().unwrap();
+    rep.partition().verify_consistency().unwrap();
+    // the service is warm again at the grown capacity
+    let mut churn = ChangeBatch::new();
+    churn.push(Change::RemoveNode { node: ms.placements[0].0 });
+    churn.push(Change::InsertNode { weight: 1 });
+    rep.apply(&churn).unwrap();
+    assert_eq!(rep.partition_pool().structural_allocs(), 2, "no further growth");
+}
+
+/// Pool headroom reserved at construction absorbs insertions beyond the
+/// instance without any growth reallocation.
+#[test]
+fn reserved_headroom_absorbs_insertions() {
+    let cfg = RepartitionConfig {
+        headroom_nodes: 96,
+        headroom_nets: 16,
+        headroom_net_size: 8,
+        ..RepartitionConfig::default()
+    };
+    let ctx = small_ctx(Preset::Default, 4, 93);
+    let mut rep = Repartitioner::new(small_instance(93), ctx, cfg);
+    assert_eq!(rep.partition_pool().structural_allocs(), 1);
+    let mut batch = ChangeBatch::new();
+    for _ in 0..64 {
+        batch.push(Change::InsertNode { weight: 1 });
+    }
+    batch.push(Change::InsertNet { pins: (0..8).collect(), weight: 1 });
+    let ms = rep.apply(&batch).unwrap();
+    assert!(ms.balanced);
+    assert_eq!(
+        rep.partition_pool().structural_allocs(),
+        1,
+        "headroom must keep the growth batch on the warm path"
+    );
+    rep.partition().verify_consistency().unwrap();
+}
+
+/// Session mode: a previously served instance is recognized by its
+/// structural hash and warm-starts from the cached partition; quality
+/// carries over without a second multilevel run.
+#[test]
+fn session_cache_round_trip_across_instances() {
+    let a = small_instance(95);
+    let b = small_instance(96);
+    let mut session = RepartitionSession::new(
+        small_ctx(Preset::Default, 4, 95),
+        RepartitionConfig::default(),
+    );
+    session.bind(a.clone());
+    let km1_a = session.repartitioner().unwrap().partition().km1();
+    session.bind(b);
+    assert_eq!(session.cache_misses(), 2, "two distinct instances");
+    session.bind(a);
+    assert_eq!(session.cache_hits(), 1, "instance A recognized");
+    assert_eq!(session.cache_misses(), 2);
+    let rep = session.repartitioner().unwrap();
+    assert_eq!(rep.partition().km1(), km1_a, "cached assignment restored verbatim");
+    assert!(rep.partition().is_balanced());
+    // and the restored binding keeps serving
+    let mut batch = ChangeBatch::new();
+    batch.push(Change::InsertNode { weight: 1 });
+    let ms = session.apply(&batch).unwrap();
+    assert!(ms.balanced);
+}

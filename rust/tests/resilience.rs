@@ -359,6 +359,30 @@ mod failpoint_recovery {
     }
 
     #[test]
+    fn repartition_apply_panic_is_recovered() {
+        use mtkahypar::coordinator::report::DegradationReport;
+        use mtkahypar::repartition::{Change, ChangeBatch, RepartitionConfig, Repartitioner};
+        let hg = small_instance(53);
+        let ctx = small_ctx(Preset::Default, 4, 2, 53);
+        let mut rep = Repartitioner::new(hg, ctx, RepartitionConfig::default());
+        let mut batch = ChangeBatch::new();
+        batch.push(Change::InsertNode { weight: 1 });
+        batch.push(Change::RemoveNode { node: 7 });
+        let ms = with_failpoint(failpoints::REPARTITION_APPLY, Action::Panic, 1, || {
+            rep.apply(&batch)
+        })
+        .expect("apply must absorb the injected panic");
+        assert!(ms.balanced, "imbalance {}", ms.imbalance);
+        rep.partition().verify_consistency().unwrap();
+        rep.hypergraph().validate().unwrap();
+        let report = DegradationReport::from_token(&rep.context().cancel, None);
+        assert!(report.panics_recovered >= 1, "{}", report.summary());
+        // the service keeps serving after the recovered request
+        let ms2 = rep.apply(&ChangeBatch::new()).unwrap();
+        assert!(ms2.balanced);
+    }
+
+    #[test]
     fn forced_expiry_failpoint_degrades_gracefully() {
         // Expire mid-run via the IP-candidate site: everything after
         // initial partitioning runs at the RebalanceOnly floor

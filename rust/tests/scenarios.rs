@@ -1,0 +1,149 @@
+//! Scenario-suite harness: every synthetic instance archetype the
+//! generator module produces, driven through every preset, every
+//! objective and both Φ/Λ layouts, with balance, consistency and
+//! objective-sanity assertions on each run.
+//!
+//! Instances are deliberately tiny — the point is coverage of the
+//! configuration cross-product (the CI matrix re-runs the suite at
+//! `MTKH_TEST_THREADS=4` and `MTKH_KSTATE=sparse`), not throughput.
+
+use mtkahypar::coordinator::context::{Context, Preset};
+use mtkahypar::coordinator::partitioner;
+use mtkahypar::generators::{self, PlantedParams, SatRepresentation};
+use mtkahypar::graph::partitioner::partition_graph_arc;
+use mtkahypar::hypergraph::Hypergraph;
+use mtkahypar::metrics::{self, Objective};
+use mtkahypar::partition::KStateChoice;
+use std::sync::Arc;
+
+fn test_threads() -> usize {
+    std::env::var("MTKH_TEST_THREADS").ok().and_then(|v| v.parse().ok()).unwrap_or(2)
+}
+
+fn scenario_ctx(preset: Preset, k: usize, obj: Objective, kstate: KStateChoice) -> Context {
+    let mut c = Context::new(preset, k, 0.1)
+        .with_threads(test_threads())
+        .with_seed(7)
+        .with_objective(obj)
+        .with_kstate(kstate);
+    c.contraction_limit_factor = 16;
+    c.ip_min_repetitions = 1;
+    c.ip_max_repetitions = 2;
+    c.fm_max_rounds = 2;
+    c
+}
+
+/// Every hypergraph archetype the generator module produces, kept small.
+fn hypergraph_scenarios() -> Vec<(&'static str, Arc<Hypergraph>)> {
+    vec![
+        (
+            "planted",
+            Arc::new(generators::planted_hypergraph(
+                &PlantedParams { n: 220, m: 380, blocks: 4, ..Default::default() },
+                1,
+            )),
+        ),
+        ("spm", Arc::new(generators::spm_hypergraph(180, 180, 4, 2))),
+        (
+            "sat_primal",
+            Arc::new(generators::sat_hypergraph(80, 240, SatRepresentation::Primal, 3)),
+        ),
+        ("sat_dual", Arc::new(generators::sat_hypergraph(80, 240, SatRepresentation::Dual, 4))),
+        (
+            "sat_literal",
+            Arc::new(generators::sat_hypergraph(80, 240, SatRepresentation::Literal, 5)),
+        ),
+        ("vlsi", Arc::new(generators::vlsi_hypergraph(200, 320, 6))),
+        ("kuniform", Arc::new(generators::random_kuniform(180, 300, 3, 8))),
+    ]
+}
+
+/// One scenario run: partition and assert every invariant the harness
+/// checks — balance, internal consistency, the configured objective
+/// matching a from-scratch evaluation, and the km1/cut/soed identities
+/// (`soed = km1 + cut`, `cut ≤ km1 ≤ soed`).
+fn check(name: &str, hg: &Arc<Hypergraph>, preset: Preset, obj: Objective, kstate: KStateChoice) {
+    let k = 4;
+    let ctx = scenario_ctx(preset, k, obj, kstate);
+    let phg = partitioner::partition_arc(hg.clone(), &ctx);
+    let tag = format!("{name} {preset:?} {obj:?} {kstate:?}");
+    assert!(phg.is_balanced(), "{tag}: imbalance {}", phg.imbalance());
+    phg.verify_consistency().unwrap_or_else(|e| panic!("{tag}: {e}"));
+    let parts = phg.parts();
+    assert_eq!(phg.km1(), metrics::km1(hg, &parts, k), "{tag}: km1 from scratch");
+    assert_eq!(
+        phg.objective_value(obj),
+        metrics::objective_hg(obj, hg, &parts, k),
+        "{tag}: configured objective from scratch"
+    );
+    assert_eq!(phg.soed(), phg.km1() + phg.cut(), "{tag}: soed identity");
+    assert!(phg.cut() <= phg.km1(), "{tag}: cut ≤ km1");
+    assert!(phg.km1() <= phg.soed(), "{tag}: km1 ≤ soed");
+    assert!(
+        metrics::block_weights_hg(hg, &parts, k).iter().all(|&w| w > 0),
+        "{tag}: no empty blocks"
+    );
+}
+
+fn run_preset(preset: Preset) {
+    for (name, hg) in &hypergraph_scenarios() {
+        for obj in [Objective::Km1, Objective::Cut, Objective::Soed] {
+            for kstate in [KStateChoice::Dense, KStateChoice::Sparse] {
+                check(name, hg, preset, obj, kstate);
+            }
+        }
+    }
+}
+
+#[test]
+fn scenarios_speed() {
+    run_preset(Preset::Speed);
+}
+
+#[test]
+fn scenarios_default() {
+    run_preset(Preset::Default);
+}
+
+#[test]
+fn scenarios_default_flows() {
+    run_preset(Preset::DefaultFlows);
+}
+
+#[test]
+fn scenarios_quality() {
+    run_preset(Preset::Quality);
+}
+
+#[test]
+fn scenarios_quality_flows() {
+    run_preset(Preset::QualityFlows);
+}
+
+#[test]
+fn scenarios_deterministic() {
+    run_preset(Preset::Deterministic);
+}
+
+/// The plain-graph archetypes through the graph fast path: every preset
+/// on an R-MAT power-law graph and a structured mesh (on plain graphs
+/// km1 = cut, so the objective loop collapses to the default).
+#[test]
+fn scenarios_plain_graphs() {
+    let graphs = vec![
+        ("rmat", Arc::new(generators::rmat_graph(8, 6, 9))),
+        ("mesh", Arc::new(generators::mesh_graph(14, 14))),
+    ];
+    for (name, g) in &graphs {
+        for preset in Preset::all() {
+            for kstate in [KStateChoice::Dense, KStateChoice::Sparse] {
+                let ctx = scenario_ctx(preset, 4, Objective::Km1, kstate);
+                let pg = partition_graph_arc(g.clone(), &ctx);
+                let tag = format!("{name} {preset:?} {kstate:?}");
+                assert!(pg.is_balanced(), "{tag}: imbalance {}", pg.imbalance());
+                pg.verify_consistency().unwrap_or_else(|e| panic!("{tag}: {e}"));
+                assert_eq!(pg.km1(), pg.cut(), "{tag}: km1 = cut on plain graphs");
+            }
+        }
+    }
+}
